@@ -1,0 +1,77 @@
+//! Figure 1: Dykstra's algorithm in the Lasso dual on the 2×2 toy.
+//!
+//! (b) cyclic order: end-of-epoch dual iterates follow a noiseless VAR —
+//!     K=4 extrapolation finds θ̂ to machine precision within ~5 epochs;
+//! (c) shuffled order: the trajectory is irregular and extrapolates badly;
+//! (d) dual suboptimality ‖θ^t − θ̂‖ with and without acceleration.
+//!
+//! ```bash
+//! cargo run --release --example fig1_dykstra
+//! ```
+
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::report::Table;
+use celer::solvers::dykstra::{dual_suboptimality_curves, dykstra_lasso_dual, Order};
+
+fn main() {
+    let ds = synth::toy_2x2();
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 4.0;
+    let epochs = 15;
+    let k = 4;
+
+    // --- (b)/(c): iterates per epoch ---
+    let cyc = dykstra_lasso_dual(&ds.x, &ds.y, lambda, epochs, Order::Cyclic);
+    let shf = dykstra_lasso_dual(&ds.x, &ds.y, lambda, epochs, Order::Shuffle { seed: 42 });
+    let mut t = Table::new(
+        "Fig 1b/1c — dual iterates θ^t per epoch (toy 2×2)",
+        &["epoch", "cyclic θ₁", "cyclic θ₂", "shuffle θ₁", "shuffle θ₂"],
+    );
+    for e in 0..epochs.min(8) {
+        t.row(vec![
+            (e + 1).to_string(),
+            format!("{:+.6}", cyc.theta_per_epoch[e][0]),
+            format!("{:+.6}", cyc.theta_per_epoch[e][1]),
+            format!("{:+.6}", shf.theta_per_epoch[e][0]),
+            format!("{:+.6}", shf.theta_per_epoch[e][1]),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- (d): dual suboptimality with and without extrapolation ---
+    let (cyc_plain, cyc_accel) =
+        dual_suboptimality_curves(&ds.x, &ds.y, lambda, epochs, Order::Cyclic, k, 50_000);
+    let (shf_plain, shf_accel) = dual_suboptimality_curves(
+        &ds.x,
+        &ds.y,
+        lambda,
+        epochs,
+        Order::Shuffle { seed: 42 },
+        k,
+        50_000,
+    );
+    let mut t = Table::new(
+        "Fig 1d — dual suboptimality ‖θ^t − θ̂‖ (K = 4 extrapolation)",
+        &["epoch", "cyclic", "cyclic+extr", "shuffle", "shuffle+extr"],
+    );
+    for e in 0..epochs {
+        t.row(vec![
+            (e + 1).to_string(),
+            format!("{:.3e}", cyc_plain[e]),
+            format!("{:.3e}", cyc_accel[e]),
+            format!("{:.3e}", shf_plain[e]),
+            format!("{:.3e}", shf_accel[e]),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv(std::path::Path::new("results/fig1_dykstra.csv")).ok();
+
+    let at = (k + 1).min(epochs - 1);
+    println!(
+        "\npaper check: cyclic extrapolation hits machine precision by epoch {} \
+         ({:.1e}), plain cyclic is at {:.1e}",
+        at + 1,
+        cyc_accel[at],
+        cyc_plain[at]
+    );
+}

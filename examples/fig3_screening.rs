@@ -1,0 +1,87 @@
+//! Figure 3: Gap Safe screening performance with θ_res vs θ_accel.
+//!
+//! Dynamic Gap Safe CD on the sparse finance-sim dataset at λ = λ_max/5:
+//! the number of screened features per epoch grows much faster when the
+//! dual point is extrapolated, which translates directly into wall-clock
+//! (the paper reports 70 s vs 290 s on the real Finance data).
+//!
+//! ```bash
+//! cargo run --release --example fig3_screening            # finance-sim
+//! cargo run --release --example fig3_screening -- --mini  # test-scale
+//! ```
+
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::report::{fmt_secs, Table};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use std::time::Instant;
+
+fn main() {
+    let mini = std::env::args().any(|a| a == "--mini");
+    let ds = if mini { synth::finance_mini(0) } else { synth::finance_sim(0) };
+    // The paper uses λ_max/5 on the real Finance data; the synthetic
+    // stand-in is better conditioned at matched λ-ratio, so the same
+    // screening difficulty sits at λ_max/20 (see DESIGN.md §4).
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+    println!(
+        "dataset={} n={} p={} nnz={} λ = λ_max/20, ε = 1e-6",
+        ds.name,
+        ds.x.n(),
+        ds.x.p(),
+        ds.x.nnz()
+    );
+
+    let base = CdConfig {
+        tol: 1e-8,
+        max_epochs: 10_000,
+        screen: true,
+        trace: true,
+        best_dual: true,
+        ..Default::default()
+    };
+
+    let t0 = Instant::now();
+    let res_run = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { extrapolate: false, ..base.clone() });
+    let time_res = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let acc_run = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { extrapolate: true, ..base });
+    let time_acc = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "Fig 3 — features screened by the dynamic Gap Safe rule",
+        &["epoch", "screened (θ_res)", "screened (θ_accel)"],
+    );
+    let rows = res_run.trace.len().max(acc_run.trace.len());
+    for i in 0..rows {
+        let e = res_run
+            .trace
+            .get(i)
+            .map(|c| c.epoch)
+            .or_else(|| acc_run.trace.get(i).map(|c| c.epoch))
+            .unwrap();
+        t.row(vec![
+            e.to_string(),
+            res_run
+                .trace
+                .get(i)
+                .map(|c| c.n_screened.to_string())
+                .unwrap_or_else(|| "(done)".into()),
+            acc_run
+                .trace
+                .get(i)
+                .map(|c| c.n_screened.to_string())
+                .unwrap_or_else(|| "(done)".into()),
+        ]);
+    }
+    print!("{}", t.render());
+    t.save_csv(std::path::Path::new("results/fig3_screening.csv")).ok();
+
+    println!("\nwall-clock to ε=1e-8:");
+    println!("  Gap Safe + θ_res   : {} ({} epochs)", fmt_secs(time_res), res_run.epochs);
+    println!("  Gap Safe + θ_accel : {} ({} epochs)", fmt_secs(time_acc), acc_run.epochs);
+    println!(
+        "  speedup {:.2}× (paper: 290 s → 70 s ≈ 4.1× on the real Finance data)",
+        time_res / time_acc.max(1e-12)
+    );
+}

@@ -1,0 +1,105 @@
+//! END-TO-END driver: the full system on a real small workload.
+//!
+//! Proves all layers compose on the paper's headline experiment shape:
+//! 1. synthesize + preprocess the Finance-like sparse dataset
+//!    (n=2000, p≈200k, the paper's §6.2 pipeline),
+//! 2. run the coordinator: a 100-point λ-path (λ_max → λ_max/100) with
+//!    warm starts, CELER vs BLITZ vs Gap-Safe CD, cells in parallel,
+//! 3. verify every grid point converged and the solutions agree with an
+//!    independent high-precision solve at 3 sampled λ's,
+//! 4. report the headline metric: path wall-clock per solver + speedups.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! cargo run --release --example lasso_path_e2e [-- --mini]
+//! ```
+
+use celer::coordinator::{self, PathJob};
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::lasso::primal;
+use celer::report::{fmt_secs, Table};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use std::time::Instant;
+
+fn main() {
+    let mini = std::env::args().any(|a| a == "--mini");
+    let t_total = Instant::now();
+
+    // ---- 1. data ----
+    let t0 = Instant::now();
+    let ds = if mini { synth::finance_mini(0) } else { synth::finance_sim(0) };
+    println!(
+        "[1/4] dataset {}: n={} p={} nnz={} (density {:.4}%) generated+preprocessed in {}",
+        ds.name,
+        ds.x.n(),
+        ds.x.p(),
+        ds.x.nnz(),
+        100.0 * ds.x.density(),
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    // ---- 2. coordinated path runs ----
+    let num = if mini { 20 } else { 100 };
+    let tol = 1e-6;
+    let grid = coordinator::standard_grid(&ds, 100.0, num);
+    let solvers = ["celer-prune", "celer-safe", "blitz"];
+    let jobs: Vec<PathJob> = solvers
+        .iter()
+        .map(|s| PathJob {
+            solver_name: s.to_string(),
+            tol,
+            grid: grid.clone(),
+            store_betas: true,
+        })
+        .collect();
+    println!("[2/4] λ-path: {num} values λ_max → λ_max/100, ε = {tol:.0e}, one worker per solver (times are contended; see fig4 for solo timings)");
+    let results = coordinator::run_path_jobs(&ds, jobs, 3).expect("solvers valid");
+
+    // ---- 3. verification ----
+    let mut verified = 0;
+    for &i in &[0usize, num / 2, num - 1] {
+        let lambda = grid[i];
+        let reference = cd_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &CdConfig { tol: tol / 100.0, ..Default::default() },
+        );
+        let p_ref = primal::primal(&ds.x, &ds.y, &reference.beta, lambda);
+        for r in &results {
+            let beta = r.steps[i].beta.as_ref().unwrap();
+            let p_got = primal::primal(&ds.x, &ds.y, beta, lambda);
+            assert!(
+                p_got - p_ref <= 2.0 * tol,
+                "{} at λ#{i}: {p_got} vs reference {p_ref}",
+                r.solver
+            );
+            verified += 1;
+        }
+    }
+    let all_ok = results.iter().all(|r| r.all_converged());
+    println!("[3/4] verification: {verified} (solver, λ) cells checked vs high-precision reference; all grid points converged: {all_ok}");
+    assert!(all_ok, "every grid point must reach ε");
+
+    // ---- 4. headline report ----
+    let celer_time = results[0].total_seconds;
+    let mut table = Table::new(
+        "end-to-end Lasso path (warm-started, parallel cells)",
+        &["solver", "path time", "Σ epochs", "final |S|", "vs celer-prune"],
+    );
+    for r in &results {
+        table.row(vec![
+            r.solver.clone(),
+            fmt_secs(r.total_seconds),
+            r.steps.iter().map(|s| s.epochs).sum::<usize>().to_string(),
+            r.steps.last().unwrap().support_size.to_string(),
+            format!("{:.2}×", r.total_seconds / celer_time.max(1e-12)),
+        ]);
+    }
+    print!("[4/4]\n{}", table.render());
+    table.save_csv(std::path::Path::new("results/lasso_path_e2e.csv")).ok();
+    println!("total driver time: {}", fmt_secs(t_total.elapsed().as_secs_f64()));
+}

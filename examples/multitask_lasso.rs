@@ -1,0 +1,99 @@
+//! §7 extension demo: Multi-Task Lasso with dual extrapolation and a
+//! CELER-style working-set loop, on a synthetic multi-task regression
+//! problem (shared row support across q tasks).
+//!
+//! ```bash
+//! cargo run --release --example multitask_lasso
+//! ```
+
+use celer::data::dense::DenseMatrix;
+use celer::data::design::DesignMatrix;
+use celer::multitask::solver::{
+    mt_bcd_solve, mt_celer_solve, mt_lambda_max, mt_primal, MtConfig,
+};
+use celer::multitask::TaskMatrix;
+use celer::report::{fmt_secs, Table};
+use celer::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let (n, p, q, support) = (100, 5000, 8, 20);
+    let mut rng = Rng::new(0);
+    // unit-norm Gaussian design
+    let mut data = vec![0.0; n * p];
+    for v in data.iter_mut() {
+        *v = rng.normal();
+    }
+    for j in 0..p {
+        let nrm: f64 = data[j * n..(j + 1) * n].iter().map(|v| v * v).sum::<f64>().sqrt();
+        for v in data[j * n..(j + 1) * n].iter_mut() {
+            *v /= nrm;
+        }
+    }
+    let x = DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data));
+    // row-sparse ground truth: `support` rows active across all q tasks
+    let mut b_true = TaskMatrix::zeros(p, q);
+    for &j in &rng.sample_indices(p, support) {
+        for t in 0..q {
+            b_true.row_mut(j)[t] = rng.normal();
+        }
+    }
+    let mut y = vec![0.0; n * q];
+    for j in 0..p {
+        for t in 0..q {
+            let v = b_true.row(j)[t];
+            if v != 0.0 {
+                use celer::multitask::solver::DesignOpsMt;
+                x.col_axpy_strided(j, v, &mut y, q, t);
+            }
+        }
+    }
+    for v in y.iter_mut() {
+        *v += 0.1 * rng.normal();
+    }
+
+    let lmax = mt_lambda_max(&x, &y, q);
+    let lambda = lmax / 10.0;
+    let tol = 1e-8;
+    println!("Multi-Task Lasso: n={n} p={p} q={q} |row-support*|={support} λ=λ_max/10 ε={tol:.0e}\n");
+
+    let t0 = Instant::now();
+    let celer = mt_celer_solve(&x, &y, q, lambda, &MtConfig { tol, ..Default::default() });
+    let t_celer = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let bcd = mt_bcd_solve(&x, &y, q, lambda, None, &MtConfig { tol, ..Default::default() });
+    let t_bcd = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let plain = mt_bcd_solve(
+        &x,
+        &y,
+        q,
+        lambda,
+        None,
+        &MtConfig { tol, extrapolate: false, ..Default::default() },
+    );
+    let t_plain = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        "Multi-Task Lasso solvers",
+        &["solver", "time", "gap", "row support", "epochs", "converged"],
+    );
+    for (name, out, secs) in [
+        ("celer-mt (WS + extrapolation)", &celer, t_celer),
+        ("bcd-mt (extrapolation)", &bcd, t_bcd),
+        ("bcd-mt (θ_res only)", &plain, t_plain),
+    ] {
+        t.row(vec![
+            name.into(),
+            fmt_secs(secs),
+            format!("{:.2e}", out.gap),
+            out.b.support().len().to_string(),
+            out.epochs.to_string(),
+            out.converged.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    let pc = mt_primal(&celer.r, &celer.b, lambda);
+    let pb = mt_primal(&bcd.r, &bcd.b, lambda);
+    println!("\nobjective agreement |ΔP| = {:.2e}; speedup vs full BCD: {:.1}×", (pc - pb).abs(), t_bcd / t_celer.max(1e-12));
+}

@@ -1,0 +1,19 @@
+use celer::data::synth;
+use celer::lasso::{dual, primal};
+use celer::solvers::cd::{cd_solve, CdConfig};
+
+fn main() {
+    let ds = synth::leukemia_sim(0);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+    let reference = cd_solve(&ds.x, &ds.y, lambda, None,
+        &CdConfig { tol: 1e-14, max_epochs: 100_000, ..Default::default() });
+    let p_star = primal::primal(&ds.x, &ds.y, &reference.beta, lambda);
+    let out = cd_solve(&ds.x, &ds.y, lambda, None,
+        &CdConfig { tol: 1e-12, max_epochs: 2000, best_dual: false, trace: true, ..Default::default() });
+    for chk in out.trace.iter().step_by(5) {
+        println!("ep {:4} subopt {:.2e} gap_res {:.2e} gap_acc {:?}",
+            chk.epoch, (chk.primal - p_star).max(0.0), chk.primal - chk.dual_res,
+            chk.dual_accel.map(|d| format!("{:.2e}", chk.primal - d)));
+    }
+    println!("support {} / n {} converged {} epochs {}", out.support_size(), 72, out.converged, out.epochs);
+}

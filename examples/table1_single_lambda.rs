@@ -1,0 +1,62 @@
+//! Table 1: single-λ solve times on the Finance-like dataset,
+//! λ = λ_max/20, cold start (β⁰ = 0), ε ∈ {1e-2, 1e-3, 1e-4, 1e-6}.
+//!
+//! Solvers: CELER (prune), BLITZ, scikit-learn-style vanilla CD. The
+//! paper reports 5/25/470 s at ε=1e-2 scaling to 10/30/∞ at 1e-6 — the
+//! *ordering and widening ratio* are the reproduction target.
+//!
+//! ```bash
+//! cargo run --release --example table1_single_lambda [-- --mini]
+//! ```
+
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::report::{fmt_secs, Table};
+use celer::solvers::path::{run_path, PathSolver};
+use std::time::Instant;
+
+fn main() {
+    let mini = std::env::args().any(|a| a == "--mini");
+    let ds = if mini { synth::finance_mini(0) } else { synth::finance_sim(0) };
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+    println!(
+        "dataset={} n={} p={} λ = λ_max/20, cold start",
+        ds.name,
+        ds.x.n(),
+        ds.x.p()
+    );
+
+    let tols = [1e-2, 1e-3, 1e-4, 1e-6];
+    let solvers = ["celer-prune", "blitz", "cd-vanilla"];
+    // vanilla CD gets an epoch budget so the table completes (the paper
+    // reports "-" for scikit-learn at 1e-6 for the same reason).
+    let mut table = Table::new(
+        "Table 1 — time to reach ε (seconds)",
+        &["solver", "1e-2", "1e-3", "1e-4", "1e-6"],
+    );
+    let mut rows: Vec<Vec<String>> = solvers.iter().map(|s| vec![s.to_string()]).collect();
+    for &tol in &tols {
+        for (si, s) in solvers.iter().enumerate() {
+            let mut solver = PathSolver::by_name(s, tol).unwrap();
+            if let PathSolver::VanillaCd(cfg) = &mut solver {
+                cfg.max_epochs = if mini { 20_000 } else { 5_000 };
+            }
+            let t0 = Instant::now();
+            let res = run_path(&ds.x, &ds.y, &[lambda], &solver, false);
+            let secs = t0.elapsed().as_secs_f64();
+            let step = &res.steps[0];
+            rows[si].push(if step.converged {
+                fmt_secs(secs)
+            } else {
+                format!("— (gap {:.0e})", step.gap)
+            });
+        }
+    }
+    for r in rows {
+        table.row(r);
+    }
+    print!("{}", table.render());
+    table.save_csv(std::path::Path::new("results/table1_single_lambda.csv")).ok();
+    println!("\npaper check: CELER < BLITZ ≪ vanilla CD, gap widening as ε ↓.");
+}

@@ -1,0 +1,137 @@
+"""AOT lowering: JAX/Pallas (Layers 1–2) → HLO text artifacts for the
+Rust runtime (Layer 3).
+
+HLO **text** is the interchange format, NOT serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. Functions are lowered with ``return_tuple=True`` and
+unwrapped with ``to_tuple*`` on the Rust side.
+
+Python runs ONLY here (``make artifacts``); the Rust binary is
+self-contained once ``artifacts/`` exists.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model, shapes  # noqa: E402
+
+DTYPE = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def lower_inner_solve(n, w, f):
+    fn = lambda x, y, beta, lam: model.inner_solve_block(  # noqa: E731
+        x, y, beta, lam, num_epochs=f
+    )
+    return jax.jit(fn).lower(spec(n, w), spec(n), spec(w), spec())
+
+
+def lower_gap_scores(n, p):
+    return jax.jit(model.gap_scores).lower(
+        spec(n, p), spec(n), spec(p), spec(n), spec()
+    )
+
+
+def lower_theta_res(n, p):
+    return jax.jit(model.theta_from_residual).lower(spec(n, p), spec(n), spec())
+
+
+def lower_extrapolate(kp1, n):
+    return jax.jit(model.extrapolate).lower(spec(kp1, n))
+
+
+def lower_ista_epoch(n, p):
+    return jax.jit(model.ista_epoch).lower(
+        spec(n, p), spec(n), spec(p), spec(), spec()
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+
+    def emit(name, lowered, op, **params):
+        path = os.path.join(args.out, name)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as fh:
+            fh.write(text)
+        entries.append({"op": op, "file": name, **params})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    sh = shapes.manifest_shapes()
+    for n, w, f in sh["inner_solve"]:
+        emit(
+            f"inner_solve_n{n}_w{w}_f{f}.hlo.txt",
+            lower_inner_solve(n, w, f),
+            "inner_solve",
+            n=n,
+            w=w,
+            f=f,
+        )
+    for n, p in sh["full_design"]:
+        emit(
+            f"gap_scores_n{n}_p{p}.hlo.txt",
+            lower_gap_scores(n, p),
+            "gap_scores",
+            n=n,
+            p=p,
+        )
+        emit(
+            f"theta_res_n{n}_p{p}.hlo.txt",
+            lower_theta_res(n, p),
+            "theta_res",
+            n=n,
+            p=p,
+        )
+        emit(
+            f"ista_epoch_n{n}_p{p}.hlo.txt",
+            lower_ista_epoch(n, p),
+            "ista_epoch",
+            n=n,
+            p=p,
+        )
+    for kp1, n in sh["extrapolate"]:
+        emit(
+            f"extrapolate_k{kp1 - 1}_n{n}.hlo.txt",
+            lower_extrapolate(kp1, n),
+            "extrapolate",
+            k=kp1 - 1,
+            n=n,
+        )
+
+    manifest = {"version": 1, "dtype": "f64", "profile": shapes.profile(), "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"manifest: {len(entries)} artifacts ({shapes.profile()} profile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Pallas kernel: `f` cyclic coordinate-descent epochs on a dense
+working-set block (Layer 1; the inner-solver hot spot of Algorithm 1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole (n, w) block is a
+single BlockSpec block resident in VMEM across all `f` epochs — the
+HBM→VMEM transfer is amortized over `f · w` column updates. The column
+loop is inherently sequential (each update feeds the next through the
+shared residual), so it targets the VPU (dot + axpy), not the MXU; the
+MXU work of the pipeline lives in `scores.py` / `extrapolation.py`.
+
+Zero-padded columns (the shape-bucket router in `rust/src/runtime/` pads
+working sets up to the compiled width) have zero norm and are skipped
+arithmetically: their gradient and soft-threshold are identically zero.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT runtime cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+any backend (including the Rust `xla` crate client) runs bit-for-bit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _cd_epoch_kernel(x_ref, beta_ref, r_ref, lam_ref, beta_out, r_out, *, num_epochs):
+    """One grid program: `num_epochs` full cyclic epochs over the block."""
+    x = x_ref[...]  # (n, w) resident for the whole call
+    lam = lam_ref[0]
+    w = x.shape[1]
+    norms_sq = jnp.sum(x * x, axis=0)  # (w,)
+    safe_nrm = jnp.where(norms_sq > 0.0, norms_sq, 1.0)
+
+    def col_update(j, carry):
+        beta, r = carry
+        xj = lax.dynamic_slice_in_dim(x, j, 1, axis=1)[:, 0]  # (n,)
+        nrm = safe_nrm[j]
+        g = jnp.dot(xj, r)
+        old = beta[j]
+        tentative = old + g / nrm
+        new = jnp.sign(tentative) * jnp.maximum(0.0, jnp.abs(tentative) - lam / nrm)
+        new = jnp.where(norms_sq[j] > 0.0, new, old)  # padded column: frozen
+        r = r + (old - new) * xj
+        beta = beta.at[j].set(new)
+        return beta, r
+
+    def epoch(_, carry):
+        return lax.fori_loop(0, w, col_update, carry)
+
+    beta, r = lax.fori_loop(0, num_epochs, epoch, (beta_ref[...], r_ref[...]))
+    beta_out[...] = beta
+    r_out[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("num_epochs",))
+def cd_epochs(x, beta, r, lam, num_epochs=10):
+    """Run `num_epochs` cyclic CD epochs; returns (beta, r).
+
+    Args:
+      x:    (n, w) dense working-set block.
+      beta: (w,) current coefficients for the block.
+      r:    (n,) residual ``y − X_W β`` (full-problem residual restricted
+            to this subproblem's fit).
+      lam:  scalar λ (shape (1,) array).
+    """
+    n, w = x.shape
+    lam = jnp.asarray(lam).reshape((1,))
+    kernel = functools.partial(_cd_epoch_kernel, num_epochs=num_epochs)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((w,), x.dtype),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ),
+        interpret=True,
+    )(x, beta, r, lam)

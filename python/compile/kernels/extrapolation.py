@@ -1,0 +1,32 @@
+"""Pallas kernel: Gram matrix of residual differences (Layer 1).
+
+`U = diffs(Rbuf)` is a tall-skinny (n, K) matrix (K = 5 by default), so
+`UᵀU` is one MXU pass per n-tile accumulated in f32 on a real TPU; here a
+single block suffices for the AOT shapes we ship. The K×K solve that
+follows is done at Layer 2 (`model.gauss_solve`) — it is O(K³) scalar
+work, far too small for a kernel.
+
+interpret=True for CPU-PJRT executability (see cd_epoch.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_diffs_kernel(rbuf_ref, g_out):
+    rbuf = rbuf_ref[...]  # (K+1, n)
+    u = rbuf[1:, :] - rbuf[:-1, :]  # (K, n)
+    g_out[...] = jnp.dot(u, u.T)  # (K, K) — the MXU pass
+
+
+@jax.jit
+def gram_diffs(rbuf):
+    """UᵀU from the (K+1, n) residual ring buffer."""
+    kp1, _n = rbuf.shape
+    k = kp1 - 1
+    return pl.pallas_call(
+        _gram_diffs_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, k), rbuf.dtype),
+        interpret=True,
+    )(rbuf)

@@ -1,0 +1,110 @@
+"""Pure-numpy oracles for the Pallas kernels.
+
+Each function here is the *specification* of a kernel in this package:
+deliberately simple, loop-based, and independent of JAX tracing, so the
+pytest/hypothesis suites can compare kernel outputs against an
+implementation that can be audited line by line.
+"""
+
+import numpy as np
+
+
+def soft_threshold(x, u):
+    """ST(x, u) = sign(x) * max(0, |x| - u), elementwise."""
+    return np.sign(x) * np.maximum(0.0, np.abs(x) - u)
+
+
+def ref_cd_epochs(x, beta, r, lam, num_epochs=1):
+    """`num_epochs` cyclic CD epochs on the dense (n, w) block `x`.
+
+    `r` must equal ``y - x @ beta`` on entry; both are updated in copy.
+    Zero-padded columns (norm 0) are left untouched.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    beta = np.array(beta, dtype=np.float64, copy=True)
+    r = np.array(r, dtype=np.float64, copy=True)
+    w = x.shape[1]
+    norms_sq = (x * x).sum(axis=0)
+    for _ in range(num_epochs):
+        for j in range(w):
+            nrm = norms_sq[j]
+            if nrm == 0.0:
+                continue
+            g = x[:, j] @ r
+            old = beta[j]
+            new = soft_threshold(old + g / nrm, lam / nrm)
+            if new != old:
+                r += (old - new) * x[:, j]
+                beta[j] = new
+    return beta, r
+
+
+def ref_scores(x, theta, col_norms):
+    """Gap-Safe scores d_j(θ) = (1 - |x_jᵀθ|)/‖x_j‖ (Eq. 10).
+
+    Columns with zero norm get a large finite sentinel (they can never
+    enter a working set).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    xtheta = x.T @ np.asarray(theta, dtype=np.float64)
+    safe = np.where(col_norms > 0.0, col_norms, 1.0)
+    d = (1.0 - np.abs(xtheta)) / safe
+    return np.where(col_norms > 0.0, d, np.finfo(np.float64).max)
+
+
+def ref_gram_diffs(rbuf):
+    """UᵀU from the (K+1, n) residual buffer, U = consecutive diffs."""
+    rbuf = np.asarray(rbuf, dtype=np.float64)
+    u = rbuf[1:] - rbuf[:-1]  # (K, n)
+    return u @ u.T
+
+
+def ref_extrapolate(rbuf):
+    """Full dual extrapolation (Definition 1).
+
+    Returns (r_accel, min_pivot): min_pivot ≤ 0 signals a singular system
+    (caller falls back to θ_res, paper §5).
+    """
+    rbuf = np.asarray(rbuf, dtype=np.float64)
+    k = rbuf.shape[0] - 1
+    g = ref_gram_diffs(rbuf)
+    # unpivoted Gaussian elimination (G is PSD), tracking the min pivot
+    a = g.copy()
+    b = np.ones(k)
+    min_pivot = np.inf
+    for col in range(k):
+        piv = a[col, col]
+        min_pivot = min(min_pivot, piv)
+        if piv <= 0.0 or not np.isfinite(piv):
+            return rbuf[-1].copy(), 0.0
+        for row in range(col + 1, k):
+            f = a[row, col] / piv
+            a[row, col:] -= f * a[col, col:]
+            b[row] -= f * b[col]
+    z = np.zeros(k)
+    for row in range(k - 1, -1, -1):
+        z[row] = (b[row] - a[row, row + 1 :] @ z[row + 1 :]) / a[row, row]
+    s = z.sum()
+    if abs(s) < 1e-300:
+        return rbuf[-1].copy(), 0.0
+    c = z / s
+    # c_i applies to the NEWER residual of diff i: rbuf[i+1]
+    r_accel = (c[:, None] * rbuf[1:]).sum(axis=0)
+    return r_accel, float(min_pivot)
+
+
+def ref_ista_epoch(x, y, beta, lam, mu):
+    """One ISTA step: β⁺ = ST(β + Xᵀ(y − Xβ)/μ, λ/μ)."""
+    x = np.asarray(x, dtype=np.float64)
+    r = np.asarray(y, dtype=np.float64) - x @ beta
+    return soft_threshold(beta + (x.T @ r) / mu, lam / mu)
+
+
+def ref_primal_dual_gap(x, y, beta, theta, lam):
+    """(P(β), D(θ), gap)."""
+    x = np.asarray(x, dtype=np.float64)
+    r = y - x @ beta
+    p = 0.5 * (r @ r) + lam * np.abs(beta).sum()
+    diff = theta - y / lam
+    d = 0.5 * (y @ y) - 0.5 * lam * lam * (diff @ diff)
+    return p, d, p - d

@@ -1,0 +1,56 @@
+"""Pallas kernel: tiled Gap-Safe scores `d_j(θ)` (Layer 1, Eq. 10).
+
+This is the MXU-shaped piece of the pipeline: `Xᵀθ` is a (p, n) × (n,)
+matvec. The grid tiles the feature dimension so only an (n, TILE_P) slab
+of the design matrix is resident in VMEM per program; on a real TPU each
+tile is one MXU pass (bf16-able) accumulated in f32. Padded tail columns
+(zero norm) receive a large finite sentinel so they sort to the end of
+any working-set selection.
+
+interpret=True for CPU-PJRT executability (see cd_epoch.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite sentinel for unusable (empty / padded) columns. Large enough to
+# lose every working-set selection, small enough to stay exactly
+# representable and comparable.
+EMPTY_COL_SCORE = 1e300
+
+DEFAULT_TILE = 256
+
+
+def _scores_kernel(x_ref, theta_ref, d_out):
+    x = x_ref[...]  # (n, tile)
+    theta = theta_ref[...]  # (n,)
+    xtheta = jnp.dot(x.T, theta)  # (tile,) — the MXU pass
+    norms = jnp.sqrt(jnp.sum(x * x, axis=0))
+    safe = jnp.where(norms > 0.0, norms, 1.0)
+    d = (1.0 - jnp.abs(xtheta)) / safe
+    d_out[...] = jnp.where(norms > 0.0, d, EMPTY_COL_SCORE)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def gap_safe_scores(x, theta, tile=DEFAULT_TILE):
+    """d_j(θ) for every column of `x`; p must be a multiple of `tile`
+    (the AOT shape buckets guarantee this; pad with zero columns).
+    """
+    n, p = x.shape
+    if p % tile != 0:
+        raise ValueError(f"p={p} must be a multiple of tile={tile}")
+    grid = (p // tile,)
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, tile), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), x.dtype),
+        interpret=True,
+    )(x, theta)

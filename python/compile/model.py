@@ -1,0 +1,123 @@
+"""Layer 2: JAX compute graphs for the CELER inner solver.
+
+These functions compose the Layer-1 Pallas kernels into the units the
+Rust coordinator executes through AOT-compiled HLO artifacts:
+
+- ``inner_solve_block`` — `f` CD epochs on a working-set block,
+- ``gap_scores``        — primal/dual/gap + Gap-Safe d_j scores,
+- ``extrapolate``       — Definition-1 dual extrapolation,
+- ``ista_epoch``        — the Theorem-1 ISTA step.
+
+Everything lowers to *pure HLO*: in particular the K×K solve is an
+explicit Gaussian elimination (``gauss_solve``) because
+``jnp.linalg.solve`` emits LAPACK custom-calls registered by jaxlib's
+Python runtime, which do not exist in the standalone xla_extension
+runtime the Rust side links against.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.cd_epoch import cd_epochs
+from compile.kernels.extrapolation import gram_diffs
+from compile.kernels.scores import gap_safe_scores
+
+
+def gauss_solve(a, b):
+    """Solve the small PSD system ``a z = b`` by unpivoted Gaussian
+    elimination, returning ``(z, min_pivot)``.
+
+    ``min_pivot`` ≤ ~0 flags a (numerically) singular system; the Rust
+    coordinator then falls back to θ_res for the round (paper §5). For a
+    PSD Gram matrix unpivoted elimination is numerically adequate — and
+    crucially it lowers to plain HLO ops.
+    """
+    k = a.shape[0]
+
+    def elim(col, carry):
+        a, b, min_piv = carry
+        piv = a[col, col]
+        min_piv = jnp.minimum(min_piv, piv)
+        safe = jnp.where(jnp.abs(piv) > 0.0, piv, 1.0)
+        factors = jnp.where(jnp.arange(k) > col, a[:, col] / safe, 0.0)
+        a = a - factors[:, None] * a[col, None, :]
+        b = b - factors * b[col]
+        return a, b, min_piv
+
+    a, b, min_piv = lax.fori_loop(
+        0, k, elim, (a, b, jnp.asarray(jnp.inf, dtype=a.dtype))
+    )
+
+    def back(i, z):
+        row = k - 1 - i
+        acc = b[row] - jnp.dot(a[row], z)
+        piv = a[row, row]
+        safe = jnp.where(jnp.abs(piv) > 0.0, piv, 1.0)
+        return z.at[row].set(acc / safe)
+
+    z = lax.fori_loop(0, k, back, jnp.zeros(k, dtype=a.dtype))
+    return z, min_piv
+
+
+@functools.partial(jax.jit, static_argnames=("num_epochs",))
+def inner_solve_block(x, y, beta, lam, num_epochs=10):
+    """`num_epochs` cyclic CD epochs on the (n, w) block.
+
+    Returns (beta, r) with r = y − xβ maintained inside the kernel.
+    """
+    r = y - x @ beta
+    lam = jnp.asarray(lam).reshape((1,))
+    return cd_epochs(x, beta, r, lam, num_epochs=num_epochs)
+
+
+@jax.jit
+def gap_scores(x, y, beta, theta, lam):
+    """Primal, dual, duality gap and Gap-Safe scores in one pass.
+
+    Returns (primal, dual, gap, d) where d[j] = (1−|x_jᵀθ|)/‖x_j‖.
+    """
+    r = y - x @ beta
+    primal = 0.5 * jnp.dot(r, r) + lam * jnp.sum(jnp.abs(beta))
+    diff = theta - y / lam
+    dual = 0.5 * jnp.dot(y, y) - 0.5 * lam * lam * jnp.dot(diff, diff)
+    d = gap_safe_scores(x, theta, tile=min(x.shape[1], 256))
+    return primal, dual, primal - dual, d
+
+
+@jax.jit
+def extrapolate(rbuf):
+    """Definition-1 dual extrapolation from the (K+1, n) residual buffer.
+
+    Returns (r_accel, min_pivot): the caller must discard r_accel when
+    min_pivot ≤ tol (singular system → θ_res fallback, paper §5).
+    """
+    g = gram_diffs(rbuf)  # (K, K) via the Pallas kernel
+    k = g.shape[0]
+    z, min_piv = gauss_solve(g, jnp.ones(k, dtype=rbuf.dtype))
+    s = jnp.sum(z)
+    safe_s = jnp.where(jnp.abs(s) > 0.0, s, 1.0)
+    c = z / safe_s
+    # c_i applies to the NEWER residual of diff i: rbuf[i+1]
+    r_accel = jnp.tensordot(c, rbuf[1:], axes=1)
+    # degenerate normalization also signals fallback
+    min_piv = jnp.where(jnp.abs(s) > 1e-300, min_piv, jnp.zeros_like(min_piv))
+    return r_accel, min_piv
+
+
+@jax.jit
+def theta_from_residual(x, r, lam):
+    """θ_res = r / max(λ, ‖Xᵀr‖_∞) (Eq. 4) plus the correlations Xᵀθ."""
+    xtr = x.T @ r
+    denom = jnp.maximum(lam, jnp.max(jnp.abs(xtr)))
+    return r / denom, xtr / denom
+
+
+@jax.jit
+def ista_epoch(x, y, beta, lam, mu):
+    """β⁺ = ST(β + Xᵀ(y − Xβ)/μ, λ/μ) — the Theorem-1 iteration."""
+    r = y - x @ beta
+    t = beta + (x.T @ r) / mu
+    return jnp.sign(t) * jnp.maximum(0.0, jnp.abs(t) - lam / mu)

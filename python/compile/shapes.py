@@ -1,0 +1,34 @@
+"""AOT shape manifest: which (op, shape) artifacts `aot.py` compiles.
+
+The Rust runtime's shape-bucket router pads working sets up to the next
+compiled width, so the bucket list below is the contract between the two
+sides. `CELER_AOT_PROFILE=full` adds the leukemia-sim sized buckets used
+by `examples/xla_engine_demo.rs --full` (slower to compile).
+"""
+
+import os
+
+# (n, w, f): f CD epochs on an (n, w) working-set block.
+INNER_SOLVE_SMALL = [(48, 64, 10), (48, 128, 10), (48, 256, 10), (48, 512, 10)]
+INNER_SOLVE_FULL = [(72, 128, 10), (72, 256, 10), (72, 512, 10), (72, 1024, 10)]
+
+# (n, p): full-design ops (scores / dual rescale / ISTA), p padded to the
+# scores kernel tile (256).
+FULL_DESIGN_SMALL = [(48, 512)]
+FULL_DESIGN_FULL = [(72, 7168)]
+
+# (k+1, n): extrapolation buffers (K = 5).
+EXTRAPOLATE_SMALL = [(6, 48)]
+EXTRAPOLATE_FULL = [(6, 72)]
+
+
+def profile():
+    return os.environ.get("CELER_AOT_PROFILE", "small")
+
+
+def manifest_shapes():
+    full = profile() == "full"
+    inner = INNER_SOLVE_SMALL + (INNER_SOLVE_FULL if full else [])
+    design = FULL_DESIGN_SMALL + (FULL_DESIGN_FULL if full else [])
+    extrap = EXTRAPOLATE_SMALL + (EXTRAPOLATE_FULL if full else [])
+    return {"inner_solve": inner, "full_design": design, "extrapolate": extrap}

@@ -1,0 +1,98 @@
+"""Layer-2 graph correctness: model.py vs numpy references."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(seed, n, p):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p))
+    x /= np.maximum(np.linalg.norm(x, axis=0), 1e-12)
+    y = rng.normal(size=n)
+    y /= np.linalg.norm(y)
+    return x, y
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), k=st.integers(1, 8))
+def test_gauss_solve_matches_numpy(seed, k):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(k, k + 2))
+    g = u @ u.T + 1e-6 * np.eye(k)  # PSD, well-conditioned
+    z, min_piv = model.gauss_solve(g, np.ones(k))
+    assert float(min_piv) > 0
+    np.testing.assert_allclose(z, np.linalg.solve(g, np.ones(k)), atol=1e-8)
+
+
+def test_gauss_solve_singular_min_pivot():
+    g = np.zeros((3, 3))
+    _, min_piv = model.gauss_solve(g, np.ones(3))
+    assert float(min_piv) <= 0.0
+
+
+def test_inner_solve_block_matches_ref():
+    x, y = make_problem(0, 24, 16)
+    lam = 0.2 * np.max(np.abs(x.T @ y))
+    beta0 = np.zeros(16)
+    beta, r = model.inner_solve_block(x, y, beta0, lam, num_epochs=10)
+    beta_ref, r_ref = ref.ref_cd_epochs(x, beta0, y.copy(), lam, num_epochs=10)
+    np.testing.assert_allclose(beta, beta_ref, atol=1e-12)
+    np.testing.assert_allclose(r, r_ref, atol=1e-12)
+    # residual invariant
+    np.testing.assert_allclose(r, y - x @ np.asarray(beta), atol=1e-12)
+
+
+def test_gap_scores_matches_numpy():
+    x, y = make_problem(1, 16, 256)
+    rng = np.random.default_rng(2)
+    beta = rng.normal(size=256) * (rng.uniform(size=256) < 0.05)
+    lam = 0.3 * np.max(np.abs(x.T @ y))
+    theta = (y - x @ beta)
+    theta = theta / max(lam, np.max(np.abs(x.T @ theta)))
+    p, d, gap, scores = model.gap_scores(x, y, beta, theta, lam)
+    p_ref, d_ref, gap_ref = ref.ref_primal_dual_gap(x, y, beta, theta, lam)
+    np.testing.assert_allclose(float(p), p_ref, atol=1e-12)
+    np.testing.assert_allclose(float(d), d_ref, atol=1e-12)
+    np.testing.assert_allclose(float(gap), gap_ref, atol=1e-12)
+    np.testing.assert_allclose(
+        scores, ref.ref_scores(x, theta, np.linalg.norm(x, axis=0)), atol=1e-12
+    )
+    assert gap_ref >= -1e-12, "feasible dual point -> nonnegative gap"
+
+
+def test_theta_from_residual_feasible():
+    x, y = make_problem(3, 20, 64)
+    lam = 0.1 * np.max(np.abs(x.T @ y))
+    theta, xtheta = model.theta_from_residual(x, y, lam)
+    assert np.max(np.abs(xtheta)) <= 1.0 + 1e-12
+    np.testing.assert_allclose(xtheta, x.T @ np.asarray(theta), atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_ista_epoch_matches_ref(seed):
+    x, y = make_problem(seed, 12, 20)
+    rng = np.random.default_rng(seed + 1)
+    beta = rng.normal(size=20) * 0.1
+    lam = 0.2 * np.max(np.abs(x.T @ y))
+    mu = np.linalg.norm(x, ord=2) ** 2
+    out = model.ista_epoch(x, y, beta, lam, mu)
+    np.testing.assert_allclose(out, ref.ref_ista_epoch(x, y, beta, lam, mu), atol=1e-12)
+
+
+def test_ista_converges_to_cd_solution():
+    x, y = make_problem(4, 24, 12)
+    lam = 0.3 * np.max(np.abs(x.T @ y))
+    mu = np.linalg.norm(x, ord=2) ** 2
+    beta = np.zeros(12)
+    for _ in range(3000):
+        beta = np.asarray(model.ista_epoch(x, y, beta, lam, mu))
+    beta_cd, _ = ref.ref_cd_epochs(x, np.zeros(12), y.copy(), lam, num_epochs=3000)
+    np.testing.assert_allclose(beta, beta_cd, atol=1e-8)

@@ -1,0 +1,24 @@
+//! Bench: Figure 10 (Appendix A.3) — the Fig-4 path on a coarse 10-λ
+//! grid; CELER must still beat BLITZ.
+
+use celer::coordinator;
+use celer::data::synth;
+use celer::report::bench;
+use celer::solvers::path::{run_path, PathSolver};
+
+fn main() {
+    let full = bench::full_scale();
+    let ds = if full { synth::finance_sim(0) } else { synth::finance_mini(0) };
+    let grid = coordinator::standard_grid(&ds, 100.0, 10);
+    let iters = if full { 2 } else { 5 };
+
+    let t_celer = bench::time("fig10/coarse_path_celer", iters, || {
+        let solver = PathSolver::by_name("celer-prune", 1e-6).unwrap();
+        assert!(run_path(&ds.x, &ds.y, &grid, &solver, false).all_converged());
+    });
+    let t_blitz = bench::time("fig10/coarse_path_blitz", iters, || {
+        let solver = PathSolver::by_name("blitz", 1e-6).unwrap();
+        assert!(run_path(&ds.x, &ds.y, &grid, &solver, false).all_converged());
+    });
+    println!("fig10 blitz/celer: {:.2}×", t_blitz.min_s / t_celer.min_s.max(1e-12));
+}

@@ -1,0 +1,32 @@
+//! Bench: Figure 5 — GLMNET vs CELER false-positive counts along a path
+//! (the cost of running both paths + the FP property itself).
+
+use celer::coordinator;
+use celer::data::synth;
+use celer::report::bench;
+use celer::solvers::path::{run_path, PathSolver};
+
+fn main() {
+    let full = bench::full_scale();
+    let ds = if full { synth::leukemia_sim(0) } else { synth::leukemia_mini(0) };
+    let grid = coordinator::standard_grid(&ds, 100.0, if full { 20 } else { 8 });
+    let iters = if full { 1 } else { 3 };
+
+    bench::time("fig5/glmnet_path_loose", iters, || {
+        let solver = PathSolver::by_name("glmnet", 1e-3).unwrap();
+        let res = run_path(&ds.x, &ds.y, &grid, &solver, true);
+        assert_eq!(res.steps.len(), grid.len());
+    });
+    bench::time("fig5/celer_path_loose", iters, || {
+        let solver = PathSolver::by_name("celer-prune", 1e-3).unwrap();
+        let res = run_path(&ds.x, &ds.y, &grid, &solver, true);
+        assert!(res.all_converged());
+    });
+    // property: at the loosest ε, GLMNET's final supports are at least as
+    // large as CELER's (the false-positive mechanism)
+    let g = run_path(&ds.x, &ds.y, &grid, &PathSolver::by_name("glmnet", 1e-2).unwrap(), false);
+    let c = run_path(&ds.x, &ds.y, &grid, &PathSolver::by_name("celer-prune", 1e-2).unwrap(), false);
+    let sg: usize = g.steps.iter().map(|s| s.support_size).sum();
+    let sc: usize = c.steps.iter().map(|s| s.support_size).sum();
+    println!("fig5 Σ|support|: glmnet={sg} celer={sc} (paper: glmnet inflated at loose ε)");
+}

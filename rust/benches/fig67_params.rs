@@ -1,0 +1,54 @@
+//! Bench: Figures 6 & 7 — sensitivity of extrapolated CD to the gap
+//! frequency f and the depth K (cost of the traced sweeps).
+
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::report::bench;
+use celer::solvers::cd::{cd_solve, CdConfig};
+
+fn main() {
+    let full = bench::full_scale();
+    let ds = if full { synth::leukemia_sim(0) } else { synth::leukemia_mini(0) };
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+    let max_epochs = if full { 600 } else { 200 };
+    let iters = if full { 2 } else { 5 };
+
+    for f in [1usize, 10, 50] {
+        bench::time(&format!("fig6/cd_f{f}"), iters, || {
+            let out = cd_solve(
+                &ds.x,
+                &ds.y,
+                lambda,
+                None,
+                &CdConfig {
+                    tol: 1e-14,
+                    max_epochs,
+                    gap_freq: f,
+                    best_dual: false,
+                    trace: true,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(out.epochs, max_epochs);
+        });
+    }
+    for k in [2usize, 5, 10] {
+        bench::time(&format!("fig7/cd_k{k}"), iters, || {
+            let out = cd_solve(
+                &ds.x,
+                &ds.y,
+                lambda,
+                None,
+                &CdConfig {
+                    tol: 1e-14,
+                    max_epochs,
+                    k,
+                    best_dual: false,
+                    trace: true,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(out.epochs, max_epochs);
+        });
+    }
+}

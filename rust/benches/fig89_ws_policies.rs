@@ -1,0 +1,38 @@
+//! Bench: Figures 8 & 9 — CELER under different working-set growth
+//! policies with under-/over-shooting initial sizes.
+
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::report::bench;
+use celer::solvers::celer::{celer_solve_on, CelerConfig};
+use celer::ws::{GrowthPolicy, WsPolicy};
+
+fn main() {
+    let full = bench::full_scale();
+    let ds = if full { synth::leukemia_sim(0) } else { synth::leukemia_mini(0) };
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let iters = if full { 2 } else { 5 };
+
+    let cases: [(&str, f64, usize, GrowthPolicy); 4] = [
+        ("fig8/undershoot_geo2", lmax / 20.0, 10, GrowthPolicy::Geometric { factor: 2 }),
+        ("fig8/undershoot_lin10", lmax / 20.0, 10, GrowthPolicy::Linear { increment: 10 }),
+        ("fig9/overshoot_geo2", lmax / 5.0, 500, GrowthPolicy::Geometric { factor: 2 }),
+        ("fig9/overshoot_geo4", lmax / 5.0, 500, GrowthPolicy::Geometric { factor: 4 }),
+    ];
+    for (name, lambda, p1, growth) in cases {
+        bench::time(name, iters, || {
+            let out = celer_solve_on(
+                &ds.x,
+                &ds.y,
+                lambda,
+                None,
+                &CelerConfig {
+                    tol: 1e-8,
+                    ws: WsPolicy { p1, growth, prune: true },
+                    ..Default::default()
+                },
+            );
+            assert!(out.result.converged);
+        });
+    }
+}

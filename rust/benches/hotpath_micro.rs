@@ -1,0 +1,115 @@
+//! Microbenchmarks of the L3 hot paths feeding the §Perf iteration loop:
+//! sparse/dense CD epochs, Xᵀv scans, working-set selection, gather,
+//! extrapolation solve. These are the quantities the profile-driven
+//! optimization pass tracks in EXPERIMENTS.md §Perf.
+
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::extrapolation::ResidualBuffer;
+use celer::lasso::dual;
+use celer::report::bench;
+use celer::util::select::k_smallest_indices;
+use celer::util::soft_threshold;
+
+fn main() {
+    let full = bench::full_scale();
+    let sparse = if full { synth::finance_sim(0) } else { synth::finance_mini(0) };
+    let dense = if full { synth::leukemia_sim(0) } else { synth::leukemia_mini(0) };
+    let iters = if full { 5 } else { 20 };
+
+    // --- sparse CD epoch (the dominant inner-loop cost) ---
+    {
+        let x = &sparse.x;
+        let p = x.p();
+        let norms = x.col_norms_sq();
+        let lambda = dual::lambda_max(x, &sparse.y) / 10.0;
+        let mut beta = vec![0.0; p];
+        let mut r = sparse.y.clone();
+        bench::time(&format!("hot/sparse_cd_epoch_nnz{}", x.nnz()), iters, || {
+            for j in 0..p {
+                let nrm = norms[j];
+                if nrm == 0.0 {
+                    continue;
+                }
+                let g = x.col_dot(j, &r);
+                let old = beta[j];
+                let new = soft_threshold(old + g / nrm, lambda / nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, &mut r);
+                    beta[j] = new;
+                }
+            }
+        });
+    }
+
+    // --- dense CD epoch ---
+    {
+        let x = &dense.x;
+        let (n, p) = (x.n(), x.p());
+        let _ = n;
+        let norms = x.col_norms_sq();
+        let lambda = dual::lambda_max(x, &dense.y) / 10.0;
+        let mut beta = vec![0.0; p];
+        let mut r = dense.y.clone();
+        bench::time(&format!("hot/dense_cd_epoch_p{p}"), iters, || {
+            for j in 0..p {
+                let g = x.col_dot(j, &r);
+                let old = beta[j];
+                let new = soft_threshold(old + g / norms[j], lambda / norms[j]);
+                if new != old {
+                    x.col_axpy(j, old - new, &mut r);
+                    beta[j] = new;
+                }
+            }
+        });
+    }
+
+    // --- full Xᵀv scan (gap/screening cost, parallelized) ---
+    {
+        let x = &sparse.x;
+        let mut out = vec![0.0; x.p()];
+        bench::time("hot/sparse_xt_vec", iters, || {
+            x.xt_vec(&sparse.y, &mut out);
+        });
+        bench::time("hot/sparse_xt_abs_max", iters, || {
+            let m = x.xt_abs_max(&sparse.y);
+            assert!(m > 0.0);
+        });
+    }
+
+    // --- working-set selection over p scores ---
+    {
+        let p = sparse.x.p();
+        let mut rng = celer::util::rng::Rng::new(1);
+        let scores: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        bench::time(&format!("hot/ws_select_k_smallest_p{p}"), iters, || {
+            let ws = k_smallest_indices(&scores, 200);
+            assert_eq!(ws.len(), 200);
+        });
+    }
+
+    // --- working-set gather (sub-design materialization) ---
+    {
+        let x = &sparse.x;
+        let cols: Vec<usize> = (0..200.min(x.p())).collect();
+        bench::time("hot/ws_select_columns", iters, || {
+            let sub = x.select_columns(&cols);
+            assert_eq!(sub.p(), cols.len());
+        });
+    }
+
+    // --- extrapolation solve (K = 5) ---
+    {
+        let n = sparse.x.n();
+        let mut rng = celer::util::rng::Rng::new(2);
+        let mut buf = ResidualBuffer::new(5);
+        for _ in 0..6 {
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            buf.push(&r);
+        }
+        bench::time("hot/extrapolate_k5", iters, || {
+            let out = buf.extrapolate();
+            assert!(out.is_some());
+        });
+    }
+}

@@ -1,0 +1,93 @@
+//! Lightweight metrics for experiment runs: wall-clock timers and
+//! monotonic counters, exported as JSON for EXPERIMENTS.md tooling.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// A named set of counters/gauges for one experiment run.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    values: BTreeMap<String, f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to counter `name`.
+    pub fn add(&mut self, name: &str, v: f64) {
+        *self.values.entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.values.insert(name.to_string(), v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.get(name).copied()
+    }
+
+    /// Export as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.values.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.add("epochs", 10.0);
+        m.add("epochs", 5.0);
+        m.set("gap", 1e-6);
+        assert_eq!(m.get("epochs"), Some(15.0));
+        assert_eq!(m.get("gap"), Some(1e-6));
+        assert_eq!(m.get("missing"), None);
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let mut m = Metrics::new();
+        m.set("a", 1.0);
+        m.set("b", 2.5);
+        let parsed = crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.get("b").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a);
+    }
+}

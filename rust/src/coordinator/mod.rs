@@ -1,0 +1,124 @@
+//! Experiment coordinator: named datasets, experiment-grid jobs and the
+//! parallel scheduler that drives the paper's tables and figures.
+//!
+//! The coordinator is the piece a downstream user scripts against:
+//! `ExperimentGrid` enumerates (dataset × solver × ε) cells, the
+//! scheduler fans independent cells out over threads (warm-start chains
+//! within a λ-path stay sequential), and every cell reports wall-clock +
+//! convergence metadata for the report writers.
+
+pub mod metrics;
+pub mod scheduler;
+
+use crate::data::synth::{self, SynthDataset};
+use crate::solvers::path::{lambda_grid, run_path, PathResult, PathSolver};
+
+/// Named dataset loader (synthetic stand-ins for the paper's datasets —
+/// see DESIGN.md §4; real svmlight files can be loaded via `data::svmlight`).
+pub fn load_dataset(name: &str, seed: u64) -> anyhow::Result<SynthDataset> {
+    Ok(match name {
+        "leukemia-sim" => synth::leukemia_sim(seed),
+        "leukemia-mini" => synth::leukemia_mini(seed),
+        "finance-sim" => synth::finance_sim(seed),
+        "finance-mini" => synth::finance_mini(seed),
+        "bctcga-sim" => synth::bctcga_sim(seed),
+        "toy-2x2" => synth::toy_2x2(),
+        other => anyhow::bail!(
+            "unknown dataset {other:?} (expected leukemia-sim, leukemia-mini, \
+             finance-sim, finance-mini, bctcga-sim, toy-2x2)"
+        ),
+    })
+}
+
+/// One experiment cell: a solver on a λ-path at a tolerance.
+#[derive(Debug, Clone)]
+pub struct PathJob {
+    pub solver_name: String,
+    pub tol: f64,
+    /// λ grid (descending).
+    pub grid: Vec<f64>,
+    pub store_betas: bool,
+}
+
+/// Run a grid of path jobs on one dataset, parallel across cells.
+pub fn run_path_jobs(
+    ds: &SynthDataset,
+    jobs: Vec<PathJob>,
+    workers: usize,
+) -> anyhow::Result<Vec<PathResult>> {
+    for j in &jobs {
+        anyhow::ensure!(
+            PathSolver::by_name(&j.solver_name, j.tol).is_some(),
+            "unknown solver {}",
+            j.solver_name
+        );
+    }
+    let results = scheduler::run_parallel(jobs, workers, |job| {
+        let solver = PathSolver::by_name(&job.solver_name, job.tol).expect("validated");
+        run_path(&ds.x, &ds.y, &job.grid, &solver, job.store_betas)
+    });
+    Ok(results)
+}
+
+/// Convenience: the paper's standard grid for a dataset (λmax → λmax/ratio).
+pub fn standard_grid(ds: &SynthDataset, inv_ratio: f64, num: usize) -> Vec<f64> {
+    let lmax = crate::lasso::dual::lambda_max(&ds.x, &ds.y);
+    lambda_grid(lmax, 1.0 / inv_ratio, num)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_loader_known_and_unknown() {
+        assert!(load_dataset("leukemia-mini", 0).is_ok());
+        assert!(load_dataset("toy-2x2", 0).is_ok());
+        assert!(load_dataset("bogus", 0).is_err());
+    }
+
+    #[test]
+    fn path_jobs_run_in_parallel_and_agree_with_serial() {
+        let ds = load_dataset("leukemia-mini", 3).unwrap();
+        let grid = standard_grid(&ds, 10.0, 4);
+        let jobs: Vec<PathJob> = ["celer-prune", "blitz"]
+            .iter()
+            .map(|s| PathJob {
+                solver_name: s.to_string(),
+                tol: 1e-6,
+                grid: grid.clone(),
+                store_betas: false,
+            })
+            .collect();
+        let par = run_path_jobs(&ds, jobs.clone(), 2).unwrap();
+        let ser = run_path_jobs(&ds, jobs, 1).unwrap();
+        assert_eq!(par.len(), 2);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.solver, b.solver);
+            assert_eq!(a.steps.len(), b.steps.len());
+            for (sa, sb) in a.steps.iter().zip(&b.steps) {
+                assert_eq!(sa.support_size, sb.support_size, "{}", a.solver);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_solver() {
+        let ds = load_dataset("leukemia-mini", 3).unwrap();
+        let jobs = vec![PathJob {
+            solver_name: "nope".into(),
+            tol: 1e-6,
+            grid: vec![0.1],
+            store_betas: false,
+        }];
+        assert!(run_path_jobs(&ds, jobs, 1).is_err());
+    }
+
+    #[test]
+    fn standard_grid_spans_ratio() {
+        let ds = load_dataset("leukemia-mini", 1).unwrap();
+        let g = standard_grid(&ds, 100.0, 10);
+        assert_eq!(g.len(), 10);
+        assert!((g[0] / g[9] - 100.0).abs() < 1e-9);
+    }
+}

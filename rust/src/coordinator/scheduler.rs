@@ -1,0 +1,83 @@
+//! Parallel job scheduler for experiment grids.
+//!
+//! Experiment cells (solver × tolerance × dataset) are independent; the
+//! scheduler fans them out over a worker pool with a shared index queue
+//! and collects results in input order. λ-path cells are NOT split —
+//! warm-start chains are sequential by construction, so a "job" is a
+//! whole path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f` over all items on `workers` threads; results keep input order.
+pub fn run_parallel<I, O, F>(items: Vec<I>, workers: usize, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(&I) -> O + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = run_parallel(items, 8, |&i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(run_parallel(vec![1, 2, 3], 1, |&i| i + 1), vec![2, 3, 4]);
+        let empty: Vec<i32> = vec![];
+        assert!(run_parallel(empty, 4, |&i: &i32| i).is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(run_parallel(vec![5], 16, |&i| i), vec![5]);
+    }
+
+    #[test]
+    fn uneven_work_completes() {
+        let items: Vec<u64> = (0..32).collect();
+        let out = run_parallel(items, 4, |&i| {
+            // deliberately uneven busy work
+            let mut acc = 0u64;
+            for t in 0..(i * 1000) {
+                acc = acc.wrapping_add(t);
+            }
+            (i, acc).0
+        });
+        assert_eq!(out, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,182 @@
+//! Dense column-major design matrix.
+//!
+//! Column-major layout matches the access pattern of coordinate descent:
+//! the inner loop reads/updates one feature column `x_j` at a time, so each
+//! column is a contiguous slice.
+
+use crate::data::design::DesignOps;
+
+/// Dense n×p design matrix, column-major.
+#[derive(Debug, Clone)]
+pub struct DenseMatrix {
+    n: usize,
+    p: usize,
+    /// Column-major values, `data[j*n + i] = X[i, j]`.
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Build from column-major data (length n·p).
+    pub fn from_col_major(n: usize, p: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * p, "dense data must be n*p");
+        DenseMatrix { n, p, data }
+    }
+
+    /// Build from row-major data (length n·p); transposes into column-major.
+    pub fn from_row_major(n: usize, p: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), n * p);
+        let mut cm = vec![0.0; n * p];
+        for i in 0..n {
+            for j in 0..p {
+                cm[j * n + i] = data[i * p + j];
+            }
+        }
+        DenseMatrix { n, p, data: cm }
+    }
+
+    /// All-zeros matrix.
+    pub fn zeros(n: usize, p: usize) -> Self {
+        DenseMatrix { n, p, data: vec![0.0; n * p] }
+    }
+
+    /// Column `j` as a contiguous slice.
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Mutable column `j`.
+    #[inline(always)]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    /// Entry accessor (test/debug convenience).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n + i]
+    }
+
+    /// Raw column-major buffer.
+    pub fn raw(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+impl DesignOps for DenseMatrix {
+    #[inline]
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        crate::util::linalg::dot(self.col(j), v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        crate::util::linalg::axpy(alpha, self.col(j), out);
+    }
+
+    #[inline]
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        let c = self.col(j);
+        crate::util::linalg::dot(c, c)
+    }
+
+    fn col_nnz(&self, j: usize) -> usize {
+        self.col(j).iter().filter(|&&v| v != 0.0).count()
+    }
+
+    fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.p);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for j in 0..self.p {
+            let b = beta[j];
+            if b != 0.0 {
+                self.col_axpy(j, b, out);
+            }
+        }
+    }
+
+    fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.n);
+        assert_eq!(out.len(), self.p);
+        crate::util::par::par_fill(out, |j| crate::util::linalg::dot(self.col(j), v));
+    }
+
+    fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(cols.len() * self.n);
+        for &j in cols {
+            out.extend_from_slice(self.col(j));
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::design::DesignOps;
+
+    fn sample() -> DenseMatrix {
+        // X = [[1, 2], [3, 4], [5, 6]] (n=3, p=2)
+        DenseMatrix::from_row_major(3, 2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn layout_round_trip() {
+        let x = sample();
+        assert_eq!(x.col(0), &[1.0, 3.0, 5.0]);
+        assert_eq!(x.col(1), &[2.0, 4.0, 6.0]);
+        assert_eq!(x.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn col_ops() {
+        let x = sample();
+        let v = [1.0, 1.0, 1.0];
+        assert_eq!(x.col_dot(0, &v), 9.0);
+        assert_eq!(x.col_norm_sq(1), 4.0 + 16.0 + 36.0);
+        let mut out = vec![1.0, 1.0, 1.0];
+        x.col_axpy(0, 2.0, &mut out);
+        assert_eq!(out, vec![3.0, 7.0, 11.0]);
+        assert_eq!(x.col_nnz(0), 3);
+    }
+
+    #[test]
+    fn matvec_xt_vec() {
+        let x = sample();
+        let mut r = vec![0.0; 3];
+        x.matvec(&[1.0, -1.0], &mut r);
+        assert_eq!(r, vec![-1.0, -1.0, -1.0]);
+        let mut xt = vec![0.0; 2];
+        x.xt_vec(&[1.0, 0.0, -1.0], &mut xt);
+        assert_eq!(xt, vec![-4.0, -4.0]);
+    }
+
+    #[test]
+    fn gather() {
+        let x = sample();
+        let mut buf = Vec::new();
+        x.gather_dense(&[1, 0], &mut buf);
+        assert_eq!(buf, vec![2.0, 4.0, 6.0, 1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let x = DenseMatrix::from_col_major(2, 2, vec![0.0, 1.0, 2.0, 0.0]);
+        assert_eq!(x.nnz(), 2);
+    }
+}

@@ -1,0 +1,191 @@
+//! Unified design-matrix abstraction.
+//!
+//! Solvers are written generically over [`DesignOps`] so that the inner
+//! loops monomorphize for both dense and sparse storage (no dynamic
+//! dispatch on the hot path). The public API wraps both in the
+//! [`DesignMatrix`] enum and dispatches once at entry.
+
+use crate::data::csc::CscMatrix;
+use crate::data::dense::DenseMatrix;
+
+/// The column-oriented operations coordinate descent and screening need.
+pub trait DesignOps: Sync {
+    /// Number of observations (rows).
+    fn n(&self) -> usize;
+    /// Number of features (columns).
+    fn p(&self) -> usize;
+    /// `x_jᵀ v`.
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64;
+    /// `out += alpha · x_j`.
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]);
+    /// `‖x_j‖²`.
+    fn col_norm_sq(&self, j: usize) -> f64;
+    /// Number of stored non-zeros in column j.
+    fn col_nnz(&self, j: usize) -> usize;
+    /// `out = X β`.
+    fn matvec(&self, beta: &[f64], out: &mut [f64]);
+    /// `out = Xᵀ v` (parallelized over columns).
+    fn xt_vec(&self, v: &[f64], out: &mut [f64]);
+    /// Gather columns `cols` into a dense column-major buffer (n × |cols|).
+    fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>);
+    /// Total stored non-zeros.
+    fn nnz(&self) -> usize;
+
+    /// `‖Xᵀ v‖_∞` (used by dual rescaling and λ_max).
+    fn xt_abs_max(&self, v: &[f64]) -> f64 {
+        crate::util::par::par_max(self.p(), |j| self.col_dot(j, v).abs()).max(0.0)
+    }
+
+    /// All column squared norms.
+    fn col_norms_sq(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.p()];
+        crate::util::par::par_fill(&mut out, |j| self.col_norm_sq(j));
+        out
+    }
+}
+
+/// A design matrix: dense column-major or sparse CSC.
+#[derive(Debug, Clone)]
+pub enum DesignMatrix {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+impl DesignMatrix {
+    /// Restrict to the given columns, preserving storage kind.
+    pub fn select_columns(&self, cols: &[usize]) -> DesignMatrix {
+        match self {
+            DesignMatrix::Dense(d) => {
+                let mut buf = Vec::new();
+                d.gather_dense(cols, &mut buf);
+                DesignMatrix::Dense(DenseMatrix::from_col_major(d.n(), cols.len(), buf))
+            }
+            DesignMatrix::Sparse(s) => DesignMatrix::Sparse(s.select_columns(cols)),
+        }
+    }
+
+    /// True if sparse storage.
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DesignMatrix::Sparse(_))
+    }
+
+    /// Density of stored non-zeros.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n() as f64 * self.p() as f64)
+    }
+}
+
+/// Dispatch a [`DesignOps`] method through the enum.
+macro_rules! dispatch {
+    ($self:ident, $m:ident $(, $a:expr)*) => {
+        match $self {
+            DesignMatrix::Dense(d) => d.$m($($a),*),
+            DesignMatrix::Sparse(s) => s.$m($($a),*),
+        }
+    };
+}
+
+impl DesignOps for DesignMatrix {
+    fn n(&self) -> usize {
+        dispatch!(self, n)
+    }
+    fn p(&self) -> usize {
+        dispatch!(self, p)
+    }
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        dispatch!(self, col_dot, j, v)
+    }
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        dispatch!(self, col_axpy, j, alpha, out)
+    }
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        dispatch!(self, col_norm_sq, j)
+    }
+    fn col_nnz(&self, j: usize) -> usize {
+        dispatch!(self, col_nnz, j)
+    }
+    fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        dispatch!(self, matvec, beta, out)
+    }
+    fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
+        dispatch!(self, xt_vec, v, out)
+    }
+    fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {
+        dispatch!(self, gather_dense, cols, out)
+    }
+    fn nnz(&self) -> usize {
+        dispatch!(self, nnz)
+    }
+    fn xt_abs_max(&self, v: &[f64]) -> f64 {
+        dispatch!(self, xt_abs_max, v)
+    }
+    fn col_norms_sq(&self) -> Vec<f64> {
+        dispatch!(self, col_norms_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_pair(seed: u64, n: usize, p: usize, density: f64) -> (DesignMatrix, DesignMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0; n * p];
+        for v in dense.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.normal();
+            }
+        }
+        let d = DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, dense.clone()));
+        let s = DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &dense));
+        (d, s)
+    }
+
+    #[test]
+    fn dense_sparse_agree() {
+        let (d, s) = random_pair(42, 17, 23, 0.3);
+        let mut rng = Rng::new(1);
+        let v: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+        let beta: Vec<f64> = (0..23).map(|_| rng.normal()).collect();
+        assert_eq!(d.n(), s.n());
+        assert_eq!(d.nnz(), s.nnz());
+        for j in 0..23 {
+            assert!((d.col_dot(j, &v) - s.col_dot(j, &v)).abs() < 1e-12);
+            assert!((d.col_norm_sq(j) - s.col_norm_sq(j)).abs() < 1e-12);
+        }
+        let (mut a, mut b) = (vec![0.0; 17], vec![0.0; 17]);
+        d.matvec(&beta, &mut a);
+        s.matvec(&beta, &mut b);
+        for i in 0..17 {
+            assert!((a[i] - b[i]).abs() < 1e-12);
+        }
+        assert!((d.xt_abs_max(&v) - s.xt_abs_max(&v)).abs() < 1e-12);
+        let (cn_d, cn_s) = (d.col_norms_sq(), s.col_norms_sq());
+        for j in 0..23 {
+            assert!((cn_d[j] - cn_s[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_columns_both_kinds() {
+        let (d, s) = random_pair(7, 10, 8, 0.5);
+        let cols = [5, 1, 6];
+        let ds = d.select_columns(&cols);
+        let ss = s.select_columns(&cols);
+        assert_eq!(ds.p(), 3);
+        assert_eq!(ss.p(), 3);
+        let v: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        for c in 0..3 {
+            assert!((ds.col_dot(c, &v) - d.col_dot(cols[c], &v)).abs() < 1e-12);
+            assert!((ss.col_dot(c, &v) - s.col_dot(cols[c], &v)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn density_reported() {
+        let (_, s) = random_pair(3, 50, 40, 0.1);
+        let d = s.density();
+        assert!(d > 0.02 && d < 0.25, "density={d}");
+    }
+}

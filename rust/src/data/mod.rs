@@ -1,0 +1,13 @@
+//! Data substrate: design matrices (dense + CSC sparse), svmlight I/O,
+//! synthetic dataset generators, and the paper's preprocessing pipeline.
+
+pub mod csc;
+pub mod dense;
+pub mod design;
+pub mod preprocess;
+pub mod svmlight;
+pub mod synth;
+
+pub use csc::CscMatrix;
+pub use dense::DenseMatrix;
+pub use design::{DesignMatrix, DesignOps};

@@ -1,0 +1,236 @@
+//! Dataset preprocessing, matching the paper's pipeline (§6.1–6.2):
+//!
+//! - drop features with fewer than `min_nnz` non-zero entries,
+//! - set every feature column to unit ℓ2 norm,
+//! - center `y` and set it to unit ℓ2 norm,
+//! - optionally append an unregularized-in-spirit intercept column
+//!   (constant 1/√n so it is unit-norm).
+
+use crate::data::csc::CscMatrix;
+use crate::data::dense::DenseMatrix;
+use crate::data::design::{DesignMatrix, DesignOps};
+
+/// Preprocessing configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PreprocessConfig {
+    /// Drop columns with strictly fewer stored non-zeros than this.
+    pub min_nnz: usize,
+    /// Rescale every kept column to unit ℓ2 norm.
+    pub normalize_columns: bool,
+    /// Center y to zero mean and rescale to unit ℓ2 norm.
+    pub standardize_y: bool,
+    /// Append a constant intercept column (unit ℓ2 norm).
+    pub add_intercept: bool,
+}
+
+impl Default for PreprocessConfig {
+    fn default() -> Self {
+        PreprocessConfig {
+            min_nnz: 1,
+            normalize_columns: true,
+            standardize_y: true,
+            add_intercept: false,
+        }
+    }
+}
+
+/// The paper's Finance preprocessing: min 3 nnz, unit columns, standardized
+/// y, intercept appended.
+pub fn finance_config() -> PreprocessConfig {
+    PreprocessConfig { min_nnz: 3, normalize_columns: true, standardize_y: true, add_intercept: true }
+}
+
+/// Report of what preprocessing did.
+#[derive(Debug, Clone)]
+pub struct PreprocessReport {
+    pub kept_columns: Vec<usize>,
+    pub dropped: usize,
+    pub y_mean: f64,
+    pub y_norm: f64,
+}
+
+/// Apply preprocessing; returns the new (X, y) and a report.
+pub fn preprocess(
+    x: &DesignMatrix,
+    y: &[f64],
+    cfg: &PreprocessConfig,
+) -> (DesignMatrix, Vec<f64>, PreprocessReport) {
+    let n = x.n();
+    assert_eq!(y.len(), n);
+
+    // 1. column filtering
+    let kept: Vec<usize> = (0..x.p()).filter(|&j| x.col_nnz(j) >= cfg.min_nnz).collect();
+    let dropped = x.p() - kept.len();
+    let mut xk = if kept.len() == x.p() { x.clone() } else { x.select_columns(&kept) };
+
+    // 2. column normalization
+    if cfg.normalize_columns {
+        xk = normalize_columns(xk);
+    }
+
+    // 3. intercept
+    if cfg.add_intercept {
+        xk = append_intercept(xk);
+    }
+
+    // 4. y standardization
+    let mut y2 = y.to_vec();
+    let mut y_mean = 0.0;
+    let mut y_norm = 1.0;
+    if cfg.standardize_y {
+        y_mean = y2.iter().sum::<f64>() / n as f64;
+        for v in y2.iter_mut() {
+            *v -= y_mean;
+        }
+        y_norm = crate::util::linalg::norm(&y2);
+        if y_norm > 0.0 {
+            for v in y2.iter_mut() {
+                *v /= y_norm;
+            }
+        }
+    }
+
+    (xk, y2, PreprocessReport { kept_columns: kept, dropped, y_mean, y_norm })
+}
+
+/// Rescale all non-empty columns to unit ℓ2 norm.
+pub fn normalize_columns(x: DesignMatrix) -> DesignMatrix {
+    match x {
+        DesignMatrix::Dense(mut d) => {
+            for j in 0..d.p() {
+                let nrm = d.col_norm_sq(j).sqrt();
+                if nrm > 0.0 {
+                    for v in d.col_mut(j) {
+                        *v /= nrm;
+                    }
+                }
+            }
+            DesignMatrix::Dense(d)
+        }
+        DesignMatrix::Sparse(mut s) => {
+            for j in 0..s.p() {
+                let nrm = s.col_norm_sq(j).sqrt();
+                if nrm > 0.0 {
+                    for v in s.col_values_mut(j) {
+                        *v /= nrm;
+                    }
+                }
+            }
+            DesignMatrix::Sparse(s)
+        }
+    }
+}
+
+/// Append a constant column `1/√n` (unit ℓ2 norm).
+pub fn append_intercept(x: DesignMatrix) -> DesignMatrix {
+    let n = x.n();
+    let c = 1.0 / (n as f64).sqrt();
+    match x {
+        DesignMatrix::Dense(d) => {
+            let p = d.p();
+            let mut data = d.raw().to_vec();
+            data.extend(std::iter::repeat(c).take(n));
+            DesignMatrix::Dense(DenseMatrix::from_col_major(n, p + 1, data))
+        }
+        DesignMatrix::Sparse(s) => {
+            let p = s.p();
+            let mut dense = Vec::new();
+            // rebuild CSC with one extra full column
+            let mut cols: Vec<Vec<(u32, f64)>> = Vec::with_capacity(p + 1);
+            for j in 0..p {
+                s.gather_dense(&[j], &mut dense);
+                cols.push(
+                    dense
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &v)| v != 0.0)
+                        .map(|(i, &v)| (i as u32, v))
+                        .collect(),
+                );
+            }
+            cols.push((0..n as u32).map(|i| (i, c)).collect());
+            DesignMatrix::Sparse(CscMatrix::from_columns(n, cols))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(seed: u64, n: usize, p: usize, density: f64) -> DesignMatrix {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0; n * p];
+        for v in dense.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.normal();
+            }
+        }
+        DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &dense))
+    }
+
+    #[test]
+    fn normalize_gives_unit_columns() {
+        let x = random_sparse(1, 20, 10, 0.5);
+        let xn = normalize_columns(x);
+        for j in 0..10 {
+            let ns = xn.col_norm_sq(j);
+            if xn.col_nnz(j) > 0 {
+                assert!((ns - 1.0).abs() < 1e-12, "col {j}: {ns}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_nnz_filters() {
+        // col0: 2 nnz, col1: 1 nnz, col2: 3 nnz
+        let x = DesignMatrix::Sparse(CscMatrix::from_columns(
+            3,
+            vec![
+                vec![(0, 1.0), (1, 1.0)],
+                vec![(2, 1.0)],
+                vec![(0, 1.0), (1, 1.0), (2, 1.0)],
+            ],
+        ));
+        let y = vec![1.0, 2.0, 3.0];
+        let cfg = PreprocessConfig { min_nnz: 2, ..Default::default() };
+        let (x2, _, rep) = preprocess(&x, &y, &cfg);
+        assert_eq!(x2.p(), 2);
+        assert_eq!(rep.kept_columns, vec![0, 2]);
+        assert_eq!(rep.dropped, 1);
+    }
+
+    #[test]
+    fn y_standardized() {
+        let x = random_sparse(2, 10, 4, 0.5);
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let (_, y2, rep) = preprocess(&x, &y, &PreprocessConfig::default());
+        let mean: f64 = y2.iter().sum::<f64>() / 10.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((crate::util::linalg::norm(&y2) - 1.0).abs() < 1e-12);
+        assert!((rep.y_mean - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intercept_appended_unit_norm_both_kinds() {
+        for x in [random_sparse(3, 16, 5, 0.4), {
+            let mut rng = Rng::new(4);
+            let data: Vec<f64> = (0..16 * 5).map(|_| rng.normal()).collect();
+            DesignMatrix::Dense(crate::data::dense::DenseMatrix::from_col_major(16, 5, data))
+        }] {
+            let xi = append_intercept(x);
+            assert_eq!(xi.p(), 6);
+            assert!((xi.col_norm_sq(5) - 1.0).abs() < 1e-12);
+            assert_eq!(xi.col_nnz(5), 16);
+        }
+    }
+
+    #[test]
+    fn finance_config_matches_paper() {
+        let cfg = finance_config();
+        assert_eq!(cfg.min_nnz, 3);
+        assert!(cfg.add_intercept);
+        assert!(cfg.normalize_columns && cfg.standardize_y);
+    }
+}

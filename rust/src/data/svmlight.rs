@@ -1,0 +1,182 @@
+//! svmlight / LIBSVM format reader and writer.
+//!
+//! The paper's datasets (leukemia, Finance/E2006-log1p) ship in this
+//! format; this module lets users run the solver on the real files when
+//! they have them. Format per line:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based and strictly increasing within a line. Comments
+//! start with `#` (rest of line ignored).
+
+use crate::data::csc::CscMatrix;
+use crate::data::design::DesignMatrix;
+use std::io::{BufRead, BufReader, Read, Write};
+
+/// A loaded regression dataset: design matrix + targets.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: DesignMatrix,
+    pub y: Vec<f64>,
+}
+
+/// Parse svmlight-format text into a sparse dataset.
+///
+/// `min_features` can force a minimum feature count (columns beyond the
+/// maximum seen index are empty).
+pub fn parse_svmlight<R: Read>(reader: R, min_features: usize) -> anyhow::Result<Dataset> {
+    let buf = BufReader::new(reader);
+    let mut y = Vec::new();
+    // row-oriented triplets, converted to CSC at the end
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut max_feature = 0usize;
+    for (lineno, line) in buf.lines().enumerate() {
+        let line = line?;
+        let line = match line.find('#') {
+            Some(pos) => &line[..pos],
+            None => &line[..],
+        };
+        let mut parts = line.split_whitespace();
+        let label = match parts.next() {
+            None => continue, // blank line
+            Some(l) => l
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("line {}: bad label {l:?}: {e}", lineno + 1))?,
+        };
+        let mut row = Vec::new();
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            let (is, vs) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let idx: usize = is
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad index {is:?}: {e}", lineno + 1))?;
+            let val: f64 = vs
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad value {vs:?}: {e}", lineno + 1))?;
+            if idx == 0 {
+                anyhow::bail!("line {}: svmlight indices are 1-based, got 0", lineno + 1);
+            }
+            if idx <= prev_idx {
+                anyhow::bail!("line {}: indices must be strictly increasing", lineno + 1);
+            }
+            prev_idx = idx;
+            max_feature = max_feature.max(idx);
+            if val != 0.0 {
+                row.push((idx - 1, val));
+            }
+        }
+        y.push(label);
+        rows.push(row);
+    }
+    let n = y.len();
+    let p = max_feature.max(min_features);
+    // transpose rows -> columns
+    let mut cols: Vec<Vec<(u32, f64)>> = vec![Vec::new(); p];
+    for (i, row) in rows.into_iter().enumerate() {
+        for (j, v) in row {
+            cols[j].push((i as u32, v));
+        }
+    }
+    Ok(Dataset { x: DesignMatrix::Sparse(CscMatrix::from_columns(n, cols)), y })
+}
+
+/// Load an svmlight file from disk.
+pub fn load_svmlight(path: &std::path::Path) -> anyhow::Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", path.display()))?;
+    parse_svmlight(f, 0)
+}
+
+/// Write a dataset in svmlight format.
+pub fn write_svmlight<W: Write>(w: &mut W, ds: &Dataset) -> anyhow::Result<()> {
+    use crate::data::design::DesignOps;
+    let n = ds.x.n();
+    let p = ds.x.p();
+    // Column-oriented storage: build row views first.
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    let mut col = Vec::new();
+    for j in 0..p {
+        col.clear();
+        ds.x.gather_dense(&[j], &mut col);
+        for (i, &v) in col.iter().enumerate() {
+            if v != 0.0 {
+                rows[i].push((j + 1, v));
+            }
+        }
+    }
+    for i in 0..n {
+        write!(w, "{}", ds.y[i])?;
+        for &(j, v) in &rows[i] {
+            write!(w, " {}:{}", j, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::design::DesignOps;
+
+    #[test]
+    fn parse_basic() {
+        let text = "1.5 1:2.0 3:4.0\n-0.5 2:1.0\n";
+        let ds = parse_svmlight(text.as_bytes(), 0).unwrap();
+        assert_eq!(ds.y, vec![1.5, -0.5]);
+        assert_eq!(ds.x.n(), 2);
+        assert_eq!(ds.x.p(), 3);
+        assert_eq!(ds.x.col_dot(0, &[1.0, 1.0]), 2.0);
+        assert_eq!(ds.x.col_dot(2, &[1.0, 0.0]), 4.0);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let text = "# header\n1 1:1 # trailing\n\n2 2:2\n";
+        let ds = parse_svmlight(text.as_bytes(), 0).unwrap();
+        assert_eq!(ds.y, vec![1.0, 2.0]);
+        assert_eq!(ds.x.p(), 2);
+    }
+
+    #[test]
+    fn min_features_pads() {
+        let ds = parse_svmlight("1 1:1\n".as_bytes(), 10).unwrap();
+        assert_eq!(ds.x.p(), 10);
+        assert_eq!(ds.x.col_nnz(9), 0);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse_svmlight("1 0:1\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_decreasing_indices() {
+        assert!(parse_svmlight("1 3:1 2:1\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_pair() {
+        assert!(parse_svmlight("1 abc\n".as_bytes(), 0).is_err());
+        assert!(parse_svmlight("x 1:1\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn round_trip() {
+        let text = "1 1:2 3:4\n-1 2:0.5\n0.25 1:1 2:1 3:1\n";
+        let ds = parse_svmlight(text.as_bytes(), 0).unwrap();
+        let mut out = Vec::new();
+        write_svmlight(&mut out, &ds).unwrap();
+        let ds2 = parse_svmlight(&out[..], 0).unwrap();
+        assert_eq!(ds.y, ds2.y);
+        assert_eq!(ds.x.nnz(), ds2.x.nnz());
+        let v = vec![1.0, 2.0, 3.0];
+        for j in 0..3 {
+            assert_eq!(ds.x.col_dot(j, &v), ds2.x.col_dot(j, &v));
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! Synthetic dataset generators standing in for the paper's datasets.
+//!
+//! We do not redistribute *leukemia*, *Finance/E2006-log1p* or *bcTCGA*;
+//! these generators produce datasets in the same structural regime (shape,
+//! sparsity pattern, correlation, signal-to-noise), which is what the
+//! paper's experiments actually exercise. See DESIGN.md §4 for the
+//! substitution argument. Real files in svmlight format can be used instead
+//! via `celer::data::svmlight::load_svmlight`.
+
+use crate::data::csc::CscMatrix;
+use crate::data::dense::DenseMatrix;
+use crate::data::design::{DesignMatrix, DesignOps};
+use crate::data::preprocess::{self, PreprocessConfig};
+use crate::util::rng::Rng;
+
+/// A generated dataset with its ground truth.
+#[derive(Debug, Clone)]
+pub struct SynthDataset {
+    pub name: String,
+    pub x: DesignMatrix,
+    pub y: Vec<f64>,
+    /// Ground-truth coefficients used to simulate y (pre-preprocessing).
+    pub beta_true: Vec<f64>,
+}
+
+/// Configuration for the dense correlated generator.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseSynthConfig {
+    pub n: usize,
+    pub p: usize,
+    /// AR(1) correlation between adjacent features.
+    pub rho: f64,
+    /// Number of non-zero ground-truth coefficients.
+    pub support: usize,
+    /// Signal-to-noise ratio ‖Xβ*‖ / ‖ε‖.
+    pub snr: f64,
+}
+
+/// Dense Gaussian design with AR(1) feature correlation, sparse truth.
+pub fn dense_correlated(seed: u64, cfg: &DenseSynthConfig, name: &str) -> SynthDataset {
+    let DenseSynthConfig { n, p, rho, support, snr } = *cfg;
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0; n * p];
+    let scale = (1.0 - rho * rho).sqrt();
+    // AR(1) across features, independent across observations:
+    // x_{i,j} = rho * x_{i,j-1} + sqrt(1-rho^2) * eps
+    for i in 0..n {
+        let mut prev = rng.normal();
+        data[i] = prev;
+        for j in 1..p {
+            let v = rho * prev + scale * rng.normal();
+            data[j * n + i] = v;
+            prev = v;
+        }
+    }
+    let x = DenseMatrix::from_col_major(n, p, data);
+
+    let mut beta_true = vec![0.0; p];
+    for &j in &rng.sample_indices(p, support.min(p)) {
+        // signs alternate via rng; magnitudes in [0.5, 1.5]
+        let sgn = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        beta_true[j] = sgn * rng.uniform_range(0.5, 1.5);
+    }
+    let mut signal = vec![0.0; n];
+    x.matvec(&beta_true, &mut signal);
+    let sig_norm = crate::util::linalg::norm(&signal);
+    let mut y = signal;
+    let mut noise: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let noise_norm = crate::util::linalg::norm(&noise);
+    if noise_norm > 0.0 && snr > 0.0 {
+        let f = sig_norm / (snr * noise_norm);
+        for v in noise.iter_mut() {
+            *v *= f;
+        }
+    }
+    for i in 0..n {
+        y[i] += noise[i];
+    }
+    SynthDataset { name: name.to_string(), x: DesignMatrix::Dense(x), y, beta_true }
+}
+
+/// leukemia-like: dense, n=72, p=7129, correlated columns (gene-expression
+/// regime), preprocessed as in the paper (unit columns, standardized y).
+pub fn leukemia_sim(seed: u64) -> SynthDataset {
+    let cfg = DenseSynthConfig { n: 72, p: 7129, rho: 0.5, support: 40, snr: 10.0 };
+    let raw = dense_correlated(seed, &cfg, "leukemia-sim");
+    finish(raw, &PreprocessConfig::default())
+}
+
+/// Smaller leukemia-like dataset for unit/integration tests.
+pub fn leukemia_mini(seed: u64) -> SynthDataset {
+    let cfg = DenseSynthConfig { n: 48, p: 500, rho: 0.5, support: 15, snr: 10.0 };
+    let raw = dense_correlated(seed, &cfg, "leukemia-mini");
+    finish(raw, &PreprocessConfig::default())
+}
+
+/// bcTCGA-like: dense, n=536, p=17322 (+ intercept → 17323), AR(1).
+pub fn bctcga_sim(seed: u64) -> SynthDataset {
+    let cfg = DenseSynthConfig { n: 536, p: 17322, rho: 0.6, support: 60, snr: 8.0 };
+    let raw = dense_correlated(seed, &cfg, "bctcga-sim");
+    let pp = PreprocessConfig { add_intercept: true, ..Default::default() };
+    finish(raw, &pp)
+}
+
+/// Configuration for the sparse "Finance-like" generator.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseSynthConfig {
+    pub n: usize,
+    pub p: usize,
+    /// Mean extra non-zeros per column beyond `min_nnz` (exponential tail,
+    /// occasionally boosted into heavy columns — the TF-IDF regime).
+    pub mean_extra_nnz: f64,
+    /// Maximum nnz of the densest column, as a fraction of n.
+    pub max_col_fill: f64,
+    /// Minimum nnz per column before preprocessing.
+    pub min_nnz: usize,
+    /// Features per correlation cluster. Real n-gram features co-occur in
+    /// the same documents: features within a cluster draw most of their
+    /// rows from a shared pool, which is what makes the Lasso dual hard
+    /// (and dual extrapolation worthwhile). 0 disables clustering.
+    pub cluster_size: usize,
+    /// Fraction of each feature's rows drawn from its cluster pool.
+    pub cluster_affinity: f64,
+    /// Ground-truth support size.
+    pub support: usize,
+    pub snr: f64,
+}
+
+impl Default for SparseSynthConfig {
+    fn default() -> Self {
+        // ~8× scaled-down Finance/E2006-log1p (n=16087, p=1.67M).
+        SparseSynthConfig {
+            n: 2000,
+            p: 200_000,
+            mean_extra_nnz: 12.0,
+            max_col_fill: 0.3,
+            min_nnz: 4,
+            cluster_size: 50,
+            cluster_affinity: 0.9,
+            support: 200,
+            snr: 1.5,
+        }
+    }
+}
+
+/// Sparse design with exponential-tail column densities, clustered
+/// (correlated) row supports and TF-IDF-like positive values — the
+/// E2006-log1p regime. Ground truth drawn from the denser columns.
+pub fn sparse_powerlaw(seed: u64, cfg: &SparseSynthConfig, name: &str) -> SynthDataset {
+    let SparseSynthConfig {
+        n,
+        p,
+        mean_extra_nnz,
+        max_col_fill,
+        min_nnz,
+        cluster_size,
+        cluster_affinity,
+        support,
+        snr,
+    } = *cfg;
+    let mut rng = Rng::new(seed);
+    let max_nnz = (((n as f64) * max_col_fill) as usize).max(min_nnz);
+
+    // Cluster row pools: each pool is a set of "documents" its features
+    // co-occur in. Pool size ~3× the mean column density.
+    let n_clusters = if cluster_size == 0 { 0 } else { p.div_ceil(cluster_size) };
+    let pool_size = ((min_nnz as f64 + mean_extra_nnz) * 3.0) as usize + 4;
+    let pools: Vec<Vec<usize>> = (0..n_clusters)
+        .map(|_| rng.sample_indices(n, pool_size.min(n)))
+        .collect();
+
+    let mut cols: Vec<Vec<(u32, f64)>> = Vec::with_capacity(p);
+    let mut row_flags = vec![false; n];
+    for j in 0..p {
+        // exponential density tail + a 1% chance of a heavy column
+        let mut nnz = min_nnz + (-mean_extra_nnz * rng.uniform().max(1e-12).ln()) as usize;
+        if rng.uniform() < 0.01 {
+            nnz = nnz.max(rng.below(max_nnz.max(1)) + min_nnz);
+        }
+        let nnz = nnz.clamp(min_nnz, max_nnz.min(n));
+        // draw rows: mostly from the cluster pool, rest uniform
+        static EMPTY: Vec<usize> = Vec::new();
+        let pool = if n_clusters > 0 { &pools[j / cluster_size.max(1) % n_clusters] } else { &EMPTY };
+        let mut rows = Vec::with_capacity(nnz);
+        for v in row_flags.iter_mut() {
+            *v = false;
+        }
+        while rows.len() < nnz {
+            let i = if n_clusters > 0 && rng.uniform() < cluster_affinity && !pool.is_empty() {
+                pool[rng.below(pool.len())]
+            } else {
+                rng.below(n)
+            };
+            if !row_flags[i] {
+                row_flags[i] = true;
+                rows.push(i);
+            }
+        }
+        rows.sort_unstable();
+        let col: Vec<(u32, f64)> = rows
+            .into_iter()
+            .map(|i| {
+                // log1p-TFIDF-like: positive, heavy-ish tail
+                let v = (1.0 + rng.uniform() * 20.0).ln() * rng.uniform_range(0.2, 1.0);
+                (i as u32, v)
+            })
+            .collect();
+        cols.push(col);
+    }
+    let x = CscMatrix::from_columns(n, cols);
+
+    // ground truth on reasonably dense columns so the signal is observable
+    let dense_cols: Vec<usize> =
+        (0..p).filter(|&j| x.col_nnz(j) >= (0.01 * n as f64).max(4.0) as usize).collect();
+    let mut beta_true = vec![0.0; p];
+    let k = support.min(dense_cols.len());
+    let picks = rng.sample_indices(dense_cols.len(), k);
+    for &pi in &picks {
+        let j = dense_cols[pi];
+        let sgn = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+        beta_true[j] = sgn * rng.uniform_range(0.5, 2.0);
+    }
+    let mut signal = vec![0.0; n];
+    x.matvec(&beta_true, &mut signal);
+    let sig_norm = crate::util::linalg::norm(&signal);
+    let mut y = signal;
+    let mut noise: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let noise_norm = crate::util::linalg::norm(&noise);
+    if noise_norm > 0.0 && snr > 0.0 {
+        let f = sig_norm / (snr * noise_norm);
+        for v in noise.iter_mut() {
+            *v *= f;
+        }
+    }
+    for i in 0..n {
+        y[i] += noise[i];
+    }
+    SynthDataset { name: name.to_string(), x: DesignMatrix::Sparse(x), y, beta_true }
+}
+
+/// Finance-like sparse dataset with the paper's preprocessing
+/// (min-3-nnz filter, unit columns, standardized y, intercept column).
+pub fn finance_sim(seed: u64) -> SynthDataset {
+    let raw = sparse_powerlaw(seed, &SparseSynthConfig::default(), "finance-sim");
+    finish(raw, &preprocess::finance_config())
+}
+
+/// Small sparse dataset for tests.
+pub fn finance_mini(seed: u64) -> SynthDataset {
+    let cfg = SparseSynthConfig { n: 200, p: 2000, support: 20, ..Default::default() };
+    let raw = sparse_powerlaw(seed, &cfg, "finance-mini");
+    finish(raw, &preprocess::finance_config())
+}
+
+/// The 2×2 toy problem of Figure 1: two correlated unit-norm features.
+pub fn toy_2x2() -> SynthDataset {
+    // x1 and x2 at an acute angle; y placed so that y/λ projects onto the
+    // corner of the two slabs (both constraints active at the solution).
+    let x = DenseMatrix::from_row_major(2, 2, &[1.0, 0.6, 0.0, 0.8]);
+    let x = match preprocess::normalize_columns(DesignMatrix::Dense(x)) {
+        DesignMatrix::Dense(d) => d,
+        _ => unreachable!(),
+    };
+    let y = vec![1.5, 0.9];
+    SynthDataset {
+        name: "toy-2x2".into(),
+        x: DesignMatrix::Dense(x),
+        y,
+        beta_true: vec![0.0, 0.0],
+    }
+}
+
+fn finish(raw: SynthDataset, cfg: &PreprocessConfig) -> SynthDataset {
+    let (x, y, rep) = preprocess::preprocess(&raw.x, &raw.y, cfg);
+    // remap beta_true through kept columns (+0 for intercept)
+    let mut beta_true: Vec<f64> = rep.kept_columns.iter().map(|&j| raw.beta_true[j]).collect();
+    if cfg.add_intercept {
+        beta_true.push(0.0);
+    }
+    SynthDataset { name: raw.name, x, y, beta_true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leukemia_mini_shape_and_norms() {
+        let ds = leukemia_mini(0);
+        assert_eq!(ds.x.n(), 48);
+        assert_eq!(ds.x.p(), 500);
+        for j in 0..ds.x.p() {
+            assert!((ds.x.col_norm_sq(j) - 1.0).abs() < 1e-10);
+        }
+        let mean: f64 = ds.y.iter().sum::<f64>() / 48.0;
+        assert!(mean.abs() < 1e-12);
+        assert!((crate::util::linalg::norm(&ds.y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finance_mini_sparse_regime() {
+        let ds = finance_mini(0);
+        assert!(ds.x.is_sparse());
+        assert_eq!(ds.x.n(), 200);
+        // preprocessing may drop nothing (min_nnz enforced at generation)
+        assert!(ds.x.p() >= 2000, "intercept appended");
+        assert!(ds.x.density() < 0.2, "must stay sparse: {}", ds.x.density());
+        // every kept column has >= 3 nnz except none; intercept is dense
+        let p = ds.x.p();
+        assert_eq!(ds.x.col_nnz(p - 1), 200, "intercept column is full");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = leukemia_mini(5);
+        let b = leukemia_mini(5);
+        assert_eq!(a.y, b.y);
+        let v = vec![1.0; 48];
+        for j in (0..500).step_by(97) {
+            assert_eq!(a.x.col_dot(j, &v), b.x.col_dot(j, &v));
+        }
+        let c = leukemia_mini(6);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn correlation_structure_present() {
+        let cfg = DenseSynthConfig { n: 2000, p: 3, rho: 0.8, support: 0, snr: 1.0 };
+        let ds = dense_correlated(1, &cfg, "t");
+        // empirical corr(x0, x1) should be near rho
+        let x = match &ds.x {
+            DesignMatrix::Dense(d) => d,
+            _ => unreachable!(),
+        };
+        let c01 = crate::util::linalg::dot(x.col(0), x.col(1))
+            / (x.col_norm_sq(0).sqrt() * x.col_norm_sq(1).sqrt());
+        assert!((c01 - 0.8).abs() < 0.06, "corr={c01}");
+    }
+
+    #[test]
+    fn snr_controls_noise() {
+        let hi = dense_correlated(
+            3,
+            &DenseSynthConfig { n: 100, p: 50, rho: 0.0, support: 5, snr: 100.0 },
+            "hi",
+        );
+        // residual from ground truth should be tiny relative to y
+        let mut fit = vec![0.0; 100];
+        hi.x.matvec(&hi.beta_true, &mut fit);
+        let resid: f64 = hi
+            .y
+            .iter()
+            .zip(&fit)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        let ynorm = crate::util::linalg::norm(&hi.y);
+        assert!(resid / ynorm < 0.05, "snr=100 => resid tiny: {}", resid / ynorm);
+    }
+
+    #[test]
+    fn toy_is_unit_norm() {
+        let ds = toy_2x2();
+        assert_eq!(ds.x.n(), 2);
+        assert!((ds.x.col_norm_sq(0) - 1.0).abs() < 1e-12);
+        assert!((ds.x.col_norm_sq(1) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,244 @@
+//! Dual extrapolation (paper §2.2, Definition 1).
+//!
+//! Maintains the last K+1 residuals `r^{t-K}, …, r^t` (sampled every `f`
+//! epochs by the solvers) and produces the extrapolated residual
+//!
+//! ```text
+//! r_accel = Σ_{k=1}^{K} c_k r^{t+1-k},   c = z / (zᵀ1),
+//! (UᵀU) z = 1_K,   U = [r^{t+1-K}−r^{t-K}, …, r^t−r^{t-1}]
+//! ```
+//!
+//! Ill-conditioning policy (paper §5): when the K×K system is numerically
+//! singular we do NOT Tikhonov-regularize — we simply report `None` and the
+//! caller falls back to `θ_res` for this round.
+
+use std::collections::VecDeque;
+
+/// Default extrapolation depth (paper: K = 5).
+pub const DEFAULT_K: usize = 5;
+
+/// Relative pivot tolerance declaring `UᵀU` singular.
+const SINGULAR_TOL: f64 = 1e-12;
+
+/// Ring buffer of residuals with extrapolation.
+#[derive(Debug, Clone)]
+pub struct ResidualBuffer {
+    k: usize,
+    buf: VecDeque<Vec<f64>>,
+    /// Count of extrapolation attempts that hit the singular fallback.
+    pub singular_fallbacks: usize,
+    /// Count of successful extrapolations.
+    pub successes: usize,
+}
+
+impl ResidualBuffer {
+    /// New buffer extrapolating from K residuals (stores K+1).
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "extrapolation depth K must be >= 1");
+        ResidualBuffer { k, buf: VecDeque::with_capacity(k + 2), singular_fallbacks: 0, successes: 0 }
+    }
+
+    /// Extrapolation depth K.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of stored residuals (≤ K+1).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Record the current residual (clones; O(n)).
+    pub fn push(&mut self, r: &[f64]) {
+        if self.buf.len() == self.k + 1 {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(r.to_vec());
+    }
+
+    /// Drop all stored residuals (e.g. when the design matrix of the
+    /// subproblem changes between CELER outer iterations).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Compute the extrapolated residual, or `None` when fewer than K+1
+    /// residuals are stored or the system is singular / degenerate.
+    pub fn extrapolate(&mut self) -> Option<Vec<f64>> {
+        if self.buf.len() < self.k + 1 {
+            return None;
+        }
+        let k = self.k;
+        let n = self.buf[0].len();
+        // U columns: d_i = r_{i+1} − r_i (i = 0..K), oldest diff first.
+        let mut diffs: Vec<Vec<f64>> = Vec::with_capacity(k);
+        for i in 0..k {
+            let (a, b) = (&self.buf[i], &self.buf[i + 1]);
+            diffs.push((0..n).map(|t| b[t] - a[t]).collect());
+        }
+        let cols: Vec<&[f64]> = diffs.iter().map(|d| d.as_slice()).collect();
+        let g = crate::util::linalg::gram(&cols);
+        let ones = vec![1.0; k];
+        // Fast path: the paper's formula c = z/(zᵀ1), (UᵀU)z = 1. When the
+        // Gram matrix is singular (converged or collinear trajectories) we
+        // solve the underlying constrained least-squares problem on the
+        // non-null eigenspace instead; if even that degenerates we report
+        // None and the caller falls back to θ_res (paper §5).
+        let c = match crate::util::linalg::solve(&g, &ones, k, SINGULAR_TOL) {
+            Some(z) => {
+                let zsum: f64 = z.iter().sum();
+                if !zsum.is_finite() || zsum.abs() < 1e-300 {
+                    None
+                } else {
+                    Some(z.iter().map(|&v| v / zsum).collect::<Vec<f64>>())
+                }
+            }
+            None => None,
+        };
+        let c = match c.or_else(|| crate::util::linalg::min_quadratic_on_simplex_affine(&g, k)) {
+            Some(c) => c,
+            None => {
+                self.singular_fallbacks += 1;
+                return None;
+            }
+        };
+        // c_i applies to the NEWER residual of diff i: r_{i+1}.
+        let mut r_accel = vec![0.0; n];
+        for i in 0..k {
+            crate::util::linalg::axpy(c[i], &self.buf[i + 1], &mut r_accel);
+        }
+        if !r_accel.iter().all(|v| v.is_finite()) {
+            self.singular_fallbacks += 1;
+            return None;
+        }
+        self.successes += 1;
+        Some(r_accel)
+    }
+}
+
+/// Extrapolate a noiseless VAR sequence `x^{t+1} = A x^t + b` exactly:
+/// used in tests; mirrors Scieur et al. (2016, Prop. 2.2).
+#[cfg(test)]
+fn var_step(a: &[f64], b: &[f64], x: &[f64], n: usize) -> Vec<f64> {
+    let mut out = b.to_vec();
+    for i in 0..n {
+        for j in 0..n {
+            out[i] += a[i * n + j] * x[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_k_plus_one() {
+        let mut buf = ResidualBuffer::new(3);
+        for i in 0..3 {
+            buf.push(&[i as f64, 1.0]);
+            assert!(buf.extrapolate().is_none());
+        }
+        buf.push(&[3.0, 1.0]);
+        // 4 residuals stored, K=3 -> can try (may still be singular: the
+        // sequence is linear so diffs are collinear)
+        assert_eq!(buf.len(), 4);
+    }
+
+    #[test]
+    fn ring_keeps_k_plus_one() {
+        let mut buf = ResidualBuffer::new(2);
+        for i in 0..10 {
+            buf.push(&[i as f64]);
+        }
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.buf[2], vec![9.0]);
+    }
+
+    #[test]
+    fn exact_on_var_process() {
+        // x^{t+1} = A x^t + b with spectral radius < 1 converges to the
+        // fixed point x* = (I-A)^{-1} b; extrapolation with K = n+1 diffs
+        // recovers x* to machine precision (Scieur Prop 2.2: the error
+        // polynomial needs degree ≥ the minimal polynomial's, here n).
+        let n = 3;
+        let a = vec![
+            0.5, 0.1, 0.0, //
+            0.0, 0.3, 0.2, //
+            0.1, 0.0, 0.4,
+        ];
+        let b = vec![1.0, -0.5, 0.25];
+        // fixed point by long iteration
+        let mut xstar = vec![0.0; n];
+        for _ in 0..2000 {
+            xstar = var_step(&a, &b, &xstar, n);
+        }
+        let k = n + 1;
+        let mut buf = ResidualBuffer::new(k);
+        let mut x = vec![0.0; n];
+        for _ in 0..(k + 1) {
+            buf.push(&x);
+            x = var_step(&a, &b, &x, n);
+        }
+        let acc = buf.extrapolate().expect("VAR system extrapolates");
+        for i in 0..n {
+            assert!(
+                (acc[i] - xstar[i]).abs() < 1e-9,
+                "i={i}: {} vs {}",
+                acc[i],
+                xstar[i]
+            );
+        }
+        assert_eq!(buf.successes, 1);
+    }
+
+    #[test]
+    fn constant_sequence_extrapolates_to_itself() {
+        // All diffs zero → G = 0 → uniform weights → the constant back.
+        let mut buf = ResidualBuffer::new(2);
+        for _ in 0..3 {
+            buf.push(&[1.0, 2.0]);
+        }
+        let acc = buf.extrapolate().expect("degenerate but consistent");
+        assert!((acc[0] - 1.0).abs() < 1e-12);
+        assert!((acc[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_residuals_fall_back() {
+        let mut buf = ResidualBuffer::new(2);
+        buf.push(&[1.0]);
+        buf.push(&[f64::NAN]);
+        buf.push(&[2.0]);
+        assert!(buf.extrapolate().is_none());
+        assert_eq!(buf.singular_fallbacks, 1);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut buf = ResidualBuffer::new(2);
+        for i in 0..3 {
+            buf.push(&[i as f64]);
+        }
+        buf.clear();
+        assert!(buf.is_empty());
+        assert!(buf.extrapolate().is_none());
+    }
+
+    #[test]
+    fn geometric_sequence_extrapolates_to_limit() {
+        // Collinear diffs make UᵀU rank-1; the constrained solver still
+        // finds the exact limit (0) of the geometric sequence.
+        let mut buf = ResidualBuffer::new(2);
+        buf.push(&[1.0, 0.0]);
+        buf.push(&[0.5, 0.0]);
+        buf.push(&[0.25, 0.0]);
+        let acc = buf.extrapolate().expect("geometric sequence extrapolates");
+        assert!(acc[0].abs() < 1e-10, "{acc:?}");
+    }
+}

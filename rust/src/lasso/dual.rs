@@ -1,0 +1,131 @@
+//! Lasso dual: feasible set, dual objective, duality gap, λ_max,
+//! and the canonical residual-rescaling dual point `θ_res` (Eq. 4).
+//!
+//! Dual problem (Eq. 2):  max_{θ ∈ Δ_X}  ½‖y‖² − (λ²/2)‖θ − y/λ‖²
+//! with Δ_X = {θ : ‖Xᵀθ‖_∞ ≤ 1}.
+
+use crate::data::design::DesignOps;
+
+/// Dual objective `D(θ) = ½‖y‖² − (λ²/2)‖θ − y/λ‖²`.
+pub fn dual_objective(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
+    debug_assert_eq!(y.len(), theta.len());
+    let mut dist_sq = 0.0;
+    for i in 0..y.len() {
+        let d = theta[i] - y[i] / lambda;
+        dist_sq += d * d;
+    }
+    0.5 * crate::util::linalg::dot(y, y) - 0.5 * lambda * lambda * dist_sq
+}
+
+/// Duality gap `G(β, θ) = P(β) − D(θ)` from a maintained residual.
+pub fn gap_from_residual(
+    r: &[f64],
+    beta: &[f64],
+    theta: &[f64],
+    y: &[f64],
+    lambda: f64,
+) -> f64 {
+    crate::lasso::primal::primal_from_residual(r, beta, lambda)
+        - dual_objective(y, theta, lambda)
+}
+
+/// `λ_max = ‖Xᵀy‖_∞`, the smallest λ for which β̂ = 0.
+pub fn lambda_max<D: DesignOps>(x: &D, y: &[f64]) -> f64 {
+    x.xt_abs_max(y)
+}
+
+/// Rescale a residual-like vector into the dual feasible set (Eq. 4):
+/// `θ = r / max(λ, ‖Xᵀr‖_∞)`.
+///
+/// Returns the rescaled point; always feasible by construction.
+pub fn rescale_to_feasible<D: DesignOps>(x: &D, r: &[f64], lambda: f64) -> Vec<f64> {
+    let denom = x.xt_abs_max(r).max(lambda);
+    r.iter().map(|&v| v / denom).collect()
+}
+
+/// Check dual feasibility `‖Xᵀθ‖_∞ ≤ 1 + tol`.
+pub fn is_feasible<D: DesignOps>(x: &D, theta: &[f64], tol: f64) -> bool {
+    x.xt_abs_max(theta) <= 1.0 + tol
+}
+
+/// Pick the dual point maximizing `D(θ)` among candidates (Eq. 13).
+/// Returns the index of the best candidate.
+pub fn best_dual_point(y: &[f64], lambda: f64, candidates: &[&[f64]]) -> usize {
+    let mut best = 0;
+    let mut best_val = f64::NEG_INFINITY;
+    for (i, th) in candidates.iter().enumerate() {
+        let v = dual_objective(y, th, lambda);
+        if v > best_val {
+            best_val = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+
+    fn sample() -> (DenseMatrix, Vec<f64>) {
+        let x = DenseMatrix::from_row_major(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        (x, vec![1.0, 2.0, 3.0])
+    }
+
+    #[test]
+    fn lambda_max_zeroes_beta() {
+        let (x, y) = sample();
+        // X^T y = [1+3, 2+3] = [4, 5] -> lambda_max = 5
+        assert_eq!(lambda_max(&x, &y), 5.0);
+    }
+
+    #[test]
+    fn dual_at_y_over_lambda_is_half_ynormsq() {
+        let (_, y) = sample();
+        let lambda = 2.0;
+        let theta: Vec<f64> = y.iter().map(|v| v / lambda).collect();
+        assert!((dual_objective(&y, &theta, lambda) - 0.5 * 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescaled_point_is_feasible() {
+        let (x, y) = sample();
+        for &lambda in &[0.1, 1.0, 5.0, 50.0] {
+            let theta = rescale_to_feasible(&x, &y, lambda);
+            assert!(is_feasible(&x, &theta, 1e-12), "lambda={lambda}");
+        }
+    }
+
+    #[test]
+    fn rescale_keeps_direction() {
+        let (x, y) = sample();
+        let theta = rescale_to_feasible(&x, &y, 1.0);
+        // denom = max(1, ||X^T y||_inf) = 5
+        for i in 0..3 {
+            assert!((theta[i] - y[i] / 5.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gap_nonnegative_for_feasible_dual() {
+        let (x, y) = sample();
+        let lambda = 2.5; // = lambda_max / 2
+        let beta = [0.1, 0.2];
+        let mut r = vec![0.0; 3];
+        crate::lasso::primal::residual(&x, &y, &beta, &mut r);
+        let theta = rescale_to_feasible(&x, &r, lambda);
+        let g = gap_from_residual(&r, &beta, &theta, &y, lambda);
+        assert!(g >= 0.0, "gap={g}");
+    }
+
+    #[test]
+    fn best_dual_point_picks_max() {
+        let (_, y) = sample();
+        let lambda = 2.0;
+        let bad = vec![0.0; 3];
+        let good: Vec<f64> = y.iter().map(|v| v / lambda * 0.9).collect();
+        assert_eq!(best_dual_point(&y, lambda, &[&bad, &good]), 1);
+        assert_eq!(best_dual_point(&y, lambda, &[&good, &bad]), 0);
+    }
+}

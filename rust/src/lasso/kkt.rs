@@ -1,0 +1,93 @@
+//! KKT (subgradient) optimality diagnostics for the Lasso.
+//!
+//! At optimum: `x_jᵀr̂ = λ·sign(β̂_j)` when `β̂_j ≠ 0`, and `|x_jᵀr̂| ≤ λ`
+//! otherwise. GLMNET-style solvers use KKT *violations* to grow their
+//! working set; we also use them as a test-time optimality check.
+
+use crate::data::design::DesignOps;
+
+/// Per-feature KKT violation given the residual `r = y − Xβ`.
+///
+/// For `β_j ≠ 0`: `|x_jᵀr − λ·sign(β_j)|`;
+/// for `β_j = 0`: `max(0, |x_jᵀr| − λ)`.
+pub fn violations<D: DesignOps>(x: &D, r: &[f64], beta: &[f64], lambda: f64) -> Vec<f64> {
+    let mut out = vec![0.0; x.p()];
+    crate::util::par::par_fill(&mut out, |j| violation_one(x, r, beta[j], lambda, j));
+    out
+}
+
+/// Single-feature violation.
+#[inline]
+pub fn violation_one<D: DesignOps>(x: &D, r: &[f64], beta_j: f64, lambda: f64, j: usize) -> f64 {
+    let g = x.col_dot(j, r);
+    if beta_j != 0.0 {
+        (g - lambda * beta_j.signum()).abs()
+    } else {
+        (g.abs() - lambda).max(0.0)
+    }
+}
+
+/// Maximum violation over all features (0 at an exact optimum).
+pub fn max_violation<D: DesignOps>(x: &D, r: &[f64], beta: &[f64], lambda: f64) -> f64 {
+    crate::util::par::par_max(x.p(), |j| violation_one(x, r, beta[j], lambda, j)).max(0.0)
+}
+
+/// Features whose violation exceeds `tol` (GLMNET-style KKT check).
+pub fn violating_features<D: DesignOps>(
+    x: &D,
+    r: &[f64],
+    beta: &[f64],
+    lambda: f64,
+    tol: f64,
+) -> Vec<usize> {
+    violations(x, r, beta, lambda)
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, v)| v > tol)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+    use crate::lasso::primal::residual;
+
+    #[test]
+    fn zero_beta_violation_is_excess_correlation() {
+        // X = I2, y = [3, 0.5], lambda = 1
+        let x = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let y = [3.0, 0.5];
+        let beta = [0.0, 0.0];
+        let mut r = vec![0.0; 2];
+        residual(&x, &y, &beta, &mut r);
+        let v = violations(&x, &r, &beta, 1.0);
+        assert!((v[0] - 2.0).abs() < 1e-12); // |3| - 1
+        assert!((v[1] - 0.0).abs() < 1e-12); // |0.5| < 1
+    }
+
+    #[test]
+    fn optimum_has_zero_violation() {
+        // Orthogonal design: beta_hat = ST(X^T y, lambda) for unit columns.
+        let x = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let y = [3.0, 0.5];
+        let lambda = 1.0;
+        let beta = [2.0, 0.0]; // ST(3,1)=2, ST(0.5,1)=0
+        let mut r = vec![0.0; 2];
+        residual(&x, &y, &beta, &mut r);
+        assert!(max_violation(&x, &r, &beta, lambda) < 1e-12);
+    }
+
+    #[test]
+    fn violating_features_filters() {
+        let x = DenseMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, 0.0]);
+        let y = [3.0, 0.2];
+        let beta = [0.0, 0.0, 0.0];
+        let mut r = vec![0.0; 2];
+        residual(&x, &y, &beta, &mut r);
+        // correlations: [3, 0.2, 6]; lambda = 1 -> features 0 and 2 violate
+        let v = violating_features(&x, &r, &beta, 1.0, 1e-9);
+        assert_eq!(v, vec![0, 2]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Lasso problem definition: primal/dual objectives, duality gap, KKT.
+
+pub mod dual;
+pub mod kkt;
+pub mod primal;
+
+use crate::data::design::{DesignMatrix, DesignOps};
+
+/// A fully-specified Lasso problem instance.
+#[derive(Debug, Clone)]
+pub struct LassoProblem {
+    pub x: DesignMatrix,
+    pub y: Vec<f64>,
+    pub lambda: f64,
+}
+
+impl LassoProblem {
+    pub fn new(x: DesignMatrix, y: Vec<f64>, lambda: f64) -> Self {
+        assert_eq!(x.n(), y.len(), "X rows must match y length");
+        assert!(lambda > 0.0, "lambda must be positive");
+        LassoProblem { x, y, lambda }
+    }
+
+    /// Problem with λ expressed as a fraction of λ_max.
+    pub fn with_lambda_ratio(x: DesignMatrix, y: Vec<f64>, ratio: f64) -> Self {
+        let lmax = dual::lambda_max(&x, &y);
+        Self::new(x, y, lmax * ratio)
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.n()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.p()
+    }
+
+    pub fn lambda_max(&self) -> f64 {
+        dual::lambda_max(&self.x, &self.y)
+    }
+
+    /// Primal objective at β.
+    pub fn primal(&self, beta: &[f64]) -> f64 {
+        primal::primal(&self.x, &self.y, beta, self.lambda)
+    }
+
+    /// Dual objective at θ.
+    pub fn dual(&self, theta: &[f64]) -> f64 {
+        dual::dual_objective(&self.y, theta, self.lambda)
+    }
+
+    /// Duality gap at (β, θ).
+    pub fn gap(&self, beta: &[f64], theta: &[f64]) -> f64 {
+        self.primal(beta) - self.dual(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+
+    fn problem() -> LassoProblem {
+        let x = DesignMatrix::Dense(DenseMatrix::from_row_major(
+            3,
+            2,
+            &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+        ));
+        LassoProblem::new(x, vec![1.0, 2.0, 3.0], 1.0)
+    }
+
+    #[test]
+    fn accessors() {
+        let pb = problem();
+        assert_eq!(pb.n(), 3);
+        assert_eq!(pb.p(), 2);
+        assert_eq!(pb.lambda_max(), 5.0);
+    }
+
+    #[test]
+    fn ratio_constructor() {
+        let pb = problem();
+        let pb2 = LassoProblem::with_lambda_ratio(pb.x.clone(), pb.y.clone(), 0.2);
+        assert!((pb2.lambda - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_lambda() {
+        let pb = problem();
+        let _ = LassoProblem::new(pb.x, pb.y, 0.0);
+    }
+
+    #[test]
+    fn gap_is_primal_minus_dual() {
+        let pb = problem();
+        let beta = [0.5, 0.5];
+        let theta = crate::lasso::dual::rescale_to_feasible(&pb.x, &pb.y, pb.lambda);
+        let g = pb.gap(&beta, &theta);
+        assert!((g - (pb.primal(&beta) - pb.dual(&theta))).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Primal objective for the Lasso: `P(β) = ½‖y − Xβ‖² + λ‖β‖₁`.
+
+use crate::data::design::DesignOps;
+
+/// `½‖r‖² + λ‖β‖₁` from a maintained residual (no matvec).
+#[inline]
+pub fn primal_from_residual(r: &[f64], beta: &[f64], lambda: f64) -> f64 {
+    0.5 * crate::util::linalg::dot(r, r) + lambda * l1_norm(beta)
+}
+
+/// Full primal objective (computes the residual).
+pub fn primal<D: DesignOps>(x: &D, y: &[f64], beta: &[f64], lambda: f64) -> f64 {
+    let mut r = vec![0.0; x.n()];
+    residual(x, y, beta, &mut r);
+    primal_from_residual(&r, beta, lambda)
+}
+
+/// `out = y − Xβ`.
+pub fn residual<D: DesignOps>(x: &D, y: &[f64], beta: &[f64], out: &mut [f64]) {
+    x.matvec(beta, out);
+    for i in 0..y.len() {
+        out[i] = y[i] - out[i];
+    }
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn l1_norm(beta: &[f64]) -> f64 {
+    beta.iter().map(|b| b.abs()).sum()
+}
+
+/// Support (indices of non-zero coefficients).
+pub fn support(beta: &[f64]) -> Vec<usize> {
+    beta.iter().enumerate().filter(|(_, &b)| b != 0.0).map(|(j, _)| j).collect()
+}
+
+/// Support size.
+#[inline]
+pub fn support_size(beta: &[f64]) -> usize {
+    beta.iter().filter(|&&b| b != 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+
+    fn sample() -> (DenseMatrix, Vec<f64>) {
+        // X = [[1,0],[0,1],[1,1]], y = [1, 2, 3]
+        let x = DenseMatrix::from_row_major(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        (x, vec![1.0, 2.0, 3.0])
+    }
+
+    #[test]
+    fn primal_at_zero_is_half_ynormsq() {
+        let (x, y) = sample();
+        let p0 = primal(&x, &y, &[0.0, 0.0], 0.7);
+        assert!((p0 - 0.5 * 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn primal_decomposes() {
+        let (x, y) = sample();
+        let beta = [1.0, -2.0];
+        let mut r = vec![0.0; 3];
+        residual(&x, &y, &beta, &mut r);
+        // r = y - X beta = [1-1, 2+2, 3-(-1)] = [0, 4, 4]
+        assert_eq!(r, vec![0.0, 4.0, 4.0]);
+        let p = primal(&x, &y, &beta, 0.5);
+        assert!((p - (0.5 * 32.0 + 0.5 * 3.0)).abs() < 1e-12);
+        assert!((primal_from_residual(&r, &beta, 0.5) - p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn support_helpers() {
+        let beta = [0.0, 1.0, 0.0, -2.0];
+        assert_eq!(support(&beta), vec![1, 3]);
+        assert_eq!(support_size(&beta), 2);
+        assert_eq!(l1_norm(&beta), 3.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! # Celer: a Fast Solver for the Lasso with Dual Extrapolation
+//!
+//! Production-quality reproduction of Massias, Gramfort & Salmon (ICML
+//! 2018) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordination contribution: the CELER
+//!   working-set outer loop, Gap Safe screening, dual extrapolation, the
+//!   λ-path scheduler with warm starts, plus every baseline the paper
+//!   compares against (vanilla CD, ISTA/FISTA, Blitz, GLMNET-style,
+//!   Dykstra).
+//! - **Layer 2/1 (python/, build-time only)** — JAX compute graphs and
+//!   Pallas kernels for the inner-solver hot spots, AOT-lowered to HLO
+//!   text and executed from Rust through the PJRT C API ([`runtime`]).
+
+pub mod coordinator;
+pub mod data;
+pub mod extrapolation;
+pub mod lasso;
+pub mod multitask;
+pub mod report;
+pub mod runtime;
+pub mod screening;
+pub mod solvers;
+pub mod util;
+pub mod ws;

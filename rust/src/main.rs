@@ -1,0 +1,305 @@
+//! `celer` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   solve            solve one Lasso instance on a named dataset
+//!   path             run a λ-path with one or more solvers (parallel cells)
+//!   datasets         list the built-in synthetic datasets
+//!   artifacts-check  validate the AOT artifact manifest + compile all HLO
+//!   gen-data         export a synthetic dataset in svmlight format
+//!
+//! Arguments are `--key value` pairs (offline build: no clap; parser in
+//! `cli` below).
+
+use celer::coordinator::{self, PathJob};
+use celer::data::design::DesignOps;
+use celer::lasso::dual;
+use celer::report::{fmt_sci, fmt_secs, Table};
+use celer::runtime::{engine_cd_solve, XlaEngine};
+use celer::solvers::celer::{celer_solve_on, CelerConfig};
+
+mod cli {
+    use std::collections::BTreeMap;
+
+    /// Parsed command line: subcommand + `--key value` flags.
+    pub struct Args {
+        pub command: String,
+        pub flags: BTreeMap<String, String>,
+    }
+
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let command = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {:?}", argv[i]))?;
+            let val = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Args { command, flags })
+    }
+
+    impl Args {
+        pub fn get(&self, key: &str) -> Option<&str> {
+            self.flags.get(key).map(|s| s.as_str())
+        }
+
+        pub fn get_or(&self, key: &str, default: &str) -> String {
+            self.get(key).unwrap_or(default).to_string()
+        }
+
+        pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+            match self.get(key) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+            }
+        }
+
+        pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+            match self.get(key) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+            }
+        }
+    }
+}
+
+const HELP: &str = "\
+celer — Lasso with dual extrapolation (ICML 2018 reproduction)
+
+USAGE: celer <command> [--flag value]...
+
+COMMANDS:
+  solve            --dataset <name> [--seed 0] [--lambda-ratio 0.05]
+                   [--tol 1e-6] [--solver celer-prune] [--engine native|xla]
+  path             --dataset <name> [--num-lambdas 100] [--inv-ratio 100]
+                   [--tol 1e-6] [--solvers celer-prune,blitz] [--workers 2]
+  datasets         list built-in datasets
+  artifacts-check  [--dir artifacts] validate + compile every HLO artifact
+  gen-data         --dataset <name> --out <file.svm> [--seed 0]
+  help             this message
+
+SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
+         gapsafe-cd-accel
+DATASETS: leukemia-sim leukemia-mini finance-sim finance-mini bctcga-sim toy-2x2
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = cli::parse(argv)?;
+    match args.command.as_str() {
+        "solve" => cmd_solve(&args),
+        "path" => cmd_path(&args),
+        "datasets" => cmd_datasets(),
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "gen-data" => cmd_gen_data(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_solve(args: &cli::Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "leukemia-sim");
+    let seed = args.get_usize("seed", 0)? as u64;
+    let ratio = args.get_f64("lambda-ratio", 0.05)?;
+    let tol = args.get_f64("tol", 1e-6)?;
+    let engine = args.get_or("engine", "native");
+    let ds = coordinator::load_dataset(&name, seed)?;
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let lambda = lmax * ratio;
+    println!(
+        "dataset={name} n={} p={} nnz={} λ_max={:.4e} λ={:.4e}",
+        ds.x.n(),
+        ds.x.p(),
+        ds.x.nnz(),
+        lmax,
+        lambda
+    );
+    match engine.as_str() {
+        "native" => {
+            let solver = args.get_or("solver", "celer-prune");
+            let sw = std::time::Instant::now();
+            let (gap, support, epochs, converged) = match solver.as_str() {
+                "celer-prune" | "celer" => {
+                    let out = celer_solve_on(
+                        &ds.x,
+                        &ds.y,
+                        lambda,
+                        None,
+                        &CelerConfig { tol, ..Default::default() },
+                    );
+                    (out.gap(), out.support_size(), out.result.epochs, out.result.converged)
+                }
+                other => {
+                    let ps = celer::solvers::path::PathSolver::by_name(other, tol)
+                        .ok_or_else(|| anyhow::anyhow!("unknown solver {other}"))?;
+                    let res = celer::solvers::path::run_path(&ds.x, &ds.y, &[lambda], &ps, false);
+                    let step = &res.steps[0];
+                    (step.gap, step.support_size, step.epochs, step.converged)
+                }
+            };
+            println!(
+                "solver={solver} time={} gap={} |support|={support} epochs={epochs} converged={converged}",
+                fmt_secs(sw.elapsed().as_secs_f64()),
+                fmt_sci(gap),
+            );
+        }
+        "xla" => {
+            // AOT path: dense gather + engine-driven Algorithm 1.
+            let dir = celer::runtime::default_artifacts_dir();
+            let mut eng = XlaEngine::load(&dir)?;
+            let (n, p) = (ds.x.n(), ds.x.p());
+            let mut x_cm = Vec::new();
+            ds.x.gather_dense(&(0..p).collect::<Vec<_>>(), &mut x_cm);
+            let sw = std::time::Instant::now();
+            let out = engine_cd_solve(&mut eng, &x_cm, n, p, &ds.y, lambda, tol, 2000, 5)?;
+            println!(
+                "engine=xla time={} gap={} |support|={} blocks={} converged={}",
+                fmt_secs(sw.elapsed().as_secs_f64()),
+                fmt_sci(out.gap),
+                out.beta.iter().filter(|&&b| b != 0.0).count(),
+                out.blocks,
+                out.converged
+            );
+        }
+        other => anyhow::bail!("unknown engine {other} (native|xla)"),
+    }
+    Ok(())
+}
+
+fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "leukemia-sim");
+    let seed = args.get_usize("seed", 0)? as u64;
+    let num = args.get_usize("num-lambdas", 100)?;
+    let inv_ratio = args.get_f64("inv-ratio", 100.0)?;
+    let tol = args.get_f64("tol", 1e-6)?;
+    let workers = args.get_usize("workers", 2)?;
+    let solvers = args.get_or("solvers", "celer-prune,blitz");
+    let ds = coordinator::load_dataset(&name, seed)?;
+    let grid = coordinator::standard_grid(&ds, inv_ratio, num);
+    let jobs: Vec<PathJob> = solvers
+        .split(',')
+        .map(|s| PathJob {
+            solver_name: s.trim().to_string(),
+            tol,
+            grid: grid.clone(),
+            store_betas: false,
+        })
+        .collect();
+    println!(
+        "dataset={name} n={} p={} grid={} λ ∈ [{:.3e}, {:.3e}] ε={tol:.0e}",
+        ds.x.n(),
+        ds.x.p(),
+        num,
+        grid[num - 1],
+        grid[0]
+    );
+    let results = coordinator::run_path_jobs(&ds, jobs, workers)?;
+    let mut table = Table::new(
+        "Lasso path",
+        &["solver", "time", "epochs", "max gap", "final |S|", "all converged"],
+    );
+    for r in &results {
+        table.row(vec![
+            r.solver.clone(),
+            fmt_secs(r.total_seconds),
+            r.steps.iter().map(|s| s.epochs).sum::<usize>().to_string(),
+            fmt_sci(r.steps.iter().map(|s| s.gap).fold(0.0, f64::max)),
+            r.steps.last().map(|s| s.support_size).unwrap_or(0).to_string(),
+            r.all_converged().to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_datasets() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "built-in datasets (synthetic stand-ins, DESIGN.md §4)",
+        &["name", "n", "p", "storage", "stands in for"],
+    );
+    for (name, paper) in [
+        ("leukemia-sim", "leukemia (LIBSVM)"),
+        ("leukemia-mini", "test-scale leukemia"),
+        ("finance-sim", "Finance/E2006-log1p"),
+        ("finance-mini", "test-scale Finance"),
+        ("bctcga-sim", "bcTCGA (TCGA)"),
+        ("toy-2x2", "Fig. 1 toy"),
+    ] {
+        let ds = coordinator::load_dataset(name, 0)?;
+        table.row(vec![
+            name.to_string(),
+            ds.x.n().to_string(),
+            ds.x.p().to_string(),
+            if ds.x.is_sparse() { "sparse CSC" } else { "dense" }.to_string(),
+            paper.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &cli::Args) -> anyhow::Result<()> {
+    use celer::runtime::Engine as _;
+    let dir: std::path::PathBuf = args
+        .get("dir")
+        .map(Into::into)
+        .unwrap_or_else(celer::runtime::default_artifacts_dir);
+    let mut eng = XlaEngine::load(&dir)?;
+    let specs = eng.registry().artifacts.clone();
+    println!("manifest: {} artifacts in {}", specs.len(), dir.display());
+    // Smoke-run one inner_solve bucket if present: proves PJRT execution.
+    if let Some(spec) = specs.iter().find(|s| s.op == "inner_solve") {
+        let (n, w) = (spec.n, spec.w);
+        let x_cm = vec![0.0; n * w];
+        let y = vec![1.0; n];
+        let beta = vec![0.0; w];
+        let (b, r) = eng.inner_solve(&x_cm, n, w, &y, &beta, 1.0)?;
+        anyhow::ensure!(b.iter().all(|&v| v == 0.0));
+        anyhow::ensure!(r == y, "zero design leaves residual = y");
+        println!("inner_solve n={n} w={w}: compile+execute OK");
+    }
+    let mut table = Table::new("artifacts", &["op", "file", "n", "w", "p", "k", "f"]);
+    for s in &specs {
+        table.row(vec![
+            s.op.clone(),
+            s.file.clone(),
+            s.n.to_string(),
+            s.w.to_string(),
+            s.p.to_string(),
+            s.k.to_string(),
+            s.f.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &cli::Args) -> anyhow::Result<()> {
+    let name = args.get_or("dataset", "finance-mini");
+    let seed = args.get_usize("seed", 0)? as u64;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <file.svm> required"))?;
+    let ds = coordinator::load_dataset(&name, seed)?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(out)?);
+    celer::data::svmlight::write_svmlight(
+        &mut f,
+        &celer::data::svmlight::Dataset { x: ds.x, y: ds.y },
+    )?;
+    println!("wrote {name} (seed {seed}) to {out}");
+    Ok(())
+}

@@ -1,0 +1,439 @@
+//! Block-coordinate-descent Multi-Task Lasso solver with dual
+//! extrapolation and a CELER-style working-set outer loop (paper §7).
+
+use crate::data::design::{DesignMatrix, DesignOps};
+use crate::extrapolation::ResidualBuffer;
+use crate::multitask::{block_soft_threshold, TaskMatrix};
+use crate::util::select::k_smallest_indices;
+
+/// ½‖Y‖_F² as a flat row-major n×q buffer helper.
+fn frob_sq(a: &[f64]) -> f64 {
+    a.iter().map(|v| v * v).sum()
+}
+
+/// Primal objective `P(B) = ½‖R‖_F² + λ‖B‖_{2,1}` from the residual.
+pub fn mt_primal(r: &[f64], b: &TaskMatrix, lambda: f64) -> f64 {
+    0.5 * frob_sq(r) + lambda * b.l21_norm()
+}
+
+/// Dual objective `D(Θ) = ½‖Y‖_F² − (λ²/2)‖Θ − Y/λ‖_F²`.
+pub fn mt_dual(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
+    let mut dist = 0.0;
+    for i in 0..y.len() {
+        let d = theta[i] - y[i] / lambda;
+        dist += d * d;
+    }
+    0.5 * frob_sq(y) - 0.5 * lambda * lambda * dist
+}
+
+/// `‖x_jᵀΘ‖₂` per feature; Θ is row-major n×q.
+fn xt_theta_row_norms<D: DesignOpsMt>(x: &D, theta: &[f64], q: usize, out: &mut [f64]) {
+    let p = x.p();
+    debug_assert_eq!(out.len(), p);
+    // per-column: x_jᵀΘ (q-vector) then its norm
+    crate::util::par::par_fill(out, |j| {
+        let mut acc = 0.0;
+        for t in 0..q {
+            let v = x.col_dot_strided(j, theta, q, t);
+            acc += v * v;
+        }
+        acc.sqrt()
+    });
+}
+
+/// Extension trait: strided column ops for row-major matrix right-hand
+/// sides (the Multi-Task residual is n×q).
+pub trait DesignOpsMt: DesignOps {
+    /// `Σ_i x[i,j] · m[i*q + t]`.
+    fn col_dot_strided(&self, j: usize, m: &[f64], q: usize, t: usize) -> f64;
+    /// `m[i*q + t] += alpha · x[i,j]` for all i.
+    fn col_axpy_strided(&self, j: usize, alpha: f64, m: &mut [f64], q: usize, t: usize);
+}
+
+impl DesignOpsMt for crate::data::dense::DenseMatrix {
+    fn col_dot_strided(&self, j: usize, m: &[f64], q: usize, t: usize) -> f64 {
+        let col = self.col(j);
+        let mut acc = 0.0;
+        for (i, &v) in col.iter().enumerate() {
+            acc += v * m[i * q + t];
+        }
+        acc
+    }
+
+    fn col_axpy_strided(&self, j: usize, alpha: f64, m: &mut [f64], q: usize, t: usize) {
+        let col = self.col(j);
+        for (i, &v) in col.iter().enumerate() {
+            m[i * q + t] += alpha * v;
+        }
+    }
+}
+
+impl DesignOpsMt for crate::data::csc::CscMatrix {
+    fn col_dot_strided(&self, j: usize, m: &[f64], q: usize, t: usize) -> f64 {
+        let (idx, val) = self.col(j);
+        let mut acc = 0.0;
+        for k in 0..idx.len() {
+            acc += val[k] * m[idx[k] as usize * q + t];
+        }
+        acc
+    }
+
+    fn col_axpy_strided(&self, j: usize, alpha: f64, m: &mut [f64], q: usize, t: usize) {
+        let (idx, val) = self.col(j);
+        for k in 0..idx.len() {
+            m[idx[k] as usize * q + t] += alpha * val[k];
+        }
+    }
+}
+
+impl DesignOpsMt for DesignMatrix {
+    fn col_dot_strided(&self, j: usize, m: &[f64], q: usize, t: usize) -> f64 {
+        match self {
+            DesignMatrix::Dense(d) => d.col_dot_strided(j, m, q, t),
+            DesignMatrix::Sparse(s) => s.col_dot_strided(j, m, q, t),
+        }
+    }
+
+    fn col_axpy_strided(&self, j: usize, alpha: f64, m: &mut [f64], q: usize, t: usize) {
+        match self {
+            DesignMatrix::Dense(d) => d.col_axpy_strided(j, alpha, m, q, t),
+            DesignMatrix::Sparse(s) => s.col_axpy_strided(j, alpha, m, q, t),
+        }
+    }
+}
+
+/// `λ_max = max_j ‖x_jᵀY‖₂` — smallest λ with B̂ = 0.
+pub fn mt_lambda_max<D: DesignOpsMt>(x: &D, y: &[f64], q: usize) -> f64 {
+    let mut norms = vec![0.0; x.p()];
+    xt_theta_row_norms(x, y, q, &mut norms);
+    norms.into_iter().fold(0.0, f64::max)
+}
+
+/// Configuration for the Multi-Task solvers.
+#[derive(Debug, Clone)]
+pub struct MtConfig {
+    pub tol: f64,
+    pub max_epochs: usize,
+    pub gap_freq: usize,
+    pub k: usize,
+    pub extrapolate: bool,
+}
+
+impl Default for MtConfig {
+    fn default() -> Self {
+        MtConfig {
+            tol: 1e-6,
+            max_epochs: 20_000,
+            gap_freq: 10,
+            k: crate::extrapolation::DEFAULT_K,
+            extrapolate: true,
+        }
+    }
+}
+
+/// Multi-Task solve result.
+#[derive(Debug, Clone)]
+pub struct MtResult {
+    pub b: TaskMatrix,
+    /// Residual Y − XB, row-major n×q.
+    pub r: Vec<f64>,
+    /// Best feasible dual point, row-major n×q.
+    pub theta: Vec<f64>,
+    pub gap: f64,
+    pub epochs: usize,
+    pub converged: bool,
+}
+
+/// Cyclic block-CD for the Multi-Task Lasso with dual extrapolation
+/// (Algorithm 1 lifted to matrix residuals).
+pub fn mt_bcd_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    q: usize,
+    lambda: f64,
+    b0: Option<&TaskMatrix>,
+    cfg: &MtConfig,
+) -> MtResult {
+    let (n, p) = (x.n(), x.p());
+    assert_eq!(y.len(), n * q, "Y must be row-major n×q");
+    let mut b = b0.cloned().unwrap_or_else(|| TaskMatrix::zeros(p, q));
+    assert_eq!((b.p, b.q), (p, q));
+
+    // R = Y − XB
+    let mut r = y.to_vec();
+    for j in 0..p {
+        for t in 0..q {
+            let v = b.row(j)[t];
+            if v != 0.0 {
+                x.col_axpy_strided(j, -v, &mut r, q, t);
+            }
+        }
+    }
+    let norms_sq = x.col_norms_sq();
+
+    let mut buffer = ResidualBuffer::new(cfg.k);
+    let mut best_theta = vec![0.0; n * q];
+    let mut best_dual = f64::NEG_INFINITY;
+    let mut gap = f64::INFINITY;
+    let mut epochs = 0;
+    let mut converged = false;
+    let mut row_norms = vec![0.0; p];
+    let mut u = vec![0.0; q];
+
+    for epoch in 1..=cfg.max_epochs {
+        epochs = epoch;
+        for j in 0..p {
+            let nrm = norms_sq[j];
+            if nrm == 0.0 {
+                continue;
+            }
+            // u = B_j + x_jᵀR / ‖x_j‖²
+            for t in 0..q {
+                u[t] = b.row(j)[t] + x.col_dot_strided(j, &r, q, t) / nrm;
+            }
+            block_soft_threshold(&mut u, lambda / nrm);
+            for t in 0..q {
+                let old = b.row(j)[t];
+                let delta = u[t] - old;
+                if delta != 0.0 {
+                    x.col_axpy_strided(j, -delta, &mut r, q, t);
+                    b.row_mut(j)[t] = u[t];
+                }
+            }
+        }
+
+        if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
+            buffer.push(&r);
+            // candidate residual-like matrices: R and its extrapolation
+            let mut cands: Vec<Vec<f64>> = vec![r.clone()];
+            if cfg.extrapolate {
+                if let Some(acc) = buffer.extrapolate() {
+                    cands.push(acc);
+                }
+            }
+            for cand in cands {
+                // Θ = C / max(λ, max_j ‖x_jᵀC‖₂)
+                xt_theta_row_norms(x, &cand, q, &mut row_norms);
+                let denom = row_norms.iter().fold(lambda, |m, &v| m.max(v));
+                let theta: Vec<f64> = cand.iter().map(|&v| v / denom).collect();
+                let d = mt_dual(y, &theta, lambda);
+                if d > best_dual {
+                    best_dual = d;
+                    best_theta = theta;
+                }
+            }
+            gap = mt_primal(&r, &b, lambda) - best_dual;
+            if gap <= cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+    MtResult { b, r, theta: best_theta, gap, epochs, converged }
+}
+
+/// CELER-style working-set Multi-Task solver: rank rows by
+/// `d_j(Θ) = (1 − ‖x_jᵀΘ‖₂)/‖x_j‖` and solve subproblems with
+/// [`mt_bcd_solve`], warm-started, pruning WS size to `2·|row support|`.
+pub fn mt_celer_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    q: usize,
+    lambda: f64,
+    cfg: &MtConfig,
+) -> MtResult {
+    let (n, p) = (x.n(), x.p());
+    let mut b = TaskMatrix::zeros(p, q);
+    let mut r = y.to_vec();
+    let col_norms: Vec<f64> = x.col_norms_sq().iter().map(|v| v.sqrt()).collect();
+    let mut theta = {
+        let lmax = mt_lambda_max(x, y, q).max(f64::MIN_POSITIVE);
+        y.iter().map(|&v| v / lmax).collect::<Vec<f64>>()
+    };
+    let mut gap = f64::INFINITY;
+    let mut converged = false;
+    let mut epochs = 0;
+    let mut row_norms = vec![0.0; p];
+    let mut prev_ws_len = 0usize;
+
+    for t_out in 1..=50 {
+        // Θ candidates: previous Θ and rescaled residual; keep the better.
+        xt_theta_row_norms(x, &r, q, &mut row_norms);
+        let denom = row_norms.iter().fold(lambda, |m, &v| m.max(v));
+        let theta_res: Vec<f64> = r.iter().map(|&v| v / denom).collect();
+        if mt_dual(y, &theta_res, lambda) > mt_dual(y, &theta, lambda) {
+            theta.copy_from_slice(&theta_res);
+        }
+        gap = mt_primal(&r, &b, lambda) - mt_dual(y, &theta, lambda);
+        if gap <= cfg.tol {
+            converged = true;
+            break;
+        }
+
+        // d_j scores on the FRESH residual point: a stale-but-tight Θ
+        // freezes the priorities and stalls the WS (same pricing rule as
+        // the single-task CELER, see solvers/celer.rs).
+        xt_theta_row_norms(x, &theta_res, q, &mut row_norms);
+        let mut scores: Vec<f64> = (0..p)
+            .map(|j| {
+                if col_norms[j] == 0.0 {
+                    f64::MAX
+                } else {
+                    (1.0 - row_norms[j]) / col_norms[j]
+                }
+            })
+            .collect();
+        let support = b.support();
+        for &j in &support {
+            scores[j] = -1.0;
+        }
+        let stagnated = t_out >= 2 && prev_ws_len > 0;
+        let pt = if t_out == 1 {
+            100.min(p)
+        } else {
+            (2 * support.len().max(1)).max(if stagnated { prev_ws_len } else { 0 }).min(p)
+        }
+        .max(support.len());
+        let mut ws = k_smallest_indices(&scores, pt);
+        ws.sort_unstable();
+        prev_ws_len = ws.len();
+
+        // subproblem
+        let x_ws = x.select_columns(&ws);
+        let mut b_ws = TaskMatrix::zeros(ws.len(), q);
+        for (i, &j) in ws.iter().enumerate() {
+            b_ws.row_mut(i).copy_from_slice(b.row(j));
+        }
+        let inner_cfg = MtConfig { tol: 0.3 * gap, ..cfg.clone() };
+        let inner = mt_bcd_solve(&x_ws, y, q, lambda, Some(&b_ws), &inner_cfg);
+        epochs += inner.epochs;
+        b = TaskMatrix::zeros(p, q);
+        for (i, &j) in ws.iter().enumerate() {
+            b.row_mut(j).copy_from_slice(inner.b.row(i));
+        }
+        r.copy_from_slice(&inner.r);
+        // lift the inner dual point: rescale to full feasibility
+        xt_theta_row_norms(x, &inner.theta, q, &mut row_norms);
+        let s = row_norms.iter().fold(1.0f64, |m, &v| m.max(v));
+        let lifted: Vec<f64> = inner.theta.iter().map(|&v| v / s).collect();
+        if mt_dual(y, &lifted, lambda) > mt_dual(y, &theta, lambda) {
+            theta = lifted;
+        }
+    }
+    let _ = n;
+    MtResult { b, r, theta, gap, epochs, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_mt(seed: u64, n: usize, p: usize, q: usize) -> (DesignMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0; n * p];
+        for v in data.iter_mut() {
+            *v = rng.normal();
+        }
+        for j in 0..p {
+            let nrm: f64 =
+                data[j * n..(j + 1) * n].iter().map(|v| v * v).sum::<f64>().sqrt();
+            for v in data[j * n..(j + 1) * n].iter_mut() {
+                *v /= nrm;
+            }
+        }
+        let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+        (DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data)), y)
+    }
+
+    #[test]
+    fn lambda_max_zeroes_b() {
+        let (x, y) = random_mt(1, 12, 8, 3);
+        let lmax = mt_lambda_max(&x, &y, 3);
+        let out = mt_bcd_solve(&x, &y, 3, lmax * 1.001, None, &MtConfig::default());
+        assert_eq!(out.b.support().len(), 0);
+        let out2 = mt_bcd_solve(&x, &y, 3, lmax * 0.9, None, &MtConfig::default());
+        assert!(!out2.b.support().is_empty());
+    }
+
+    #[test]
+    fn q1_reduces_to_lasso() {
+        let (x, y) = random_mt(2, 16, 12, 1);
+        let lambda = mt_lambda_max(&x, &y, 1) / 4.0;
+        let mt = mt_bcd_solve(&x, &y, 1, lambda, None, &MtConfig { tol: 1e-10, ..Default::default() });
+        let st = crate::solvers::cd::cd_solve(
+            &x,
+            &y,
+            lambda,
+            None,
+            &crate::solvers::cd::CdConfig { tol: 1e-10, ..Default::default() },
+        );
+        for j in 0..12 {
+            assert!(
+                (mt.b.row(j)[0] - st.beta[j]).abs() < 1e-7,
+                "j={j}: {} vs {}",
+                mt.b.row(j)[0],
+                st.beta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn gap_certificate_valid() {
+        let (x, y) = random_mt(3, 14, 20, 4);
+        let lambda = mt_lambda_max(&x, &y, 4) / 5.0;
+        let out = mt_bcd_solve(&x, &y, 4, lambda, None, &MtConfig { tol: 1e-8, ..Default::default() });
+        assert!(out.converged, "gap {}", out.gap);
+        // dual feasibility: max_j ||x_j^T Θ||₂ ≤ 1
+        let mut norms = vec![0.0; 20];
+        xt_theta_row_norms(&x, &out.theta, 4, &mut norms);
+        assert!(norms.iter().all(|&v| v <= 1.0 + 1e-10));
+        // recomputed gap matches
+        let g = mt_primal(&out.r, &out.b, lambda) - mt_dual(&y, &out.theta, lambda);
+        assert!((g - out.gap).abs() < 1e-12);
+        assert!(g >= -1e-12);
+    }
+
+    #[test]
+    fn celer_mt_matches_bcd() {
+        let (x, y) = random_mt(4, 20, 60, 3);
+        let lambda = mt_lambda_max(&x, &y, 3) / 8.0;
+        let a = mt_celer_solve(&x, &y, 3, lambda, &MtConfig { tol: 1e-9, ..Default::default() });
+        let b = mt_bcd_solve(&x, &y, 3, lambda, None, &MtConfig { tol: 1e-10, ..Default::default() });
+        assert!(a.converged, "celer-mt gap {}", a.gap);
+        let pa = mt_primal(&a.r, &a.b, lambda);
+        let pb = mt_primal(&b.r, &b.b, lambda);
+        assert!(pa - pb < 1e-7, "{pa} vs {pb}");
+    }
+
+    #[test]
+    fn extrapolation_helps_or_ties_mt() {
+        let (x, y) = random_mt(5, 24, 80, 2);
+        let lambda = mt_lambda_max(&x, &y, 2) / 10.0;
+        let with = mt_bcd_solve(&x, &y, 2, lambda, None, &MtConfig { tol: 1e-9, ..Default::default() });
+        let without = mt_bcd_solve(
+            &x,
+            &y,
+            2,
+            lambda,
+            None,
+            &MtConfig { tol: 1e-9, extrapolate: false, ..Default::default() },
+        );
+        assert!(with.converged && without.converged);
+        assert!(with.epochs <= without.epochs);
+    }
+
+    #[test]
+    fn row_sparsity_structure() {
+        // solutions are row-sparse: a row is entirely zero or entirely active
+        let (x, y) = random_mt(6, 18, 40, 3);
+        let lambda = mt_lambda_max(&x, &y, 3) / 3.0;
+        let out = mt_bcd_solve(&x, &y, 3, lambda, None, &MtConfig { tol: 1e-10, ..Default::default() });
+        for j in 0..40 {
+            let row = out.b.row(j);
+            let nz = row.iter().filter(|&&v| v != 0.0).count();
+            assert!(nz == 0 || nz == 3, "row {j} partially zero: {row:?}");
+        }
+    }
+}

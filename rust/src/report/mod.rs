@@ -1,0 +1,204 @@
+//! Report writers: fixed-width ASCII tables (stdout) and CSV dumps, used
+//! by every `examples/` figure/table driver and the bench harness.
+
+use std::fmt::Write as _;
+
+/// A simple fixed-width table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "# {}", self.title);
+        }
+        let sep: String = widths.iter().map(|w| format!("+{}", "-".repeat(w + 2))).collect::<String>() + "+";
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(line, "| {:<width$} ", cell, width = widths[c]);
+            }
+            line + "|"
+        };
+        let _ = writeln!(out, "{sep}");
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    /// Write as CSV (RFC-4180-ish quoting).
+    pub fn write_csv<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        writeln!(w, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","))?;
+        for row in &self.rows {
+            writeln!(w, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","))?;
+        }
+        Ok(())
+    }
+
+    /// Save CSV next to the repo's results directory.
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        self.write_csv(&mut f)
+    }
+}
+
+/// Minimal benchmark harness (offline build: no criterion). Used by
+/// every `rust/benches/*` target — each paper table/figure has one.
+pub mod bench {
+    use std::time::Instant;
+
+    /// Timing summary over repeated runs.
+    #[derive(Debug, Clone)]
+    pub struct Timing {
+        pub name: String,
+        pub iters: usize,
+        pub mean_s: f64,
+        pub min_s: f64,
+        pub max_s: f64,
+    }
+
+    impl Timing {
+        pub fn report(&self) -> String {
+            format!(
+                "bench {:<40} iters={:<3} min={:>10} mean={:>10} max={:>10}",
+                self.name,
+                self.iters,
+                super::fmt_secs(self.min_s),
+                super::fmt_secs(self.mean_s),
+                super::fmt_secs(self.max_s)
+            )
+        }
+    }
+
+    /// Time `f` over `iters` runs (plus one warmup).
+    pub fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Timing {
+        f(); // warmup
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let sum: f64 = times.iter().sum();
+        let timing = Timing {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: sum / times.len() as f64,
+            min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
+            max_s: times.iter().copied().fold(0.0, f64::max),
+        };
+        println!("{}", timing.report());
+        timing
+    }
+
+    /// True when the full paper-scale benchmark was requested
+    /// (`CELER_BENCH_FULL=1 cargo bench`); default is the CI-scale run.
+    pub fn full_scale() -> bool {
+        std::env::var("CELER_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+    }
+}
+
+/// Format seconds human-readably (µs → s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Format a float in compact scientific notation.
+pub fn fmt_sci(v: f64) -> String {
+    format!("{v:.2e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["solver", "time"]);
+        t.row(vec!["celer".into(), "5s".into()]);
+        t.row(vec!["blitz-longer-name".into(), "25s".into()]);
+        let s = t.render();
+        assert!(s.contains("# demo"));
+        assert!(s.contains("| celer"));
+        let lines: Vec<&str> = s.lines().collect();
+        // all body lines same width
+        let w = lines[1].len();
+        assert!(lines[2..].iter().all(|l| l.len() == w));
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "he said \"hi\"".into()]);
+        let mut buf = Vec::new();
+        t.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_secs(0.0000005), "0.5µs");
+        assert_eq!(fmt_secs(0.005), "5.0ms");
+        assert_eq!(fmt_secs(2.5), "2.50s");
+    }
+}

@@ -1,0 +1,161 @@
+//! AOT artifact manifest + shape-bucket registry.
+//!
+//! `python -m compile.aot` (Layers 1–2) writes `artifacts/manifest.json`
+//! describing every compiled HLO module and its static shapes. The Rust
+//! side never recompiles Python — it routes each request to the smallest
+//! compiled bucket that fits and zero-pads, a serving-style design.
+
+use crate::util::json::{parse, Json};
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact (an HLO-text module with fixed shapes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub op: String,
+    pub file: String,
+    /// Observation count n (rows).
+    pub n: usize,
+    /// Block width w (inner_solve) — 0 when not applicable.
+    pub w: usize,
+    /// Padded feature count p (full-design ops) — 0 when not applicable.
+    pub p: usize,
+    /// Extrapolation depth K — 0 when not applicable.
+    pub k: usize,
+    /// Epochs per inner_solve call — 0 when not applicable.
+    pub f: usize,
+}
+
+/// Parsed manifest with bucket lookup.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub dtype: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::from_json(dir, &text)
+    }
+
+    /// Parse a manifest document.
+    pub fn from_json(dir: &Path, text: &str) -> anyhow::Result<Self> {
+        let doc = parse(text)?;
+        let version = doc.get("version").and_then(Json::as_usize).unwrap_or(0);
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let dtype = doc
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f64")
+            .to_string();
+        let mut artifacts = Vec::new();
+        for e in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts array"))?
+        {
+            let field = |k: &str| e.get(k).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.push(ArtifactSpec {
+                op: e
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing op"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?
+                    .to_string(),
+                n: field("n"),
+                w: field("w"),
+                p: field("p"),
+                k: field("k"),
+                f: field("f"),
+            });
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), dtype, artifacts })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Smallest `inner_solve` bucket with matching n and width ≥ w.
+    pub fn inner_solve_bucket(&self, n: usize, w: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == "inner_solve" && a.n == n && a.w >= w)
+            .min_by_key(|a| a.w)
+    }
+
+    /// Smallest full-design bucket (by op name) with matching n, p ≥ p_req.
+    pub fn full_design_bucket(&self, op: &str, n: usize, p: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.op == op && a.n == n && a.p >= p)
+            .min_by_key(|a| a.p)
+    }
+
+    /// Extrapolation bucket for (k, n).
+    pub fn extrapolate_bucket(&self, k: usize, n: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.op == "extrapolate" && a.k == k && a.n == n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "version": 1, "dtype": "f64", "profile": "small",
+      "artifacts": [
+        {"op": "inner_solve", "file": "a.hlo.txt", "n": 48, "w": 64, "f": 10},
+        {"op": "inner_solve", "file": "b.hlo.txt", "n": 48, "w": 128, "f": 10},
+        {"op": "gap_scores", "file": "c.hlo.txt", "n": 48, "p": 512},
+        {"op": "extrapolate", "file": "d.hlo.txt", "k": 5, "n": 48}
+      ]
+    }"#;
+
+    fn reg() -> ArtifactRegistry {
+        ArtifactRegistry::from_json(Path::new("/tmp/arts"), MANIFEST).unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let r = reg();
+        assert_eq!(r.artifacts.len(), 4);
+        assert_eq!(r.dtype, "f64");
+        assert_eq!(r.artifacts[0].w, 64);
+        assert_eq!(r.path_of(&r.artifacts[0]), Path::new("/tmp/arts/a.hlo.txt"));
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let r = reg();
+        assert_eq!(r.inner_solve_bucket(48, 10).unwrap().w, 64);
+        assert_eq!(r.inner_solve_bucket(48, 64).unwrap().w, 64);
+        assert_eq!(r.inner_solve_bucket(48, 65).unwrap().w, 128);
+        assert!(r.inner_solve_bucket(48, 129).is_none());
+        assert!(r.inner_solve_bucket(99, 10).is_none(), "n must match exactly");
+    }
+
+    #[test]
+    fn full_design_and_extrapolate_buckets() {
+        let r = reg();
+        assert_eq!(r.full_design_bucket("gap_scores", 48, 500).unwrap().p, 512);
+        assert!(r.full_design_bucket("gap_scores", 48, 513).is_none());
+        assert!(r.extrapolate_bucket(5, 48).is_some());
+        assert!(r.extrapolate_bucket(4, 48).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = r#"{"version": 9, "artifacts": []}"#;
+        assert!(ArtifactRegistry::from_json(Path::new("/x"), bad).is_err());
+    }
+}

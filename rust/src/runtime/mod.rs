@@ -1,0 +1,37 @@
+//! Runtime layer: engine abstraction (native vs. XLA/PJRT), the AOT
+//! artifact registry and the shape-bucket router.
+
+pub mod artifacts;
+pub mod engine;
+pub mod xla_exec;
+
+pub use artifacts::{ArtifactRegistry, ArtifactSpec};
+pub use engine::{engine_cd_solve, Engine, EngineSolveResult, NativeEngine};
+pub use xla_exec::XlaEngine;
+
+/// Sentinel score for empty/padded columns — must match
+/// `python/compile/kernels/scores.py::EMPTY_COL_SCORE`.
+pub const EMPTY_COL_SCORE: f64 = 1e300;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("CELER_ARTIFACTS_DIR") {
+        return dir.into();
+    }
+    // try relative to CWD, then relative to the executable's repo layout
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    if let Ok(mut exe) = std::env::current_exe() {
+        // target/{release,debug}/... -> repo root
+        for _ in 0..4 {
+            exe.pop();
+            let cand = exe.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+        }
+    }
+    cwd
+}

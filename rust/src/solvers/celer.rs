@@ -1,0 +1,402 @@
+//! CELER (Algorithm 4): working-set solver with dual extrapolation —
+//! *Constraint Elimination for the Lasso with Extrapolated Residuals*.
+//!
+//! Outer loop:
+//! 1. build the best dual point among {θ^{t-1}, θ_inner^{t-1}, θ_res^t}
+//!    (the inner point carries the *extrapolated* information — this is
+//!    what Blitz structurally cannot use, §7);
+//! 2. stop on the global duality gap;
+//! 3. rank features by `d_j(θ)` and form the working set (safe doubling or
+//!    pruning policy);
+//! 4. approximately solve the subproblem on `X_{W_t}` with Algorithm 1
+//!    (CD + dual extrapolation), warm-started.
+
+use crate::data::design::{DesignMatrix, DesignOps};
+use crate::lasso::{dual, primal, LassoProblem};
+use crate::screening::d_score;
+use crate::solvers::cd::{cd_solve, CdConfig};
+use crate::solvers::SolveResult;
+use crate::ws::{build_working_set, WsPolicy};
+use std::time::Instant;
+
+/// Per-outer-iteration record (drives Figs. 8/9 and the path reports).
+#[derive(Debug, Clone)]
+pub struct CelerIteration {
+    /// 1-based outer iteration.
+    pub t: usize,
+    /// Global duality gap at the start of the iteration.
+    pub gap: f64,
+    /// Working-set size |W_t| (0 on the final, converged check).
+    pub ws_size: usize,
+    /// Support size |S_{β^{t-1}}|.
+    pub support_size: usize,
+    /// Epochs consumed by the inner solver.
+    pub inner_epochs: usize,
+    /// Wall-clock since solve start.
+    pub seconds: f64,
+    /// Which dual candidate won: 0 = previous, 1 = inner, 2 = residual.
+    pub dual_winner: usize,
+}
+
+/// CELER configuration.
+#[derive(Debug, Clone)]
+pub struct CelerConfig {
+    /// Global duality-gap tolerance ε.
+    pub tol: f64,
+    /// Maximum outer iterations.
+    pub max_outer: usize,
+    /// Working-set policy (size growth + pruning).
+    pub ws: WsPolicy,
+    /// Subproblem tolerance ratio ε̄ (prune mode: ε_t = ε̄·g_t).
+    pub inner_tol_ratio: f64,
+    /// Inner-solver epoch cap per outer iteration.
+    pub max_inner_epochs: usize,
+    /// Inner gap frequency f.
+    pub gap_freq: usize,
+    /// Extrapolation depth K.
+    pub k: usize,
+    /// Use dual extrapolation in the inner solver. Disabling this is the
+    /// ablation that isolates the WS strategy from the dual point quality.
+    pub extrapolate: bool,
+}
+
+impl Default for CelerConfig {
+    fn default() -> Self {
+        CelerConfig {
+            tol: 1e-6,
+            max_outer: 100,
+            ws: WsPolicy::default(),
+            inner_tol_ratio: 0.3,
+            max_inner_epochs: 10_000,
+            gap_freq: 10,
+            k: crate::extrapolation::DEFAULT_K,
+            extrapolate: true,
+        }
+    }
+}
+
+impl CelerConfig {
+    /// Paper's "safe" variant (monotone doubling working sets, inner tol ε).
+    pub fn safe() -> Self {
+        CelerConfig { ws: WsPolicy::safe(), ..Default::default() }
+    }
+}
+
+/// CELER output: solution + per-iteration trace.
+#[derive(Debug, Clone)]
+pub struct CelerOutput {
+    pub result: SolveResult,
+    pub iterations: Vec<CelerIteration>,
+}
+
+impl CelerOutput {
+    pub fn support_size(&self) -> usize {
+        self.result.support_size()
+    }
+    pub fn gap(&self) -> f64 {
+        self.result.gap
+    }
+}
+
+/// Solve a [`LassoProblem`] with CELER.
+pub fn celer_solve(pb: &LassoProblem, cfg: &CelerConfig) -> CelerOutput {
+    celer_solve_on(&pb.x, &pb.y, pb.lambda, None, cfg)
+}
+
+/// CELER on explicit data with optional warm start.
+pub fn celer_solve_on(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CelerConfig,
+) -> CelerOutput {
+    let (n, p) = (x.n(), x.p());
+    let start = Instant::now();
+
+    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
+    let mut r = vec![0.0; n];
+    primal::residual(x, y, &beta, &mut r);
+
+    let col_norms: Vec<f64> = x.col_norms_sq().iter().map(|v| v.sqrt()).collect();
+
+    // init: θ⁰ = θ⁰_inner = y / ‖Xᵀy‖_∞ (Algorithm 4)
+    let lmax = dual::lambda_max(x, y).max(f64::MIN_POSITIVE);
+    let mut theta: Vec<f64> = y.iter().map(|&v| v / lmax).collect();
+    let mut theta_inner = theta.clone();
+
+    // warm start: p₁ = |S_{β⁰}| when β⁰ ≠ 0 (Algorithm 4)
+    let mut policy = cfg.ws;
+    let s0 = primal::support_size(&beta);
+    if s0 > 0 {
+        policy.p1 = s0;
+    }
+
+    let mut iterations: Vec<CelerIteration> = Vec::new();
+    let mut xtr = vec![0.0; p];
+    let mut xtheta = vec![0.0; p];
+    // Xᵀθ_inner, maintained by the rescale step (one design sweep serves
+    // both the feasibility rescale and next iteration's pricing).
+    let mut xtheta_inner = vec![0.0; p];
+    x.xt_vec(&theta_inner, &mut xtheta_inner);
+    let mut d_scores = vec![0.0; p];
+    let mut prev_ws: Vec<usize> = primal::support(&beta);
+    let mut prev_ws_size = 0usize;
+    let mut gap = f64::INFINITY;
+    let mut converged = false;
+    let mut total_inner_epochs = 0usize;
+
+    let mut prev_gap = f64::INFINITY;
+    for t in 1..=cfg.max_outer {
+        // ---- θ^t = argmax D over {θ^{t-1}, θ_inner^{t-1}, θ_res^t} ----
+        x.xt_vec(&r, &mut xtr);
+        let mut denom = lambda;
+        for &v in xtr.iter() {
+            denom = denom.max(v.abs());
+        }
+        let theta_res: Vec<f64> = r.iter().map(|&v| v / denom).collect();
+        let winner = dual::best_dual_point(y, lambda, &[&theta, &theta_inner, &theta_res]);
+        match winner {
+            1 => theta.copy_from_slice(&theta_inner),
+            2 => theta.copy_from_slice(&theta_res),
+            _ => {}
+        }
+
+        // Pricing (d_j ranking) deliberately uses only the FRESH dual
+        // candidates {θ_inner^{t-1}, θ_res^t}: a stale-but-tight θ^{t-1}
+        // (e.g. the y/λ_max initialization at small λ) yields stale
+        // priorities and can freeze the working set while the gap
+        // stagnates. The gap/stopping test above still uses the monotone
+        // argmax-of-three point, exactly as Algorithm 4 prescribes.
+        // Correlations for θ_inner are cached from the rescale pass below
+        // (§Perf: saves one full Xᵀ· sweep per outer iteration).
+        let rank_winner =
+            dual::best_dual_point(y, lambda, &[&theta_inner, &theta_res]);
+        if rank_winner == 1 {
+            for (o, &v) in xtheta.iter_mut().zip(xtr.iter()) {
+                *o = v / denom;
+            }
+        } else {
+            xtheta.copy_from_slice(&xtheta_inner);
+        }
+
+        // ---- global gap / stop ----
+        let p_val = primal::primal_from_residual(&r, &beta, lambda);
+        gap = p_val - dual::dual_objective(y, &theta, lambda);
+        let support = primal::support(&beta);
+        if gap <= cfg.tol {
+            converged = true;
+            iterations.push(CelerIteration {
+                t,
+                gap,
+                ws_size: 0,
+                support_size: support.len(),
+                inner_epochs: 0,
+                seconds: start.elapsed().as_secs_f64(),
+                dual_winner: winner,
+            });
+            break;
+        }
+
+        // ---- working set ----
+        for j in 0..p {
+            d_scores[j] = d_score(xtheta[j].abs(), col_norms[j]);
+            if d_scores[j].is_infinite() {
+                // empty column: keep out of the WS by a huge finite score
+                d_scores[j] = f64::MAX;
+            }
+        }
+        // Stagnation safeguard: when an outer iteration barely improved
+        // the gap, the working set was too small (or mis-prioritized) —
+        // fall back to monotone doubling for this round, which restores
+        // the safe variant's convergence guarantee.
+        let stagnated = t >= 2 && gap > 0.9 * prev_gap;
+        prev_gap = gap;
+        let forced_vec: Vec<usize>;
+        let forced: &[usize] = if policy.prune && !stagnated {
+            &support
+        } else if policy.prune {
+            // stagnation in prune mode: keep the previous WS too
+            forced_vec = {
+                let mut f = prev_ws.clone();
+                f.extend(support.iter().copied());
+                f.sort_unstable();
+                f.dedup();
+                f
+            };
+            &forced_vec
+        } else {
+            &prev_ws
+        };
+        let mut pt = policy.next_size(t, prev_ws_size, support.len(), p);
+        if stagnated {
+            pt = pt.max((2 * prev_ws_size).min(p));
+        }
+        let pt = pt.max(forced.len()); // forced members always fit
+        let ws = build_working_set(&mut d_scores, forced, pt);
+
+        // ---- inner solve on X_{W_t} ----
+        let eps_t =
+            if policy.prune { cfg.inner_tol_ratio * gap } else { cfg.tol };
+        let x_ws = x.select_columns(&ws);
+        let beta_ws: Vec<f64> = ws.iter().map(|&j| beta[j]).collect();
+        let inner_cfg = CdConfig {
+            tol: eps_t,
+            max_epochs: cfg.max_inner_epochs,
+            gap_freq: cfg.gap_freq,
+            k: cfg.k,
+            extrapolate: cfg.extrapolate,
+            best_dual: true,
+            screen: false,
+            trace: false,
+        };
+        let inner = cd_solve(&x_ws, y, lambda, Some(&beta_ws), &inner_cfg);
+        total_inner_epochs += inner.epochs;
+
+        // ---- lift the subproblem solution back ----
+        beta.fill(0.0);
+        for (i, &j) in ws.iter().enumerate() {
+            beta[j] = inner.beta[i];
+        }
+        r.copy_from_slice(&inner.r);
+
+        // θ_inner: subproblem-feasible; rescale to be feasible for the
+        // full design. (Algorithm 4 writes max(λ, ‖Xᵀθ‖_∞) which only
+        // applies to residual-scale vectors; θ is already unit-scale so
+        // the correct rescaling is max(1, ‖Xᵀθ‖_∞).) The Xᵀθ_inner sweep
+        // is kept — it doubles as next iteration's pricing vector.
+        x.xt_vec(&inner.theta, &mut xtheta_inner);
+        let s = xtheta_inner.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
+        let inv_s = 1.0 / s;
+        theta_inner.clear();
+        theta_inner.extend(inner.theta.iter().map(|&v| v * inv_s));
+        for v in xtheta_inner.iter_mut() {
+            *v *= inv_s;
+        }
+
+        iterations.push(CelerIteration {
+            t,
+            gap,
+            ws_size: ws.len(),
+            support_size: support.len(),
+            inner_epochs: inner.epochs,
+            seconds: start.elapsed().as_secs_f64(),
+            dual_winner: winner,
+        });
+        prev_ws_size = ws.len();
+        prev_ws = ws;
+    }
+
+    let epochs = total_inner_epochs;
+    let result = SolveResult { beta, r, theta, gap, epochs, converged, trace: Vec::new() };
+    CelerOutput { result, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::solvers::cd::{cd_solve, CdConfig};
+
+    fn check_matches_cd(seed: u64, ratio: f64, cfg: &CelerConfig) {
+        let ds = synth::leukemia_mini(seed);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) * ratio;
+        let out = celer_solve_on(&ds.x, &ds.y, lambda, None, cfg);
+        assert!(out.result.converged, "celer converged, gap={}", out.gap());
+        let reference = cd_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &CdConfig { tol: cfg.tol / 10.0, ..Default::default() },
+        );
+        let p_celer = primal::primal(&ds.x, &ds.y, &out.result.beta, lambda);
+        let p_cd = primal::primal(&ds.x, &ds.y, &reference.beta, lambda);
+        assert!(
+            p_celer - p_cd <= 2.0 * cfg.tol,
+            "celer {p_celer} vs cd {p_cd} (tol {})",
+            cfg.tol
+        );
+    }
+
+    #[test]
+    fn prune_matches_cd() {
+        check_matches_cd(20, 0.1, &CelerConfig { tol: 1e-8, ..Default::default() });
+    }
+
+    #[test]
+    fn safe_matches_cd() {
+        check_matches_cd(21, 0.1, &CelerConfig { tol: 1e-8, ..CelerConfig::safe() });
+    }
+
+    #[test]
+    fn tight_tolerance() {
+        check_matches_cd(22, 0.05, &CelerConfig { tol: 1e-12, ..Default::default() });
+    }
+
+    #[test]
+    fn sparse_problem() {
+        let ds = synth::finance_mini(23);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) / 5.0;
+        let out = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig::default());
+        assert!(out.result.converged);
+        // verify gap claim against an independent computation
+        let p_val = primal::primal(&ds.x, &ds.y, &out.result.beta, lambda);
+        let d_val = dual::dual_objective(&ds.y, &out.result.theta, lambda);
+        assert!((p_val - d_val - out.gap()).abs() < 1e-10);
+        assert!(dual::is_feasible(&ds.x, &out.result.theta, 1e-9));
+    }
+
+    #[test]
+    fn warm_start_initializes_ws_from_support() {
+        let ds = synth::leukemia_mini(24);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) / 10.0;
+        let first = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig::default());
+        let warm = celer_solve_on(
+            &ds.x,
+            &ds.y,
+            lambda,
+            Some(&first.result.beta),
+            &CelerConfig::default(),
+        );
+        assert!(warm.result.converged);
+        // warm start from the solution: one outer iteration, zero inner work
+        assert_eq!(warm.iterations.len(), 1);
+        assert_eq!(warm.iterations[0].inner_epochs, 0);
+    }
+
+    #[test]
+    fn ws_sizes_follow_policy() {
+        let ds = synth::leukemia_mini(25);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+        let cfg = CelerConfig { tol: 1e-10, ..CelerConfig::safe() };
+        let out = celer_solve_on(&ds.x, &ds.y, lambda, None, &cfg);
+        // safe mode: sizes double (until capped) and are monotone
+        let sizes: Vec<usize> =
+            out.iterations.iter().filter(|i| i.ws_size > 0).map(|i| i.ws_size).collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] >= w[0], "safe WS sizes are monotone: {sizes:?}");
+        }
+        assert_eq!(sizes[0], 100, "p1 = 100 by default");
+    }
+
+    #[test]
+    fn gap_decreases_across_outer_iterations() {
+        let ds = synth::leukemia_mini(26);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+        let out = celer_solve_on(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &CelerConfig { tol: 1e-10, ..Default::default() },
+        );
+        let gaps: Vec<f64> = out.iterations.iter().map(|i| i.gap).collect();
+        for w in gaps.windows(2) {
+            assert!(
+                w[1] <= w[0] * (1.0 + 1e-9),
+                "outer gaps non-increasing: {gaps:?}"
+            );
+        }
+    }
+}

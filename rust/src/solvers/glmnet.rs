@@ -1,0 +1,205 @@
+//! GLMNET-style Lasso solver (Friedman, Hastie & Tibshirani, 2010):
+//! sequential strong rules + ever-active set + KKT verification, with the
+//! package's *primal-decrease* stopping criterion.
+//!
+//! This baseline exists to reproduce Figure 5: because the stopping rule
+//! does not control the duality gap, the identified supports contain many
+//! features outside the equicorrelation set ("false positives") at loose
+//! tolerances — unlike gap-controlled solvers.
+
+use crate::data::design::{DesignMatrix, DesignOps};
+use crate::lasso::{dual, primal};
+use crate::solvers::SolveResult;
+use crate::util::soft_threshold;
+
+/// GLMNET-style configuration.
+#[derive(Debug, Clone)]
+pub struct GlmnetConfig {
+    /// Primal-decrease stopping threshold ε (NOT a duality gap!).
+    pub tol: f64,
+    /// Strong-rule / KKT passes cap.
+    pub max_outer: usize,
+    /// Inner CD epoch cap per pass.
+    pub max_inner_epochs: usize,
+    /// KKT violation tolerance when verifying candidates.
+    pub kkt_tol: f64,
+}
+
+impl Default for GlmnetConfig {
+    fn default() -> Self {
+        GlmnetConfig { tol: 1e-6, max_outer: 50, max_inner_epochs: 10_000, kkt_tol: 1e-12 }
+    }
+}
+
+/// Solve one point of a λ-path GLMNET-style.
+///
+/// `lambda_prev` is the previous (larger) λ on the path — the sequential
+/// strong rule keeps features with `|x_jᵀr⁰| ≥ 2λ − λ_prev`. For a cold
+/// start pass `lambda_prev = λ_max`.
+pub fn glmnet_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    lambda_prev: f64,
+    beta0: Option<&[f64]>,
+    cfg: &GlmnetConfig,
+) -> SolveResult {
+    let (n, p) = (x.n(), x.p());
+    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
+    let mut r = vec![0.0; n];
+    primal::residual(x, y, &beta, &mut r);
+    let norms_sq = x.col_norms_sq();
+
+    // ---- sequential strong rule on the warm-start residual ----
+    let mut xtr = vec![0.0; p];
+    x.xt_vec(&r, &mut xtr);
+    let strong_thresh = 2.0 * lambda - lambda_prev;
+    let mut in_strong: Vec<bool> = (0..p)
+        .map(|j| norms_sq[j] > 0.0 && xtr[j].abs() >= strong_thresh)
+        .collect();
+    // ever-active set starts from the warm-start support
+    let mut in_active: Vec<bool> = (0..p).map(|j| beta[j] != 0.0).collect();
+    for j in 0..p {
+        if in_active[j] {
+            in_strong[j] = true;
+        }
+    }
+    let mut active: Vec<usize> = (0..p).filter(|&j| in_active[j]).collect();
+    if active.is_empty() {
+        // seed with the strong set (GLMNET's first pass solves on it)
+        active = (0..p).filter(|&j| in_strong[j]).collect();
+        for &j in &active {
+            in_active[j] = true;
+        }
+    }
+
+    let mut epochs = 0usize;
+    let mut converged = false;
+    for _pass in 0..cfg.max_outer {
+        // ---- CD on the active set until primal decrease < tol ----
+        let mut prev_obj = primal::primal_from_residual(&r, &beta, lambda);
+        for _ in 0..cfg.max_inner_epochs {
+            epochs += 1;
+            for &j in &active {
+                let nrm = norms_sq[j];
+                if nrm == 0.0 {
+                    continue;
+                }
+                let g = x.col_dot(j, &r);
+                let old = beta[j];
+                let new = soft_threshold(old + g / nrm, lambda / nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, &mut r);
+                    beta[j] = new;
+                }
+            }
+            let obj = primal::primal_from_residual(&r, &beta, lambda);
+            if prev_obj - obj < cfg.tol {
+                break;
+            }
+            prev_obj = obj;
+        }
+
+        // ---- KKT on the strong set ----
+        x.xt_vec(&r, &mut xtr);
+        let mut added = false;
+        for j in 0..p {
+            if in_strong[j] && !in_active[j] && xtr[j].abs() > lambda + cfg.kkt_tol {
+                in_active[j] = true;
+                active.push(j);
+                added = true;
+            }
+        }
+        if added {
+            continue;
+        }
+        // ---- KKT on all features (strong-rule violations are rare) ----
+        for j in 0..p {
+            if !in_active[j] && norms_sq[j] > 0.0 && xtr[j].abs() > lambda + cfg.kkt_tol {
+                in_active[j] = true;
+                in_strong[j] = true;
+                active.push(j);
+                added = true;
+            }
+        }
+        if !added {
+            converged = true;
+            break;
+        }
+    }
+
+    // report a duality gap for diagnostics (GLMNET itself never computes it)
+    let theta = dual::rescale_to_feasible(x, &r, lambda);
+    let gap = primal::primal_from_residual(&r, &beta, lambda)
+        - dual::dual_objective(y, &theta, lambda);
+    let _ = n;
+    SolveResult { beta, r, theta, gap, epochs, converged, trace: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn reaches_stationarity_with_tight_tol() {
+        let ds = synth::leukemia_mini(40);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let lambda = lmax / 10.0;
+        let out = glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &GlmnetConfig { tol: 1e-14, ..Default::default() });
+        assert!(out.converged);
+        // with a tight primal tolerance the solution matches gap-based CD
+        let cd = crate::solvers::cd::cd_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &crate::solvers::cd::CdConfig { tol: 1e-12, ..Default::default() },
+        );
+        let pg = primal::primal(&ds.x, &ds.y, &out.beta, lambda);
+        let pc = primal::primal(&ds.x, &ds.y, &cd.beta, lambda);
+        assert!((pg - pc).abs() < 1e-7, "glmnet {pg} vs cd {pc}");
+    }
+
+    #[test]
+    fn loose_tol_inflates_support() {
+        // The Fig. 5 phenomenon: under a loose primal-decrease criterion the
+        // support carries extra features vs. the tight solution.
+        let ds = synth::leukemia_mini(41);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let lambda = lmax / 20.0;
+        let loose =
+            glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &GlmnetConfig { tol: 1e-4, ..Default::default() });
+        let tight =
+            glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &GlmnetConfig { tol: 1e-14, ..Default::default() });
+        assert!(
+            loose.support_size() >= tight.support_size(),
+            "loose {} vs tight {}",
+            loose.support_size(),
+            tight.support_size()
+        );
+    }
+
+    #[test]
+    fn kkt_satisfied_on_active_set() {
+        let ds = synth::leukemia_mini(42);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let lambda = lmax / 5.0;
+        let out = glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &GlmnetConfig { tol: 1e-12, ..Default::default() });
+        // no feature may violate KKT grossly at convergence
+        let viol = crate::lasso::kkt::max_violation(&ds.x, &out.r, &out.beta, lambda);
+        assert!(viol < 1e-3, "violation {viol}");
+    }
+
+    #[test]
+    fn warm_start_path_step() {
+        let ds = synth::leukemia_mini(43);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let l1 = lmax / 2.0;
+        let l2 = lmax / 4.0;
+        let first = glmnet_solve(&ds.x, &ds.y, l1, lmax, None, &GlmnetConfig::default());
+        let second = glmnet_solve(&ds.x, &ds.y, l2, l1, Some(&first.beta), &GlmnetConfig::default());
+        assert!(second.converged);
+        assert!(second.support_size() >= first.support_size());
+    }
+}

@@ -1,0 +1,237 @@
+//! Lasso solvers: the paper's CELER plus every baseline it compares to.
+
+pub mod blitz;
+pub mod cd;
+pub mod celer;
+pub mod dykstra;
+pub mod glmnet;
+pub mod ista;
+pub mod path;
+
+use crate::data::design::DesignOps;
+use crate::extrapolation::ResidualBuffer;
+use crate::lasso::{dual, primal};
+
+/// One duality-gap evaluation record (every `f` epochs).
+#[derive(Debug, Clone)]
+pub struct GapCheck {
+    /// Epoch at which the check ran (1-based).
+    pub epoch: usize,
+    /// Primal objective P(β).
+    pub primal: f64,
+    /// Dual objective of the residual-rescaled point θ_res.
+    pub dual_res: f64,
+    /// Dual objective of the extrapolated point θ_accel (when available).
+    pub dual_accel: Option<f64>,
+    /// Gap of the point actually used by the solver this round.
+    pub gap: f64,
+    /// Total features screened so far (0 when screening is off).
+    pub n_screened: usize,
+    /// Wall-clock seconds since the solver started.
+    pub seconds: f64,
+}
+
+/// Result of an inner/standalone solver run.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    pub beta: Vec<f64>,
+    /// Residual `y − Xβ`.
+    pub r: Vec<f64>,
+    /// Best feasible dual point found.
+    pub theta: Vec<f64>,
+    /// Final duality gap (w.r.t. this solver's problem).
+    pub gap: f64,
+    /// Epochs (outer iterations for WS solvers) consumed.
+    pub epochs: usize,
+    pub converged: bool,
+    /// Per-gap-check trace (empty unless tracing was enabled).
+    pub trace: Vec<GapCheck>,
+}
+
+impl SolveResult {
+    pub fn support_size(&self) -> usize {
+        primal::support_size(&self.beta)
+    }
+
+    pub fn support(&self) -> Vec<usize> {
+        primal::support(&self.beta)
+    }
+}
+
+/// Which dual point the solver ended up using at a gap check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DualChoice {
+    Previous,
+    Residual,
+    Extrapolated,
+}
+
+/// Shared dual-point machinery (Eq. 4, Def. 1, Eq. 13): maintains the
+/// residual ring buffer, computes θ_res and θ_accel, and optionally keeps
+/// the best-so-far dual point for monotonicity.
+pub struct DualState {
+    pub buffer: ResidualBuffer,
+    /// Best dual point so far (feasible).
+    pub theta: Vec<f64>,
+    /// Correlations Xᵀθ for the best point (needed by screening / WS).
+    pub xtheta: Vec<f64>,
+    /// D(θ) for the best point.
+    pub dval: f64,
+    /// Use θ_accel at all.
+    pub extrapolate: bool,
+    /// Keep the best-of {previous, res, accel} (Eq. 13). When false the
+    /// freshly computed best of {res, accel} is used (Fig. 2 setting).
+    pub monotone: bool,
+    /// Last choice made.
+    pub last_choice: DualChoice,
+}
+
+impl DualState {
+    pub fn new(n: usize, p: usize, k: usize, extrapolate: bool, monotone: bool) -> Self {
+        DualState {
+            buffer: ResidualBuffer::new(k),
+            theta: vec![0.0; n],
+            xtheta: vec![0.0; p],
+            dval: f64::NEG_INFINITY,
+            extrapolate,
+            monotone,
+            last_choice: DualChoice::Residual,
+        }
+    }
+
+    /// Ingest the current residual, refresh θ, and return
+    /// (D(θ_res), D(θ_accel) if computed).
+    ///
+    /// Scratch buffers `xtr` (p) avoid reallocation across checks.
+    pub fn update<D: DesignOps>(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        lambda: f64,
+        r: &[f64],
+        xtr: &mut [f64],
+    ) -> (f64, Option<f64>) {
+        self.buffer.push(r);
+
+        // θ_res = r / max(λ, ‖Xᵀr‖_∞)
+        x.xt_vec(r, xtr);
+        let mut denom = lambda;
+        for &v in xtr.iter() {
+            denom = denom.max(v.abs());
+        }
+        let inv = 1.0 / denom;
+        let d_res = {
+            // D(θ_res) without materializing θ_res: θ = r·inv
+            let mut dist_sq = 0.0;
+            for i in 0..y.len() {
+                let d = r[i] * inv - y[i] / lambda;
+                dist_sq += d * d;
+            }
+            0.5 * crate::util::linalg::dot(y, y) - 0.5 * lambda * lambda * dist_sq
+        };
+
+        let mut best_val = d_res;
+        let mut best = DualChoice::Residual;
+
+        // θ_accel
+        let mut accel: Option<(Vec<f64>, Vec<f64>, f64)> = None; // (theta, xtheta, dval)
+        let mut d_accel_out = None;
+        if self.extrapolate {
+            if let Some(r_acc) = self.buffer.extrapolate() {
+                let mut xtr_acc = vec![0.0; x.p()];
+                x.xt_vec(&r_acc, &mut xtr_acc);
+                let mut denom_a = lambda;
+                for &v in xtr_acc.iter() {
+                    denom_a = denom_a.max(v.abs());
+                }
+                let inv_a = 1.0 / denom_a;
+                let theta_a: Vec<f64> = r_acc.iter().map(|&v| v * inv_a).collect();
+                for v in xtr_acc.iter_mut() {
+                    *v *= inv_a;
+                }
+                let d_acc = dual::dual_objective(y, &theta_a, lambda);
+                d_accel_out = Some(d_acc);
+                if d_acc > best_val {
+                    best_val = d_acc;
+                    best = DualChoice::Extrapolated;
+                }
+                accel = Some((theta_a, xtr_acc, d_acc));
+            }
+        }
+
+        if self.monotone && self.dval >= best_val {
+            // keep previous θ
+            self.last_choice = DualChoice::Previous;
+            return (d_res, d_accel_out);
+        }
+
+        match best {
+            DualChoice::Extrapolated => {
+                let (theta_a, xtheta_a, d_acc) = accel.unwrap();
+                self.theta = theta_a;
+                self.xtheta = xtheta_a;
+                self.dval = d_acc;
+            }
+            _ => {
+                self.theta.clear();
+                self.theta.extend(r.iter().map(|&v| v * inv));
+                self.xtheta.clear();
+                self.xtheta.extend(xtr.iter().map(|&v| v * inv));
+                self.dval = d_res;
+            }
+        }
+        self.last_choice = best;
+        (d_res, d_accel_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+    use crate::data::design::DesignMatrix;
+
+    #[test]
+    fn dual_state_monotone() {
+        let x = DesignMatrix::Dense(DenseMatrix::from_row_major(
+            2,
+            2,
+            &[1.0, 0.0, 0.0, 1.0],
+        ));
+        let y = vec![3.0, 0.5];
+        let lambda = 1.0;
+        let mut ds = DualState::new(2, 2, 3, false, true);
+        let mut xtr = vec![0.0; 2];
+        // good residual first (close to optimal residual [1, 0.5])
+        let (d1, _) = ds.update(&x, &y, lambda, &[1.0, 0.5], &mut xtr);
+        assert!(ds.dval >= d1 - 1e-15);
+        let v1 = ds.dval;
+        // much worse residual: monotone state must keep the old point
+        ds.update(&x, &y, lambda, &[-3.0, 2.0], &mut xtr);
+        assert!(ds.dval >= v1 - 1e-15);
+        assert_eq!(ds.last_choice, DualChoice::Previous);
+    }
+
+    #[test]
+    fn dual_state_feasibility() {
+        use crate::data::design::DesignOps;
+        let x = DesignMatrix::Dense(DenseMatrix::from_row_major(
+            3,
+            2,
+            &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+        ));
+        let y = vec![1.0, 2.0, 3.0];
+        let mut ds = DualState::new(3, 2, 2, true, true);
+        let mut xtr = vec![0.0; 2];
+        for r in [[1.0, 0.0, 2.0], [0.9, 0.1, 1.9], [0.8, 0.2, 1.8], [0.75, 0.25, 1.75]] {
+            ds.update(&x, &y, 0.5, &r, &mut xtr);
+            assert!(x.xt_abs_max(&ds.theta) <= 1.0 + 1e-10, "theta stays feasible");
+            // xtheta cache must match X^T theta
+            let mut expect = vec![0.0; 2];
+            x.xt_vec(&ds.theta, &mut expect);
+            for j in 0..2 {
+                assert!((ds.xtheta[j] - expect[j]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Lasso path driver (§6.3): solve along a decreasing λ grid with warm
+//! starts, for any of the registered solvers.
+
+use crate::data::design::DesignMatrix;
+use crate::lasso::dual;
+use crate::solvers::blitz::{blitz_solve, BlitzConfig};
+use crate::solvers::cd::{cd_solve, CdConfig};
+use crate::solvers::celer::{celer_solve_on, CelerConfig};
+use crate::solvers::glmnet::{glmnet_solve, GlmnetConfig};
+use std::time::Instant;
+
+/// Log-spaced λ grid from `λ_max` down to `λ_max · min_ratio` (inclusive),
+/// the GLMNET / scikit-learn convention.
+pub fn lambda_grid(lambda_max: f64, min_ratio: f64, num: usize) -> Vec<f64> {
+    assert!(num >= 1);
+    assert!(min_ratio > 0.0 && min_ratio < 1.0);
+    if num == 1 {
+        return vec![lambda_max];
+    }
+    (0..num)
+        .map(|i| lambda_max * min_ratio.powf(i as f64 / (num - 1) as f64))
+        .collect()
+}
+
+/// Which solver runs the path.
+#[derive(Debug, Clone)]
+pub enum PathSolver {
+    CelerPrune(CelerConfig),
+    CelerSafe(CelerConfig),
+    Blitz(BlitzConfig),
+    Glmnet(GlmnetConfig),
+    /// Vanilla cyclic CD with θ_res gap stopping (scikit-learn).
+    VanillaCd(CdConfig),
+    /// CD + dynamic Gap Safe screening; `extrapolate` picks θ_accel/θ_res.
+    GapSafeCd(CdConfig),
+}
+
+impl PathSolver {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PathSolver::CelerPrune(_) => "celer-prune",
+            PathSolver::CelerSafe(_) => "celer-safe",
+            PathSolver::Blitz(_) => "blitz",
+            PathSolver::Glmnet(_) => "glmnet",
+            PathSolver::VanillaCd(_) => "cd-vanilla",
+            PathSolver::GapSafeCd(c) => {
+                if c.extrapolate {
+                    "gapsafe-cd-accel"
+                } else {
+                    "gapsafe-cd-res"
+                }
+            }
+        }
+    }
+
+    /// Default instance by name, at tolerance `tol`.
+    pub fn by_name(name: &str, tol: f64) -> Option<PathSolver> {
+        Some(match name {
+            "celer-prune" | "celer" => {
+                PathSolver::CelerPrune(CelerConfig { tol, ..Default::default() })
+            }
+            "celer-safe" => PathSolver::CelerSafe(CelerConfig { tol, ..CelerConfig::safe() }),
+            "blitz" => PathSolver::Blitz(BlitzConfig { tol, ..Default::default() }),
+            "glmnet" => PathSolver::Glmnet(GlmnetConfig { tol, ..Default::default() }),
+            "cd-vanilla" | "sklearn" => {
+                PathSolver::VanillaCd(CdConfig { tol, ..CdConfig::vanilla() })
+            }
+            "gapsafe-cd-res" => PathSolver::GapSafeCd(CdConfig {
+                tol,
+                screen: true,
+                extrapolate: false,
+                ..Default::default()
+            }),
+            "gapsafe-cd-accel" => PathSolver::GapSafeCd(CdConfig {
+                tol,
+                screen: true,
+                extrapolate: true,
+                ..Default::default()
+            }),
+            _ => return None,
+        })
+    }
+}
+
+/// One solved grid point.
+#[derive(Debug, Clone)]
+pub struct PathStep {
+    pub lambda: f64,
+    pub seconds: f64,
+    /// Epochs (CD) or total inner epochs (WS solvers).
+    pub epochs: usize,
+    pub gap: f64,
+    pub support_size: usize,
+    pub converged: bool,
+    /// Solution, kept when `store_betas` was requested.
+    pub beta: Option<Vec<f64>>,
+}
+
+/// A full path result.
+#[derive(Debug, Clone)]
+pub struct PathResult {
+    pub solver: String,
+    pub steps: Vec<PathStep>,
+    pub total_seconds: f64,
+}
+
+impl PathResult {
+    pub fn all_converged(&self) -> bool {
+        self.steps.iter().all(|s| s.converged)
+    }
+}
+
+/// Run a λ path with warm starts (β̂(λ_i) initializes λ_{i+1}).
+pub fn run_path(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    solver: &PathSolver,
+    store_betas: bool,
+) -> PathResult {
+    let start = Instant::now();
+    let p = crate::data::design::DesignOps::p(x);
+    let mut beta = vec![0.0; p];
+    let mut steps = Vec::with_capacity(grid.len());
+    let mut lambda_prev = dual::lambda_max(x, y);
+    for &lambda in grid {
+        let t0 = Instant::now();
+        let (new_beta, gap, epochs, converged) = match solver {
+            PathSolver::CelerPrune(cfg) | PathSolver::CelerSafe(cfg) => {
+                let out = celer_solve_on(x, y, lambda, Some(&beta), cfg);
+                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+            }
+            PathSolver::Blitz(cfg) => {
+                let out = blitz_solve(x, y, lambda, Some(&beta), cfg);
+                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+            }
+            PathSolver::Glmnet(cfg) => {
+                let out = glmnet_solve(x, y, lambda, lambda_prev, Some(&beta), cfg);
+                (out.beta, out.gap, out.epochs, out.converged)
+            }
+            PathSolver::VanillaCd(cfg) | PathSolver::GapSafeCd(cfg) => {
+                let out = cd_solve(x, y, lambda, Some(&beta), cfg);
+                (out.beta, out.gap, out.epochs, out.converged)
+            }
+        };
+        beta = new_beta;
+        steps.push(PathStep {
+            lambda,
+            seconds: t0.elapsed().as_secs_f64(),
+            epochs,
+            gap,
+            support_size: crate::lasso::primal::support_size(&beta),
+            converged,
+            beta: if store_betas { Some(beta.clone()) } else { None },
+        });
+        lambda_prev = lambda;
+    }
+    PathResult {
+        solver: solver.name().to_string(),
+        steps,
+        total_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn grid_is_log_spaced() {
+        let g = lambda_grid(10.0, 0.01, 3);
+        assert_eq!(g.len(), 3);
+        assert!((g[0] - 10.0).abs() < 1e-12);
+        assert!((g[1] - 1.0).abs() < 1e-12);
+        assert!((g[2] - 0.1).abs() < 1e-12);
+        assert_eq!(lambda_grid(5.0, 0.5, 1), vec![5.0]);
+    }
+
+    #[test]
+    fn path_solvers_agree_on_final_objective() {
+        let ds = synth::leukemia_mini(50);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.05, 5);
+        let tol = 1e-8;
+        let mut finals = Vec::new();
+        for name in ["celer-prune", "celer-safe", "blitz", "cd-vanilla", "gapsafe-cd-accel"] {
+            let solver = PathSolver::by_name(name, tol).unwrap();
+            let res = run_path(&ds.x, &ds.y, &grid, &solver, true);
+            assert!(res.all_converged(), "{name} converged");
+            let beta = res.steps.last().unwrap().beta.as_ref().unwrap();
+            finals.push(crate::lasso::primal::primal(&ds.x, &ds.y, beta, *grid.last().unwrap()));
+        }
+        for w in finals.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6, "{finals:?}");
+        }
+    }
+
+    #[test]
+    fn support_grows_along_path() {
+        let ds = synth::leukemia_mini(51);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax * 0.99, 0.05, 8);
+        let solver = PathSolver::by_name("celer", 1e-6).unwrap();
+        let res = run_path(&ds.x, &ds.y, &grid, &solver, false);
+        let first = res.steps.first().unwrap().support_size;
+        let last = res.steps.last().unwrap().support_size;
+        assert!(last > first, "support grows: {first} -> {last}");
+    }
+
+    #[test]
+    fn unknown_solver_name() {
+        assert!(PathSolver::by_name("nope", 1e-6).is_none());
+    }
+}

@@ -1,0 +1,426 @@
+//! Small dense linear algebra used by dual extrapolation.
+//!
+//! The extrapolation system `(UᵀU) z = 1_K` is only K×K (K = 5 by default),
+//! so a hand-rolled Gaussian elimination with partial pivoting is both
+//! sufficient and dependency-free. The same routine is mirrored in the JAX
+//! layer (`python/compile/model.py::gauss_solve`) because LAPACK
+//! custom-calls are not available in the standalone PJRT runtime.
+
+/// Euclidean dot product.
+///
+/// Perf note (§Perf, single-core Xeon): the naive indexed loop
+/// auto-vectorizes best here — manual 4-accumulator and `chunks_exact`
+/// variants measured 56% resp. 16% SLOWER on the dense CD epoch
+/// benchmark, so the simple form is intentional.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Solve the dense K×K system `A z = b` in place via Gaussian elimination
+/// with partial pivoting. `a` is row-major K×K and is destroyed.
+///
+/// Returns `None` when the system is numerically singular (a pivot smaller
+/// than `tol * max|A|`), which callers treat as the paper's §5
+/// ill-conditioning signal (fall back to `θ_res` rather than regularize).
+pub fn solve_in_place(a: &mut [f64], b: &mut [f64], k: usize, tol: f64) -> Option<Vec<f64>> {
+    debug_assert_eq!(a.len(), k * k);
+    debug_assert_eq!(b.len(), k);
+    let scale = a.iter().fold(0.0f64, |m, &v| m.max(v.abs())).max(1e-300);
+    let threshold = tol * scale;
+    for col in 0..k {
+        // partial pivot
+        let mut piv = col;
+        let mut best = a[col * k + col].abs();
+        for r in (col + 1)..k {
+            let v = a[r * k + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best <= threshold {
+            return None;
+        }
+        if piv != col {
+            for c in 0..k {
+                a.swap(col * k + c, piv * k + c);
+            }
+            b.swap(col, piv);
+        }
+        let inv = 1.0 / a[col * k + col];
+        for r in (col + 1)..k {
+            let f = a[r * k + col] * inv;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..k {
+                a[r * k + c] -= f * a[col * k + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut z = vec![0.0; k];
+    for row in (0..k).rev() {
+        let mut acc = b[row];
+        for c in (row + 1)..k {
+            acc -= a[row * k + c] * z[c];
+        }
+        z[row] = acc / a[row * k + row];
+    }
+    Some(z)
+}
+
+/// Solve `A z = b` without destroying inputs.
+pub fn solve(a: &[f64], b: &[f64], k: usize, tol: f64) -> Option<Vec<f64>> {
+    let mut aa = a.to_vec();
+    let mut bb = b.to_vec();
+    solve_in_place(&mut aa, &mut bb, k, tol)
+}
+
+/// Eigendecomposition of a symmetric K×K matrix by the cyclic Jacobi
+/// method. Returns (eigenvalues, eigenvectors) with `vecs[i*k + j]` =
+/// component i of eigenvector j (column-major eigenvectors).
+pub fn sym_eigen(a: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+    debug_assert_eq!(a.len(), k * k);
+    let mut m = a.to_vec();
+    // v = identity
+    let mut v = vec![0.0; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        // max off-diagonal magnitude
+        let mut off = 0.0f64;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                off = off.max(m[i * k + j].abs());
+            }
+        }
+        let scale = (0..k).fold(0.0f64, |s, i| s.max(m[i * k + i].abs())).max(1e-300);
+        if off <= 1e-15 * scale {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                let apq = m[p * k + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let (app, aqq) = (m[p * k + p], m[q * k + q]);
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for i in 0..k {
+                    let (aip, aiq) = (m[i * k + p], m[i * k + q]);
+                    m[i * k + p] = c * aip - s * aiq;
+                    m[i * k + q] = s * aip + c * aiq;
+                }
+                for i in 0..k {
+                    let (api, aqi) = (m[p * k + i], m[q * k + i]);
+                    m[p * k + i] = c * api - s * aqi;
+                    m[q * k + i] = s * api + c * aqi;
+                }
+                for i in 0..k {
+                    let (vip, viq) = (v[i * k + p], v[i * k + q]);
+                    v[i * k + p] = c * vip - s * viq;
+                    v[i * k + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let vals: Vec<f64> = (0..k).map(|i| m[i * k + i]).collect();
+    (vals, v)
+}
+
+/// Minimize `cᵀ G c` subject to `1ᵀ c = 1` for a symmetric PSD Gram
+/// matrix G (the dual-extrapolation objective of Scieur et al. 2016).
+///
+/// When G is invertible this equals the paper's `c = z/(zᵀ1)` with
+/// `Gz = 1`; when G is singular (converged or collinear residual
+/// sequences) the solution is computed on the non-null eigenspace, which
+/// is what makes extrapolation exact on degenerate trajectories (Fig. 1's
+/// 2-D toy). Returns `None` only when every direction is null or the
+/// result is non-finite.
+pub fn min_quadratic_on_simplex_affine(g: &[f64], k: usize) -> Option<Vec<f64>> {
+    let (vals, vecs) = sym_eigen(g, k);
+    let vmax = vals.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    if vmax <= 0.0 {
+        // G = 0: any c works; pick uniform weights.
+        return Some(vec![1.0 / k as f64; k]);
+    }
+    let cut = 1e-13 * vmax;
+    // Solve min over c = V y: Σ λ_i y_i² s.t. (Vᵀ1)ᵀ y = 1.
+    // Null directions (λ_i ≈ 0) absorb the constraint for free: if any
+    // null direction has (Vᵀ1)_i ≠ 0, the minimum is 0 along it.
+    let mut w = vec![0.0; k]; // w = Vᵀ1
+    for i in 0..k {
+        let mut acc = 0.0;
+        for r in 0..k {
+            acc += vecs[r * k + i];
+        }
+        w[i] = acc;
+    }
+    // Prefer exact-null solution: project 1 onto null space.
+    let mut null_sq = 0.0;
+    for i in 0..k {
+        if vals[i].abs() <= cut {
+            null_sq += w[i] * w[i];
+        }
+    }
+    let mut y = vec![0.0; k];
+    if null_sq > 1e-20 {
+        // y_i = w_i / null_sq on null directions → objective exactly 0
+        for i in 0..k {
+            if vals[i].abs() <= cut {
+                y[i] = w[i] / null_sq;
+            }
+        }
+    } else {
+        // classic KKT: y_i = μ w_i / λ_i with μ = 1 / Σ w_i²/λ_i
+        let mut denom = 0.0;
+        for i in 0..k {
+            if vals[i].abs() > cut {
+                denom += w[i] * w[i] / vals[i];
+            }
+        }
+        if denom.abs() < 1e-300 {
+            return None;
+        }
+        let mu = 1.0 / denom;
+        for i in 0..k {
+            if vals[i].abs() > cut {
+                y[i] = mu * w[i] / vals[i];
+            }
+        }
+    }
+    // c = V y
+    let mut c = vec![0.0; k];
+    for r in 0..k {
+        let mut acc = 0.0;
+        for i in 0..k {
+            acc += vecs[r * k + i] * y[i];
+        }
+        c[r] = acc;
+    }
+    if !c.iter().all(|v| v.is_finite()) {
+        return None;
+    }
+    // renormalize to kill rounding drift on the constraint
+    let s: f64 = c.iter().sum();
+    if s.abs() < 1e-12 {
+        return None;
+    }
+    for v in c.iter_mut() {
+        *v /= s;
+    }
+    Some(c)
+}
+
+/// Gram matrix `UᵀU` of a column-major n×k matrix stored as k columns.
+pub fn gram(cols: &[&[f64]]) -> Vec<f64> {
+    let k = cols.len();
+    let mut g = vec![0.0; k * k];
+    for i in 0..k {
+        for j in i..k {
+            let v = dot(cols[i], cols[j]);
+            g[i * k + j] = v;
+            g[j * k + i] = v;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_norm_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert!((norm(&a) - 14f64.sqrt()).abs() < 1e-12);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![3.0, 4.0];
+        let z = solve(&a, &b, 2, 1e-12).unwrap();
+        assert_eq!(z, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_general_3x3() {
+        // A = [[2,1,1],[1,3,2],[1,0,0]], b = [4,5,6] -> z = [6, 15, -23]
+        let a = vec![2.0, 1.0, 1.0, 1.0, 3.0, 2.0, 1.0, 0.0, 0.0];
+        let b = vec![4.0, 5.0, 6.0];
+        let z = solve(&a, &b, 3, 1e-12).unwrap();
+        assert!((z[0] - 6.0).abs() < 1e-9, "{z:?}");
+        assert!((z[1] - 15.0).abs() < 1e-9);
+        assert!((z[2] + 23.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_needs_pivoting() {
+        // zero top-left pivot forces a row swap
+        let a = vec![0.0, 1.0, 1.0, 0.0];
+        let b = vec![2.0, 3.0];
+        let z = solve(&a, &b, 2, 1e-12).unwrap();
+        assert_eq!(z, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = vec![1.0, 2.0, 2.0, 4.0];
+        let b = vec![1.0, 2.0];
+        assert!(solve(&a, &b, 2, 1e-10).is_none());
+    }
+
+    #[test]
+    fn solve_residual_small_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(123);
+        for k in 1..=6 {
+            let a: Vec<f64> = (0..k * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            if let Some(z) = solve(&a, &b, k, 1e-12) {
+                for r in 0..k {
+                    let mut acc = 0.0;
+                    for c in 0..k {
+                        acc += a[r * k + c] * z[c];
+                    }
+                    assert!((acc - b[r]).abs() < 1e-8, "k={k} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sym_eigen_diag() {
+        let a = vec![3.0, 0.0, 0.0, 1.0];
+        let (vals, vecs) = sym_eigen(&a, 2);
+        let mut v = vals.clone();
+        v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((v[0] - 1.0).abs() < 1e-12);
+        assert!((v[1] - 3.0).abs() < 1e-12);
+        // eigenvectors orthonormal
+        let dot01 = vecs[0] * vecs[1] + vecs[2] * vecs[3];
+        assert!(dot01.abs() < 1e-12);
+    }
+
+    #[test]
+    fn sym_eigen_reconstructs() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(8);
+        let k = 5;
+        // random symmetric
+        let mut a = vec![0.0; k * k];
+        for i in 0..k {
+            for j in i..k {
+                let v = rng.normal();
+                a[i * k + j] = v;
+                a[j * k + i] = v;
+            }
+        }
+        let (vals, vecs) = sym_eigen(&a, k);
+        // A v_j = λ_j v_j
+        for j in 0..k {
+            for i in 0..k {
+                let mut av = 0.0;
+                for t in 0..k {
+                    av += a[i * k + t] * vecs[t * k + j];
+                }
+                assert!(
+                    (av - vals[j] * vecs[i * k + j]).abs() < 1e-9,
+                    "eigenpair {j} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constrained_min_invertible_matches_paper_formula() {
+        // G invertible: c must equal z/(z^T 1) with Gz = 1.
+        let g = vec![2.0, 0.5, 0.5, 1.0];
+        let c = min_quadratic_on_simplex_affine(&g, 2).unwrap();
+        let z = solve(&g, &[1.0, 1.0], 2, 1e-14).unwrap();
+        let s: f64 = z.iter().sum();
+        for i in 0..2 {
+            assert!((c[i] - z[i] / s).abs() < 1e-10, "{c:?} vs {z:?}");
+        }
+        assert!((c.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constrained_min_rank_deficient() {
+        // G = g g^T (rank 1), g = (1, ρ): the minimizer zeroes the
+        // quadratic exactly: c1 + ρ c2 = 0, c1 + c2 = 1.
+        let rho = 0.6;
+        let g = vec![1.0, rho, rho, rho * rho];
+        let c = min_quadratic_on_simplex_affine(&g, 2).unwrap();
+        assert!((c[0] + rho * c[1]).abs() < 1e-10, "{c:?}");
+        assert!((c[0] + c[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn constrained_min_zero_matrix() {
+        let g = vec![0.0; 9];
+        let c = min_quadratic_on_simplex_affine(&g, 3).unwrap();
+        assert!((c.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_symmetric_psd_diag() {
+        let c1 = vec![1.0, 2.0, 3.0];
+        let c2 = vec![0.0, 1.0, -1.0];
+        let g = gram(&[&c1, &c2]);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[1], g[2]);
+        assert!((g[0] - 14.0).abs() < 1e-12);
+        assert!((g[3] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,43 @@
+//! Shared utilities: deterministic RNG, small linear algebra, selection.
+
+pub mod json;
+pub mod linalg;
+pub mod par;
+pub mod rng;
+pub mod select;
+
+/// Soft-thresholding operator `ST(x, u) = sign(x) · max(0, |x| − u)`.
+#[inline(always)]
+pub fn soft_threshold(x: f64, u: f64) -> f64 {
+    if x > u {
+        x - u
+    } else if x < -u {
+        x + u
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::soft_threshold;
+
+    #[test]
+    fn st_basic() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+        assert_eq!(soft_threshold(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn st_shrinks_toward_zero() {
+        for &x in &[-5.0, -0.1, 0.0, 0.1, 5.0] {
+            let y = soft_threshold(x, 0.3);
+            assert!(y.abs() <= x.abs());
+            assert!(x * y >= 0.0, "sign preserved or zero");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal data-parallel primitives on std threads.
+//!
+//! The build is fully offline (no rayon), so we implement the two shapes of
+//! parallelism the solver needs — index-parallel fill and index-parallel
+//! max-reduce — on `std::thread::scope` with static chunking. Work items
+//! are feature columns, which are numerous (p up to ~10⁶) and uniform
+//! enough that static chunking is within noise of work stealing here.
+//!
+//! Thread count: `CELER_NUM_THREADS` env var, else
+//! `std::thread::available_parallelism()`.
+
+use std::sync::OnceLock;
+
+/// Below this many items the serial path is used (thread spawn ≈ 10µs
+/// dwarfs the per-column work on small problems).
+const PAR_THRESHOLD: usize = 8192;
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("CELER_NUM_THREADS") {
+            if let Ok(v) = s.parse::<usize>() {
+                return v.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    })
+}
+
+/// `out[i] = f(i)` for all i, in parallel when `out` is large.
+pub fn par_fill<F>(out: &mut [f64], f: F)
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let n = out.len();
+    let threads = num_threads();
+    if n < PAR_THRESHOLD || threads <= 1 {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (c, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = c * chunk;
+                for (k, o) in slice.iter_mut().enumerate() {
+                    *o = f(base + k);
+                }
+            });
+        }
+    });
+}
+
+/// `max_i f(i)` over `0..n` (−∞ for n = 0), in parallel when n is large.
+pub fn par_max<F>(n: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let threads = num_threads();
+    if n < PAR_THRESHOLD || threads <= 1 {
+        let mut m = f64::NEG_INFINITY;
+        for i in 0..n {
+            m = m.max(f(i));
+        }
+        return m;
+    }
+    let chunk = n.div_ceil(threads);
+    let mut partials = vec![f64::NEG_INFINITY; n.div_ceil(chunk)];
+    std::thread::scope(|s| {
+        for (c, out) in partials.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                let mut m = f64::NEG_INFINITY;
+                for i in lo..hi {
+                    m = m.max(f(i));
+                }
+                *out = m;
+            });
+        }
+    });
+    partials.into_iter().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// `sum_i f(i)` over `0..n`, in parallel when n is large.
+pub fn par_sum<F>(n: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let threads = num_threads();
+    if n < PAR_THRESHOLD || threads <= 1 {
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += f(i);
+        }
+        return acc;
+    }
+    let chunk = n.div_ceil(threads);
+    let mut partials = vec![0.0; n.div_ceil(chunk)];
+    std::thread::scope(|s| {
+        for (c, out) in partials.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(n);
+                let mut acc = 0.0;
+                for i in lo..hi {
+                    acc += f(i);
+                }
+                *out = acc;
+            });
+        }
+    });
+    partials.into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_small_and_large() {
+        for n in [0usize, 3, 100, PAR_THRESHOLD + 17] {
+            let mut out = vec![0.0; n];
+            par_fill(&mut out, |i| (i * 2) as f64);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, (i * 2) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn max_matches_serial() {
+        let n = PAR_THRESHOLD + 1234;
+        let f = |i: usize| ((i * 7919) % 104729) as f64;
+        let serial = (0..n).map(f).fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(par_max(n, f), serial);
+        assert_eq!(par_max(0, f), f64::NEG_INFINITY);
+        assert_eq!(par_max(5, |i| i as f64), 4.0);
+    }
+
+    #[test]
+    fn sum_matches_serial() {
+        let n = PAR_THRESHOLD + 55;
+        let serial: f64 = (0..n).map(|i| i as f64).sum();
+        assert!((par_sum(n, |i| i as f64) - serial).abs() < 1e-6);
+        assert_eq!(par_sum(0, |i| i as f64), 0.0);
+    }
+
+    #[test]
+    fn threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

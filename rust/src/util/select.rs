@@ -1,0 +1,178 @@
+//! Selection utilities for working-set construction.
+//!
+//! CELER ranks features by the Gap-Safe score `d_j(θ)` and keeps the `p_t`
+//! smallest. Doing a full O(p log p) sort every outer iteration is wasteful
+//! for p ~ 10⁶, so we use an in-place quickselect (Hoare partition with
+//! median-of-three pivots) that runs in expected O(p).
+
+/// Return the indices of the `k` smallest values of `scores`
+/// (ties broken arbitrarily). The returned indices are NOT sorted by score.
+pub fn k_smallest_indices(scores: &[f64], k: usize) -> Vec<usize> {
+    let p = scores.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= p {
+        return (0..p).collect();
+    }
+    let mut idx: Vec<usize> = (0..p).collect();
+    quickselect(&mut idx, scores, k);
+    idx.truncate(k);
+    idx
+}
+
+/// Partially order `idx` so that the first `k` entries hold the k smallest
+/// scores.
+fn quickselect(idx: &mut [usize], scores: &[f64], k: usize) {
+    let mut lo = 0usize;
+    let mut hi = idx.len();
+    let mut k = k;
+    while hi - lo > 1 {
+        if k == 0 {
+            return;
+        }
+        let pivot = median_of_three(idx, scores, lo, hi);
+        let mid = partition(idx, scores, lo, hi, pivot);
+        // All elements in [lo, mid) are < pivot-ish; decide which side holds k.
+        let left = mid - lo;
+        if k < left {
+            hi = mid;
+        } else if k > left {
+            lo = mid;
+            k -= left;
+        } else {
+            return;
+        }
+    }
+}
+
+#[inline]
+fn median_of_three(idx: &[usize], scores: &[f64], lo: usize, hi: usize) -> f64 {
+    let a = scores[idx[lo]];
+    let b = scores[idx[lo + (hi - lo) / 2]];
+    let c = scores[idx[hi - 1]];
+    // median of a, b, c
+    if (a <= b) == (b <= c) {
+        b
+    } else if (b <= a) == (a <= c) {
+        a
+    } else {
+        c
+    }
+}
+
+/// Hoare-style partition around value `pivot`; returns split point `mid`
+/// such that scores[idx[lo..mid]] <= pivot <= scores[idx[mid..hi]] with
+/// guaranteed progress (mid strictly inside (lo, hi)).
+fn partition(idx: &mut [usize], scores: &[f64], lo: usize, hi: usize, pivot: f64) -> usize {
+    let mut i = lo;
+    let mut j = hi - 1;
+    loop {
+        while scores[idx[i]] < pivot {
+            i += 1;
+        }
+        while scores[idx[j]] > pivot {
+            j -= 1;
+        }
+        if i >= j {
+            // ensure progress: split must be in (lo, hi)
+            let mid = j + 1;
+            return mid.clamp(lo + 1, hi - 1);
+        }
+        idx.swap(i, j);
+        i += 1;
+        if j == 0 {
+            return lo + 1;
+        }
+        j -= 1;
+    }
+}
+
+/// Argsort of `scores` ascending (stable). Full sort — only used on small
+/// arrays (tests, reports).
+pub fn argsort(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_k_smallest(scores: &[f64], k: usize) {
+        let got = k_smallest_indices(scores, k);
+        assert_eq!(got.len(), k.min(scores.len()));
+        let mut sorted = scores.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if k == 0 || k >= scores.len() {
+            return;
+        }
+        let thresh = sorted[k - 1];
+        // every selected value must be <= the k-th smallest (ties allowed)
+        for &i in &got {
+            assert!(
+                scores[i] <= thresh + 1e-15,
+                "selected {} > threshold {}",
+                scores[i],
+                thresh
+            );
+        }
+        // and no duplicates
+        let mut g = got.clone();
+        g.sort();
+        g.dedup();
+        assert_eq!(g.len(), k);
+    }
+
+    #[test]
+    fn small_cases() {
+        check_k_smallest(&[3.0, 1.0, 2.0], 0);
+        check_k_smallest(&[3.0, 1.0, 2.0], 1);
+        check_k_smallest(&[3.0, 1.0, 2.0], 2);
+        check_k_smallest(&[3.0, 1.0, 2.0], 3);
+        check_k_smallest(&[3.0, 1.0, 2.0], 5);
+        check_k_smallest(&[1.0], 1);
+    }
+
+    #[test]
+    fn with_ties() {
+        let scores = vec![1.0, 1.0, 1.0, 0.5, 0.5, 2.0];
+        check_k_smallest(&scores, 2);
+        check_k_smallest(&scores, 3);
+        check_k_smallest(&scores, 4);
+    }
+
+    #[test]
+    fn random_stress() {
+        let mut rng = Rng::new(77);
+        for trial in 0..50 {
+            let n = 1 + rng.below(500);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let k = rng.below(n + 1);
+            check_k_smallest(&scores, k);
+            let _ = trial;
+        }
+    }
+
+    #[test]
+    fn all_equal() {
+        let scores = vec![2.5; 100];
+        check_k_smallest(&scores, 37);
+    }
+
+    #[test]
+    fn sorted_and_reversed_inputs() {
+        let asc: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let desc: Vec<f64> = (0..200).map(|i| -(i as f64)).collect();
+        check_k_smallest(&asc, 50);
+        check_k_smallest(&desc, 50);
+    }
+
+    #[test]
+    fn argsort_orders() {
+        let s = vec![3.0, -1.0, 2.0];
+        assert_eq!(argsort(&s), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Working-set construction policies (paper §4 and Appendix A.2).
+//!
+//! Features are ranked by the Gap-Safe score `d_j(θ)` (smaller = more
+//! important) and the `p_t` smallest form the working set `W_t`.
+//! Growth policies:
+//!
+//! - **safe** (monotone doubling): `p_t = min(2·p_{t-1}, p)`, with
+//!   `W_{t-1} ⊆ W_t` forced by setting `d_j = −1` for j ∈ W_{t-1};
+//! - **prune**: `p_t = min(2·|S_{β^{t-1}}|, p)`, with only the current
+//!   support forced in (`d_j = −1` for j ∈ S_{β^{t-1}}`) — the WS can
+//!   shrink if the support is small;
+//! - plus the ablation policies of Appendix A.2: geometric growth with
+//!   factor γ and linear growth `p_t = min(γ + |S|, p)`.
+
+use crate::util::select::k_smallest_indices;
+
+/// Default initial working-set size (paper: p₁ = 100).
+pub const DEFAULT_P1: usize = 100;
+
+/// How the working-set size evolves between outer iterations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GrowthPolicy {
+    /// `p_t = min(γ · base, p)` where base is |S| (prune) or p_{t-1} (safe).
+    Geometric { factor: usize },
+    /// `p_t = min(γ + |S_{β^{t-1}}|, p)` (Appendix A.2, Eq. 16).
+    Linear { increment: usize },
+}
+
+/// Full working-set policy.
+#[derive(Debug, Clone, Copy)]
+pub struct WsPolicy {
+    /// Initial size p₁ (used when no warm start is given).
+    pub p1: usize,
+    pub growth: GrowthPolicy,
+    /// Pruning variant (Eq. 14): base the size on the support, allow
+    /// shrinking. When false, the safe monotone variant is used.
+    pub prune: bool,
+}
+
+impl Default for WsPolicy {
+    fn default() -> Self {
+        WsPolicy { p1: DEFAULT_P1, growth: GrowthPolicy::Geometric { factor: 2 }, prune: true }
+    }
+}
+
+impl WsPolicy {
+    /// Paper's safe (monotone, non-pruning) variant.
+    pub fn safe() -> Self {
+        WsPolicy { prune: false, ..Default::default() }
+    }
+
+    /// Next working-set size.
+    ///
+    /// `t` is the 1-based outer-iteration index; `prev_size` = |W_{t-1}|,
+    /// `support_size` = |S_{β^{t-1}}|, `p` the feature count.
+    pub fn next_size(&self, t: usize, prev_size: usize, support_size: usize, p: usize) -> usize {
+        if t <= 1 {
+            return self.p1.min(p).max(1);
+        }
+        let size = match (self.growth, self.prune) {
+            (GrowthPolicy::Geometric { factor }, true) => factor * support_size.max(1),
+            (GrowthPolicy::Geometric { factor }, false) => factor * prev_size.max(1),
+            (GrowthPolicy::Linear { increment }, _) => increment + support_size,
+        };
+        size.clamp(1, p)
+    }
+}
+
+/// Build the working set: the `pt` features with smallest scores, with the
+/// features in `forced` guaranteed membership (their score is overridden
+/// to −1, matching Algorithm 4's monotonicity trick).
+///
+/// `scores` is modified in place (forced entries set to −1.0). The result
+/// is sorted in increasing index order.
+pub fn build_working_set(scores: &mut [f64], forced: &[usize], pt: usize) -> Vec<usize> {
+    for &j in forced {
+        scores[j] = -1.0;
+    }
+    let mut ws = k_smallest_indices(scores, pt.min(scores.len()));
+    ws.sort_unstable();
+    ws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_iteration_uses_p1() {
+        let pol = WsPolicy::default();
+        assert_eq!(pol.next_size(1, 0, 0, 1000), 100);
+        assert_eq!(pol.next_size(1, 0, 0, 30), 30, "clamped to p");
+    }
+
+    #[test]
+    fn prune_follows_support() {
+        let pol = WsPolicy::default(); // geometric x2, prune
+        assert_eq!(pol.next_size(2, 400, 25, 1000), 50);
+        // support can shrink the WS (the pruning point of Fig. 9)
+        assert_eq!(pol.next_size(3, 50, 5, 1000), 10);
+        // and grows quickly when support is large
+        assert_eq!(pol.next_size(4, 10, 600, 1000), 1000);
+    }
+
+    #[test]
+    fn safe_doubles_monotonically() {
+        let pol = WsPolicy::safe();
+        assert_eq!(pol.next_size(2, 100, 3, 10_000), 200);
+        assert_eq!(pol.next_size(3, 200, 3, 10_000), 400);
+        assert_eq!(pol.next_size(9, 8000, 3, 10_000), 10_000);
+    }
+
+    #[test]
+    fn linear_policy() {
+        let pol = WsPolicy {
+            p1: 10,
+            growth: GrowthPolicy::Linear { increment: 50 },
+            prune: false,
+        };
+        assert_eq!(pol.next_size(2, 10, 7, 1000), 57);
+    }
+
+    #[test]
+    fn geometric_factor_4() {
+        let pol = WsPolicy {
+            p1: 10,
+            growth: GrowthPolicy::Geometric { factor: 4 },
+            prune: true,
+        };
+        assert_eq!(pol.next_size(2, 10, 30, 1000), 120);
+    }
+
+    #[test]
+    fn empty_support_still_progresses() {
+        let pol = WsPolicy::default();
+        // support empty (all-zero beta): size must stay >= 1 so the solver
+        // cannot stall
+        assert!(pol.next_size(2, 100, 0, 1000) >= 1);
+    }
+
+    #[test]
+    fn build_ws_forces_members_and_sorts() {
+        let mut scores = vec![0.9, 0.1, 0.5, 0.2, 0.8];
+        let ws = build_working_set(&mut scores, &[4], 3);
+        assert_eq!(ws.len(), 3);
+        assert!(ws.contains(&4), "forced member included");
+        assert!(ws.contains(&1), "best score included");
+        assert!(ws.windows(2).all(|w| w[0] < w[1]), "sorted");
+    }
+
+    #[test]
+    fn build_ws_caps_at_p() {
+        let mut scores = vec![0.3, 0.1];
+        let ws = build_working_set(&mut scores, &[], 10);
+        assert_eq!(ws, vec![0, 1]);
+    }
+}

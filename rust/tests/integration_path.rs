@@ -1,0 +1,120 @@
+//! λ-path integration: warm starts, grids, and cross-solver agreement
+//! along entire paths (the §6.3 setting).
+
+use celer::coordinator::{self, PathJob};
+use celer::data::synth;
+use celer::lasso::{dual, primal};
+use celer::solvers::path::{lambda_grid, run_path, PathSolver};
+
+#[test]
+fn warm_path_matches_cold_solves() {
+    let ds = synth::leukemia_mini(120);
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lmax * 0.9, 0.05, 6);
+    let solver = PathSolver::by_name("celer-prune", 1e-9).unwrap();
+    let path = run_path(&ds.x, &ds.y, &grid, &solver, true);
+    assert!(path.all_converged());
+    for (i, &lambda) in grid.iter().enumerate() {
+        let cold = celer::solvers::cd::cd_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &celer::solvers::cd::CdConfig { tol: 1e-11, ..Default::default() },
+        );
+        let p_cold = primal::primal(&ds.x, &ds.y, &cold.beta, lambda);
+        let p_path =
+            primal::primal(&ds.x, &ds.y, path.steps[i].beta.as_ref().unwrap(), lambda);
+        assert!(
+            (p_path - p_cold).abs() < 1e-7,
+            "λ#{i}: warm {p_path} vs cold {p_cold}"
+        );
+    }
+}
+
+#[test]
+fn all_path_solvers_reach_tolerance_on_sparse() {
+    let ds = synth::finance_mini(121);
+    let grid = coordinator::standard_grid(&ds, 50.0, 8);
+    for name in ["celer-prune", "celer-safe", "blitz", "gapsafe-cd-accel", "gapsafe-cd-res"] {
+        let solver = PathSolver::by_name(name, 1e-6).unwrap();
+        let res = run_path(&ds.x, &ds.y, &grid, &solver, false);
+        assert!(res.all_converged(), "{name} failed on the sparse path");
+        for s in &res.steps {
+            assert!(s.gap <= 1e-6, "{name}: gap {} at λ={}", s.gap, s.lambda);
+        }
+    }
+}
+
+#[test]
+fn glmnet_path_runs_and_support_grows() {
+    let ds = synth::leukemia_mini(122);
+    let grid = coordinator::standard_grid(&ds, 100.0, 10);
+    let solver = PathSolver::by_name("glmnet", 1e-8).unwrap();
+    let res = run_path(&ds.x, &ds.y, &grid, &solver, false);
+    let first = res.steps.first().unwrap().support_size;
+    let last = res.steps.last().unwrap().support_size;
+    assert!(last > first);
+}
+
+#[test]
+fn coordinator_parallel_equals_serial() {
+    let ds = synth::leukemia_mini(123);
+    let grid = coordinator::standard_grid(&ds, 20.0, 5);
+    let jobs: Vec<PathJob> = ["celer-prune", "celer-safe", "blitz", "cd-vanilla"]
+        .iter()
+        .map(|s| PathJob {
+            solver_name: s.to_string(),
+            tol: 1e-7,
+            grid: grid.clone(),
+            store_betas: true,
+        })
+        .collect();
+    let par = coordinator::run_path_jobs(&ds, jobs.clone(), 4).unwrap();
+    let ser = coordinator::run_path_jobs(&ds, jobs, 1).unwrap();
+    for (a, b) in par.iter().zip(&ser) {
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.beta, sb.beta, "{} must be order-independent", a.solver);
+        }
+    }
+}
+
+#[test]
+fn warm_start_reduces_total_epochs() {
+    // path vs repeated cold solves: warm starting must save inner epochs
+    let ds = synth::leukemia_mini(124);
+    let grid = coordinator::standard_grid(&ds, 50.0, 8);
+    let solver = PathSolver::by_name("celer-prune", 1e-8).unwrap();
+    let warm = run_path(&ds.x, &ds.y, &grid, &solver, false);
+    let warm_epochs: usize = warm.steps.iter().map(|s| s.epochs).sum();
+    let mut cold_epochs = 0;
+    for &lambda in &grid {
+        let out = celer::solvers::celer::celer_solve_on(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &celer::solvers::celer::CelerConfig { tol: 1e-8, ..Default::default() },
+        );
+        cold_epochs += out.result.epochs;
+    }
+    // warm starting can tie on easy grids (both converge at the first
+    // gap check per λ) but must never lose
+    assert!(
+        warm_epochs <= cold_epochs,
+        "warm {warm_epochs} must not exceed cold {cold_epochs}"
+    );
+}
+
+#[test]
+fn grid_endpoints_behave() {
+    let ds = synth::leukemia_mini(125);
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lmax, 0.01, 5);
+    let solver = PathSolver::by_name("celer-prune", 1e-8).unwrap();
+    let res = run_path(&ds.x, &ds.y, &grid, &solver, false);
+    // at λ = λ_max the solution is empty
+    assert_eq!(res.steps[0].support_size, 0);
+    // at λ_max/100 it is substantially populated
+    assert!(res.steps[4].support_size > 5);
+}

@@ -1,0 +1,139 @@
+//! Runtime integration: the XLA/PJRT engine (AOT Pallas/JAX artifacts)
+//! must agree with the native Rust engine operation by operation and on
+//! a full Algorithm-1 solve. Requires `make artifacts` (small profile).
+
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::runtime::{engine_cd_solve, default_artifacts_dir, Engine, NativeEngine, XlaEngine};
+
+fn load_xla() -> XlaEngine {
+    XlaEngine::load(&default_artifacts_dir())
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+fn mini_dense() -> (Vec<f64>, usize, usize, Vec<f64>, f64) {
+    let ds = synth::leukemia_mini(0);
+    let (n, p) = (ds.x.n(), ds.x.p());
+    let mut x_cm = Vec::new();
+    ds.x.gather_dense(&(0..p).collect::<Vec<_>>(), &mut x_cm);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 10.0;
+    (x_cm, n, p, ds.y.clone(), lambda)
+}
+
+#[test]
+fn inner_solve_engines_agree() {
+    let (x_cm, n, p, y, lambda) = mini_dense();
+    // use the first 64-column block (matches the w=64 bucket exactly)
+    let w = 64;
+    let block = &x_cm[..n * w];
+    let beta0 = vec![0.0; w];
+    let mut native = NativeEngine;
+    let mut xla = load_xla();
+    let (bn, rn) = native.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
+    let (bx, rx) = xla.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
+    for j in 0..w {
+        assert!((bn[j] - bx[j]).abs() < 1e-12, "beta[{j}]: {} vs {}", bn[j], bx[j]);
+    }
+    for i in 0..n {
+        assert!((rn[i] - rx[i]).abs() < 1e-12);
+    }
+    let _ = p;
+}
+
+#[test]
+fn inner_solve_bucket_padding_is_invariant() {
+    // solving a 50-column problem through the 64-bucket must equal the
+    // native engine on the unpadded 50 columns
+    let (x_cm, n, _p, y, lambda) = mini_dense();
+    let w = 50;
+    let block = &x_cm[..n * w];
+    let beta0 = vec![0.0; w];
+    let mut native = NativeEngine;
+    let mut xla = load_xla();
+    let (bn, _) = native.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
+    let (bx, _) = xla.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
+    assert_eq!(bx.len(), w, "padding must be stripped");
+    for j in 0..w {
+        assert!((bn[j] - bx[j]).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn gap_scores_engines_agree() {
+    let (x_cm, n, p, y, lambda) = mini_dense();
+    let mut native = NativeEngine;
+    let mut xla = load_xla();
+    let beta = vec![0.0; p];
+    let theta: Vec<f64> = y.iter().map(|v| v * 0.1).collect();
+    let (pn, dn, gn, sn) = native.gap_scores(&x_cm, n, p, &y, &beta, &theta, lambda).unwrap();
+    let (px, dx, gx, sx) = xla.gap_scores(&x_cm, n, p, &y, &beta, &theta, lambda).unwrap();
+    assert!((pn - px).abs() < 1e-12);
+    assert!((dn - dx).abs() < 1e-12);
+    assert!((gn - gx).abs() < 1e-12);
+    assert_eq!(sx.len(), p);
+    for j in 0..p {
+        assert!((sn[j] - sx[j]).abs() < 1e-10, "score[{j}]");
+    }
+}
+
+#[test]
+fn theta_res_engines_agree() {
+    let (x_cm, n, p, y, lambda) = mini_dense();
+    let mut native = NativeEngine;
+    let mut xla = load_xla();
+    let (tn, ctn) = native.theta_res(&x_cm, n, p, &y, lambda).unwrap();
+    let (tx, ctx) = xla.theta_res(&x_cm, n, p, &y, lambda).unwrap();
+    for i in 0..n {
+        assert!((tn[i] - tx[i]).abs() < 1e-12);
+    }
+    for j in 0..p {
+        assert!((ctn[j] - ctx[j]).abs() < 1e-12);
+    }
+    // feasibility through the xla path
+    assert!(ctx.iter().all(|v| v.abs() <= 1.0 + 1e-12));
+}
+
+#[test]
+fn extrapolate_engines_agree() {
+    let n = 48;
+    let k = 5;
+    let mut rng = celer::util::rng::Rng::new(9);
+    let rbuf: Vec<f64> = (0..(k + 1) * n).map(|_| rng.normal()).collect();
+    let mut native = NativeEngine;
+    let mut xla = load_xla();
+    let (rn, pn) = native.extrapolate(&rbuf, k, n).unwrap();
+    let (rx, px) = xla.extrapolate(&rbuf, k, n).unwrap();
+    assert!((pn - px).abs() < 1e-9 * pn.abs().max(1.0), "min pivots: {pn} vs {px}");
+    for i in 0..n {
+        assert!((rn[i] - rx[i]).abs() < 1e-9, "r_accel[{i}]: {} vs {}", rn[i], rx[i]);
+    }
+}
+
+#[test]
+fn full_solve_engines_agree() {
+    let (x_cm, n, p, y, lambda) = mini_dense();
+    let mut native = NativeEngine;
+    let mut xla = load_xla();
+    let a = engine_cd_solve(&mut native, &x_cm, n, p, &y, lambda, 1e-8, 500, 5).unwrap();
+    let b = engine_cd_solve(&mut xla, &x_cm, n, p, &y, lambda, 1e-8, 500, 5).unwrap();
+    assert!(a.converged && b.converged);
+    assert_eq!(a.blocks, b.blocks, "identical schedule");
+    let max_diff = a
+        .beta
+        .iter()
+        .zip(&b.beta)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-8, "max |Δβ| = {max_diff}");
+}
+
+#[test]
+fn missing_bucket_reports_useful_error() {
+    let mut xla = load_xla();
+    let err = xla
+        .inner_solve(&vec![0.0; 10 * 10_000], 10, 10_000, &vec![0.0; 10], &vec![0.0; 10_000], 1.0)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no inner_solve artifact"), "{msg}");
+}

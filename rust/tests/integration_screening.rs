@@ -1,0 +1,138 @@
+//! Gap Safe screening integration: safety, convergence of the screened
+//! set, and the θ_accel-screens-faster mechanism behind Figure 3.
+
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::lasso::{dual, primal};
+use celer::solvers::cd::{cd_solve, CdConfig};
+
+#[test]
+fn screening_preserves_the_optimum() {
+    let ds = synth::leukemia_mini(110);
+    for ratio in [0.5, 0.2, 0.08] {
+        let lambda = dual::lambda_max(&ds.x, &ds.y) * ratio;
+        let screen = cd_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &CdConfig { tol: 1e-9, screen: true, ..Default::default() },
+        );
+        let plain = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol: 1e-9, ..Default::default() });
+        let p = |b: &[f64]| primal::primal(&ds.x, &ds.y, b, lambda);
+        assert!(
+            (p(&screen.beta) - p(&plain.beta)).abs() < 1e-7,
+            "ratio {ratio}: {} vs {}",
+            p(&screen.beta),
+            p(&plain.beta)
+        );
+    }
+}
+
+#[test]
+fn screening_is_safe_vs_high_precision_support() {
+    // every feature the dynamic rule screened must be zero in a
+    // machine-precision solution
+    let ds = synth::leukemia_mini(111);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 5.0;
+    let reference = cd_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &CdConfig { tol: 1e-13, max_epochs: 200_000, ..Default::default() },
+    );
+    assert!(reference.converged);
+    // re-run with screening, capturing the screened set implicitly: any
+    // feature with β=0 in the screened run AND nonzero in the reference
+    // would indicate a wrongly-discarded feature IF the objective differs.
+    let screened_run = cd_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &CdConfig { tol: 1e-12, screen: true, ..Default::default() },
+    );
+    for j in 0..ds.x.p() {
+        if reference.beta[j].abs() > 1e-7 {
+            assert!(
+                screened_run.beta[j].abs() > 0.0,
+                "feature {j} (β̂={}) was wrongly screened",
+                reference.beta[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn screening_converges_toward_support_size() {
+    let ds = synth::leukemia_mini(112);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 4.0;
+    let out = cd_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &CdConfig { tol: 1e-12, screen: true, trace: true, ..Default::default() },
+    );
+    assert!(out.converged);
+    let screened = out.trace.last().unwrap().n_screened;
+    let support = out.beta.iter().filter(|&&b| b != 0.0).count();
+    let active = ds.x.p() - screened;
+    assert!(
+        active <= support + 25,
+        "active {active} should approach support {support}"
+    );
+}
+
+#[test]
+fn accel_screening_not_slower() {
+    let ds = synth::leukemia_mini(113);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 5.0;
+    let base = CdConfig { tol: 1e-10, screen: true, trace: true, ..Default::default() };
+    let res = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { extrapolate: false, ..base.clone() });
+    let acc = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { extrapolate: true, ..base });
+    assert!(
+        acc.epochs <= res.epochs,
+        "θ_accel should converge in no more epochs: {} vs {}",
+        acc.epochs,
+        res.epochs
+    );
+}
+
+#[test]
+fn screening_counts_monotone() {
+    let ds = synth::leukemia_mini(114);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 6.0;
+    let out = cd_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &CdConfig { tol: 1e-11, screen: true, trace: true, ..Default::default() },
+    );
+    let counts: Vec<usize> = out.trace.iter().map(|c| c.n_screened).collect();
+    for w in counts.windows(2) {
+        assert!(w[1] >= w[0], "screened set only grows: {counts:?}");
+    }
+}
+
+#[test]
+fn screening_on_sparse_data() {
+    let ds = synth::finance_mini(115);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 5.0;
+    let plain = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol: 1e-9, ..Default::default() });
+    let screen = cd_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &CdConfig { tol: 1e-9, screen: true, trace: true, ..Default::default() },
+    );
+    let p = |b: &[f64]| primal::primal(&ds.x, &ds.y, b, lambda);
+    assert!((p(&plain.beta) - p(&screen.beta)).abs() < 1e-7);
+    assert!(
+        screen.trace.last().unwrap().n_screened > ds.x.p() / 2,
+        "most of the sparse problem should be screened at λ_max/5"
+    );
+}

@@ -1,0 +1,174 @@
+//! Cross-solver integration: every solver must find the same optimum on
+//! the same problem, across dense/sparse data and a range of λ.
+
+use celer::data::design::DesignOps;
+use celer::data::synth;
+use celer::lasso::{dual, kkt, primal};
+use celer::solvers::blitz::{blitz_solve, BlitzConfig};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::celer::{celer_solve_on, CelerConfig};
+use celer::solvers::glmnet::{glmnet_solve, GlmnetConfig};
+use celer::solvers::ista::{ista_solve, IstaConfig};
+
+fn objectives_on(ds: &synth::SynthDataset, ratio: f64, tol: f64) -> Vec<(String, f64)> {
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let lambda = lmax * ratio;
+    let mut out = Vec::new();
+
+    let celer = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig { tol, ..Default::default() });
+    assert!(celer.result.converged, "celer gap {}", celer.gap());
+    out.push(("celer-prune".into(), primal::primal(&ds.x, &ds.y, &celer.result.beta, lambda)));
+
+    let safe = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig { tol, ..CelerConfig::safe() });
+    assert!(safe.result.converged, "celer-safe gap {}", safe.gap());
+    out.push(("celer-safe".into(), primal::primal(&ds.x, &ds.y, &safe.result.beta, lambda)));
+
+    let blitz = blitz_solve(&ds.x, &ds.y, lambda, None, &BlitzConfig { tol, ..Default::default() });
+    assert!(blitz.result.converged, "blitz gap {}", blitz.result.gap);
+    out.push(("blitz".into(), primal::primal(&ds.x, &ds.y, &blitz.result.beta, lambda)));
+
+    let cd = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol, ..CdConfig::vanilla() });
+    assert!(cd.converged);
+    out.push(("cd".into(), primal::primal(&ds.x, &ds.y, &cd.beta, lambda)));
+
+    let screen = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol, screen: true, ..Default::default() });
+    assert!(screen.converged);
+    out.push(("gapsafe-cd".into(), primal::primal(&ds.x, &ds.y, &screen.beta, lambda)));
+
+    let glm = glmnet_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        lmax,
+        None,
+        &GlmnetConfig { tol: tol / 100.0, ..Default::default() },
+    );
+    out.push(("glmnet".into(), primal::primal(&ds.x, &ds.y, &glm.beta, lambda)));
+
+    out
+}
+
+#[test]
+fn all_solvers_agree_dense() {
+    let ds = synth::leukemia_mini(100);
+    for ratio in [0.5, 0.2, 0.05] {
+        let objs = objectives_on(&ds, ratio, 1e-9);
+        let best = objs.iter().map(|(_, p)| *p).fold(f64::INFINITY, f64::min);
+        for (name, p) in &objs {
+            assert!(p - best < 1e-6, "{name} at ratio {ratio}: {p} vs best {best}");
+        }
+    }
+}
+
+#[test]
+fn all_solvers_agree_sparse() {
+    let ds = synth::finance_mini(101);
+    for ratio in [0.3, 0.1] {
+        let objs = objectives_on(&ds, ratio, 1e-8);
+        let best = objs.iter().map(|(_, p)| *p).fold(f64::INFINITY, f64::min);
+        for (name, p) in &objs {
+            assert!(p - best < 1e-5, "{name} at ratio {ratio}: {p} vs best {best}");
+        }
+    }
+}
+
+#[test]
+fn ista_fista_cd_same_solution() {
+    let ds = synth::leukemia_mini(102);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 8.0;
+    let cd = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol: 1e-10, ..Default::default() });
+    let ista = ista_solve(&ds.x, &ds.y, lambda, None, &IstaConfig { tol: 1e-10, ..Default::default() });
+    let fista = ista_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &IstaConfig { tol: 1e-10, fista: true, ..Default::default() },
+    );
+    let p = |b: &[f64]| primal::primal(&ds.x, &ds.y, b, lambda);
+    assert!((p(&cd.beta) - p(&ista.beta)).abs() < 1e-8);
+    assert!((p(&cd.beta) - p(&fista.beta)).abs() < 1e-8);
+}
+
+#[test]
+fn solutions_satisfy_kkt_and_duality() {
+    let ds = synth::finance_mini(103);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 6.0;
+    let out = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig { tol: 1e-10, ..Default::default() });
+    assert!(out.result.converged);
+    let viol = kkt::max_violation(&ds.x, &out.result.r, &out.result.beta, lambda);
+    assert!(viol < 1e-4, "KKT violation {viol}");
+    assert!(dual::is_feasible(&ds.x, &out.result.theta, 1e-9));
+    let gap = primal::primal(&ds.x, &ds.y, &out.result.beta, lambda)
+        - dual::dual_objective(&ds.y, &out.result.theta, lambda);
+    assert!(gap <= 1e-9, "gap {gap}");
+    assert!(gap >= -1e-12, "weak duality");
+}
+
+#[test]
+fn celer_beats_vanilla_cd_wall_clock() {
+    // the paper's core speed claim on the paper-scale dense dataset
+    let ds = synth::leukemia_sim(104);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 20.0;
+    let tol = 1e-8;
+    let t0 = std::time::Instant::now();
+    let celer = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig { tol, ..Default::default() });
+    let t_celer = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let cd = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol, ..CdConfig::vanilla() });
+    let t_cd = t0.elapsed().as_secs_f64();
+    assert!(celer.result.converged && cd.converged);
+    assert!(
+        t_celer < t_cd,
+        "celer ({t_celer:.3}s) must beat vanilla CD ({t_cd:.3}s) at λ_max/20 on p=7129"
+    );
+}
+
+#[test]
+fn tiny_problems_and_lambda_max_edge() {
+    let x = celer::data::DesignMatrix::Dense(celer::data::DenseMatrix::from_col_major(
+        3,
+        1,
+        vec![1.0, 0.0, 0.0],
+    ));
+    let y = vec![2.0, 1.0, 0.0];
+    let lmax = dual::lambda_max(&x, &y);
+    assert_eq!(lmax, 2.0);
+    let out = celer_solve_on(&x, &y, 1.0, None, &CelerConfig { tol: 1e-12, ..Default::default() });
+    assert!((out.result.beta[0] - 1.0).abs() < 1e-10, "ST(2,1)=1");
+    let out2 = celer_solve_on(&x, &y, 2.5, None, &CelerConfig::default());
+    assert_eq!(out2.support_size(), 0);
+}
+
+#[test]
+fn blitz_outer_gaps_monotone() {
+    let ds = synth::leukemia_mini(105);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 15.0;
+    let out = blitz_solve(&ds.x, &ds.y, lambda, None, &BlitzConfig { tol: 1e-8, ..Default::default() });
+    let gaps: Vec<f64> = out.iterations.iter().map(|i| i.gap).collect();
+    for w in gaps.windows(2) {
+        assert!(w[1] <= w[0] * (1.0 + 1e-9), "blitz outer gaps non-increasing: {gaps:?}");
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let ds = synth::finance_mini(107);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 7.0;
+    let a = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig::default());
+    let b = celer_solve_on(&ds.x, &ds.y, lambda, None, &CelerConfig::default());
+    assert_eq!(a.result.beta, b.result.beta);
+    assert_eq!(a.result.epochs, b.result.epochs);
+}
+
+#[test]
+fn glmnet_false_positive_mechanism() {
+    // Fig. 5 mechanism at a single λ: at loose primal-decrease tolerance,
+    // GLMNET's support is a superset of (or equal to) the tight one.
+    let ds = synth::leukemia_mini(108);
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let lambda = lmax / 20.0;
+    let loose = glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &GlmnetConfig { tol: 1e-3, ..Default::default() });
+    let tight = glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &GlmnetConfig { tol: 1e-13, ..Default::default() });
+    assert!(loose.support_size() >= tight.support_size());
+}

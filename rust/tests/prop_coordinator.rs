@@ -1,0 +1,160 @@
+//! Property tests on the coordinator substrate: bucket routing, padding
+//! invariance, scheduler determinism, JSON/manifest round-trips.
+
+use celer::coordinator::scheduler::run_parallel;
+use celer::runtime::artifacts::ArtifactRegistry;
+use celer::runtime::{Engine, NativeEngine};
+use celer::util::json::{parse, Json};
+use celer::util::rng::Rng;
+use std::path::Path;
+
+#[test]
+fn prop_padding_invariance_native() {
+    // inner_solve on (n, w) must equal inner_solve on the zero-padded
+    // (n, w + pad) problem restricted to the first w coordinates — the
+    // exact property the shape-bucket router relies on.
+    let mut rng = Rng::new(300);
+    for trial in 0..20 {
+        let n = 4 + rng.below(24);
+        let w = 1 + rng.below(20);
+        let pad = rng.below(16);
+        let mut x_cm = vec![0.0; n * w];
+        for v in x_cm.iter_mut() {
+            *v = rng.normal();
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let beta0 = vec![0.0; w];
+        let lambda = 0.3;
+        let mut eng = NativeEngine;
+        let (b_plain, r_plain) = eng.inner_solve(&x_cm, n, w, &y, &beta0, lambda).unwrap();
+        let mut x_pad = x_cm.clone();
+        x_pad.extend(std::iter::repeat(0.0).take(pad * n));
+        let beta_pad = vec![0.0; w + pad];
+        let (b_pad, r_pad) = eng.inner_solve(&x_pad, n, w + pad, &y, &beta_pad, lambda).unwrap();
+        for j in 0..w {
+            assert!((b_plain[j] - b_pad[j]).abs() < 1e-14, "trial {trial} j={j}");
+        }
+        for j in w..(w + pad) {
+            assert_eq!(b_pad[j], 0.0, "trial {trial}: padded coef must stay 0");
+        }
+        for i in 0..n {
+            assert!((r_plain[i] - r_pad[i]).abs() < 1e-14);
+        }
+    }
+}
+
+#[test]
+fn prop_scores_padding_gets_sentinel() {
+    let mut rng = Rng::new(301);
+    let n = 12;
+    let w = 6;
+    let pad = 5;
+    let mut x_cm = vec![0.0; n * w];
+    for v in x_cm.iter_mut() {
+        *v = rng.normal();
+    }
+    x_cm.extend(std::iter::repeat(0.0).take(pad * n));
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let beta = vec![0.0; w + pad];
+    let theta: Vec<f64> = y.iter().map(|v| v * 0.05).collect();
+    let mut eng = NativeEngine;
+    let (_, _, _, d) = eng.gap_scores(&x_cm, n, w + pad, &y, &beta, &theta, 0.5).unwrap();
+    for j in w..(w + pad) {
+        assert_eq!(d[j], celer::runtime::EMPTY_COL_SCORE);
+    }
+}
+
+#[test]
+fn prop_scheduler_matches_serial_map() {
+    let mut rng = Rng::new(302);
+    for _ in 0..10 {
+        let n = rng.below(200);
+        let items: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1000).collect();
+        let serial: Vec<u64> = items.iter().map(|&v| v * v + 1).collect();
+        for workers in [1, 2, 3, 8] {
+            let par = run_parallel(items.clone(), workers, |&v| v * v + 1);
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn prop_manifest_bucket_router() {
+    // random manifests: the chosen bucket is always the smallest fitting one
+    let mut rng = Rng::new(303);
+    for trial in 0..20 {
+        let n = 16 + rng.below(3) * 16;
+        let mut widths: Vec<usize> = (0..(1 + rng.below(5))).map(|i| 32 << i).collect();
+        widths.dedup();
+        let arts: Vec<String> = widths
+            .iter()
+            .map(|w| {
+                format!(
+                    r#"{{"op":"inner_solve","file":"a{w}.hlo.txt","n":{n},"w":{w},"f":10}}"#
+                )
+            })
+            .collect();
+        let doc = format!(
+            r#"{{"version":1,"dtype":"f64","artifacts":[{}]}}"#,
+            arts.join(",")
+        );
+        let reg = ArtifactRegistry::from_json(Path::new("/tmp"), &doc).unwrap();
+        for _ in 0..10 {
+            let want = 1 + rng.below(widths.last().unwrap() + 10);
+            let got = reg.inner_solve_bucket(n, want);
+            let expect = widths.iter().copied().filter(|&w| w >= want).min();
+            assert_eq!(got.map(|s| s.w), expect, "trial {trial} want={want}");
+        }
+        // non-matching n never routes
+        assert!(reg.inner_solve_bucket(n + 1, 1).is_none());
+    }
+}
+
+#[test]
+fn prop_json_round_trip_random_documents() {
+    let mut rng = Rng::new(304);
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => {
+                let len = rng.below(4);
+                Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(4);
+                Json::Obj(
+                    (0..len)
+                        .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    for _ in 0..100 {
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let parsed = parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(parsed, doc, "{text}");
+    }
+}
+
+#[test]
+fn prop_engine_solve_deterministic() {
+    let mut rng = Rng::new(305);
+    let n = 20;
+    let p = 30;
+    let mut x_cm = vec![0.0; n * p];
+    for v in x_cm.iter_mut() {
+        *v = rng.normal();
+    }
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut e1 = NativeEngine;
+    let mut e2 = NativeEngine;
+    let a = celer::runtime::engine_cd_solve(&mut e1, &x_cm, n, p, &y, 0.5, 1e-8, 200, 5).unwrap();
+    let b = celer::runtime::engine_cd_solve(&mut e2, &x_cm, n, p, &y, 0.5, 1e-8, 200, 5).unwrap();
+    assert_eq!(a.beta, b.beta);
+    assert_eq!(a.blocks, b.blocks);
+}

@@ -1,0 +1,226 @@
+//! Property-based invariants over randomized problem instances.
+//!
+//! Offline build: no proptest crate — cases are generated with the
+//! in-tree deterministic RNG (`celer::util::rng::Rng`), which gives the
+//! same shrink-free but fully reproducible sweep on every run. Each
+//! property runs dozens of randomized trials across shapes, densities,
+//! seeds and λ ratios.
+
+use celer::data::csc::CscMatrix;
+use celer::data::dense::DenseMatrix;
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::lasso::{dual, primal};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::celer::{celer_solve_on, CelerConfig};
+use celer::util::rng::Rng;
+use celer::util::soft_threshold;
+
+/// Random dense problem with unit-norm columns and standardized y.
+fn random_problem(rng: &mut Rng, n: usize, p: usize, density: f64) -> (DesignMatrix, Vec<f64>) {
+    let mut data = vec![0.0; n * p];
+    for v in data.iter_mut() {
+        if rng.uniform() < density {
+            *v = rng.normal();
+        }
+    }
+    // normalize columns
+    for j in 0..p {
+        let nrm: f64 = data[j * n..(j + 1) * n].iter().map(|v| v * v).sum::<f64>().sqrt();
+        if nrm > 0.0 {
+            for v in data[j * n..(j + 1) * n].iter_mut() {
+                *v /= nrm;
+            }
+        }
+    }
+    let x = if density < 0.6 {
+        DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &data))
+    } else {
+        DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data))
+    };
+    let mut y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let ynorm = celer::util::linalg::norm(&y);
+    for v in y.iter_mut() {
+        *v /= ynorm;
+    }
+    (x, y)
+}
+
+#[test]
+fn prop_gap_nonnegative_for_feasible_duals() {
+    let mut rng = Rng::new(200);
+    for trial in 0..40 {
+        let n = 5 + rng.below(30);
+        let p = 5 + rng.below(60);
+        let density = 0.3 + rng.uniform() * 0.7;
+        let (x, y) = random_problem(&mut rng, n, p, density);
+        let lmax = dual::lambda_max(&x, &y);
+        if lmax <= 0.0 {
+            continue;
+        }
+        let lambda = lmax * (0.05 + 0.9 * rng.uniform());
+        // random beta + rescaled-residual dual point
+        let beta: Vec<f64> = (0..p).map(|_| if rng.uniform() < 0.2 { rng.normal() } else { 0.0 }).collect();
+        let mut r = vec![0.0; n];
+        primal::residual(&x, &y, &beta, &mut r);
+        let theta = dual::rescale_to_feasible(&x, &r, lambda);
+        assert!(dual::is_feasible(&x, &theta, 1e-10), "trial {trial}");
+        let gap = dual::gap_from_residual(&r, &beta, &theta, &y, lambda);
+        assert!(gap >= -1e-10, "trial {trial}: weak duality violated, gap {gap}");
+    }
+}
+
+#[test]
+fn prop_solver_gap_certificate_is_valid() {
+    // the gap reported by the solver upper-bounds true suboptimality
+    let mut rng = Rng::new(201);
+    for trial in 0..12 {
+        let n = 10 + rng.below(30);
+        let p = 20 + rng.below(100);
+        let (x, y) = random_problem(&mut rng, n, p, 1.0);
+        let lmax = dual::lambda_max(&x, &y);
+        let lambda = lmax * (0.1 + 0.4 * rng.uniform());
+        let out = cd_solve(&x, &y, lambda, None, &CdConfig { tol: 1e-7, ..Default::default() });
+        assert!(out.converged, "trial {trial}");
+        // independent recomputation of the certificate
+        let p_val = primal::primal(&x, &y, &out.beta, lambda);
+        let d_val = dual::dual_objective(&y, &out.theta, lambda);
+        assert!(dual::is_feasible(&x, &out.theta, 1e-9));
+        assert!((p_val - d_val) <= 1e-7 * 1.001, "trial {trial}: {}", p_val - d_val);
+    }
+}
+
+#[test]
+fn prop_celer_matches_cd() {
+    let mut rng = Rng::new(202);
+    for trial in 0..10 {
+        let n = 10 + rng.below(40);
+        let p = 30 + rng.below(150);
+        let (x, y) = random_problem(&mut rng, n, p, if trial % 2 == 0 { 1.0 } else { 0.3 });
+        let lmax = dual::lambda_max(&x, &y);
+        let lambda = lmax * (0.05 + 0.3 * rng.uniform());
+        let a = celer_solve_on(&x, &y, lambda, None, &CelerConfig { tol: 1e-9, ..Default::default() });
+        let b = cd_solve(&x, &y, lambda, None, &CdConfig { tol: 1e-10, ..Default::default() });
+        assert!(a.result.converged, "trial {trial}");
+        let pa = primal::primal(&x, &y, &a.result.beta, lambda);
+        let pb = primal::primal(&x, &y, &b.beta, lambda);
+        assert!(pa - pb < 1e-7, "trial {trial}: celer {pa} vs cd {pb}");
+    }
+}
+
+#[test]
+fn prop_screening_never_kills_support() {
+    // restricted to n > p: the objective is strictly convex there, so the
+    // solution (and its support) is unique and the property is well-posed.
+    // With n < p the Lasso can have multiple optima with different
+    // supports, and a screened run may legitimately land on another one.
+    let mut rng = Rng::new(203);
+    for trial in 0..10 {
+        let p = 10 + rng.below(25);
+        let n = p + 5 + rng.below(30);
+        let (x, y) = random_problem(&mut rng, n, p, 1.0);
+        let lmax = dual::lambda_max(&x, &y);
+        let lambda = lmax * (0.1 + 0.5 * rng.uniform());
+        let tight = cd_solve(&x, &y, lambda, None, &CdConfig { tol: 1e-13, max_epochs: 100_000, ..Default::default() });
+        let screened = cd_solve(&x, &y, lambda, None, &CdConfig { tol: 1e-11, screen: true, ..Default::default() });
+        for j in 0..p {
+            if tight.beta[j].abs() > 1e-6 {
+                assert!(
+                    screened.beta[j] != 0.0,
+                    "trial {trial}: support feature {j} lost (β̂={})",
+                    tight.beta[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_soft_threshold_is_prox() {
+    // ST(x,u) = argmin_z ½(z−x)² + u|z| — verify variational inequality
+    let mut rng = Rng::new(204);
+    for _ in 0..1000 {
+        let x = rng.normal() * 3.0;
+        let u = rng.uniform() * 2.0;
+        let z = soft_threshold(x, u);
+        let obj = |t: f64| 0.5 * (t - x) * (t - x) + u * t.abs();
+        for dt in [-0.1, -1e-3, 1e-3, 0.1] {
+            assert!(obj(z) <= obj(z + dt) + 1e-12, "x={x} u={u} z={z} dt={dt}");
+        }
+    }
+}
+
+#[test]
+fn prop_csc_dense_duality() {
+    // every DesignOps op agrees between storages on random matrices
+    let mut rng = Rng::new(205);
+    for _ in 0..25 {
+        let n = 1 + rng.below(20);
+        let p = 1 + rng.below(30);
+        let mut data = vec![0.0; n * p];
+        for v in data.iter_mut() {
+            if rng.uniform() < 0.4 {
+                *v = rng.normal();
+            }
+        }
+        let d = DenseMatrix::from_col_major(n, p, data.clone());
+        let s = CscMatrix::from_dense(n, p, &data);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        for j in 0..p {
+            assert!((d.col_dot(j, &v) - s.col_dot(j, &v)).abs() < 1e-12);
+            assert_eq!(d.col_nnz(j), s.col_nnz(j));
+        }
+        let (mut a, mut b) = (vec![0.0; n], vec![0.0; n]);
+        d.matvec(&beta, &mut a);
+        s.matvec(&beta, &mut b);
+        for i in 0..n {
+            assert!((a[i] - b[i]).abs() < 1e-12);
+        }
+        assert!((d.xt_abs_max(&v) - s.xt_abs_max(&v)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_lambda_max_is_tight() {
+    // β̂ = 0 exactly at λ ≥ λ_max, and ≠ 0 just below
+    let mut rng = Rng::new(206);
+    for trial in 0..10 {
+        let n = 8 + rng.below(20);
+        let p = 8 + rng.below(40);
+        let (x, y) = random_problem(&mut rng, n, p, 1.0);
+        let lmax = dual::lambda_max(&x, &y);
+        let at = cd_solve(&x, &y, lmax * 1.000001, None, &CdConfig { tol: 1e-12, ..Default::default() });
+        assert_eq!(at.support_size(), 0, "trial {trial}: nonzero β at λ≥λ_max");
+        let below = cd_solve(&x, &y, lmax * 0.95, None, &CdConfig { tol: 1e-12, ..Default::default() });
+        assert!(below.support_size() > 0, "trial {trial}: zero β at 0.95·λ_max");
+    }
+}
+
+#[test]
+fn prop_extrapolated_dual_never_worse_with_best_dual() {
+    // with Eq. 13 monotonicity, the solver's dual objective sequence is
+    // non-decreasing along checks
+    let mut rng = Rng::new(207);
+    for trial in 0..8 {
+        let n = 10 + rng.below(30);
+        let p = 30 + rng.below(100);
+        let (x, y) = random_problem(&mut rng, n, p, 1.0);
+        let lmax = dual::lambda_max(&x, &y);
+        let lambda = lmax * 0.1;
+        let out = cd_solve(
+            &x,
+            &y,
+            lambda,
+            None,
+            &CdConfig { tol: 1e-12, max_epochs: 500, trace: true, best_dual: true, ..Default::default() },
+        );
+        let duals: Vec<f64> = out
+            .trace
+            .iter()
+            .map(|c| c.primal - c.gap) // D(θ_used) = P − gap
+            .collect();
+        for w in duals.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "trial {trial}: dual decreased {w:?}");
+        }
+    }
+}
