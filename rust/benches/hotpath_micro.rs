@@ -3,13 +3,58 @@
 //! extrapolation solve. These are the quantities the profile-driven
 //! optimization pass tracks in EXPERIMENTS.md §Perf.
 
-use celer::data::design::DesignOps;
+use celer::data::design::{DesignMatrix, DesignOps};
 use celer::data::synth;
+use celer::data::view::DesignView;
 use celer::extrapolation::ResidualBuffer;
 use celer::lasso::dual;
 use celer::report::bench;
+use celer::solvers::cd::{cd_solve, CdConfig};
 use celer::util::select::k_smallest_indices;
 use celer::util::soft_threshold;
+
+/// The `k` columns most |correlated| with y — a realistic working set.
+fn top_correlated(x: &DesignMatrix, y: &[f64], k: usize) -> Vec<usize> {
+    let mut xty = vec![0.0; x.p()];
+    x.xt_vec(y, &mut xty);
+    let scores: Vec<f64> = xty.iter().map(|v| -v.abs()).collect();
+    let mut cols = k_smallest_indices(&scores, k.min(x.p()));
+    cols.sort_unstable();
+    cols
+}
+
+/// Benchmark one working-set inner solve both ways: materialized copy of
+/// `X_W` (the pre-refactor hot path) vs. a zero-copy [`DesignView`]. The
+/// acceptance bar for the refactor is view ≤ materialized.
+fn bench_ws_inner_solve(tag: &str, x: &DesignMatrix, y: &[f64], iters: usize) {
+    let lambda = dual::lambda_max(x, y) / 20.0;
+    let cols = top_correlated(x, y, 200);
+    let norms = x.col_norms_sq();
+    // Epoch-capped so both sides do identical, bounded work per iteration.
+    let cfg = CdConfig { tol: 1e-12, max_epochs: 50, ..Default::default() };
+
+    bench::time(&format!("hot/ws_inner_materialized_{tag}"), iters, || {
+        let sub = x.select_columns(&cols);
+        let out = cd_solve(&sub, y, lambda, None, &cfg);
+        assert!(out.epochs > 0);
+    });
+    match x {
+        DesignMatrix::Dense(d) => {
+            bench::time(&format!("hot/ws_inner_view_{tag}"), iters, || {
+                let view = DesignView::new(d, &cols, &norms);
+                let out = cd_solve(&view, y, lambda, None, &cfg);
+                assert!(out.epochs > 0);
+            });
+        }
+        DesignMatrix::Sparse(s) => {
+            bench::time(&format!("hot/ws_inner_view_{tag}"), iters, || {
+                let view = DesignView::new(s, &cols, &norms);
+                let out = cd_solve(&view, y, lambda, None, &cfg);
+                assert!(out.epochs > 0);
+            });
+        }
+    }
+}
 
 fn main() {
     let full = bench::full_scale();
@@ -97,6 +142,11 @@ fn main() {
             assert_eq!(sub.p(), cols.len());
         });
     }
+
+    // --- working-set inner solve: materialized copy vs zero-copy view ---
+    // (the CELER/Blitz hot path; the view must be at least as fast)
+    bench_ws_inner_solve("dense", &dense.x, &dense.y, iters);
+    bench_ws_inner_solve("sparse", &sparse.x, &sparse.y, iters);
 
     // --- extrapolation solve (K = 5) ---
     {

@@ -6,12 +6,19 @@
 //! scheduler fans independent cells out over threads (warm-start chains
 //! within a λ-path stay sequential), and every cell reports wall-clock +
 //! convergence metadata for the report writers.
+//!
+//! Each worker thread owns one solver
+//! [`Workspace`](crate::solvers::engine::Workspace) reused across every
+//! path job it claims, so the solver buffers (β, r, dual state,
+//! extrapolation ring, nested working-set workspace) are allocated once
+//! per worker, not once per λ or per job.
 
 pub mod metrics;
 pub mod scheduler;
 
 use crate::data::synth::{self, SynthDataset};
-use crate::solvers::path::{lambda_grid, run_path, PathResult, PathSolver};
+use crate::solvers::engine::Workspace;
+use crate::solvers::path::{lambda_grid, run_path_with_workspace, PathResult, PathSolver};
 
 /// Named dataset loader (synthetic stand-ins for the paper's datasets —
 /// see DESIGN.md §4; real svmlight files can be loaded via `data::svmlight`).
@@ -53,9 +60,9 @@ pub fn run_path_jobs(
             j.solver_name
         );
     }
-    let results = scheduler::run_parallel(jobs, workers, |job| {
+    let results = scheduler::run_parallel_with_state(jobs, workers, Workspace::new, |ws, job| {
         let solver = PathSolver::by_name(&job.solver_name, job.tol).expect("validated");
-        run_path(&ds.x, &ds.y, &job.grid, &solver, job.store_betas)
+        run_path_with_workspace(&ds.x, &ds.y, &job.grid, &solver, job.store_betas, ws)
     });
     Ok(results)
 }

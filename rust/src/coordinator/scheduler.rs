@@ -16,25 +16,49 @@ where
     O: Send,
     F: Fn(&I) -> O + Sync,
 {
+    run_parallel_with_state(items, workers, || (), |_, item| f(item))
+}
+
+/// Like [`run_parallel`], but each worker thread builds one `init()`
+/// state up front and threads it through every job it claims. The
+/// coordinator uses this to give each worker a reusable solver
+/// [`Workspace`](crate::solvers::engine::Workspace): all path jobs a
+/// worker executes share one set of solver buffers.
+pub fn run_parallel_with_state<I, O, S, F, G>(
+    items: Vec<I>,
+    workers: usize,
+    init: G,
+    f: F,
+) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(&mut S, &I) -> O + Sync,
+    G: Fn() -> S + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = workers.clamp(1, n);
     if workers == 1 {
-        return items.iter().map(&f).collect();
+        let mut state = init();
+        return items.iter().map(|item| f(&mut state, item)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(&mut state, &items[i]);
+                    *slots[i].lock().unwrap() = Some(out);
                 }
-                let out = f(&items[i]);
-                *slots[i].lock().unwrap() = Some(out);
             });
         }
     });
@@ -65,6 +89,29 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(run_parallel(vec![5], 16, |&i| i), vec![5]);
+    }
+
+    #[test]
+    fn per_worker_state_is_reused() {
+        // each worker counts how many jobs it handled; the counts must
+        // sum to the number of items (state persists across jobs).
+        let items: Vec<usize> = (0..40).collect();
+        let out = run_parallel_with_state(
+            items,
+            4,
+            || 0usize,
+            |count, &i| {
+                *count += 1;
+                (i, *count)
+            },
+        );
+        assert_eq!(out.len(), 40);
+        let total: usize = out.iter().filter(|(_, c)| *c == 1).count();
+        // at most `workers` jobs can be "first job on a fresh state"
+        assert!(total <= 4, "fresh states: {total}");
+        for (i, (item, _)) in out.iter().enumerate() {
+            assert_eq!(*item, i, "order preserved");
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Data substrate: design matrices (dense + CSC sparse), svmlight I/O,
-//! synthetic dataset generators, and the paper's preprocessing pipeline.
+//! Data substrate: design matrices (dense + CSC sparse), zero-copy
+//! column-restricted views, svmlight I/O, synthetic dataset generators,
+//! and the paper's preprocessing pipeline.
 
 pub mod csc;
 pub mod dense;
@@ -7,7 +8,9 @@ pub mod design;
 pub mod preprocess;
 pub mod svmlight;
 pub mod synth;
+pub mod view;
 
 pub use csc::CscMatrix;
 pub use dense::DenseMatrix;
 pub use design::{DesignMatrix, DesignOps};
+pub use view::DesignView;

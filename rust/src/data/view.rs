@@ -1,0 +1,259 @@
+//! Zero-copy column-restricted views of a design matrix.
+//!
+//! CELER and Blitz repeatedly solve subproblems on `X_{W_t}` for a
+//! working set `W_t` that changes every outer iteration. Materializing
+//! that restriction (`DesignMatrix::select_columns`) copies `n·|W_t|`
+//! dense entries — or the corresponding CSC runs — on **every** outer
+//! iteration. [`DesignView`] replaces the copy with a borrow: it wraps a
+//! parent design plus an index set and implements [`DesignOps`] by
+//! translating local column indices through the index set, so the inner
+//! solver's monomorphized hot loops (`col_dot` / `col_axpy`) read the
+//! parent's storage directly.
+//!
+//! Per-column norms are carried over from the parent (the caller passes
+//! the parent's cached `‖x_j‖²` vector), so a view never recomputes
+//! column norms either — `col_norm_sq` is an array lookup.
+
+use crate::data::design::DesignOps;
+
+/// A borrowed restriction of a design matrix to a set of columns.
+///
+/// Local column `c` of the view is parent column `cols[c]`. The view is
+/// cheap to construct (three pointer-sized fields), implements
+/// [`DesignOps`], and works for any parent — dense, CSC, or the
+/// [`DesignMatrix`](crate::data::design::DesignMatrix) enum — without
+/// copying matrix data.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignView<'a, D: DesignOps> {
+    parent: &'a D,
+    /// Local-to-parent column map (view column `c` ↦ parent column
+    /// `cols[c]`). Duplicates are allowed; every entry must be `< parent.p()`.
+    cols: &'a [usize],
+    /// Parent-wide cached squared column norms (length `parent.p()`).
+    parent_norms_sq: &'a [f64],
+}
+
+impl<'a, D: DesignOps> DesignView<'a, D> {
+    /// Restrict `parent` to `cols`, reusing the parent's cached squared
+    /// column norms (`parent_norms_sq[j] = ‖x_j‖²`, length `parent.p()`).
+    pub fn new(parent: &'a D, cols: &'a [usize], parent_norms_sq: &'a [f64]) -> Self {
+        assert_eq!(
+            parent_norms_sq.len(),
+            parent.p(),
+            "parent norms must cover every parent column"
+        );
+        assert!(
+            cols.iter().all(|&j| j < parent.p()),
+            "view columns must be valid parent columns"
+        );
+        DesignView { parent, cols, parent_norms_sq }
+    }
+
+    /// The local-to-parent column map.
+    pub fn cols(&self) -> &[usize] {
+        self.cols
+    }
+
+    /// The parent design.
+    pub fn parent(&self) -> &D {
+        self.parent
+    }
+}
+
+impl<D: DesignOps> DesignOps for DesignView<'_, D> {
+    #[inline]
+    fn n(&self) -> usize {
+        self.parent.n()
+    }
+
+    #[inline]
+    fn p(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        self.parent.col_dot(self.cols[j], v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        self.parent.col_axpy(self.cols[j], alpha, out);
+    }
+
+    #[inline]
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        self.parent_norms_sq[self.cols[j]]
+    }
+
+    #[inline]
+    fn col_nnz(&self, j: usize) -> usize {
+        self.parent.col_nnz(self.cols[j])
+    }
+
+    fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.cols.len());
+        assert_eq!(out.len(), self.parent.n());
+        out.fill(0.0);
+        for (c, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                self.parent.col_axpy(self.cols[c], b, out);
+            }
+        }
+    }
+
+    fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.parent.n());
+        assert_eq!(out.len(), self.cols.len());
+        crate::util::par::par_fill(out, |c| self.parent.col_dot(self.cols[c], v));
+    }
+
+    fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {
+        // Translate local indices to parent indices, then delegate.
+        let mapped: Vec<usize> = cols.iter().map(|&c| self.cols[c]).collect();
+        self.parent.gather_dense(&mapped, out);
+    }
+
+    fn nnz(&self) -> usize {
+        self.cols.iter().map(|&j| self.parent.col_nnz(j)).sum()
+    }
+
+    fn xt_abs_max(&self, v: &[f64]) -> f64 {
+        crate::util::par::par_max(self.cols.len(), |c| {
+            self.parent.col_dot(self.cols[c], v).abs()
+        })
+        .max(0.0)
+    }
+
+    fn col_norms_sq(&self) -> Vec<f64> {
+        self.cols.iter().map(|&j| self.parent_norms_sq[j]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csc::CscMatrix;
+    use crate::data::dense::DenseMatrix;
+    use crate::data::design::DesignMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_pair(seed: u64, n: usize, p: usize, density: f64) -> (DesignMatrix, DesignMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0; n * p];
+        for v in dense.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.normal();
+            }
+        }
+        let d = DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, dense.clone()));
+        let s = DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &dense));
+        (d, s)
+    }
+
+    fn check_view_matches_materialized(x: &DesignMatrix, cols: &[usize]) {
+        let norms = x.col_norms_sq();
+        let view = DesignView::new(x, cols, &norms);
+        let mat = x.select_columns(cols);
+        let n = x.n();
+        let k = cols.len();
+        assert_eq!(view.p(), k);
+        assert_eq!(view.n(), n);
+        assert_eq!(view.nnz(), mat.nnz());
+
+        let mut rng = Rng::new(99);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let beta: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+
+        for c in 0..k {
+            assert_eq!(view.col_dot(c, &v), mat.col_dot(c, &v), "col_dot c={c}");
+            assert_eq!(view.col_norm_sq(c), mat.col_norm_sq(c), "norm c={c}");
+            assert_eq!(view.col_nnz(c), mat.col_nnz(c), "nnz c={c}");
+        }
+
+        let (mut a, mut b) = (vec![0.0; n], vec![0.0; n]);
+        view.matvec(&beta, &mut a);
+        mat.matvec(&beta, &mut b);
+        assert_eq!(a, b, "matvec");
+
+        let (mut a, mut b) = (vec![0.0; k], vec![0.0; k]);
+        view.xt_vec(&v, &mut a);
+        mat.xt_vec(&v, &mut b);
+        assert_eq!(a, b, "xt_vec");
+
+        assert_eq!(view.xt_abs_max(&v), mat.xt_abs_max(&v), "xt_abs_max");
+        assert_eq!(view.col_norms_sq(), mat.col_norms_sq(), "col_norms_sq");
+
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        view.gather_dense(&(0..k).collect::<Vec<_>>(), &mut a);
+        mat.gather_dense(&(0..k).collect::<Vec<_>>(), &mut b);
+        assert_eq!(a, b, "gather_dense");
+
+        let mut axpy_a = vec![1.0; n];
+        let mut axpy_b = vec![1.0; n];
+        view.col_axpy(0, -2.5, &mut axpy_a);
+        mat.col_axpy(0, -2.5, &mut axpy_b);
+        assert_eq!(axpy_a, axpy_b, "col_axpy");
+    }
+
+    #[test]
+    fn dense_view_matches_materialized() {
+        let (d, _) = random_pair(11, 23, 31, 0.6);
+        check_view_matches_materialized(&d, &[4, 0, 17, 30, 17]);
+    }
+
+    #[test]
+    fn sparse_view_matches_materialized() {
+        let (_, s) = random_pair(12, 19, 27, 0.3);
+        check_view_matches_materialized(&s, &[1, 26, 13, 2]);
+    }
+
+    #[test]
+    fn view_over_concrete_types() {
+        // The view must compose with concrete (non-enum) parents too —
+        // that is what the solvers monomorphize over.
+        let (d, s) = random_pair(13, 10, 12, 0.5);
+        let cols = [3usize, 7, 11];
+        let v: Vec<f64> = (0..10).map(|i| i as f64 * 0.5 - 2.0).collect();
+        if let DesignMatrix::Dense(dd) = &d {
+            let norms = dd.col_norms_sq();
+            let view = DesignView::new(dd, &cols, &norms);
+            for (c, &j) in cols.iter().enumerate() {
+                assert_eq!(view.col_dot(c, &v), dd.col_dot(j, &v));
+            }
+        } else {
+            panic!("dense expected");
+        }
+        if let DesignMatrix::Sparse(ss) = &s {
+            let norms = ss.col_norms_sq();
+            let view = DesignView::new(ss, &cols, &norms);
+            for (c, &j) in cols.iter().enumerate() {
+                assert_eq!(view.col_dot(c, &v), ss.col_dot(j, &v));
+            }
+        } else {
+            panic!("sparse expected");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "view columns must be valid")]
+    fn out_of_range_column_rejected() {
+        let (d, _) = random_pair(14, 5, 4, 1.0);
+        let norms = d.col_norms_sq();
+        let cols = [4usize];
+        let _ = DesignView::new(&d, &cols, &norms);
+    }
+
+    #[test]
+    fn empty_view_is_consistent() {
+        let (d, _) = random_pair(15, 6, 5, 1.0);
+        let norms = d.col_norms_sq();
+        let cols: [usize; 0] = [];
+        let view = DesignView::new(&d, &cols, &norms);
+        assert_eq!(view.p(), 0);
+        assert_eq!(view.nnz(), 0);
+        let mut out = vec![7.0; 6];
+        view.matvec(&[], &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

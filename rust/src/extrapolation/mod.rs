@@ -25,6 +25,9 @@ const SINGULAR_TOL: f64 = 1e-12;
 pub struct ResidualBuffer {
     k: usize,
     buf: VecDeque<Vec<f64>>,
+    /// Retired slots kept for reuse so `clear`/`reset` do not discard the
+    /// ring's allocations (one warm-started λ path reuses one buffer).
+    spare: Vec<Vec<f64>>,
     /// Count of extrapolation attempts that hit the singular fallback.
     pub singular_fallbacks: usize,
     /// Count of successful extrapolations.
@@ -35,7 +38,13 @@ impl ResidualBuffer {
     /// New buffer extrapolating from K residuals (stores K+1).
     pub fn new(k: usize) -> Self {
         assert!(k >= 1, "extrapolation depth K must be >= 1");
-        ResidualBuffer { k, buf: VecDeque::with_capacity(k + 2), singular_fallbacks: 0, successes: 0 }
+        ResidualBuffer {
+            k,
+            buf: VecDeque::with_capacity(k + 2),
+            spare: Vec::new(),
+            singular_fallbacks: 0,
+            successes: 0,
+        }
     }
 
     /// Extrapolation depth K.
@@ -52,18 +61,38 @@ impl ResidualBuffer {
         self.buf.is_empty()
     }
 
-    /// Record the current residual (clones; O(n)).
+    /// Record the current residual (O(n) copy). Once the ring is full the
+    /// evicted slot's allocation is reused, so steady-state pushes are
+    /// allocation-free.
     pub fn push(&mut self, r: &[f64]) {
-        if self.buf.len() == self.k + 1 {
-            self.buf.pop_front();
-        }
-        self.buf.push_back(r.to_vec());
+        let mut slot = if self.buf.len() == self.k + 1 {
+            self.buf.pop_front().expect("ring is full")
+        } else if let Some(s) = self.spare.pop() {
+            s
+        } else {
+            Vec::new()
+        };
+        slot.clear();
+        slot.extend_from_slice(r);
+        self.buf.push_back(slot);
     }
 
     /// Drop all stored residuals (e.g. when the design matrix of the
-    /// subproblem changes between CELER outer iterations).
+    /// subproblem changes between CELER outer iterations). The slots'
+    /// allocations are retained for reuse.
     pub fn clear(&mut self) {
-        self.buf.clear();
+        self.spare.extend(self.buf.drain(..));
+    }
+
+    /// Reset to a fresh buffer of depth `k`, zeroing the fallback/success
+    /// counters. Used by the solver engine to reuse one buffer across
+    /// solves (warm-started λ paths) without reallocating the ring.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k >= 1, "extrapolation depth K must be >= 1");
+        self.k = k;
+        self.clear();
+        self.singular_fallbacks = 0;
+        self.successes = 0;
     }
 
     /// Compute the extrapolated residual, or `None` when fewer than K+1

@@ -11,6 +11,12 @@
 //! - **Layer 2/1 (python/, build-time only)** — JAX compute graphs and
 //!   Pallas kernels for the inner-solver hot spots, AOT-lowered to HLO
 //!   text and executed from Rust through the PJRT C API ([`runtime`]).
+//!
+//! See `ARCHITECTURE.md` for the data → engine → solver → path layering.
+
+// Solver kernels naturally thread many slices through one call; capping
+// the argument count would force ad-hoc context structs on hot paths.
+#![allow(clippy::too_many_arguments)]
 
 pub mod coordinator;
 pub mod data;

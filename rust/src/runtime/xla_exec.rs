@@ -11,232 +11,367 @@
 //! requests up to the registered bucket (zero columns are arithmetic
 //! no-ops for every op we ship — validated by the padding tests in
 //! `python/tests/` and `rust/tests/integration_runtime.rs`).
+//!
+//! **Build gating:** the PJRT bindings live in the external `xla`
+//! (xla_extension) crate, which is not available in the offline build.
+//! The real engine compiles only with `--features xla`, which is a
+//! manual unlock: vendor the crate AND add it to `[dependencies]` in
+//! `rust/Cargo.toml` (see the `[features]` comment there — an optional
+//! dependency cannot be pre-declared because cargo would try to resolve
+//! it even with the feature off). The default build ships a stub whose
+//! `load` fails with a clear message, so every caller that handles the
+//! artifacts-missing case (CLI, tests) degrades gracefully.
 
-use crate::runtime::artifacts::{ArtifactRegistry, ArtifactSpec};
-use crate::runtime::engine::Engine;
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod real {
+    use crate::runtime::artifacts::{ArtifactRegistry, ArtifactSpec};
+    use crate::runtime::engine::Engine;
+    use std::collections::HashMap;
+    use std::path::Path;
 
-/// PJRT-backed engine over the artifact registry.
-pub struct XlaEngine {
-    registry: ArtifactRegistry,
-    client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl XlaEngine {
-    /// Load the manifest in `dir` and create a CPU PJRT client.
-    pub fn load(dir: &Path) -> anyhow::Result<Self> {
-        let registry = ArtifactRegistry::load(dir)?;
-        anyhow::ensure!(
-            registry.dtype == "f64",
-            "artifacts must be f64, got {}",
-            registry.dtype
-        );
-        let client = xla::PjRtClient::cpu()?;
-        Ok(XlaEngine { registry, client, cache: HashMap::new() })
+    /// PJRT-backed engine over the artifact registry.
+    pub struct XlaEngine {
+        registry: ArtifactRegistry,
+        client: xla::PjRtClient,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// The artifact registry backing this engine.
-    pub fn registry(&self) -> &ArtifactRegistry {
-        &self.registry
-    }
-
-    fn compile(&mut self, spec: &ArtifactSpec) -> anyhow::Result<()> {
-        if self.cache.contains_key(&spec.file) {
-            return Ok(());
+    impl XlaEngine {
+        /// Load the manifest in `dir` and create a CPU PJRT client.
+        pub fn load(dir: &Path) -> anyhow::Result<Self> {
+            let registry = ArtifactRegistry::load(dir)?;
+            anyhow::ensure!(
+                registry.dtype == "f64",
+                "artifacts must be f64, got {}",
+                registry.dtype
+            );
+            let client = xla::PjRtClient::cpu()?;
+            Ok(XlaEngine { registry, client, cache: HashMap::new() })
         }
-        let path = self.registry.path_of(spec);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        self.cache.insert(spec.file.clone(), exe);
-        Ok(())
-    }
 
-    fn run(
-        &mut self,
-        spec: &ArtifactSpec,
-        args: &[xla::Literal],
-    ) -> anyhow::Result<Vec<xla::Literal>> {
-        self.compile(spec)?;
-        let exe = self.cache.get(&spec.file).expect("just compiled");
-        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True
-        Ok(result.to_tuple()?)
-    }
-}
+        /// The artifact registry backing this engine.
+        pub fn registry(&self) -> &ArtifactRegistry {
+            &self.registry
+        }
 
-/// Column-major (n rows, w cols) → row-major literal of shape [n, w],
-/// zero-padding to `w_pad` columns.
-fn matrix_literal(x_cm: &[f64], n: usize, w: usize, w_pad: usize) -> anyhow::Result<xla::Literal> {
-    debug_assert_eq!(x_cm.len(), n * w);
-    let mut rm = vec![0.0f64; n * w_pad];
-    for j in 0..w {
-        let col = &x_cm[j * n..(j + 1) * n];
-        for i in 0..n {
-            rm[i * w_pad + j] = col[i];
+        fn compile(&mut self, spec: &ArtifactSpec) -> anyhow::Result<()> {
+            if self.cache.contains_key(&spec.file) {
+                return Ok(());
+            }
+            let path = self.registry.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(spec.file.clone(), exe);
+            Ok(())
+        }
+
+        fn run(
+            &mut self,
+            spec: &ArtifactSpec,
+            args: &[xla::Literal],
+        ) -> anyhow::Result<Vec<xla::Literal>> {
+            self.compile(spec)?;
+            let exe = self.cache.get(&spec.file).expect("just compiled");
+            let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True
+            Ok(result.to_tuple()?)
         }
     }
-    Ok(xla::Literal::vec1(&rm).reshape(&[n as i64, w_pad as i64])?)
-}
 
-fn vec_literal(v: &[f64], pad_to: usize) -> anyhow::Result<xla::Literal> {
-    if v.len() == pad_to {
-        return Ok(xla::Literal::vec1(v));
-    }
-    let mut padded = v.to_vec();
-    padded.resize(pad_to, 0.0);
-    Ok(xla::Literal::vec1(&padded))
-}
-
-fn scalar_literal(v: f64) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-fn to_f64_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f64>> {
-    Ok(lit.to_vec::<f64>()?)
-}
-
-impl Engine for XlaEngine {
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn inner_solve(
-        &mut self,
+    /// Column-major (n rows, w cols) → row-major literal of shape [n, w],
+    /// zero-padding to `w_pad` columns.
+    fn matrix_literal(
         x_cm: &[f64],
         n: usize,
         w: usize,
-        y: &[f64],
-        beta: &[f64],
-        lambda: f64,
-    ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
-        let spec = self
-            .registry
-            .inner_solve_bucket(n, w)
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no inner_solve artifact for n={n}, w>={w}; regenerate with \
-                     CELER_AOT_PROFILE=full make artifacts"
-                )
-            })?
-            .clone();
-        let args = vec![
-            matrix_literal(x_cm, n, w, spec.w)?,
-            vec_literal(y, n)?,
-            vec_literal(beta, spec.w)?,
-            scalar_literal(lambda),
-        ];
-        let out = self.run(&spec, &args)?;
-        anyhow::ensure!(out.len() == 2, "inner_solve returns (beta, r)");
-        let mut beta_out = to_f64_vec(&out[0])?;
-        beta_out.truncate(w);
-        let r_out = to_f64_vec(&out[1])?;
-        Ok((beta_out, r_out))
+        w_pad: usize,
+    ) -> anyhow::Result<xla::Literal> {
+        debug_assert_eq!(x_cm.len(), n * w);
+        let mut rm = vec![0.0f64; n * w_pad];
+        for j in 0..w {
+            let col = &x_cm[j * n..(j + 1) * n];
+            for i in 0..n {
+                rm[i * w_pad + j] = col[i];
+            }
+        }
+        Ok(xla::Literal::vec1(&rm).reshape(&[n as i64, w_pad as i64])?)
     }
 
-    fn gap_scores(
-        &mut self,
-        x_cm: &[f64],
-        n: usize,
-        p: usize,
-        y: &[f64],
-        beta: &[f64],
-        theta: &[f64],
-        lambda: f64,
-    ) -> anyhow::Result<(f64, f64, f64, Vec<f64>)> {
-        let spec = self
-            .registry
-            .full_design_bucket("gap_scores", n, p)
-            .ok_or_else(|| anyhow::anyhow!("no gap_scores artifact for n={n}, p>={p}"))?
-            .clone();
-        let args = vec![
-            matrix_literal(x_cm, n, p, spec.p)?,
-            vec_literal(y, n)?,
-            vec_literal(beta, spec.p)?,
-            vec_literal(theta, n)?,
-            scalar_literal(lambda),
-        ];
-        let out = self.run(&spec, &args)?;
-        anyhow::ensure!(out.len() == 4, "gap_scores returns 4 values");
-        let primal = out[0].get_first_element::<f64>()?;
-        let dual = out[1].get_first_element::<f64>()?;
-        let gap = out[2].get_first_element::<f64>()?;
-        let mut d = to_f64_vec(&out[3])?;
-        d.truncate(p);
-        Ok((primal, dual, gap, d))
+    fn vec_literal(v: &[f64], pad_to: usize) -> anyhow::Result<xla::Literal> {
+        if v.len() == pad_to {
+            return Ok(xla::Literal::vec1(v));
+        }
+        let mut padded = v.to_vec();
+        padded.resize(pad_to, 0.0);
+        Ok(xla::Literal::vec1(&padded))
     }
 
-    fn theta_res(
-        &mut self,
-        x_cm: &[f64],
-        n: usize,
-        p: usize,
-        r: &[f64],
-        lambda: f64,
-    ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
-        let spec = self
-            .registry
-            .full_design_bucket("theta_res", n, p)
-            .ok_or_else(|| anyhow::anyhow!("no theta_res artifact for n={n}, p>={p}"))?
-            .clone();
-        let args = vec![matrix_literal(x_cm, n, p, spec.p)?, vec_literal(r, n)?, scalar_literal(lambda)];
-        let out = self.run(&spec, &args)?;
-        anyhow::ensure!(out.len() == 2, "theta_res returns (theta, xtheta)");
-        let theta = to_f64_vec(&out[0])?;
-        let mut xtheta = to_f64_vec(&out[1])?;
-        xtheta.truncate(p);
-        Ok((theta, xtheta))
+    fn scalar_literal(v: f64) -> xla::Literal {
+        xla::Literal::scalar(v)
     }
 
-    fn extrapolate(&mut self, rbuf: &[f64], k: usize, n: usize) -> anyhow::Result<(Vec<f64>, f64)> {
-        let spec = self
-            .registry
-            .extrapolate_bucket(k, n)
-            .ok_or_else(|| anyhow::anyhow!("no extrapolate artifact for k={k}, n={n}"))?
-            .clone();
-        anyhow::ensure!(rbuf.len() == (k + 1) * n);
-        // rbuf is already row-major (k+1, n)
-        let lit = xla::Literal::vec1(rbuf).reshape(&[(k + 1) as i64, n as i64])?;
-        let out = self.run(&spec, &[lit])?;
-        anyhow::ensure!(out.len() == 2, "extrapolate returns (r_accel, min_pivot)");
-        let r_accel = to_f64_vec(&out[0])?;
-        let min_piv = out[1].get_first_element::<f64>()?;
-        Ok((r_accel, min_piv))
+    fn to_f64_vec(lit: &xla::Literal) -> anyhow::Result<Vec<f64>> {
+        Ok(lit.to_vec::<f64>()?)
+    }
+
+    impl Engine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+
+        fn inner_solve(
+            &mut self,
+            x_cm: &[f64],
+            n: usize,
+            w: usize,
+            y: &[f64],
+            beta: &[f64],
+            lambda: f64,
+        ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+            let spec = self
+                .registry
+                .inner_solve_bucket(n, w)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no inner_solve artifact for n={n}, w>={w}; regenerate with \
+                         CELER_AOT_PROFILE=full make artifacts"
+                    )
+                })?
+                .clone();
+            let args = vec![
+                matrix_literal(x_cm, n, w, spec.w)?,
+                vec_literal(y, n)?,
+                vec_literal(beta, spec.w)?,
+                scalar_literal(lambda),
+            ];
+            let out = self.run(&spec, &args)?;
+            anyhow::ensure!(out.len() == 2, "inner_solve returns (beta, r)");
+            let mut beta_out = to_f64_vec(&out[0])?;
+            beta_out.truncate(w);
+            let r_out = to_f64_vec(&out[1])?;
+            Ok((beta_out, r_out))
+        }
+
+        fn gap_scores(
+            &mut self,
+            x_cm: &[f64],
+            n: usize,
+            p: usize,
+            y: &[f64],
+            beta: &[f64],
+            theta: &[f64],
+            lambda: f64,
+        ) -> anyhow::Result<(f64, f64, f64, Vec<f64>)> {
+            let spec = self
+                .registry
+                .full_design_bucket("gap_scores", n, p)
+                .ok_or_else(|| anyhow::anyhow!("no gap_scores artifact for n={n}, p>={p}"))?
+                .clone();
+            let args = vec![
+                matrix_literal(x_cm, n, p, spec.p)?,
+                vec_literal(y, n)?,
+                vec_literal(beta, spec.p)?,
+                vec_literal(theta, n)?,
+                scalar_literal(lambda),
+            ];
+            let out = self.run(&spec, &args)?;
+            anyhow::ensure!(out.len() == 4, "gap_scores returns 4 values");
+            let primal = out[0].get_first_element::<f64>()?;
+            let dual = out[1].get_first_element::<f64>()?;
+            let gap = out[2].get_first_element::<f64>()?;
+            let mut d = to_f64_vec(&out[3])?;
+            d.truncate(p);
+            Ok((primal, dual, gap, d))
+        }
+
+        fn theta_res(
+            &mut self,
+            x_cm: &[f64],
+            n: usize,
+            p: usize,
+            r: &[f64],
+            lambda: f64,
+        ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+            let spec = self
+                .registry
+                .full_design_bucket("theta_res", n, p)
+                .ok_or_else(|| anyhow::anyhow!("no theta_res artifact for n={n}, p>={p}"))?
+                .clone();
+            let args = vec![
+                matrix_literal(x_cm, n, p, spec.p)?,
+                vec_literal(r, n)?,
+                scalar_literal(lambda),
+            ];
+            let out = self.run(&spec, &args)?;
+            anyhow::ensure!(out.len() == 2, "theta_res returns (theta, xtheta)");
+            let theta = to_f64_vec(&out[0])?;
+            let mut xtheta = to_f64_vec(&out[1])?;
+            xtheta.truncate(p);
+            Ok((theta, xtheta))
+        }
+
+        fn extrapolate(
+            &mut self,
+            rbuf: &[f64],
+            k: usize,
+            n: usize,
+        ) -> anyhow::Result<(Vec<f64>, f64)> {
+            let spec = self
+                .registry
+                .extrapolate_bucket(k, n)
+                .ok_or_else(|| anyhow::anyhow!("no extrapolate artifact for k={k}, n={n}"))?
+                .clone();
+            anyhow::ensure!(rbuf.len() == (k + 1) * n);
+            // rbuf is already row-major (k+1, n)
+            let lit = xla::Literal::vec1(rbuf).reshape(&[(k + 1) as i64, n as i64])?;
+            let out = self.run(&spec, &[lit])?;
+            anyhow::ensure!(out.len() == 2, "extrapolate returns (r_accel, min_pivot)");
+            let r_accel = to_f64_vec(&out[0])?;
+            let min_piv = out[1].get_first_element::<f64>()?;
+            Ok((r_accel, min_piv))
+        }
+    }
+
+    /// ISTA step through an artifact (used by the Theorem-1 demo).
+    impl XlaEngine {
+        pub fn ista_epoch(
+            &mut self,
+            x_cm: &[f64],
+            n: usize,
+            p: usize,
+            y: &[f64],
+            beta: &[f64],
+            lambda: f64,
+            mu: f64,
+        ) -> anyhow::Result<Vec<f64>> {
+            let spec = self
+                .registry
+                .full_design_bucket("ista_epoch", n, p)
+                .ok_or_else(|| anyhow::anyhow!("no ista_epoch artifact for n={n}, p>={p}"))?
+                .clone();
+            let args = vec![
+                matrix_literal(x_cm, n, p, spec.p)?,
+                vec_literal(y, n)?,
+                vec_literal(beta, spec.p)?,
+                scalar_literal(lambda),
+                scalar_literal(mu),
+            ];
+            let out = self.run(&spec, &args)?;
+            anyhow::ensure!(out.len() == 1, "ista_epoch returns (beta,)");
+            let mut b = to_f64_vec(&out[0])?;
+            b.truncate(p);
+            Ok(b)
+        }
     }
 }
 
-/// ISTA step through an artifact (used by the Theorem-1 demo).
-impl XlaEngine {
-    pub fn ista_epoch(
-        &mut self,
-        x_cm: &[f64],
-        n: usize,
-        p: usize,
-        y: &[f64],
-        beta: &[f64],
-        lambda: f64,
-        mu: f64,
-    ) -> anyhow::Result<Vec<f64>> {
-        let spec = self
-            .registry
-            .full_design_bucket("ista_epoch", n, p)
-            .ok_or_else(|| anyhow::anyhow!("no ista_epoch artifact for n={n}, p>={p}"))?
-            .clone();
-        let args = vec![
-            matrix_literal(x_cm, n, p, spec.p)?,
-            vec_literal(y, n)?,
-            vec_literal(beta, spec.p)?,
-            scalar_literal(lambda),
-            scalar_literal(mu),
-        ];
-        let out = self.run(&spec, &args)?;
-        anyhow::ensure!(out.len() == 1, "ista_epoch returns (beta,)");
-        let mut b = to_f64_vec(&out[0])?;
-        b.truncate(p);
-        Ok(b)
+#[cfg(feature = "xla")]
+pub use real::XlaEngine;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::runtime::artifacts::ArtifactRegistry;
+    use crate::runtime::engine::Engine;
+    use std::path::Path;
+
+    fn unavailable() -> anyhow::Error {
+        anyhow::anyhow!(
+            "the XLA/PJRT backend is unavailable: celer was built without the \
+             `xla` cargo feature (the xla_extension bindings cannot be fetched \
+             in the offline build). Vendor the crate, add it to [dependencies] \
+             in rust/Cargo.toml (see the [features] comment), and rebuild with \
+             `--features xla` — or use `--engine native`."
+        )
+    }
+
+    /// Offline stub: same API surface as the real engine, but `load`
+    /// always fails with an actionable message.
+    pub struct XlaEngine {
+        registry: ArtifactRegistry,
+    }
+
+    impl XlaEngine {
+        /// Always fails in offline builds (after surfacing manifest
+        /// problems first, so the error actionable to the user is the
+        /// most specific one).
+        pub fn load(dir: &Path) -> anyhow::Result<Self> {
+            let _registry = ArtifactRegistry::load(dir)?;
+            Err(unavailable())
+        }
+
+        /// The artifact registry backing this engine.
+        pub fn registry(&self) -> &ArtifactRegistry {
+            &self.registry
+        }
+
+        pub fn ista_epoch(
+            &mut self,
+            _x_cm: &[f64],
+            _n: usize,
+            _p: usize,
+            _y: &[f64],
+            _beta: &[f64],
+            _lambda: f64,
+            _mu: f64,
+        ) -> anyhow::Result<Vec<f64>> {
+            Err(unavailable())
+        }
+    }
+
+    impl Engine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-stub"
+        }
+
+        fn inner_solve(
+            &mut self,
+            _x_cm: &[f64],
+            _n: usize,
+            _w: usize,
+            _y: &[f64],
+            _beta: &[f64],
+            _lambda: f64,
+        ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+            Err(unavailable())
+        }
+
+        fn gap_scores(
+            &mut self,
+            _x_cm: &[f64],
+            _n: usize,
+            _p: usize,
+            _y: &[f64],
+            _beta: &[f64],
+            _theta: &[f64],
+            _lambda: f64,
+        ) -> anyhow::Result<(f64, f64, f64, Vec<f64>)> {
+            Err(unavailable())
+        }
+
+        fn theta_res(
+            &mut self,
+            _x_cm: &[f64],
+            _n: usize,
+            _p: usize,
+            _r: &[f64],
+            _lambda: f64,
+        ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+            Err(unavailable())
+        }
+
+        fn extrapolate(
+            &mut self,
+            _rbuf: &[f64],
+            _k: usize,
+            _n: usize,
+        ) -> anyhow::Result<(Vec<f64>, f64)> {
+            Err(unavailable())
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaEngine;

@@ -31,7 +31,7 @@ pub fn d_score(xj_theta_abs: f64, col_norm: f64) -> f64 {
 }
 
 /// Dynamic screening state over a problem with p features.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ScreeningState {
     /// Currently active (not screened) feature indices, in increasing order.
     active: Vec<usize>,
@@ -43,6 +43,15 @@ impl ScreeningState {
     /// All features active.
     pub fn all_active(p: usize) -> Self {
         ScreeningState { active: (0..p).collect(), screened: vec![false; p] }
+    }
+
+    /// Re-initialize to all-active over `p` features, reusing capacity
+    /// (the solver engine calls this once per solve on a shared workspace).
+    pub fn reset_all_active(&mut self, p: usize) {
+        self.active.clear();
+        self.active.extend(0..p);
+        self.screened.clear();
+        self.screened.resize(p, false);
     }
 
     pub fn active(&self) -> &[usize] {

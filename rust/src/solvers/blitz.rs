@@ -18,14 +18,19 @@
 //! working-set capacity doubles instead of being sized by Blitz's
 //! auxiliary subproblem, and the time-based internal heuristics are
 //! reduced to a primal-decrease test.
+//!
+//! Subproblems are solved on a zero-copy [`DesignView`] of `X_{W_t}`
+//! through the shared [`crate::solvers::engine`] — no per-iteration
+//! column materialization.
 
 use crate::data::design::{DesignMatrix, DesignOps};
+use crate::data::view::DesignView;
 use crate::lasso::{dual, primal};
 use crate::screening::d_score;
-use crate::solvers::cd::{cd_solve, CdConfig};
 use crate::solvers::celer::CelerIteration;
+use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
-use crate::util::select::k_smallest_indices;
+use crate::ws::build_working_set;
 use std::time::Instant;
 
 /// BLITZ configuration.
@@ -99,23 +104,54 @@ pub fn blitz_solve(
     beta0: Option<&[f64]>,
     cfg: &BlitzConfig,
 ) -> BlitzOutput {
-    let (n, p) = (x.n(), x.p());
+    let mut ws = Workspace::new();
+    blitz_solve_ws(x, y, lambda, beta0, cfg, &mut ws)
+}
+
+/// [`blitz_solve`] on a caller-provided reusable [`Workspace`].
+pub fn blitz_solve_ws(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &BlitzConfig,
+    ws: &mut Workspace,
+) -> BlitzOutput {
+    // Dispatch once; the outer loop and the view-based inner solves then
+    // monomorphize for the concrete storage kind.
+    match x {
+        DesignMatrix::Dense(d) => blitz_generic(d, y, lambda, beta0, cfg, ws),
+        DesignMatrix::Sparse(s) => blitz_generic(s, y, lambda, beta0, cfg, ws),
+    }
+}
+
+fn blitz_generic<D: DesignOps>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &BlitzConfig,
+    ws: &mut Workspace,
+) -> BlitzOutput {
+    let n = x.n();
+    let p = x.p();
     let start = Instant::now();
 
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
-    let mut r = vec![0.0; n];
-    primal::residual(x, y, &beta, &mut r);
-    let col_norms: Vec<f64> = x.col_norms_sq().iter().map(|v| v.sqrt()).collect();
+    // ---- outer-loop state in the reusable workspace ----
+    ws.init_primal(x, y, beta0);
 
     let lmax = dual::lambda_max(x, y).max(f64::MIN_POSITIVE);
-    let mut theta: Vec<f64> = y.iter().map(|&v| v / lmax).collect();
-    let mut xtheta = vec![0.0; p];
-    x.xt_vec(&theta, &mut xtheta);
+    ws.theta.clear();
+    ws.theta.extend(y.iter().map(|&v| v / lmax));
+    ws.xtheta.resize(p, 0.0);
+    x.xt_vec(&ws.theta, &mut ws.xtheta);
+    // xtheta_inner doubles as the Xᵀφ buffer of the barycenter update
+    ws.xtheta_inner.resize(p, 0.0);
+    ws.d_scores.resize(p, 0.0);
 
+    let mut inner_ws = ws.take_inner();
     let mut iterations = Vec::new();
-    let mut xtphi = vec![0.0; p];
-    let mut d_scores = vec![0.0; p];
-    let mut ws: Vec<usize> = Vec::new();
+    let mut ws_idx: Vec<usize> = Vec::new();
     let mut gap = f64::INFINITY;
     let mut converged = false;
     let mut stopped_internally = false;
@@ -126,34 +162,34 @@ pub fn blitz_solve(
     for t in 1..=cfg.max_outer {
         // ---- barycenter dual update ----
         // φ = r / max(λ, ‖X_{W}ᵀ r‖_∞); at t = 1, W = full problem.
-        x.xt_vec(&r, &mut xtphi);
+        x.xt_vec(&ws.r, &mut ws.xtheta_inner);
         let mut denom = lambda;
-        if t == 1 || ws.is_empty() {
-            for &v in xtphi.iter() {
+        if t == 1 || ws_idx.is_empty() {
+            for &v in ws.xtheta_inner.iter() {
                 denom = denom.max(v.abs());
             }
         } else {
-            for &j in &ws {
-                denom = denom.max(xtphi[j].abs());
+            for &j in &ws_idx {
+                denom = denom.max(ws.xtheta_inner[j].abs());
             }
         }
         let inv = 1.0 / denom;
         // line search on cached correlations: a = Xᵀθ, b = Xᵀφ = Xᵀr/denom
-        for v in xtphi.iter_mut() {
+        for v in ws.xtheta_inner.iter_mut() {
             *v *= inv;
         }
-        let alpha = max_feasible_step(&xtheta, &xtphi);
+        let alpha = max_feasible_step(&ws.xtheta, &ws.xtheta_inner);
         for i in 0..n {
-            theta[i] += alpha * (r[i] * inv - theta[i]);
+            ws.theta[i] += alpha * (ws.r[i] * inv - ws.theta[i]);
         }
         for j in 0..p {
-            xtheta[j] += alpha * (xtphi[j] - xtheta[j]);
+            ws.xtheta[j] += alpha * (ws.xtheta_inner[j] - ws.xtheta[j]);
         }
 
         // ---- global gap / stopping ----
-        let p_val = primal::primal_from_residual(&r, &beta, lambda);
-        gap = p_val - dual::dual_objective(y, &theta, lambda);
-        let support = primal::support(&beta);
+        let p_val = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
+        gap = p_val - dual::dual_objective(y, &ws.theta, lambda);
+        let support = primal::support(&ws.beta);
         if gap <= cfg.tol {
             converged = true;
             iterations.push(CelerIteration {
@@ -174,21 +210,22 @@ pub fn blitz_solve(
         prev_primal = p_val;
 
         // ---- working set: smallest d_j(θ), capacity doubling ----
+        // (empty columns get an infinite d_score; build_working_set
+        // excludes non-finite scores centrally)
         for j in 0..p {
-            let s = d_score(xtheta[j].abs(), col_norms[j]);
-            d_scores[j] = if s.is_finite() { s } else { f64::MAX };
+            ws.d_scores[j] = d_score(ws.xtheta[j].abs(), ws.col_norms[j]);
         }
-        for &j in &support {
-            d_scores[j] = -1.0; // keep the support in (monotone objective)
-        }
-        let pt = if t == 1 { cfg.p1 } else { (2 * ws.len()).max(cfg.p1) }.min(p).max(support.len());
-        ws = k_smallest_indices(&d_scores, pt);
-        ws.sort_unstable();
+        let pt =
+            if t == 1 { cfg.p1 } else { (2 * ws_idx.len()).max(cfg.p1) }.min(p).max(support.len());
+        ws_idx = build_working_set(&mut ws.d_scores, &support, pt);
 
-        // ---- inner solve (no extrapolation: θ_res only) ----
-        let x_ws = x.select_columns(&ws);
-        let beta_ws: Vec<f64> = ws.iter().map(|&j| beta[j]).collect();
-        let inner_cfg = CdConfig {
+        // ---- inner solve on a zero-copy view of X_{W_t} (θ_res only) ----
+        ws.beta_ws.clear();
+        {
+            let beta = &ws.beta;
+            ws.beta_ws.extend(ws_idx.iter().map(|&j| beta[j]));
+        }
+        let inner_cfg = EngineConfig {
             tol: cfg.inner_tol_ratio * gap,
             max_epochs: cfg.max_inner_epochs,
             gap_freq: cfg.gap_freq,
@@ -197,28 +234,50 @@ pub fn blitz_solve(
             best_dual: true,
             screen: false,
             trace: false,
+            stop: StopRule::DualityGap,
         };
-        let inner = cd_solve(&x_ws, y, lambda, Some(&beta_ws), &inner_cfg);
-        total_epochs += inner.epochs;
-        beta.fill(0.0);
-        for (i, &j) in ws.iter().enumerate() {
-            beta[j] = inner.beta[i];
+        let inner_epochs = {
+            let view = DesignView::new(x, &ws_idx, &ws.norms_sq);
+            let outcome = engine::solve(
+                &view,
+                y,
+                lambda,
+                Init::Warm(&ws.beta_ws),
+                None,
+                &inner_cfg,
+                &mut inner_ws,
+                &mut CdStrategy,
+            );
+            outcome.epochs
+        };
+        total_epochs += inner_epochs;
+        ws.beta.fill(0.0);
+        for (i, &j) in ws_idx.iter().enumerate() {
+            ws.beta[j] = inner_ws.beta[i];
         }
-        r.copy_from_slice(&inner.r);
+        ws.r.copy_from_slice(&inner_ws.r);
 
         iterations.push(CelerIteration {
             t,
             gap,
-            ws_size: ws.len(),
+            ws_size: ws_idx.len(),
             support_size: support.len(),
-            inner_epochs: inner.epochs,
+            inner_epochs,
             seconds: start.elapsed().as_secs_f64(),
             dual_winner: 0,
         });
     }
 
-    let result =
-        SolveResult { beta, r, theta, gap, epochs: total_epochs, converged, trace: Vec::new() };
+    ws.put_inner(inner_ws);
+    let result = SolveResult {
+        beta: ws.beta.clone(),
+        r: ws.r.clone(),
+        theta: ws.theta.clone(),
+        gap,
+        epochs: total_epochs,
+        converged,
+        trace: Vec::new(),
+    };
     BlitzOutput { result, iterations, stopped_internally }
 }
 
@@ -292,5 +351,18 @@ mod tests {
         );
         // either it reached the (very tight) gap or it stopped internally
         assert!(out.result.converged || out.stopped_internally);
+    }
+
+    #[test]
+    fn workspace_variant_matches_one_shot() {
+        let ds = synth::leukemia_mini(34);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) / 12.0;
+        let cfg = BlitzConfig { tol: 1e-8, ..Default::default() };
+        let one_shot = blitz_solve(&ds.x, &ds.y, lambda, None, &cfg);
+        let mut ws = Workspace::new();
+        let _ = blitz_solve_ws(&ds.x, &ds.y, lambda * 2.0, None, &cfg, &mut ws);
+        let reused = blitz_solve_ws(&ds.x, &ds.y, lambda, None, &cfg, &mut ws);
+        assert_eq!(one_shot.result.beta, reused.result.beta);
+        assert_eq!(one_shot.result.gap, reused.result.gap);
     }
 }

@@ -5,13 +5,13 @@
 //! - the scikit-learn-style baseline (`extrapolate = false, screen = false`),
 //! - the "Gap Safe + θ_res / θ_accel" solvers of Figure 3,
 //! - and CELER's inner solver (invoked on a working-set subproblem).
+//!
+//! The epoch/gap-check loop itself lives in [`crate::solvers::engine`];
+//! this file only maps [`CdConfig`] onto it.
 
 use crate::data::design::DesignOps;
-use crate::lasso::primal;
-use crate::screening::ScreeningState;
-use crate::solvers::{DualState, GapCheck, SolveResult};
-use crate::util::soft_threshold;
-use std::time::Instant;
+use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
+use crate::solvers::SolveResult;
 
 /// Configuration for [`cd_solve`].
 #[derive(Debug, Clone)]
@@ -31,7 +31,7 @@ pub struct CdConfig {
     pub best_dual: bool,
     /// Dynamic Gap Safe screening.
     pub screen: bool,
-    /// Record a [`GapCheck`] per dual evaluation.
+    /// Record a [`crate::solvers::GapCheck`] per dual evaluation.
     pub trace: bool,
 }
 
@@ -55,6 +55,21 @@ impl CdConfig {
     pub fn vanilla() -> Self {
         CdConfig { extrapolate: false, ..Default::default() }
     }
+
+    /// The equivalent engine configuration.
+    pub(crate) fn engine(&self) -> EngineConfig {
+        EngineConfig {
+            tol: self.tol,
+            max_epochs: self.max_epochs,
+            gap_freq: self.gap_freq,
+            k: self.k,
+            extrapolate: self.extrapolate,
+            best_dual: self.best_dual,
+            screen: self.screen,
+            trace: self.trace,
+            stop: StopRule::DualityGap,
+        }
+    }
 }
 
 /// Solve the Lasso by cyclic CD. `beta0` warm-starts the iterate.
@@ -65,90 +80,27 @@ pub fn cd_solve<D: DesignOps>(
     beta0: Option<&[f64]>,
     cfg: &CdConfig,
 ) -> SolveResult {
-    let (n, p) = (x.n(), x.p());
-    assert_eq!(y.len(), n);
-    let start = Instant::now();
+    let mut ws = Workspace::new();
+    cd_solve_ws(x, y, lambda, beta0, cfg, &mut ws)
+}
 
-    let mut beta = match beta0 {
-        Some(b) => {
-            assert_eq!(b.len(), p);
-            b.to_vec()
-        }
-        None => vec![0.0; p],
+/// [`cd_solve`] on a caller-provided [`Workspace`] — reusing one
+/// workspace across a warm-started λ path makes every solve after the
+/// first allocation-free.
+pub fn cd_solve_ws<D: DesignOps>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CdConfig,
+    ws: &mut Workspace,
+) -> SolveResult {
+    let init = match beta0 {
+        Some(b) => Init::Warm(b),
+        None => Init::Zeros,
     };
-    // r = y − Xβ
-    let mut r = vec![0.0; n];
-    primal::residual(x, y, &beta, &mut r);
-
-    let norms_sq = x.col_norms_sq();
-    let mut screening = ScreeningState::all_active(p);
-    // Features with empty columns can never enter the model; drop them
-    // up-front so the CD loop never touches them.
-    let mut active: Vec<usize> = (0..p).filter(|&j| norms_sq[j] > 0.0).collect();
-    let col_norms: Vec<f64> = norms_sq.iter().map(|v| v.sqrt()).collect();
-
-    let mut dual = DualState::new(n, p, cfg.k, cfg.extrapolate, cfg.best_dual);
-    let mut xtr = vec![0.0; p];
-    let mut trace = Vec::new();
-    let mut gap = f64::INFINITY;
-    let mut epochs = 0;
-    let mut converged = false;
-
-    for epoch in 1..=cfg.max_epochs {
-        epochs = epoch;
-        // ---- one cyclic epoch over the active set ----
-        for &j in &active {
-            let nrm = norms_sq[j];
-            let g = x.col_dot(j, &r);
-            let old = beta[j];
-            let new = soft_threshold(old + g / nrm, lambda / nrm);
-            if new != old {
-                x.col_axpy(j, old - new, &mut r);
-                beta[j] = new;
-            }
-        }
-
-        // ---- dual / gap every f epochs ----
-        if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
-            let (d_res, d_accel) = dual.update(x, y, lambda, &r, &mut xtr);
-            let p_val = primal::primal_from_residual(&r, &beta, lambda);
-            gap = p_val - dual.dval;
-            // Screen only while unconverged: the reported (β, gap) pair
-            // must be the one that passed the stopping test — a screening
-            // mutation after the final check would go uncorrected.
-            if cfg.screen && gap > cfg.tol {
-                screening.screen(
-                    x,
-                    &dual.xtheta,
-                    &col_norms,
-                    gap,
-                    lambda,
-                    &mut beta,
-                    &mut r,
-                );
-                // `active` tracks the screening state (minus empty columns,
-                // which screening will also discard on its own).
-                active.retain(|&j| !screening.is_screened(j));
-            }
-            if cfg.trace {
-                trace.push(GapCheck {
-                    epoch,
-                    primal: p_val,
-                    dual_res: d_res,
-                    dual_accel: d_accel,
-                    gap,
-                    n_screened: screening.n_screened(),
-                    seconds: start.elapsed().as_secs_f64(),
-                });
-            }
-            if gap <= cfg.tol {
-                converged = true;
-                break;
-            }
-        }
-    }
-
-    SolveResult { beta, r, theta: dual.theta, gap, epochs, converged, trace }
+    let outcome = engine::solve(x, y, lambda, init, None, &cfg.engine(), ws, &mut CdStrategy);
+    ws.solve_result(outcome)
 }
 
 #[cfg(test)]
@@ -156,6 +108,7 @@ mod tests {
     use super::*;
     use crate::data::dense::DenseMatrix;
     use crate::data::design::DesignMatrix;
+    use crate::data::design::DesignOps;
     use crate::data::synth;
     use crate::lasso::dual as d;
     use crate::lasso::kkt;
@@ -300,5 +253,20 @@ mod tests {
                 sparse_out.beta[j]
             );
         }
+    }
+
+    #[test]
+    fn workspace_variant_matches_one_shot() {
+        let ds = synth::leukemia_mini(8);
+        let lambda = d::lambda_max(&ds.x, &ds.y) / 7.0;
+        let cfg = CdConfig { tol: 1e-9, ..Default::default() };
+        let one_shot = cd_solve(&ds.x, &ds.y, lambda, None, &cfg);
+        let mut ws = crate::solvers::engine::Workspace::new();
+        // dirty the workspace first, then reuse it
+        let _ = cd_solve_ws(&ds.x, &ds.y, lambda * 2.0, None, &cfg, &mut ws);
+        let reused = cd_solve_ws(&ds.x, &ds.y, lambda, None, &cfg, &mut ws);
+        assert_eq!(one_shot.beta, reused.beta);
+        assert_eq!(one_shot.epochs, reused.epochs);
+        assert_eq!(one_shot.gap, reused.gap);
     }
 }

@@ -10,11 +10,18 @@
 //!    pruning policy);
 //! 4. approximately solve the subproblem on `X_{W_t}` with Algorithm 1
 //!    (CD + dual extrapolation), warm-started.
+//!
+//! The subproblem is a *restriction*, not a new matrix: step 4 runs on a
+//! zero-copy [`DesignView`] of `X_{W_t}` through the shared
+//! [`crate::solvers::engine`], with all outer- and inner-loop buffers
+//! living in a reusable [`Workspace`]. One outer iteration performs no
+//! design-matrix copies and (once the workspace is warm) no allocation.
 
 use crate::data::design::{DesignMatrix, DesignOps};
+use crate::data::view::DesignView;
 use crate::lasso::{dual, primal, LassoProblem};
 use crate::screening::d_score;
-use crate::solvers::cd::{cd_solve, CdConfig};
+use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
 use crate::ws::{build_working_set, WsPolicy};
 use std::time::Instant;
@@ -111,36 +118,69 @@ pub fn celer_solve_on(
     beta0: Option<&[f64]>,
     cfg: &CelerConfig,
 ) -> CelerOutput {
-    let (n, p) = (x.n(), x.p());
+    let mut ws = Workspace::new();
+    celer_solve_on_ws(x, y, lambda, beta0, cfg, &mut ws)
+}
+
+/// [`celer_solve_on`] on a caller-provided reusable [`Workspace`]: the
+/// λ-path driver reuses one workspace for the whole warm-started path,
+/// eliminating per-λ reallocation of β / r / Xᵀr / the extrapolation ring.
+pub fn celer_solve_on_ws(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CelerConfig,
+    ws: &mut Workspace,
+) -> CelerOutput {
+    // Dispatch once; outer loop and view-based inner solves monomorphize.
+    match x {
+        DesignMatrix::Dense(d) => celer_generic(d, y, lambda, beta0, cfg, ws),
+        DesignMatrix::Sparse(s) => celer_generic(s, y, lambda, beta0, cfg, ws),
+    }
+}
+
+fn celer_generic<D: DesignOps>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CelerConfig,
+    ws: &mut Workspace,
+) -> CelerOutput {
+    let n = x.n();
+    let p = x.p();
     let start = Instant::now();
 
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
-    let mut r = vec![0.0; n];
-    primal::residual(x, y, &beta, &mut r);
-
-    let col_norms: Vec<f64> = x.col_norms_sq().iter().map(|v| v.sqrt()).collect();
+    // ---- outer-loop state in the reusable workspace ----
+    ws.init_primal(x, y, beta0);
 
     // init: θ⁰ = θ⁰_inner = y / ‖Xᵀy‖_∞ (Algorithm 4)
     let lmax = dual::lambda_max(x, y).max(f64::MIN_POSITIVE);
-    let mut theta: Vec<f64> = y.iter().map(|&v| v / lmax).collect();
-    let mut theta_inner = theta.clone();
+    ws.theta.clear();
+    ws.theta.extend(y.iter().map(|&v| v / lmax));
+    ws.theta_inner.clear();
+    ws.theta_inner.extend_from_slice(&ws.theta);
+    ws.theta_res.resize(n, 0.0);
 
     // warm start: p₁ = |S_{β⁰}| when β⁰ ≠ 0 (Algorithm 4)
     let mut policy = cfg.ws;
-    let s0 = primal::support_size(&beta);
+    let s0 = primal::support_size(&ws.beta);
     if s0 > 0 {
         policy.p1 = s0;
     }
 
     let mut iterations: Vec<CelerIteration> = Vec::new();
-    let mut xtr = vec![0.0; p];
-    let mut xtheta = vec![0.0; p];
+    ws.scratch.prepare(n, p);
+    ws.xtheta.resize(p, 0.0);
     // Xᵀθ_inner, maintained by the rescale step (one design sweep serves
     // both the feasibility rescale and next iteration's pricing).
-    let mut xtheta_inner = vec![0.0; p];
-    x.xt_vec(&theta_inner, &mut xtheta_inner);
-    let mut d_scores = vec![0.0; p];
-    let mut prev_ws: Vec<usize> = primal::support(&beta);
+    ws.xtheta_inner.resize(p, 0.0);
+    x.xt_vec(&ws.theta_inner, &mut ws.xtheta_inner);
+    ws.d_scores.resize(p, 0.0);
+
+    let mut inner_ws = ws.take_inner();
+    let mut prev_ws: Vec<usize> = primal::support(&ws.beta);
     let mut prev_ws_size = 0usize;
     let mut gap = f64::INFINITY;
     let mut converged = false;
@@ -149,16 +189,30 @@ pub fn celer_solve_on(
     let mut prev_gap = f64::INFINITY;
     for t in 1..=cfg.max_outer {
         // ---- θ^t = argmax D over {θ^{t-1}, θ_inner^{t-1}, θ_res^t} ----
-        x.xt_vec(&r, &mut xtr);
+        x.xt_vec(&ws.r, &mut ws.scratch.xtr);
         let mut denom = lambda;
-        for &v in xtr.iter() {
+        for &v in ws.scratch.xtr.iter() {
             denom = denom.max(v.abs());
         }
-        let theta_res: Vec<f64> = r.iter().map(|&v| v / denom).collect();
-        let winner = dual::best_dual_point(y, lambda, &[&theta, &theta_inner, &theta_res]);
+        {
+            let r = &ws.r;
+            ws.theta_res.clear();
+            ws.theta_res.extend(r.iter().map(|&v| v / denom));
+        }
+        let winner = dual::best_dual_point(
+            y,
+            lambda,
+            &[&ws.theta, &ws.theta_inner, &ws.theta_res],
+        );
         match winner {
-            1 => theta.copy_from_slice(&theta_inner),
-            2 => theta.copy_from_slice(&theta_res),
+            1 => {
+                let (theta, theta_inner) = (&mut ws.theta, &ws.theta_inner);
+                theta.copy_from_slice(theta_inner);
+            }
+            2 => {
+                let (theta, theta_res) = (&mut ws.theta, &ws.theta_res);
+                theta.copy_from_slice(theta_res);
+            }
             _ => {}
         }
 
@@ -171,19 +225,21 @@ pub fn celer_solve_on(
         // Correlations for θ_inner are cached from the rescale pass below
         // (§Perf: saves one full Xᵀ· sweep per outer iteration).
         let rank_winner =
-            dual::best_dual_point(y, lambda, &[&theta_inner, &theta_res]);
+            dual::best_dual_point(y, lambda, &[&ws.theta_inner, &ws.theta_res]);
         if rank_winner == 1 {
+            let (xtheta, xtr) = (&mut ws.xtheta, &ws.scratch.xtr);
             for (o, &v) in xtheta.iter_mut().zip(xtr.iter()) {
                 *o = v / denom;
             }
         } else {
-            xtheta.copy_from_slice(&xtheta_inner);
+            let (xtheta, xtheta_inner) = (&mut ws.xtheta, &ws.xtheta_inner);
+            xtheta.copy_from_slice(xtheta_inner);
         }
 
         // ---- global gap / stop ----
-        let p_val = primal::primal_from_residual(&r, &beta, lambda);
-        gap = p_val - dual::dual_objective(y, &theta, lambda);
-        let support = primal::support(&beta);
+        let p_val = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
+        gap = p_val - dual::dual_objective(y, &ws.theta, lambda);
+        let support = primal::support(&ws.beta);
         if gap <= cfg.tol {
             converged = true;
             iterations.push(CelerIteration {
@@ -199,12 +255,10 @@ pub fn celer_solve_on(
         }
 
         // ---- working set ----
+        // (empty columns get d_j = +∞ and are excluded centrally by
+        // build_working_set — no sentinel values needed here)
         for j in 0..p {
-            d_scores[j] = d_score(xtheta[j].abs(), col_norms[j]);
-            if d_scores[j].is_infinite() {
-                // empty column: keep out of the WS by a huge finite score
-                d_scores[j] = f64::MAX;
-            }
+            ws.d_scores[j] = d_score(ws.xtheta[j].abs(), ws.col_norms[j]);
         }
         // Stagnation safeguard: when an outer iteration barely improved
         // the gap, the working set was too small (or mis-prioritized) —
@@ -233,14 +287,17 @@ pub fn celer_solve_on(
             pt = pt.max((2 * prev_ws_size).min(p));
         }
         let pt = pt.max(forced.len()); // forced members always fit
-        let ws = build_working_set(&mut d_scores, forced, pt);
+        let ws_idx = build_working_set(&mut ws.d_scores, forced, pt);
 
-        // ---- inner solve on X_{W_t} ----
+        // ---- inner solve on a zero-copy view of X_{W_t} ----
         let eps_t =
             if policy.prune { cfg.inner_tol_ratio * gap } else { cfg.tol };
-        let x_ws = x.select_columns(&ws);
-        let beta_ws: Vec<f64> = ws.iter().map(|&j| beta[j]).collect();
-        let inner_cfg = CdConfig {
+        ws.beta_ws.clear();
+        {
+            let beta = &ws.beta;
+            ws.beta_ws.extend(ws_idx.iter().map(|&j| beta[j]));
+        }
+        let inner_cfg = EngineConfig {
             tol: eps_t,
             max_epochs: cfg.max_inner_epochs,
             gap_freq: cfg.gap_freq,
@@ -249,46 +306,68 @@ pub fn celer_solve_on(
             best_dual: true,
             screen: false,
             trace: false,
+            stop: StopRule::DualityGap,
         };
-        let inner = cd_solve(&x_ws, y, lambda, Some(&beta_ws), &inner_cfg);
-        total_inner_epochs += inner.epochs;
+        let inner_epochs = {
+            let view = DesignView::new(x, &ws_idx, &ws.norms_sq);
+            let outcome = engine::solve(
+                &view,
+                y,
+                lambda,
+                Init::Warm(&ws.beta_ws),
+                None,
+                &inner_cfg,
+                &mut inner_ws,
+                &mut CdStrategy,
+            );
+            outcome.epochs
+        };
+        total_inner_epochs += inner_epochs;
 
         // ---- lift the subproblem solution back ----
-        beta.fill(0.0);
-        for (i, &j) in ws.iter().enumerate() {
-            beta[j] = inner.beta[i];
+        ws.beta.fill(0.0);
+        for (i, &j) in ws_idx.iter().enumerate() {
+            ws.beta[j] = inner_ws.beta[i];
         }
-        r.copy_from_slice(&inner.r);
+        ws.r.copy_from_slice(&inner_ws.r);
 
         // θ_inner: subproblem-feasible; rescale to be feasible for the
         // full design. (Algorithm 4 writes max(λ, ‖Xᵀθ‖_∞) which only
         // applies to residual-scale vectors; θ is already unit-scale so
         // the correct rescaling is max(1, ‖Xᵀθ‖_∞).) The Xᵀθ_inner sweep
         // is kept — it doubles as next iteration's pricing vector.
-        x.xt_vec(&inner.theta, &mut xtheta_inner);
-        let s = xtheta_inner.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
+        x.xt_vec(&inner_ws.dual.theta, &mut ws.xtheta_inner);
+        let s = ws.xtheta_inner.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
         let inv_s = 1.0 / s;
-        theta_inner.clear();
-        theta_inner.extend(inner.theta.iter().map(|&v| v * inv_s));
-        for v in xtheta_inner.iter_mut() {
+        ws.theta_inner.clear();
+        ws.theta_inner.extend(inner_ws.dual.theta.iter().map(|&v| v * inv_s));
+        for v in ws.xtheta_inner.iter_mut() {
             *v *= inv_s;
         }
 
         iterations.push(CelerIteration {
             t,
             gap,
-            ws_size: ws.len(),
+            ws_size: ws_idx.len(),
             support_size: support.len(),
-            inner_epochs: inner.epochs,
+            inner_epochs,
             seconds: start.elapsed().as_secs_f64(),
             dual_winner: winner,
         });
-        prev_ws_size = ws.len();
-        prev_ws = ws;
+        prev_ws_size = ws_idx.len();
+        prev_ws = ws_idx;
     }
 
-    let epochs = total_inner_epochs;
-    let result = SolveResult { beta, r, theta, gap, epochs, converged, trace: Vec::new() };
+    ws.put_inner(inner_ws);
+    let result = SolveResult {
+        beta: ws.beta.clone(),
+        r: ws.r.clone(),
+        theta: ws.theta.clone(),
+        gap,
+        epochs: total_inner_epochs,
+        converged,
+        trace: Vec::new(),
+    };
     CelerOutput { result, iterations }
 }
 
@@ -398,5 +477,20 @@ mod tests {
                 "outer gaps non-increasing: {gaps:?}"
             );
         }
+    }
+
+    #[test]
+    fn workspace_variant_matches_one_shot() {
+        let ds = synth::leukemia_mini(27);
+        let lambda = dual::lambda_max(&ds.x, &ds.y) / 10.0;
+        let cfg = CelerConfig { tol: 1e-9, ..Default::default() };
+        let one_shot = celer_solve_on(&ds.x, &ds.y, lambda, None, &cfg);
+        let mut ws = Workspace::new();
+        // dirty the workspace with a different λ first
+        let _ = celer_solve_on_ws(&ds.x, &ds.y, lambda * 3.0, None, &cfg, &mut ws);
+        let reused = celer_solve_on_ws(&ds.x, &ds.y, lambda, None, &cfg, &mut ws);
+        assert_eq!(one_shot.result.beta, reused.result.beta);
+        assert_eq!(one_shot.result.gap, reused.result.gap);
+        assert_eq!(one_shot.iterations.len(), reused.iterations.len());
     }
 }

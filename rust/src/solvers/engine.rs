@@ -1,0 +1,477 @@
+//! The shared solver engine: one iterate/check loop, one set of scratch
+//! buffers, every solver a thin strategy on top.
+//!
+//! Motivation (see `ARCHITECTURE.md`): before this layer existed, each of
+//! the five Lasso solvers (cd, ista/fista, glmnet, blitz, celer) carried
+//! its own copy of the residual bookkeeping, the periodic
+//! gap-check → dual-update → screen → stop sequence, and its own freshly
+//! allocated `beta`/`r`/`Xᵀr`/extrapolation buffers per call. The engine
+//! centralizes both:
+//!
+//! - [`Workspace`] owns every solver-lifetime buffer (primal iterate,
+//!   residual, dual state + extrapolation ring, correlation scratch,
+//!   screening state). It is reusable across solves: a warm-started
+//!   λ path reuses one workspace for the whole path, and CELER/Blitz
+//!   reuse a nested workspace for all inner subproblem solves — so the
+//!   hot path performs no per-λ or per-outer-iteration allocation.
+//! - [`solve`] runs the epoch loop: call the [`Strategy`] for one primal
+//!   epoch, then (every `gap_freq` epochs) refresh the dual point,
+//!   evaluate the duality gap, optionally apply dynamic Gap Safe
+//!   screening, record a trace entry, and test the stopping rule.
+//!
+//! Strategies implement only what genuinely differs between solvers: the
+//! primal epoch (cyclic CD vs. a proximal-gradient step) and, for
+//! FISTA, which residual the dual machinery should see.
+
+use crate::data::design::DesignOps;
+use crate::lasso::primal;
+use crate::screening::ScreeningState;
+use crate::solvers::{DualScratch, DualState, GapCheck, SolveResult};
+use crate::util::soft_threshold;
+use std::time::Instant;
+
+/// How the engine decides it is done.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopRule {
+    /// Stop when the duality gap drops below `tol` (checked every
+    /// `gap_freq` epochs; maintains the dual state).
+    DualityGap,
+    /// Stop when the primal objective decreases by less than `tol`
+    /// between epochs (checked every epoch; the GLMNET criterion — no
+    /// dual machinery runs at all).
+    PrimalDecrease,
+}
+
+/// Engine configuration (the union of what the strategies need).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Stopping tolerance; its meaning depends on [`StopRule`].
+    pub tol: f64,
+    /// Maximum primal epochs.
+    pub max_epochs: usize,
+    /// Dual/gap evaluation frequency in epochs (ignored by
+    /// [`StopRule::PrimalDecrease`], which checks every epoch).
+    pub gap_freq: usize,
+    /// Extrapolation depth K.
+    pub k: usize,
+    /// Compute θ_accel (Definition 1).
+    pub extrapolate: bool,
+    /// Keep the best dual point across checks (Eq. 13).
+    pub best_dual: bool,
+    /// Dynamic Gap Safe screening.
+    pub screen: bool,
+    /// Record a [`GapCheck`] per dual evaluation.
+    pub trace: bool,
+    /// Stopping rule.
+    pub stop: StopRule,
+}
+
+/// How to initialize the primal iterate for a run.
+#[derive(Debug, Clone, Copy)]
+pub enum Init<'a> {
+    /// β = 0, residual = y.
+    Zeros,
+    /// Copy the given β and compute the residual with one matvec.
+    Warm(&'a [f64]),
+    /// The workspace already holds a valid (β, r) pair for this design —
+    /// continue from it without recomputing anything. Used by GLMNET's
+    /// repeated KKT passes, which resume CD on a grown active set.
+    Resume,
+}
+
+/// What a run reports. The solution itself (β, r, θ) stays in the
+/// [`Workspace`], so outer loops (CELER, Blitz, GLMNET, paths) can read
+/// it in place; [`Workspace::solve_result`] clones it out for the public
+/// one-shot APIs.
+#[derive(Debug, Clone)]
+pub struct EngineOutcome {
+    /// Final duality gap (`f64::INFINITY` when the stop rule never
+    /// evaluates one).
+    pub gap: f64,
+    /// Primal epochs consumed.
+    pub epochs: usize,
+    /// Whether the stopping rule was met (vs. the epoch cap).
+    pub converged: bool,
+    /// Per-check trace (empty unless `cfg.trace`).
+    pub trace: Vec<GapCheck>,
+}
+
+/// A solver strategy: the per-epoch primal update, plus optional hooks
+/// for solvers whose dual machinery needs a different residual than the
+/// one the epochs maintain (FISTA).
+pub trait Strategy<D: DesignOps> {
+    /// Run one primal epoch, updating `beta` and `r` in place.
+    ///
+    /// `active` is the engine-maintained active set (all non-empty
+    /// columns minus anything screened); `norms_sq` are cached `‖x_j‖²`.
+    /// Strategies are free to ignore `active` (ISTA updates every
+    /// coordinate with full-vector operations).
+    fn epoch(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        lambda: f64,
+        beta: &mut [f64],
+        r: &mut [f64],
+        active: &[usize],
+        norms_sq: &[f64],
+    );
+
+    /// Write the residual the dual update / primal value should use into
+    /// `out`. Default: the maintained residual itself. FISTA overrides
+    /// this because its epochs maintain `y − Xz` (momentum point) while
+    /// checks must evaluate at β.
+    fn fill_check_residual(&mut self, x: &D, y: &[f64], beta: &[f64], r: &[f64], out: &mut [f64]) {
+        let _ = (x, y, beta);
+        out.copy_from_slice(r);
+    }
+
+    /// Called once after the loop so the workspace residual reflects the
+    /// returned β. Default: no-op (CD already maintains `r = y − Xβ`).
+    fn finalize(&mut self, x: &D, y: &[f64], beta: &[f64], r: &mut [f64]) {
+        let _ = (x, y, beta, r);
+    }
+}
+
+/// Cyclic coordinate descent over the active set — the strategy behind
+/// `cd_solve`, GLMNET's inner passes, and the CELER/Blitz subproblem
+/// solves (where `x` is a zero-copy
+/// [`DesignView`](crate::data::view::DesignView)).
+pub struct CdStrategy;
+
+impl<D: DesignOps> Strategy<D> for CdStrategy {
+    fn epoch(
+        &mut self,
+        x: &D,
+        _y: &[f64],
+        lambda: f64,
+        beta: &mut [f64],
+        r: &mut [f64],
+        active: &[usize],
+        norms_sq: &[f64],
+    ) {
+        for &j in active {
+            let nrm = norms_sq[j];
+            let g = x.col_dot(j, r);
+            let old = beta[j];
+            let new = soft_threshold(old + g / nrm, lambda / nrm);
+            if new != old {
+                x.col_axpy(j, old - new, r);
+                beta[j] = new;
+            }
+        }
+    }
+}
+
+/// Reusable solver state. One workspace serves any number of sequential
+/// solves (different λ, different working sets, different solvers); its
+/// buffers are resized — never reallocated once warm — on each run.
+#[derive(Default)]
+pub struct Workspace {
+    /// Primal iterate β (length p of the most recent run).
+    pub beta: Vec<f64>,
+    /// Maintained residual (length n).
+    pub r: Vec<f64>,
+    /// Check-time residual (FISTA evaluates at β, not the iterate).
+    pub r_check: Vec<f64>,
+    /// Cached `‖x_j‖²` for the current design.
+    pub norms_sq: Vec<f64>,
+    /// Cached `‖x_j‖` (screening uses plain norms).
+    pub col_norms: Vec<f64>,
+    /// Engine-maintained active set.
+    pub active: Vec<usize>,
+    /// Dual point machinery (θ, Xᵀθ, extrapolation ring).
+    pub dual: DualState,
+    /// Gap-check scratch (Xᵀr, accel buffers).
+    pub scratch: DualScratch,
+    /// Dynamic screening state.
+    pub screening: ScreeningState,
+    /// Outer-loop scratch for working-set solvers (CELER/Blitz): dual
+    /// candidates and pricing buffers.
+    pub theta: Vec<f64>,
+    pub theta_inner: Vec<f64>,
+    pub theta_res: Vec<f64>,
+    pub xtheta: Vec<f64>,
+    pub xtheta_inner: Vec<f64>,
+    pub d_scores: Vec<f64>,
+    /// Subproblem warm-start coefficients (length |W_t|).
+    pub beta_ws: Vec<f64>,
+    /// Nested workspace for inner (working-set) solves, allocated on
+    /// first use and reused for every subsequent subproblem.
+    pub inner: Option<Box<Workspace>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Initialize the primal state for a solve on `x`: cached column
+    /// norms, β from `beta0` (zeros when `None`), and the residual
+    /// `r = y − Xβ`. Shared by [`solve`]'s non-Resume path and the
+    /// outer working-set loops (CELER / Blitz / GLMNET), so the
+    /// buffer-preparation sequence exists exactly once.
+    pub fn init_primal<D: DesignOps>(&mut self, x: &D, y: &[f64], beta0: Option<&[f64]>) {
+        let n = x.n();
+        let p = x.p();
+        assert_eq!(y.len(), n);
+        self.norms_sq.resize(p, 0.0);
+        crate::util::par::par_fill(&mut self.norms_sq, |j| x.col_norm_sq(j));
+        self.col_norms.resize(p, 0.0);
+        for j in 0..p {
+            self.col_norms[j] = self.norms_sq[j].sqrt();
+        }
+        self.beta.resize(p, 0.0);
+        match beta0 {
+            Some(b) => {
+                assert_eq!(b.len(), p);
+                self.beta.copy_from_slice(b);
+            }
+            None => self.beta.fill(0.0),
+        }
+        self.r.resize(n, 0.0);
+        primal::residual(x, y, &self.beta, &mut self.r);
+    }
+
+    /// Take the nested inner workspace (creating it on first use). The
+    /// caller must hand it back via [`Workspace::put_inner`] — taking it
+    /// out breaks the borrow between the outer workspace (whose buffers
+    /// back the `DesignView`) and the inner solve's mutable state.
+    pub fn take_inner(&mut self) -> Box<Workspace> {
+        self.inner.take().unwrap_or_default()
+    }
+
+    /// Return the nested inner workspace after an inner solve.
+    pub fn put_inner(&mut self, inner: Box<Workspace>) {
+        self.inner = Some(inner);
+    }
+
+    /// Clone the workspace's solution out into a [`SolveResult`].
+    pub fn solve_result(&self, outcome: EngineOutcome) -> SolveResult {
+        SolveResult {
+            beta: self.beta.clone(),
+            r: self.r.clone(),
+            theta: self.dual.theta.clone(),
+            gap: outcome.gap,
+            epochs: outcome.epochs,
+            converged: outcome.converged,
+            trace: outcome.trace,
+        }
+    }
+}
+
+/// Run the engine: `strategy` epochs over `x` until `cfg.stop` fires or
+/// `cfg.max_epochs` is reached. The solution is left in `ws` (β in
+/// `ws.beta`, residual in `ws.r`, dual point in `ws.dual.theta`).
+///
+/// `active0`: explicit initial active set (GLMNET's strong/ever-active
+/// set); `None` means every non-empty column.
+pub fn solve<D: DesignOps, S: Strategy<D>>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    init: Init<'_>,
+    active0: Option<&[usize]>,
+    cfg: &EngineConfig,
+    ws: &mut Workspace,
+    strategy: &mut S,
+) -> EngineOutcome {
+    let n = x.n();
+    let p = x.p();
+    assert_eq!(y.len(), n);
+    let start = Instant::now();
+    let resume = matches!(init, Init::Resume);
+
+    // ---- buffers (capacity reused across runs) ----
+    if !resume {
+        let beta0 = match init {
+            Init::Zeros => None,
+            Init::Warm(b) => Some(b),
+            Init::Resume => unreachable!(),
+        };
+        ws.init_primal(x, y, beta0);
+        ws.dual.reset(n, p, cfg.k.max(1), cfg.extrapolate, cfg.best_dual);
+        ws.scratch.prepare(n, p);
+        ws.screening.reset_all_active(p);
+    } else {
+        // Resume continues a previous run's (β, r) without re-resetting
+        // the dual/screening state — which is only sound when that state
+        // is not consulted. Guard the unsupported combinations instead
+        // of silently reusing a stale dual point or screened set.
+        assert!(
+            matches!(cfg.stop, StopRule::PrimalDecrease) && !cfg.screen,
+            "Init::Resume supports only StopRule::PrimalDecrease without \
+             screening (the dual/screening state is not re-initialized)"
+        );
+        assert_eq!(ws.beta.len(), p, "Resume requires a prepared workspace");
+        assert_eq!(ws.r.len(), n, "Resume requires a prepared workspace");
+        assert_eq!(ws.norms_sq.len(), p, "Resume requires cached norms");
+    }
+    ws.r_check.resize(n, 0.0);
+
+    // ---- active set ----
+    ws.active.clear();
+    match active0 {
+        Some(a) => {
+            let norms = &ws.norms_sq;
+            ws.active.extend(a.iter().copied().filter(|&j| norms[j] > 0.0));
+        }
+        None => {
+            // Empty columns can never enter the model; drop them up-front
+            // so the epoch loop never touches them.
+            let norms = &ws.norms_sq;
+            ws.active.extend((0..p).filter(|&j| norms[j] > 0.0));
+        }
+    }
+
+    let use_gap = matches!(cfg.stop, StopRule::DualityGap);
+    let mut trace: Vec<GapCheck> = Vec::new();
+    let mut gap = f64::INFINITY;
+    let mut epochs = 0usize;
+    let mut converged = false;
+    let mut prev_obj = if use_gap {
+        f64::INFINITY
+    } else {
+        primal::primal_from_residual(&ws.r, &ws.beta, lambda)
+    };
+
+    for epoch in 1..=cfg.max_epochs {
+        epochs = epoch;
+        // ---- one primal epoch ----
+        strategy.epoch(x, y, lambda, &mut ws.beta, &mut ws.r, &ws.active, &ws.norms_sq);
+
+        match cfg.stop {
+            StopRule::PrimalDecrease => {
+                let obj = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
+                if prev_obj - obj < cfg.tol {
+                    converged = true;
+                    break;
+                }
+                prev_obj = obj;
+            }
+            StopRule::DualityGap => {
+                if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
+                    strategy.fill_check_residual(x, y, &ws.beta, &ws.r, &mut ws.r_check);
+                    let (d_res, d_accel) =
+                        ws.dual.update(x, y, lambda, &ws.r_check, &mut ws.scratch);
+                    let p_val = primal::primal_from_residual(&ws.r_check, &ws.beta, lambda);
+                    gap = p_val - ws.dual.dval;
+                    // Screen only while unconverged: the reported (β, gap)
+                    // pair must be the one that passed the stopping test —
+                    // a screening mutation after the final check would go
+                    // uncorrected.
+                    if cfg.screen && gap > cfg.tol {
+                        ws.screening.screen(
+                            x,
+                            &ws.dual.xtheta,
+                            &ws.col_norms,
+                            gap,
+                            lambda,
+                            &mut ws.beta,
+                            &mut ws.r,
+                        );
+                        let screening = &ws.screening;
+                        ws.active.retain(|&j| !screening.is_screened(j));
+                    }
+                    if cfg.trace {
+                        trace.push(GapCheck {
+                            epoch,
+                            primal: p_val,
+                            dual_res: d_res,
+                            dual_accel: d_accel,
+                            gap,
+                            n_screened: ws.screening.n_screened(),
+                            seconds: start.elapsed().as_secs_f64(),
+                        });
+                    }
+                    if gap <= cfg.tol {
+                        converged = true;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    strategy.finalize(x, y, &ws.beta, &mut ws.r);
+    EngineOutcome { gap, epochs, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+
+    fn engine_cfg(tol: f64) -> EngineConfig {
+        EngineConfig {
+            tol,
+            max_epochs: 10_000,
+            gap_freq: 10,
+            k: 5,
+            extrapolate: true,
+            best_dual: true,
+            screen: false,
+            trace: false,
+            stop: StopRule::DualityGap,
+        }
+    }
+
+    #[test]
+    fn engine_solves_orthogonal_design() {
+        // Unit-norm orthogonal columns: β̂_j = ST(x_jᵀy, λ).
+        let x = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let y = [3.0, 0.4];
+        let mut ws = Workspace::new();
+        let out = solve(&x, &y, 1.0, Init::Zeros, None, &engine_cfg(1e-12), &mut ws, &mut CdStrategy);
+        assert!(out.converged);
+        assert!((ws.beta[0] - 2.0).abs() < 1e-10);
+        assert_eq!(ws.beta[1], 0.0);
+    }
+
+    #[test]
+    fn workspace_reuse_is_equivalent_to_fresh() {
+        let ds = crate::data::synth::leukemia_mini(77);
+        let lambda = crate::lasso::dual::lambda_max(&ds.x, &ds.y) / 10.0;
+        let cfg = engine_cfg(1e-9);
+        let mut fresh = Workspace::new();
+        let a = solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut fresh, &mut CdStrategy);
+        // dirty the reused workspace with an unrelated solve first
+        let mut reused = Workspace::new();
+        let _ = solve(&ds.x, &ds.y, lambda * 3.0, Init::Zeros, None, &cfg, &mut reused, &mut CdStrategy);
+        let b = solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut reused, &mut CdStrategy);
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.gap, b.gap);
+        assert_eq!(fresh.beta, reused.beta);
+        assert_eq!(fresh.r, reused.r);
+        assert_eq!(fresh.dual.theta, reused.dual.theta);
+    }
+
+    #[test]
+    fn primal_decrease_stop_matches_manual_loop() {
+        let ds = crate::data::synth::leukemia_mini(78);
+        let lambda = crate::lasso::dual::lambda_max(&ds.x, &ds.y) / 5.0;
+        let cfg = EngineConfig { tol: 1e-8, stop: StopRule::PrimalDecrease, ..engine_cfg(1e-8) };
+        let mut ws = Workspace::new();
+        let out = solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut ws, &mut CdStrategy);
+        assert!(out.converged, "primal-decrease loop terminates");
+        // the gap field is untouched by this stop rule
+        assert!(out.gap.is_infinite());
+    }
+
+    #[test]
+    fn resume_continues_without_reinit() {
+        let ds = crate::data::synth::leukemia_mini(79);
+        let lambda = crate::lasso::dual::lambda_max(&ds.x, &ds.y) / 5.0;
+        let mut cfg = EngineConfig { stop: StopRule::PrimalDecrease, ..engine_cfg(1e-10) };
+        cfg.max_epochs = 3;
+        let mut ws = Workspace::new();
+        let _ = solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut ws, &mut CdStrategy);
+        let obj_after_first = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
+        cfg.max_epochs = 10_000;
+        cfg.tol = 1e-12;
+        let out = solve(&ds.x, &ds.y, lambda, Init::Resume, None, &cfg, &mut ws, &mut CdStrategy);
+        assert!(out.converged);
+        let obj_final = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
+        assert!(obj_final <= obj_after_first + 1e-12, "resume only improves");
+    }
+}

@@ -6,11 +6,15 @@
 //! does not control the duality gap, the identified supports contain many
 //! features outside the equicorrelation set ("false positives") at loose
 //! tolerances — unlike gap-controlled solvers.
+//!
+//! The inner CD-until-primal-stagnation loop is the shared
+//! [`crate::solvers::engine`] under [`StopRule::PrimalDecrease`]; this
+//! file owns only the strong-rule / KKT outer passes.
 
 use crate::data::design::{DesignMatrix, DesignOps};
 use crate::lasso::{dual, primal};
+use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
-use crate::util::soft_threshold;
 
 /// GLMNET-style configuration.
 #[derive(Debug, Clone)]
@@ -44,21 +48,53 @@ pub fn glmnet_solve(
     beta0: Option<&[f64]>,
     cfg: &GlmnetConfig,
 ) -> SolveResult {
-    let (n, p) = (x.n(), x.p());
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
-    let mut r = vec![0.0; n];
-    primal::residual(x, y, &beta, &mut r);
-    let norms_sq = x.col_norms_sq();
+    let mut ws = Workspace::new();
+    glmnet_solve_ws(x, y, lambda, lambda_prev, beta0, cfg, &mut ws)
+}
+
+/// [`glmnet_solve`] on a caller-provided reusable [`Workspace`].
+pub fn glmnet_solve_ws(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    lambda_prev: f64,
+    beta0: Option<&[f64]>,
+    cfg: &GlmnetConfig,
+    ws: &mut Workspace,
+) -> SolveResult {
+    // Dispatch once so the inner loops monomorphize per storage kind.
+    match x {
+        DesignMatrix::Dense(d) => glmnet_generic(d, y, lambda, lambda_prev, beta0, cfg, ws),
+        DesignMatrix::Sparse(s) => glmnet_generic(s, y, lambda, lambda_prev, beta0, cfg, ws),
+    }
+}
+
+fn glmnet_generic<D: DesignOps>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    lambda_prev: f64,
+    beta0: Option<&[f64]>,
+    cfg: &GlmnetConfig,
+    ws: &mut Workspace,
+) -> SolveResult {
+    let n = x.n();
+    let p = x.p();
+
+    // ---- iterate + cached norms live in the workspace ----
+    ws.init_primal(x, y, beta0);
 
     // ---- sequential strong rule on the warm-start residual ----
-    let mut xtr = vec![0.0; p];
-    x.xt_vec(&r, &mut xtr);
+    ws.scratch.prepare(n, p);
+    x.xt_vec(&ws.r, &mut ws.scratch.xtr);
     let strong_thresh = 2.0 * lambda - lambda_prev;
-    let mut in_strong: Vec<bool> = (0..p)
-        .map(|j| norms_sq[j] > 0.0 && xtr[j].abs() >= strong_thresh)
-        .collect();
+    let mut in_strong: Vec<bool> = {
+        let norms = &ws.norms_sq;
+        let xtr = &ws.scratch.xtr;
+        (0..p).map(|j| norms[j] > 0.0 && xtr[j].abs() >= strong_thresh).collect()
+    };
     // ever-active set starts from the warm-start support
-    let mut in_active: Vec<bool> = (0..p).map(|j| beta[j] != 0.0).collect();
+    let mut in_active: Vec<bool> = ws.beta.iter().map(|&b| b != 0.0).collect();
     for j in 0..p {
         if in_active[j] {
             in_strong[j] = true;
@@ -73,53 +109,49 @@ pub fn glmnet_solve(
         }
     }
 
+    let inner_cfg = EngineConfig {
+        tol: cfg.tol,
+        max_epochs: cfg.max_inner_epochs,
+        gap_freq: 1,
+        k: 1,
+        extrapolate: false,
+        best_dual: false,
+        screen: false,
+        trace: false,
+        stop: StopRule::PrimalDecrease,
+    };
+
     let mut epochs = 0usize;
     let mut converged = false;
     for _pass in 0..cfg.max_outer {
         // ---- CD on the active set until primal decrease < tol ----
-        let mut prev_obj = primal::primal_from_residual(&r, &beta, lambda);
-        for _ in 0..cfg.max_inner_epochs {
-            epochs += 1;
-            for &j in &active {
-                let nrm = norms_sq[j];
-                if nrm == 0.0 {
-                    continue;
-                }
-                let g = x.col_dot(j, &r);
-                let old = beta[j];
-                let new = soft_threshold(old + g / nrm, lambda / nrm);
-                if new != old {
-                    x.col_axpy(j, old - new, &mut r);
-                    beta[j] = new;
-                }
-            }
-            let obj = primal::primal_from_residual(&r, &beta, lambda);
-            if prev_obj - obj < cfg.tol {
-                break;
-            }
-            prev_obj = obj;
-        }
+        let outcome =
+            engine::solve(x, y, lambda, Init::Resume, Some(&active), &inner_cfg, ws, &mut CdStrategy);
+        epochs += outcome.epochs;
 
         // ---- KKT on the strong set ----
-        x.xt_vec(&r, &mut xtr);
+        x.xt_vec(&ws.r, &mut ws.scratch.xtr);
         let mut added = false;
-        for j in 0..p {
-            if in_strong[j] && !in_active[j] && xtr[j].abs() > lambda + cfg.kkt_tol {
-                in_active[j] = true;
-                active.push(j);
-                added = true;
+        {
+            let xtr = &ws.scratch.xtr;
+            for j in 0..p {
+                if in_strong[j] && !in_active[j] && xtr[j].abs() > lambda + cfg.kkt_tol {
+                    in_active[j] = true;
+                    active.push(j);
+                    added = true;
+                }
             }
-        }
-        if added {
-            continue;
-        }
-        // ---- KKT on all features (strong-rule violations are rare) ----
-        for j in 0..p {
-            if !in_active[j] && norms_sq[j] > 0.0 && xtr[j].abs() > lambda + cfg.kkt_tol {
-                in_active[j] = true;
-                in_strong[j] = true;
-                active.push(j);
-                added = true;
+            if !added {
+                // ---- KKT on all features (strong-rule violations are rare) ----
+                let norms = &ws.norms_sq;
+                for j in 0..p {
+                    if !in_active[j] && norms[j] > 0.0 && xtr[j].abs() > lambda + cfg.kkt_tol {
+                        in_active[j] = true;
+                        in_strong[j] = true;
+                        active.push(j);
+                        added = true;
+                    }
+                }
             }
         }
         if !added {
@@ -129,11 +161,18 @@ pub fn glmnet_solve(
     }
 
     // report a duality gap for diagnostics (GLMNET itself never computes it)
-    let theta = dual::rescale_to_feasible(x, &r, lambda);
-    let gap = primal::primal_from_residual(&r, &beta, lambda)
+    let theta = dual::rescale_to_feasible(x, &ws.r, lambda);
+    let gap = primal::primal_from_residual(&ws.r, &ws.beta, lambda)
         - dual::dual_objective(y, &theta, lambda);
-    let _ = n;
-    SolveResult { beta, r, theta, gap, epochs, converged, trace: Vec::new() }
+    SolveResult {
+        beta: ws.beta.clone(),
+        r: ws.r.clone(),
+        theta,
+        gap,
+        epochs,
+        converged,
+        trace: Vec::new(),
+    }
 }
 
 #[cfg(test)]
@@ -201,5 +240,19 @@ mod tests {
         let second = glmnet_solve(&ds.x, &ds.y, l2, l1, Some(&first.beta), &GlmnetConfig::default());
         assert!(second.converged);
         assert!(second.support_size() >= first.support_size());
+    }
+
+    #[test]
+    fn workspace_variant_matches_one_shot() {
+        let ds = synth::leukemia_mini(44);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let lambda = lmax / 8.0;
+        let cfg = GlmnetConfig::default();
+        let one_shot = glmnet_solve(&ds.x, &ds.y, lambda, lmax, None, &cfg);
+        let mut ws = Workspace::new();
+        let _ = glmnet_solve_ws(&ds.x, &ds.y, lmax / 2.0, lmax, None, &cfg, &mut ws);
+        let reused = glmnet_solve_ws(&ds.x, &ds.y, lambda, lmax, None, &cfg, &mut ws);
+        assert_eq!(one_shot.beta, reused.beta);
+        assert_eq!(one_shot.epochs, reused.epochs);
     }
 }

@@ -2,14 +2,16 @@
 //!
 //! ISTA is the setting of the paper's Theorem 1: after finite support
 //! identification its iterates form a noiseless VAR process, so dual
-//! extrapolation provably converges to θ̂. We reuse the same
-//! [`DualState`] machinery as CD.
+//! extrapolation provably converges to θ̂. The gap-check loop and dual
+//! machinery are the shared [`crate::solvers::engine`]; this file only
+//! supplies the proximal-gradient epoch (and FISTA's momentum bookkeeping)
+//! as a [`Strategy`].
 
 use crate::data::design::DesignOps;
 use crate::lasso::primal;
-use crate::solvers::{DualState, GapCheck, SolveResult};
+use crate::solvers::engine::{self, EngineConfig, Init, StopRule, Strategy, Workspace};
+use crate::solvers::SolveResult;
 use crate::util::soft_threshold;
-use std::time::Instant;
 
 /// Configuration for [`ista_solve`].
 #[derive(Debug, Clone)]
@@ -72,6 +74,81 @@ pub fn spectral_norm_sq<D: DesignOps>(x: &D, iters: usize, seed: u64) -> f64 {
     lam.max(0.0)
 }
 
+/// The proximal-gradient epoch. Invariant: the engine-maintained residual
+/// is `y − Xz` where `z` is the (momentum) iterate the gradient step
+/// reads; for plain ISTA `z = β` so it coincides with the usual residual.
+struct IstaStrategy {
+    /// Lipschitz constant `‖X‖₂²`; step size is `1/μ`.
+    mu: f64,
+    /// Momentum point z (equals β when `fista` is off).
+    z: Vec<f64>,
+    /// Previous β (FISTA momentum combination).
+    beta_prev: Vec<f64>,
+    /// Gradient scratch `Xᵀr`.
+    grad: Vec<f64>,
+    /// Momentum scalar t_k.
+    t_mom: f64,
+    fista: bool,
+    /// True until the first epoch initializes `z` from the warm start.
+    fresh: bool,
+}
+
+impl<D: DesignOps> Strategy<D> for IstaStrategy {
+    fn epoch(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        lambda: f64,
+        beta: &mut [f64],
+        r: &mut [f64],
+        _active: &[usize],
+        _norms_sq: &[f64],
+    ) {
+        let p = beta.len();
+        if self.fresh {
+            // z⁰ = β⁰; the engine already set r = y − Xβ⁰ = y − Xz⁰.
+            self.z.clear();
+            self.z.extend_from_slice(beta);
+            self.beta_prev.resize(p, 0.0);
+            self.grad.resize(p, 0.0);
+            self.fresh = false;
+        }
+        // gradient step at z: β⁺ = ST(z + Xᵀr/μ, λ/μ) with r = y − Xz
+        x.xt_vec(r, &mut self.grad);
+        if self.fista {
+            self.beta_prev.copy_from_slice(beta);
+        }
+        for j in 0..p {
+            beta[j] = soft_threshold(self.z[j] + self.grad[j] / self.mu, lambda / self.mu);
+        }
+        if self.fista {
+            let t_next = 0.5 * (1.0 + (1.0 + 4.0 * self.t_mom * self.t_mom).sqrt());
+            let coef = (self.t_mom - 1.0) / t_next;
+            for j in 0..p {
+                self.z[j] = beta[j] + coef * (beta[j] - self.beta_prev[j]);
+            }
+            self.t_mom = t_next;
+        } else {
+            self.z.copy_from_slice(beta);
+        }
+        primal::residual(x, y, &self.z, r);
+    }
+
+    fn fill_check_residual(&mut self, x: &D, y: &[f64], beta: &[f64], r: &[f64], out: &mut [f64]) {
+        // dual state wants the residual at β (not the momentum point z)
+        if self.fista {
+            primal::residual(x, y, beta, out);
+        } else {
+            out.copy_from_slice(r);
+        }
+    }
+
+    fn finalize(&mut self, x: &D, y: &[f64], beta: &[f64], r: &mut [f64]) {
+        // leave the workspace residual at β, not at z
+        primal::residual(x, y, beta, r);
+    }
+}
+
 /// Solve the Lasso with ISTA (or FISTA when `cfg.fista`).
 pub fn ista_solve<D: DesignOps>(
     x: &D,
@@ -80,76 +157,46 @@ pub fn ista_solve<D: DesignOps>(
     beta0: Option<&[f64]>,
     cfg: &IstaConfig,
 ) -> SolveResult {
-    let (n, p) = (x.n(), x.p());
-    let start = Instant::now();
+    let mut ws = Workspace::new();
+    ista_solve_ws(x, y, lambda, beta0, cfg, &mut ws)
+}
+
+/// [`ista_solve`] on a caller-provided reusable [`Workspace`].
+pub fn ista_solve_ws<D: DesignOps>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &IstaConfig,
+    ws: &mut Workspace,
+) -> SolveResult {
     let mu = spectral_norm_sq(x, 200, 0xC0FFEE).max(1e-300);
-
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
-    let mut z = beta.clone(); // FISTA extrapolation point
-    let mut t_mom = 1.0f64;
-    let mut r = vec![0.0; n];
-    primal::residual(x, y, &z, &mut r);
-
-    let mut dual = DualState::new(n, p, cfg.k, cfg.extrapolate, cfg.best_dual);
-    let mut xtr = vec![0.0; p];
-    let mut grad = vec![0.0; p];
-    let mut trace = Vec::new();
-    let mut gap = f64::INFINITY;
-    let mut epochs = 0;
-    let mut converged = false;
-
-    for epoch in 1..=cfg.max_epochs {
-        epochs = epoch;
-        // gradient step at z: β⁺ = ST(z + Xᵀr/μ, λ/μ) with r = y − Xz
-        x.xt_vec(&r, &mut grad);
-        let beta_prev = if cfg.fista { Some(beta.clone()) } else { None };
-        for j in 0..p {
-            beta[j] = soft_threshold(z[j] + grad[j] / mu, lambda / mu);
-        }
-        if cfg.fista {
-            let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_mom * t_mom).sqrt());
-            let prev = beta_prev.unwrap();
-            let coef = (t_mom - 1.0) / t_next;
-            for j in 0..p {
-                z[j] = beta[j] + coef * (beta[j] - prev[j]);
-            }
-            t_mom = t_next;
-        } else {
-            z.copy_from_slice(&beta);
-        }
-        primal::residual(x, y, &z, &mut r);
-
-        if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
-            // dual state wants the residual at β (not z)
-            let mut r_beta = vec![0.0; n];
-            if cfg.fista {
-                primal::residual(x, y, &beta, &mut r_beta);
-            } else {
-                r_beta.copy_from_slice(&r);
-            }
-            let (d_res, d_accel) = dual.update(x, y, lambda, &r_beta, &mut xtr);
-            let p_val = primal::primal_from_residual(&r_beta, &beta, lambda);
-            gap = p_val - dual.dval;
-            if cfg.trace {
-                trace.push(GapCheck {
-                    epoch,
-                    primal: p_val,
-                    dual_res: d_res,
-                    dual_accel: d_accel,
-                    gap,
-                    n_screened: 0,
-                    seconds: start.elapsed().as_secs_f64(),
-                });
-            }
-            if gap <= cfg.tol {
-                converged = true;
-                break;
-            }
-        }
-    }
-    let mut r_final = vec![0.0; n];
-    primal::residual(x, y, &beta, &mut r_final);
-    SolveResult { beta, r: r_final, theta: dual.theta, gap, epochs, converged, trace }
+    let mut strategy = IstaStrategy {
+        mu,
+        z: Vec::new(),
+        beta_prev: Vec::new(),
+        grad: Vec::new(),
+        t_mom: 1.0,
+        fista: cfg.fista,
+        fresh: true,
+    };
+    let ecfg = EngineConfig {
+        tol: cfg.tol,
+        max_epochs: cfg.max_epochs,
+        gap_freq: cfg.gap_freq,
+        k: cfg.k,
+        extrapolate: cfg.extrapolate,
+        best_dual: cfg.best_dual,
+        screen: false,
+        trace: cfg.trace,
+        stop: StopRule::DualityGap,
+    };
+    let init = match beta0 {
+        Some(b) => Init::Warm(b),
+        None => Init::Zeros,
+    };
+    let outcome = engine::solve(x, y, lambda, init, None, &ecfg, ws, &mut strategy);
+    ws.solve_result(outcome)
 }
 
 #[cfg(test)]
@@ -224,5 +271,23 @@ mod tests {
             (p_star - d_acc).abs() < 1e-7,
             "θ_accel near-optimal: P*={p_star}, D(θ_accel)={d_acc}"
         );
+    }
+
+    #[test]
+    fn final_residual_is_at_beta() {
+        let ds = synth::leukemia_mini(13);
+        let lambda = d::lambda_max(&ds.x, &ds.y) / 4.0;
+        let out = ista_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &IstaConfig { fista: true, tol: 1e-8, ..Default::default() },
+        );
+        let mut expect = vec![0.0; ds.y.len()];
+        crate::lasso::primal::residual(&ds.x, &ds.y, &out.beta, &mut expect);
+        for i in 0..expect.len() {
+            assert!((out.r[i] - expect[i]).abs() < 1e-12, "i={i}");
+        }
     }
 }

@@ -1,9 +1,15 @@
 //! Lasso solvers: the paper's CELER plus every baseline it compares to.
+//!
+//! All gap-controlled solvers run through one [`engine`]: a shared
+//! iterate/check loop over reusable [`engine::Workspace`] buffers. The
+//! per-solver files contribute only their strategy (CD epoch, proximal
+//! step, working-set outer loop) — see `ARCHITECTURE.md`.
 
 pub mod blitz;
 pub mod cd;
 pub mod celer;
 pub mod dykstra;
+pub mod engine;
 pub mod glmnet;
 pub mod ista;
 pub mod path;
@@ -66,9 +72,33 @@ pub enum DualChoice {
     Extrapolated,
 }
 
+/// Reusable scratch for [`DualState::update`]: correlation and dual-point
+/// buffers that would otherwise be allocated at every gap check. Owned by
+/// the engine [`engine::Workspace`] so one set of buffers serves an
+/// entire warm-started λ path.
+#[derive(Debug, Clone, Default)]
+pub struct DualScratch {
+    /// `Xᵀr` for the current residual (length p).
+    pub xtr: Vec<f64>,
+    /// `Xᵀr_accel` for the extrapolated residual (length p).
+    pub xtr_acc: Vec<f64>,
+    /// Rescaled extrapolated dual point θ_accel (length n).
+    pub theta_acc: Vec<f64>,
+}
+
+impl DualScratch {
+    /// Size the buffers for an (n, p) problem, reusing capacity.
+    pub fn prepare(&mut self, n: usize, p: usize) {
+        self.xtr.resize(p, 0.0);
+        self.xtr_acc.resize(p, 0.0);
+        self.theta_acc.resize(n, 0.0);
+    }
+}
+
 /// Shared dual-point machinery (Eq. 4, Def. 1, Eq. 13): maintains the
 /// residual ring buffer, computes θ_res and θ_accel, and optionally keeps
 /// the best-so-far dual point for monotonicity.
+#[derive(Debug, Clone)]
 pub struct DualState {
     pub buffer: ResidualBuffer,
     /// Best dual point so far (feasible).
@@ -86,44 +116,69 @@ pub struct DualState {
     pub last_choice: DualChoice,
 }
 
-impl DualState {
-    pub fn new(n: usize, p: usize, k: usize, extrapolate: bool, monotone: bool) -> Self {
+impl Default for DualState {
+    fn default() -> Self {
         DualState {
-            buffer: ResidualBuffer::new(k),
-            theta: vec![0.0; n],
-            xtheta: vec![0.0; p],
+            buffer: ResidualBuffer::new(1),
+            theta: Vec::new(),
+            xtheta: Vec::new(),
             dval: f64::NEG_INFINITY,
-            extrapolate,
-            monotone,
+            extrapolate: false,
+            monotone: true,
             last_choice: DualChoice::Residual,
         }
+    }
+}
+
+impl DualState {
+    pub fn new(n: usize, p: usize, k: usize, extrapolate: bool, monotone: bool) -> Self {
+        let mut s = DualState::default();
+        s.reset(n, p, k, extrapolate, monotone);
+        s
+    }
+
+    /// Re-initialize for a fresh solve, reusing the buffers' capacity.
+    pub fn reset(&mut self, n: usize, p: usize, k: usize, extrapolate: bool, monotone: bool) {
+        self.buffer.reset(k);
+        self.theta.clear();
+        self.theta.resize(n, 0.0);
+        self.xtheta.clear();
+        self.xtheta.resize(p, 0.0);
+        self.dval = f64::NEG_INFINITY;
+        self.extrapolate = extrapolate;
+        self.monotone = monotone;
+        self.last_choice = DualChoice::Residual;
     }
 
     /// Ingest the current residual, refresh θ, and return
     /// (D(θ_res), D(θ_accel) if computed).
     ///
-    /// Scratch buffers `xtr` (p) avoid reallocation across checks.
+    /// All O(n)/O(p) temporaries live in `scratch`, so a check performs no
+    /// heap allocation once the buffers are warm.
     pub fn update<D: DesignOps>(
         &mut self,
         x: &D,
         y: &[f64],
         lambda: f64,
         r: &[f64],
-        xtr: &mut [f64],
+        scratch: &mut DualScratch,
     ) -> (f64, Option<f64>) {
         self.buffer.push(r);
+        let n = y.len();
+        let p = x.p();
+        scratch.xtr.resize(p, 0.0);
 
         // θ_res = r / max(λ, ‖Xᵀr‖_∞)
-        x.xt_vec(r, xtr);
+        x.xt_vec(r, &mut scratch.xtr);
         let mut denom = lambda;
-        for &v in xtr.iter() {
+        for &v in scratch.xtr.iter() {
             denom = denom.max(v.abs());
         }
         let inv = 1.0 / denom;
         let d_res = {
             // D(θ_res) without materializing θ_res: θ = r·inv
             let mut dist_sq = 0.0;
-            for i in 0..y.len() {
+            for i in 0..n {
                 let d = r[i] * inv - y[i] / lambda;
                 dist_sq += d * d;
             }
@@ -133,29 +188,30 @@ impl DualState {
         let mut best_val = d_res;
         let mut best = DualChoice::Residual;
 
-        // θ_accel
-        let mut accel: Option<(Vec<f64>, Vec<f64>, f64)> = None; // (theta, xtheta, dval)
+        // θ_accel (written into scratch, copied into self only if it wins)
         let mut d_accel_out = None;
         if self.extrapolate {
             if let Some(r_acc) = self.buffer.extrapolate() {
-                let mut xtr_acc = vec![0.0; x.p()];
-                x.xt_vec(&r_acc, &mut xtr_acc);
+                scratch.xtr_acc.resize(p, 0.0);
+                scratch.theta_acc.resize(n, 0.0);
+                x.xt_vec(&r_acc, &mut scratch.xtr_acc);
                 let mut denom_a = lambda;
-                for &v in xtr_acc.iter() {
+                for &v in scratch.xtr_acc.iter() {
                     denom_a = denom_a.max(v.abs());
                 }
                 let inv_a = 1.0 / denom_a;
-                let theta_a: Vec<f64> = r_acc.iter().map(|&v| v * inv_a).collect();
-                for v in xtr_acc.iter_mut() {
+                for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
+                    *t = v * inv_a;
+                }
+                for v in scratch.xtr_acc.iter_mut() {
                     *v *= inv_a;
                 }
-                let d_acc = dual::dual_objective(y, &theta_a, lambda);
+                let d_acc = dual::dual_objective(y, &scratch.theta_acc, lambda);
                 d_accel_out = Some(d_acc);
                 if d_acc > best_val {
                     best_val = d_acc;
                     best = DualChoice::Extrapolated;
                 }
-                accel = Some((theta_a, xtr_acc, d_acc));
             }
         }
 
@@ -167,16 +223,17 @@ impl DualState {
 
         match best {
             DualChoice::Extrapolated => {
-                let (theta_a, xtheta_a, d_acc) = accel.unwrap();
-                self.theta = theta_a;
-                self.xtheta = xtheta_a;
-                self.dval = d_acc;
+                self.theta.clear();
+                self.theta.extend_from_slice(&scratch.theta_acc);
+                self.xtheta.clear();
+                self.xtheta.extend_from_slice(&scratch.xtr_acc);
+                self.dval = best_val;
             }
             _ => {
                 self.theta.clear();
                 self.theta.extend(r.iter().map(|&v| v * inv));
                 self.xtheta.clear();
-                self.xtheta.extend(xtr.iter().map(|&v| v * inv));
+                self.xtheta.extend(scratch.xtr.iter().map(|&v| v * inv));
                 self.dval = d_res;
             }
         }
@@ -201,13 +258,13 @@ mod tests {
         let y = vec![3.0, 0.5];
         let lambda = 1.0;
         let mut ds = DualState::new(2, 2, 3, false, true);
-        let mut xtr = vec![0.0; 2];
+        let mut scratch = DualScratch::default();
         // good residual first (close to optimal residual [1, 0.5])
-        let (d1, _) = ds.update(&x, &y, lambda, &[1.0, 0.5], &mut xtr);
+        let (d1, _) = ds.update(&x, &y, lambda, &[1.0, 0.5], &mut scratch);
         assert!(ds.dval >= d1 - 1e-15);
         let v1 = ds.dval;
         // much worse residual: monotone state must keep the old point
-        ds.update(&x, &y, lambda, &[-3.0, 2.0], &mut xtr);
+        ds.update(&x, &y, lambda, &[-3.0, 2.0], &mut scratch);
         assert!(ds.dval >= v1 - 1e-15);
         assert_eq!(ds.last_choice, DualChoice::Previous);
     }
@@ -222,9 +279,9 @@ mod tests {
         ));
         let y = vec![1.0, 2.0, 3.0];
         let mut ds = DualState::new(3, 2, 2, true, true);
-        let mut xtr = vec![0.0; 2];
+        let mut scratch = DualScratch::default();
         for r in [[1.0, 0.0, 2.0], [0.9, 0.1, 1.9], [0.8, 0.2, 1.8], [0.75, 0.25, 1.75]] {
-            ds.update(&x, &y, 0.5, &r, &mut xtr);
+            ds.update(&x, &y, 0.5, &r, &mut scratch);
             assert!(x.xt_abs_max(&ds.theta) <= 1.0 + 1e-10, "theta stays feasible");
             // xtheta cache must match X^T theta
             let mut expect = vec![0.0; 2];
@@ -233,5 +290,25 @@ mod tests {
                 assert!((ds.xtheta[j] - expect[j]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn reset_reuses_state_cleanly() {
+        let x = DesignMatrix::Dense(DenseMatrix::from_row_major(
+            2,
+            2,
+            &[1.0, 0.0, 0.0, 1.0],
+        ));
+        let y = vec![3.0, 0.5];
+        let mut ds = DualState::new(2, 2, 3, false, true);
+        let mut scratch = DualScratch::default();
+        ds.update(&x, &y, 1.0, &[1.0, 0.5], &mut scratch);
+        assert!(ds.dval.is_finite());
+        ds.reset(2, 2, 3, false, true);
+        assert_eq!(ds.dval, f64::NEG_INFINITY);
+        assert!(ds.theta.iter().all(|&v| v == 0.0));
+        // behaves like a fresh state after reset
+        let (d1, _) = ds.update(&x, &y, 1.0, &[1.0, 0.5], &mut scratch);
+        assert!(ds.dval >= d1 - 1e-15);
     }
 }

@@ -1,12 +1,18 @@
 //! Lasso path driver (§6.3): solve along a decreasing λ grid with warm
 //! starts, for any of the registered solvers.
+//!
+//! One [`Workspace`] is reused for the entire path: after the first grid
+//! point every buffer (β, r, Xᵀr, dual state, extrapolation ring, the
+//! nested working-set workspace) is already sized, so subsequent λ steps
+//! run without per-λ reallocation.
 
 use crate::data::design::DesignMatrix;
 use crate::lasso::dual;
-use crate::solvers::blitz::{blitz_solve, BlitzConfig};
-use crate::solvers::cd::{cd_solve, CdConfig};
-use crate::solvers::celer::{celer_solve_on, CelerConfig};
-use crate::solvers::glmnet::{glmnet_solve, GlmnetConfig};
+use crate::solvers::blitz::{blitz_solve_ws, BlitzConfig};
+use crate::solvers::cd::{cd_solve_ws, CdConfig};
+use crate::solvers::celer::{celer_solve_on_ws, CelerConfig};
+use crate::solvers::engine::Workspace;
+use crate::solvers::glmnet::{glmnet_solve_ws, GlmnetConfig};
 use std::time::Instant;
 
 /// Log-spaced λ grid from `λ_max` down to `λ_max · min_ratio` (inclusive),
@@ -118,6 +124,20 @@ pub fn run_path(
     solver: &PathSolver,
     store_betas: bool,
 ) -> PathResult {
+    let mut ws = Workspace::new();
+    run_path_with_workspace(x, y, grid, solver, store_betas, &mut ws)
+}
+
+/// [`run_path`] on a caller-provided [`Workspace`] (e.g. the coordinator
+/// can keep one workspace per worker thread across many path jobs).
+pub fn run_path_with_workspace(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    solver: &PathSolver,
+    store_betas: bool,
+    ws: &mut Workspace,
+) -> PathResult {
     let start = Instant::now();
     let p = crate::data::design::DesignOps::p(x);
     let mut beta = vec![0.0; p];
@@ -127,19 +147,19 @@ pub fn run_path(
         let t0 = Instant::now();
         let (new_beta, gap, epochs, converged) = match solver {
             PathSolver::CelerPrune(cfg) | PathSolver::CelerSafe(cfg) => {
-                let out = celer_solve_on(x, y, lambda, Some(&beta), cfg);
+                let out = celer_solve_on_ws(x, y, lambda, Some(&beta), cfg, ws);
                 (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
             }
             PathSolver::Blitz(cfg) => {
-                let out = blitz_solve(x, y, lambda, Some(&beta), cfg);
+                let out = blitz_solve_ws(x, y, lambda, Some(&beta), cfg, ws);
                 (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
             }
             PathSolver::Glmnet(cfg) => {
-                let out = glmnet_solve(x, y, lambda, lambda_prev, Some(&beta), cfg);
+                let out = glmnet_solve_ws(x, y, lambda, lambda_prev, Some(&beta), cfg, ws);
                 (out.beta, out.gap, out.epochs, out.converged)
             }
             PathSolver::VanillaCd(cfg) | PathSolver::GapSafeCd(cfg) => {
-                let out = cd_solve(x, y, lambda, Some(&beta), cfg);
+                let out = cd_solve_ws(x, y, lambda, Some(&beta), cfg, ws);
                 (out.beta, out.gap, out.epochs, out.converged)
             }
         };

@@ -70,13 +70,22 @@ impl WsPolicy {
 /// features in `forced` guaranteed membership (their score is overridden
 /// to −1, matching Algorithm 4's monotonicity trick).
 ///
+/// Features with a non-finite score are **excluded** no matter how large
+/// `pt` is: `d_j(θ) = +∞` marks an empty column (zero norm), which can
+/// never enter the model. Centralizing the exclusion here means callers
+/// rank with raw [`crate::screening::d_score`] values and never
+/// special-case infinities.
+///
 /// `scores` is modified in place (forced entries set to −1.0). The result
 /// is sorted in increasing index order.
 pub fn build_working_set(scores: &mut [f64], forced: &[usize], pt: usize) -> Vec<usize> {
     for &j in forced {
         scores[j] = -1.0;
     }
-    let mut ws = k_smallest_indices(scores, pt.min(scores.len()));
+    // Every finite score sorts before +∞, so capping the selection count
+    // at the number of finite scores keeps empty columns out entirely.
+    let n_selectable = scores.iter().filter(|s| s.is_finite()).count();
+    let mut ws = k_smallest_indices(scores, pt.min(n_selectable));
     ws.sort_unstable();
     ws
 }
@@ -153,5 +162,23 @@ mod tests {
         let mut scores = vec![0.3, 0.1];
         let ws = build_working_set(&mut scores, &[], 10);
         assert_eq!(ws, vec![0, 1]);
+    }
+
+    #[test]
+    fn build_ws_excludes_empty_columns() {
+        // d_score of a zero-norm column is +∞; it must never be selected,
+        // even when pt exceeds the number of usable features.
+        let mut scores = vec![0.9, f64::INFINITY, 0.1, f64::INFINITY, 0.5];
+        let ws = build_working_set(&mut scores, &[], 5);
+        assert_eq!(ws, vec![0, 2, 4]);
+        // forced members are still honored alongside the exclusion
+        let mut scores = vec![0.9, f64::INFINITY, 0.1, f64::INFINITY, 0.5];
+        let ws = build_working_set(&mut scores, &[0], 2);
+        assert!(ws.contains(&0));
+        assert!(ws.contains(&2));
+        assert_eq!(ws.len(), 2);
+        // degenerate: everything empty → empty working set
+        let mut scores = vec![f64::INFINITY; 4];
+        assert!(build_working_set(&mut scores, &[], 4).is_empty());
     }
 }

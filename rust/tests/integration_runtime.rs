@@ -1,15 +1,33 @@
 //! Runtime integration: the XLA/PJRT engine (AOT Pallas/JAX artifacts)
 //! must agree with the native Rust engine operation by operation and on
-//! a full Algorithm-1 solve. Requires `make artifacts` (small profile).
+//! a full Algorithm-1 solve.
+//!
+//! The XLA cross-checks need `make artifacts` (small profile) AND a
+//! build with `--features xla`; in the default offline build they skip
+//! with a notice, while the native-engine halves still run.
 
 use celer::data::design::DesignOps;
 use celer::data::synth;
 use celer::lasso::dual;
-use celer::runtime::{engine_cd_solve, default_artifacts_dir, Engine, NativeEngine, XlaEngine};
+use celer::runtime::{default_artifacts_dir, engine_cd_solve, Engine, NativeEngine, XlaEngine};
 
-fn load_xla() -> XlaEngine {
-    XlaEngine::load(&default_artifacts_dir())
-        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+/// Try to bring up the XLA engine; `None` (with a notice) when the AOT
+/// artifacts are missing or the build lacks the `xla` feature.
+///
+/// Set `CELER_REQUIRE_XLA=1` to make a load failure fatal — use this in
+/// artifacts-enabled CI so a manifest/HLO regression cannot silently
+/// downgrade the cross-checks to skips.
+fn try_load_xla() -> Option<XlaEngine> {
+    match XlaEngine::load(&default_artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            if std::env::var("CELER_REQUIRE_XLA").map(|v| v == "1").unwrap_or(false) {
+                panic!("CELER_REQUIRE_XLA=1 but the XLA engine failed to load: {e:#}");
+            }
+            eprintln!("skipping XLA cross-check: {e:#}");
+            None
+        }
+    }
 }
 
 fn mini_dense() -> (Vec<f64>, usize, usize, Vec<f64>, f64) {
@@ -29,8 +47,20 @@ fn inner_solve_engines_agree() {
     let block = &x_cm[..n * w];
     let beta0 = vec![0.0; w];
     let mut native = NativeEngine;
-    let mut xla = load_xla();
     let (bn, rn) = native.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
+    // native sanity: the residual matches y − Xβ for the returned β
+    let mut expect = y.clone();
+    for j in 0..w {
+        if bn[j] != 0.0 {
+            for i in 0..n {
+                expect[i] -= bn[j] * block[j * n + i];
+            }
+        }
+    }
+    for i in 0..n {
+        assert!((rn[i] - expect[i]).abs() < 1e-12, "native residual i={i}");
+    }
+    let Some(mut xla) = try_load_xla() else { return };
     let (bx, rx) = xla.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
     for j in 0..w {
         assert!((bn[j] - bx[j]).abs() < 1e-12, "beta[{j}]: {} vs {}", bn[j], bx[j]);
@@ -50,8 +80,18 @@ fn inner_solve_bucket_padding_is_invariant() {
     let block = &x_cm[..n * w];
     let beta0 = vec![0.0; w];
     let mut native = NativeEngine;
-    let mut xla = load_xla();
     let (bn, _) = native.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
+    // native padding invariance: 7 extra zero columns change nothing
+    let pad = 7;
+    let mut padded = block.to_vec();
+    padded.extend(std::iter::repeat(0.0).take(pad * n));
+    let beta0_pad = vec![0.0; w + pad];
+    let (bp, _) = native.inner_solve(&padded, n, w + pad, &y, &beta0_pad, lambda).unwrap();
+    for j in 0..w {
+        assert!((bn[j] - bp[j]).abs() < 1e-15, "padding must not change beta[{j}]");
+    }
+    assert!(bp[w..].iter().all(|&b| b == 0.0));
+    let Some(mut xla) = try_load_xla() else { return };
     let (bx, _) = xla.inner_solve(block, n, w, &y, &beta0, lambda).unwrap();
     assert_eq!(bx.len(), w, "padding must be stripped");
     for j in 0..w {
@@ -63,10 +103,12 @@ fn inner_solve_bucket_padding_is_invariant() {
 fn gap_scores_engines_agree() {
     let (x_cm, n, p, y, lambda) = mini_dense();
     let mut native = NativeEngine;
-    let mut xla = load_xla();
     let beta = vec![0.0; p];
     let theta: Vec<f64> = y.iter().map(|v| v * 0.1).collect();
     let (pn, dn, gn, sn) = native.gap_scores(&x_cm, n, p, &y, &beta, &theta, lambda).unwrap();
+    assert!((gn - (pn - dn)).abs() < 1e-12, "gap = primal − dual");
+    assert_eq!(sn.len(), p);
+    let Some(mut xla) = try_load_xla() else { return };
     let (px, dx, gx, sx) = xla.gap_scores(&x_cm, n, p, &y, &beta, &theta, lambda).unwrap();
     assert!((pn - px).abs() < 1e-12);
     assert!((dn - dx).abs() < 1e-12);
@@ -81,8 +123,10 @@ fn gap_scores_engines_agree() {
 fn theta_res_engines_agree() {
     let (x_cm, n, p, y, lambda) = mini_dense();
     let mut native = NativeEngine;
-    let mut xla = load_xla();
     let (tn, ctn) = native.theta_res(&x_cm, n, p, &y, lambda).unwrap();
+    // feasibility through the native path
+    assert!(ctn.iter().all(|v| v.abs() <= 1.0 + 1e-12));
+    let Some(mut xla) = try_load_xla() else { return };
     let (tx, ctx) = xla.theta_res(&x_cm, n, p, &y, lambda).unwrap();
     for i in 0..n {
         assert!((tn[i] - tx[i]).abs() < 1e-12);
@@ -101,8 +145,9 @@ fn extrapolate_engines_agree() {
     let mut rng = celer::util::rng::Rng::new(9);
     let rbuf: Vec<f64> = (0..(k + 1) * n).map(|_| rng.normal()).collect();
     let mut native = NativeEngine;
-    let mut xla = load_xla();
     let (rn, pn) = native.extrapolate(&rbuf, k, n).unwrap();
+    assert!(rn.iter().all(|v| v.is_finite()));
+    let Some(mut xla) = try_load_xla() else { return };
     let (rx, px) = xla.extrapolate(&rbuf, k, n).unwrap();
     assert!((pn - px).abs() < 1e-9 * pn.abs().max(1.0), "min pivots: {pn} vs {px}");
     for i in 0..n {
@@ -114,10 +159,11 @@ fn extrapolate_engines_agree() {
 fn full_solve_engines_agree() {
     let (x_cm, n, p, y, lambda) = mini_dense();
     let mut native = NativeEngine;
-    let mut xla = load_xla();
     let a = engine_cd_solve(&mut native, &x_cm, n, p, &y, lambda, 1e-8, 500, 5).unwrap();
+    assert!(a.converged, "native engine solve converges, gap={}", a.gap);
+    let Some(mut xla) = try_load_xla() else { return };
     let b = engine_cd_solve(&mut xla, &x_cm, n, p, &y, lambda, 1e-8, 500, 5).unwrap();
-    assert!(a.converged && b.converged);
+    assert!(b.converged);
     assert_eq!(a.blocks, b.blocks, "identical schedule");
     let max_diff = a
         .beta
@@ -130,7 +176,7 @@ fn full_solve_engines_agree() {
 
 #[test]
 fn missing_bucket_reports_useful_error() {
-    let mut xla = load_xla();
+    let Some(mut xla) = try_load_xla() else { return };
     let err = xla
         .inner_solve(&vec![0.0; 10 * 10_000], 10, 10_000, &vec![0.0; 10], &vec![0.0; 10_000], 1.0)
         .unwrap_err();

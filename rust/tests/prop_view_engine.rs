@@ -1,0 +1,164 @@
+//! Property tests for the zero-copy data/solver refactor:
+//!
+//! 1. an inner solve on a [`DesignView`] of `X_W` is bit-identical
+//!    (within 1e-12, in practice exactly equal) to the same solve on a
+//!    `select_columns`-materialized copy, for dense AND sparse designs;
+//! 2. warm-started λ-path results are unchanged by workspace reuse.
+
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::synth;
+use celer::data::view::DesignView;
+use celer::lasso::dual;
+use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::celer::{celer_solve_on, celer_solve_on_ws, CelerConfig};
+use celer::solvers::engine::Workspace;
+use celer::solvers::path::{lambda_grid, run_path, run_path_with_workspace, PathSolver};
+
+/// Pick a deterministic pseudo-working-set: the `k` columns most
+/// correlated with y, plus a few arbitrary ones.
+fn pick_working_set(x: &DesignMatrix, y: &[f64], k: usize) -> Vec<usize> {
+    let p = x.p();
+    let mut xty = vec![0.0; p];
+    x.xt_vec(y, &mut xty);
+    let mut idx: Vec<usize> = (0..p).collect();
+    idx.sort_by(|&a, &b| xty[b].abs().partial_cmp(&xty[a].abs()).unwrap());
+    let mut ws: Vec<usize> = idx.into_iter().take(k).collect();
+    ws.push(p - 1);
+    ws.push(p / 2);
+    ws.sort_unstable();
+    ws.dedup();
+    ws
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= tol,
+            "{what}[{i}]: {} vs {} (diff {})",
+            a[i],
+            b[i],
+            (a[i] - b[i]).abs()
+        );
+    }
+}
+
+fn check_view_inner_solve_matches_materialized(x: &DesignMatrix, y: &[f64], seed_tag: &str) {
+    let lambda = dual::lambda_max(x, y) / 10.0;
+    let ws_cols = pick_working_set(x, y, 40);
+    let cfg = CdConfig { tol: 1e-9, ..Default::default() };
+
+    // Old path: materialize X_W and solve on the copy.
+    let materialized = x.select_columns(&ws_cols);
+    let a = cd_solve(&materialized, y, lambda, None, &cfg);
+
+    // New path: zero-copy view over the parent, monomorphized per kind.
+    let norms = x.col_norms_sq();
+    let b = match x {
+        DesignMatrix::Dense(d) => {
+            let view = DesignView::new(d, &ws_cols, &norms);
+            cd_solve(&view, y, lambda, None, &cfg)
+        }
+        DesignMatrix::Sparse(s) => {
+            let view = DesignView::new(s, &ws_cols, &norms);
+            cd_solve(&view, y, lambda, None, &cfg)
+        }
+    };
+
+    assert_eq!(a.epochs, b.epochs, "{seed_tag}: epoch counts diverge");
+    assert_eq!(a.converged, b.converged, "{seed_tag}: convergence diverges");
+    assert_close(&a.beta, &b.beta, 1e-12, &format!("{seed_tag}: beta"));
+    assert_close(&a.r, &b.r, 1e-12, &format!("{seed_tag}: residual"));
+    assert_close(&a.theta, &b.theta, 1e-12, &format!("{seed_tag}: theta"));
+    assert!((a.gap - b.gap).abs() <= 1e-12, "{seed_tag}: gap {} vs {}", a.gap, b.gap);
+}
+
+#[test]
+fn view_inner_solve_matches_materialized_dense() {
+    for seed in [101u64, 102, 103] {
+        let ds = synth::leukemia_mini(seed);
+        assert!(!ds.x.is_sparse());
+        check_view_inner_solve_matches_materialized(&ds.x, &ds.y, &format!("dense/{seed}"));
+    }
+}
+
+#[test]
+fn view_inner_solve_matches_materialized_sparse() {
+    for seed in [201u64, 202] {
+        let ds = synth::finance_mini(seed);
+        assert!(ds.x.is_sparse());
+        check_view_inner_solve_matches_materialized(&ds.x, &ds.y, &format!("sparse/{seed}"));
+    }
+}
+
+#[test]
+fn view_warm_start_matches_materialized() {
+    // Warm-started subproblem solves (CELER's actual usage) must agree too.
+    let ds = synth::leukemia_mini(104);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 15.0;
+    let ws_cols = pick_working_set(&ds.x, &ds.y, 60);
+    let cfg = CdConfig { tol: 1e-10, ..Default::default() };
+    let materialized = ds.x.select_columns(&ws_cols);
+    let cold = cd_solve(&materialized, &ds.y, lambda, None, &cfg);
+    let a = cd_solve(&materialized, &ds.y, lambda, Some(&cold.beta), &cfg);
+    let norms = ds.x.col_norms_sq();
+    let b = match &ds.x {
+        DesignMatrix::Dense(d) => {
+            let view = DesignView::new(d, &ws_cols, &norms);
+            cd_solve(&view, &ds.y, lambda, Some(&cold.beta), &cfg)
+        }
+        DesignMatrix::Sparse(s) => {
+            let view = DesignView::new(s, &ws_cols, &norms);
+            cd_solve(&view, &ds.y, lambda, Some(&cold.beta), &cfg)
+        }
+    };
+    assert_eq!(a.epochs, b.epochs);
+    assert_close(&a.beta, &b.beta, 1e-12, "warm beta");
+}
+
+#[test]
+fn workspace_reuse_leaves_path_unchanged() {
+    // A warm-started path with one shared workspace must produce exactly
+    // the same trajectory as fresh workspaces per λ.
+    for (name, dense) in [("celer-prune", true), ("celer-safe", true), ("blitz", false)] {
+        let ds = if dense { synth::leukemia_mini(105) } else { synth::finance_mini(106) };
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax * 0.95, 0.05, 6);
+        let solver = PathSolver::by_name(name, 1e-8).unwrap();
+
+        let fresh = run_path(&ds.x, &ds.y, &grid, &solver, true);
+        let mut ws = Workspace::new();
+        let reused = run_path_with_workspace(&ds.x, &ds.y, &grid, &solver, true, &mut ws);
+
+        assert_eq!(fresh.steps.len(), reused.steps.len(), "{name}");
+        for (i, (a, b)) in fresh.steps.iter().zip(reused.steps.iter()).enumerate() {
+            assert_eq!(a.converged, b.converged, "{name} step {i}");
+            assert_eq!(a.epochs, b.epochs, "{name} step {i} epochs");
+            assert_eq!(a.support_size, b.support_size, "{name} step {i} support");
+            let (ba, bb) = (a.beta.as_ref().unwrap(), b.beta.as_ref().unwrap());
+            assert_close(ba, bb, 1e-12, &format!("{name} step {i} beta"));
+        }
+    }
+}
+
+#[test]
+fn celer_workspace_reuse_across_lambdas_matches_one_shot() {
+    let ds = synth::leukemia_mini(107);
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let cfg = CelerConfig { tol: 1e-9, ..Default::default() };
+    let mut ws = Workspace::new();
+    let mut warm: Option<Vec<f64>> = None;
+    for ratio in [3.0f64, 8.0, 20.0] {
+        let lambda = lmax / ratio;
+        let one_shot = celer_solve_on(&ds.x, &ds.y, lambda, warm.as_deref(), &cfg);
+        let reused = celer_solve_on_ws(&ds.x, &ds.y, lambda, warm.as_deref(), &cfg, &mut ws);
+        assert_close(
+            &one_shot.result.beta,
+            &reused.result.beta,
+            1e-12,
+            &format!("lambda ratio {ratio}"),
+        );
+        assert_eq!(one_shot.iterations.len(), reused.iterations.len());
+        warm = Some(one_shot.result.beta);
+    }
+}

@@ -1,0 +1,137 @@
+//! Offline, dependency-free subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses — [`Result`],
+//! [`Error`], `anyhow!`, `bail!`, `ensure!` — with the same semantics:
+//! an opaque error carrying a message, `?`-convertible from any
+//! `std::error::Error`. Like the real crate, [`Error`] deliberately does
+//! NOT implement `std::error::Error` (that would conflict with the
+//! blanket `From` impl); it implements `Debug` + `Display`, which is all
+//! `fn main() -> anyhow::Result<()>` and error printing need.
+
+use std::fmt;
+
+/// Opaque error: a message plus (optionally) the `Display` rendering of a
+/// source error chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the message with more context (poor man's `.context()`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as the
+/// default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/470ab2")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        let e = anyhow!("inline {v}", v = 7);
+        assert_eq!(e.to_string(), "inline 7");
+
+        fn bails(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            ensure!(flag);
+            if flag {
+                Ok(1)
+            } else {
+                bail!("unreachable {}", 0)
+            }
+        }
+        assert_eq!(bails(true).unwrap(), 1);
+        assert_eq!(bails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}
