@@ -10,6 +10,7 @@ use celer::extrapolation::ResidualBuffer;
 use celer::lasso::dual;
 use celer::report::bench;
 use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::path::{lambda_grid, run_path, PathSolver};
 use celer::util::select::k_smallest_indices;
 use celer::util::soft_threshold;
 
@@ -54,6 +55,55 @@ fn bench_ws_inner_solve(tag: &str, x: &DesignMatrix, y: &[f64], iters: usize) {
             });
         }
     }
+}
+
+/// Benchmark a full λ path both ways: the sequential per-λ chain vs the
+/// batched multi-λ engine (B lanes of interleaved CD over shared design
+/// sweeps). The acceptance bar for the batch layer is batched ≤
+/// sequential wall-clock at identical gap certification.
+fn bench_batched_path(tag: &str, x: &DesignMatrix, y: &[f64], iters: usize) {
+    let lmax = dual::lambda_max(x, y);
+    let grid = lambda_grid(lmax, 0.1, 10);
+    let tol = 1e-6;
+    let seq = PathSolver::by_name("gapsafe-cd-accel", tol).unwrap();
+    bench::time(&format!("hot/path_sequential_{tag}"), iters, || {
+        let res = run_path(x, y, &grid, &seq, false);
+        assert!(res.all_converged());
+    });
+    let bat = PathSolver::by_name("cd-batched", tol).unwrap();
+    bench::time(&format!("hot/path_batched_{tag}"), iters, || {
+        let res = run_path(x, y, &grid, &bat, false);
+        assert!(res.all_converged());
+    });
+}
+
+/// Multi-RHS column traffic in isolation: B separate `col_dot`s per
+/// column vs one `col_dot_lanes` sweep that loads the column once.
+fn bench_lane_ops(tag: &str, x: &DesignMatrix, iters: usize) {
+    let n = x.n();
+    let p = x.p();
+    let b = 8;
+    let mut rng = celer::util::rng::Rng::new(3);
+    let v: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+    let lanes: Vec<usize> = (0..b).collect();
+    let mut out = vec![0.0; b];
+    bench::time(&format!("hot/col_dot_perlane_{tag}_b{b}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            for &k in &lanes {
+                acc += x.col_dot(j, &v[k * n..(k + 1) * n]);
+            }
+        }
+        assert!(acc.is_finite());
+    });
+    bench::time(&format!("hot/col_dot_lanes_{tag}_b{b}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            x.col_dot_lanes(j, &v, n, &lanes, &mut out);
+            acc += out[0];
+        }
+        assert!(acc.is_finite());
+    });
 }
 
 fn main() {
@@ -147,6 +197,15 @@ fn main() {
     // (the CELER/Blitz hot path; the view must be at least as fast)
     bench_ws_inner_solve("dense", &dense.x, &dense.y, iters);
     bench_ws_inner_solve("sparse", &sparse.x, &sparse.y, iters);
+
+    // --- multi-RHS column traffic: per-lane col_dot vs one lane sweep ---
+    bench_lane_ops("dense", &dense.x, iters);
+    bench_lane_ops("sparse", &sparse.x, iters);
+
+    // --- full λ path: sequential chain vs batched multi-λ engine ---
+    // (the batch layer's headline quantity, dense and CSC)
+    bench_batched_path("dense", &dense.x, &dense.y, iters.min(5));
+    bench_batched_path("sparse", &sparse.x, &sparse.y, iters.min(5));
 
     // --- extrapolation solve (K = 5) ---
     {

@@ -12,6 +12,13 @@
 //! path job it claims, so the solver buffers (β, r, dual state,
 //! extrapolation ring, nested working-set workspace) are allocated once
 //! per worker, not once per λ or per job.
+//!
+//! Grid cells can run in two schedules: the sequential per-λ chain, or
+//! the batched multi-λ engine (`solver_name: "cd-batched"`), where the
+//! worker feeds its job's λ grid into B concurrent lanes of
+//! [`crate::solvers::batch`] instead of looping over the grid — the
+//! lane workspace also lives in (and is reused from) the worker's
+//! `Workspace`.
 
 pub mod metrics;
 pub mod scheduler;
@@ -106,6 +113,44 @@ mod tests {
             for (sa, sb) in a.steps.iter().zip(&b.steps) {
                 assert_eq!(sa.support_size, sb.support_size, "{}", a.solver);
             }
+        }
+    }
+
+    #[test]
+    fn batched_jobs_run_through_the_scheduler() {
+        let ds = load_dataset("leukemia-mini", 9).unwrap();
+        let grid = standard_grid(&ds, 10.0, 5);
+        let tol = 1e-8;
+        let jobs: Vec<PathJob> = ["cd-batched", "gapsafe-cd-accel"]
+            .iter()
+            .map(|s| PathJob {
+                solver_name: s.to_string(),
+                tol,
+                grid: grid.clone(),
+                store_betas: true,
+            })
+            .collect();
+        let out = run_path_jobs(&ds, jobs, 2).unwrap();
+        assert_eq!(out[0].solver, "cd-batched");
+        for r in &out {
+            assert!(r.all_converged(), "{} converged", r.solver);
+            assert_eq!(r.steps.len(), grid.len());
+        }
+        // batched and sequential grids agree on the certified objectives
+        for (i, (sb, ss)) in out[0].steps.iter().zip(&out[1].steps).enumerate() {
+            let pb = crate::lasso::primal::primal(
+                &ds.x,
+                &ds.y,
+                sb.beta.as_ref().unwrap(),
+                grid[i],
+            );
+            let ps = crate::lasso::primal::primal(
+                &ds.x,
+                &ds.y,
+                ss.beta.as_ref().unwrap(),
+                grid[i],
+            );
+            assert!((pb - ps).abs() <= 2.0 * tol, "λ#{i}: {pb} vs {ps}");
         }
     }
 

@@ -3,8 +3,11 @@
 //! Experiment cells (solver × tolerance × dataset) are independent; the
 //! scheduler fans them out over a worker pool with a shared index queue
 //! and collects results in input order. λ-path cells are NOT split —
-//! warm-start chains are sequential by construction, so a "job" is a
-//! whole path.
+//! warm-start chains couple the grid points, so a "job" is a whole
+//! path. Within a job the worker either walks the grid sequentially or
+//! feeds it into the batched multi-λ lane engine
+//! ([`crate::solvers::batch`]); both reuse the worker's per-thread
+//! state from `init()`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

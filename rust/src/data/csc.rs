@@ -207,6 +207,59 @@ impl DesignOps for CscMatrix {
     fn nnz(&self) -> usize {
         self.data.len()
     }
+
+    // Batched multi-λ sweeps (see `solvers/batch.rs`): one pass over the
+    // stored entries — each (row index, value) pair is decoded once and
+    // applied to every lane, instead of re-walking the index array once
+    // per lane.
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(lanes.len(), out.len());
+        debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
+        let (idx, val) = self.col(j);
+        debug_assert!(idx.iter().all(|&i| (i as usize) < n));
+        out.fill(0.0);
+        unsafe {
+            for e in 0..idx.len() {
+                let row = *idx.get_unchecked(e) as usize;
+                let xv = *val.get_unchecked(e);
+                for (t, &k) in lanes.iter().enumerate() {
+                    *out.get_unchecked_mut(t) += xv * v.get_unchecked(k * n + row);
+                }
+            }
+        }
+    }
+
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        debug_assert_eq!(lanes.len(), alphas.len());
+        debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
+        // In a CD sweep most lanes leave most columns unchanged, so the
+        // common cases are 0 or 1 non-zero alphas — dispatch those to
+        // the single-lane kernel instead of branching per stored entry.
+        let nz = alphas.iter().filter(|&&a| a != 0.0).count();
+        if nz == 0 {
+            return;
+        }
+        if nz == 1 {
+            let t = alphas.iter().position(|&a| a != 0.0).expect("nz == 1");
+            let k = lanes[t];
+            self.col_axpy(j, alphas[t], &mut v[k * n..(k + 1) * n]);
+            return;
+        }
+        let (idx, val) = self.col(j);
+        debug_assert!(idx.iter().all(|&i| (i as usize) < n));
+        unsafe {
+            for e in 0..idx.len() {
+                let row = *idx.get_unchecked(e) as usize;
+                let xv = *val.get_unchecked(e);
+                for (t, &k) in lanes.iter().enumerate() {
+                    let alpha = *alphas.get_unchecked(t);
+                    if alpha != 0.0 {
+                        *v.get_unchecked_mut(k * n + row) += alpha * xv;
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

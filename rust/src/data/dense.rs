@@ -123,6 +123,45 @@ impl DesignOps for DenseMatrix {
     fn nnz(&self) -> usize {
         self.data.iter().filter(|&&v| v != 0.0).count()
     }
+
+    // Batched multi-λ sweeps (see `solvers/batch.rs`): process the column
+    // in row blocks so each block is loaded from memory once and reused
+    // from L1 by every lane, instead of streaming the full column once
+    // per lane.
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(n, self.n);
+        debug_assert_eq!(lanes.len(), out.len());
+        const BLOCK: usize = 256;
+        let col = self.col(j);
+        out.fill(0.0);
+        let mut i = 0;
+        while i < n {
+            let hi = (i + BLOCK).min(n);
+            let cb = &col[i..hi];
+            for (o, &k) in out.iter_mut().zip(lanes.iter()) {
+                *o += crate::util::linalg::dot(cb, &v[k * n + i..k * n + hi]);
+            }
+            i = hi;
+        }
+    }
+
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        debug_assert_eq!(n, self.n);
+        debug_assert_eq!(lanes.len(), alphas.len());
+        const BLOCK: usize = 256;
+        let col = self.col(j);
+        let mut i = 0;
+        while i < n {
+            let hi = (i + BLOCK).min(n);
+            let cb = &col[i..hi];
+            for (&alpha, &k) in alphas.iter().zip(lanes.iter()) {
+                if alpha != 0.0 {
+                    crate::util::linalg::axpy(alpha, cb, &mut v[k * n + i..k * n + hi]);
+                }
+            }
+            i = hi;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -31,6 +31,36 @@ pub trait DesignOps: Sync {
     /// Total stored non-zeros.
     fn nnz(&self) -> usize;
 
+    /// Multi-RHS column dot: `out[t] = x_jᵀ v_lanes[t]` where lane `k`'s
+    /// vector is the slice `v[k·n .. (k+1)·n]` of a strided buffer and
+    /// `lanes[t]` selects which lanes participate.
+    ///
+    /// This is the batched multi-λ hot path (see
+    /// [`crate::solvers::batch`]): the default implementation performs
+    /// one [`DesignOps::col_dot`] per lane, while the dense/CSC storage
+    /// backends override it with a single sweep over the column that
+    /// streams all lanes at once — the column's values (and, for CSC,
+    /// its row indices) are loaded and decoded once per sweep instead of
+    /// once per lane.
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        debug_assert_eq!(lanes.len(), out.len());
+        for (o, &k) in out.iter_mut().zip(lanes.iter()) {
+            *o = self.col_dot(j, &v[k * n..(k + 1) * n]);
+        }
+    }
+
+    /// Multi-RHS column axpy: `v_lanes[t] += alphas[t] · x_j` for every
+    /// participating lane (zero coefficients are skipped). Lane layout
+    /// matches [`DesignOps::col_dot_lanes`].
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        debug_assert_eq!(lanes.len(), alphas.len());
+        for (&alpha, &k) in alphas.iter().zip(lanes.iter()) {
+            if alpha != 0.0 {
+                self.col_axpy(j, alpha, &mut v[k * n..(k + 1) * n]);
+            }
+        }
+    }
+
     /// `‖Xᵀ v‖_∞` (used by dual rescaling and λ_max).
     fn xt_abs_max(&self, v: &[f64]) -> f64 {
         crate::util::par::par_max(self.p(), |j| self.col_dot(j, v).abs()).max(0.0)
@@ -116,6 +146,12 @@ impl DesignOps for DesignMatrix {
     fn nnz(&self) -> usize {
         dispatch!(self, nnz)
     }
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        dispatch!(self, col_dot_lanes, j, v, n, lanes, out)
+    }
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        dispatch!(self, col_axpy_lanes, j, alphas, v, n, lanes)
+    }
     fn xt_abs_max(&self, v: &[f64]) -> f64 {
         dispatch!(self, xt_abs_max, v)
     }
@@ -187,5 +223,44 @@ mod tests {
         let (_, s) = random_pair(3, 50, 40, 0.1);
         let d = s.density();
         assert!(d > 0.02 && d < 0.25, "density={d}");
+    }
+
+    #[test]
+    fn lane_ops_match_per_lane_loops() {
+        // 4 strided lanes, only lanes {0, 2, 3} participate: the batched
+        // sweep must equal one col_dot / col_axpy per selected lane.
+        let (d, s) = random_pair(44, 13, 9, 0.4);
+        let n = 13;
+        let mut rng = Rng::new(5);
+        let v: Vec<f64> = (0..4 * n).map(|_| rng.normal()).collect();
+        let lanes = [0usize, 2, 3];
+        let alphas = [0.5, 0.0, -1.25];
+        for x in [&d, &s] {
+            for j in 0..9 {
+                let mut got = vec![0.0; lanes.len()];
+                x.col_dot_lanes(j, &v, n, &lanes, &mut got);
+                for (t, &k) in lanes.iter().enumerate() {
+                    let expect = x.col_dot(j, &v[k * n..(k + 1) * n]);
+                    assert!((got[t] - expect).abs() < 1e-12, "dot j={j} lane={k}");
+                }
+                let mut batched = v.clone();
+                x.col_axpy_lanes(j, &alphas, &mut batched, n, &lanes);
+                let mut manual = v.clone();
+                for (t, &k) in lanes.iter().enumerate() {
+                    x.col_axpy(j, alphas[t], &mut manual[k * n..(k + 1) * n]);
+                }
+                assert_eq!(batched, manual, "axpy j={j}");
+                // single non-zero lane (the CSC fast path) and all-zero
+                let single = [0.0, 0.7, 0.0];
+                let mut batched = v.clone();
+                x.col_axpy_lanes(j, &single, &mut batched, n, &lanes);
+                let mut manual = v.clone();
+                x.col_axpy(j, 0.7, &mut manual[2 * n..3 * n]);
+                assert_eq!(batched, manual, "axpy single j={j}");
+                let mut untouched = v.clone();
+                x.col_axpy_lanes(j, &[0.0; 3], &mut untouched, n, &lanes);
+                assert_eq!(untouched, v, "axpy all-zero j={j}");
+            }
+        }
     }
 }

@@ -13,6 +13,14 @@
 //! Per-column norms are carried over from the parent (the caller passes
 //! the parent's cached `‖x_j‖²` vector), so a view never recomputes
 //! column norms either — `col_norm_sq` is an array lookup.
+//!
+//! Paper map: the index sets being viewed are the working sets `W_t` of
+//! CELER's Algorithm 4, built by ranking features with the `d_j(θ)`
+//! pricing of Eqs. 10–11 (see [`crate::ws::build_working_set`]); the
+//! inner solve the view feeds is Algorithm 1 on the restricted design.
+//! Views also pass through the batched multi-λ lane ops
+//! ([`DesignOps::col_dot_lanes`] / [`DesignOps::col_axpy_lanes`]) by
+//! index translation, so a batched sweep can run on a restriction too.
 
 use crate::data::design::DesignOps;
 
@@ -116,6 +124,16 @@ impl<D: DesignOps> DesignOps for DesignView<'_, D> {
 
     fn nnz(&self) -> usize {
         self.cols.iter().map(|&j| self.parent.col_nnz(j)).sum()
+    }
+
+    #[inline]
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        self.parent.col_dot_lanes(self.cols[j], v, n, lanes, out);
+    }
+
+    #[inline]
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        self.parent.col_axpy_lanes(self.cols[j], alphas, v, n, lanes);
     }
 
     fn xt_abs_max(&self, v: &[f64]) -> f64 {

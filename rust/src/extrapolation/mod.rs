@@ -20,6 +20,25 @@ pub const DEFAULT_K: usize = 5;
 /// Relative pivot tolerance declaring `UᵀU` singular.
 const SINGULAR_TOL: f64 = 1e-12;
 
+/// Reusable scratch for [`ResidualBuffer::extrapolate_into`]: the K
+/// length-n diff vectors, the K×K Gram matrix, and the output residual
+/// that `extrapolate()` used to allocate on every call. One scratch per
+/// solver lane lives inside
+/// [`DualScratch`](crate::solvers::DualScratch), so steady-state
+/// extrapolation performs no heap allocation.
+#[derive(Debug, Clone, Default)]
+pub struct ExtrapScratch {
+    /// Diff columns `U = [r^{t+1-K}−r^{t-K}, …]`, each length n.
+    diffs: Vec<Vec<f64>>,
+    /// Gram matrix `UᵀU` (K×K).
+    gram: Vec<f64>,
+    /// Right-hand side 1_K.
+    ones: Vec<f64>,
+    /// Extrapolated residual (valid after a successful
+    /// [`ResidualBuffer::extrapolate_into`]).
+    pub r_accel: Vec<f64>,
+}
+
 /// Ring buffer of residuals with extrapolation.
 #[derive(Debug, Clone)]
 pub struct ResidualBuffer {
@@ -95,29 +114,58 @@ impl ResidualBuffer {
         self.successes = 0;
     }
 
-    /// Compute the extrapolated residual, or `None` when fewer than K+1
-    /// residuals are stored or the system is singular / degenerate.
+    /// Compute the extrapolated residual into a fresh vector, or `None`
+    /// when fewer than K+1 residuals are stored or the system is
+    /// singular / degenerate. Allocating convenience wrapper around
+    /// [`ResidualBuffer::extrapolate_into`] for tests, examples and
+    /// one-shot callers; the solver engine uses the scratch variant.
     pub fn extrapolate(&mut self) -> Option<Vec<f64>> {
+        let mut scratch = ExtrapScratch::default();
+        if self.extrapolate_into(&mut scratch) {
+            Some(std::mem::take(&mut scratch.r_accel))
+        } else {
+            None
+        }
+    }
+
+    /// Compute the extrapolated residual into `scratch.r_accel`,
+    /// returning whether it succeeded. All O(K·n) temporaries (the K diff
+    /// vectors, the Gram matrix, the output) live in `scratch`, so a call
+    /// is allocation-free once the scratch is warm — this is what lets
+    /// one [`ExtrapScratch`] per batch lane serve an entire λ grid.
+    pub fn extrapolate_into(&mut self, scratch: &mut ExtrapScratch) -> bool {
         if self.buf.len() < self.k + 1 {
-            return None;
+            return false;
         }
         let k = self.k;
         let n = self.buf[0].len();
         // U columns: d_i = r_{i+1} − r_i (i = 0..K), oldest diff first.
-        let mut diffs: Vec<Vec<f64>> = Vec::with_capacity(k);
+        if scratch.diffs.len() < k {
+            scratch.diffs.resize_with(k, Vec::new);
+        }
         for i in 0..k {
             let (a, b) = (&self.buf[i], &self.buf[i + 1]);
-            diffs.push((0..n).map(|t| b[t] - a[t]).collect());
+            let d = &mut scratch.diffs[i];
+            d.clear();
+            d.extend(a.iter().zip(b.iter()).map(|(&x, &y)| y - x));
         }
-        let cols: Vec<&[f64]> = diffs.iter().map(|d| d.as_slice()).collect();
-        let g = crate::util::linalg::gram(&cols);
-        let ones = vec![1.0; k];
+        // Gram matrix G = UᵀU, into the reusable K×K buffer.
+        scratch.gram.resize(k * k, 0.0);
+        for a in 0..k {
+            for b in a..k {
+                let v = crate::util::linalg::dot(&scratch.diffs[a], &scratch.diffs[b]);
+                scratch.gram[a * k + b] = v;
+                scratch.gram[b * k + a] = v;
+            }
+        }
+        scratch.ones.clear();
+        scratch.ones.resize(k, 1.0);
         // Fast path: the paper's formula c = z/(zᵀ1), (UᵀU)z = 1. When the
         // Gram matrix is singular (converged or collinear trajectories) we
         // solve the underlying constrained least-squares problem on the
         // non-null eigenspace instead; if even that degenerates we report
-        // None and the caller falls back to θ_res (paper §5).
-        let c = match crate::util::linalg::solve(&g, &ones, k, SINGULAR_TOL) {
+        // failure and the caller falls back to θ_res (paper §5).
+        let c = match crate::util::linalg::solve(&scratch.gram, &scratch.ones, k, SINGULAR_TOL) {
             Some(z) => {
                 let zsum: f64 = z.iter().sum();
                 if !zsum.is_finite() || zsum.abs() < 1e-300 {
@@ -128,24 +176,27 @@ impl ResidualBuffer {
             }
             None => None,
         };
-        let c = match c.or_else(|| crate::util::linalg::min_quadratic_on_simplex_affine(&g, k)) {
+        let c = match c
+            .or_else(|| crate::util::linalg::min_quadratic_on_simplex_affine(&scratch.gram, k))
+        {
             Some(c) => c,
             None => {
                 self.singular_fallbacks += 1;
-                return None;
+                return false;
             }
         };
         // c_i applies to the NEWER residual of diff i: r_{i+1}.
-        let mut r_accel = vec![0.0; n];
+        scratch.r_accel.clear();
+        scratch.r_accel.resize(n, 0.0);
         for i in 0..k {
-            crate::util::linalg::axpy(c[i], &self.buf[i + 1], &mut r_accel);
+            crate::util::linalg::axpy(c[i], &self.buf[i + 1], &mut scratch.r_accel);
         }
-        if !r_accel.iter().all(|v| v.is_finite()) {
+        if !scratch.r_accel.iter().all(|v| v.is_finite()) {
             self.singular_fallbacks += 1;
-            return None;
+            return false;
         }
         self.successes += 1;
-        Some(r_accel)
+        true
     }
 }
 
@@ -257,6 +308,45 @@ mod tests {
         buf.clear();
         assert!(buf.is_empty());
         assert!(buf.extrapolate().is_none());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_allocating_path() {
+        // A dirty, differently-sized scratch must give the same result as
+        // the allocating wrapper (the batch lanes reuse one scratch per
+        // lane across many λ's and problem sizes).
+        let n = 3;
+        let a = vec![
+            0.5, 0.1, 0.0, //
+            0.0, 0.3, 0.2, //
+            0.1, 0.0, 0.4,
+        ];
+        let b = vec![1.0, -0.5, 0.25];
+        let k = n + 1;
+        let mut scratch = ExtrapScratch::default();
+        // dirty the scratch with an unrelated, larger problem first
+        {
+            let mut buf = ResidualBuffer::new(k + 2);
+            let mut x = vec![0.0; 8];
+            for step in 0..(k + 4) {
+                buf.push(&x);
+                for (i, v) in x.iter_mut().enumerate() {
+                    *v = 0.9 * *v + (i + step) as f64;
+                }
+            }
+            let _ = buf.extrapolate_into(&mut scratch);
+        }
+        let mut buf_a = ResidualBuffer::new(k);
+        let mut buf_b = ResidualBuffer::new(k);
+        let mut x = vec![0.0; n];
+        for _ in 0..(k + 1) {
+            buf_a.push(&x);
+            buf_b.push(&x);
+            x = var_step(&a, &b, &x, n);
+        }
+        let fresh = buf_a.extrapolate().expect("VAR system extrapolates");
+        assert!(buf_b.extrapolate_into(&mut scratch));
+        assert_eq!(scratch.r_accel, fresh);
     }
 
     #[test]

@@ -5,14 +5,17 @@
 //!
 //! - **Layer 3 (this crate)** — the coordination contribution: the CELER
 //!   working-set outer loop, Gap Safe screening, dual extrapolation, the
-//!   λ-path scheduler with warm starts, plus every baseline the paper
-//!   compares against (vanilla CD, ISTA/FISTA, Blitz, GLMNET-style,
-//!   Dykstra).
+//!   λ-path scheduler with warm starts (sequential or batched multi-λ
+//!   lanes, [`solvers::batch`]), plus every baseline the paper compares
+//!   against (vanilla CD, ISTA/FISTA, Blitz, GLMNET-style, Dykstra).
 //! - **Layer 2/1 (python/, build-time only)** — JAX compute graphs and
 //!   Pallas kernels for the inner-solver hot spots, AOT-lowered to HLO
 //!   text and executed from Rust through the PJRT C API ([`runtime`]).
 //!
 //! See `ARCHITECTURE.md` for the data → engine → solver → path layering.
+//! The repo-level README below covers building, testing and running the
+//! per-figure example drivers.
+#![doc = include_str!("../../README.md")]
 
 // Solver kernels naturally thread many slices through one call; capping
 // the argument count would force ad-hoc context structs on hot paths.

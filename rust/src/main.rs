@@ -84,7 +84,7 @@ COMMANDS:
   help             this message
 
 SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
-         gapsafe-cd-accel
+         gapsafe-cd-accel cd-batched (batched multi-λ lanes; path only)
 DATASETS: leukemia-sim leukemia-mini finance-sim finance-mini bctcga-sim toy-2x2
 ";
 

@@ -1,0 +1,545 @@
+//! Batched multi-λ solver engine: several λ's of a path solved
+//! concurrently over shared design sweeps.
+//!
+//! # Why
+//!
+//! The paper's headline experiments (Table 1, Fig. 4) are *path*
+//! computations: a decreasing λ grid solved with warm starts, where Gap
+//! Safe sequential rules (Ndiaye et al.) make each successive λ cheaper.
+//! The sequential driver in [`crate::solvers::path`] walks the grid one
+//! λ at a time, which means every CD epoch re-streams the design matrix
+//! for a *single* residual. On large problems the epoch is memory-bound:
+//! the dominant cost is loading each column's values (and, for CSC,
+//! decoding its row indices), not the multiply-adds.
+//!
+//! The batch engine amortizes that traffic. B *lanes* — adjacent grid
+//! cells λ_{k}, …, λ_{k+B−1}, each with its own β, residual, dual state
+//! and screening state — run their Algorithm-1 CD epochs interleaved
+//! over a **single pass over the columns**: one
+//! [`DesignOps::col_dot_lanes`] computes `x_jᵀr_k` for every live lane
+//! with the column loaded once, and one [`DesignOps::col_axpy_lanes`]
+//! applies all lane updates on the way out.
+//!
+//! # Lane lifecycle
+//!
+//! ```text
+//!  λ grid (descending) ──┬─▶ lane 0 ─ epochs ─ gap ≤ ε ─▶ retire ─┐
+//!                        ├─▶ lane 1 ─ epochs ─ gap ≤ ε ─▶ retire ─┼─▶ results
+//!                        └─▶ …       (per-lane Gap Safe screening) ┘
+//!        refill: a retired slot loads the next grid cell, warm-started
+//!        from the deepest (smallest-λ) solution retired so far
+//! ```
+//!
+//! Every `gap_freq` epochs each lane runs its own duality-gap check
+//! (θ_res and, via the per-lane extrapolation ring, θ_accel — Def. 1 /
+//! Eq. 13 of the paper) and dynamic Gap Safe screening (Eq. 9; the
+//! `d_j` pricing of Eq. 10–11). A converged lane *retires*: its solution
+//! is recorded, its slot immediately loads the next λ from the grid, and
+//! the new lane warm-starts from the most-converged (deepest-in-grid)
+//! retired solution — the batched analogue of the sequential path's
+//! β̂(λ_i) → λ_{i+1} warm start.
+//!
+//! # Equivalence
+//!
+//! Each lane runs exactly the Algorithm-1 epoch/check sequence of the
+//! sequential engine, so every grid point's solution is gap-certified at
+//! the same ε; `tests/prop_batch_path.rs` pins batched ≡ sequential
+//! (supports and objectives) on dense and sparse designs.
+
+use crate::data::design::DesignOps;
+use crate::lasso::primal;
+use crate::screening::ScreeningState;
+use crate::solvers::{DualScratch, DualState};
+use crate::util::soft_threshold;
+use std::time::Instant;
+
+/// Configuration of the batched multi-λ engine (the union of the
+/// sequential [`EngineConfig`](crate::solvers::engine::EngineConfig)
+/// knobs plus the lane count B).
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Per-λ duality-gap tolerance ε.
+    pub tol: f64,
+    /// Per-lane epoch cap (a lane retires unconverged at the cap).
+    pub max_epochs: usize,
+    /// Gap/dual evaluation frequency `f` in epochs (paper default: 10).
+    pub gap_freq: usize,
+    /// Extrapolation depth K (paper default: 5).
+    pub k: usize,
+    /// Compute θ_accel (Definition 1) per lane.
+    pub extrapolate: bool,
+    /// Keep the best dual point across checks (Eq. 13).
+    pub best_dual: bool,
+    /// Per-lane dynamic Gap Safe screening.
+    pub screen: bool,
+    /// Number of concurrent λ lanes B (clamped to the grid size; 1
+    /// degenerates to the sequential engine's schedule).
+    pub lanes: usize,
+}
+
+/// Default lane count: wide enough to amortize column traffic, small
+/// enough that B residual lanes stay cache-resident on typical n.
+pub const DEFAULT_LANES: usize = 8;
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            tol: 1e-6,
+            max_epochs: 50_000,
+            gap_freq: 10,
+            k: crate::extrapolation::DEFAULT_K,
+            extrapolate: true,
+            best_dual: true,
+            screen: true,
+            lanes: DEFAULT_LANES,
+        }
+    }
+}
+
+/// One retired lane = one solved grid point.
+#[derive(Debug, Clone)]
+pub struct BatchLaneResult {
+    /// Position in the input grid (results are returned grid-ordered).
+    pub grid_idx: usize,
+    pub lambda: f64,
+    pub beta: Vec<f64>,
+    /// Duality gap at retirement.
+    pub gap: f64,
+    /// Epochs this lane consumed.
+    pub epochs: usize,
+    pub converged: bool,
+    /// Wall-clock seconds the lane was resident. Lanes share the sweep,
+    /// so unlike the sequential path these intervals overlap.
+    pub seconds: f64,
+}
+
+/// Per-slot bookkeeping (which grid cell the slot is solving).
+#[derive(Debug, Clone, Default)]
+struct LaneMeta {
+    grid_idx: usize,
+    epochs: usize,
+    /// Seconds offset (from solve start) at which the lane was loaded.
+    t0: f64,
+}
+
+/// Reusable state of the batch engine: B lanes of (β, r, dual state,
+/// screening state) in lane-strided buffers, plus the shared design
+/// caches and sweep scratch. Like the sequential
+/// [`Workspace`](crate::solvers::engine::Workspace), buffers are
+/// resized — never reallocated once warm — across grids.
+#[derive(Default)]
+pub struct BatchWorkspace {
+    /// Cached `‖x_j‖²` (shared by every lane).
+    norms_sq: Vec<f64>,
+    /// Cached `‖x_j‖` for screening.
+    col_norms: Vec<f64>,
+    /// Lane-strided primal iterates: lane k's β is `beta[k·p .. (k+1)·p]`.
+    beta: Vec<f64>,
+    /// Lane-strided residuals: lane k's r is `r[k·n .. (k+1)·n]`.
+    r: Vec<f64>,
+    /// Per-slot λ.
+    lane_lambda: Vec<f64>,
+    /// Per-slot dual machinery (θ, Xᵀθ, extrapolation ring).
+    dual: Vec<DualState>,
+    /// Per-slot gap-check scratch (one extrapolation scratch per lane).
+    scratch: Vec<DualScratch>,
+    /// Per-slot dynamic screening state.
+    screening: Vec<ScreeningState>,
+    meta: Vec<LaneMeta>,
+    /// Live slot ids.
+    live: Vec<usize>,
+    /// Sweep scratch: lanes active at the current column.
+    act: Vec<usize>,
+    /// Sweep scratch: per-active-lane correlations `x_jᵀr_k`.
+    g: Vec<f64>,
+    /// Sweep scratch: per-active-lane coefficient deltas.
+    delta: Vec<f64>,
+    /// Warm-start seed: the deepest (smallest-λ) retired solution.
+    seed_beta: Vec<f64>,
+}
+
+impl BatchWorkspace {
+    pub fn new() -> Self {
+        BatchWorkspace::default()
+    }
+}
+
+/// One interleaved sweep's view of the lane state, handed to a
+/// [`BatchStrategy`]. Lane k's vectors are the strided slices
+/// `beta[k·p..]` / `r[k·n..]`; only slots listed in `live` participate.
+pub struct LaneSweep<'a> {
+    pub n: usize,
+    pub p: usize,
+    /// Per-slot λ (indexed by slot id, not by position in `live`).
+    pub lambdas: &'a [f64],
+    /// Live slot ids.
+    pub live: &'a [usize],
+    /// Per-slot screening state (a lane skips its screened-out columns).
+    pub screening: &'a [ScreeningState],
+    /// Shared cached `‖x_j‖²`.
+    pub norms_sq: &'a [f64],
+    /// Lane-strided β (lanes × p).
+    pub beta: &'a mut [f64],
+    /// Lane-strided residuals (lanes × n).
+    pub r: &'a mut [f64],
+    /// Reusable per-column scratch: active slots at the column.
+    pub act: &'a mut Vec<usize>,
+    /// Reusable per-column scratch: correlations for `act`.
+    pub g: &'a mut Vec<f64>,
+    /// Reusable per-column scratch: deltas for `act`.
+    pub delta: &'a mut Vec<f64>,
+}
+
+/// A batched solver strategy: one interleaved primal epoch over all live
+/// lanes in a single pass over the columns. The batched analogue of
+/// [`Strategy`](crate::solvers::engine::Strategy).
+pub trait BatchStrategy<D: DesignOps> {
+    /// Run one epoch for every live lane, updating each lane's (β, r).
+    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>);
+}
+
+/// Cyclic coordinate descent interleaved across lanes (Algorithm 1 per
+/// lane, one design sweep for all of them): for each column j, the
+/// correlations `x_jᵀr_k` of every lane still holding j are computed by
+/// one [`DesignOps::col_dot_lanes`], the per-lane soft-threshold updates
+/// are applied, and one [`DesignOps::col_axpy_lanes`] propagates all
+/// residual updates.
+pub struct BatchCdStrategy;
+
+impl<D: DesignOps> BatchStrategy<D> for BatchCdStrategy {
+    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>) {
+        let (n, p) = (s.n, s.p);
+        let live: &[usize] = s.live;
+        let lambdas: &[f64] = s.lambdas;
+        let norms_sq: &[f64] = s.norms_sq;
+        let screening: &[ScreeningState] = s.screening;
+        for j in 0..p {
+            let nrm = norms_sq[j];
+            if nrm == 0.0 {
+                continue;
+            }
+            s.act.clear();
+            for &slot in live {
+                if !screening[slot].is_screened(j) {
+                    s.act.push(slot);
+                }
+            }
+            if s.act.is_empty() {
+                continue;
+            }
+            s.g.clear();
+            s.g.resize(s.act.len(), 0.0);
+            x.col_dot_lanes(j, s.r, n, s.act, s.g);
+            s.delta.clear();
+            let mut any_update = false;
+            for (t, &slot) in s.act.iter().enumerate() {
+                let bj = &mut s.beta[slot * p + j];
+                let old = *bj;
+                let new = soft_threshold(old + s.g[t] / nrm, lambdas[slot] / nrm);
+                *bj = new;
+                let d = old - new;
+                any_update |= d != 0.0;
+                s.delta.push(d);
+            }
+            if any_update {
+                x.col_axpy_lanes(j, s.delta, s.r, n, s.act);
+            }
+        }
+    }
+}
+
+/// Load grid cell `grid_idx` (λ = `lambda`) into slot `slot`: β from the
+/// current warm-start seed, residual via one matvec, fresh dual /
+/// screening state.
+fn load_lane<D: DesignOps>(
+    ws: &mut BatchWorkspace,
+    x: &D,
+    y: &[f64],
+    slot: usize,
+    grid_idx: usize,
+    lambda: f64,
+    cfg: &BatchConfig,
+    start: &Instant,
+) {
+    let n = x.n();
+    let p = x.p();
+    let BatchWorkspace { beta, r, lane_lambda, dual, scratch, screening, meta, seed_beta, .. } = ws;
+    lane_lambda[slot] = lambda;
+    meta[slot] = LaneMeta { grid_idx, epochs: 0, t0: start.elapsed().as_secs_f64() };
+    let beta_slot = &mut beta[slot * p..(slot + 1) * p];
+    beta_slot.copy_from_slice(seed_beta);
+    let r_slot = &mut r[slot * n..(slot + 1) * n];
+    primal::residual(x, y, beta_slot, r_slot);
+    dual[slot].reset(n, p, cfg.k.max(1), cfg.extrapolate, cfg.best_dual);
+    scratch[slot].prepare(n, p);
+    screening[slot].reset_all_active(p);
+}
+
+/// Solve every λ in `grid` (descending, as produced by
+/// [`lambda_grid`](crate::solvers::path::lambda_grid)) with B
+/// interleaved lanes. Returns one [`BatchLaneResult`] per grid point, in
+/// grid order.
+///
+/// `beta0` seeds the first B lanes (and the warm-start chain) — `None`
+/// starts from zeros, which is exact for the conventional λ_max-anchored
+/// grid.
+pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
+    x: &D,
+    y: &[f64],
+    grid: &[f64],
+    beta0: Option<&[f64]>,
+    cfg: &BatchConfig,
+    ws: &mut BatchWorkspace,
+    strategy: &mut S,
+) -> Vec<BatchLaneResult> {
+    let n = x.n();
+    let p = x.p();
+    assert_eq!(y.len(), n);
+    if grid.is_empty() {
+        return Vec::new();
+    }
+    let b = cfg.lanes.max(1).min(grid.len());
+    let start = Instant::now();
+
+    // ---- shared design caches ----
+    crate::solvers::engine::fill_norm_caches(x, &mut ws.norms_sq, &mut ws.col_norms);
+
+    // ---- lane buffers (capacity reused across grids) ----
+    ws.beta.clear();
+    ws.beta.resize(b * p, 0.0);
+    ws.r.clear();
+    ws.r.resize(b * n, 0.0);
+    ws.lane_lambda.clear();
+    ws.lane_lambda.resize(b, 0.0);
+    ws.dual.resize_with(b, DualState::default);
+    ws.scratch.resize_with(b, DualScratch::default);
+    ws.screening.resize_with(b, ScreeningState::default);
+    ws.meta.clear();
+    ws.meta.resize(b, LaneMeta::default());
+    ws.seed_beta.clear();
+    match beta0 {
+        Some(seed) => {
+            assert_eq!(seed.len(), p);
+            ws.seed_beta.extend_from_slice(seed);
+        }
+        None => ws.seed_beta.resize(p, 0.0),
+    }
+
+    let mut results: Vec<BatchLaneResult> = Vec::with_capacity(grid.len());
+    let mut next_grid = 0usize;
+    // Grid index backing `seed_beta` (deepest retired so far).
+    let mut seed_idx: Option<usize> = None;
+
+    ws.live.clear();
+    for slot in 0..b {
+        load_lane(ws, x, y, slot, next_grid, grid[next_grid], cfg, &start);
+        ws.live.push(slot);
+        next_grid += 1;
+    }
+
+    while !ws.live.is_empty() {
+        // ---- one interleaved epoch over every live lane ----
+        {
+            let BatchWorkspace {
+                norms_sq, beta, r, lane_lambda, screening, live, act, g, delta, ..
+            } = ws;
+            let mut ctx = LaneSweep {
+                n,
+                p,
+                lambdas: lane_lambda.as_slice(),
+                live: live.as_slice(),
+                screening: screening.as_slice(),
+                norms_sq: norms_sq.as_slice(),
+                beta: beta.as_mut_slice(),
+                r: r.as_mut_slice(),
+                act,
+                g,
+                delta,
+            };
+            strategy.sweep(x, &mut ctx);
+        }
+
+        // ---- per-lane gap checks, screening, retirement, refill ----
+        let mut li = 0;
+        while li < ws.live.len() {
+            let slot = ws.live[li];
+            ws.meta[slot].epochs += 1;
+            let epochs = ws.meta[slot].epochs;
+            let at_cap = epochs >= cfg.max_epochs;
+            if epochs % cfg.gap_freq != 0 && !at_cap {
+                li += 1;
+                continue;
+            }
+            let lambda = ws.lane_lambda[slot];
+            let (gap, converged) = {
+                let BatchWorkspace { beta, r, dual, scratch, screening, col_norms, .. } = ws;
+                let r_slot = &mut r[slot * n..(slot + 1) * n];
+                let beta_slot = &mut beta[slot * p..(slot + 1) * p];
+                dual[slot].update(x, y, lambda, r_slot, &mut scratch[slot]);
+                let p_val = primal::primal_from_residual(r_slot, beta_slot, lambda);
+                let gap = p_val - dual[slot].dval;
+                let converged = gap <= cfg.tol;
+                // Screen only while unconverged (same invariant as the
+                // sequential engine: the reported (β, gap) pair is the
+                // one that passed the stopping test).
+                if cfg.screen && !converged {
+                    screening[slot].screen(
+                        x,
+                        &dual[slot].xtheta,
+                        col_norms,
+                        gap,
+                        lambda,
+                        beta_slot,
+                        r_slot,
+                    );
+                }
+                (gap, converged)
+            };
+            if converged || at_cap {
+                let meta = ws.meta[slot].clone();
+                let beta_out = ws.beta[slot * p..(slot + 1) * p].to_vec();
+                // The deepest retired solution seeds future lanes: on a
+                // descending grid it is the closest solved neighbour of
+                // every still-unassigned λ.
+                let deeper = match seed_idx {
+                    None => true,
+                    Some(s) => meta.grid_idx > s,
+                };
+                if deeper {
+                    ws.seed_beta.clear();
+                    ws.seed_beta.extend_from_slice(&beta_out);
+                    seed_idx = Some(meta.grid_idx);
+                }
+                results.push(BatchLaneResult {
+                    grid_idx: meta.grid_idx,
+                    lambda,
+                    beta: beta_out,
+                    gap,
+                    epochs,
+                    converged,
+                    seconds: start.elapsed().as_secs_f64() - meta.t0,
+                });
+                if next_grid < grid.len() {
+                    load_lane(ws, x, y, slot, next_grid, grid[next_grid], cfg, &start);
+                    next_grid += 1;
+                    li += 1;
+                } else {
+                    // The slot swapped into position `li` has not been
+                    // checked this round yet, so `li` stays put.
+                    ws.live.swap_remove(li);
+                }
+            } else {
+                li += 1;
+            }
+        }
+    }
+
+    results.sort_by_key(|res| res.grid_idx);
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lasso::dual;
+    use crate::solvers::cd::{cd_solve, CdConfig};
+    use crate::solvers::path::lambda_grid;
+
+    fn cfg(tol: f64, lanes: usize) -> BatchConfig {
+        BatchConfig { tol, lanes, ..Default::default() }
+    }
+
+    #[test]
+    fn single_lane_matches_sequential_cd() {
+        // B = 1 degenerates to the sequential engine's schedule: each
+        // grid point must converge to the same gap-certified objective.
+        let ds = crate::data::synth::leukemia_mini(60);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.1, 4);
+        let mut ws = BatchWorkspace::new();
+        let tol = 1e-9;
+        let out = solve_grid(&ds.x, &ds.y, &grid, None, &cfg(tol, 1), &mut ws, &mut BatchCdStrategy);
+        assert_eq!(out.len(), grid.len());
+        for (i, lane) in out.iter().enumerate() {
+            assert_eq!(lane.grid_idx, i);
+            assert!(lane.converged, "λ#{i} converged");
+            assert!(lane.gap <= tol, "λ#{i} gap {}", lane.gap);
+            let reference = cd_solve(
+                &ds.x,
+                &ds.y,
+                grid[i],
+                None,
+                &CdConfig { tol: tol / 10.0, screen: true, ..Default::default() },
+            );
+            let p_batch = crate::lasso::primal::primal(&ds.x, &ds.y, &lane.beta, grid[i]);
+            let p_ref = crate::lasso::primal::primal(&ds.x, &ds.y, &reference.beta, grid[i]);
+            assert!(p_batch - p_ref <= 2.0 * tol, "λ#{i}: {p_batch} vs {p_ref}");
+        }
+    }
+
+    #[test]
+    fn more_lanes_than_grid_points() {
+        let ds = crate::data::synth::leukemia_mini(61);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.2, 3);
+        let mut ws = BatchWorkspace::new();
+        let out =
+            solve_grid(&ds.x, &ds.y, &grid, None, &cfg(1e-8, 16), &mut ws, &mut BatchCdStrategy);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|l| l.converged));
+        // grid-ordered results
+        for w in out.windows(2) {
+            assert!(w[0].grid_idx < w[1].grid_idx);
+        }
+    }
+
+    #[test]
+    fn lambda_at_lambda_max_retires_with_empty_support() {
+        let ds = crate::data::synth::leukemia_mini(62);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = [lmax * 1.01, lmax * 0.5];
+        let mut ws = BatchWorkspace::new();
+        let out =
+            solve_grid(&ds.x, &ds.y, &grid, None, &cfg(1e-8, 2), &mut ws, &mut BatchCdStrategy);
+        assert!(out[0].converged);
+        assert_eq!(crate::lasso::primal::support_size(&out[0].beta), 0);
+        assert!(crate::lasso::primal::support_size(&out[1].beta) > 0);
+    }
+
+    #[test]
+    fn workspace_reuse_is_equivalent_to_fresh() {
+        let ds = crate::data::synth::leukemia_mini(63);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.1, 6);
+        let c = cfg(1e-9, 3);
+        let mut fresh = BatchWorkspace::new();
+        let a = solve_grid(&ds.x, &ds.y, &grid, None, &c, &mut fresh, &mut BatchCdStrategy);
+        let mut reused = BatchWorkspace::new();
+        // dirty the workspace with a different grid and lane count first
+        let other = lambda_grid(lmax, 0.5, 2);
+        let _ =
+            solve_grid(&ds.x, &ds.y, &other, None, &cfg(1e-6, 2), &mut reused, &mut BatchCdStrategy);
+        let b = solve_grid(&ds.x, &ds.y, &grid, None, &c, &mut reused, &mut BatchCdStrategy);
+        assert_eq!(a.len(), b.len());
+        for (la, lb) in a.iter().zip(&b) {
+            assert_eq!(la.epochs, lb.epochs);
+            assert_eq!(la.beta, lb.beta);
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_empty() {
+        let ds = crate::data::synth::leukemia_mini(64);
+        let mut ws = BatchWorkspace::new();
+        let out = solve_grid(
+            &ds.x,
+            &ds.y,
+            &[],
+            None,
+            &BatchConfig::default(),
+            &mut ws,
+            &mut BatchCdStrategy,
+        );
+        assert!(out.is_empty());
+    }
+}

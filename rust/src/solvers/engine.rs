@@ -22,6 +22,15 @@
 //! Strategies implement only what genuinely differs between solvers: the
 //! primal epoch (cyclic CD vs. a proximal-gradient step) and, for
 //! FISTA, which residual the dual machinery should see.
+//!
+//! Paper map: the epoch → gap-check → dual-update loop is **Algorithm 1**
+//! (cyclic CD with dual extrapolation every `f` epochs; θ_res from
+//! Eq. 4, θ_accel from Definition 1, best-dual from Eq. 13); the
+//! equivalent dual view of the same iteration — Dykstra's algorithm on
+//! the slab intersection — is **Algorithms 2–3**, implemented in
+//! [`crate::solvers::dykstra`]. To solve several λ's of a path at once,
+//! the batched engine in [`crate::solvers::batch`] runs B copies of this
+//! loop interleaved over shared design sweeps.
 
 use crate::data::design::DesignOps;
 use crate::lasso::primal;
@@ -199,6 +208,29 @@ pub struct Workspace {
     /// Nested workspace for inner (working-set) solves, allocated on
     /// first use and reused for every subsequent subproblem.
     pub inner: Option<Box<Workspace>>,
+    /// Lane workspace for batched multi-λ path solves (see
+    /// [`crate::solvers::batch`]), allocated on the first batched run
+    /// and reused — so a coordinator worker thread carries both the
+    /// sequential and the batched engine state in one place.
+    pub batch: Option<Box<crate::solvers::batch::BatchWorkspace>>,
+}
+
+/// Fill the cached `‖x_j‖²` / `‖x_j‖` vectors for a design, reusing the
+/// buffers' capacity. The one buffer-preparation sequence shared by the
+/// sequential workspace ([`Workspace::init_primal`]) and the batched
+/// lane workspace ([`crate::solvers::batch`]).
+pub(crate) fn fill_norm_caches<D: DesignOps>(
+    x: &D,
+    norms_sq: &mut Vec<f64>,
+    col_norms: &mut Vec<f64>,
+) {
+    let p = x.p();
+    norms_sq.resize(p, 0.0);
+    crate::util::par::par_fill(norms_sq, |j| x.col_norm_sq(j));
+    col_norms.resize(p, 0.0);
+    for j in 0..p {
+        col_norms[j] = norms_sq[j].sqrt();
+    }
 }
 
 impl Workspace {
@@ -215,12 +247,7 @@ impl Workspace {
         let n = x.n();
         let p = x.p();
         assert_eq!(y.len(), n);
-        self.norms_sq.resize(p, 0.0);
-        crate::util::par::par_fill(&mut self.norms_sq, |j| x.col_norm_sq(j));
-        self.col_norms.resize(p, 0.0);
-        for j in 0..p {
-            self.col_norms[j] = self.norms_sq[j].sqrt();
-        }
+        fill_norm_caches(x, &mut self.norms_sq, &mut self.col_norms);
         self.beta.resize(p, 0.0);
         match beta0 {
             Some(b) => {
@@ -244,6 +271,17 @@ impl Workspace {
     /// Return the nested inner workspace after an inner solve.
     pub fn put_inner(&mut self, inner: Box<Workspace>) {
         self.inner = Some(inner);
+    }
+
+    /// Take the batched multi-λ lane workspace (creating it on first
+    /// use); hand it back via [`Workspace::put_batch`].
+    pub fn take_batch(&mut self) -> Box<crate::solvers::batch::BatchWorkspace> {
+        self.batch.take().unwrap_or_default()
+    }
+
+    /// Return the batched lane workspace after a batched path run.
+    pub fn put_batch(&mut self, batch: Box<crate::solvers::batch::BatchWorkspace>) {
+        self.batch = Some(batch);
     }
 
     /// Clone the workspace's solution out into a [`SolveResult`].

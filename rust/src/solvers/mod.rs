@@ -5,6 +5,7 @@
 //! per-solver files contribute only their strategy (CD epoch, proximal
 //! step, working-set outer loop) — see `ARCHITECTURE.md`.
 
+pub mod batch;
 pub mod blitz;
 pub mod cd;
 pub mod celer;
@@ -84,6 +85,9 @@ pub struct DualScratch {
     pub xtr_acc: Vec<f64>,
     /// Rescaled extrapolated dual point θ_accel (length n).
     pub theta_acc: Vec<f64>,
+    /// Extrapolation temporaries (K diff vectors, Gram matrix, r_accel)
+    /// that `ResidualBuffer::extrapolate` used to allocate per call.
+    pub extrap: crate::extrapolation::ExtrapScratch,
 }
 
 impl DualScratch {
@@ -188,30 +192,31 @@ impl DualState {
         let mut best_val = d_res;
         let mut best = DualChoice::Residual;
 
-        // θ_accel (written into scratch, copied into self only if it wins)
+        // θ_accel (written into scratch, copied into self only if it
+        // wins). The extrapolated residual itself lands in
+        // `scratch.extrap.r_accel` — no per-check allocation.
         let mut d_accel_out = None;
-        if self.extrapolate {
-            if let Some(r_acc) = self.buffer.extrapolate() {
-                scratch.xtr_acc.resize(p, 0.0);
-                scratch.theta_acc.resize(n, 0.0);
-                x.xt_vec(&r_acc, &mut scratch.xtr_acc);
-                let mut denom_a = lambda;
-                for &v in scratch.xtr_acc.iter() {
-                    denom_a = denom_a.max(v.abs());
-                }
-                let inv_a = 1.0 / denom_a;
-                for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
-                    *t = v * inv_a;
-                }
-                for v in scratch.xtr_acc.iter_mut() {
-                    *v *= inv_a;
-                }
-                let d_acc = dual::dual_objective(y, &scratch.theta_acc, lambda);
-                d_accel_out = Some(d_acc);
-                if d_acc > best_val {
-                    best_val = d_acc;
-                    best = DualChoice::Extrapolated;
-                }
+        if self.extrapolate && self.buffer.extrapolate_into(&mut scratch.extrap) {
+            let r_acc = &scratch.extrap.r_accel;
+            scratch.xtr_acc.resize(p, 0.0);
+            scratch.theta_acc.resize(n, 0.0);
+            x.xt_vec(r_acc, &mut scratch.xtr_acc);
+            let mut denom_a = lambda;
+            for &v in scratch.xtr_acc.iter() {
+                denom_a = denom_a.max(v.abs());
+            }
+            let inv_a = 1.0 / denom_a;
+            for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
+                *t = v * inv_a;
+            }
+            for v in scratch.xtr_acc.iter_mut() {
+                *v *= inv_a;
+            }
+            let d_acc = dual::dual_objective(y, &scratch.theta_acc, lambda);
+            d_accel_out = Some(d_acc);
+            if d_acc > best_val {
+                best_val = d_acc;
+                best = DualChoice::Extrapolated;
             }
         }
 

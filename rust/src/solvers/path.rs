@@ -5,9 +5,19 @@
 //! point every buffer (β, r, Xᵀr, dual state, extrapolation ring, the
 //! nested working-set workspace) is already sized, so subsequent λ steps
 //! run without per-λ reallocation.
+//!
+//! Two execution modes feed the grid:
+//!
+//! - **sequential** (every [`PathSolver`] except `BatchedCd`): one λ at
+//!   a time, β̂(λ_i) warm-starting λ_{i+1};
+//! - **batched** ([`PathSolver::BatchedCd`], the [`lasso_path`]
+//!   default): the grid feeds B concurrent lanes of the
+//!   [`batch`](crate::solvers::batch) engine, whose interleaved CD
+//!   epochs share each design sweep across lanes.
 
 use crate::data::design::DesignMatrix;
 use crate::lasso::dual;
+use crate::solvers::batch::{self, BatchCdStrategy, BatchConfig};
 use crate::solvers::blitz::{blitz_solve_ws, BlitzConfig};
 use crate::solvers::cd::{cd_solve_ws, CdConfig};
 use crate::solvers::celer::{celer_solve_on_ws, CelerConfig};
@@ -39,6 +49,9 @@ pub enum PathSolver {
     VanillaCd(CdConfig),
     /// CD + dynamic Gap Safe screening; `extrapolate` picks θ_accel/θ_res.
     GapSafeCd(CdConfig),
+    /// Batched multi-λ CD: B grid cells solved concurrently over shared
+    /// design sweeps (see [`crate::solvers::batch`]).
+    BatchedCd(BatchConfig),
 }
 
 impl PathSolver {
@@ -56,6 +69,7 @@ impl PathSolver {
                     "gapsafe-cd-res"
                 }
             }
+            PathSolver::BatchedCd(_) => "cd-batched",
         }
     }
 
@@ -83,6 +97,9 @@ impl PathSolver {
                 extrapolate: true,
                 ..Default::default()
             }),
+            "cd-batched" | "batched" => {
+                PathSolver::BatchedCd(BatchConfig { tol, ..Default::default() })
+            }
             _ => return None,
         })
     }
@@ -128,6 +145,28 @@ pub fn run_path(
     run_path_with_workspace(x, y, grid, solver, store_betas, &mut ws)
 }
 
+/// The paper's headline computation (Table 1 / Fig. 4): solve a full λ
+/// grid. Runs on the batched multi-λ engine — `lanes` concurrent grid
+/// cells per design sweep (`0` picks
+/// [`DEFAULT_LANES`](crate::solvers::batch::DEFAULT_LANES)); pass a
+/// sequential [`PathSolver`] to [`run_path`] instead for the one-λ-at-a-
+/// time schedule.
+pub fn lasso_path(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    tol: f64,
+    lanes: usize,
+    store_betas: bool,
+) -> PathResult {
+    let cfg = BatchConfig {
+        tol,
+        lanes: if lanes == 0 { batch::DEFAULT_LANES } else { lanes },
+        ..Default::default()
+    };
+    run_path(x, y, grid, &PathSolver::BatchedCd(cfg), store_betas)
+}
+
 /// [`run_path`] on a caller-provided [`Workspace`] (e.g. the coordinator
 /// can keep one workspace per worker thread across many path jobs).
 pub fn run_path_with_workspace(
@@ -138,6 +177,9 @@ pub fn run_path_with_workspace(
     store_betas: bool,
     ws: &mut Workspace,
 ) -> PathResult {
+    if let PathSolver::BatchedCd(cfg) = solver {
+        return run_path_batched(x, y, grid, cfg, store_betas, ws);
+    }
     let start = Instant::now();
     let p = crate::data::design::DesignOps::p(x);
     let mut beta = vec![0.0; p];
@@ -162,6 +204,7 @@ pub fn run_path_with_workspace(
                 let out = cd_solve_ws(x, y, lambda, Some(&beta), cfg, ws);
                 (out.beta, out.gap, out.epochs, out.converged)
             }
+            PathSolver::BatchedCd(_) => unreachable!("handled by run_path_batched"),
         };
         beta = new_beta;
         steps.push(PathStep {
@@ -177,6 +220,53 @@ pub fn run_path_with_workspace(
     }
     PathResult {
         solver: solver.name().to_string(),
+        steps,
+        total_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run the grid on the batched multi-λ engine: the grid feeds B lanes,
+/// converged lanes retire and their slots load the next cell (see
+/// [`crate::solvers::batch`]). The lane workspace lives inside the
+/// engine [`Workspace`] (`ws.batch`), so a coordinator worker reuses it
+/// across jobs like every other solver buffer.
+pub fn run_path_batched(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    cfg: &BatchConfig,
+    store_betas: bool,
+    ws: &mut Workspace,
+) -> PathResult {
+    let start = Instant::now();
+    let mut lanes_ws = ws.take_batch();
+    // Dispatch once so the interleaved sweeps monomorphize per storage.
+    let results = match x {
+        DesignMatrix::Dense(d) => {
+            batch::solve_grid(d, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
+        }
+        DesignMatrix::Sparse(s) => {
+            batch::solve_grid(s, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
+        }
+    };
+    ws.put_batch(lanes_ws);
+    let steps = results
+        .into_iter()
+        .map(|lane| {
+            let support_size = crate::lasso::primal::support_size(&lane.beta);
+            PathStep {
+                lambda: lane.lambda,
+                seconds: lane.seconds,
+                epochs: lane.epochs,
+                gap: lane.gap,
+                support_size,
+                converged: lane.converged,
+                beta: if store_betas { Some(lane.beta) } else { None },
+            }
+        })
+        .collect();
+    PathResult {
+        solver: PathSolver::BatchedCd(cfg.clone()).name().to_string(),
         steps,
         total_seconds: start.elapsed().as_secs_f64(),
     }
@@ -231,5 +321,47 @@ mod tests {
     #[test]
     fn unknown_solver_name() {
         assert!(PathSolver::by_name("nope", 1e-6).is_none());
+    }
+
+    #[test]
+    fn batched_path_matches_sequential_objectives() {
+        let ds = synth::leukemia_mini(52);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.05, 6);
+        let tol = 1e-9;
+        let seq = run_path(
+            &ds.x,
+            &ds.y,
+            &grid,
+            &PathSolver::by_name("gapsafe-cd-accel", tol).unwrap(),
+            true,
+        );
+        let bat = lasso_path(&ds.x, &ds.y, &grid, tol, 4, true);
+        assert_eq!(bat.solver, "cd-batched");
+        assert!(seq.all_converged() && bat.all_converged());
+        for (i, (ss, sb)) in seq.steps.iter().zip(&bat.steps).enumerate() {
+            assert!(sb.gap <= tol, "λ#{i} gap {}", sb.gap);
+            let ps = crate::lasso::primal::primal(
+                &ds.x,
+                &ds.y,
+                ss.beta.as_ref().unwrap(),
+                grid[i],
+            );
+            let pb = crate::lasso::primal::primal(
+                &ds.x,
+                &ds.y,
+                sb.beta.as_ref().unwrap(),
+                grid[i],
+            );
+            // both gap-certified at tol ⇒ objectives within 2·tol
+            assert!((ps - pb).abs() <= 2.0 * tol, "λ#{i}: {ps} vs {pb}");
+        }
+    }
+
+    #[test]
+    fn batched_solver_name_roundtrip() {
+        let s = PathSolver::by_name("cd-batched", 1e-6).unwrap();
+        assert_eq!(s.name(), "cd-batched");
+        assert_eq!(PathSolver::by_name("batched", 1e-6).unwrap().name(), "cd-batched");
     }
 }

@@ -1,0 +1,138 @@
+//! Property tests for the batched multi-λ engine: a batched path must be
+//! numerically equivalent to the sequential warm-started path —
+//!
+//! 1. every grid point is gap-certified at the same ε (the reported gap
+//!    is ≤ tol and the objectives of the two schedules agree within the
+//!    2·ε bound weak duality guarantees);
+//! 2. the recovered supports are identical at every grid point;
+//! 3. this holds on dense AND sparse designs, for B = 1 (the degenerate
+//!    sequential schedule), a mid-size B, and B > grid-size.
+
+use celer::data::synth::{self, SynthDataset};
+use celer::lasso::{dual, primal};
+use celer::solvers::path::{lambda_grid, lasso_path, run_path, PathResult, PathSolver};
+
+fn sequential_reference(ds: &SynthDataset, grid: &[f64], tol: f64) -> PathResult {
+    let solver = PathSolver::by_name("gapsafe-cd-accel", tol).unwrap();
+    run_path(&ds.x, &ds.y, grid, &solver, true)
+}
+
+/// Assert the two ε-certified solutions carry the same support.
+///
+/// Two solutions with gap ≤ ε agree coefficientwise only up to the
+/// certification resolution (‖X·Δβ‖ ≤ 2√(2ε)), so a raw nonzero-bit
+/// comparison is a knife edge: a feature at the optimality boundary can
+/// be exactly 0.0 in one schedule and O(Δ) in the other. Compare at the
+/// solutions' own agreement resolution instead: any coefficient within
+/// 10× the observed max deviation of zero counts as zero on both sides.
+fn assert_same_support(beta_s: &[f64], beta_b: &[f64], what: &str) {
+    let delta = beta_s
+        .iter()
+        .zip(beta_b.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(delta <= 1e-3, "{what}: solutions diverge coefficientwise ({delta})");
+    let thr = (10.0 * delta).max(1e-9);
+    let sup = |beta: &[f64]| -> Vec<usize> {
+        beta.iter()
+            .enumerate()
+            .filter(|(_, &v)| v.abs() > thr)
+            .map(|(j, _)| j)
+            .collect()
+    };
+    assert_eq!(sup(beta_s), sup(beta_b), "{what}: supports differ (thr {thr:.1e})");
+}
+
+fn check_batched_equivalent(ds: &SynthDataset, grid: &[f64], tol: f64, lanes: usize) {
+    let seq = sequential_reference(ds, grid, tol);
+    let bat = lasso_path(&ds.x, &ds.y, grid, tol, lanes, true);
+    assert_eq!(bat.steps.len(), grid.len(), "one step per grid point");
+    assert!(seq.all_converged(), "sequential reference converged");
+    assert!(bat.all_converged(), "batched path converged (B = {lanes})");
+    for (i, (ss, sb)) in seq.steps.iter().zip(&bat.steps).enumerate() {
+        assert!((sb.lambda - grid[i]).abs() <= 1e-15 * grid[i].abs(), "grid order");
+        // 1. gap certification at every grid point
+        assert!(
+            sb.gap <= tol,
+            "B={lanes} λ#{i}: reported gap {} > tol {tol}",
+            sb.gap
+        );
+        let beta_s = ss.beta.as_ref().unwrap();
+        let beta_b = sb.beta.as_ref().unwrap();
+        let ps = primal::primal(&ds.x, &ds.y, beta_s, grid[i]);
+        let pb = primal::primal(&ds.x, &ds.y, beta_b, grid[i]);
+        assert!(
+            (ps - pb).abs() <= 2.0 * tol,
+            "B={lanes} λ#{i}: objectives {ps} vs {pb} differ by more than 2ε"
+        );
+        // 2. identical supports (at the ε-certification resolution)
+        assert_same_support(beta_s, beta_b, &format!("B={lanes} λ#{i}"));
+    }
+}
+
+fn grid_for(ds: &SynthDataset, num: usize, min_ratio: f64) -> Vec<f64> {
+    lambda_grid(dual::lambda_max(&ds.x, &ds.y), min_ratio, num)
+}
+
+#[test]
+fn dense_batched_path_equals_sequential() {
+    let ds = synth::leukemia_mini(101);
+    let grid = grid_for(&ds, 8, 0.08);
+    check_batched_equivalent(&ds, &grid, 1e-10, 4);
+}
+
+#[test]
+fn sparse_batched_path_equals_sequential() {
+    let ds = synth::finance_mini(102);
+    let grid = grid_for(&ds, 6, 0.1);
+    check_batched_equivalent(&ds, &grid, 1e-10, 3);
+}
+
+#[test]
+fn degenerate_single_lane_equals_sequential() {
+    // B = 1: lanes never overlap, so the schedule is exactly the
+    // sequential warm-started chain.
+    let ds = synth::leukemia_mini(103);
+    let grid = grid_for(&ds, 5, 0.1);
+    check_batched_equivalent(&ds, &grid, 1e-10, 1);
+}
+
+#[test]
+fn more_lanes_than_grid_points_is_clamped() {
+    // B > |grid|: every grid cell gets a lane immediately; no warm-start
+    // chaining is possible, yet every point must still gap-certify.
+    let ds = synth::leukemia_mini(104);
+    let grid = grid_for(&ds, 4, 0.15);
+    check_batched_equivalent(&ds, &grid, 1e-10, 16);
+}
+
+#[test]
+fn batched_path_certifies_on_sparse_wide_lanes() {
+    let ds = synth::finance_mini(105);
+    let grid = grid_for(&ds, 5, 0.2);
+    check_batched_equivalent(&ds, &grid, 1e-9, 8);
+}
+
+#[test]
+fn batched_workspace_reuse_across_jobs_is_invariant() {
+    // The coordinator reuses one Workspace (and its nested lane
+    // workspace) across jobs; a dirty workspace must not change results.
+    use celer::solvers::batch::BatchConfig;
+    use celer::solvers::engine::Workspace;
+    use celer::solvers::path::run_path_batched;
+    let ds = synth::leukemia_mini(106);
+    let grid = grid_for(&ds, 6, 0.1);
+    let cfg = BatchConfig { tol: 1e-9, lanes: 3, ..Default::default() };
+    let mut ws = Workspace::new();
+    let first = run_path_batched(&ds.x, &ds.y, &grid, &cfg, true, &mut ws);
+    // dirty with a different grid + lane count, then repeat the original
+    let other = grid_for(&ds, 3, 0.5);
+    let dirty_cfg = BatchConfig { tol: 1e-6, lanes: 2, ..Default::default() };
+    let _ = run_path_batched(&ds.x, &ds.y, &other, &dirty_cfg, false, &mut ws);
+    let again = run_path_batched(&ds.x, &ds.y, &grid, &cfg, true, &mut ws);
+    assert_eq!(first.steps.len(), again.steps.len());
+    for (a, b) in first.steps.iter().zip(&again.steps) {
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.beta, b.beta);
+    }
+}
