@@ -77,6 +77,73 @@ fn bench_batched_path(tag: &str, x: &DesignMatrix, y: &[f64], iters: usize) {
     });
 }
 
+/// The pre-pool baseline: spawn + join fresh OS threads on every call
+/// via `std::thread::scope` with static chunking — exactly what
+/// `util::par` did before the persistent worker pool. Kept here so
+/// `hot/pool_vs_scope_*` quantifies the spawn amortization.
+fn scoped_xt_vec(x: &DesignMatrix, v: &[f64], out: &mut [f64]) {
+    let threads = celer::util::par::num_threads();
+    if threads <= 1 {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = x.col_dot(j, v);
+        }
+        return;
+    }
+    let chunk = out.len().div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        for (c, slice) in out.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                let base = c * chunk;
+                for (k, o) in slice.iter_mut().enumerate() {
+                    *o = x.col_dot(base + k, v);
+                }
+            });
+        }
+    });
+}
+
+/// Persistent pool vs per-call spawn on the gap-check scan (`xt_vec`).
+/// The acceptance bar for the pool is pooled ≤ scoped at every size:
+/// identical arithmetic, no spawn latency, warm caches.
+fn bench_pool_vs_scope(tag: &str, x: &DesignMatrix, v: &[f64], iters: usize) {
+    let p = x.p();
+    let mut out = vec![0.0; p];
+    bench::time(&format!("hot/pool_vs_scope_pooled_{tag}_p{p}"), iters, || {
+        x.xt_vec(v, &mut out);
+    });
+    bench::time(&format!("hot/pool_vs_scope_scoped_{tag}_p{p}"), iters, || {
+        scoped_xt_vec(x, v, &mut out);
+    });
+}
+
+/// Fused one-pass kernels vs their separate-scan equivalents: the dual
+/// rescale pair (Xᵀv, ‖Xᵀv‖_∞) and the KKT violation scan.
+fn bench_fused_scans(tag: &str, x: &DesignMatrix, v: &[f64], iters: usize) {
+    let p = x.p();
+    let mut out = vec![0.0; p];
+    bench::time(&format!("hot/fused_xt_absmax_{tag}_p{p}"), iters, || {
+        let m = x.xt_vec_abs_max(v, &mut out);
+        assert!(m >= 0.0);
+    });
+    bench::time(&format!("hot/separate_xt_absmax_{tag}_p{p}"), iters, || {
+        x.xt_vec(v, &mut out);
+        let m = out.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert!(m >= 0.0);
+    });
+    let beta = vec![0.0; p];
+    let lambda = x.xt_abs_max(v) / 2.0;
+    let mut viol = Vec::new();
+    bench::time(&format!("hot/fused_kkt_scan_{tag}_p{p}"), iters, || {
+        let m = celer::lasso::kkt::violations_with_max(x, v, &beta, lambda, &mut viol);
+        assert!(m >= 0.0);
+    });
+    bench::time(&format!("hot/separate_kkt_scan_{tag}_p{p}"), iters, || {
+        let vv = celer::lasso::kkt::violations(x, v, &beta, lambda);
+        let m = celer::lasso::kkt::max_violation(x, v, &beta, lambda);
+        assert!(m >= 0.0 && vv.len() == p);
+    });
+}
+
 /// Multi-RHS column traffic in isolation: B separate `col_dot`s per
 /// column vs one `col_dot_lanes` sweep that loads the column once.
 fn bench_lane_ops(tag: &str, x: &DesignMatrix, iters: usize) {
@@ -197,6 +264,30 @@ fn main() {
     // (the CELER/Blitz hot path; the view must be at least as fast)
     bench_ws_inner_solve("dense", &dense.x, &dense.y, iters);
     bench_ws_inner_solve("sparse", &sparse.x, &sparse.y, iters);
+
+    // --- persistent pool vs per-call spawn + fused vs separate scans ---
+    // (small and large p, dense and sparse: the spawn amortization and
+    // scan fusion are the pool PR's headline quantities)
+    {
+        let small_dense = synth::leukemia_mini(7); // p = 500
+        let large_dense = synth::leukemia_sim(7); // p = 7129
+        for (tag, ds) in [("dense_small", &small_dense), ("dense_large", &large_dense)] {
+            bench_pool_vs_scope(tag, &ds.x, &ds.y, iters);
+            bench_fused_scans(tag, &ds.x, &ds.y, iters);
+        }
+        let small_sparse = synth::finance_mini(7); // p = 2000
+        bench_pool_vs_scope("sparse_small", &small_sparse.x, &small_sparse.y, iters);
+        bench_fused_scans("sparse_small", &small_sparse.x, &small_sparse.y, iters);
+        // Large-p CSC whose scan clears the sparse work model
+        // (p × mean-nnz ≈ 32768 × 13 ≥ the parallel threshold).
+        let large_sparse = synth::sparse_scan_stress(7);
+        bench_pool_vs_scope("sparse_large", &large_sparse.x, &large_sparse.y, iters);
+        bench_fused_scans("sparse_large", &large_sparse.x, &large_sparse.y, iters);
+        if full {
+            bench_pool_vs_scope("sparse_full", &sparse.x, &sparse.y, iters);
+            bench_fused_scans("sparse_full", &sparse.x, &sparse.y, iters);
+        }
+    }
 
     // --- multi-RHS column traffic: per-lane col_dot vs one lane sweep ---
     bench_lane_ops("dense", &dense.x, iters);

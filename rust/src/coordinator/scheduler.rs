@@ -8,6 +8,18 @@
 //! feeds it into the batched multi-λ lane engine
 //! ([`crate::solvers::batch`]); both reuse the worker's per-thread
 //! state from `init()`.
+//!
+//! **Nested-parallelism policy**: when the grid workers alone saturate
+//! the machine (`workers ≥ CELER_NUM_THREADS`), each worker executes
+//! inside [`crate::util::par::run_serial`], so the solvers' full-p
+//! scans (`xt_vec`, KKT, screening) take the serial path instead of
+//! contending for the shared persistent pool (never oversubscription,
+//! never nested submission). With fewer workers than threads the
+//! machine has idle cores, so workers keep pool access — the pool
+//! serializes concurrent submissions, so scans from different cells
+//! take turns at full width rather than stacking threads. Results are
+//! identical under every policy: reductions use a fixed shard grid
+//! (see `util::par`), so the schedule never changes the bits.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -50,17 +62,28 @@ where
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    // Nested-parallelism policy (see module docs): once the grid
+    // workers alone saturate the machine, their inner scans go serial;
+    // below saturation they keep (serialized) access to the pool.
+    let serial_scans = workers >= crate::util::par::num_threads();
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| {
-                let mut state = init();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                let work = || {
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let out = f(&mut state, &items[i]);
+                        *slots[i].lock().unwrap() = Some(out);
                     }
-                    let out = f(&mut state, &items[i]);
-                    *slots[i].lock().unwrap() = Some(out);
+                };
+                if serial_scans {
+                    crate::util::par::run_serial(work);
+                } else {
+                    work();
                 }
             });
         }
@@ -115,6 +138,26 @@ mod tests {
         for (i, (item, _)) in out.iter().enumerate() {
             assert_eq!(*item, i, "order preserved");
         }
+    }
+
+    #[test]
+    fn workers_serial_scope_follows_saturation_policy() {
+        // Saturating worker counts get serial-scoped inner scans; a
+        // sub-saturating count keeps pool access (scope stays off).
+        let threads = crate::util::par::num_threads();
+        let saturated = run_parallel(vec![(); 2 * threads.max(1)], threads.max(2), |_| {
+            crate::util::par::in_serial_scope()
+        });
+        assert!(saturated.iter().all(|&b| b), "workers ≥ threads ⇒ serial scope");
+        if threads > 2 {
+            let below = run_parallel(vec![(); 4], 2, |_| crate::util::par::in_serial_scope());
+            assert!(below.iter().all(|&b| !b), "workers < threads ⇒ pool access");
+        }
+        // The single-worker path runs on the caller and keeps whatever
+        // scope the caller has (pool access by default).
+        let here = crate::util::par::in_serial_scope();
+        let single = run_parallel(vec![()], 1, |_| crate::util::par::in_serial_scope());
+        assert_eq!(single[0], here);
     }
 
     #[test]

@@ -184,12 +184,18 @@ impl DesignOps for CscMatrix {
         }
     }
 
+    fn col_cost_hint(&self) -> usize {
+        // Mean stored nnz per column: a full-design scan touches each
+        // stored entry once, so p × hint ≈ nnz(X).
+        (self.data.len() / self.p.max(1)).max(1)
+    }
+
     fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(out.len(), self.p);
         // Parallel over columns: each column's (indices, values) run is
         // independent and reads from the shared vector v.
-        crate::util::par::par_fill(out, |j| self.col_dot(j, v));
+        crate::util::par::par_fill_cost(out, self.col_cost_hint(), |j| self.col_dot(j, v));
     }
 
     fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {

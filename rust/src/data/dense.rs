@@ -109,7 +109,10 @@ impl DesignOps for DenseMatrix {
     fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.n);
         assert_eq!(out.len(), self.p);
-        crate::util::par::par_fill(out, |j| crate::util::linalg::dot(self.col(j), v));
+        // Cost hint n: each column dot streams the full column.
+        crate::util::par::par_fill_cost(out, self.n.max(1), |j| {
+            crate::util::linalg::dot(self.col(j), v)
+        });
     }
 
     fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {

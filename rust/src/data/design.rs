@@ -61,15 +61,38 @@ pub trait DesignOps: Sync {
         }
     }
 
+    /// Estimated flops for touching one column in a full-design scan —
+    /// the work model behind the serial/parallel cutoff in
+    /// [`crate::util::par`]. The cutoff gates on `p × hint`, not on p
+    /// alone: a p = 4096, n = 10⁵ dense `Xᵀv` is ~4·10⁸ flops and must
+    /// parallelize even though its item count looks small.
+    fn col_cost_hint(&self) -> usize {
+        self.n().max(1)
+    }
+
     /// `‖Xᵀ v‖_∞` (used by dual rescaling and λ_max).
     fn xt_abs_max(&self, v: &[f64]) -> f64 {
-        crate::util::par::par_max(self.p(), |j| self.col_dot(j, v).abs()).max(0.0)
+        crate::util::par::par_max_cost(self.p(), self.col_cost_hint(), |j| {
+            self.col_dot(j, v).abs()
+        })
+        .max(0.0)
+    }
+
+    /// Fused `out = Xᵀv` + `‖Xᵀv‖_∞`: one sharded pass over the columns
+    /// produces the correlation vector *and* its infinity norm — the
+    /// pair every dual rescale (Eq. 4: `θ = r / max(λ, ‖Xᵀr‖_∞)`)
+    /// needs. Replaces a pooled fill followed by a separate serial max
+    /// scan, halving the full-p passes per gap check.
+    fn xt_vec_abs_max(&self, v: &[f64], out: &mut [f64]) -> f64 {
+        assert_eq!(v.len(), self.n());
+        assert_eq!(out.len(), self.p());
+        crate::util::par::par_fill_abs_max(out, self.col_cost_hint(), |j| self.col_dot(j, v))
     }
 
     /// All column squared norms.
     fn col_norms_sq(&self) -> Vec<f64> {
         let mut out = vec![0.0; self.p()];
-        crate::util::par::par_fill(&mut out, |j| self.col_norm_sq(j));
+        crate::util::par::par_fill_cost(&mut out, self.col_cost_hint(), |j| self.col_norm_sq(j));
         out
     }
 }
@@ -152,8 +175,14 @@ impl DesignOps for DesignMatrix {
     fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
         dispatch!(self, col_axpy_lanes, j, alphas, v, n, lanes)
     }
+    fn col_cost_hint(&self) -> usize {
+        dispatch!(self, col_cost_hint)
+    }
     fn xt_abs_max(&self, v: &[f64]) -> f64 {
         dispatch!(self, xt_abs_max, v)
+    }
+    fn xt_vec_abs_max(&self, v: &[f64], out: &mut [f64]) -> f64 {
+        dispatch!(self, xt_vec_abs_max, v, out)
     }
     fn col_norms_sq(&self) -> Vec<f64> {
         dispatch!(self, col_norms_sq)
@@ -216,6 +245,31 @@ mod tests {
             assert!((ds.col_dot(c, &v) - d.col_dot(cols[c], &v)).abs() < 1e-12);
             assert!((ss.col_dot(c, &v) - s.col_dot(cols[c], &v)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn fused_xt_vec_abs_max_matches_separate() {
+        let (d, s) = random_pair(45, 19, 31, 0.4);
+        let mut rng = Rng::new(9);
+        let v: Vec<f64> = (0..19).map(|_| rng.normal()).collect();
+        for x in [&d, &s] {
+            let mut fused = vec![0.0; 31];
+            let m = x.xt_vec_abs_max(&v, &mut fused);
+            let mut plain = vec![0.0; 31];
+            x.xt_vec(&v, &mut plain);
+            assert_eq!(fused, plain, "fused fill equals xt_vec");
+            let expect = plain.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            assert_eq!(m.to_bits(), expect.to_bits(), "fused max equals scan");
+            assert!((m - x.xt_abs_max(&v)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn cost_hints_reflect_storage() {
+        let (d, s) = random_pair(46, 40, 25, 0.1);
+        assert_eq!(d.col_cost_hint(), 40, "dense hint is n");
+        let expect = (s.nnz() / 25).max(1);
+        assert_eq!(s.col_cost_hint(), expect, "sparse hint is mean nnz");
     }
 
     #[test]

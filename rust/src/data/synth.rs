@@ -270,6 +270,45 @@ pub fn toy_2x2() -> SynthDataset {
     }
 }
 
+/// Dense stress design for the parallel-runtime tests and benches:
+/// n = 64, p = 8192 standard-normal entries, so a full-p scan
+/// (p × n = 2¹⁹ flops) clears the work-based parallel threshold of
+/// `util::par`. `y` is a standard-normal n-vector; no preprocessing.
+pub fn dense_scan_stress(seed: u64) -> SynthDataset {
+    let (n, p) = (64usize, 8192usize);
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    SynthDataset {
+        name: "dense-scan-stress".into(),
+        x: DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data)),
+        y,
+        beta_true: Vec::new(),
+    }
+}
+
+/// Sparse (CSC) stress design for the parallel-runtime tests and
+/// benches: n = 64, p = 32768 at ~20% density, so p × mean-nnz ≈ 4·10⁵
+/// clears the parallel threshold under the *sparse* cost model
+/// (`col_cost_hint` = mean nnz). `y` is a standard-normal n-vector.
+pub fn sparse_scan_stress(seed: u64) -> SynthDataset {
+    let (n, p) = (64usize, 32768usize);
+    let mut rng = Rng::new(seed);
+    let mut dense = vec![0.0; n * p];
+    for v in dense.iter_mut() {
+        if rng.uniform() < 0.2 {
+            *v = rng.normal();
+        }
+    }
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    SynthDataset {
+        name: "sparse-scan-stress".into(),
+        x: DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &dense)),
+        y,
+        beta_true: Vec::new(),
+    }
+}
+
 fn finish(raw: SynthDataset, cfg: &PreprocessConfig) -> SynthDataset {
     let (x, y, rep) = preprocess::preprocess(&raw.x, &raw.y, cfg);
     // remap beta_true through kept columns (+0 for intercept)

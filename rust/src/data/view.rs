@@ -110,10 +110,19 @@ impl<D: DesignOps> DesignOps for DesignView<'_, D> {
         }
     }
 
+    #[inline]
+    fn col_cost_hint(&self) -> usize {
+        // Approximate: a view's columns cost what the parent's average
+        // column costs (exact for dense; mean-field for CSC).
+        self.parent.col_cost_hint()
+    }
+
     fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.parent.n());
         assert_eq!(out.len(), self.cols.len());
-        crate::util::par::par_fill(out, |c| self.parent.col_dot(self.cols[c], v));
+        crate::util::par::par_fill_cost(out, self.parent.col_cost_hint(), |c| {
+            self.parent.col_dot(self.cols[c], v)
+        });
     }
 
     fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {
@@ -137,7 +146,7 @@ impl<D: DesignOps> DesignOps for DesignView<'_, D> {
     }
 
     fn xt_abs_max(&self, v: &[f64]) -> f64 {
-        crate::util::par::par_max(self.cols.len(), |c| {
+        crate::util::par::par_max_cost(self.cols.len(), self.parent.col_cost_hint(), |c| {
             self.parent.col_dot(self.cols[c], v).abs()
         })
         .max(0.0)
@@ -201,6 +210,12 @@ mod tests {
 
         assert_eq!(view.xt_abs_max(&v), mat.xt_abs_max(&v), "xt_abs_max");
         assert_eq!(view.col_norms_sq(), mat.col_norms_sq(), "col_norms_sq");
+
+        let (mut a, mut b) = (vec![0.0; k], vec![0.0; k]);
+        let ma = view.xt_vec_abs_max(&v, &mut a);
+        let mb = mat.xt_vec_abs_max(&v, &mut b);
+        assert_eq!(a, b, "xt_vec_abs_max fill");
+        assert_eq!(ma.to_bits(), mb.to_bits(), "xt_vec_abs_max norm");
 
         let (mut a, mut b) = (Vec::new(), Vec::new());
         view.gather_dense(&(0..k).collect::<Vec<_>>(), &mut a);

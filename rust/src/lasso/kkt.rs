@@ -12,8 +12,28 @@ use crate::data::design::DesignOps;
 /// for `β_j = 0`: `max(0, |x_jᵀr| − λ)`.
 pub fn violations<D: DesignOps>(x: &D, r: &[f64], beta: &[f64], lambda: f64) -> Vec<f64> {
     let mut out = vec![0.0; x.p()];
-    crate::util::par::par_fill(&mut out, |j| violation_one(x, r, beta[j], lambda, j));
+    crate::util::par::par_fill_cost(&mut out, x.col_cost_hint(), |j| {
+        violation_one(x, r, beta[j], lambda, j)
+    });
     out
+}
+
+/// Fused KKT scan: fill `out[j]` with every per-feature violation AND
+/// return their maximum, in one sharded pass over the design (instead
+/// of [`violations`] + [`max_violation`] re-reading all p columns
+/// twice). `out` is resized to p; the returned max is 0 when p = 0.
+pub fn violations_with_max<D: DesignOps>(
+    x: &D,
+    r: &[f64],
+    beta: &[f64],
+    lambda: f64,
+    out: &mut Vec<f64>,
+) -> f64 {
+    out.resize(x.p(), 0.0);
+    // Violations are non-negative, so the fused |·|-max IS the max.
+    crate::util::par::par_fill_abs_max(out, x.col_cost_hint(), |j| {
+        violation_one(x, r, beta[j], lambda, j)
+    })
 }
 
 /// Single-feature violation.
@@ -29,10 +49,14 @@ pub fn violation_one<D: DesignOps>(x: &D, r: &[f64], beta_j: f64, lambda: f64, j
 
 /// Maximum violation over all features (0 at an exact optimum).
 pub fn max_violation<D: DesignOps>(x: &D, r: &[f64], beta: &[f64], lambda: f64) -> f64 {
-    crate::util::par::par_max(x.p(), |j| violation_one(x, r, beta[j], lambda, j)).max(0.0)
+    crate::util::par::par_max_cost(x.p(), x.col_cost_hint(), |j| {
+        violation_one(x, r, beta[j], lambda, j)
+    })
+    .max(0.0)
 }
 
 /// Features whose violation exceeds `tol` (GLMNET-style KKT check).
+/// Runs the fused scan and early-exits when nothing violates.
 pub fn violating_features<D: DesignOps>(
     x: &D,
     r: &[f64],
@@ -40,12 +64,11 @@ pub fn violating_features<D: DesignOps>(
     lambda: f64,
     tol: f64,
 ) -> Vec<usize> {
-    violations(x, r, beta, lambda)
-        .into_iter()
-        .enumerate()
-        .filter(|&(_, v)| v > tol)
-        .map(|(j, _)| j)
-        .collect()
+    let mut v = Vec::new();
+    if violations_with_max(x, r, beta, lambda, &mut v) <= tol {
+        return Vec::new();
+    }
+    v.into_iter().enumerate().filter(|&(_, v)| v > tol).map(|(j, _)| j).collect()
 }
 
 #[cfg(test)]
@@ -77,6 +100,20 @@ mod tests {
         let mut r = vec![0.0; 2];
         residual(&x, &y, &beta, &mut r);
         assert!(max_violation(&x, &r, &beta, lambda) < 1e-12);
+    }
+
+    #[test]
+    fn fused_scan_matches_separate() {
+        let x = DenseMatrix::from_row_major(2, 3, &[1.0, 0.0, 2.0, 0.0, 1.0, 0.5]);
+        let y = [3.0, 0.2];
+        let beta = [0.4, 0.0, -0.1];
+        let mut r = vec![0.0; 2];
+        residual(&x, &y, &beta, &mut r);
+        let lambda = 0.7;
+        let mut fused = Vec::new();
+        let m = violations_with_max(&x, &r, &beta, lambda, &mut fused);
+        assert_eq!(fused, violations(&x, &r, &beta, lambda));
+        assert_eq!(m.to_bits(), max_violation(&x, &r, &beta, lambda).to_bits());
     }
 
     #[test]

@@ -30,8 +30,9 @@ pub fn mt_dual(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
 fn xt_theta_row_norms<D: DesignOpsMt>(x: &D, theta: &[f64], q: usize, out: &mut [f64]) {
     let p = x.p();
     debug_assert_eq!(out.len(), p);
-    // per-column: x_jᵀΘ (q-vector) then its norm
-    crate::util::par::par_fill(out, |j| {
+    // per-column: x_jᵀΘ (q-vector) then its norm — q strided dots per
+    // column, so the work hint is q × the design's per-column cost.
+    crate::util::par::par_fill_cost(out, x.col_cost_hint().saturating_mul(q.max(1)), |j| {
         let mut acc = 0.0;
         for t in 0..q {
             let v = x.col_dot_strided(j, theta, q, t);

@@ -30,6 +30,17 @@ pub fn d_score(xj_theta_abs: f64, col_norm: f64) -> f64 {
     }
 }
 
+/// Fill the Gap-Safe pricing scores `d_j(θ)` (Eq. 10) for all features
+/// in one (pooled when large) pass. Shared by the CELER and Blitz
+/// working-set builders; `xtheta[j] = x_jᵀθ` and `col_norms[j] = ‖x_j‖`
+/// are the caller's cached vectors, so this pass touches no design
+/// storage — unit per-item cost.
+pub fn fill_d_scores(xtheta: &[f64], col_norms: &[f64], out: &mut [f64]) {
+    assert_eq!(xtheta.len(), col_norms.len());
+    assert_eq!(out.len(), xtheta.len());
+    crate::util::par::par_fill_cost(out, 1, |j| d_score(xtheta[j].abs(), col_norms[j]));
+}
+
 /// Dynamic screening state over a problem with p features.
 #[derive(Debug, Clone, Default)]
 pub struct ScreeningState {
@@ -130,6 +141,18 @@ mod tests {
     fn d_score_empty_column_is_infinite() {
         assert_eq!(d_score(0.5, 0.0), f64::INFINITY);
         assert!((d_score(0.25, 0.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fill_d_scores_matches_pointwise() {
+        let xtheta = [0.25, -0.5, 0.0, 0.99];
+        let norms = [0.5, 1.0, 0.0, 2.0];
+        let mut out = vec![0.0; 4];
+        fill_d_scores(&xtheta, &norms, &mut out);
+        for j in 0..4 {
+            let expect = d_score(xtheta[j].abs(), norms[j]);
+            assert_eq!(out[j].to_bits(), expect.to_bits(), "j={j}");
+        }
     }
 
     #[test]

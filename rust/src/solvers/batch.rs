@@ -20,6 +20,12 @@
 //! with the column loaded once, and one [`DesignOps::col_axpy_lanes`]
 //! applies all lane updates on the way out.
 //!
+//! B defaults to [`auto_lanes`] (lanes × n residual footprint vs. a
+//! cache budget; `BatchConfig::lanes = 0`), and heavy sweeps are
+//! lane-sharded across the persistent worker pool (see
+//! [`BatchCdStrategy`]) — lanes are independent within an epoch, so the
+//! parallel schedule is bit-identical to the serial one.
+//!
 //! # Lane lifecycle
 //!
 //! ```text
@@ -73,13 +79,30 @@ pub struct BatchConfig {
     /// Per-lane dynamic Gap Safe screening.
     pub screen: bool,
     /// Number of concurrent λ lanes B (clamped to the grid size; 1
-    /// degenerates to the sequential engine's schedule).
+    /// degenerates to the sequential engine's schedule). **0 = auto**:
+    /// pick B from the problem shape via [`auto_lanes`]. An explicit
+    /// non-zero value always wins.
     pub lanes: usize,
 }
 
-/// Default lane count: wide enough to amortize column traffic, small
-/// enough that B residual lanes stay cache-resident on typical n.
-pub const DEFAULT_LANES: usize = 8;
+/// Residual-footprint budget for [`auto_lanes`]: B lanes keep B·n f64
+/// residuals hot across every column sweep, and ~2 MiB keeps them
+/// L2/L3-resident on typical parts.
+const LANE_CACHE_BUDGET_BYTES: usize = 2 << 20;
+
+/// Pick a lane count from n: as many lanes as fit the residual cache
+/// budget, clamped to [2, 32]. Small n (residuals cheap to keep hot)
+/// gets wide batches; large n collapses toward a few lanes so the
+/// interleaved sweep stays cache-resident.
+///
+/// Deliberately a function of the problem shape only — **not** of
+/// `CELER_NUM_THREADS` or the worker-pool size — because the lane count
+/// shapes the warm-start chain and therefore the solutions' exact bits:
+/// keying it on machine properties would break the thread-count
+/// invariance the parallel runtime guarantees (see `util::par`).
+pub fn auto_lanes(n: usize) -> usize {
+    (LANE_CACHE_BUDGET_BYTES / (8 * n.max(1))).clamp(2, 32)
+}
 
 impl Default for BatchConfig {
     fn default() -> Self {
@@ -91,7 +114,7 @@ impl Default for BatchConfig {
             extrapolate: true,
             best_dual: true,
             screen: true,
-            lanes: DEFAULT_LANES,
+            lanes: 0,
         }
     }
 }
@@ -148,14 +171,33 @@ pub struct BatchWorkspace {
     meta: Vec<LaneMeta>,
     /// Live slot ids.
     live: Vec<usize>,
-    /// Sweep scratch: lanes active at the current column.
-    act: Vec<usize>,
-    /// Sweep scratch: per-active-lane correlations `x_jᵀr_k`.
-    g: Vec<f64>,
-    /// Sweep scratch: per-active-lane coefficient deltas.
-    delta: Vec<f64>,
+    /// Per-column scratch for the serial interleaved sweep.
+    sweep: SweepScratch,
+    /// Sorted copy of `live` for the lane-sharded parallel sweep
+    /// (rebuilt, not reallocated, each pooled epoch).
+    sorted_live: Vec<usize>,
+    /// Per-group scratch for the lane-sharded parallel sweep (one slot
+    /// per pool group, warm across epochs).
+    group_scratch: Vec<SweepScratch>,
     /// Warm-start seed: the deepest (smallest-λ) retired solution.
     seed_beta: Vec<f64>,
+}
+
+/// Reusable per-column scratch of one interleaved CD sweep. The serial
+/// sweep uses the [`BatchWorkspace`]'s instance (allocation-free once
+/// warm); the lane-sharded parallel sweep gives each slot-range group
+/// its own short-lived instance (≤ B entries per vector).
+#[derive(Debug, Default)]
+pub struct SweepScratch {
+    /// Global slot ids active at the current column.
+    pub act: Vec<usize>,
+    /// The same lanes, rebased to the local `beta`/`r` slices (equal to
+    /// `act` in the serial sweep, `act[t] − slot_base` in a group).
+    pub act_local: Vec<usize>,
+    /// Per-active-lane correlations `x_jᵀr_k`.
+    pub g: Vec<f64>,
+    /// Per-active-lane coefficient deltas.
+    pub delta: Vec<f64>,
 }
 
 impl BatchWorkspace {
@@ -182,12 +224,13 @@ pub struct LaneSweep<'a> {
     pub beta: &'a mut [f64],
     /// Lane-strided residuals (lanes × n).
     pub r: &'a mut [f64],
-    /// Reusable per-column scratch: active slots at the column.
-    pub act: &'a mut Vec<usize>,
-    /// Reusable per-column scratch: correlations for `act`.
-    pub g: &'a mut Vec<f64>,
-    /// Reusable per-column scratch: deltas for `act`.
-    pub delta: &'a mut Vec<f64>,
+    /// Reusable per-column scratch for the serial interleaved sweep.
+    pub scratch: &'a mut SweepScratch,
+    /// Reusable sorted-live buffer for the lane-sharded parallel sweep.
+    pub sorted_live: &'a mut Vec<usize>,
+    /// Reusable per-group scratches for the lane-sharded parallel sweep
+    /// (grown to the group count on first pooled epoch, warm after).
+    pub group_scratch: &'a mut Vec<SweepScratch>,
 }
 
 /// A batched solver strategy: one interleaved primal epoch over all live
@@ -204,47 +247,150 @@ pub trait BatchStrategy<D: DesignOps> {
 /// one [`DesignOps::col_dot_lanes`], the per-lane soft-threshold updates
 /// are applied, and one [`DesignOps::col_axpy_lanes`] propagates all
 /// residual updates.
+///
+/// When the epoch is heavy enough (live lanes × design cost clears the
+/// work threshold of `util::par`), the sweep is **lane-sharded** over
+/// the persistent worker pool: the slot-id space is partitioned into
+/// contiguous ranges and each pool shard runs the full column sweep for
+/// the live lanes of its range. Lanes never read each other's state
+/// inside an epoch, so any grouping yields bit-identical per-lane
+/// trajectories — parallelism changes the schedule, never the result.
 pub struct BatchCdStrategy;
+
+/// Immutable context of one interleaved CD sweep over a slot range.
+#[derive(Clone, Copy)]
+struct SweepCtx<'a> {
+    n: usize,
+    p: usize,
+    /// First slot id covered by the `beta`/`r` slices handed alongside
+    /// (0 for the serial whole-buffer sweep).
+    slot_base: usize,
+    /// Per-slot λ, indexed by **global** slot id.
+    lambdas: &'a [f64],
+    /// Per-slot screening state, indexed by global slot id.
+    screening: &'a [ScreeningState],
+    norms_sq: &'a [f64],
+}
+
+/// One interleaved CD epoch for `slots` (global slot ids, all within
+/// the range backing `beta`/`r`). Each lane's update sequence is
+/// exactly Algorithm 1 on its own (β, r); lanes interact only through
+/// the shared column loads, which is what makes the group-parallel
+/// sweep bit-identical to the serial interleaved one.
+fn cd_sweep_slots<D: DesignOps>(
+    x: &D,
+    ctx: &SweepCtx<'_>,
+    slots: &[usize],
+    beta: &mut [f64],
+    r: &mut [f64],
+    scratch: &mut SweepScratch,
+) {
+    let (n, p) = (ctx.n, ctx.p);
+    let SweepScratch { act, act_local, g, delta } = scratch;
+    for j in 0..p {
+        let nrm = ctx.norms_sq[j];
+        if nrm == 0.0 {
+            continue;
+        }
+        act.clear();
+        act_local.clear();
+        for &slot in slots {
+            if !ctx.screening[slot].is_screened(j) {
+                act.push(slot);
+                act_local.push(slot - ctx.slot_base);
+            }
+        }
+        if act.is_empty() {
+            continue;
+        }
+        g.clear();
+        g.resize(act.len(), 0.0);
+        x.col_dot_lanes(j, r, n, act_local, g);
+        delta.clear();
+        let mut any_update = false;
+        for (t, &sl) in act_local.iter().enumerate() {
+            let bj = &mut beta[sl * p + j];
+            let old = *bj;
+            let new = soft_threshold(old + g[t] / nrm, ctx.lambdas[act[t]] / nrm);
+            *bj = new;
+            let d = old - new;
+            any_update |= d != 0.0;
+            delta.push(d);
+        }
+        if any_update {
+            x.col_axpy_lanes(j, delta, r, n, act_local);
+        }
+    }
+}
 
 impl<D: DesignOps> BatchStrategy<D> for BatchCdStrategy {
     fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>) {
         let (n, p) = (s.n, s.p);
-        let live: &[usize] = s.live;
-        let lambdas: &[f64] = s.lambdas;
-        let norms_sq: &[f64] = s.norms_sq;
-        let screening: &[ScreeningState] = s.screening;
-        for j in 0..p {
-            let nrm = norms_sq[j];
-            if nrm == 0.0 {
-                continue;
-            }
-            s.act.clear();
-            for &slot in live {
-                if !screening[slot].is_screened(j) {
-                    s.act.push(slot);
-                }
-            }
-            if s.act.is_empty() {
-                continue;
-            }
-            s.g.clear();
-            s.g.resize(s.act.len(), 0.0);
-            x.col_dot_lanes(j, s.r, n, s.act, s.g);
-            s.delta.clear();
-            let mut any_update = false;
-            for (t, &slot) in s.act.iter().enumerate() {
-                let bj = &mut s.beta[slot * p + j];
-                let old = *bj;
-                let new = soft_threshold(old + s.g[t] / nrm, lambdas[slot] / nrm);
-                *bj = new;
-                let d = old - new;
-                any_update |= d != 0.0;
-                s.delta.push(d);
-            }
-            if any_update {
-                x.col_axpy_lanes(j, s.delta, s.r, n, s.act);
-            }
+        let slots_total = if p > 0 { s.beta.len() / p } else { 0 };
+        // One epoch streams the whole design once per live lane.
+        let work = s.live.len().saturating_mul(p).saturating_mul(x.col_cost_hint());
+        let groups = if crate::util::par::parallel_shards(work) {
+            crate::util::par::num_threads().min(s.live.len())
+        } else {
+            1
+        };
+        let ctx = SweepCtx {
+            n,
+            p,
+            slot_base: 0,
+            lambdas: s.lambdas,
+            screening: s.screening,
+            norms_sq: s.norms_sq,
+        };
+        if groups <= 1 || slots_total == 0 {
+            cd_sweep_slots(x, &ctx, s.live, s.beta, s.r, s.scratch);
+            return;
         }
+        // Lane-sharded parallel sweep: partition the *live lanes* (not
+        // the raw slot-id space — live slots can cluster, e.g. at the
+        // tail of a grid) into equal-count contiguous chunks of the
+        // sorted slot-id order. Sorted contiguous chunks span disjoint
+        // slot-id intervals, which makes each group's lane-strided
+        // buffer region disjoint from every other group's. Lane order
+        // within a sweep does not affect any lane's arithmetic, so the
+        // sort changes nothing but the schedule. All buffers (the
+        // sorted-live copy and the per-group scratches) live in the
+        // workspace — warm epochs allocate nothing.
+        let sorted: &mut Vec<usize> = s.sorted_live;
+        sorted.clear();
+        sorted.extend_from_slice(s.live);
+        sorted.sort_unstable();
+        let per = sorted.len().div_ceil(groups);
+        let n_groups = sorted.len().div_ceil(per);
+        if s.group_scratch.len() < n_groups {
+            s.group_scratch.resize_with(n_groups, SweepScratch::default);
+        }
+        let beta_ptr = crate::util::pool::SyncPtr(s.beta.as_mut_ptr());
+        let r_ptr = crate::util::pool::SyncPtr(s.r.as_mut_ptr());
+        let scr_ptr = crate::util::pool::SyncPtr(s.group_scratch.as_mut_ptr());
+        let sorted: &[usize] = sorted;
+        crate::util::pool::global().run(n_groups, &|gi| {
+            let a = gi * per;
+            let b = (a + per).min(sorted.len());
+            if a >= b {
+                return;
+            }
+            let slots = &sorted[a..b];
+            let lo = slots[0];
+            let hi = slots[b - a - 1] + 1;
+            // SAFETY: groups cover disjoint slot-id intervals (sorted
+            // contiguous chunks), so these are non-overlapping
+            // sub-slices of the lane-strided buffers (a manual
+            // split_at_mut across pool shards); each group also owns
+            // scratch slot `gi` exclusively.
+            let beta_g =
+                unsafe { std::slice::from_raw_parts_mut(beta_ptr.0.add(lo * p), (hi - lo) * p) };
+            let r_g =
+                unsafe { std::slice::from_raw_parts_mut(r_ptr.0.add(lo * n), (hi - lo) * n) };
+            let scratch = unsafe { &mut *scr_ptr.0.add(gi) };
+            let group_ctx = SweepCtx { slot_base: lo, ..ctx };
+            cd_sweep_slots(x, &group_ctx, slots, beta_g, r_g, scratch);
+        });
     }
 }
 
@@ -298,7 +444,9 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
     if grid.is_empty() {
         return Vec::new();
     }
-    let b = cfg.lanes.max(1).min(grid.len());
+    // lanes = 0 → autotuned from the problem shape (see `auto_lanes`).
+    let lanes = if cfg.lanes == 0 { auto_lanes(n) } else { cfg.lanes };
+    let b = lanes.max(1).min(grid.len());
     let start = Instant::now();
 
     // ---- shared design caches ----
@@ -341,7 +489,16 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
         // ---- one interleaved epoch over every live lane ----
         {
             let BatchWorkspace {
-                norms_sq, beta, r, lane_lambda, screening, live, act, g, delta, ..
+                norms_sq,
+                beta,
+                r,
+                lane_lambda,
+                screening,
+                live,
+                sweep,
+                sorted_live,
+                group_scratch,
+                ..
             } = ws;
             let mut ctx = LaneSweep {
                 n,
@@ -352,9 +509,9 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
                 norms_sq: norms_sq.as_slice(),
                 beta: beta.as_mut_slice(),
                 r: r.as_mut_slice(),
-                act,
-                g,
-                delta,
+                scratch: sweep,
+                sorted_live,
+                group_scratch,
             };
             strategy.sweep(x, &mut ctx);
         }
@@ -524,6 +681,72 @@ mod tests {
         for (la, lb) in a.iter().zip(&b) {
             assert_eq!(la.epochs, lb.epochs);
             assert_eq!(la.beta, lb.beta);
+        }
+    }
+
+    #[test]
+    fn auto_lanes_tracks_problem_shape() {
+        // tiny residuals → wide batches; huge residuals → few lanes
+        assert_eq!(auto_lanes(1), 32);
+        assert_eq!(auto_lanes(100), 32);
+        assert_eq!(auto_lanes(1_000_000), 2);
+        assert!(auto_lanes(10_000) >= auto_lanes(100_000));
+        for n in [1usize, 50, 5_000, 500_000, 50_000_000] {
+            let b = auto_lanes(n);
+            assert!((2..=32).contains(&b), "n={n} → B={b}");
+        }
+    }
+
+    #[test]
+    fn lanes_zero_resolves_to_auto_and_converges() {
+        let ds = crate::data::synth::leukemia_mini(65);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.1, 6);
+        let tol = 1e-9;
+        let auto_cfg = BatchConfig { tol, ..Default::default() };
+        assert_eq!(auto_cfg.lanes, 0, "default is auto");
+        let mut ws = BatchWorkspace::new();
+        let auto = solve_grid(&ds.x, &ds.y, &grid, None, &auto_cfg, &mut ws, &mut BatchCdStrategy);
+        assert!(auto.iter().all(|l| l.converged));
+        // explicit override at the resolved value is bit-identical
+        let n = crate::data::design::DesignOps::n(&ds.x);
+        let explicit_cfg = BatchConfig { tol, lanes: auto_lanes(n), ..Default::default() };
+        let mut ws2 = BatchWorkspace::new();
+        let explicit =
+            solve_grid(&ds.x, &ds.y, &grid, None, &explicit_cfg, &mut ws2, &mut BatchCdStrategy);
+        assert_eq!(auto.len(), explicit.len());
+        for (a, e) in auto.iter().zip(&explicit) {
+            assert_eq!(a.beta, e.beta);
+            assert_eq!(a.epochs, e.epochs);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_scope_bitwise() {
+        // The lane-sharded pooled sweep must be bit-identical to the
+        // serial interleaved sweep (lanes are independent within an
+        // epoch); `run_serial` forces the serial path for the reference.
+        // `dense_scan_stress` (64 × 8192) crosses the work threshold
+        // (live × p × n = 4·8192·64 ≈ 2·10⁶ ≥ 2¹⁸), so the pooled path
+        // actually runs whenever threads > 1.
+        let big = crate::data::synth::dense_scan_stress(77);
+        let minis = [crate::data::synth::leukemia_mini(66), crate::data::synth::finance_mini(66)];
+        for ds in minis.iter().chain(std::iter::once(&big)) {
+            let lmax = dual::lambda_max(&ds.x, &ds.y);
+            let grid = lambda_grid(lmax, 0.3, 6);
+            let c = cfg(1e-6, 4);
+            let mut ws = BatchWorkspace::new();
+            let pooled = solve_grid(&ds.x, &ds.y, &grid, None, &c, &mut ws, &mut BatchCdStrategy);
+            let mut ws2 = BatchWorkspace::new();
+            let serial = crate::util::par::run_serial(|| {
+                solve_grid(&ds.x, &ds.y, &grid, None, &c, &mut ws2, &mut BatchCdStrategy)
+            });
+            assert_eq!(pooled.len(), serial.len());
+            for (a, b) in pooled.iter().zip(&serial) {
+                assert_eq!(a.beta, b.beta, "λ#{} ({})", a.grid_idx, ds.name);
+                assert_eq!(a.epochs, b.epochs);
+                assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+            }
         }
     }
 

@@ -26,7 +26,6 @@
 use crate::data::design::{DesignMatrix, DesignOps};
 use crate::data::view::DesignView;
 use crate::lasso::{dual, primal};
-use crate::screening::d_score;
 use crate::solvers::celer::CelerIteration;
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
@@ -161,14 +160,15 @@ fn blitz_generic<D: DesignOps>(
     // initial φ uses the full design (no WS yet)
     for t in 1..=cfg.max_outer {
         // ---- barycenter dual update ----
-        // φ = r / max(λ, ‖X_{W}ᵀ r‖_∞); at t = 1, W = full problem.
-        x.xt_vec(&ws.r, &mut ws.xtheta_inner);
+        // φ = r / max(λ, ‖X_{W}ᵀ r‖_∞); at t = 1, W = full problem and
+        // the fused kernel yields Xᵀr + its norm in one sharded pass.
+        // Later iterations max over the working set only, so the plain
+        // fill plus a |W_t|-sized scan is the cheaper shape.
         let mut denom = lambda;
         if t == 1 || ws_idx.is_empty() {
-            for &v in ws.xtheta_inner.iter() {
-                denom = denom.max(v.abs());
-            }
+            denom = denom.max(x.xt_vec_abs_max(&ws.r, &mut ws.xtheta_inner));
         } else {
+            x.xt_vec(&ws.r, &mut ws.xtheta_inner);
             for &j in &ws_idx {
                 denom = denom.max(ws.xtheta_inner[j].abs());
             }
@@ -212,9 +212,7 @@ fn blitz_generic<D: DesignOps>(
         // ---- working set: smallest d_j(θ), capacity doubling ----
         // (empty columns get an infinite d_score; build_working_set
         // excludes non-finite scores centrally)
-        for j in 0..p {
-            ws.d_scores[j] = d_score(ws.xtheta[j].abs(), ws.col_norms[j]);
-        }
+        crate::screening::fill_d_scores(&ws.xtheta, &ws.col_norms, &mut ws.d_scores);
         let pt =
             if t == 1 { cfg.p1 } else { (2 * ws_idx.len()).max(cfg.p1) }.min(p).max(support.len());
         ws_idx = build_working_set(&mut ws.d_scores, &support, pt);

@@ -20,7 +20,6 @@
 use crate::data::design::{DesignMatrix, DesignOps};
 use crate::data::view::DesignView;
 use crate::lasso::{dual, primal, LassoProblem};
-use crate::screening::d_score;
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
 use crate::ws::{build_working_set, WsPolicy};
@@ -189,11 +188,8 @@ fn celer_generic<D: DesignOps>(
     let mut prev_gap = f64::INFINITY;
     for t in 1..=cfg.max_outer {
         // ---- θ^t = argmax D over {θ^{t-1}, θ_inner^{t-1}, θ_res^t} ----
-        x.xt_vec(&ws.r, &mut ws.scratch.xtr);
-        let mut denom = lambda;
-        for &v in ws.scratch.xtr.iter() {
-            denom = denom.max(v.abs());
-        }
+        // Fused Eq. 4 rescale: Xᵀr and ‖Xᵀr‖_∞ in one sharded pass.
+        let denom = lambda.max(x.xt_vec_abs_max(&ws.r, &mut ws.scratch.xtr));
         {
             let r = &ws.r;
             ws.theta_res.clear();
@@ -257,9 +253,7 @@ fn celer_generic<D: DesignOps>(
         // ---- working set ----
         // (empty columns get d_j = +∞ and are excluded centrally by
         // build_working_set — no sentinel values needed here)
-        for j in 0..p {
-            ws.d_scores[j] = d_score(ws.xtheta[j].abs(), ws.col_norms[j]);
-        }
+        crate::screening::fill_d_scores(&ws.xtheta, &ws.col_norms, &mut ws.d_scores);
         // Stagnation safeguard: when an outer iteration barely improved
         // the gap, the working set was too small (or mis-prioritized) —
         // fall back to monotone doubling for this round, which restores
@@ -335,9 +329,9 @@ fn celer_generic<D: DesignOps>(
         // full design. (Algorithm 4 writes max(λ, ‖Xᵀθ‖_∞) which only
         // applies to residual-scale vectors; θ is already unit-scale so
         // the correct rescaling is max(1, ‖Xᵀθ‖_∞).) The Xᵀθ_inner sweep
-        // is kept — it doubles as next iteration's pricing vector.
-        x.xt_vec(&inner_ws.dual.theta, &mut ws.xtheta_inner);
-        let s = ws.xtheta_inner.iter().fold(1.0f64, |m, &v| m.max(v.abs()));
+        // is kept — it doubles as next iteration's pricing vector — and
+        // the fused kernel returns its norm without a second p-scan.
+        let s = x.xt_vec_abs_max(&inner_ws.dual.theta, &mut ws.xtheta_inner).max(1.0);
         let inv_s = 1.0 / s;
         ws.theta_inner.clear();
         ws.theta_inner.extend(inner_ws.dual.theta.iter().map(|&v| v * inv_s));

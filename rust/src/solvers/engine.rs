@@ -226,7 +226,7 @@ pub(crate) fn fill_norm_caches<D: DesignOps>(
 ) {
     let p = x.p();
     norms_sq.resize(p, 0.0);
-    crate::util::par::par_fill(norms_sq, |j| x.col_norm_sq(j));
+    crate::util::par::par_fill_cost(norms_sq, x.col_cost_hint(), |j| x.col_norm_sq(j));
     col_norms.resize(p, 0.0);
     for j in 0..p {
         col_norms[j] = norms_sq[j].sqrt();

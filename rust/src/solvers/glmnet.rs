@@ -130,9 +130,12 @@ fn glmnet_generic<D: DesignOps>(
         epochs += outcome.epochs;
 
         // ---- KKT on the strong set ----
-        x.xt_vec(&ws.r, &mut ws.scratch.xtr);
+        // Fused scan: Xᵀr plus its infinity norm in one sharded pass.
+        // When even the max correlation clears nobody's threshold, both
+        // candidate scans below are skipped entirely.
+        let amax = x.xt_vec_abs_max(&ws.r, &mut ws.scratch.xtr);
         let mut added = false;
-        {
+        if amax > lambda + cfg.kkt_tol {
             let xtr = &ws.scratch.xtr;
             for j in 0..p {
                 if in_strong[j] && !in_active[j] && xtr[j].abs() > lambda + cfg.kkt_tol {

@@ -172,12 +172,9 @@ impl DualState {
         let p = x.p();
         scratch.xtr.resize(p, 0.0);
 
-        // θ_res = r / max(λ, ‖Xᵀr‖_∞)
-        x.xt_vec(r, &mut scratch.xtr);
-        let mut denom = lambda;
-        for &v in scratch.xtr.iter() {
-            denom = denom.max(v.abs());
-        }
+        // θ_res = r / max(λ, ‖Xᵀr‖_∞); the fused kernel yields Xᵀr and
+        // its norm in one sharded pass (no second serial p-scan).
+        let denom = lambda.max(x.xt_vec_abs_max(r, &mut scratch.xtr));
         let inv = 1.0 / denom;
         let d_res = {
             // D(θ_res) without materializing θ_res: θ = r·inv
@@ -200,11 +197,7 @@ impl DualState {
             let r_acc = &scratch.extrap.r_accel;
             scratch.xtr_acc.resize(p, 0.0);
             scratch.theta_acc.resize(n, 0.0);
-            x.xt_vec(r_acc, &mut scratch.xtr_acc);
-            let mut denom_a = lambda;
-            for &v in scratch.xtr_acc.iter() {
-                denom_a = denom_a.max(v.abs());
-            }
+            let denom_a = lambda.max(x.xt_vec_abs_max(r_acc, &mut scratch.xtr_acc));
             let inv_a = 1.0 / denom_a;
             for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
                 *t = v * inv_a;

@@ -147,8 +147,8 @@ pub fn run_path(
 
 /// The paper's headline computation (Table 1 / Fig. 4): solve a full λ
 /// grid. Runs on the batched multi-λ engine — `lanes` concurrent grid
-/// cells per design sweep (`0` picks
-/// [`DEFAULT_LANES`](crate::solvers::batch::DEFAULT_LANES)); pass a
+/// cells per design sweep (`0` autotunes B from the problem shape via
+/// [`auto_lanes`](crate::solvers::batch::auto_lanes)); pass a
 /// sequential [`PathSolver`] to [`run_path`] instead for the one-λ-at-a-
 /// time schedule.
 pub fn lasso_path(
@@ -159,11 +159,7 @@ pub fn lasso_path(
     lanes: usize,
     store_betas: bool,
 ) -> PathResult {
-    let cfg = BatchConfig {
-        tol,
-        lanes: if lanes == 0 { batch::DEFAULT_LANES } else { lanes },
-        ..Default::default()
-    };
+    let cfg = BatchConfig { tol, lanes, ..Default::default() };
     run_path(x, y, grid, &PathSolver::BatchedCd(cfg), store_betas)
 }
 

@@ -3,6 +3,7 @@
 pub mod json;
 pub mod linalg;
 pub mod par;
+pub mod pool;
 pub mod rng;
 pub mod select;
 

@@ -1,21 +1,48 @@
-//! Minimal data-parallel primitives on std threads.
+//! Data-parallel primitives on the persistent worker pool, with
+//! deterministic reductions and a work-based serial/parallel cutoff.
 //!
-//! The build is fully offline (no rayon), so we implement the two shapes of
+//! The build is fully offline (no rayon), so the two shapes of
 //! parallelism the solver needs — index-parallel fill and index-parallel
-//! max-reduce — on `std::thread::scope` with static chunking. Work items
-//! are feature columns, which are numerous (p up to ~10⁶) and uniform
-//! enough that static chunking is within noise of work stealing here.
+//! reduce — are implemented here over [`crate::util::pool`]: long-lived
+//! workers parked on a condvar, shards claimed off one atomic counter.
+//! No `std::thread` spawn happens on any per-gap-check or per-epoch
+//! path.
+//!
+//! **Deterministic reductions.** Work is always decomposed over a fixed
+//! grid of [`SHARDS`] index shards, *independently of the thread count*,
+//! and partial results are folded in shard order. The serial path runs
+//! the exact same shard decomposition. Consequently `par_sum` /
+//! `par_max` / [`par_fill_abs_max`] return bit-identical results for
+//! any `CELER_NUM_THREADS` on any machine — gaps and dual points are
+//! reproducible (pinned by `tests/prop_pool.rs` and the CI thread
+//! matrix).
+//!
+//! **Work-based cutoff.** The old implementation gated on item *count*
+//! alone, so a p = 4096, n = 10⁵ dense `xt_vec` (~4·10⁸ flops) ran
+//! serially while a p = 10⁴ trivial fill parallelized. The gate is now
+//! `items × per-item cost ≥` [`PAR_WORK_THRESHOLD`]; design backends
+//! supply the cost via
+//! [`DesignOps::col_cost_hint`](crate::data::design::DesignOps::col_cost_hint)
+//! (≈ n for dense columns, mean nnz for CSC).
 //!
 //! Thread count: `CELER_NUM_THREADS` env var, else
 //! `std::thread::available_parallelism()`.
 
+use crate::util::pool::{self, SyncPtr};
+use std::cell::Cell;
 use std::sync::OnceLock;
 
-/// Below this many items the serial path is used (thread spawn ≈ 10µs
-/// dwarfs the per-column work on small problems).
-const PAR_THRESHOLD: usize = 8192;
+/// Fixed shard-grid size. Reduction results depend on this constant
+/// (fold order) but never on the thread count.
+pub const SHARDS: usize = 64;
 
-/// Number of worker threads to use.
+/// Minimum estimated work (items × per-item cost, roughly flops) before
+/// a scan is handed to the pool; below it the sharded serial path runs.
+/// A pool dispatch costs ~1–2µs of wakeup latency, so ~2.6·10⁵ flops
+/// (tens of µs) amortizes it comfortably.
+pub const PAR_WORK_THRESHOLD: usize = 1 << 18;
+
+/// Number of executor threads (pool workers + the submitting thread).
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -28,95 +55,198 @@ pub fn num_threads() -> usize {
     })
 }
 
-/// `out[i] = f(i)` for all i, in parallel when `out` is large.
-pub fn par_fill<F>(out: &mut [f64], f: F)
+thread_local! {
+    static SERIAL_SCOPE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread must not submit pool jobs (it *is* a
+/// pool worker, or a coordinator grid worker — the nested-parallelism
+/// policy).
+pub fn in_serial_scope() -> bool {
+    SERIAL_SCOPE.with(|c| c.get())
+}
+
+/// Run `f` with pool parallelism disabled on this thread: every `par_*`
+/// call inside takes the serial path. Results are unchanged (the shard
+/// decomposition is fixed); only the execution schedule differs. Used
+/// by pool workers and coordinator grid workers to prevent nested pool
+/// submission, and by tests to pin serial ≡ pooled bit-equality.
+pub fn run_serial<R>(f: impl FnOnce() -> R) -> R {
+    struct Reset(bool);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            SERIAL_SCOPE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Reset(SERIAL_SCOPE.with(|c| c.replace(true)));
+    f()
+}
+
+/// Should a scan of the given estimated work go to the pool?
+pub(crate) fn parallel_shards(work: usize) -> bool {
+    work >= PAR_WORK_THRESHOLD && num_threads() > 1 && !in_serial_scope()
+}
+
+/// Index range of shard `s` over `0..n` (fixed grid: depends on n only).
+#[inline]
+fn shard_bounds(n: usize, s: usize) -> (usize, usize) {
+    let chunk = n.div_ceil(SHARDS).max(1);
+    ((s * chunk).min(n), ((s + 1) * chunk).min(n))
+}
+
+/// `out[i] = f(i)` for all i; pooled when the estimated work
+/// (`out.len() × per_item_cost`) is large.
+pub fn par_fill_cost<F>(out: &mut [f64], per_item_cost: usize, f: F)
 where
     F: Fn(usize) -> f64 + Sync,
 {
     let n = out.len();
-    let threads = num_threads();
-    if n < PAR_THRESHOLD || threads <= 1 {
+    if !parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
         for (i, o) in out.iter_mut().enumerate() {
             *o = f(i);
         }
         return;
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (c, slice) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                let base = c * chunk;
-                for (k, o) in slice.iter_mut().enumerate() {
-                    *o = f(base + k);
-                }
-            });
+    let ptr = SyncPtr(out.as_mut_ptr());
+    pool::global().run(SHARDS, &|s| {
+        let (lo, hi) = shard_bounds(n, s);
+        for i in lo..hi {
+            // SAFETY: shard index ranges are disjoint (one writer per i).
+            unsafe { *ptr.0.add(i) = f(i) };
         }
     });
 }
 
-/// `max_i f(i)` over `0..n` (−∞ for n = 0), in parallel when n is large.
+/// Fused fill + infinity norm: `out[i] = f(i)` and `max_i |out[i]|` in
+/// one pass (0.0 when `out` is empty). This is the shape of every dual
+/// rescale (Eq. 4): the correlation vector Xᵀθ *and* its max are needed
+/// together, and fusing them halves the number of full-p scans.
+pub fn par_fill_abs_max<F>(out: &mut [f64], per_item_cost: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if !parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
+        let mut m = 0.0f64;
+        for (i, o) in out.iter_mut().enumerate() {
+            let v = f(i);
+            *o = v;
+            m = m.max(v.abs());
+        }
+        return m;
+    }
+    let mut partials = [0.0f64; SHARDS];
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    let part_ptr = SyncPtr(partials.as_mut_ptr());
+    pool::global().run(SHARDS, &|s| {
+        let (lo, hi) = shard_bounds(n, s);
+        let mut m = 0.0f64;
+        for i in lo..hi {
+            let v = f(i);
+            // SAFETY: shard index ranges are disjoint (one writer per i).
+            unsafe { *out_ptr.0.add(i) = v };
+            m = m.max(v.abs());
+        }
+        // SAFETY: each shard writes only its own partial slot.
+        unsafe { *part_ptr.0.add(s) = m };
+    });
+    partials.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+/// `max_i f(i)` over `0..n` (−∞ for n = 0); pooled when the work is
+/// large, deterministic either way (fixed shard fold).
+pub fn par_max_cost<F>(n: usize, per_item_cost: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if n == 0 {
+        return f64::NEG_INFINITY;
+    }
+    let mut partials = [f64::NEG_INFINITY; SHARDS];
+    if parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
+        let part_ptr = SyncPtr(partials.as_mut_ptr());
+        pool::global().run(SHARDS, &|s| {
+            let (lo, hi) = shard_bounds(n, s);
+            let mut m = f64::NEG_INFINITY;
+            for i in lo..hi {
+                m = m.max(f(i));
+            }
+            // SAFETY: each shard writes only its own partial slot.
+            unsafe { *part_ptr.0.add(s) = m };
+        });
+    } else {
+        for (s, slot) in partials.iter_mut().enumerate() {
+            let (lo, hi) = shard_bounds(n, s);
+            let mut m = f64::NEG_INFINITY;
+            for i in lo..hi {
+                m = m.max(f(i));
+            }
+            *slot = m;
+        }
+    }
+    partials.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// `sum_i f(i)` over `0..n`; pooled when the work is large. The sum is
+/// always accumulated per fixed shard and folded in shard order, so the
+/// result is bit-identical for any thread count (including serial).
+pub fn par_sum_cost<F>(n: usize, per_item_cost: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    if n == 0 {
+        return 0.0;
+    }
+    let mut partials = [0.0f64; SHARDS];
+    if parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
+        let part_ptr = SyncPtr(partials.as_mut_ptr());
+        pool::global().run(SHARDS, &|s| {
+            let (lo, hi) = shard_bounds(n, s);
+            let mut acc = 0.0;
+            for i in lo..hi {
+                acc += f(i);
+            }
+            // SAFETY: each shard writes only its own partial slot.
+            unsafe { *part_ptr.0.add(s) = acc };
+        });
+    } else {
+        for (s, slot) in partials.iter_mut().enumerate() {
+            let (lo, hi) = shard_bounds(n, s);
+            let mut acc = 0.0;
+            for i in lo..hi {
+                acc += f(i);
+            }
+            *slot = acc;
+        }
+    }
+    partials.iter().sum()
+}
+
+/// `out[i] = f(i)` for all i (unit per-item cost).
+pub fn par_fill<F>(out: &mut [f64], f: F)
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    par_fill_cost(out, 1, f);
+}
+
+/// `max_i f(i)` over `0..n` (unit per-item cost).
 pub fn par_max<F>(n: usize, f: F) -> f64
 where
     F: Fn(usize) -> f64 + Sync,
 {
-    let threads = num_threads();
-    if n < PAR_THRESHOLD || threads <= 1 {
-        let mut m = f64::NEG_INFINITY;
-        for i in 0..n {
-            m = m.max(f(i));
-        }
-        return m;
-    }
-    let chunk = n.div_ceil(threads);
-    let mut partials = vec![f64::NEG_INFINITY; n.div_ceil(chunk)];
-    std::thread::scope(|s| {
-        for (c, out) in partials.iter_mut().enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                let lo = c * chunk;
-                let hi = ((c + 1) * chunk).min(n);
-                let mut m = f64::NEG_INFINITY;
-                for i in lo..hi {
-                    m = m.max(f(i));
-                }
-                *out = m;
-            });
-        }
-    });
-    partials.into_iter().fold(f64::NEG_INFINITY, f64::max)
+    par_max_cost(n, 1, f)
 }
 
-/// `sum_i f(i)` over `0..n`, in parallel when n is large.
+/// `sum_i f(i)` over `0..n` (unit per-item cost).
 pub fn par_sum<F>(n: usize, f: F) -> f64
 where
     F: Fn(usize) -> f64 + Sync,
 {
-    let threads = num_threads();
-    if n < PAR_THRESHOLD || threads <= 1 {
-        let mut acc = 0.0;
-        for i in 0..n {
-            acc += f(i);
-        }
-        return acc;
-    }
-    let chunk = n.div_ceil(threads);
-    let mut partials = vec![0.0; n.div_ceil(chunk)];
-    std::thread::scope(|s| {
-        for (c, out) in partials.iter_mut().enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                let lo = c * chunk;
-                let hi = ((c + 1) * chunk).min(n);
-                let mut acc = 0.0;
-                for i in lo..hi {
-                    acc += f(i);
-                }
-                *out = acc;
-            });
-        }
-    });
-    partials.into_iter().sum()
+    par_sum_cost(n, 1, f)
 }
 
 #[cfg(test)]
@@ -125,7 +255,7 @@ mod tests {
 
     #[test]
     fn fill_small_and_large() {
-        for n in [0usize, 3, 100, PAR_THRESHOLD + 17] {
+        for n in [0usize, 3, 100, SHARDS + 1, PAR_WORK_THRESHOLD + 17] {
             let mut out = vec![0.0; n];
             par_fill(&mut out, |i| (i * 2) as f64);
             for (i, &v) in out.iter().enumerate() {
@@ -136,7 +266,7 @@ mod tests {
 
     #[test]
     fn max_matches_serial() {
-        let n = PAR_THRESHOLD + 1234;
+        let n = PAR_WORK_THRESHOLD + 1234;
         let f = |i: usize| ((i * 7919) % 104729) as f64;
         let serial = (0..n).map(f).fold(f64::NEG_INFINITY, f64::max);
         assert_eq!(par_max(n, f), serial);
@@ -145,11 +275,63 @@ mod tests {
     }
 
     #[test]
-    fn sum_matches_serial() {
-        let n = PAR_THRESHOLD + 55;
-        let serial: f64 = (0..n).map(|i| i as f64).sum();
-        assert!((par_sum(n, |i| i as f64) - serial).abs() < 1e-6);
-        assert_eq!(par_sum(0, |i| i as f64), 0.0);
+    fn sum_matches_fixed_shard_fold() {
+        // The reduction contract: per-shard accumulation in index order,
+        // shard partials folded in shard order — for ANY thread count.
+        let n = PAR_WORK_THRESHOLD + 55;
+        let f = |i: usize| ((i * 2654435761) % 1000) as f64 * 1e-3 + 1.0 / (i + 1) as f64;
+        let chunk = n.div_ceil(SHARDS).max(1);
+        let mut expect = 0.0;
+        for s in 0..SHARDS {
+            let (lo, hi) = ((s * chunk).min(n), ((s + 1) * chunk).min(n));
+            let mut acc = 0.0;
+            for i in lo..hi {
+                acc += f(i);
+            }
+            expect += acc;
+        }
+        assert_eq!(par_sum(n, f).to_bits(), expect.to_bits(), "bit-exact shard fold");
+        assert_eq!(par_sum(0, f), 0.0);
+    }
+
+    #[test]
+    fn serial_scope_is_bit_identical() {
+        let n = PAR_WORK_THRESHOLD + 999;
+        let f = |i: usize| 1.0 / (1.0 + i as f64);
+        let pooled = par_sum(n, f);
+        let serial = run_serial(|| par_sum(n, f));
+        assert_eq!(pooled.to_bits(), serial.to_bits());
+        assert!(!in_serial_scope());
+        run_serial(|| assert!(in_serial_scope()));
+    }
+
+    #[test]
+    fn fill_abs_max_fuses_fill_and_norm() {
+        for n in [0usize, 7, PAR_WORK_THRESHOLD + 3] {
+            let mut fused = vec![0.0; n];
+            let f = |i: usize| if i % 3 == 0 { -(i as f64) } else { i as f64 * 0.5 };
+            let m = par_fill_abs_max(&mut fused, 1, f);
+            let mut plain = vec![0.0; n];
+            par_fill(&mut plain, f);
+            assert_eq!(fused, plain);
+            let expect = plain.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+            assert_eq!(m.to_bits(), expect.to_bits());
+        }
+    }
+
+    #[test]
+    fn work_gating_uses_cost_hint() {
+        // Below the work threshold with unit cost, above it with a large
+        // per-item cost — both must produce the same (correct) result.
+        let n = 4096; // n alone is far below PAR_WORK_THRESHOLD
+        let f = |i: usize| (i as f64).sqrt();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        par_fill_cost(&mut a, 1, f);
+        par_fill_cost(&mut b, 100_000, f); // n × cost ≥ threshold → pooled
+        assert_eq!(a, b);
+        assert_eq!(par_sum_cost(n, 1, f).to_bits(), par_sum_cost(n, 100_000, f).to_bits());
+        assert_eq!(par_max_cost(n, 1, f), par_max_cost(n, 100_000, f));
     }
 
     #[test]

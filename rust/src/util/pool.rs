@@ -1,0 +1,332 @@
+//! Persistent sharded worker pool for the column-parallel hot path.
+//!
+//! Every duality-gap check, Gap Safe screening pass and working-set
+//! build reduces over all p columns (`xt_vec`, the KKT violation scan —
+//! Eq. 4 / Alg. 2 of the paper), and on p ~ 10⁶ problems these full-p
+//! scans dominate wall time once the inner CD epochs are restricted to
+//! small working sets. The previous `util::par` implementation spawned
+//! and joined fresh OS threads on *every* call via `std::thread::scope`
+//! — ~10µs of spawn latency plus cold caches per gap check.
+//!
+//! This module replaces the per-call spawn with one process-wide pool:
+//!
+//! - **Lifecycle**: the pool is created lazily on the first parallel
+//!   call ([`global`]), spawns `num_threads() − 1` long-lived workers
+//!   (the submitting thread is the remaining executor), and is never
+//!   torn down — idle workers park on a condvar and cost nothing.
+//! - **Jobs**: a job is a closure `f(shard)` plus a shard count. Shards
+//!   are claimed dynamically off one atomic counter, so load imbalance
+//!   between column shards (e.g. CSC columns of varying nnz) is
+//!   absorbed without static chunk tuning. The submitter participates
+//!   in the claim loop and blocks until the job completes, which is
+//!   what makes borrowing non-`'static` closures sound.
+//! - **Nesting policy**: a job's closure must never submit to the pool
+//!   (the slot it would wait for is its own). Workers therefore run
+//!   inside [`crate::util::par::run_serial`], which makes any nested
+//!   `par_*` call take the serial path; [`WorkerPool::run`] itself also
+//!   degrades to inline execution inside a serial scope. The
+//!   coordinator applies the same policy to its grid workers — see
+//!   `coordinator::scheduler`.
+//!
+//! Shard *semantics* (fixed shard grid, deterministic reduction folds)
+//! live one level up in [`crate::util::par`]; the pool only executes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// A shard closure as submitted: executed as `f(shard_index)`.
+type ShardFn<'a> = &'a (dyn Fn(usize) + Sync);
+
+/// Lifetime-erased [`ShardFn`] as stored in the job slot.
+type ShardFnPtr = *const (dyn Fn(usize) + Sync);
+
+/// A shard-claim job: a type-erased borrow of the submitter's closure.
+///
+/// The raw pointer erases the closure's lifetime. This is sound because
+/// [`WorkerPool::run`] does not return until `done_seq` reaches the
+/// job's sequence number, which in turn requires every claimed shard to
+/// have finished executing — no worker can touch the pointer after the
+/// borrow ends.
+#[derive(Clone, Copy)]
+struct Job {
+    f: ShardFnPtr,
+    n_shards: usize,
+    seq: u64,
+}
+
+// SAFETY: the pointee is `Sync` (shared execution is the point) and the
+// submit protocol keeps it alive for as long as any worker can reach it.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct State {
+    /// Sequence number of the most recently published job.
+    seq: u64,
+    /// Sequence number of the most recently *completed* job.
+    done_seq: u64,
+    /// Executors (workers AND the submitter, which joins at publish
+    /// time) currently inside a job's claim loop. Counters are only
+    /// reset for a new job once this drains to zero, so a descheduled
+    /// executor can never claim shards against the next job's counter
+    /// — without the submitter counted here, a delayed submitter could
+    /// steal the next job's shards and run its own stale closure on
+    /// them.
+    running: usize,
+    job: Option<Job>,
+    /// Seqs of jobs in which a shard closure panicked; each submitter
+    /// removes (and re-raises) its own seq, so a panic is attributed to
+    /// the job that caused it even with concurrent submitters.
+    poisoned: Vec<u64>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// Submitters park here (for the job slot, and for completion).
+    done_cv: Condvar,
+    /// Next shard index to claim (dynamic load balancing).
+    next_shard: AtomicUsize,
+    /// Shards fully executed; the executor that completes the last one
+    /// retires the job.
+    completed: AtomicUsize,
+}
+
+/// The persistent worker pool. Obtain via [`global`].
+pub struct WorkerPool {
+    shared: &'static Shared,
+    workers: usize,
+}
+
+/// The process-wide pool, created on first use. With
+/// `CELER_NUM_THREADS=1` (or a single-core machine) no worker threads
+/// are spawned and [`WorkerPool::run`] executes inline.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::start)
+}
+
+impl WorkerPool {
+    fn start() -> WorkerPool {
+        let workers = crate::util::par::num_threads().saturating_sub(1);
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_shard: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+        }));
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("celer-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn pool worker");
+        }
+        WorkerPool { shared, workers }
+    }
+
+    /// Number of pool worker threads (excluding the submitting thread).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `f(s)` for every shard `s in 0..n_shards`, blocking until
+    /// all shards have run. Shards are claimed dynamically by the pool
+    /// workers *and* the calling thread.
+    ///
+    /// Inside a serial scope ([`crate::util::par::run_serial`]) or with
+    /// no workers, the shards run inline on the caller. Panics in `f`
+    /// are caught on worker threads and re-raised here after the job
+    /// drains, so the pool is never wedged by a panicking closure.
+    pub fn run(&self, n_shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_shards == 0 {
+            return;
+        }
+        if self.workers == 0 || crate::util::par::in_serial_scope() {
+            for s in 0..n_shards {
+                f(s);
+            }
+            return;
+        }
+        // Erase the closure's lifetime; see `Job` for why this is sound.
+        let f_ptr = unsafe { std::mem::transmute::<ShardFn<'_>, ShardFnPtr>(f) };
+        let seq;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // Wait for the job slot AND for stragglers of the previous
+            // job to leave their claim loops before resetting counters.
+            while st.job.is_some() || st.running > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.seq += 1;
+            seq = st.seq;
+            self.shared.next_shard.store(0, Ordering::Relaxed);
+            self.shared.completed.store(0, Ordering::Relaxed);
+            // The submitter is an executor too: it joins `running` while
+            // the job is published, so the claim counters cannot be
+            // reset for a successor job while this thread could still be
+            // inside its claim loop below.
+            st.running += 1;
+            st.job = Some(Job { f: f_ptr, n_shards, seq });
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter's shard execution runs in a serial scope like
+        // the workers', so a shard closure that reaches back into
+        // `par_*` degrades to the serial path instead of submitting a
+        // nested job (which would deadlock on the occupied job slot).
+        crate::util::par::run_serial(|| run_shards(self.shared, f_ptr, n_shards, seq));
+        let mut st = self.shared.state.lock().unwrap();
+        st.running -= 1;
+        if st.running == 0 && st.job.is_none() {
+            // Last executor out: successors waiting to reuse the claim
+            // counters may proceed.
+            self.shared.done_cv.notify_all();
+        }
+        while st.done_seq < seq {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        let panicked = st.poisoned.iter().any(|&q| q == seq);
+        if panicked {
+            st.poisoned.retain(|&q| q != seq);
+        }
+        drop(st);
+        if panicked {
+            panic!("celer worker pool: a parallel shard closure panicked");
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by workers and the submitting thread.
+fn run_shards(shared: &Shared, f: ShardFnPtr, n_shards: usize, seq: u64) {
+    loop {
+        let s = shared.next_shard.fetch_add(1, Ordering::Relaxed);
+        if s >= n_shards {
+            return;
+        }
+        // SAFETY: a successful claim (s < n_shards) proves the job is
+        // not yet complete — shard s has never run, `completed` cannot
+        // reach n_shards without it, so the submitter is still blocked
+        // in `run` and the closure borrow behind `f` is alive.
+        let f = unsafe { &*f };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(s))).is_err() {
+            shared.state.lock().unwrap().poisoned.push(seq);
+        }
+        // AcqRel: the final increment's reader synchronizes with every
+        // shard executor's writes before the submitter observes "done".
+        if shared.completed.fetch_add(1, Ordering::AcqRel) + 1 == n_shards {
+            let mut st = shared.state.lock().unwrap();
+            st.job = None;
+            st.done_seq = seq;
+            drop(st);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &'static Shared) {
+    // Nested `par_*` calls from inside a shard closure must not submit
+    // back to the pool (self-deadlock); run the whole worker in a
+    // serial scope so they take the serial path instead.
+    crate::util::par::run_serial(|| {
+        let mut last_seen = 0u64;
+        loop {
+            let job = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    match st.job {
+                        Some(j) if j.seq != last_seen => {
+                            st.running += 1;
+                            break j;
+                        }
+                        _ => st = shared.work_cv.wait(st).unwrap(),
+                    }
+                }
+            };
+            last_seen = job.seq;
+            run_shards(shared, job.f, job.n_shards, job.seq);
+            let mut st = shared.state.lock().unwrap();
+            st.running -= 1;
+            if st.running == 0 && st.job.is_none() {
+                // Last straggler out: submitters waiting to reuse the
+                // claim counters may proceed.
+                shared.done_cv.notify_all();
+            }
+        }
+    });
+}
+
+/// A `Sync` wrapper for a raw mutable pointer handed to shard closures.
+///
+/// Writers must guarantee disjointness: each index (or index range) is
+/// written by exactly one shard. Used by `util::par` for partial-result
+/// slots and output buffers, and by `solvers::batch` for the
+/// lane-sharded sweep.
+#[derive(Clone, Copy)]
+pub(crate) struct SyncPtr<T>(pub *mut T);
+
+// SAFETY: shard-disjoint writes only; see the struct docs.
+unsafe impl<T> Sync for SyncPtr<T> {}
+unsafe impl<T> Send for SyncPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_shard_exactly_once() {
+        let pool = global();
+        for n in [0usize, 1, 3, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|s| {
+                hits[s].fetch_add(1, Ordering::Relaxed);
+            });
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_pool() {
+        let pool = global();
+        let acc = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.run(16, &|s| {
+                acc.fetch_add(round + s as u64, Ordering::Relaxed);
+            });
+        }
+        let expect: u64 = (0..50u64).map(|r| 16 * r + (0..16).sum::<u64>()).sum();
+        assert_eq!(acc.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn serial_scope_runs_inline() {
+        let pool = global();
+        let hits = AtomicUsize::new(0);
+        crate::util::par::run_serial(|| {
+            pool.run(8, &|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_safely() {
+        // Several foreign threads (as in `cargo test`'s own parallelism)
+        // submitting at once must each see exactly their own job done.
+        let pool = global();
+        std::thread::scope(|sc| {
+            for t in 0..4usize {
+                sc.spawn(move || {
+                    let count = AtomicUsize::new(0);
+                    pool.run(32 + t, &|_| {
+                        count.fetch_add(1, Ordering::Relaxed);
+                    });
+                    assert_eq!(count.load(Ordering::Relaxed), 32 + t);
+                });
+            }
+        });
+    }
+}

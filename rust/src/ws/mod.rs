@@ -11,6 +11,13 @@
 //!   shrink if the support is small;
 //! - plus the ablation policies of Appendix A.2: geometric growth with
 //!   factor γ and linear growth `p_t = min(γ + |S|, p)`.
+//!
+//! The score vector handed to [`build_working_set`] is produced by
+//! [`crate::screening::fill_d_scores`] from the cached `Xᵀθ` of the
+//! gap check — on the pool-backed runtime the whole
+//! gap-check → dual-rescale → price → build sequence therefore touches
+//! the design exactly once (the fused `xt_vec_abs_max` pass); selection
+//! itself is O(p) on cached scores.
 
 use crate::util::select::k_smallest_indices;
 

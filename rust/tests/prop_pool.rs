@@ -1,0 +1,175 @@
+//! Property tests for the persistent sharded worker pool and the
+//! deterministic parallel primitives built on it (`util::pool` /
+//! `util::par`), plus the fused design-scan kernels.
+//!
+//! The contracts pinned here:
+//!
+//! 1. **Determinism**: `par_sum`/`par_max`/`par_fill_abs_max` decompose
+//!    work over a fixed shard grid (`par::SHARDS`) and fold partials in
+//!    shard order, so their results are bit-identical for any
+//!    `CELER_NUM_THREADS` (CI runs this suite at 1 and 4 threads) and
+//!    identical to the in-process serial path (`par::run_serial`).
+//! 2. **Fusion**: the fused kernels (`xt_vec_abs_max`, the fused KKT
+//!    scan) equal their separate-pass counterparts bit-for-bit on dense
+//!    and CSC designs.
+//! 3. **Edge shapes**: empty inputs, p smaller than the shard count,
+//!    and reentrancy from coordinator worker threads (which run in a
+//!    serial scope and must produce the same bits).
+
+use celer::coordinator::scheduler::run_parallel;
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::synth;
+use celer::lasso::kkt;
+use celer::util::par;
+use celer::util::rng::Rng;
+
+/// A dense design whose full-p scan clears the work-based parallel
+/// threshold: p × n = 8192 × 64 = 2¹⁹ ≥ `PAR_WORK_THRESHOLD`.
+fn big_dense(seed: u64) -> DesignMatrix {
+    synth::dense_scan_stress(seed).x
+}
+
+/// A CSC design whose scan clears the threshold under the *sparse* cost
+/// model: p × mean-nnz ≈ 32768 × 13 ≈ 4·10⁵ ≥ `PAR_WORK_THRESHOLD`.
+fn big_sparse(seed: u64) -> DesignMatrix {
+    synth::sparse_scan_stress(seed).x
+}
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn reductions_match_fixed_shard_fold_reference() {
+    // Reference computed with the documented contract: fixed shard
+    // grid, per-shard accumulation in index order, shard-order fold.
+    let n = par::PAR_WORK_THRESHOLD + 4321;
+    let f = |i: usize| ((i * 2654435761) % 997) as f64 * 1e-3 - 0.25;
+    let chunk = n.div_ceil(par::SHARDS).max(1);
+    let mut sum_ref = 0.0f64;
+    let mut max_ref = f64::NEG_INFINITY;
+    for s in 0..par::SHARDS {
+        let (lo, hi) = ((s * chunk).min(n), ((s + 1) * chunk).min(n));
+        let mut acc = 0.0;
+        let mut m = f64::NEG_INFINITY;
+        for i in lo..hi {
+            acc += f(i);
+            m = m.max(f(i));
+        }
+        sum_ref += acc;
+        max_ref = max_ref.max(m);
+    }
+    assert_eq!(par::par_sum(n, f).to_bits(), sum_ref.to_bits());
+    assert_eq!(par::par_max(n, f).to_bits(), max_ref.to_bits());
+    // and the serial scope reproduces the same bits
+    let serial = par::run_serial(|| par::par_sum(n, f));
+    assert_eq!(serial.to_bits(), sum_ref.to_bits());
+}
+
+#[test]
+fn empty_and_tiny_inputs() {
+    assert_eq!(par::par_sum(0, |i| i as f64), 0.0);
+    assert_eq!(par::par_max(0, |i| i as f64), f64::NEG_INFINITY);
+    let mut out: Vec<f64> = Vec::new();
+    par::par_fill(&mut out, |i| i as f64);
+    assert!(out.is_empty());
+    assert_eq!(par::par_fill_abs_max(&mut out, 1, |i| i as f64), 0.0);
+    // fewer items than shards: every index still filled exactly once
+    let mut small = vec![0.0; 5];
+    par::par_fill(&mut small, |i| (i + 1) as f64);
+    assert_eq!(small, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    assert_eq!(par::par_sum(5, |i| (i + 1) as f64), 15.0);
+}
+
+#[test]
+fn pooled_design_scans_match_serial_bitwise() {
+    for x in [&big_dense(7), &big_sparse(7)] {
+        let v = rand_vec(8, x.n());
+        let p = x.p();
+        let mut pooled = vec![0.0; p];
+        x.xt_vec(&v, &mut pooled);
+        let (serial, serial_max, serial_norms) = par::run_serial(|| {
+            let mut out = vec![0.0; p];
+            x.xt_vec(&v, &mut out);
+            (out, x.xt_abs_max(&v), x.col_norms_sq())
+        });
+        assert_eq!(pooled, serial, "xt_vec pooled == serial");
+        assert_eq!(x.xt_abs_max(&v).to_bits(), serial_max.to_bits());
+        assert_eq!(x.col_norms_sq(), serial_norms);
+        // per-column oracle: each entry is one col_dot, bit-for-bit
+        for j in 0..p {
+            assert_eq!(pooled[j].to_bits(), x.col_dot(j, &v).to_bits(), "j={j}");
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_match_separate_passes() {
+    for x in [&big_dense(9), &big_sparse(9)] {
+        let v = rand_vec(10, x.n());
+        let p = x.p();
+        let mut fused = vec![0.0; p];
+        let m = x.xt_vec_abs_max(&v, &mut fused);
+        let mut plain = vec![0.0; p];
+        x.xt_vec(&v, &mut plain);
+        assert_eq!(fused, plain, "fused fill == xt_vec");
+        let expect = plain.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        assert_eq!(m.to_bits(), expect.to_bits(), "fused max == separate scan");
+
+        // fused KKT scan vs violations + max_violation
+        let mut beta = vec![0.0; p];
+        beta[3] = 0.7;
+        beta[p - 1] = -0.2;
+        let lambda = 0.5 * m;
+        let mut kv = Vec::new();
+        let kmax = kkt::violations_with_max(x, &v, &beta, lambda, &mut kv);
+        assert_eq!(kv, kkt::violations(x, &v, &beta, lambda));
+        assert_eq!(kmax.to_bits(), kkt::max_violation(x, &v, &beta, lambda).to_bits());
+        let from_fused: Vec<usize> =
+            kv.iter().enumerate().filter(|&(_, &w)| w > 1e-9).map(|(j, _)| j).collect();
+        assert_eq!(kkt::violating_features(x, &v, &beta, lambda, 1e-9), from_fused);
+    }
+}
+
+#[test]
+fn reentrancy_from_coordinator_workers() {
+    // Coordinator grid workers run in a serial scope; pool primitives
+    // called from them must degrade gracefully AND return the exact
+    // bits the pooled path returns.
+    for x in [&big_dense(11), &big_sparse(11)] {
+        let v = rand_vec(12, x.n());
+        let p = x.p();
+        let mut direct = vec![0.0; p];
+        let direct_max = x.xt_vec_abs_max(&v, &mut direct);
+        let jobs: Vec<usize> = (0..4).collect();
+        let from_workers = run_parallel(jobs, 4, |_| {
+            let mut out = vec![0.0; p];
+            let m = x.xt_vec_abs_max(&v, &mut out);
+            (out, m)
+        });
+        for (out, m) in from_workers {
+            assert_eq!(out, direct, "worker-thread scan == direct scan");
+            assert_eq!(m.to_bits(), direct_max.to_bits());
+        }
+    }
+}
+
+#[test]
+fn solver_results_invariant_under_serial_scope() {
+    // End-to-end: a full gap-certified solve driven through the pooled
+    // scans equals the all-serial run bit-for-bit. With the CI thread
+    // matrix (CELER_NUM_THREADS ∈ {1, 4}) this pins thread-count
+    // invariance of gaps, dual points, and solutions.
+    for x in [&big_dense(13), &big_sparse(13)] {
+        let y = rand_vec(14, x.n());
+        let lambda = celer::lasso::dual::lambda_max(x, &y) / 8.0;
+        let cfg = celer::solvers::cd::CdConfig { tol: 1e-8, screen: true, ..Default::default() };
+        let pooled = celer::solvers::cd::cd_solve(x, &y, lambda, None, &cfg);
+        let serial = par::run_serial(|| celer::solvers::cd::cd_solve(x, &y, lambda, None, &cfg));
+        assert_eq!(pooled.beta, serial.beta);
+        assert_eq!(pooled.gap.to_bits(), serial.gap.to_bits());
+        assert_eq!(pooled.epochs, serial.epochs);
+        assert_eq!(pooled.theta, serial.theta);
+    }
+}
