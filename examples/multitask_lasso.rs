@@ -30,7 +30,6 @@ fn main() {
             *v /= nrm;
         }
     }
-    let x = DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data));
     // row-sparse ground truth: `support` rows active across all q tasks
     let mut b_true = TaskMatrix::zeros(p, q);
     for &j in &rng.sample_indices(p, support) {
@@ -38,19 +37,25 @@ fn main() {
             b_true.row_mut(j)[t] = rng.normal();
         }
     }
+    // Y = X B* + noise, row-major n×q (built from the raw columns; the
+    // solvers themselves go through the shared multi-RHS lane kernels)
     let mut y = vec![0.0; n * q];
     for j in 0..p {
-        for t in 0..q {
-            let v = b_true.row(j)[t];
-            if v != 0.0 {
-                use celer::multitask::solver::DesignOpsMt;
-                x.col_axpy_strided(j, v, &mut y, q, t);
+        let col = &data[j * n..(j + 1) * n];
+        let row = b_true.row(j);
+        if row.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        for (i, &xv) in col.iter().enumerate() {
+            for t in 0..q {
+                y[i * q + t] += row[t] * xv;
             }
         }
     }
     for v in y.iter_mut() {
         *v += 0.1 * rng.normal();
     }
+    let x = DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data));
 
     let lmax = mt_lambda_max(&x, &y, q);
     let lambda = lmax / 10.0;

@@ -8,8 +8,11 @@ use celer::data::synth;
 use celer::data::view::DesignView;
 use celer::extrapolation::ResidualBuffer;
 use celer::lasso::dual;
+use celer::multitask::solver::mt_lambda_max;
 use celer::report::bench;
+use celer::solvers::block::{solve_blocks, BlockCdStrategy, BlockWorkspace};
 use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::engine::{EngineConfig, Init, StopRule};
 use celer::solvers::path::{lambda_grid, run_path, PathSolver};
 use celer::util::select::k_smallest_indices;
 use celer::util::soft_threshold;
@@ -173,6 +176,121 @@ fn bench_lane_ops(tag: &str, x: &DesignMatrix, iters: usize) {
     });
 }
 
+/// Legacy strided row-major multi-RHS column dot (the pre-refactor
+/// `DesignOpsMt::col_dot_strided` shape), kept in the bench so
+/// `mt/strided_vs_lanes_*` quantifies the kernel unification: q strided
+/// dots per column over a row-major n×q matrix vs one `col_dot_lanes`
+/// sweep over the lane-major layout (the column's values — and, for
+/// CSC, its row indices — loaded and decoded once for all q tasks).
+fn strided_col_dot(x: &DesignMatrix, j: usize, m: &[f64], q: usize, t: usize) -> f64 {
+    match x {
+        DesignMatrix::Dense(d) => {
+            let mut acc = 0.0;
+            for (i, &v) in d.col(j).iter().enumerate() {
+                acc += v * m[i * q + t];
+            }
+            acc
+        }
+        DesignMatrix::Sparse(sp) => {
+            let (idx, val) = sp.col(j);
+            let mut acc = 0.0;
+            for k in 0..idx.len() {
+                acc += val[k] * m[idx[k] as usize * q + t];
+            }
+            acc
+        }
+    }
+}
+
+/// Multi-task design traffic: per-(column, task) strided dots vs one
+/// multi-RHS lane sweep per column.
+fn bench_mt_kernels(tag: &str, x: &DesignMatrix, iters: usize) {
+    let n = x.n();
+    let p = x.p();
+    let q = 8;
+    let mut rng = celer::util::rng::Rng::new(9);
+    let m_row: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect(); // row-major n×q
+    let mut m_lanes = Vec::new();
+    celer::multitask::rowmajor_to_lanes(&m_row, n, q, &mut m_lanes);
+    let lanes: Vec<usize> = (0..q).collect();
+    let mut out = vec![0.0; q];
+    bench::time(&format!("mt/strided_vs_lanes_{tag}_strided_q{q}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            for t in 0..q {
+                acc += strided_col_dot(x, j, &m_row, q, t);
+            }
+        }
+        assert!(acc.is_finite());
+    });
+    bench::time(&format!("mt/strided_vs_lanes_{tag}_lanes_q{q}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            x.col_dot_lanes(j, &m_lanes, n, &lanes, &mut out);
+            acc += out[0];
+        }
+        assert!(acc.is_finite());
+    });
+}
+
+/// MT working-set inner solve both ways: materialized `select_columns`
+/// copy (the pre-refactor MT hot path) vs a zero-copy [`DesignView`],
+/// epoch-capped so both sides do identical bounded work per iteration.
+fn bench_mt_inner_solve(tag: &str, x: &DesignMatrix, iters: usize) {
+    let n = x.n();
+    let q = 4;
+    let mut rng = celer::util::rng::Rng::new(13);
+    let y_row: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+    let mut y_lanes = Vec::new();
+    celer::multitask::rowmajor_to_lanes(&y_row, n, q, &mut y_lanes);
+    // a realistic working set: columns most correlated with task 0
+    let cols = top_correlated(x, &y_lanes[..n], 200);
+    let norms = x.col_norms_sq();
+    let lambda = mt_lambda_max(x, &y_row, q) / 20.0;
+    let cfg = EngineConfig {
+        tol: 1e-12,
+        max_epochs: 50,
+        gap_freq: 10,
+        k: 5,
+        extrapolate: true,
+        best_dual: true,
+        screen: false,
+        trace: false,
+        stop: StopRule::DualityGap,
+    };
+    let mut ws = BlockWorkspace::new();
+    bench::time(&format!("mt/ws_inner_materialized_{tag}"), iters, || {
+        let sub = x.select_columns(&cols);
+        let out = solve_blocks(
+            &sub,
+            &y_lanes,
+            q,
+            lambda,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut ws,
+            &mut BlockCdStrategy,
+        );
+        assert!(out.epochs > 0);
+    });
+    bench::time(&format!("mt/ws_inner_view_{tag}"), iters, || {
+        let view = DesignView::new(x, &cols, &norms);
+        let out = solve_blocks(
+            &view,
+            &y_lanes,
+            q,
+            lambda,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut ws,
+            &mut BlockCdStrategy,
+        );
+        assert!(out.epochs > 0);
+    });
+}
+
 fn main() {
     let full = bench::full_scale();
     let sparse = if full { synth::finance_sim(0) } else { synth::finance_mini(0) };
@@ -292,6 +410,13 @@ fn main() {
     // --- multi-RHS column traffic: per-lane col_dot vs one lane sweep ---
     bench_lane_ops("dense", &dense.x, iters);
     bench_lane_ops("sparse", &sparse.x, iters);
+
+    // --- multi-task block kernels: legacy strided row-major dots vs the
+    // unified lane sweep, and materialized vs view MT inner solves ---
+    bench_mt_kernels("dense", &dense.x, iters);
+    bench_mt_kernels("sparse", &sparse.x, iters);
+    bench_mt_inner_solve("dense", &dense.x, iters);
+    bench_mt_inner_solve("sparse", &sparse.x, iters);
 
     // --- full λ path: sequential chain vs batched multi-λ engine ---
     // (the batch layer's headline quantity, dense and CSC)

@@ -18,7 +18,10 @@
 //! worker feeds its job's λ grid into B concurrent lanes of
 //! [`crate::solvers::batch`] instead of looping over the grid — the
 //! lane workspace also lives in (and is reused from) the worker's
-//! `Workspace`.
+//! `Workspace`. Multi-task grid jobs route the same way
+//! (`solver_name: "celer-mt"`): the block-coefficient workspace lives in
+//! the worker's `Workspace` (`ws.mt`), so MT cells share the per-thread
+//! buffer-reuse story with every other solver.
 
 pub mod metrics;
 pub mod scheduler;
@@ -151,6 +154,45 @@ mod tests {
                 grid[i],
             );
             assert!((pb - ps).abs() <= 2.0 * tol, "λ#{i}: {pb} vs {ps}");
+        }
+    }
+
+    #[test]
+    fn mt_jobs_route_through_by_name_like_batched() {
+        // "celer-mt" grid cells dispatch through the same by_name path
+        // as every other solver; workers keep the block workspace in
+        // their per-thread engine Workspace.
+        let ds = load_dataset("leukemia-mini", 12).unwrap();
+        let grid = standard_grid(&ds, 10.0, 4);
+        let tol = 1e-8;
+        let jobs: Vec<PathJob> = ["celer-mt", "celer-prune"]
+            .iter()
+            .map(|s| PathJob {
+                solver_name: s.to_string(),
+                tol,
+                grid: grid.clone(),
+                store_betas: true,
+            })
+            .collect();
+        let out = run_path_jobs(&ds, jobs, 2).unwrap();
+        assert_eq!(out[0].solver, "celer-mt");
+        for r in &out {
+            assert!(r.all_converged(), "{} converged", r.solver);
+        }
+        for (i, (sm, sc)) in out[0].steps.iter().zip(&out[1].steps).enumerate() {
+            let pm = crate::lasso::primal::primal(
+                &ds.x,
+                &ds.y,
+                sm.beta.as_ref().unwrap(),
+                grid[i],
+            );
+            let pc = crate::lasso::primal::primal(
+                &ds.x,
+                &ds.y,
+                sc.beta.as_ref().unwrap(),
+                grid[i],
+            );
+            assert!((pm - pc).abs() <= 2.0 * tol, "λ#{i}: {pm} vs {pc}");
         }
     }
 

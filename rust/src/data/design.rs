@@ -35,13 +35,16 @@ pub trait DesignOps: Sync {
     /// vector is the slice `v[k·n .. (k+1)·n]` of a strided buffer and
     /// `lanes[t]` selects which lanes participate.
     ///
-    /// This is the batched multi-λ hot path (see
-    /// [`crate::solvers::batch`]): the default implementation performs
-    /// one [`DesignOps::col_dot`] per lane, while the dense/CSC storage
-    /// backends override it with a single sweep over the column that
-    /// streams all lanes at once — the column's values (and, for CSC,
-    /// its row indices) are loaded and decoded once per sweep instead of
-    /// once per lane.
+    /// This is THE multi-RHS kernel of the crate — the batched multi-λ
+    /// engine ([`crate::solvers::batch`], lanes = concurrent λ's) and
+    /// the block-coefficient / Multi-Task engine
+    /// ([`crate::solvers::block`], lanes = the q tasks of a lane-major
+    /// residual matrix) both run on it. The default implementation
+    /// performs one [`DesignOps::col_dot`] per lane, while the dense/CSC
+    /// storage backends override it with a single sweep over the column
+    /// that streams all lanes at once — the column's values (and, for
+    /// CSC, its row indices) are loaded and decoded once per sweep
+    /// instead of once per lane.
     fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
         debug_assert_eq!(lanes.len(), out.len());
         for (o, &k) in out.iter_mut().zip(lanes.iter()) {

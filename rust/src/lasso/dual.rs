@@ -8,13 +8,22 @@ use crate::data::design::DesignOps;
 
 /// Dual objective `D(θ) = ½‖y‖² − (λ²/2)‖θ − y/λ‖²`.
 pub fn dual_objective(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
+    dual_objective_cached(y, theta, lambda, crate::util::linalg::dot(y, y))
+}
+
+/// [`dual_objective`] with `‖y‖²` supplied by the caller. `y` is constant
+/// for the lifetime of a solve, so the solver engines cache `‖y‖²` once
+/// (see `DualState::update` / the block engine) instead of paying an
+/// O(n) pass at every gap check. Also the shape the Multi-Task dual
+/// takes (`y`/`theta` are the vectorized n×q matrices, `‖Y‖_F²` cached).
+pub fn dual_objective_cached(y: &[f64], theta: &[f64], lambda: f64, y_norm_sq: f64) -> f64 {
     debug_assert_eq!(y.len(), theta.len());
     let mut dist_sq = 0.0;
     for i in 0..y.len() {
         let d = theta[i] - y[i] / lambda;
         dist_sq += d * d;
     }
-    0.5 * crate::util::linalg::dot(y, y) - 0.5 * lambda * lambda * dist_sq
+    0.5 * y_norm_sq - 0.5 * lambda * lambda * dist_sq
 }
 
 /// Duality gap `G(β, θ) = P(β) − D(θ)` from a maintained residual.

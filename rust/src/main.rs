@@ -85,6 +85,7 @@ COMMANDS:
 
 SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
          gapsafe-cd-accel cd-batched (batched multi-λ lanes; path only)
+         celer-mt (Multi-Task CELER on the block engine; q = 1 on grids)
 DATASETS: leukemia-sim leukemia-mini finance-sim finance-mini bctcga-sim toy-2x2
 ";
 

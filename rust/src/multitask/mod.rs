@@ -19,6 +19,42 @@
 
 pub mod solver;
 
+/// Transpose a row-major n×q matrix (`a[i·q + t]`, the public Multi-Task
+/// API layout) into the lane-major q×n layout (`out[t·n + i]`) the block
+/// engine and the multi-RHS design kernels
+/// ([`DesignOps::col_dot_lanes`](crate::data::design::DesignOps::col_dot_lanes))
+/// operate on. `q = 1` is a plain copy.
+pub fn rowmajor_to_lanes(a: &[f64], n: usize, q: usize, out: &mut Vec<f64>) {
+    assert_eq!(a.len(), n * q);
+    out.clear();
+    out.resize(n * q, 0.0);
+    if q == 1 {
+        out.copy_from_slice(a);
+        return;
+    }
+    for i in 0..n {
+        for t in 0..q {
+            out[t * n + i] = a[i * q + t];
+        }
+    }
+}
+
+/// Inverse of [`rowmajor_to_lanes`]: lane-major q×n back to row-major n×q.
+pub fn lanes_to_rowmajor(a: &[f64], n: usize, q: usize, out: &mut Vec<f64>) {
+    assert_eq!(a.len(), n * q);
+    out.clear();
+    out.resize(n * q, 0.0);
+    if q == 1 {
+        out.copy_from_slice(a);
+        return;
+    }
+    for t in 0..q {
+        for i in 0..n {
+            out[i * q + t] = a[t * n + i];
+        }
+    }
+}
+
 /// Group (row) soft-threshold: `BST(u, t) = u · max(0, 1 − t/‖u‖)`.
 #[inline]
 pub fn block_soft_threshold(u: &mut [f64], t: f64) {
@@ -91,6 +127,22 @@ mod tests {
             block_soft_threshold(&mut u, 1.0);
             assert!((u[0] - crate::util::soft_threshold(x, 1.0)).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a: Vec<f64> = (0..12).map(|v| v as f64).collect(); // 4×3 row-major
+        let mut lanes = Vec::new();
+        rowmajor_to_lanes(&a, 4, 3, &mut lanes);
+        assert_eq!(lanes[0], a[0]); // (i=0, t=0)
+        assert_eq!(lanes[4], a[3]); // lane 1 starts at row 0, task 1
+        let mut back = Vec::new();
+        lanes_to_rowmajor(&lanes, 4, 3, &mut back);
+        assert_eq!(back, a);
+        // q = 1 is the identity
+        let mut one = Vec::new();
+        rowmajor_to_lanes(&a, 12, 1, &mut one);
+        assert_eq!(one, a);
     }
 
     #[test]

@@ -122,6 +122,53 @@ impl ScreeningState {
         });
         before - self.active.len()
     }
+
+    /// Block-row variant of [`ScreeningState::screen`] for width-`q`
+    /// coefficient blocks (Multi-Task Lasso, paper §7): the rule uses
+    /// the block d-score `d_j(Θ) = (1 − ‖x_jᵀΘ‖₂)/‖x_j‖` — the caller
+    /// passes the cached row norms `xtheta_rows[j] = ‖x_jᵀΘ‖₂` from the
+    /// block dual state — and a screened row is zeroed with the
+    /// lane-major q×n residual fixed through the multi-RHS lane kernel
+    /// (`r_t += B_{jt}·x_j` for every task). `q = 1` dispatches to the
+    /// exact scalar kernels, so the block engine's q = 1 path stays
+    /// bit-identical to [`ScreeningState::screen`].
+    pub fn screen_block<D: DesignOps>(
+        &mut self,
+        x: &D,
+        xtheta_rows: &[f64],
+        col_norms: &[f64],
+        gap: f64,
+        lambda: f64,
+        n: usize,
+        q: usize,
+        lanes: &[usize],
+        beta: &mut [f64],
+        r: &mut [f64],
+    ) -> usize {
+        let radius = gap_safe_radius(gap, lambda);
+        // Same numerical-safety margin as the scalar rule (see `screen`).
+        let threshold = radius + 1e-12;
+        let before = self.active.len();
+        let screened = &mut self.screened;
+        self.active.retain(|&j| {
+            let keep = d_score(xtheta_rows[j].abs(), col_norms[j]) <= threshold;
+            if !keep {
+                screened[j] = true;
+                let row = &mut beta[j * q..(j + 1) * q];
+                if row.iter().any(|&v| v != 0.0) {
+                    // R = Y − XB; zeroing B_j adds B_{jt}·x_j back.
+                    if q == 1 {
+                        x.col_axpy(j, row[0], r);
+                    } else {
+                        x.col_axpy_lanes(j, row, r, n, lanes);
+                    }
+                    row.fill(0.0);
+                }
+            }
+            keep
+        });
+        before - self.active.len()
+    }
 }
 
 #[cfg(test)]
@@ -212,6 +259,66 @@ mod tests {
             primal::residual(&x, &y, &beta, &mut expect);
             for i in 0..2 {
                 assert!((r[i] - expect[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn screen_block_q1_matches_scalar_and_fixes_block_residual() {
+        let x = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let y = [3.0, 0.1];
+        let lambda = 1.0;
+        let norms = vec![1.0, 1.0];
+        // q = 1: identical decisions and state to the scalar rule.
+        let theta = vec![1.0, 0.1];
+        let mut xtheta = vec![0.0; 2];
+        use crate::data::design::DesignOps;
+        x.xt_vec(&theta, &mut xtheta);
+        let rows: Vec<f64> = xtheta.iter().map(|v| v.abs()).collect();
+        let mut beta_a = vec![2.0, 0.05];
+        let mut r_a = vec![0.0; 2];
+        primal::residual(&x, &y, &beta_a, &mut r_a);
+        let gap = primal::primal_from_residual(&r_a, &beta_a, lambda)
+            - dual::dual_objective(&y, &theta, lambda);
+        let mut beta_b = beta_a.clone();
+        let mut r_b = r_a.clone();
+        let mut sa = ScreeningState::all_active(2);
+        let mut sb = ScreeningState::all_active(2);
+        let ka = sa.screen(&x, &xtheta, &norms, gap, lambda, &mut beta_a, &mut r_a);
+        let lanes = [0usize];
+        let kb =
+            sb.screen_block(&x, &rows, &norms, gap, lambda, 2, 1, &lanes, &mut beta_b, &mut r_b);
+        assert_eq!(ka, kb);
+        assert_eq!(sa.active(), sb.active());
+        assert_eq!(beta_a, beta_b);
+        assert_eq!(r_a, r_b);
+
+        // q = 2: a screened row is zeroed and every task residual is
+        // restored to Y − XB.
+        let q = 2;
+        let lanes = [0usize, 1];
+        let yb = [3.0, 0.1, -1.0, 0.2]; // lane-major 2×2
+        let mut beta = vec![2.0, -1.0, 0.05, 0.02]; // rows: [2,-1], [0.05,0.02]
+        let mut r = vec![0.0; 4];
+        for t in 0..q {
+            let bt: Vec<f64> = (0..2).map(|j| beta[j * q + t]).collect();
+            let mut rt = vec![0.0; 2];
+            primal::residual(&x, &yb[t * 2..(t + 1) * 2], &bt, &mut rt);
+            r[t * 2..(t + 1) * 2].copy_from_slice(&rt);
+        }
+        // rows chosen so feature 1 screens (tiny correlation, tiny gap)
+        let rows = vec![1.0, 0.05];
+        let mut st = ScreeningState::all_active(2);
+        let k = st.screen_block(&x, &rows, &norms, 1e-8, lambda, 2, q, &lanes, &mut beta, &mut r);
+        assert_eq!(k, 1);
+        assert!(st.is_screened(1));
+        assert_eq!(&beta[2..4], &[0.0, 0.0]);
+        for t in 0..q {
+            let bt: Vec<f64> = (0..2).map(|j| beta[j * q + t]).collect();
+            let mut expect = vec![0.0; 2];
+            primal::residual(&x, &yb[t * 2..(t + 1) * 2], &bt, &mut expect);
+            for i in 0..2 {
+                assert!((r[t * 2 + i] - expect[i]).abs() < 1e-12, "t={t} i={i}");
             }
         }
     }

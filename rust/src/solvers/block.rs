@@ -1,0 +1,873 @@
+//! Block-coefficient solver engine (paper §7): the scalar engine of
+//! [`crate::solvers::engine`] generalized from width-1 coefficients to
+//! width-`q` coefficient blocks.
+//!
+//! The paper's §7 observation is that the whole CELER methodology — the
+//! Eq. 4 dual rescale, Definition-1 extrapolation, Gap Safe screening
+//! (Eq. 9) and `d_j` working-set pricing (Eqs. 10–11) — carries over
+//! verbatim to any row-separable block penalty once three scalars become
+//! block quantities:
+//!
+//! | scalar engine                  | block engine (width q)              |
+//! |--------------------------------|-------------------------------------|
+//! | coefficient `β_j`              | block `B_j ∈ R^q` (`beta[j·q..]`)   |
+//! | residual `r ∈ R^n`             | `R ∈ R^{n×q}`, stored lane-major    |
+//! | `x_jᵀr`, `‖Xᵀr‖_∞`             | `x_jᵀR ∈ R^q`, `max_j ‖x_jᵀR‖₂`     |
+//! | soft-threshold `ST`            | group soft-threshold `BST` (Eq. 21) |
+//! | `|x_jᵀθ|` d-scores             | `‖x_jᵀΘ‖₂` d-scores                 |
+//!
+//! **Layouts.** The residual/dual matrices are *lane-major*: task `t`'s
+//! n-vector is the contiguous slice `[t·n .. (t+1)·n]`, exactly the lane
+//! layout of the batched engine — which is what lets every multi-RHS
+//! column access go through the one pair of design kernels
+//! ([`DesignOps::col_dot_lanes`] / [`DesignOps::col_axpy_lanes`]:
+//! row-blocked single sweep for dense, decode-each-entry-once for CSC,
+//! index translation for [`DesignView`](crate::data::view::DesignView)).
+//! Coefficients are *row-major blocks*: feature `j`'s block is
+//! `beta[j·q .. (j+1)·q]` (the `TaskMatrix` layout), matching the CD
+//! access pattern of one block per column visit.
+//!
+//! **q = 1 is the scalar engine.** Every block kernel branches `q == 1`
+//! to the *same* scalar kernels the sequential engine calls
+//! (`col_dot`/`col_axpy`, `soft_threshold`, `xt_vec_abs_max`,
+//! `primal_from_residual`), in the same order — so the block engine at
+//! q = 1 is bit-identical to [`engine::solve`] with
+//! [`CdStrategy`](crate::solvers::engine::CdStrategy), pinned by
+//! `tests/prop_multitask.rs`.
+//!
+//! All full-p scans (norm caches, the fused correlation/row-norm pass of
+//! [`xt_rows_max`]) run shard-deterministically on the persistent worker
+//! pool via [`crate::util::par`], so block solves are bit-identical for
+//! any `CELER_NUM_THREADS`.
+
+use crate::data::design::DesignOps;
+use crate::extrapolation::{ExtrapScratch, ResidualBuffer};
+use crate::lasso::{dual, primal};
+use crate::multitask::block_soft_threshold;
+use crate::screening::ScreeningState;
+use crate::solvers::engine::{self, EngineConfig, EngineOutcome, Init, StopRule};
+use crate::solvers::{DualChoice, GapCheck};
+use crate::util::soft_threshold;
+use std::time::Instant;
+
+/// `Σ_j ‖B_j‖₂` over width-`q` blocks (the ℓ2,1 norm of Eq. 20); `q = 1`
+/// takes the exact scalar ℓ1 path ([`primal::l1_norm`]).
+pub fn l21_norm_blocks(beta: &[f64], q: usize) -> f64 {
+    if q == 1 {
+        return primal::l1_norm(beta);
+    }
+    beta.chunks_exact(q).map(crate::util::linalg::norm).sum()
+}
+
+/// Block primal `P(B) = ½‖R‖_F² + λ Σ_j ‖B_j‖₂` from a maintained
+/// residual; `q = 1` is exactly [`primal::primal_from_residual`].
+pub fn primal_from_residual_blocks(r: &[f64], beta: &[f64], q: usize, lambda: f64) -> f64 {
+    if q == 1 {
+        return primal::primal_from_residual(r, beta, lambda);
+    }
+    0.5 * crate::util::linalg::dot(r, r) + lambda * l21_norm_blocks(beta, q)
+}
+
+/// `out = Y − XB` (lane-major q×n), the block analogue of
+/// [`primal::residual`] (which it calls exactly when q = 1): accumulate
+/// `XB` with the multi-RHS axpy, then subtract from `Y` — the same
+/// matvec-then-subtract sequence as the scalar path.
+pub fn residual_blocks<D: DesignOps>(
+    x: &D,
+    y: &[f64],
+    q: usize,
+    lanes: &[usize],
+    beta: &[f64],
+    out: &mut [f64],
+) {
+    if q == 1 {
+        primal::residual(x, y, beta, out);
+        return;
+    }
+    let n = x.n();
+    let p = x.p();
+    assert_eq!(beta.len(), p * q);
+    assert_eq!(y.len(), q * n);
+    assert_eq!(out.len(), q * n);
+    out.fill(0.0);
+    for j in 0..p {
+        let bj = &beta[j * q..(j + 1) * q];
+        if bj.iter().any(|&v| v != 0.0) {
+            x.col_axpy_lanes(j, bj, out, n, lanes);
+        }
+    }
+    for i in 0..y.len() {
+        out[i] = y[i] - out[i];
+    }
+}
+
+/// Row support of a p×q block matrix: rows with any non-zero entry
+/// (`q = 1`: exactly [`primal::support`]).
+pub fn block_support(beta: &[f64], q: usize) -> Vec<usize> {
+    if q == 1 {
+        return primal::support(beta);
+    }
+    beta.chunks_exact(q)
+        .enumerate()
+        .filter(|(_, b)| b.iter().any(|&v| v != 0.0))
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// Fused block correlation pass: fill `block[j·q .. (j+1)·q] = x_jᵀV`
+/// (V the lane-major q×n matrix `v`, one [`DesignOps::col_dot_lanes`]
+/// per column), `rows[j] = ‖x_jᵀV‖₂`, and return `max_j rows[j]` —
+/// everything the Frobenius dual rescale of Eq. 4 generalized to §7
+/// (`Θ = R / max(λ, max_j ‖x_jᵀR‖₂)`) and the §7 `d_j` pricing need, in
+/// one shard-deterministic pooled pass ([`crate::util::par::par_fill_rows_max`]).
+///
+/// `q = 1` delegates to the scalar fused [`DesignOps::xt_vec_abs_max`],
+/// reproducing the scalar engine's bits exactly (`rows` then holds
+/// `|block[j]|`, which is what the block d-scores consume).
+pub fn xt_rows_max<D: DesignOps>(
+    x: &D,
+    v: &[f64],
+    n: usize,
+    q: usize,
+    lanes: &[usize],
+    block: &mut [f64],
+    rows: &mut [f64],
+) -> f64 {
+    let p = x.p();
+    assert_eq!(v.len(), q * n);
+    assert_eq!(block.len(), p * q);
+    assert_eq!(rows.len(), p);
+    if q == 1 {
+        let m = x.xt_vec_abs_max(v, block);
+        let blk: &[f64] = block;
+        crate::util::par::par_fill_cost(rows, 1, |j| blk[j].abs());
+        return m;
+    }
+    let cost = x.col_cost_hint().saturating_mul(q);
+    crate::util::par::par_fill_rows_max(block, rows, q, cost, |j, slot| {
+        x.col_dot_lanes(j, v, n, lanes, slot);
+        let mut acc = 0.0;
+        for &u in slot.iter() {
+            acc += u * u;
+        }
+        acc.sqrt()
+    })
+}
+
+/// Reusable scratch for [`BlockDualState::update`]: the block analogue
+/// of [`DualScratch`](crate::solvers::DualScratch) — correlation blocks,
+/// their row norms, and the extrapolated dual point, so a block gap
+/// check performs no heap allocation once warm.
+#[derive(Debug, Clone, Default)]
+pub struct BlockDualScratch {
+    /// `XᵀR` for the current residual (p×q row-major blocks).
+    pub xtr: Vec<f64>,
+    /// Row norms `‖x_jᵀR‖₂` (length p).
+    pub xtr_rows: Vec<f64>,
+    /// `XᵀR_accel` for the extrapolated residual (p×q).
+    pub xtr_acc: Vec<f64>,
+    /// Row norms for the extrapolated correlations (length p).
+    pub xtr_acc_rows: Vec<f64>,
+    /// Rescaled extrapolated dual point Θ_accel (lane-major q×n).
+    pub theta_acc: Vec<f64>,
+    /// Extrapolation temporaries (K diff vectors of length q·n, Gram,
+    /// r_accel) — one ring scratch per block solve lane.
+    pub extrap: ExtrapScratch,
+}
+
+impl BlockDualScratch {
+    /// Size the buffers for an (n, q, p) problem, reusing capacity.
+    pub fn prepare(&mut self, n: usize, q: usize, p: usize) {
+        self.xtr.resize(p * q, 0.0);
+        self.xtr_rows.resize(p, 0.0);
+        self.xtr_acc.resize(p * q, 0.0);
+        self.xtr_acc_rows.resize(p, 0.0);
+        self.theta_acc.resize(q * n, 0.0);
+    }
+}
+
+/// Block dual-point machinery: the §7 generalization of
+/// [`DualState`](crate::solvers::DualState). Maintains the residual ring
+/// over the vectorized q·n residuals (Definition 1 applies row-wise, so
+/// extrapolation runs on the flattened matrices), computes Θ_res and
+/// Θ_accel with the Frobenius rescale, and keeps the best dual point
+/// (Eq. 13). `‖Y‖_F²` is cached once per solve — the satellite fix for
+/// the legacy `mt_dual` recomputing it at every gap check.
+#[derive(Debug, Clone)]
+pub struct BlockDualState {
+    pub buffer: ResidualBuffer,
+    /// Best dual point so far (lane-major q×n, feasible).
+    pub theta: Vec<f64>,
+    /// Cached row norms `‖x_jᵀΘ‖₂` for the best point (length p) — what
+    /// block screening and the §7 `d_j` pricing consume. At q = 1 this
+    /// is `|x_jᵀθ|`, the absolute value of the scalar engine's cache.
+    pub xtheta_rows: Vec<f64>,
+    /// D(Θ) for the best point.
+    pub dval: f64,
+    /// Cached `‖Y‖_F²` (`NaN` until the first update after a reset).
+    pub y_norm_sq: f64,
+    /// Use Θ_accel at all.
+    pub extrapolate: bool,
+    /// Keep the best-of {previous, res, accel} (Eq. 13).
+    pub monotone: bool,
+    /// Last choice made.
+    pub last_choice: DualChoice,
+}
+
+impl Default for BlockDualState {
+    fn default() -> Self {
+        BlockDualState {
+            buffer: ResidualBuffer::new(1),
+            theta: Vec::new(),
+            xtheta_rows: Vec::new(),
+            dval: f64::NEG_INFINITY,
+            y_norm_sq: f64::NAN,
+            extrapolate: false,
+            monotone: true,
+            last_choice: DualChoice::Residual,
+        }
+    }
+}
+
+impl BlockDualState {
+    /// Re-initialize for a fresh (n, q, p) solve, reusing capacity.
+    pub fn reset(
+        &mut self,
+        n: usize,
+        q: usize,
+        p: usize,
+        k: usize,
+        extrapolate: bool,
+        monotone: bool,
+    ) {
+        self.buffer.reset(k);
+        self.theta.clear();
+        self.theta.resize(q * n, 0.0);
+        self.xtheta_rows.clear();
+        self.xtheta_rows.resize(p, 0.0);
+        self.dval = f64::NEG_INFINITY;
+        self.y_norm_sq = f64::NAN;
+        self.extrapolate = extrapolate;
+        self.monotone = monotone;
+        self.last_choice = DualChoice::Residual;
+    }
+
+    /// Ingest the current residual (lane-major q×n), refresh Θ, and
+    /// return (D(Θ_res), D(Θ_accel) if computed). Mirrors
+    /// [`DualState::update`](crate::solvers::DualState::update) step for
+    /// step; at q = 1 the arithmetic is identical to it.
+    pub fn update<D: DesignOps>(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        n: usize,
+        q: usize,
+        lanes: &[usize],
+        lambda: f64,
+        r: &[f64],
+        scratch: &mut BlockDualScratch,
+    ) -> (f64, Option<f64>) {
+        self.buffer.push(r);
+        let p = x.p();
+        scratch.prepare(n, q, p);
+        if self.y_norm_sq.is_nan() {
+            self.y_norm_sq = crate::util::linalg::dot(y, y);
+        }
+
+        // Θ_res = R / max(λ, max_j ‖x_jᵀR‖₂): the fused block pass
+        // yields the correlation blocks, their row norms and the max in
+        // one pooled sweep.
+        let denom = lambda
+            .max(xt_rows_max(x, r, n, q, lanes, &mut scratch.xtr, &mut scratch.xtr_rows));
+        let inv = 1.0 / denom;
+        let d_res = {
+            // D(Θ_res) without materializing Θ_res: Θ = R·inv
+            let mut dist_sq = 0.0;
+            for i in 0..y.len() {
+                let d = r[i] * inv - y[i] / lambda;
+                dist_sq += d * d;
+            }
+            0.5 * self.y_norm_sq - 0.5 * lambda * lambda * dist_sq
+        };
+
+        let mut best_val = d_res;
+        let mut best = DualChoice::Residual;
+
+        let mut d_accel_out = None;
+        if self.extrapolate && self.buffer.extrapolate_into(&mut scratch.extrap) {
+            let r_acc = &scratch.extrap.r_accel;
+            let denom_a = lambda.max(xt_rows_max(
+                x,
+                r_acc,
+                n,
+                q,
+                lanes,
+                &mut scratch.xtr_acc,
+                &mut scratch.xtr_acc_rows,
+            ));
+            let inv_a = 1.0 / denom_a;
+            for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
+                *t = v * inv_a;
+            }
+            for v in scratch.xtr_acc_rows.iter_mut() {
+                *v *= inv_a;
+            }
+            let d_acc =
+                dual::dual_objective_cached(y, &scratch.theta_acc, lambda, self.y_norm_sq);
+            d_accel_out = Some(d_acc);
+            if d_acc > best_val {
+                best_val = d_acc;
+                best = DualChoice::Extrapolated;
+            }
+        }
+
+        if self.monotone && self.dval >= best_val {
+            self.last_choice = DualChoice::Previous;
+            return (d_res, d_accel_out);
+        }
+
+        match best {
+            DualChoice::Extrapolated => {
+                self.theta.clear();
+                self.theta.extend_from_slice(&scratch.theta_acc);
+                self.xtheta_rows.clear();
+                self.xtheta_rows.extend_from_slice(&scratch.xtr_acc_rows);
+                self.dval = best_val;
+            }
+            _ => {
+                self.theta.clear();
+                self.theta.extend(r.iter().map(|&v| v * inv));
+                self.xtheta_rows.clear();
+                self.xtheta_rows.extend(scratch.xtr_rows.iter().map(|&v| v * inv));
+                self.dval = d_res;
+            }
+        }
+        self.last_choice = best;
+        (d_res, d_accel_out)
+    }
+}
+
+/// One block epoch's view of the solver state, handed to a
+/// [`BlockStrategy`]. `beta` holds p row-major width-q blocks, `r` the
+/// lane-major q×n residual; `u`/`delta` are q-wide per-column scratch.
+pub struct BlockEpochCtx<'a> {
+    pub n: usize,
+    pub q: usize,
+    pub lambda: f64,
+    /// Identity lane map `[0, 1, …, q−1]` for the multi-RHS kernels.
+    pub lanes: &'a [usize],
+    pub norms_sq: &'a [f64],
+    pub active: &'a [usize],
+    pub beta: &'a mut [f64],
+    pub r: &'a mut [f64],
+    pub u: &'a mut [f64],
+    pub delta: &'a mut [f64],
+}
+
+/// A block solver strategy: one primal epoch over width-q blocks — the
+/// block analogue of [`Strategy`](crate::solvers::engine::Strategy).
+pub trait BlockStrategy<D: DesignOps> {
+    /// Run one primal epoch, updating `ctx.beta` and `ctx.r` in place.
+    fn epoch(&mut self, x: &D, ctx: &mut BlockEpochCtx<'_>);
+}
+
+/// Cyclic block coordinate descent (Eq. 21: `B_j ← BST(B_j + x_jᵀR/‖x_j‖²,
+/// λ/‖x_j‖²)`): per column, one [`DesignOps::col_dot_lanes`] computes the
+/// q correlations with the column loaded once, the group soft-threshold
+/// updates the block, and one [`DesignOps::col_axpy_lanes`] writes all q
+/// residual updates back. At q = 1 this is exactly the scalar
+/// [`CdStrategy`](crate::solvers::engine::CdStrategy) epoch.
+pub struct BlockCdStrategy;
+
+impl<D: DesignOps> BlockStrategy<D> for BlockCdStrategy {
+    fn epoch(&mut self, x: &D, c: &mut BlockEpochCtx<'_>) {
+        let q = c.q;
+        if q == 1 {
+            // Exact scalar Algorithm-1 epoch (engine::CdStrategy).
+            for &j in c.active {
+                let nrm = c.norms_sq[j];
+                let g = x.col_dot(j, c.r);
+                let old = c.beta[j];
+                let new = soft_threshold(old + g / nrm, c.lambda / nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, c.r);
+                    c.beta[j] = new;
+                }
+            }
+            return;
+        }
+        for &j in c.active {
+            let nrm = c.norms_sq[j];
+            // u = B_j + x_jᵀR / ‖x_j‖² (one multi-RHS sweep of column j)
+            x.col_dot_lanes(j, c.r, c.n, c.lanes, c.u);
+            let base = j * q;
+            for t in 0..q {
+                c.u[t] = c.beta[base + t] + c.u[t] / nrm;
+            }
+            block_soft_threshold(c.u, c.lambda / nrm);
+            let mut any_update = false;
+            for t in 0..q {
+                let d = c.beta[base + t] - c.u[t];
+                c.delta[t] = d;
+                any_update |= d != 0.0;
+            }
+            if any_update {
+                x.col_axpy_lanes(j, c.delta, c.r, c.n, c.lanes);
+                c.beta[base..base + q].copy_from_slice(c.u);
+            }
+        }
+    }
+}
+
+/// Reusable block solver state: the width-q generalization of the engine
+/// [`Workspace`](crate::solvers::engine::Workspace). One block workspace
+/// serves any number of sequential solves (different λ, q, working sets);
+/// buffers are resized — never reallocated once warm. The outer
+/// working-set loop (Multi-Task CELER, [`crate::multitask::solver`])
+/// keeps its dual candidates and pricing buffers here too, and nests an
+/// `inner` block workspace for its subproblem solves on zero-copy
+/// [`DesignView`](crate::data::view::DesignView)s.
+#[derive(Default)]
+pub struct BlockWorkspace {
+    /// Block width of the most recent run.
+    pub q: usize,
+    /// Primal iterate: p row-major width-q blocks.
+    pub beta: Vec<f64>,
+    /// Maintained residual (lane-major q×n).
+    pub r: Vec<f64>,
+    /// Check-time residual copy.
+    pub r_check: Vec<f64>,
+    /// Cached `‖x_j‖²` for the current design.
+    pub norms_sq: Vec<f64>,
+    /// Cached `‖x_j‖` (screening / pricing use plain norms).
+    pub col_norms: Vec<f64>,
+    /// Engine-maintained active set.
+    pub active: Vec<usize>,
+    /// Identity lane map `[0, …, q−1]` for the multi-RHS kernels.
+    pub lanes: Vec<usize>,
+    /// Block dual machinery (Θ, row norms, extrapolation ring).
+    pub dual: BlockDualState,
+    /// Gap-check scratch (XᵀR blocks, row norms, Θ_accel).
+    pub scratch: BlockDualScratch,
+    /// Dynamic Gap Safe screening state (block d-scores).
+    pub screening: ScreeningState,
+    /// q-wide CD scratch: the candidate block u.
+    pub u: Vec<f64>,
+    /// q-wide CD scratch: per-task coefficient deltas.
+    pub delta: Vec<f64>,
+    /// Outer-loop (MT CELER) dual candidates, lane-major q×n each.
+    pub theta: Vec<f64>,
+    pub theta_inner: Vec<f64>,
+    pub theta_res: Vec<f64>,
+    /// Outer-loop cached pricing row norms `‖x_jᵀΘ‖₂`.
+    pub xtheta_rows: Vec<f64>,
+    pub xtheta_inner_rows: Vec<f64>,
+    pub d_scores: Vec<f64>,
+    /// Subproblem warm-start blocks (|W_t|×q).
+    pub beta_ws: Vec<f64>,
+    /// Lane-major transposition of the caller's row-major Y.
+    pub y_lanes: Vec<f64>,
+    /// Nested workspace for inner (working-set) solves.
+    pub inner: Option<Box<BlockWorkspace>>,
+}
+
+impl BlockWorkspace {
+    pub fn new() -> Self {
+        BlockWorkspace::default()
+    }
+
+    /// Initialize the primal state for a width-q solve on `x`: cached
+    /// column norms, blocks from `beta0` (zeros when `None`), and the
+    /// residual `R = Y − XB`. The block analogue of
+    /// [`Workspace::init_primal`](crate::solvers::engine::Workspace::init_primal).
+    pub fn init_primal<D: DesignOps>(&mut self, x: &D, y: &[f64], q: usize, beta0: Option<&[f64]>) {
+        let n = x.n();
+        let p = x.p();
+        assert!(q >= 1, "block width q must be >= 1");
+        assert_eq!(y.len(), q * n, "y must be lane-major q×n");
+        self.q = q;
+        self.lanes.clear();
+        self.lanes.extend(0..q);
+        engine::fill_norm_caches(x, &mut self.norms_sq, &mut self.col_norms);
+        self.beta.resize(p * q, 0.0);
+        match beta0 {
+            Some(b) => {
+                assert_eq!(b.len(), p * q, "warm start must be p×q blocks");
+                self.beta.copy_from_slice(b);
+            }
+            None => self.beta.fill(0.0),
+        }
+        self.r.resize(q * n, 0.0);
+        residual_blocks(x, y, q, &self.lanes, &self.beta, &mut self.r);
+        self.u.resize(q, 0.0);
+        self.delta.resize(q, 0.0);
+    }
+
+    /// Take the nested inner workspace (creating it on first use); hand
+    /// it back via [`BlockWorkspace::put_inner`].
+    pub fn take_inner(&mut self) -> Box<BlockWorkspace> {
+        self.inner.take().unwrap_or_default()
+    }
+
+    /// Return the nested inner workspace after an inner solve.
+    pub fn put_inner(&mut self, inner: Box<BlockWorkspace>) {
+        self.inner = Some(inner);
+    }
+}
+
+/// Run the block engine: `strategy` epochs over `x` until the duality
+/// gap drops below `cfg.tol` or `cfg.max_epochs` is reached. The
+/// solution is left in `ws` (blocks in `ws.beta`, lane-major residual in
+/// `ws.r`, dual point in `ws.dual.theta`). Mirrors [`engine::solve`]
+/// step for step; only [`StopRule::DualityGap`] is supported (a weighted
+/// primal-decrease block rule is GLM future work, see ROADMAP).
+pub fn solve_blocks<D: DesignOps, S: BlockStrategy<D>>(
+    x: &D,
+    y: &[f64],
+    q: usize,
+    lambda: f64,
+    init: Init<'_>,
+    active0: Option<&[usize]>,
+    cfg: &EngineConfig,
+    ws: &mut BlockWorkspace,
+    strategy: &mut S,
+) -> EngineOutcome {
+    let n = x.n();
+    let p = x.p();
+    assert_eq!(y.len(), q * n, "y must be lane-major q×n");
+    assert!(
+        matches!(cfg.stop, StopRule::DualityGap),
+        "the block engine supports only StopRule::DualityGap"
+    );
+    let start = Instant::now();
+    let beta0 = match init {
+        Init::Zeros => None,
+        Init::Warm(b) => Some(b),
+        Init::Resume => panic!("Init::Resume is not supported by the block engine"),
+    };
+
+    // ---- buffers (capacity reused across runs) ----
+    ws.init_primal(x, y, q, beta0);
+    ws.dual.reset(n, q, p, cfg.k.max(1), cfg.extrapolate, cfg.best_dual);
+    ws.scratch.prepare(n, q, p);
+    ws.screening.reset_all_active(p);
+    ws.r_check.resize(q * n, 0.0);
+
+    // ---- active set (same construction as the scalar engine) ----
+    ws.active.clear();
+    match active0 {
+        Some(a) => {
+            let norms = &ws.norms_sq;
+            ws.active.extend(a.iter().copied().filter(|&j| norms[j] > 0.0));
+        }
+        None => {
+            let norms = &ws.norms_sq;
+            ws.active.extend((0..p).filter(|&j| norms[j] > 0.0));
+        }
+    }
+
+    let mut trace: Vec<GapCheck> = Vec::new();
+    let mut gap = f64::INFINITY;
+    let mut epochs = 0usize;
+    let mut converged = false;
+
+    for epoch in 1..=cfg.max_epochs {
+        epochs = epoch;
+        // ---- one primal block epoch ----
+        {
+            let BlockWorkspace { beta, r, active, norms_sq, lanes, u, delta, .. } = ws;
+            let mut ctx = BlockEpochCtx {
+                n,
+                q,
+                lambda,
+                lanes: lanes.as_slice(),
+                norms_sq: norms_sq.as_slice(),
+                active: active.as_slice(),
+                beta: beta.as_mut_slice(),
+                r: r.as_mut_slice(),
+                u: u.as_mut_slice(),
+                delta: delta.as_mut_slice(),
+            };
+            strategy.epoch(x, &mut ctx);
+        }
+
+        if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
+            ws.r_check.copy_from_slice(&ws.r);
+            let (d_res, d_accel) =
+                ws.dual.update(x, y, n, q, &ws.lanes, lambda, &ws.r_check, &mut ws.scratch);
+            let p_val = primal_from_residual_blocks(&ws.r_check, &ws.beta, q, lambda);
+            gap = p_val - ws.dual.dval;
+            // Screen only while unconverged (same invariant as the
+            // scalar engine: the reported (B, gap) pair is the one that
+            // passed the stopping test).
+            if cfg.screen && gap > cfg.tol {
+                ws.screening.screen_block(
+                    x,
+                    &ws.dual.xtheta_rows,
+                    &ws.col_norms,
+                    gap,
+                    lambda,
+                    n,
+                    q,
+                    &ws.lanes,
+                    &mut ws.beta,
+                    &mut ws.r,
+                );
+                let screening = &ws.screening;
+                ws.active.retain(|&j| !screening.is_screened(j));
+            }
+            if cfg.trace {
+                trace.push(GapCheck {
+                    epoch,
+                    primal: p_val,
+                    dual_res: d_res,
+                    dual_accel: d_accel,
+                    gap,
+                    n_screened: ws.screening.n_screened(),
+                    seconds: start.elapsed().as_secs_f64(),
+                });
+            }
+            if gap <= cfg.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    EngineOutcome { gap, epochs, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csc::CscMatrix;
+    use crate::data::dense::DenseMatrix;
+    use crate::data::design::DesignMatrix;
+    use crate::solvers::engine::{solve, CdStrategy, Workspace};
+    use crate::util::rng::Rng;
+
+    fn engine_cfg(tol: f64, screen: bool) -> EngineConfig {
+        EngineConfig {
+            tol,
+            max_epochs: 10_000,
+            gap_freq: 10,
+            k: 5,
+            extrapolate: true,
+            best_dual: true,
+            screen,
+            trace: false,
+            stop: StopRule::DualityGap,
+        }
+    }
+
+    fn random_block_problem(
+        seed: u64,
+        n: usize,
+        p: usize,
+        q: usize,
+        density: f64,
+    ) -> (DesignMatrix, DesignMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0; n * p];
+        for v in data.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.normal();
+            }
+        }
+        let d = DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data.clone()));
+        let s = DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &data));
+        let y: Vec<f64> = (0..q * n).map(|_| rng.normal()).collect();
+        (d, s, y)
+    }
+
+    #[test]
+    fn helpers_reduce_to_scalar_at_q1() {
+        let beta = [1.0, -2.0, 0.0, 0.5];
+        assert_eq!(l21_norm_blocks(&beta, 1), primal::l1_norm(&beta));
+        let r = [0.5, -0.25, 4.0];
+        assert_eq!(
+            primal_from_residual_blocks(&r, &beta, 1, 0.3).to_bits(),
+            primal::primal_from_residual(&r, &beta, 0.3).to_bits()
+        );
+        assert_eq!(block_support(&beta, 1), primal::support(&beta));
+    }
+
+    #[test]
+    fn residual_blocks_matches_per_task() {
+        let (d, s, y) = random_block_problem(10, 9, 7, 3, 0.6);
+        let mut rng = Rng::new(4);
+        let beta: Vec<f64> = (0..7 * 3).map(|_| rng.normal()).collect();
+        let lanes: Vec<usize> = (0..3).collect();
+        for x in [&d, &s] {
+            let mut out = vec![0.0; 3 * 9];
+            residual_blocks(x, &y, 3, &lanes, &beta, &mut out);
+            // per-task oracle: r_t = y_t − X β_{·t}
+            for t in 0..3 {
+                let bt: Vec<f64> = (0..7).map(|j| beta[j * 3 + t]).collect();
+                let mut rt = vec![0.0; 9];
+                primal::residual(x, &y[t * 9..(t + 1) * 9], &bt, &mut rt);
+                for i in 0..9 {
+                    assert!((out[t * 9 + i] - rt[i]).abs() < 1e-12, "t={t} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xt_rows_max_matches_oracle() {
+        let (d, s, y) = random_block_problem(11, 12, 10, 4, 0.5);
+        let lanes: Vec<usize> = (0..4).collect();
+        for x in [&d, &s] {
+            let mut block = vec![0.0; 10 * 4];
+            let mut rows = vec![0.0; 10];
+            let m = xt_rows_max(x, &y, 12, 4, &lanes, &mut block, &mut rows);
+            let mut expect_max = 0.0f64;
+            for j in 0..10 {
+                let mut acc = 0.0;
+                for t in 0..4 {
+                    let v = x.col_dot(j, &y[t * 12..(t + 1) * 12]);
+                    assert!((block[j * 4 + t] - v).abs() < 1e-12, "block j={j} t={t}");
+                    acc += v * v;
+                }
+                let nrm = acc.sqrt();
+                assert!((rows[j] - nrm).abs() < 1e-12, "rows j={j}");
+                expect_max = expect_max.max(nrm);
+            }
+            assert!((m - expect_max).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn q1_block_engine_is_bitwise_scalar_engine() {
+        // The tentpole invariant: q = 1 compiles down to exactly the
+        // scalar engine's arithmetic (same kernels, same order).
+        let ds = crate::data::synth::leukemia_mini(90);
+        let lambda = crate::lasso::dual::lambda_max(&ds.x, &ds.y) / 10.0;
+        for screen in [false, true] {
+            let cfg = engine_cfg(1e-9, screen);
+            let mut sws = Workspace::new();
+            let a = solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut sws, &mut CdStrategy);
+            let mut bws = BlockWorkspace::new();
+            let b = solve_blocks(
+                &ds.x,
+                &ds.y,
+                1,
+                lambda,
+                Init::Zeros,
+                None,
+                &cfg,
+                &mut bws,
+                &mut BlockCdStrategy,
+            );
+            assert_eq!(a.epochs, b.epochs, "screen={screen}");
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+            assert_eq!(a.converged, b.converged);
+            assert_eq!(sws.beta, bws.beta);
+            assert_eq!(sws.r, bws.r);
+            assert_eq!(sws.dual.theta, bws.dual.theta);
+        }
+    }
+
+    #[test]
+    fn block_solve_certifies_gap_and_row_sparsity() {
+        let (d, _, y) = random_block_problem(12, 16, 24, 3, 1.0);
+        let lanes: Vec<usize> = (0..3).collect();
+        // λ at a fraction of the block λ_max
+        let mut block = vec![0.0; 24 * 3];
+        let mut rows = vec![0.0; 24];
+        let lmax = xt_rows_max(&d, &y, 16, 3, &lanes, &mut block, &mut rows);
+        let lambda = lmax / 4.0;
+        let cfg = engine_cfg(1e-9, true);
+        let mut ws = BlockWorkspace::new();
+        let out =
+            solve_blocks(&d, &y, 3, lambda, Init::Zeros, None, &cfg, &mut ws, &mut BlockCdStrategy);
+        assert!(out.converged, "gap {}", out.gap);
+        // dual feasibility: max_j ‖x_jᵀΘ‖₂ ≤ 1
+        let m = xt_rows_max(&d, &ws.dual.theta, 16, 3, &lanes, &mut block, &mut rows);
+        assert!(m <= 1.0 + 1e-10, "feasible, got {m}");
+        // the gap claim is recomputable
+        let p_val = primal_from_residual_blocks(&ws.r, &ws.beta, 3, lambda);
+        let d_val = dual::dual_objective(&y, &ws.dual.theta, lambda);
+        assert!((p_val - d_val - out.gap).abs() < 1e-10);
+        // row sparsity: each block entirely zero or entirely active
+        for j in 0..24 {
+            let row = &ws.beta[j * 3..(j + 1) * 3];
+            let nz = row.iter().filter(|&&v| v != 0.0).count();
+            assert!(nz == 0 || nz == 3, "row {j}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_block_solves_agree() {
+        let (d, s, y) = random_block_problem(13, 14, 18, 2, 0.4);
+        let lanes: Vec<usize> = (0..2).collect();
+        let mut block = vec![0.0; 18 * 2];
+        let mut rows = vec![0.0; 18];
+        let lmax = xt_rows_max(&d, &y, 14, 2, &lanes, &mut block, &mut rows);
+        let lambda = lmax / 5.0;
+        let cfg = engine_cfg(1e-10, true);
+        let mut wd = BlockWorkspace::new();
+        let od =
+            solve_blocks(&d, &y, 2, lambda, Init::Zeros, None, &cfg, &mut wd, &mut BlockCdStrategy);
+        let mut wsp = BlockWorkspace::new();
+        let os =
+            solve_blocks(&s, &y, 2, lambda, Init::Zeros, None, &cfg, &mut wsp, &mut BlockCdStrategy);
+        assert!(od.converged && os.converged);
+        for (a, b) in wd.beta.iter().zip(&wsp.beta) {
+            assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_equivalent_to_fresh() {
+        let (d, _, y) = random_block_problem(14, 12, 20, 3, 1.0);
+        let lanes: Vec<usize> = (0..3).collect();
+        let mut block = vec![0.0; 20 * 3];
+        let mut rows = vec![0.0; 20];
+        let lmax = xt_rows_max(&d, &y, 12, 3, &lanes, &mut block, &mut rows);
+        let lambda = lmax / 6.0;
+        let cfg = engine_cfg(1e-9, true);
+        let mut fresh = BlockWorkspace::new();
+        let a = solve_blocks(
+            &d,
+            &y,
+            3,
+            lambda,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut fresh,
+            &mut BlockCdStrategy,
+        );
+        let mut reused = BlockWorkspace::new();
+        // dirty with a different λ and width first
+        let y1 = &y[..12];
+        let _ = solve_blocks(
+            &d,
+            y1,
+            1,
+            lambda * 2.0,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut reused,
+            &mut BlockCdStrategy,
+        );
+        let b = solve_blocks(
+            &d,
+            &y,
+            3,
+            lambda,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut reused,
+            &mut BlockCdStrategy,
+        );
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        assert_eq!(fresh.beta, reused.beta);
+        assert_eq!(fresh.r, reused.r);
+        assert_eq!(fresh.dual.theta, reused.dual.theta);
+    }
+}

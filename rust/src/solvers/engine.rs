@@ -213,6 +213,11 @@ pub struct Workspace {
     /// and reused — so a coordinator worker thread carries both the
     /// sequential and the batched engine state in one place.
     pub batch: Option<Box<crate::solvers::batch::BatchWorkspace>>,
+    /// Block-coefficient workspace for Multi-Task solves (see
+    /// [`crate::solvers::block`]), allocated on the first MT run and
+    /// reused — a coordinator worker or λ-path driver carries the
+    /// scalar, batched and block engine state in one place.
+    pub mt: Option<Box<crate::solvers::block::BlockWorkspace>>,
 }
 
 /// Fill the cached `‖x_j‖²` / `‖x_j‖` vectors for a design, reusing the
@@ -282,6 +287,17 @@ impl Workspace {
     /// Return the batched lane workspace after a batched path run.
     pub fn put_batch(&mut self, batch: Box<crate::solvers::batch::BatchWorkspace>) {
         self.batch = Some(batch);
+    }
+
+    /// Take the block-coefficient (Multi-Task) workspace, creating it on
+    /// first use; hand it back via [`Workspace::put_mt`].
+    pub fn take_mt(&mut self) -> Box<crate::solvers::block::BlockWorkspace> {
+        self.mt.take().unwrap_or_default()
+    }
+
+    /// Return the block-coefficient workspace after a Multi-Task run.
+    pub fn put_mt(&mut self, mt: Box<crate::solvers::block::BlockWorkspace>) {
+        self.mt = Some(mt);
     }
 
     /// Clone the workspace's solution out into a [`SolveResult`].

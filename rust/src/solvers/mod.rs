@@ -7,6 +7,7 @@
 
 pub mod batch;
 pub mod blitz;
+pub mod block;
 pub mod cd;
 pub mod celer;
 pub mod dykstra;
@@ -111,6 +112,11 @@ pub struct DualState {
     pub xtheta: Vec<f64>,
     /// D(θ) for the best point.
     pub dval: f64,
+    /// Cached `‖y‖²` for the current solve (`NaN` until the first
+    /// [`DualState::update`] after a reset). `y` never changes within a
+    /// solve, so every dual evaluation of the solve reuses this instead
+    /// of re-running an O(n) pass per gap check.
+    pub y_norm_sq: f64,
     /// Use θ_accel at all.
     pub extrapolate: bool,
     /// Keep the best-of {previous, res, accel} (Eq. 13). When false the
@@ -127,6 +133,7 @@ impl Default for DualState {
             theta: Vec::new(),
             xtheta: Vec::new(),
             dval: f64::NEG_INFINITY,
+            y_norm_sq: f64::NAN,
             extrapolate: false,
             monotone: true,
             last_choice: DualChoice::Residual,
@@ -149,6 +156,7 @@ impl DualState {
         self.xtheta.clear();
         self.xtheta.resize(p, 0.0);
         self.dval = f64::NEG_INFINITY;
+        self.y_norm_sq = f64::NAN;
         self.extrapolate = extrapolate;
         self.monotone = monotone;
         self.last_choice = DualChoice::Residual;
@@ -171,6 +179,9 @@ impl DualState {
         let n = y.len();
         let p = x.p();
         scratch.xtr.resize(p, 0.0);
+        if self.y_norm_sq.is_nan() {
+            self.y_norm_sq = crate::util::linalg::dot(y, y);
+        }
 
         // θ_res = r / max(λ, ‖Xᵀr‖_∞); the fused kernel yields Xᵀr and
         // its norm in one sharded pass (no second serial p-scan).
@@ -183,7 +194,7 @@ impl DualState {
                 let d = r[i] * inv - y[i] / lambda;
                 dist_sq += d * d;
             }
-            0.5 * crate::util::linalg::dot(y, y) - 0.5 * lambda * lambda * dist_sq
+            0.5 * self.y_norm_sq - 0.5 * lambda * lambda * dist_sq
         };
 
         let mut best_val = d_res;
@@ -205,7 +216,8 @@ impl DualState {
             for v in scratch.xtr_acc.iter_mut() {
                 *v *= inv_a;
             }
-            let d_acc = dual::dual_objective(y, &scratch.theta_acc, lambda);
+            let d_acc =
+                dual::dual_objective_cached(y, &scratch.theta_acc, lambda, self.y_norm_sq);
             d_accel_out = Some(d_acc);
             if d_acc > best_val {
                 best_val = d_acc;

@@ -17,6 +17,8 @@
 
 use crate::data::design::DesignMatrix;
 use crate::lasso::dual;
+use crate::multitask::solver::{mt_celer_solve_ws, MtConfig};
+use crate::multitask::TaskMatrix;
 use crate::solvers::batch::{self, BatchCdStrategy, BatchConfig};
 use crate::solvers::blitz::{blitz_solve_ws, BlitzConfig};
 use crate::solvers::cd::{cd_solve_ws, CdConfig};
@@ -52,6 +54,11 @@ pub enum PathSolver {
     /// Batched multi-λ CD: B grid cells solved concurrently over shared
     /// design sweeps (see [`crate::solvers::batch`]).
     BatchedCd(BatchConfig),
+    /// Multi-Task CELER on the block-coefficient engine
+    /// ([`crate::solvers::block`]), run at q = 1 on the scalar grid —
+    /// the block engine's q = 1 path is the scalar path, so this slots
+    /// into any grid job; true q > 1 grids go through [`run_mt_path`].
+    MultiTask(MtConfig),
 }
 
 impl PathSolver {
@@ -70,6 +77,7 @@ impl PathSolver {
                 }
             }
             PathSolver::BatchedCd(_) => "cd-batched",
+            PathSolver::MultiTask(_) => "celer-mt",
         }
     }
 
@@ -99,6 +107,9 @@ impl PathSolver {
             }),
             "cd-batched" | "batched" => {
                 PathSolver::BatchedCd(BatchConfig { tol, ..Default::default() })
+            }
+            "celer-mt" | "mt-celer" => {
+                PathSolver::MultiTask(MtConfig { tol, ..Default::default() })
             }
             _ => return None,
         })
@@ -200,6 +211,13 @@ pub fn run_path_with_workspace(
                 let out = cd_solve_ws(x, y, lambda, Some(&beta), cfg, ws);
                 (out.beta, out.gap, out.epochs, out.converged)
             }
+            PathSolver::MultiTask(cfg) => {
+                // q = 1 block solve: same problem, block-engine schedule.
+                let mut mtws = ws.take_mt();
+                let out = mt_celer_solve_ws(x, y, 1, lambda, Some(&beta), cfg, &mut mtws);
+                ws.put_mt(mtws);
+                (out.b.data, out.gap, out.epochs, out.converged)
+            }
             PathSolver::BatchedCd(_) => unreachable!("handled by run_path_batched"),
         };
         beta = new_beta;
@@ -266,6 +284,86 @@ pub fn run_path_batched(
         steps,
         total_seconds: start.elapsed().as_secs_f64(),
     }
+}
+
+/// One solved grid point of a Multi-Task λ path (paper §7).
+#[derive(Debug, Clone)]
+pub struct MtPathStep {
+    pub lambda: f64,
+    pub seconds: f64,
+    /// Total inner (working-set subproblem) epochs.
+    pub epochs: usize,
+    pub gap: f64,
+    /// Row-support size `|{j : B_j ≠ 0}|`.
+    pub support_size: usize,
+    pub converged: bool,
+    /// Solution blocks, kept when `store_b` was requested.
+    pub b: Option<TaskMatrix>,
+}
+
+/// A full Multi-Task path result.
+#[derive(Debug, Clone)]
+pub struct MtPathResult {
+    pub steps: Vec<MtPathStep>,
+    pub total_seconds: f64,
+}
+
+impl MtPathResult {
+    pub fn all_converged(&self) -> bool {
+        self.steps.iter().all(|s| s.converged)
+    }
+}
+
+/// Run a Multi-Task Lasso λ path with warm starts: B̂(λ_i) seeds
+/// λ_{i+1}, exactly the sequential warm-start chain of [`run_path`]
+/// lifted to width-q blocks. `y` is row-major n×q.
+pub fn run_mt_path(
+    x: &DesignMatrix,
+    y: &[f64],
+    q: usize,
+    grid: &[f64],
+    cfg: &MtConfig,
+    store_b: bool,
+) -> MtPathResult {
+    let mut ws = Workspace::new();
+    run_mt_path_with_workspace(x, y, q, grid, cfg, store_b, &mut ws)
+}
+
+/// [`run_mt_path`] on a caller-provided [`Workspace`]: the block
+/// workspace lives in `ws.mt` (like `ws.batch` for batched runs), so a
+/// coordinator worker thread reuses one set of block buffers — B, R,
+/// XᵀR blocks, extrapolation ring, the nested inner workspace — across
+/// every MT path job it claims. No per-λ reallocation once warm.
+pub fn run_mt_path_with_workspace(
+    x: &DesignMatrix,
+    y: &[f64],
+    q: usize,
+    grid: &[f64],
+    cfg: &MtConfig,
+    store_b: bool,
+    ws: &mut Workspace,
+) -> MtPathResult {
+    let start = Instant::now();
+    let p = crate::data::design::DesignOps::p(x);
+    let mut mtws = ws.take_mt();
+    let mut b = vec![0.0; p * q];
+    let mut steps = Vec::with_capacity(grid.len());
+    for &lambda in grid {
+        let t0 = Instant::now();
+        let out = mt_celer_solve_ws(x, y, q, lambda, Some(&b), cfg, &mut mtws);
+        b.copy_from_slice(&out.b.data);
+        steps.push(MtPathStep {
+            lambda,
+            seconds: t0.elapsed().as_secs_f64(),
+            epochs: out.epochs,
+            gap: out.gap,
+            support_size: out.b.support().len(),
+            converged: out.converged,
+            b: if store_b { Some(out.b) } else { None },
+        });
+    }
+    ws.put_mt(mtws);
+    MtPathResult { steps, total_seconds: start.elapsed().as_secs_f64() }
 }
 
 #[cfg(test)]
@@ -359,5 +457,60 @@ mod tests {
         let s = PathSolver::by_name("cd-batched", 1e-6).unwrap();
         assert_eq!(s.name(), "cd-batched");
         assert_eq!(PathSolver::by_name("batched", 1e-6).unwrap().name(), "cd-batched");
+    }
+
+    #[test]
+    fn mt_solver_name_roundtrip_and_grid_agreement() {
+        // "celer-mt" runs q = 1 block solves inside the ordinary grid
+        // machinery and must certify the same objectives as the scalar
+        // solvers.
+        let s = PathSolver::by_name("celer-mt", 1e-6).unwrap();
+        assert_eq!(s.name(), "celer-mt");
+        assert_eq!(PathSolver::by_name("mt-celer", 1e-6).unwrap().name(), "celer-mt");
+        let ds = synth::leukemia_mini(53);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.05, 5);
+        let tol = 1e-9;
+        let mt =
+            run_path(&ds.x, &ds.y, &grid, &PathSolver::by_name("celer-mt", tol).unwrap(), true);
+        let sc = run_path(&ds.x, &ds.y, &grid, &PathSolver::by_name("celer", tol).unwrap(), true);
+        assert!(mt.all_converged() && sc.all_converged());
+        for (i, (a, b)) in mt.steps.iter().zip(&sc.steps).enumerate() {
+            let pa = crate::lasso::primal::primal(&ds.x, &ds.y, a.beta.as_ref().unwrap(), grid[i]);
+            let pb = crate::lasso::primal::primal(&ds.x, &ds.y, b.beta.as_ref().unwrap(), grid[i]);
+            assert!((pa - pb).abs() <= 2.0 * tol, "λ#{i}: {pa} vs {pb}");
+            assert_eq!(a.support_size, b.support_size, "λ#{i}");
+        }
+    }
+
+    #[test]
+    fn mt_path_converges_and_reuses_workspace() {
+        // True q > 1 path: warm-started, gap-certified at every λ, and
+        // bit-identical whether the workspace is fresh or reused.
+        use crate::multitask::solver::{mt_lambda_max, MtConfig};
+        use crate::util::rng::Rng;
+        let ds = synth::leukemia_mini(54);
+        let (n, q) = (crate::data::design::DesignOps::n(&ds.x), 3);
+        let mut rng = Rng::new(11);
+        let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+        let lmax = mt_lambda_max(&ds.x, &y, q);
+        let grid = lambda_grid(lmax, 0.1, 5);
+        let cfg = MtConfig { tol: 1e-8, ..Default::default() };
+        let fresh = run_mt_path(&ds.x, &y, q, &grid, &cfg, true);
+        assert!(fresh.all_converged());
+        assert_eq!(fresh.steps.len(), grid.len());
+        // support grows down the path
+        let first = fresh.steps.first().unwrap().support_size;
+        let last = fresh.steps.last().unwrap().support_size;
+        assert!(last >= first, "support non-shrinking: {first} -> {last}");
+        // dirty workspace → identical trajectory
+        let mut ws = Workspace::new();
+        let _ = run_mt_path_with_workspace(&ds.x, &y, q, &grid[..2], &cfg, false, &mut ws);
+        let reused = run_mt_path_with_workspace(&ds.x, &y, q, &grid, &cfg, true, &mut ws);
+        for (a, b) in fresh.steps.iter().zip(&reused.steps) {
+            assert_eq!(a.epochs, b.epochs);
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+            assert_eq!(a.b.as_ref().unwrap().data, b.b.as_ref().unwrap().data);
+        }
     }
 }

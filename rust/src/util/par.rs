@@ -156,6 +156,62 @@ where
     partials.iter().fold(0.0f64, |a, &b| a.max(b))
 }
 
+/// Block-row variant of [`par_fill_abs_max`], for width-`q` coefficient
+/// blocks (Multi-Task Lasso, paper §7): for every row `j`, `f(j, slot)`
+/// fills the `q`-wide slot `block[j·q .. (j+1)·q]` (e.g. with `x_jᵀR`
+/// via [`DesignOps::col_dot_lanes`](crate::data::design::DesignOps::col_dot_lanes))
+/// and returns the row's norm, which lands in `rows[j]`; the call
+/// returns `max_j |rows[j]|` folded in fixed shard order — deterministic
+/// for any thread count, exactly like the scalar fused fill. This is the
+/// shape of the block dual rescale (Eq. 4 with `‖x_jᵀR‖₂` in place of
+/// `|x_jᵀr|`): the correlation block, the pricing row norms and their
+/// max in one sharded pass.
+pub fn par_fill_rows_max<F>(
+    block: &mut [f64],
+    rows: &mut [f64],
+    q: usize,
+    per_item_cost: usize,
+    f: F,
+) -> f64
+where
+    F: Fn(usize, &mut [f64]) -> f64 + Sync,
+{
+    assert!(q >= 1, "block width q must be >= 1");
+    let p = rows.len();
+    assert_eq!(block.len(), p * q, "block must be p×q");
+    if p == 0 {
+        return 0.0;
+    }
+    if !parallel_shards(p.saturating_mul(per_item_cost.max(1))) {
+        let mut m = 0.0f64;
+        for j in 0..p {
+            let v = f(j, &mut block[j * q..(j + 1) * q]);
+            rows[j] = v;
+            m = m.max(v.abs());
+        }
+        return m;
+    }
+    let mut partials = [0.0f64; SHARDS];
+    let block_ptr = SyncPtr(block.as_mut_ptr());
+    let rows_ptr = SyncPtr(rows.as_mut_ptr());
+    let part_ptr = SyncPtr(partials.as_mut_ptr());
+    pool::global().run(SHARDS, &|s| {
+        let (lo, hi) = shard_bounds(p, s);
+        let mut m = 0.0f64;
+        for j in lo..hi {
+            // SAFETY: shard row ranges are disjoint, so the q-wide block
+            // slots and the rows entries have one writer each.
+            let slot = unsafe { std::slice::from_raw_parts_mut(block_ptr.0.add(j * q), q) };
+            let v = f(j, slot);
+            unsafe { *rows_ptr.0.add(j) = v };
+            m = m.max(v.abs());
+        }
+        // SAFETY: each shard writes only its own partial slot.
+        unsafe { *part_ptr.0.add(s) = m };
+    });
+    partials.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
 /// `max_i f(i)` over `0..n` (−∞ for n = 0); pooled when the work is
 /// large, deterministic either way (fixed shard fold).
 pub fn par_max_cost<F>(n: usize, per_item_cost: usize, f: F) -> f64
@@ -317,6 +373,48 @@ mod tests {
             let expect = plain.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
             assert_eq!(m.to_bits(), expect.to_bits());
         }
+    }
+
+    #[test]
+    fn fill_rows_max_matches_serial_and_scalar() {
+        // Block fill (q = 3): serial vs pooled bit-identical, rows hold
+        // the per-row norms, and the returned max folds in shard order.
+        let q = 3;
+        for p in [0usize, 5, 1000] {
+            let f = |j: usize, slot: &mut [f64]| {
+                for (t, s) in slot.iter_mut().enumerate() {
+                    *s = (j as f64 - 2.0) * 0.5 + t as f64;
+                }
+                slot.iter().map(|v| v * v).sum::<f64>().sqrt()
+            };
+            let (mut b1, mut r1) = (vec![0.0; p * q], vec![0.0; p]);
+            let (mut b2, mut r2) = (vec![0.0; p * q], vec![0.0; p]);
+            let m1 = par_fill_rows_max(&mut b1, &mut r1, q, 1, f);
+            let m2 = par_fill_rows_max(&mut b2, &mut r2, q, PAR_WORK_THRESHOLD, f);
+            assert_eq!(b1, b2, "p={p}");
+            assert_eq!(r1, r2);
+            assert_eq!(m1.to_bits(), m2.to_bits());
+            let serial = run_serial(|| {
+                let (mut b, mut r) = (vec![0.0; p * q], vec![0.0; p]);
+                let m = par_fill_rows_max(&mut b, &mut r, q, PAR_WORK_THRESHOLD, f);
+                (b, r, m)
+            });
+            assert_eq!(b2, serial.0);
+            assert_eq!(r2, serial.1);
+            assert_eq!(m2.to_bits(), serial.2.to_bits());
+        }
+        // q = 1 degenerates to the scalar fused fill's results.
+        let p = 64;
+        let g = |j: usize| (j as f64) - 30.0;
+        let (mut blk, mut rows) = (vec![0.0; p], vec![0.0; p]);
+        let m = par_fill_rows_max(&mut blk, &mut rows, 1, 1, |j, slot| {
+            slot[0] = g(j);
+            slot[0].abs()
+        });
+        let mut plain = vec![0.0; p];
+        let expect = par_fill_abs_max(&mut plain, 1, g);
+        assert_eq!(blk, plain);
+        assert_eq!(m.to_bits(), expect.to_bits());
     }
 
     #[test]

@@ -18,6 +18,13 @@
 //! gap-check → dual-rescale → price → build sequence therefore touches
 //! the design exactly once (the fused `xt_vec_abs_max` pass); selection
 //! itself is O(p) on cached scores.
+//!
+//! The machinery is block-width agnostic: the Multi-Task outer loop
+//! (paper §7, [`crate::multitask::solver`]) feeds the same
+//! [`build_working_set`] with the block d-scores
+//! `d_j(Θ) = (1 − ‖x_jᵀΘ‖₂)/‖x_j‖` (row norms in place of `|x_jᵀθ|`,
+//! from the fused block pass of
+//! [`crate::solvers::block::xt_rows_max`]) — scores are scores.
 
 use crate::util::select::k_smallest_indices;
 

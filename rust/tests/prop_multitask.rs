@@ -1,0 +1,533 @@
+//! Property tests for the Multi-Task Lasso port onto the block engine
+//! (paper §7):
+//!
+//! 1. **Legacy equivalence** — the engine-ported `mt_celer_solve` against
+//!    a faithful test-local port of the pre-refactor strided solver
+//!    (row-major kernels, `select_columns` materialization, its own
+//!    gap-check loop): both gap-certified, identical row supports,
+//!    objectives within 2ε — dense and CSC designs.
+//! 2. **q = 1 bit-identity** — the block engine at width 1 is the scalar
+//!    engine, bit for bit (β, r, θ, gap, epochs), dense and sparse,
+//!    screening on and off.
+//! 3. **Workspace-reuse invariance** — an MT λ path is bit-identical on
+//!    a fresh vs. a dirtied workspace.
+//! 4. **Pooled ≡ serial** — MT solves above the parallel work threshold
+//!    are bit-identical under `par::run_serial` (with the CI
+//!    `CELER_NUM_THREADS ∈ {1, 4}` matrix this pins thread invariance).
+//! 5. **View ≡ materialized** — block inner solves on a zero-copy
+//!    `DesignView` match solves on a `select_columns` copy bitwise.
+
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::view::DesignView;
+use celer::multitask::solver::{
+    mt_bcd_solve, mt_celer_solve, mt_lambda_max, mt_primal, MtConfig,
+};
+use celer::multitask::TaskMatrix;
+use celer::solvers::block::{solve_blocks, BlockCdStrategy, BlockWorkspace};
+use celer::solvers::engine::{solve, CdStrategy, EngineConfig, Init, StopRule, Workspace};
+use celer::solvers::path::{lambda_grid, run_mt_path, run_mt_path_with_workspace};
+use celer::util::rng::Rng;
+
+fn engine_cfg(tol: f64, screen: bool) -> EngineConfig {
+    EngineConfig {
+        tol,
+        max_epochs: 20_000,
+        gap_freq: 10,
+        k: 5,
+        extrapolate: true,
+        best_dual: true,
+        screen,
+        trace: false,
+        stop: StopRule::DualityGap,
+    }
+}
+
+/// Random unit-column dense design + row-major n×q targets.
+fn random_mt_dense(seed: u64, n: usize, p: usize, q: usize) -> (DesignMatrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0; n * p];
+    for v in data.iter_mut() {
+        *v = rng.normal();
+    }
+    for j in 0..p {
+        let nrm: f64 = data[j * n..(j + 1) * n].iter().map(|v| v * v).sum::<f64>().sqrt();
+        for v in data[j * n..(j + 1) * n].iter_mut() {
+            *v /= nrm;
+        }
+    }
+    let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+    (
+        DesignMatrix::Dense(celer::data::dense::DenseMatrix::from_col_major(n, p, data)),
+        y,
+    )
+}
+
+/// Random sparse (CSC) design + row-major n×q targets.
+fn random_mt_sparse(
+    seed: u64,
+    n: usize,
+    p: usize,
+    q: usize,
+    density: f64,
+) -> (DesignMatrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0; n * p];
+    for v in data.iter_mut() {
+        if rng.uniform() < density {
+            *v = rng.normal();
+        }
+    }
+    let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+    (
+        DesignMatrix::Sparse(celer::data::csc::CscMatrix::from_dense(n, p, &data)),
+        y,
+    )
+}
+
+/// Faithful port of the pre-refactor Multi-Task solver (the code this PR
+/// replaced): strided row-major kernels over a dense column-major copy,
+/// `select_columns` materialization for every working set, and its own
+/// gap-check / extrapolation loop. Kept here as the independent oracle.
+mod reference {
+    use celer::extrapolation::ResidualBuffer;
+    use celer::multitask::solver::{mt_dual, mt_primal, MtConfig};
+    use celer::multitask::{block_soft_threshold, TaskMatrix};
+    use celer::util::select::k_smallest_indices;
+
+    /// Dense column-major design with the legacy strided kernels.
+    pub struct DenseRef {
+        pub n: usize,
+        pub p: usize,
+        data: Vec<f64>,
+    }
+
+    impl DenseRef {
+        pub fn from_design(x: &celer::data::design::DesignMatrix) -> Self {
+            use celer::data::design::DesignOps;
+            let (n, p) = (x.n(), x.p());
+            let mut data = Vec::new();
+            x.gather_dense(&(0..p).collect::<Vec<_>>(), &mut data);
+            DenseRef { n, p, data }
+        }
+
+        fn col(&self, j: usize) -> &[f64] {
+            &self.data[j * self.n..(j + 1) * self.n]
+        }
+
+        fn col_dot_strided(&self, j: usize, m: &[f64], q: usize, t: usize) -> f64 {
+            let mut acc = 0.0;
+            for (i, &v) in self.col(j).iter().enumerate() {
+                acc += v * m[i * q + t];
+            }
+            acc
+        }
+
+        fn col_axpy_strided(&self, j: usize, alpha: f64, m: &mut [f64], q: usize, t: usize) {
+            let col = self.col(j);
+            for (i, &v) in col.iter().enumerate() {
+                m[i * q + t] += alpha * v;
+            }
+        }
+
+        fn col_norms_sq(&self) -> Vec<f64> {
+            (0..self.p).map(|j| self.col(j).iter().map(|v| v * v).sum()).collect()
+        }
+
+        fn select_columns(&self, cols: &[usize]) -> DenseRef {
+            let mut data = Vec::with_capacity(cols.len() * self.n);
+            for &j in cols {
+                data.extend_from_slice(self.col(j));
+            }
+            DenseRef { n: self.n, p: cols.len(), data }
+        }
+    }
+
+    fn xt_theta_row_norms(x: &DenseRef, theta: &[f64], q: usize, out: &mut [f64]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for t in 0..q {
+                let v = x.col_dot_strided(j, theta, q, t);
+                acc += v * v;
+            }
+            *o = acc.sqrt();
+        }
+    }
+
+    pub struct RefResult {
+        pub b: TaskMatrix,
+        pub r: Vec<f64>,
+        pub theta: Vec<f64>,
+        pub gap: f64,
+        pub converged: bool,
+    }
+
+    /// The legacy cyclic block-CD loop (row-major residual).
+    pub fn bcd_solve(
+        x: &DenseRef,
+        y: &[f64],
+        q: usize,
+        lambda: f64,
+        b0: Option<&TaskMatrix>,
+        cfg: &MtConfig,
+    ) -> RefResult {
+        let (n, p) = (x.n, x.p);
+        assert_eq!(y.len(), n * q);
+        let mut b = b0.cloned().unwrap_or_else(|| TaskMatrix::zeros(p, q));
+        let mut r = y.to_vec();
+        for j in 0..p {
+            for t in 0..q {
+                let v = b.row(j)[t];
+                if v != 0.0 {
+                    x.col_axpy_strided(j, -v, &mut r, q, t);
+                }
+            }
+        }
+        let norms_sq = x.col_norms_sq();
+        let mut buffer = ResidualBuffer::new(cfg.k);
+        let mut best_theta = vec![0.0; n * q];
+        let mut best_dual = f64::NEG_INFINITY;
+        let mut gap = f64::INFINITY;
+        let mut converged = false;
+        let mut row_norms = vec![0.0; p];
+        let mut u = vec![0.0; q];
+
+        for epoch in 1..=cfg.max_epochs {
+            for j in 0..p {
+                let nrm = norms_sq[j];
+                if nrm == 0.0 {
+                    continue;
+                }
+                for t in 0..q {
+                    u[t] = b.row(j)[t] + x.col_dot_strided(j, &r, q, t) / nrm;
+                }
+                block_soft_threshold(&mut u, lambda / nrm);
+                for t in 0..q {
+                    let old = b.row(j)[t];
+                    let delta = u[t] - old;
+                    if delta != 0.0 {
+                        x.col_axpy_strided(j, -delta, &mut r, q, t);
+                        b.row_mut(j)[t] = u[t];
+                    }
+                }
+            }
+            if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
+                buffer.push(&r);
+                let mut cands: Vec<Vec<f64>> = vec![r.clone()];
+                if cfg.extrapolate {
+                    if let Some(acc) = buffer.extrapolate() {
+                        cands.push(acc);
+                    }
+                }
+                for cand in cands {
+                    xt_theta_row_norms(x, &cand, q, &mut row_norms);
+                    let denom = row_norms.iter().fold(lambda, |m, &v| m.max(v));
+                    let theta: Vec<f64> = cand.iter().map(|&v| v / denom).collect();
+                    let d = mt_dual(y, &theta, lambda);
+                    if d > best_dual {
+                        best_dual = d;
+                        best_theta = theta;
+                    }
+                }
+                gap = mt_primal(&r, &b, lambda) - best_dual;
+                if gap <= cfg.tol {
+                    converged = true;
+                    break;
+                }
+            }
+        }
+        RefResult { b, r, theta: best_theta, gap, converged }
+    }
+
+    /// The legacy working-set loop: `select_columns` materialization of
+    /// every `X_{W_t}`, warm-started legacy BCD subproblems.
+    pub fn celer_solve(
+        x: &DenseRef,
+        y: &[f64],
+        q: usize,
+        lambda: f64,
+        cfg: &MtConfig,
+    ) -> RefResult {
+        let (n, p) = (x.n, x.p);
+        let col_norms: Vec<f64> = x.col_norms_sq().iter().map(|v| v.sqrt()).collect();
+        let mut b = TaskMatrix::zeros(p, q);
+        let mut r = y.to_vec();
+        let mut theta = {
+            let mut row_norms = vec![0.0; p];
+            xt_theta_row_norms(x, y, q, &mut row_norms);
+            let lmax = row_norms.iter().fold(0.0f64, |m, &v| m.max(v)).max(f64::MIN_POSITIVE);
+            y.iter().map(|&v| v / lmax).collect::<Vec<f64>>()
+        };
+        let mut gap = f64::INFINITY;
+        let mut converged = false;
+        let mut row_norms = vec![0.0; p];
+        let mut prev_ws_len = 0usize;
+
+        for t_out in 1..=50 {
+            xt_theta_row_norms(x, &r, q, &mut row_norms);
+            let denom = row_norms.iter().fold(lambda, |m, &v| m.max(v));
+            let theta_res: Vec<f64> = r.iter().map(|&v| v / denom).collect();
+            if mt_dual(y, &theta_res, lambda) > mt_dual(y, &theta, lambda) {
+                theta.copy_from_slice(&theta_res);
+            }
+            gap = mt_primal(&r, &b, lambda) - mt_dual(y, &theta, lambda);
+            if gap <= cfg.tol {
+                converged = true;
+                break;
+            }
+
+            xt_theta_row_norms(x, &theta_res, q, &mut row_norms);
+            let mut scores: Vec<f64> = (0..p)
+                .map(|j| {
+                    if col_norms[j] == 0.0 {
+                        f64::MAX
+                    } else {
+                        (1.0 - row_norms[j]) / col_norms[j]
+                    }
+                })
+                .collect();
+            let support = b.support();
+            for &j in &support {
+                scores[j] = -1.0;
+            }
+            let stagnated = t_out >= 2 && prev_ws_len > 0;
+            let pt = if t_out == 1 {
+                100.min(p)
+            } else {
+                (2 * support.len().max(1)).max(if stagnated { prev_ws_len } else { 0 }).min(p)
+            }
+            .max(support.len());
+            let mut ws = k_smallest_indices(&scores, pt);
+            ws.sort_unstable();
+            prev_ws_len = ws.len();
+
+            let x_ws = x.select_columns(&ws);
+            let mut b_ws = TaskMatrix::zeros(ws.len(), q);
+            for (i, &j) in ws.iter().enumerate() {
+                b_ws.row_mut(i).copy_from_slice(b.row(j));
+            }
+            let inner_cfg = MtConfig { tol: 0.3 * gap, ..cfg.clone() };
+            let inner = bcd_solve(&x_ws, y, q, lambda, Some(&b_ws), &inner_cfg);
+            b = TaskMatrix::zeros(p, q);
+            for (i, &j) in ws.iter().enumerate() {
+                b.row_mut(j).copy_from_slice(inner.b.row(i));
+            }
+            r.copy_from_slice(&inner.r);
+            xt_theta_row_norms(x, &inner.theta, q, &mut row_norms);
+            let s = row_norms.iter().fold(1.0f64, |m, &v| m.max(v));
+            let lifted: Vec<f64> = inner.theta.iter().map(|&v| v / s).collect();
+            if mt_dual(y, &lifted, lambda) > mt_dual(y, &theta, lambda) {
+                theta = lifted;
+            }
+        }
+        let _ = n;
+        RefResult { b, r, theta, gap, converged }
+    }
+}
+
+fn check_legacy_equivalence(x: &DesignMatrix, y: &[f64], q: usize, ratio: f64, tol: f64) {
+    let lambda = mt_lambda_max(x, y, q) * ratio;
+    let cfg = MtConfig { tol, ..Default::default() };
+    let new = mt_celer_solve(x, y, q, lambda, &cfg);
+    assert!(new.converged, "engine-ported MT converged, gap {}", new.gap);
+    assert!(new.gap <= tol);
+    let xd = reference::DenseRef::from_design(x);
+    let old = reference::celer_solve(&xd, y, q, lambda, &cfg);
+    assert!(old.converged, "legacy MT converged, gap {}", old.gap);
+    // identical row supports at the certification resolution
+    assert_eq!(new.b.support(), old.b.support(), "row supports");
+    // gap-certified objectives agree within 2ε
+    let p_new = mt_primal(&new.r, &new.b, lambda);
+    let p_old = mt_primal(&old.r, &old.b, lambda);
+    assert!((p_new - p_old).abs() <= 2.0 * tol, "{p_new} vs {p_old}");
+}
+
+#[test]
+fn legacy_equivalence_dense() {
+    let (x, y) = random_mt_dense(100, 24, 64, 3);
+    check_legacy_equivalence(&x, &y, 3, 0.2, 1e-9);
+    check_legacy_equivalence(&x, &y, 3, 0.08, 1e-9);
+}
+
+#[test]
+fn legacy_equivalence_sparse() {
+    let (x, y) = random_mt_sparse(101, 30, 80, 4, 0.3);
+    check_legacy_equivalence(&x, &y, 4, 0.2, 1e-9);
+}
+
+#[test]
+fn legacy_equivalence_bcd() {
+    // The full-design block-CD solver against the legacy strided loop.
+    let (x, y) = random_mt_dense(102, 20, 40, 2);
+    let lambda = mt_lambda_max(&x, &y, 2) / 6.0;
+    let cfg = MtConfig { tol: 1e-10, ..Default::default() };
+    let new = mt_bcd_solve(&x, &y, 2, lambda, None, &cfg);
+    let xd = reference::DenseRef::from_design(&x);
+    let old = reference::bcd_solve(&xd, &y, 2, lambda, None, &cfg);
+    assert!(new.converged && old.converged);
+    assert_eq!(new.b.support(), old.b.support());
+    let (pn, po) = (mt_primal(&new.r, &new.b, lambda), mt_primal(&old.r, &old.b, lambda));
+    assert!((pn - po).abs() <= 2e-10, "{pn} vs {po}");
+}
+
+#[test]
+fn q1_block_engine_bitwise_scalar_engine() {
+    // Width-1 blocks ARE the scalar engine: same kernels, same order,
+    // same bits — dense and sparse, screening on and off.
+    for (ds, tag) in [
+        (celer::data::synth::leukemia_mini(110), "dense"),
+        (celer::data::synth::finance_mini(110), "sparse"),
+    ] {
+        let lambda = celer::lasso::dual::lambda_max(&ds.x, &ds.y) / 10.0;
+        for screen in [false, true] {
+            let cfg = engine_cfg(1e-9, screen);
+            let mut sws = Workspace::new();
+            let a = solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut sws, &mut CdStrategy);
+            let mut bws = BlockWorkspace::new();
+            let b = solve_blocks(
+                &ds.x,
+                &ds.y,
+                1,
+                lambda,
+                Init::Zeros,
+                None,
+                &cfg,
+                &mut bws,
+                &mut BlockCdStrategy,
+            );
+            assert_eq!(a.epochs, b.epochs, "{tag} screen={screen}");
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{tag} screen={screen}");
+            assert_eq!(a.converged, b.converged);
+            assert_eq!(sws.beta, bws.beta, "{tag} screen={screen}: β bits");
+            assert_eq!(sws.r, bws.r, "{tag} screen={screen}: r bits");
+            assert_eq!(sws.dual.theta, bws.dual.theta, "{tag} screen={screen}: θ bits");
+        }
+    }
+}
+
+#[test]
+fn mt_path_workspace_reuse_invariance() {
+    // One warm-started MT λ path, fresh workspace vs. a workspace dirtied
+    // by unrelated solves: bit-identical trajectories, dense and sparse.
+    let cases = [(random_mt_dense(120, 20, 48, 3), 3), (random_mt_sparse(121, 24, 60, 2, 0.35), 2)];
+    for (pair, q) in cases {
+        let (x, y) = pair;
+        let lmax = mt_lambda_max(&x, &y, q);
+        let grid = lambda_grid(lmax, 0.1, 6);
+        let cfg = MtConfig { tol: 1e-8, ..Default::default() };
+        let fresh = run_mt_path(&x, &y, q, &grid, &cfg, true);
+        assert!(fresh.all_converged());
+        let mut ws = Workspace::new();
+        // dirty: a scalar solve plus a truncated MT path at another width
+        let y1: Vec<f64> = y.iter().take(x.n()).copied().collect();
+        let _ = run_mt_path_with_workspace(&x, &y1, 1, &grid[..2], &cfg, false, &mut ws);
+        let reused = run_mt_path_with_workspace(&x, &y, q, &grid, &cfg, true, &mut ws);
+        for (a, b) in fresh.steps.iter().zip(&reused.steps) {
+            assert_eq!(a.epochs, b.epochs);
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+            assert_eq!(a.b.as_ref().unwrap().data, b.b.as_ref().unwrap().data);
+        }
+    }
+}
+
+#[test]
+fn pooled_matches_serial_scope_bitwise() {
+    // MT solves whose pricing scans clear the parallel work threshold
+    // (p = 8192): pooled and serial-scope runs must agree bit for bit.
+    // Under the CI thread matrix (CELER_NUM_THREADS = 1 and 4) this pins
+    // thread-count invariance of the block engine end to end.
+    let ds = celer::data::synth::dense_scan_stress(130);
+    let (n, q) = (ds.x.n(), 4);
+    let mut rng = Rng::new(7);
+    let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+    let lambda = mt_lambda_max(&ds.x, &y, q) / 5.0;
+    let cfg = MtConfig { tol: 1e-6, ..Default::default() };
+    let pooled = mt_celer_solve(&ds.x, &y, q, lambda, &cfg);
+    let serial = celer::util::par::run_serial(|| mt_celer_solve(&ds.x, &y, q, lambda, &cfg));
+    assert_eq!(pooled.epochs, serial.epochs);
+    assert_eq!(pooled.gap.to_bits(), serial.gap.to_bits());
+    assert_eq!(pooled.b.data, serial.b.data);
+    assert_eq!(pooled.r, serial.r);
+}
+
+#[test]
+fn block_view_matches_materialized_bitwise() {
+    // A block inner solve on a zero-copy DesignView equals the same
+    // solve on a select_columns copy, bit for bit (the MT hot-path
+    // guarantee: views changed the storage access, not the arithmetic).
+    for (x, y, q) in [
+        {
+            let (x, y) = random_mt_dense(140, 18, 30, 3);
+            (x, y, 3)
+        },
+        {
+            let (x, y) = random_mt_sparse(141, 22, 36, 2, 0.4);
+            (x, y, 2)
+        },
+    ] {
+        let n = x.n();
+        let cols = [1usize, 4, 7, 11, 18, 25];
+        let norms = x.col_norms_sq();
+        let lambda = mt_lambda_max(&x, &y, q) / 20.0;
+        // lane-major targets for the raw engine entry
+        let mut y_lanes = Vec::new();
+        celer::multitask::rowmajor_to_lanes(&y, n, q, &mut y_lanes);
+        let cfg = engine_cfg(1e-10, false);
+
+        let mut ws_view = BlockWorkspace::new();
+        let view = DesignView::new(&x, &cols, &norms);
+        let a = solve_blocks(
+            &view,
+            &y_lanes,
+            q,
+            lambda,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut ws_view,
+            &mut BlockCdStrategy,
+        );
+
+        let mut ws_mat = BlockWorkspace::new();
+        let sub = x.select_columns(&cols);
+        let b = solve_blocks(
+            &sub,
+            &y_lanes,
+            q,
+            lambda,
+            Init::Zeros,
+            None,
+            &cfg,
+            &mut ws_mat,
+            &mut BlockCdStrategy,
+        );
+
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        assert_eq!(ws_view.beta, ws_mat.beta, "β bits");
+        assert_eq!(ws_view.r, ws_mat.r, "residual bits");
+        assert_eq!(ws_view.dual.theta, ws_mat.dual.theta, "θ bits");
+    }
+}
+
+#[test]
+fn celer_mt_certificate_is_recomputable() {
+    // The returned (B, Θ, gap) triple is a genuine certificate: Θ is
+    // dual-feasible and the gap claim recomputes from the public
+    // helpers (row-major recompute ⇒ summation-order tolerance).
+    let (x, y) = random_mt_dense(150, 22, 50, 3);
+    let lambda = mt_lambda_max(&x, &y, 3) / 7.0;
+    let out = mt_celer_solve(&x, &y, 3, lambda, &MtConfig { tol: 1e-9, ..Default::default() });
+    assert!(out.converged);
+    let mut rows = vec![0.0; 50];
+    celer::multitask::solver::mt_xt_row_norms(&x, &out.theta, 3, &mut rows);
+    assert!(rows.iter().all(|&v| v <= 1.0 + 1e-9), "dual feasible");
+    let g = mt_primal(&out.r, &out.b, lambda)
+        - celer::multitask::solver::mt_dual(&y, &out.theta, lambda);
+    assert!((g - out.gap).abs() < 1e-9, "{g} vs {}", out.gap);
+    // row-sparse structure survives the working-set lift
+    let b: &TaskMatrix = &out.b;
+    for j in 0..50 {
+        let nz = b.row(j).iter().filter(|&&v| v != 0.0).count();
+        assert!(nz == 0 || nz == 3, "row {j}");
+    }
+}
