@@ -291,6 +291,40 @@ fn bench_mt_inner_solve(tag: &str, x: &DesignMatrix, iters: usize) {
     });
 }
 
+/// Sparse-GLM hot paths: one CELER-logreg working-set solve vs the
+/// full-design prox-Newton reference, per storage kind. The acceptance
+/// bar mirrors the quadratic story — the WS solve should not lose to the
+/// full sweep once the support is sparse.
+fn bench_glm(tag: &str, x: &DesignMatrix, y_raw: &[f64], iters: usize) {
+    use celer::datafit::Logistic;
+    use celer::solvers::celer::CelerConfig;
+    use celer::solvers::glm::{glm_cd_solve, logreg_lambda_max, sparse_logreg_solve};
+    let y = synth::sign_labels(y_raw);
+    let lambda = logreg_lambda_max(x, &y) / 10.0;
+    let tol = 1e-6;
+    bench::time(&format!("glm/logreg_ws_{tag}"), iters, || {
+        let out = sparse_logreg_solve(
+            x,
+            &y,
+            lambda,
+            None,
+            &CelerConfig { tol, ..Default::default() },
+        );
+        assert!(out.result.converged);
+    });
+    bench::time(&format!("glm/logreg_full_{tag}"), iters, || {
+        let out = glm_cd_solve(
+            x,
+            &y,
+            lambda,
+            None,
+            &Logistic,
+            &celer::solvers::cd::CdConfig { tol, screen: true, ..Default::default() },
+        );
+        assert!(out.converged);
+    });
+}
+
 fn main() {
     let full = bench::full_scale();
     let sparse = if full { synth::finance_sim(0) } else { synth::finance_mini(0) };
@@ -422,6 +456,10 @@ fn main() {
     // (the batch layer's headline quantity, dense and CSC)
     bench_batched_path("dense", &dense.x, &dense.y, iters.min(5));
     bench_batched_path("sparse", &sparse.x, &sparse.y, iters.min(5));
+
+    // --- sparse GLM (logistic) working-set vs full prox-Newton ---
+    bench_glm("dense", &dense.x, &dense.y, iters.min(5));
+    bench_glm("sparse", &sparse.x, &sparse.y, iters.min(5));
 
     // --- extrapolation solve (K = 5) ---
     {

@@ -21,7 +21,10 @@
 //! `Workspace`. Multi-task grid jobs route the same way
 //! (`solver_name: "celer-mt"`): the block-coefficient workspace lives in
 //! the worker's `Workspace` (`ws.mt`), so MT cells share the per-thread
-//! buffer-reuse story with every other solver.
+//! buffer-reuse story with every other solver. Sparse-GLM grid jobs
+//! (`solver_name: "celer-logreg"`) run CELER on the logistic datafit
+//! with the dataset's targets binarized by sign — the same engine
+//! workspace serves them too.
 
 pub mod metrics;
 pub mod scheduler;
@@ -193,6 +196,33 @@ mod tests {
                 grid[i],
             );
             assert!((pm - pc).abs() <= 2.0 * tol, "λ#{i}: {pm} vs {pc}");
+        }
+    }
+
+    #[test]
+    fn logreg_jobs_route_through_by_name() {
+        // "celer-logreg" grid cells dispatch through the same by_name
+        // path as every other solver; continuous targets are binarized
+        // by sign inside the path driver, and every step is certified.
+        let ds = load_dataset("leukemia-mini", 14).unwrap();
+        let labels = crate::data::synth::sign_labels(&ds.y);
+        let lmax = crate::solvers::glm::logreg_lambda_max(&ds.x, &labels);
+        let grid = crate::solvers::path::lambda_grid(lmax, 0.1, 3);
+        let tol = 1e-6;
+        let jobs: Vec<PathJob> = ["celer-logreg", "celer-prune"]
+            .iter()
+            .map(|s| PathJob {
+                solver_name: s.to_string(),
+                tol,
+                grid: grid.clone(),
+                store_betas: false,
+            })
+            .collect();
+        let out = run_path_jobs(&ds, jobs, 2).unwrap();
+        assert_eq!(out[0].solver, "celer-logreg");
+        assert!(out[0].all_converged(), "logreg grid cells certified");
+        for s in &out[0].steps {
+            assert!(s.gap <= tol);
         }
     }
 

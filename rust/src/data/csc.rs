@@ -214,6 +214,34 @@ impl DesignOps for CscMatrix {
         self.data.len()
     }
 
+    #[inline]
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
+        let (idx, val) = self.col(j);
+        debug_assert!(idx.iter().all(|&i| (i as usize) < w.len()));
+        let mut acc = 0.0;
+        unsafe {
+            for k in 0..idx.len() {
+                let v = *val.get_unchecked(k);
+                acc += *w.get_unchecked(*idx.get_unchecked(k) as usize) * v * v;
+            }
+        }
+        acc
+    }
+
+    #[inline]
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
+        let (idx, val) = self.col(j);
+        debug_assert!(idx.iter().all(|&i| (i as usize) < out.len()));
+        debug_assert_eq!(w.len(), out.len());
+        unsafe {
+            for k in 0..idx.len() {
+                let i = *idx.get_unchecked(k) as usize;
+                *out.get_unchecked_mut(i) +=
+                    alpha * *w.get_unchecked(i) * val.get_unchecked(k);
+            }
+        }
+    }
+
     // Batched multi-λ sweeps (see `solvers/batch.rs`): one pass over the
     // stored entries — each (row index, value) pair is decoded once and
     // applied to every lane, instead of re-walking the index array once

@@ -127,6 +127,27 @@ impl DesignOps for DenseMatrix {
         self.data.iter().filter(|&&v| v != 0.0).count()
     }
 
+    #[inline]
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
+        let c = self.col(j);
+        debug_assert_eq!(w.len(), c.len());
+        let mut acc = 0.0;
+        for i in 0..c.len() {
+            acc += w[i] * c[i] * c[i];
+        }
+        acc
+    }
+
+    #[inline]
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
+        let c = self.col(j);
+        debug_assert_eq!(w.len(), c.len());
+        debug_assert_eq!(out.len(), c.len());
+        for i in 0..c.len() {
+            out[i] += alpha * w[i] * c[i];
+        }
+    }
+
     // Batched multi-λ sweeps (see `solvers/batch.rs`): process the column
     // in row blocks so each block is loaded from memory once and reused
     // from L1 by every lane, instead of streaming the full column once

@@ -64,6 +64,17 @@ pub trait DesignOps: Sync {
         }
     }
 
+    /// Weighted squared column norm `Σᵢ wᵢ·x_ij²` — the exact
+    /// per-coordinate curvature `x_jᵀ W x_j` of the prox-Newton /
+    /// IRLS-weighted CD epoch ([`crate::solvers::glm::ProxNewtonCd`]),
+    /// where `w_i = fᵢ''(x_iᵀβ)` are the datafit's curvature weights.
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64;
+
+    /// Weighted column axpy `out_i += alpha·wᵢ·x_ij` — maintains the
+    /// prox-Newton model residual `ρ = r − W·Xδ` after a coordinate
+    /// step, touching only the column's stored entries.
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]);
+
     /// Estimated flops for touching one column in a full-design scan —
     /// the work model behind the serial/parallel cutoff in
     /// [`crate::util::par`]. The cutoff gates on `p × hint`, not on p
@@ -178,6 +189,12 @@ impl DesignOps for DesignMatrix {
     fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
         dispatch!(self, col_axpy_lanes, j, alphas, v, n, lanes)
     }
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
+        dispatch!(self, col_wnorm_sq, j, w)
+    }
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
+        dispatch!(self, col_waxpy, j, alpha, w, out)
+    }
     fn col_cost_hint(&self) -> usize {
         dispatch!(self, col_cost_hint)
     }
@@ -280,6 +297,46 @@ mod tests {
         let (_, s) = random_pair(3, 50, 40, 0.1);
         let d = s.density();
         assert!(d > 0.02 && d < 0.25, "density={d}");
+    }
+
+    #[test]
+    fn weighted_ops_match_manual_loops() {
+        let (d, s) = random_pair(47, 15, 11, 0.4);
+        let mut rng = Rng::new(6);
+        let w: Vec<f64> = (0..15).map(|_| rng.uniform() + 0.1).collect();
+        let v: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let mut dense_cols = Vec::new();
+        d.gather_dense(&(0..11).collect::<Vec<_>>(), &mut dense_cols);
+        for x in [&d, &s] {
+            for j in 0..11 {
+                let col = &dense_cols[j * 15..(j + 1) * 15];
+                let expect_wn: f64 = (0..15).map(|i| w[i] * col[i] * col[i]).sum();
+                assert!(
+                    (x.col_wnorm_sq(j, &w) - expect_wn).abs() < 1e-12,
+                    "wnorm j={j}"
+                );
+                let mut got = v.clone();
+                x.col_waxpy(j, -1.75, &w, &mut got);
+                for i in 0..15 {
+                    let expect = v[i] + -1.75 * w[i] * col[i];
+                    assert!((got[i] - expect).abs() < 1e-12, "waxpy j={j} i={i}");
+                }
+            }
+        }
+        // the view delegates through its column map
+        let norms = d.col_norms_sq();
+        let cols = [3usize, 0, 9];
+        let view = crate::data::view::DesignView::new(&d, &cols, &norms);
+        for (c, &j) in cols.iter().enumerate() {
+            assert_eq!(
+                view.col_wnorm_sq(c, &w).to_bits(),
+                d.col_wnorm_sq(j, &w).to_bits()
+            );
+            let (mut a, mut b) = (v.clone(), v.clone());
+            view.col_waxpy(c, 0.3, &w, &mut a);
+            d.col_waxpy(j, 0.3, &w, &mut b);
+            assert_eq!(a, b);
+        }
     }
 
     #[test]

@@ -309,6 +309,34 @@ pub fn sparse_scan_stress(seed: u64) -> SynthDataset {
     }
 }
 
+/// The label binarization lives next to the [`Logistic`] datafit; the
+/// synthetic generators and tests reach it from here too.
+///
+/// [`Logistic`]: crate::datafit::Logistic
+pub use crate::datafit::sign_labels;
+
+/// Binary-classification dataset for the sparse logistic solvers: the
+/// `leukemia_mini` design with labels `sign(y)` — the signal is the same
+/// sparse linear model, observed through its sign.
+pub fn logreg_mini(seed: u64) -> SynthDataset {
+    let mut ds = leukemia_mini(seed);
+    ds.y = sign_labels(&ds.y);
+    ds.name = "logreg-mini".into();
+    ds
+}
+
+/// Count-data dataset for the sparse Poisson solvers: the
+/// `leukemia_mini` design with counts `round(exp(2·y/‖y‖_∞))` — small
+/// non-negative integers driven by the same sparse signal
+/// (deterministic; no Poisson sampler needed for the solver tests).
+pub fn poisson_mini(seed: u64) -> SynthDataset {
+    let mut ds = leukemia_mini(seed);
+    let ymax = ds.y.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1e-12);
+    ds.y = ds.y.iter().map(|&v| (2.0 * v / ymax).exp().round()).collect();
+    ds.name = "poisson-mini".into();
+    ds
+}
+
 fn finish(raw: SynthDataset, cfg: &PreprocessConfig) -> SynthDataset {
     let (x, y, rep) = preprocess::preprocess(&raw.x, &raw.y, cfg);
     // remap beta_true through kept columns (+0 for intercept)
@@ -322,6 +350,17 @@ fn finish(raw: SynthDataset, cfg: &PreprocessConfig) -> SynthDataset {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn glm_targets_are_in_domain() {
+        let lr = logreg_mini(7);
+        assert!(lr.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(lr.y.iter().any(|&v| v == 1.0) && lr.y.iter().any(|&v| v == -1.0));
+        let ps = poisson_mini(7);
+        assert!(ps.y.iter().all(|&v| v >= 0.0 && v == v.round()));
+        assert!(ps.y.iter().any(|&v| v > 0.0));
+        assert_eq!(sign_labels(&[0.0, -0.1, 3.0]), vec![1.0, -1.0, 1.0]);
+    }
 
     #[test]
     fn leukemia_mini_shape_and_norms() {

@@ -145,6 +145,16 @@ impl<D: DesignOps> DesignOps for DesignView<'_, D> {
         self.parent.col_axpy_lanes(self.cols[j], alphas, v, n, lanes);
     }
 
+    #[inline]
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
+        self.parent.col_wnorm_sq(self.cols[j], w)
+    }
+
+    #[inline]
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
+        self.parent.col_waxpy(self.cols[j], alpha, w, out);
+    }
+
     fn xt_abs_max(&self, v: &[f64]) -> f64 {
         crate::util::par::par_max_cost(self.cols.len(), self.parent.col_cost_hint(), |c| {
             self.parent.col_dot(self.cols[c], v).abs()

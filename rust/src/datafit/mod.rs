@@ -1,0 +1,579 @@
+//! Datafit abstraction: the per-observation loss of a sparse GLM.
+//!
+//! The Celer follow-up *Dual Extrapolation for Sparse Generalized Linear
+//! Models* (Massias, Vaiter, Gramfort & Salmon, 2019) shows the whole
+//! working-set + extrapolated-dual machinery of this crate applies to any
+//! problem of the form
+//!
+//! ```text
+//! min_β  P(β) = Σᵢ fᵢ(x_iᵀβ) + λ‖β‖₁
+//! ```
+//!
+//! where every `fᵢ` is convex with an `L`-Lipschitz derivative. The dual
+//! is `max_{‖Xᵀθ‖_∞ ≤ 1} D(θ) = −Σᵢ fᵢ*(−λθᵢ)`, the optimality link is
+//! `θ̂ = −∇F(Xβ̂)/λ`, and the **generalized residual**
+//!
+//! ```text
+//! rᵢ = −fᵢ'(x_iᵀβ)        (quadratic: rᵢ = yᵢ − x_iᵀβ)
+//! ```
+//!
+//! plays exactly the role the plain residual plays for the Lasso: the
+//! Eq. 4 rescale `θ = r / max(λ, ‖Xᵀr‖_∞)` yields a feasible dual point,
+//! the extrapolation ring of [`crate::extrapolation`] runs on the
+//! residual sequence unchanged, and the Gap Safe sphere of Ndiaye et al.
+//! (*Gap Safe screening rules for sparsity enforcing penalties*) has
+//! radius `√(2·L·gap)/λ` (L = 1 recovers the Lasso radius).
+//!
+//! [`Datafit`] is that abstraction: each implementor supplies the
+//! gradient/raw-residual, the primal and conjugate (dual) values, the
+//! IRLS curvature weights, the Lipschitz constant feeding the screening
+//! radius, the feasible-rescale denominator and the `λ_max` anchor. The
+//! solver layers ([`crate::solvers::engine`], [`crate::solvers::celer`],
+//! [`crate::solvers::glm`]) are generic over it.
+//!
+//! **Bit-identity invariant:** [`Quadratic`] reproduces, expression for
+//! expression, the arithmetic the pre-datafit engine inlined
+//! (`½‖r‖²`, the Eq. 4 denominator, the fused `D(θ_res)` loop of
+//! `DualState::update`, `‖y‖²` caching). The quadratic path through the
+//! generic engine is therefore bit-identical to the historical
+//! `engine::solve` — pinned by `tests/prop_glm.rs`.
+
+use crate::data::design::DesignOps;
+
+/// `x·ln(x)` with the `0·ln(0) = 0` limit (entropy terms of the logistic
+/// and Poisson conjugates).
+#[inline]
+fn xlogx(x: f64) -> f64 {
+    if x <= 0.0 {
+        0.0
+    } else {
+        x * x.ln()
+    }
+}
+
+/// Numerically stable `ln(1 + eᶻ)` (softplus).
+#[inline]
+fn log1p_exp(z: f64) -> f64 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Logistic sigmoid `σ(z) = 1/(1 + e⁻ᶻ)`.
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// A separable GLM datafit `F(u) = Σᵢ fᵢ(uᵢ)` evaluated at `u = Xβ`.
+///
+/// Implementors are zero-sized marker types; everything is `#[inline]`
+/// element-wise arithmetic so the solver loops monomorphize with no
+/// dispatch cost. See the module docs for the math and the
+/// quadratic bit-identity contract.
+pub trait Datafit: Sync {
+    /// True only for [`Quadratic`]. Enables the residual-linear fast
+    /// paths that are exact for the quadratic datafit only: the engine's
+    /// incremental screening fix-up (`r += βⱼxⱼ`) and the `Xβ`-free
+    /// bookkeeping of the plain CD strategies.
+    const IS_QUADRATIC: bool = false;
+
+    /// Display name ("quadratic", "logistic", "poisson").
+    fn name(&self) -> &'static str;
+
+    /// Global Lipschitz constant `L` of every `fᵢ'` (quadratic 1,
+    /// logistic ¼). `f64::INFINITY` when no global constant exists
+    /// (Poisson) — Gap Safe screening is then disabled, everything else
+    /// still runs.
+    fn lipschitz(&self) -> f64;
+
+    /// Per-solve scalar cached from `y` and handed back to
+    /// [`Datafit::dual`] / [`Datafit::dual_scaled`] at every gap check.
+    /// Quadratic: `‖y‖²`. The entropy-form conjugates need nothing.
+    fn conj_cache(&self, y: &[f64]) -> f64 {
+        let _ = y;
+        0.0
+    }
+
+    /// Datafit value `F(Xβ)` (without the λ‖β‖₁ penalty). `xw = Xβ` is
+    /// the maintained linear predictor and `r` the maintained
+    /// generalized residual; the quadratic fit reads only `r`
+    /// (`½‖r‖²`), the GLM fits only `xw`.
+    fn value(&self, y: &[f64], xw: &[f64], r: &[f64]) -> f64;
+
+    /// Generalized residual `out_i = −fᵢ'(xwᵢ)`.
+    fn fill_residual(&self, y: &[f64], xw: &[f64], out: &mut [f64]);
+
+    /// IRLS curvature weights `out_i = fᵢ''(xwᵢ)` — the per-observation
+    /// Hessian of the prox-Newton quadratic model
+    /// ([`crate::solvers::glm::ProxNewtonCd`]).
+    fn fill_weights(&self, y: &[f64], xw: &[f64], out: &mut [f64]);
+
+    /// Dual objective `D(θ) = −Σᵢ fᵢ*(−λθᵢ)` at an explicit point.
+    /// Returns `−∞` when θ leaves the conjugate domain (a rescaled
+    /// residual never does; an extrapolated candidate may — the caller's
+    /// best-of comparison then discards it).
+    fn dual(&self, y: &[f64], theta: &[f64], lambda: f64, cache: f64) -> f64;
+
+    /// `D(r·inv)` without materializing θ — the fused form every gap
+    /// check uses on the residual-rescaled point.
+    fn dual_scaled(&self, y: &[f64], r: &[f64], inv: f64, lambda: f64, cache: f64) -> f64;
+
+    /// Feasible-rescale denominator of Eq. 4: `θ = r/denom` with
+    /// `denom = max(λ, ‖Xᵀr‖_∞)` for every current fit. A hook so a
+    /// datafit with extra dual box constraints can tighten it.
+    #[inline]
+    fn rescale_denom(&self, lambda: f64, xt_r_inf: f64) -> f64 {
+        lambda.max(xt_r_inf)
+    }
+
+    /// The generalized residual at β = 0 (`−∇F(0)`): returns `y` itself
+    /// when that is exact (quadratic), otherwise fills and returns `buf`.
+    /// This is the direction the working-set solvers initialize θ from,
+    /// and the vector behind `λ_max`.
+    fn residual_at_zero<'a>(&self, y: &'a [f64], buf: &'a mut Vec<f64>) -> &'a [f64];
+
+    /// `λ_max = ‖Xᵀ(−∇F(0))‖_∞`, the smallest λ with β̂ = 0.
+    /// Quadratic: `‖Xᵀy‖_∞`; logistic: `‖Xᵀy‖_∞/2`; Poisson:
+    /// `‖Xᵀ(y−1)‖_∞`.
+    fn lambda_max<D: DesignOps>(&self, x: &D, y: &[f64]) -> f64 {
+        let mut buf = Vec::new();
+        x.xt_abs_max(self.residual_at_zero(y, &mut buf))
+    }
+
+    /// Panic with a clear message when `y` is outside the datafit's
+    /// target domain (logistic: labels in {−1, +1}; Poisson: y ≥ 0).
+    fn validate_targets(&self, y: &[f64]) {
+        let _ = y;
+    }
+}
+
+/// The Lasso datafit `F(Xβ) = ½‖y − Xβ‖²`.
+///
+/// Every expression below is copied verbatim from the pre-datafit solver
+/// paths (see the module-level bit-identity invariant); do not "simplify"
+/// them — reassociating a sum changes result bits and breaks the pinned
+/// equality tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Quadratic;
+
+impl Datafit for Quadratic {
+    const IS_QUADRATIC: bool = true;
+
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+
+    #[inline]
+    fn lipschitz(&self) -> f64 {
+        1.0
+    }
+
+    #[inline]
+    fn conj_cache(&self, y: &[f64]) -> f64 {
+        crate::util::linalg::dot(y, y)
+    }
+
+    #[inline]
+    fn value(&self, _y: &[f64], _xw: &[f64], r: &[f64]) -> f64 {
+        0.5 * crate::util::linalg::dot(r, r)
+    }
+
+    #[inline]
+    fn fill_residual(&self, y: &[f64], xw: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            out[i] = y[i] - xw[i];
+        }
+    }
+
+    #[inline]
+    fn fill_weights(&self, _y: &[f64], _xw: &[f64], out: &mut [f64]) {
+        out.fill(1.0);
+    }
+
+    #[inline]
+    fn dual(&self, y: &[f64], theta: &[f64], lambda: f64, cache: f64) -> f64 {
+        crate::lasso::dual::dual_objective_cached(y, theta, lambda, cache)
+    }
+
+    #[inline]
+    fn dual_scaled(&self, y: &[f64], r: &[f64], inv: f64, lambda: f64, cache: f64) -> f64 {
+        // D(θ_res) without materializing θ_res: θ = r·inv. Exactly the
+        // loop `DualState::update` historically inlined.
+        let mut dist_sq = 0.0;
+        for i in 0..y.len() {
+            let d = r[i] * inv - y[i] / lambda;
+            dist_sq += d * d;
+        }
+        0.5 * cache - 0.5 * lambda * lambda * dist_sq
+    }
+
+    #[inline]
+    fn residual_at_zero<'a>(&self, y: &'a [f64], _buf: &'a mut Vec<f64>) -> &'a [f64] {
+        y
+    }
+}
+
+/// Logistic-regression datafit `fᵢ(t) = ln(1 + e^{−yᵢt})`, labels
+/// `yᵢ ∈ {−1, +1}`.
+///
+/// Generalized residual `rᵢ = yᵢ·σ(−yᵢ xwᵢ)`, curvature
+/// `fᵢ'' = σ(1−σ) ≤ ¼`, conjugate `fᵢ*(−λθᵢ) = s ln s + (1−s)ln(1−s)`
+/// with `s = λyᵢθᵢ ∈ [0, 1]`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Logistic;
+
+impl Datafit for Logistic {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    #[inline]
+    fn lipschitz(&self) -> f64 {
+        0.25
+    }
+
+    #[inline]
+    fn value(&self, y: &[f64], xw: &[f64], _r: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            acc += log1p_exp(-y[i] * xw[i]);
+        }
+        acc
+    }
+
+    #[inline]
+    fn fill_residual(&self, y: &[f64], xw: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            out[i] = y[i] * sigmoid(-y[i] * xw[i]);
+        }
+    }
+
+    #[inline]
+    fn fill_weights(&self, y: &[f64], xw: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            let s = sigmoid(-y[i] * xw[i]);
+            out[i] = s * (1.0 - s);
+        }
+    }
+
+    fn dual(&self, y: &[f64], theta: &[f64], lambda: f64, _cache: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            let s = lambda * y[i] * theta[i];
+            if !(0.0..=1.0).contains(&s) {
+                return f64::NEG_INFINITY;
+            }
+            acc -= xlogx(s) + xlogx(1.0 - s);
+        }
+        acc
+    }
+
+    fn dual_scaled(&self, y: &[f64], r: &[f64], inv: f64, lambda: f64, _cache: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            let s = lambda * y[i] * (r[i] * inv);
+            if !(0.0..=1.0).contains(&s) {
+                return f64::NEG_INFINITY;
+            }
+            acc -= xlogx(s) + xlogx(1.0 - s);
+        }
+        acc
+    }
+
+    #[inline]
+    fn residual_at_zero<'a>(&self, y: &'a [f64], buf: &'a mut Vec<f64>) -> &'a [f64] {
+        // σ(0) = ½ ⇒ r(0) = y/2, hence λ_max = ‖Xᵀy‖_∞ / 2.
+        buf.clear();
+        buf.extend(y.iter().map(|&v| 0.5 * v));
+        buf
+    }
+
+    fn validate_targets(&self, y: &[f64]) {
+        assert!(
+            y.iter().all(|&v| v == 1.0 || v == -1.0),
+            "logistic datafit requires labels in {{-1, +1}}"
+        );
+    }
+}
+
+/// Poisson-regression datafit `fᵢ(t) = e^t − yᵢt` (log link, counts
+/// `yᵢ ≥ 0`; the `ln yᵢ!` constant is dropped — it cancels in the gap).
+///
+/// Generalized residual `rᵢ = yᵢ − e^{xwᵢ}`, curvature `fᵢ'' = e^{xwᵢ}`
+/// (no global Lipschitz constant ⇒ screening is off), conjugate
+/// `fᵢ*(−λθᵢ) = s ln s − s` with `s = yᵢ − λθᵢ ≥ 0`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Poisson;
+
+impl Datafit for Poisson {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    #[inline]
+    fn lipschitz(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    #[inline]
+    fn value(&self, y: &[f64], xw: &[f64], _r: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            acc += xw[i].exp() - y[i] * xw[i];
+        }
+        acc
+    }
+
+    #[inline]
+    fn fill_residual(&self, y: &[f64], xw: &[f64], out: &mut [f64]) {
+        for i in 0..y.len() {
+            out[i] = y[i] - xw[i].exp();
+        }
+    }
+
+    #[inline]
+    fn fill_weights(&self, _y: &[f64], xw: &[f64], out: &mut [f64]) {
+        for (o, &u) in out.iter_mut().zip(xw.iter()) {
+            *o = u.exp();
+        }
+    }
+
+    fn dual(&self, y: &[f64], theta: &[f64], lambda: f64, _cache: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            let s = y[i] - lambda * theta[i];
+            if s < 0.0 {
+                return f64::NEG_INFINITY;
+            }
+            acc += s - xlogx(s);
+        }
+        acc
+    }
+
+    fn dual_scaled(&self, y: &[f64], r: &[f64], inv: f64, lambda: f64, _cache: f64) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..y.len() {
+            let s = y[i] - lambda * (r[i] * inv);
+            if s < 0.0 {
+                return f64::NEG_INFINITY;
+            }
+            acc += s - xlogx(s);
+        }
+        acc
+    }
+
+    #[inline]
+    fn residual_at_zero<'a>(&self, y: &'a [f64], buf: &'a mut Vec<f64>) -> &'a [f64] {
+        // e⁰ = 1 ⇒ r(0) = y − 1, hence λ_max = ‖Xᵀ(y − 1)‖_∞.
+        buf.clear();
+        buf.extend(y.iter().map(|&v| v - 1.0));
+        buf
+    }
+
+    fn validate_targets(&self, y: &[f64]) {
+        assert!(
+            y.iter().all(|&v| v >= 0.0 && v.is_finite()),
+            "poisson datafit requires non-negative targets"
+        );
+    }
+}
+
+/// ±1 labels by sign (`y ≥ 0 → +1`; identity on vectors that are
+/// already ±1 labels) — the canonical binarization the
+/// `"celer-logreg"` grid route applies before handing targets to
+/// [`Logistic`]. Lives next to the datafit it feeds; the synthetic-data
+/// module re-exports it.
+pub fn sign_labels(y: &[f64]) -> Vec<f64> {
+    y.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect()
+}
+
+/// Runtime selector for the non-quadratic datafits, used by the λ-path /
+/// CLI / coordinator plumbing ([`crate::solvers::path::glm_path`]). The
+/// solver cores stay statically generic; this enum is matched once at
+/// the public entry, like [`crate::data::design::DesignMatrix`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlmFamily {
+    Logistic,
+    Poisson,
+}
+
+impl GlmFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlmFamily::Logistic => "logistic",
+            GlmFamily::Poisson => "poisson",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_gradient_matches_residual<F: Datafit>(f: &F, y: &[f64], xw: &[f64]) {
+        let n = y.len();
+        let mut r = vec![0.0; n];
+        f.fill_residual(y, xw, &mut r);
+        let eps = 1e-6;
+        let mut up = xw.to_vec();
+        let mut dn = xw.to_vec();
+        for i in 0..n {
+            up[i] = xw[i] + eps;
+            dn[i] = xw[i] - eps;
+            // value() must not read r for the GLM fits; pass the true
+            // residual of the perturbed point anyway for the quadratic.
+            let mut ru = vec![0.0; n];
+            let mut rd = vec![0.0; n];
+            f.fill_residual(y, &up, &mut ru);
+            f.fill_residual(y, &dn, &mut rd);
+            let g = (f.value(y, &up, &ru) - f.value(y, &dn, &rd)) / (2.0 * eps);
+            assert!(
+                (g - (-r[i])).abs() < 1e-5,
+                "{} grad i={i}: fd {g} vs -r {}",
+                f.name(),
+                -r[i]
+            );
+            up[i] = xw[i];
+            dn[i] = xw[i];
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let y_reg = [1.0, -2.0, 0.5, 3.0];
+        let y_cls = [1.0, -1.0, 1.0, -1.0];
+        let y_cnt = [0.0, 1.0, 3.0, 2.0];
+        let xw = [0.3, -0.8, 1.2, -0.1];
+        fd_gradient_matches_residual(&Quadratic, &y_reg, &xw);
+        fd_gradient_matches_residual(&Logistic, &y_cls, &xw);
+        fd_gradient_matches_residual(&Poisson, &y_cnt, &xw);
+    }
+
+    fn weights_match_fd<F: Datafit>(f: &F, y: &[f64], xw: &[f64]) {
+        let eps = 1e-6;
+        let n = y.len();
+        let mut w = vec![0.0; n];
+        f.fill_weights(y, xw, &mut w);
+        for i in 0..n {
+            let mut up = xw.to_vec();
+            let mut dn = xw.to_vec();
+            up[i] += eps;
+            dn[i] -= eps;
+            let (mut ru, mut rd) = (vec![0.0; n], vec![0.0; n]);
+            f.fill_residual(y, &up, &mut ru);
+            f.fill_residual(y, &dn, &mut rd);
+            // w = f'' = -(dr/du)
+            let fd = -(ru[i] - rd[i]) / (2.0 * eps);
+            assert!((w[i] - fd).abs() < 1e-5, "{} w i={i}", f.name());
+        }
+    }
+
+    #[test]
+    fn weights_match_fd_of_residual() {
+        let y_cls = [1.0, -1.0, 1.0];
+        let y_cnt = [2.0, 0.0, 1.0];
+        let xw = [0.4, -1.1, 0.0];
+        weights_match_fd(&Logistic, &y_cls, &xw);
+        weights_match_fd(&Poisson, &y_cnt, &xw);
+    }
+
+    #[test]
+    fn quadratic_matches_legacy_expressions() {
+        let y = [1.0, 2.0, -0.5];
+        let xw = [0.2, 1.0, 0.0];
+        let mut r = vec![0.0; 3];
+        Quadratic.fill_residual(&y, &xw, &mut r);
+        for i in 0..3 {
+            assert_eq!(r[i].to_bits(), (y[i] - xw[i]).to_bits());
+        }
+        let v = Quadratic.value(&y, &xw, &r);
+        assert_eq!(
+            v.to_bits(),
+            (0.5 * crate::util::linalg::dot(&r, &r)).to_bits()
+        );
+        let cache = Quadratic.conj_cache(&y);
+        assert_eq!(cache.to_bits(), crate::util::linalg::dot(&y, &y).to_bits());
+        let lambda = 0.7;
+        let inv = 1.0 / 2.5;
+        let theta: Vec<f64> = r.iter().map(|&v| v * inv).collect();
+        let a = Quadratic.dual_scaled(&y, &r, inv, lambda, cache);
+        let b = crate::lasso::dual::dual_objective_cached(&y, &theta, lambda, cache);
+        assert_eq!(a.to_bits(), b.to_bits(), "fused dual equals materialized");
+    }
+
+    fn fenchel_young_holds<F: Datafit>(f: &F, y: &[f64], xw: &[f64], lambda: f64) {
+        let n = y.len();
+        let mut r = vec![0.0; n];
+        f.fill_residual(y, xw, &mut r);
+        // θ = r/λ is in the conjugate domain by construction
+        let theta: Vec<f64> = r.iter().map(|&v| v / lambda).collect();
+        let d = f.dual(y, &theta, lambda, f.conj_cache(y));
+        let p = f.value(y, xw, &r);
+        assert!(d.is_finite(), "{}", f.name());
+        // Fenchel–Young: F(u) + F*(−λθ) ≥ ⟨u, −λθ⟩, i.e. with λθ = r:
+        // P_datafit − D ≥ −⟨xw, r⟩.
+        assert!(
+            p - d >= -crate::util::linalg::dot(xw, &r) - 1e-10,
+            "{}: P {p} D {d}",
+            f.name()
+        );
+    }
+
+    #[test]
+    fn dual_at_link_point_respects_fenchel_young() {
+        let y_cls = [1.0, -1.0, 1.0, 1.0];
+        let y_cnt = [2.0, 1.0, 0.0, 3.0];
+        let xw = [0.1, -0.3, 0.2, 0.4];
+        fenchel_young_holds(&Logistic, &y_cls, &xw, 0.9);
+        fenchel_young_holds(&Poisson, &y_cnt, &xw, 0.9);
+    }
+
+    #[test]
+    fn out_of_domain_duals_are_rejected() {
+        let y = [1.0, -1.0];
+        // λyθ > 1 on the first coordinate
+        assert_eq!(
+            Logistic.dual(&y, &[2.0, 0.0], 1.0, 0.0),
+            f64::NEG_INFINITY
+        );
+        // y − λθ < 0
+        assert_eq!(
+            Poisson.dual(&[0.5, 1.0], &[1.0, 0.0], 1.0, 0.0),
+            f64::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn lambda_max_anchors() {
+        use crate::data::dense::DenseMatrix;
+        let x = DenseMatrix::from_row_major(3, 2, &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let y = [1.0, -1.0, 1.0];
+        // quadratic: ‖Xᵀy‖_∞ = max(|1+1|, |-1+1|) = 2
+        assert_eq!(Quadratic.lambda_max(&x, &y), 2.0);
+        // logistic: half of it
+        assert_eq!(Logistic.lambda_max(&x, &y), 1.0);
+        // poisson: y−1 = [0,−1,0] ⇒ Xᵀ(y−1) = [0, −1] ⇒ λ_max = 1
+        let counts = [1.0, 0.0, 1.0];
+        assert_eq!(Poisson.lambda_max(&x, &counts), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels")]
+    fn logistic_rejects_non_labels() {
+        Logistic.validate_targets(&[1.0, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn poisson_rejects_negative_counts() {
+        Poisson.validate_targets(&[1.0, -0.5]);
+    }
+}

@@ -47,10 +47,66 @@ pub fn lambda_max<D: DesignOps>(x: &D, y: &[f64]) -> f64 {
 /// `θ = r / max(λ, ‖Xᵀr‖_∞)`.
 ///
 /// Returns the rescaled point; always feasible by construction.
+/// Allocates two fresh buffers per call — hot paths use
+/// [`rescale_to_feasible_into`] on workspace buffers instead.
 pub fn rescale_to_feasible<D: DesignOps>(x: &D, r: &[f64], lambda: f64) -> Vec<f64> {
-    let denom = x.xt_abs_max(r).max(lambda);
-    r.iter().map(|&v| v / denom).collect()
+    let mut xtr = vec![0.0; x.p()];
+    let mut out = Vec::with_capacity(r.len());
+    rescale_to_feasible_into(x, r, lambda, &mut xtr, &mut out);
+    out
 }
+
+/// Allocation-free [`rescale_to_feasible`]: one fused design sweep
+/// (`Xᵀr` lands **unscaled** in `xtr` together with its ∞-norm — see
+/// [`DesignOps::xt_vec_abs_max`]) plus an n-sized write of `θ = r/denom`
+/// into `out` (capacity reused).
+///
+/// Returns the denominator `max(λ, ‖Xᵀr‖_∞)`, so callers that cache
+/// correlations can derive `Xᵀθ = xtr/denom` without a second design
+/// sweep — exactly what the CELER outer loop does with its pricing
+/// vector. This is the one Eq. 4 rescale every working-set solver
+/// (CELER, Blitz, GLMNET's gap diagnostic) routes through.
+pub fn rescale_to_feasible_into<D: DesignOps>(
+    x: &D,
+    r: &[f64],
+    lambda: f64,
+    xtr: &mut [f64],
+    out: &mut Vec<f64>,
+) -> f64 {
+    glm_rescale_to_feasible_into(x, r, lambda, &crate::datafit::Quadratic, xtr, out)
+}
+
+/// Datafit-generic [`rescale_to_feasible_into`]: the denominator comes
+/// from [`Datafit::rescale_denom`](crate::datafit::Datafit::rescale_denom)
+/// (default `max(λ, ‖Xᵀr‖_∞)`), so a datafit with extra dual box
+/// constraints tightens **every** rescale path — this one (the CELER
+/// outer loop) and [`DualState::update_datafit`](crate::solvers::DualState::update_datafit)
+/// stay consistent by construction.
+pub fn glm_rescale_to_feasible_into<D: DesignOps, F: crate::datafit::Datafit>(
+    x: &D,
+    r: &[f64],
+    lambda: f64,
+    datafit: &F,
+    xtr: &mut [f64],
+    out: &mut Vec<f64>,
+) -> f64 {
+    let denom = datafit.rescale_denom(lambda, x.xt_vec_abs_max(r, xtr));
+    out.clear();
+    out.extend(r.iter().map(|&v| v / denom));
+    denom
+}
+
+/// `λ_max` of a GLM datafit: `‖Xᵀ(−∇F(0))‖_∞` — the smallest λ whose
+/// solution is β̂ = 0 (quadratic: [`lambda_max`]; logistic `‖Xᵀy‖_∞/2`;
+/// Poisson `‖Xᵀ(y−1)‖_∞`).
+pub fn glm_lambda_max<D: DesignOps, F: crate::datafit::Datafit>(
+    x: &D,
+    y: &[f64],
+    datafit: &F,
+) -> f64 {
+    datafit.lambda_max(x, y)
+}
+
 
 /// Check dual feasibility `‖Xᵀθ‖_∞ ≤ 1 + tol`.
 pub fn is_feasible<D: DesignOps>(x: &D, theta: &[f64], tol: f64) -> bool {
@@ -60,10 +116,33 @@ pub fn is_feasible<D: DesignOps>(x: &D, theta: &[f64], tol: f64) -> bool {
 /// Pick the dual point maximizing `D(θ)` among candidates (Eq. 13).
 /// Returns the index of the best candidate.
 pub fn best_dual_point(y: &[f64], lambda: f64, candidates: &[&[f64]]) -> usize {
+    glm_best_dual_point(
+        &crate::datafit::Quadratic,
+        y,
+        lambda,
+        crate::util::linalg::dot(y, y),
+        candidates,
+    )
+}
+
+/// Datafit-generic [`best_dual_point`] (Eq. 13): evaluate the
+/// candidates' dual objectives **in order** and return the index of the
+/// strict maximizer — first wins ties; out-of-domain candidates
+/// (`D = −∞`) can never win. The one copy of the tie-breaking contract
+/// every outer loop (CELER, Multi-Task) relies on; `cache` comes from
+/// [`Datafit::conj_cache`](crate::datafit::Datafit::conj_cache), computed
+/// once per solve instead of per candidate.
+pub fn glm_best_dual_point<F: crate::datafit::Datafit>(
+    datafit: &F,
+    y: &[f64],
+    lambda: f64,
+    cache: f64,
+    candidates: &[&[f64]],
+) -> usize {
     let mut best = 0;
     let mut best_val = f64::NEG_INFINITY;
     for (i, th) in candidates.iter().enumerate() {
-        let v = dual_objective(y, th, lambda);
+        let v = datafit.dual(y, th, lambda, cache);
         if v > best_val {
             best_val = v;
             best = i;
@@ -114,6 +193,27 @@ mod tests {
         for i in 0..3 {
             assert!((theta[i] - y[i] / 5.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn rescale_into_matches_allocating_and_returns_denom() {
+        use crate::data::design::DesignOps;
+        let (x, y) = sample();
+        let lambda = 1.5;
+        let theta = rescale_to_feasible(&x, &y, lambda);
+        let mut xtr = vec![0.0; 2];
+        let mut out = Vec::new();
+        let denom = rescale_to_feasible_into(&x, &y, lambda, &mut xtr, &mut out);
+        assert_eq!(theta, out, "wrapper and _into agree");
+        assert_eq!(denom, x.xt_abs_max(&y).max(lambda));
+        // xtr holds the UNSCALED correlations
+        let mut expect = vec![0.0; 2];
+        x.xt_vec(&y, &mut expect);
+        assert_eq!(xtr, expect);
+        // buffers are reused, not reallocated
+        let cap = out.capacity();
+        let _ = rescale_to_feasible_into(&x, &y, lambda * 2.0, &mut xtr, &mut out);
+        assert_eq!(out.capacity(), cap);
     }
 
     #[test]

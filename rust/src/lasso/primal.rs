@@ -29,6 +29,37 @@ pub fn l1_norm(beta: &[f64]) -> f64 {
     beta.iter().map(|b| b.abs()).sum()
 }
 
+/// Generalized GLM primal `P(β) = F(Xβ) + λ‖β‖₁` from the maintained
+/// state: `xw = Xβ` (linear predictor) and `r = −∇F(Xβ)` (generalized
+/// residual). The quadratic datafit reads only `r` — for it this is
+/// bit-for-bit [`primal_from_residual`]; the GLM fits read only `xw`.
+#[inline]
+pub fn glm_primal_value<F: crate::datafit::Datafit>(
+    datafit: &F,
+    y: &[f64],
+    xw: &[f64],
+    r: &[f64],
+    beta: &[f64],
+    lambda: f64,
+) -> f64 {
+    datafit.value(y, xw, r) + lambda * l1_norm(beta)
+}
+
+/// Fill the GLM primal state for β: `xw = Xβ` (one matvec) and the
+/// generalized residual `r = −∇F(xw)`. The quadratic instance computes
+/// the same values as [`residual`] (with the matvec landing in `xw`).
+pub fn glm_state<D: DesignOps, F: crate::datafit::Datafit>(
+    x: &D,
+    datafit: &F,
+    y: &[f64],
+    beta: &[f64],
+    xw: &mut [f64],
+    r: &mut [f64],
+) {
+    x.matvec(beta, xw);
+    datafit.fill_residual(y, xw, r);
+}
+
 /// Support (indices of non-zero coefficients).
 pub fn support(beta: &[f64]) -> Vec<usize> {
     beta.iter().enumerate().filter(|(_, &b)| b != 0.0).map(|(j, _)| j).collect()

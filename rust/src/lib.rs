@@ -23,6 +23,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod datafit;
 pub mod extrapolation;
 pub mod lasso;
 pub mod multitask;

@@ -86,6 +86,8 @@ COMMANDS:
 SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
          gapsafe-cd-accel cd-batched (batched multi-λ lanes; path only)
          celer-mt (Multi-Task CELER on the block engine; q = 1 on grids)
+         celer-logreg (sparse logistic regression on the GLM engine;
+                       grid targets are binarized by sign)
 DATASETS: leukemia-sim leukemia-mini finance-sim finance-mini bctcga-sim toy-2x2
 ";
 
@@ -147,6 +149,16 @@ fn cmd_solve(args: &cli::Args) -> anyhow::Result<()> {
                 other => {
                     let ps = celer::solvers::path::PathSolver::by_name(other, tol)
                         .ok_or_else(|| anyhow::anyhow!("unknown solver {other}"))?;
+                    // celer-logreg solves on sign-binarized labels, whose
+                    // λ_max anchor is ‖Xᵀsign(y)‖_∞/2 — scaling the
+                    // quadratic λ_max by the ratio instead could put λ
+                    // above it and silently return the empty model.
+                    let lambda = if matches!(other, "celer-logreg" | "logreg") {
+                        let labels = celer::datafit::sign_labels(&ds.y);
+                        celer::solvers::glm::logreg_lambda_max(&ds.x, &labels) * ratio
+                    } else {
+                        lambda
+                    };
                     let res = celer::solvers::path::run_path(&ds.x, &ds.y, &[lambda], &ps, false);
                     let step = &res.steps[0];
                     (step.gap, step.support_size, step.epochs, step.converged)
@@ -193,11 +205,23 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
     let grid = coordinator::standard_grid(&ds, inv_ratio, num);
     let jobs: Vec<PathJob> = solvers
         .split(',')
-        .map(|s| PathJob {
-            solver_name: s.trim().to_string(),
-            tol,
-            grid: grid.clone(),
-            store_betas: false,
+        .map(|s| {
+            let solver_name = s.trim().to_string();
+            // celer-logreg runs on sign-binarized labels; anchor its grid
+            // at the logistic λ_max of those labels (‖Xᵀsign(y)‖_∞/2) —
+            // the quadratic anchor can exceed it by orders of magnitude
+            // on large-scale targets, making every grid point trivial.
+            let grid = if matches!(solver_name.as_str(), "celer-logreg" | "logreg") {
+                let labels = celer::datafit::sign_labels(&ds.y);
+                celer::solvers::path::lambda_grid(
+                    celer::solvers::glm::logreg_lambda_max(&ds.x, &labels),
+                    1.0 / inv_ratio,
+                    num,
+                )
+            } else {
+                grid.clone()
+            };
+            PathJob { solver_name, tol, grid, store_betas: false }
         })
         .collect();
     println!(

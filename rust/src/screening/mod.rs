@@ -18,6 +18,21 @@ pub fn gap_safe_radius(gap: f64, lambda: f64) -> f64 {
     (2.0 * gap.max(0.0)).sqrt() / lambda
 }
 
+/// GLM Gap Safe ball radius `√(2·L·gap)/λ` (Ndiaye et al., *Gap Safe
+/// screening rules for sparsity enforcing penalties*): when every `fᵢ'`
+/// is `L`-Lipschitz, each `fᵢ*` is `(1/L)`-strongly convex, so the dual
+/// objective is `(λ²/L)`-strongly concave and the dual optimum lies
+/// within this radius of any feasible θ. `L = 1` recovers
+/// [`gap_safe_radius`]; `L = ∞` (Poisson — no global constant) yields an
+/// infinite radius, i.e. nothing is ever screened.
+#[inline]
+pub fn gap_safe_radius_glm(gap: f64, lambda: f64, lipschitz: f64) -> f64 {
+    if !lipschitz.is_finite() {
+        return f64::INFINITY;
+    }
+    (2.0 * lipschitz * gap.max(0.0)).sqrt() / lambda
+}
+
 /// The Gap-Safe importance score `d_j(θ) = (1 − |x_jᵀθ|) / ‖x_j‖`
 /// (Eq. 10). Feature j is screenable iff `d_j(θ) > radius`.
 #[inline]
@@ -115,6 +130,46 @@ impl ScreeningState {
                 if beta[j] != 0.0 {
                     // r = y − Xβ; removing β_j adds β_j·x_j back.
                     x.col_axpy(j, beta[j], r);
+                    beta[j] = 0.0;
+                }
+            }
+            keep
+        });
+        before - self.active.len()
+    }
+
+    /// GLM variant of [`ScreeningState::screen`]: same Gap Safe test,
+    /// but with the **caller-supplied radius** (from
+    /// [`gap_safe_radius_glm`] with the datafit's Lipschitz constant)
+    /// and the **linear predictor** fixed instead of the residual.
+    ///
+    /// For a non-quadratic datafit the generalized residual is not
+    /// linear in β, so zeroing a screened β_j cannot patch `r` with an
+    /// axpy; instead `xw = Xβ` is patched (`xw −= β_j·x_j`) and the
+    /// caller refreshes `r = −∇F(xw)` once after the sweep (the engine
+    /// does this only when something was screened).
+    pub fn screen_glm<D: DesignOps>(
+        &mut self,
+        x: &D,
+        xtheta: &[f64],
+        col_norms: &[f64],
+        radius: f64,
+        beta: &mut [f64],
+        xw: &mut [f64],
+    ) -> usize {
+        // Same numerical-safety margin as the quadratic rule (see
+        // `screen`); +∞ radius (no global Lipschitz constant) keeps
+        // every feature: d ≤ ∞ always holds.
+        let threshold = radius + 1e-12;
+        let before = self.active.len();
+        let screened = &mut self.screened;
+        self.active.retain(|&j| {
+            let keep = d_score(xtheta[j].abs(), col_norms[j]) <= threshold;
+            if !keep {
+                screened[j] = true;
+                if beta[j] != 0.0 {
+                    // xw = Xβ; zeroing β_j removes its column contribution.
+                    x.col_axpy(j, -beta[j], xw);
                     beta[j] = 0.0;
                 }
             }
@@ -261,6 +316,70 @@ mod tests {
                 assert!((r[i] - expect[i]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn glm_radius_reduces_to_quadratic_at_l1_and_disables_at_inf() {
+        for (gap, lambda) in [(0.5, 1.0), (1e-7, 0.3), (0.0, 2.0)] {
+            assert_eq!(
+                gap_safe_radius_glm(gap, lambda, 1.0).to_bits(),
+                gap_safe_radius(gap, lambda).to_bits(),
+                "L = 1 is the Lasso radius"
+            );
+        }
+        // logistic: √(2·¼·gap)/λ = √(gap/2)/λ
+        let r = gap_safe_radius_glm(0.08, 2.0, 0.25);
+        assert!((r - (0.04f64).sqrt() / 2.0).abs() < 1e-15);
+        assert_eq!(gap_safe_radius_glm(0.5, 1.0, f64::INFINITY), f64::INFINITY);
+        assert_eq!(gap_safe_radius_glm(0.0, 1.0, f64::INFINITY), f64::INFINITY);
+    }
+
+    #[test]
+    fn screen_glm_matches_quadratic_decisions_and_fixes_predictor() {
+        let x = DenseMatrix::from_row_major(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let y = [3.0, 0.1];
+        let lambda = 1.0;
+        let mut beta_a = vec![2.0, 0.05];
+        let mut r = vec![0.0; 2];
+        primal::residual(&x, &y, &beta_a, &mut r);
+        let theta = vec![1.0, 0.1];
+        let gap = primal::primal_from_residual(&r, &beta_a, lambda)
+            - dual::dual_objective(&y, &theta, lambda);
+        use crate::data::design::DesignOps;
+        let mut xtheta = vec![0.0; 2];
+        x.xt_vec(&theta, &mut xtheta);
+        let norms = vec![1.0, 1.0];
+        let mut sa = ScreeningState::all_active(2);
+        let ka = sa.screen(&x, &xtheta, &norms, gap, lambda, &mut beta_a, &mut r);
+        // same problem through the GLM door with the quadratic radius
+        let mut beta_b = vec![2.0, 0.05];
+        let mut xw = vec![0.0; 2];
+        x.matvec(&beta_b, &mut xw);
+        let mut sb = ScreeningState::all_active(2);
+        let kb = sb.screen_glm(
+            &x,
+            &xtheta,
+            &norms,
+            gap_safe_radius_glm(gap, lambda, 1.0),
+            &mut beta_b,
+            &mut xw,
+        );
+        assert_eq!(ka, kb);
+        assert_eq!(sa.active(), sb.active());
+        assert_eq!(beta_a, beta_b);
+        // the predictor now equals X·(screened β)
+        let mut expect = vec![0.0; 2];
+        x.matvec(&beta_b, &mut expect);
+        for i in 0..2 {
+            assert!((xw[i] - expect[i]).abs() < 1e-12);
+        }
+        // infinite radius screens nothing
+        let mut s_inf = ScreeningState::all_active(2);
+        let mut b = vec![2.0, 0.05];
+        let k =
+            s_inf.screen_glm(&x, &xtheta, &norms, f64::INFINITY, &mut b, &mut xw);
+        assert_eq!(k, 0);
+        assert_eq!(s_inf.n_active(), 2);
     }
 
     #[test]

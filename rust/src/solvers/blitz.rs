@@ -161,18 +161,29 @@ fn blitz_generic<D: DesignOps>(
     for t in 1..=cfg.max_outer {
         // ---- barycenter dual update ----
         // φ = r / max(λ, ‖X_{W}ᵀ r‖_∞); at t = 1, W = full problem and
-        // the fused kernel yields Xᵀr + its norm in one sharded pass.
+        // the shared allocation-free rescale (fused Xᵀr + its norm in
+        // one sharded pass) materializes φ into the workspace buffer.
         // Later iterations max over the working set only, so the plain
         // fill plus a |W_t|-sized scan is the cheaper shape.
-        let mut denom = lambda;
-        if t == 1 || ws_idx.is_empty() {
-            denom = denom.max(x.xt_vec_abs_max(&ws.r, &mut ws.xtheta_inner));
+        let denom = if t == 1 || ws_idx.is_empty() {
+            dual::rescale_to_feasible_into(
+                x,
+                &ws.r,
+                lambda,
+                &mut ws.xtheta_inner,
+                &mut ws.theta_res,
+            )
         } else {
             x.xt_vec(&ws.r, &mut ws.xtheta_inner);
+            let mut d = lambda;
             for &j in &ws_idx {
-                denom = denom.max(ws.xtheta_inner[j].abs());
+                d = d.max(ws.xtheta_inner[j].abs());
             }
-        }
+            let r = &ws.r;
+            ws.theta_res.clear();
+            ws.theta_res.extend(r.iter().map(|&v| v / d));
+            d
+        };
         let inv = 1.0 / denom;
         // line search on cached correlations: a = Xᵀθ, b = Xᵀφ = Xᵀr/denom
         for v in ws.xtheta_inner.iter_mut() {
@@ -180,7 +191,7 @@ fn blitz_generic<D: DesignOps>(
         }
         let alpha = max_feasible_step(&ws.xtheta, &ws.xtheta_inner);
         for i in 0..n {
-            ws.theta[i] += alpha * (ws.r[i] * inv - ws.theta[i]);
+            ws.theta[i] += alpha * (ws.theta_res[i] - ws.theta[i]);
         }
         for j in 0..p {
             ws.xtheta[j] += alpha * (ws.xtheta_inner[j] - ws.xtheta[j]);

@@ -16,11 +16,20 @@
 //! [`crate::solvers::engine`], with all outer- and inner-loop buffers
 //! living in a reusable [`Workspace`]. One outer iteration performs no
 //! design-matrix copies and (once the workspace is warm) no allocation.
+//!
+//! The outer loop itself is datafit-generic ([`celer_solve_datafit`],
+//! the GLM follow-up's Algorithm 2): everything above reads only the
+//! generalized residual `−∇F(Xβ)` and the datafit's primal/dual values,
+//! so sparse logistic / Poisson regression
+//! ([`crate::solvers::glm`]) run the exact same pricing, working-set
+//! growth and view-based inner solves with a prox-Newton epoch swapped
+//! in for the CD epoch.
 
 use crate::data::design::{DesignMatrix, DesignOps};
 use crate::data::view::DesignView;
+use crate::datafit::{Datafit, Quadratic};
 use crate::lasso::{dual, primal, LassoProblem};
-use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
+use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Strategy, Workspace};
 use crate::solvers::SolveResult;
 use crate::ws::{build_working_set, WsPolicy};
 use std::time::Instant;
@@ -147,17 +156,48 @@ fn celer_generic<D: DesignOps>(
     cfg: &CelerConfig,
     ws: &mut Workspace,
 ) -> CelerOutput {
+    celer_solve_datafit(x, y, lambda, beta0, &Quadratic, cfg, ws, &mut CdStrategy)
+}
+
+/// The CELER outer loop (Algorithm 4 / the GLM follow-up's Algorithm 2),
+/// generic over the [`Datafit`]: pricing, working-set growth, the
+/// argmax-of-three dual point and the zero-copy [`DesignView`] inner
+/// solves all run on the **generalized residual** `−∇F(Xβ)`; `strategy`
+/// supplies the inner epochs (plain [`CdStrategy`] for the quadratic
+/// fit, [`ProxNewtonCd`](crate::solvers::glm::ProxNewtonCd) for sparse
+/// GLMs). The `F = Quadratic` instantiation is what [`celer_solve_on`]
+/// runs — bit-identical to the historical quadratic-only loop.
+pub fn celer_solve_datafit<D, F, S>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    datafit: &F,
+    cfg: &CelerConfig,
+    ws: &mut Workspace,
+    strategy: &mut S,
+) -> CelerOutput
+where
+    D: DesignOps,
+    F: Datafit,
+    S: for<'v> Strategy<DesignView<'v, D>, F>,
+{
     let n = x.n();
     let p = x.p();
     let start = Instant::now();
 
     // ---- outer-loop state in the reusable workspace ----
-    ws.init_primal(x, y, beta0);
+    ws.init_primal_datafit(x, y, beta0, datafit);
+    let cache = datafit.conj_cache(y);
 
-    // init: θ⁰ = θ⁰_inner = y / ‖Xᵀy‖_∞ (Algorithm 4)
-    let lmax = dual::lambda_max(x, y).max(f64::MIN_POSITIVE);
+    // init: θ⁰ = θ⁰_inner = r(0) / ‖Xᵀr(0)‖_∞ with r(0) = −∇F(0)
+    // (Algorithm 4's y/‖Xᵀy‖_∞, generalized to the datafit's residual
+    // at zero — the same vector that anchors λ_max).
+    let mut r0_buf = Vec::new();
+    let r0 = datafit.residual_at_zero(y, &mut r0_buf);
+    let lmax = x.xt_abs_max(r0).max(f64::MIN_POSITIVE);
     ws.theta.clear();
-    ws.theta.extend(y.iter().map(|&v| v / lmax));
+    ws.theta.extend(r0.iter().map(|&v| v / lmax));
     ws.theta_inner.clear();
     ws.theta_inner.extend_from_slice(&ws.theta);
     ws.theta_res.resize(n, 0.0);
@@ -188,16 +228,23 @@ fn celer_generic<D: DesignOps>(
     let mut prev_gap = f64::INFINITY;
     for t in 1..=cfg.max_outer {
         // ---- θ^t = argmax D over {θ^{t-1}, θ_inner^{t-1}, θ_res^t} ----
-        // Fused Eq. 4 rescale: Xᵀr and ‖Xᵀr‖_∞ in one sharded pass.
-        let denom = lambda.max(x.xt_vec_abs_max(&ws.r, &mut ws.scratch.xtr));
-        {
-            let r = &ws.r;
-            ws.theta_res.clear();
-            ws.theta_res.extend(r.iter().map(|&v| v / denom));
-        }
-        let winner = dual::best_dual_point(
+        // Allocation-free fused Eq. 4 rescale: Xᵀr and ‖Xᵀr‖_∞ in one
+        // sharded pass, θ_res into the workspace buffer; the denominator
+        // honors the datafit's `rescale_denom` hook, like the engine's
+        // dual update.
+        let denom = dual::glm_rescale_to_feasible_into(
+            x,
+            &ws.r,
+            lambda,
+            datafit,
+            &mut ws.scratch.xtr,
+            &mut ws.theta_res,
+        );
+        let winner = dual::glm_best_dual_point(
+            datafit,
             y,
             lambda,
+            cache,
             &[&ws.theta, &ws.theta_inner, &ws.theta_res],
         );
         match winner {
@@ -221,7 +268,7 @@ fn celer_generic<D: DesignOps>(
         // Correlations for θ_inner are cached from the rescale pass below
         // (§Perf: saves one full Xᵀ· sweep per outer iteration).
         let rank_winner =
-            dual::best_dual_point(y, lambda, &[&ws.theta_inner, &ws.theta_res]);
+            dual::glm_best_dual_point(datafit, y, lambda, cache, &[&ws.theta_inner, &ws.theta_res]);
         if rank_winner == 1 {
             let (xtheta, xtr) = (&mut ws.xtheta, &ws.scratch.xtr);
             for (o, &v) in xtheta.iter_mut().zip(xtr.iter()) {
@@ -233,8 +280,8 @@ fn celer_generic<D: DesignOps>(
         }
 
         // ---- global gap / stop ----
-        let p_val = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
-        gap = p_val - dual::dual_objective(y, &ws.theta, lambda);
+        let p_val = primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda);
+        gap = p_val - datafit.dual(y, &ws.theta, lambda, cache);
         let support = primal::support(&ws.beta);
         if gap <= cfg.tol {
             converged = true;
@@ -304,7 +351,7 @@ fn celer_generic<D: DesignOps>(
         };
         let inner_epochs = {
             let view = DesignView::new(x, &ws_idx, &ws.norms_sq);
-            let outcome = engine::solve(
+            let outcome = engine::solve_datafit(
                 &view,
                 y,
                 lambda,
@@ -312,18 +359,22 @@ fn celer_generic<D: DesignOps>(
                 None,
                 &inner_cfg,
                 &mut inner_ws,
-                &mut CdStrategy,
+                strategy,
+                datafit,
             );
             outcome.epochs
         };
         total_inner_epochs += inner_epochs;
 
         // ---- lift the subproblem solution back ----
+        // β is supported inside W_t (prune forces S ⊆ W_t), so the
+        // subproblem's predictor/residual are the full problem's too.
         ws.beta.fill(0.0);
         for (i, &j) in ws_idx.iter().enumerate() {
             ws.beta[j] = inner_ws.beta[i];
         }
         ws.r.copy_from_slice(&inner_ws.r);
+        ws.xw.copy_from_slice(&inner_ws.xw);
 
         // θ_inner: subproblem-feasible; rescale to be feasible for the
         // full design. (Algorithm 4 writes max(λ, ‖Xᵀθ‖_∞) which only

@@ -20,8 +20,16 @@
 //!   screening, record a trace entry, and test the stopping rule.
 //!
 //! Strategies implement only what genuinely differs between solvers: the
-//! primal epoch (cyclic CD vs. a proximal-gradient step) and, for
-//! FISTA, which residual the dual machinery should see.
+//! primal epoch (cyclic CD vs. a proximal-gradient step vs. a
+//! prox-Newton/IRLS sweep) and, for FISTA, which residual the dual
+//! machinery should see.
+//!
+//! The loop is generic over the [`Datafit`] (the GLM follow-up paper's
+//! observation that dual extrapolation + working sets apply verbatim to
+//! any smooth separable datafit): [`solve_datafit`] threads a `Datafit`
+//! through the primal value, the dual update and the Gap Safe radius,
+//! while [`solve`] is the quadratic (Lasso) instantiation — bit-identical
+//! to the pre-datafit engine.
 //!
 //! Paper map: the epoch → gap-check → dual-update loop is **Algorithm 1**
 //! (cyclic CD with dual extrapolation every `f` epochs; θ_res from
@@ -33,6 +41,7 @@
 //! loop interleaved over shared design sweeps.
 
 use crate::data::design::DesignOps;
+use crate::datafit::{Datafit, Quadratic};
 use crate::lasso::primal;
 use crate::screening::ScreeningState;
 use crate::solvers::{DualScratch, DualState, GapCheck, SolveResult};
@@ -108,8 +117,16 @@ pub struct EngineOutcome {
 /// A solver strategy: the per-epoch primal update, plus optional hooks
 /// for solvers whose dual machinery needs a different residual than the
 /// one the epochs maintain (FISTA).
-pub trait Strategy<D: DesignOps> {
-    /// Run one primal epoch, updating `beta` and `r` in place.
+///
+/// Strategies are generic over the [`Datafit`] `F` (default: the
+/// quadratic Lasso fit). For a non-quadratic datafit the epoch must keep
+/// **three** quantities consistent: β, the linear predictor `xw = Xβ`,
+/// and the generalized residual `r = −∇F(xw)` — see
+/// [`crate::solvers::glm::ProxNewtonCd`]. Quadratic strategies may
+/// ignore `xw` entirely (the engine never reads it for `F = Quadratic`).
+pub trait Strategy<D: DesignOps, F: Datafit = Quadratic> {
+    /// Run one primal epoch, updating `beta` and `r` (and, for GLM
+    /// datafits, `xw`) in place.
     ///
     /// `active` is the engine-maintained active set (all non-empty
     /// columns minus anything screened); `norms_sq` are cached `‖x_j‖²`.
@@ -122,8 +139,10 @@ pub trait Strategy<D: DesignOps> {
         lambda: f64,
         beta: &mut [f64],
         r: &mut [f64],
+        xw: &mut [f64],
         active: &[usize],
         norms_sq: &[f64],
+        datafit: &F,
     );
 
     /// Write the residual the dual update / primal value should use into
@@ -156,8 +175,10 @@ impl<D: DesignOps> Strategy<D> for CdStrategy {
         lambda: f64,
         beta: &mut [f64],
         r: &mut [f64],
+        _xw: &mut [f64],
         active: &[usize],
         norms_sq: &[f64],
+        _datafit: &Quadratic,
     ) {
         for &j in active {
             let nrm = norms_sq[j];
@@ -179,8 +200,14 @@ impl<D: DesignOps> Strategy<D> for CdStrategy {
 pub struct Workspace {
     /// Primal iterate β (length p of the most recent run).
     pub beta: Vec<f64>,
-    /// Maintained residual (length n).
+    /// Maintained generalized residual `−∇F(Xβ)` (length n; the plain
+    /// residual `y − Xβ` for the quadratic datafit).
     pub r: Vec<f64>,
+    /// Linear predictor `Xβ` (length n). Maintained by GLM strategies
+    /// and consumed by the datafit's primal value and the GLM screening
+    /// fix-up; quadratic strategies leave it at its `init_primal` state
+    /// (it is never read on the quadratic path after initialization).
+    pub xw: Vec<f64>,
     /// Check-time residual (FISTA evaluates at β, not the iterate).
     pub r_check: Vec<f64>,
     /// Cached `‖x_j‖²` for the current design.
@@ -249,6 +276,20 @@ impl Workspace {
     /// outer working-set loops (CELER / Blitz / GLMNET), so the
     /// buffer-preparation sequence exists exactly once.
     pub fn init_primal<D: DesignOps>(&mut self, x: &D, y: &[f64], beta0: Option<&[f64]>) {
+        self.init_primal_datafit(x, y, beta0, &Quadratic);
+    }
+
+    /// Datafit-generic [`Workspace::init_primal`]: one matvec fills the
+    /// linear predictor `xw = Xβ`, then the datafit derives the
+    /// generalized residual `r = −∇F(xw)` (for the quadratic fit that is
+    /// exactly `y − Xβ`, value for value).
+    pub fn init_primal_datafit<D: DesignOps, F: Datafit>(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        beta0: Option<&[f64]>,
+        datafit: &F,
+    ) {
         let n = x.n();
         let p = x.p();
         assert_eq!(y.len(), n);
@@ -261,8 +302,9 @@ impl Workspace {
             }
             None => self.beta.fill(0.0),
         }
+        self.xw.resize(n, 0.0);
         self.r.resize(n, 0.0);
-        primal::residual(x, y, &self.beta, &mut self.r);
+        primal::glm_state(x, datafit, y, &self.beta, &mut self.xw, &mut self.r);
     }
 
     /// Take the nested inner workspace (creating it on first use). The
@@ -320,6 +362,8 @@ impl Workspace {
 ///
 /// `active0`: explicit initial active set (GLMNET's strong/ever-active
 /// set); `None` means every non-empty column.
+///
+/// Shorthand for [`solve_datafit`] with the quadratic (Lasso) datafit.
 pub fn solve<D: DesignOps, S: Strategy<D>>(
     x: &D,
     y: &[f64],
@@ -329,6 +373,32 @@ pub fn solve<D: DesignOps, S: Strategy<D>>(
     cfg: &EngineConfig,
     ws: &mut Workspace,
     strategy: &mut S,
+) -> EngineOutcome {
+    solve_datafit(x, y, lambda, init, active0, cfg, ws, strategy, &Quadratic)
+}
+
+/// Datafit-generic engine loop: the epoch → gap-check → dual-update →
+/// screen → stop sequence of [`solve`], for any [`Datafit`] `F`.
+///
+/// The generalized residual `−∇F(Xβ)` flows through the identical dual
+/// machinery (Eq. 4 rescale, extrapolation ring, Eq. 13 best-dual); the
+/// differences are confined to the datafit calls: the primal value, the
+/// conjugate (dual) value, and the Gap Safe radius `√(2·L·gap)/λ`. For a
+/// non-quadratic `F`, screening patches the linear predictor `ws.xw`
+/// and refreshes `r` wholesale (the residual is not linear in β), and is
+/// skipped entirely when the datafit has no global Lipschitz constant
+/// (Poisson). The `F = Quadratic` instantiation is bit-identical to the
+/// historical engine — pinned in `tests/prop_glm.rs`.
+pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    init: Init<'_>,
+    active0: Option<&[usize]>,
+    cfg: &EngineConfig,
+    ws: &mut Workspace,
+    strategy: &mut S,
+    datafit: &F,
 ) -> EngineOutcome {
     let n = x.n();
     let p = x.p();
@@ -343,7 +413,7 @@ pub fn solve<D: DesignOps, S: Strategy<D>>(
             Init::Warm(b) => Some(b),
             Init::Resume => unreachable!(),
         };
-        ws.init_primal(x, y, beta0);
+        ws.init_primal_datafit(x, y, beta0, datafit);
         ws.dual.reset(n, p, cfg.k.max(1), cfg.extrapolate, cfg.best_dual);
         ws.scratch.prepare(n, p);
         ws.screening.reset_all_active(p);
@@ -360,6 +430,11 @@ pub fn solve<D: DesignOps, S: Strategy<D>>(
         assert_eq!(ws.beta.len(), p, "Resume requires a prepared workspace");
         assert_eq!(ws.r.len(), n, "Resume requires a prepared workspace");
         assert_eq!(ws.norms_sq.len(), p, "Resume requires cached norms");
+        if !F::IS_QUADRATIC {
+            // GLM primal values read the predictor, so a resumed run
+            // must inherit a consistent xw from the previous run.
+            assert_eq!(ws.xw.len(), n, "Resume requires a prepared predictor");
+        }
     }
     ws.r_check.resize(n, 0.0);
 
@@ -386,17 +461,27 @@ pub fn solve<D: DesignOps, S: Strategy<D>>(
     let mut prev_obj = if use_gap {
         f64::INFINITY
     } else {
-        primal::primal_from_residual(&ws.r, &ws.beta, lambda)
+        primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda)
     };
 
     for epoch in 1..=cfg.max_epochs {
         epochs = epoch;
         // ---- one primal epoch ----
-        strategy.epoch(x, y, lambda, &mut ws.beta, &mut ws.r, &ws.active, &ws.norms_sq);
+        strategy.epoch(
+            x,
+            y,
+            lambda,
+            &mut ws.beta,
+            &mut ws.r,
+            &mut ws.xw,
+            &ws.active,
+            &ws.norms_sq,
+            datafit,
+        );
 
         match cfg.stop {
             StopRule::PrimalDecrease => {
-                let obj = primal::primal_from_residual(&ws.r, &ws.beta, lambda);
+                let obj = primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda);
                 if prev_obj - obj < cfg.tol {
                     converged = true;
                     break;
@@ -407,23 +492,58 @@ pub fn solve<D: DesignOps, S: Strategy<D>>(
                 if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
                     strategy.fill_check_residual(x, y, &ws.beta, &ws.r, &mut ws.r_check);
                     let (d_res, d_accel) =
-                        ws.dual.update(x, y, lambda, &ws.r_check, &mut ws.scratch);
-                    let p_val = primal::primal_from_residual(&ws.r_check, &ws.beta, lambda);
+                        ws.dual.update_datafit(x, y, lambda, &ws.r_check, &mut ws.scratch, datafit);
+                    let p_val =
+                        primal::glm_primal_value(datafit, y, &ws.xw, &ws.r_check, &ws.beta, lambda);
                     gap = p_val - ws.dual.dval;
                     // Screen only while unconverged: the reported (β, gap)
                     // pair must be the one that passed the stopping test —
                     // a screening mutation after the final check would go
                     // uncorrected.
                     if cfg.screen && gap > cfg.tol {
-                        ws.screening.screen(
-                            x,
-                            &ws.dual.xtheta,
-                            &ws.col_norms,
-                            gap,
-                            lambda,
-                            &mut ws.beta,
-                            &mut ws.r,
-                        );
+                        if F::IS_QUADRATIC {
+                            // Residual-linear fast path: screening zeroes
+                            // β_j and patches r incrementally.
+                            let n_screened = ws.screening.screen(
+                                x,
+                                &ws.dual.xtheta,
+                                &ws.col_norms,
+                                gap,
+                                lambda,
+                                &mut ws.beta,
+                                &mut ws.r,
+                            );
+                            if n_screened > 0 {
+                                // Keep the predictor consistent for
+                                // strategies that rebuild r from it
+                                // (prox-Newton on the quadratic datafit):
+                                // r is exactly y − Xβ here, so xw = y − r.
+                                // Plain CD never reads xw; the fix-up is
+                                // one n-pass per screening event.
+                                for i in 0..n {
+                                    ws.xw[i] = y[i] - ws.r[i];
+                                }
+                            }
+                        } else if datafit.lipschitz().is_finite() {
+                            // GLM Gap Safe: radius √(2·L·gap)/λ, patch the
+                            // predictor, refresh r once if anything moved.
+                            let radius = crate::screening::gap_safe_radius_glm(
+                                gap,
+                                lambda,
+                                datafit.lipschitz(),
+                            );
+                            let n_screened = ws.screening.screen_glm(
+                                x,
+                                &ws.dual.xtheta,
+                                &ws.col_norms,
+                                radius,
+                                &mut ws.beta,
+                                &mut ws.xw,
+                            );
+                            if n_screened > 0 {
+                                datafit.fill_residual(y, &ws.xw, &mut ws.r);
+                            }
+                        }
                         let screening = &ws.screening;
                         ws.active.retain(|&j| !screening.is_screened(j));
                     }

@@ -163,14 +163,15 @@ fn glmnet_generic<D: DesignOps>(
         }
     }
 
-    // report a duality gap for diagnostics (GLMNET itself never computes it)
-    let theta = dual::rescale_to_feasible(x, &ws.r, lambda);
+    // report a duality gap for diagnostics (GLMNET itself never computes
+    // it) — allocation-free on the workspace's θ / Xᵀr buffers.
+    let _ = dual::rescale_to_feasible_into(x, &ws.r, lambda, &mut ws.scratch.xtr, &mut ws.theta);
     let gap = primal::primal_from_residual(&ws.r, &ws.beta, lambda)
-        - dual::dual_objective(y, &theta, lambda);
+        - dual::dual_objective(y, &ws.theta, lambda);
     SolveResult {
         beta: ws.beta.clone(),
         r: ws.r.clone(),
-        theta,
+        theta: ws.theta.clone(),
         gap,
         epochs,
         converged,

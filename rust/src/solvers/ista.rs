@@ -101,8 +101,10 @@ impl<D: DesignOps> Strategy<D> for IstaStrategy {
         lambda: f64,
         beta: &mut [f64],
         r: &mut [f64],
+        _xw: &mut [f64],
         _active: &[usize],
         _norms_sq: &[f64],
+        _datafit: &crate::datafit::Quadratic,
     ) {
         let p = beta.len();
         if self.fresh {

@@ -12,13 +12,14 @@ pub mod cd;
 pub mod celer;
 pub mod dykstra;
 pub mod engine;
+pub mod glm;
 pub mod glmnet;
 pub mod ista;
 pub mod path;
 
 use crate::data::design::DesignOps;
 use crate::extrapolation::ResidualBuffer;
-use crate::lasso::{dual, primal};
+use crate::lasso::primal;
 
 /// One duality-gap evaluation record (every `f` epochs).
 #[derive(Debug, Clone)]
@@ -43,7 +44,8 @@ pub struct GapCheck {
 #[derive(Debug, Clone)]
 pub struct SolveResult {
     pub beta: Vec<f64>,
-    /// Residual `y − Xβ`.
+    /// Generalized residual `−∇F(Xβ)` (= `y − Xβ` for the quadratic
+    /// datafit).
     pub r: Vec<f64>,
     /// Best feasible dual point found.
     pub theta: Vec<f64>,
@@ -115,7 +117,9 @@ pub struct DualState {
     /// Cached `‖y‖²` for the current solve (`NaN` until the first
     /// [`DualState::update`] after a reset). `y` never changes within a
     /// solve, so every dual evaluation of the solve reuses this instead
-    /// of re-running an O(n) pass per gap check.
+    /// of re-running an O(n) pass per gap check. For a non-quadratic
+    /// datafit ([`DualState::update_datafit`]) it holds that datafit's
+    /// [`conj_cache`](crate::datafit::Datafit::conj_cache) instead.
     pub y_norm_sq: f64,
     /// Use θ_accel at all.
     pub extrapolate: bool,
@@ -166,7 +170,8 @@ impl DualState {
     /// (D(θ_res), D(θ_accel) if computed).
     ///
     /// All O(n)/O(p) temporaries live in `scratch`, so a check performs no
-    /// heap allocation once the buffers are warm.
+    /// heap allocation once the buffers are warm. Shorthand for
+    /// [`DualState::update_datafit`] with the quadratic (Lasso) datafit.
     pub fn update<D: DesignOps>(
         &mut self,
         x: &D,
@@ -175,40 +180,57 @@ impl DualState {
         r: &[f64],
         scratch: &mut DualScratch,
     ) -> (f64, Option<f64>) {
+        self.update_datafit(x, y, lambda, r, scratch, &crate::datafit::Quadratic)
+    }
+
+    /// Datafit-generic [`DualState::update`]: `r` is the **generalized
+    /// residual** `−∇F(Xβ)` of the datafit (the plain residual for the
+    /// quadratic fit), which the Eq. 4 rescale, the extrapolation ring
+    /// and the best-dual bookkeeping consume identically across GLMs —
+    /// the GLM follow-up paper's central observation. `y_norm_sq` holds
+    /// the datafit's conjugate cache (`‖y‖²` for quadratic). The
+    /// quadratic instantiation is bit-identical to the historical
+    /// hardcoded update (pinned in `tests/prop_glm.rs`).
+    pub fn update_datafit<D: DesignOps, F: crate::datafit::Datafit>(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        lambda: f64,
+        r: &[f64],
+        scratch: &mut DualScratch,
+        datafit: &F,
+    ) -> (f64, Option<f64>) {
         self.buffer.push(r);
         let n = y.len();
         let p = x.p();
         scratch.xtr.resize(p, 0.0);
         if self.y_norm_sq.is_nan() {
-            self.y_norm_sq = crate::util::linalg::dot(y, y);
+            self.y_norm_sq = datafit.conj_cache(y);
         }
 
         // θ_res = r / max(λ, ‖Xᵀr‖_∞); the fused kernel yields Xᵀr and
         // its norm in one sharded pass (no second serial p-scan).
-        let denom = lambda.max(x.xt_vec_abs_max(r, &mut scratch.xtr));
+        let denom = datafit.rescale_denom(lambda, x.xt_vec_abs_max(r, &mut scratch.xtr));
         let inv = 1.0 / denom;
-        let d_res = {
-            // D(θ_res) without materializing θ_res: θ = r·inv
-            let mut dist_sq = 0.0;
-            for i in 0..n {
-                let d = r[i] * inv - y[i] / lambda;
-                dist_sq += d * d;
-            }
-            0.5 * self.y_norm_sq - 0.5 * lambda * lambda * dist_sq
-        };
+        // D(θ_res) without materializing θ_res: θ = r·inv
+        let d_res = datafit.dual_scaled(y, r, inv, lambda, self.y_norm_sq);
 
         let mut best_val = d_res;
         let mut best = DualChoice::Residual;
 
         // θ_accel (written into scratch, copied into self only if it
         // wins). The extrapolated residual itself lands in
-        // `scratch.extrap.r_accel` — no per-check allocation.
+        // `scratch.extrap.r_accel` — no per-check allocation. For a
+        // non-quadratic datafit the extrapolated point can leave the
+        // conjugate domain; `Datafit::dual` then returns −∞ and the
+        // candidate simply loses the comparison below.
         let mut d_accel_out = None;
         if self.extrapolate && self.buffer.extrapolate_into(&mut scratch.extrap) {
             let r_acc = &scratch.extrap.r_accel;
             scratch.xtr_acc.resize(p, 0.0);
             scratch.theta_acc.resize(n, 0.0);
-            let denom_a = lambda.max(x.xt_vec_abs_max(r_acc, &mut scratch.xtr_acc));
+            let denom_a =
+                datafit.rescale_denom(lambda, x.xt_vec_abs_max(r_acc, &mut scratch.xtr_acc));
             let inv_a = 1.0 / denom_a;
             for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
                 *t = v * inv_a;
@@ -216,8 +238,7 @@ impl DualState {
             for v in scratch.xtr_acc.iter_mut() {
                 *v *= inv_a;
             }
-            let d_acc =
-                dual::dual_objective_cached(y, &scratch.theta_acc, lambda, self.y_norm_sq);
+            let d_acc = datafit.dual(y, &scratch.theta_acc, lambda, self.y_norm_sq);
             d_accel_out = Some(d_acc);
             if d_acc > best_val {
                 best_val = d_acc;

@@ -16,6 +16,7 @@
 //!   epochs share each design sweep across lanes.
 
 use crate::data::design::DesignMatrix;
+use crate::datafit::GlmFamily;
 use crate::lasso::dual;
 use crate::multitask::solver::{mt_celer_solve_ws, MtConfig};
 use crate::multitask::TaskMatrix;
@@ -24,6 +25,7 @@ use crate::solvers::blitz::{blitz_solve_ws, BlitzConfig};
 use crate::solvers::cd::{cd_solve_ws, CdConfig};
 use crate::solvers::celer::{celer_solve_on_ws, CelerConfig};
 use crate::solvers::engine::Workspace;
+use crate::solvers::glm::{glm_celer_solve_ws, ProxNewtonCd};
 use crate::solvers::glmnet::{glmnet_solve_ws, GlmnetConfig};
 use std::time::Instant;
 
@@ -59,6 +61,12 @@ pub enum PathSolver {
     /// the block engine's q = 1 path is the scalar path, so this slots
     /// into any grid job; true q > 1 grids go through [`run_mt_path`].
     MultiTask(MtConfig),
+    /// Sparse logistic regression with CELER on the datafit-generic
+    /// engine ([`crate::solvers::glm`]). Grid jobs binarize continuous
+    /// targets by sign (±1 targets pass through unchanged), so
+    /// "celer-logreg" slots into any coordinator grid; call
+    /// [`glm_path`] directly for true-label paths or the Poisson fit.
+    CelerLogreg(CelerConfig),
 }
 
 impl PathSolver {
@@ -78,6 +86,7 @@ impl PathSolver {
             }
             PathSolver::BatchedCd(_) => "cd-batched",
             PathSolver::MultiTask(_) => "celer-mt",
+            PathSolver::CelerLogreg(_) => "celer-logreg",
         }
     }
 
@@ -110,6 +119,9 @@ impl PathSolver {
             }
             "celer-mt" | "mt-celer" => {
                 PathSolver::MultiTask(MtConfig { tol, ..Default::default() })
+            }
+            "celer-logreg" | "logreg" => {
+                PathSolver::CelerLogreg(CelerConfig { tol, ..Default::default() })
             }
             _ => return None,
         })
@@ -187,6 +199,16 @@ pub fn run_path_with_workspace(
     if let PathSolver::BatchedCd(cfg) = solver {
         return run_path_batched(x, y, grid, cfg, store_betas, ws);
     }
+    if let PathSolver::CelerLogreg(cfg) = solver {
+        // Grid jobs arrive with whatever targets the dataset has;
+        // logistic regression needs ±1 labels, so binarize by sign
+        // (identity on label vectors).
+        let labels = crate::datafit::sign_labels(y);
+        let mut res =
+            glm_path_with_workspace(x, &labels, GlmFamily::Logistic, grid, cfg, store_betas, ws);
+        res.solver = solver.name().to_string();
+        return res;
+    }
     let start = Instant::now();
     let p = crate::data::design::DesignOps::p(x);
     let mut beta = vec![0.0; p];
@@ -219,6 +241,7 @@ pub fn run_path_with_workspace(
                 (out.b.data, out.gap, out.epochs, out.converged)
             }
             PathSolver::BatchedCd(_) => unreachable!("handled by run_path_batched"),
+            PathSolver::CelerLogreg(_) => unreachable!("handled by glm_path_with_workspace"),
         };
         beta = new_beta;
         steps.push(PathStep {
@@ -281,6 +304,63 @@ pub fn run_path_batched(
         .collect();
     PathResult {
         solver: PathSolver::BatchedCd(cfg.clone()).name().to_string(),
+        steps,
+        total_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run a sparse-GLM λ path (logistic or Poisson) with warm starts:
+/// β̂(λ_i) seeds λ_{i+1}, exactly the sequential chain of [`run_path`]
+/// with the datafit swapped. Logistic targets must be ±1 labels,
+/// Poisson targets non-negative counts (asserted).
+pub fn glm_path(
+    x: &DesignMatrix,
+    y: &[f64],
+    family: GlmFamily,
+    grid: &[f64],
+    cfg: &CelerConfig,
+    store_betas: bool,
+) -> PathResult {
+    let mut ws = Workspace::new();
+    glm_path_with_workspace(x, y, family, grid, cfg, store_betas, &mut ws)
+}
+
+/// [`glm_path`] on a caller-provided [`Workspace`]: the engine buffers
+/// (β, generalized residual, predictor, dual state, extrapolation ring,
+/// nested working-set workspace) **and** one [`ProxNewtonCd`] scratch
+/// (IRLS weights, model residual, line-search snapshots) are reused for
+/// every λ — no per-λ reallocation once warm, matching the quadratic
+/// path driver.
+pub fn glm_path_with_workspace(
+    x: &DesignMatrix,
+    y: &[f64],
+    family: GlmFamily,
+    grid: &[f64],
+    cfg: &CelerConfig,
+    store_betas: bool,
+    ws: &mut Workspace,
+) -> PathResult {
+    let start = Instant::now();
+    let p = crate::data::design::DesignOps::p(x);
+    let mut strategy = ProxNewtonCd::default();
+    let mut beta = vec![0.0; p];
+    let mut steps = Vec::with_capacity(grid.len());
+    for &lambda in grid {
+        let t0 = Instant::now();
+        let out = glm_celer_solve_ws(x, y, family, lambda, Some(&beta), cfg, ws, &mut strategy);
+        beta = out.result.beta;
+        steps.push(PathStep {
+            lambda,
+            seconds: t0.elapsed().as_secs_f64(),
+            epochs: out.result.epochs,
+            gap: out.result.gap,
+            support_size: crate::lasso::primal::support_size(&beta),
+            converged: out.result.converged,
+            beta: if store_betas { Some(beta.clone()) } else { None },
+        });
+    }
+    PathResult {
+        solver: format!("celer-{}", family.name()),
         steps,
         total_seconds: start.elapsed().as_secs_f64(),
     }
@@ -481,6 +561,58 @@ mod tests {
             assert!((pa - pb).abs() <= 2.0 * tol, "λ#{i}: {pa} vs {pb}");
             assert_eq!(a.support_size, b.support_size, "λ#{i}");
         }
+    }
+
+    #[test]
+    fn logreg_solver_name_roundtrip_and_grid_runs() {
+        let s = PathSolver::by_name("celer-logreg", 1e-6).unwrap();
+        assert_eq!(s.name(), "celer-logreg");
+        assert_eq!(PathSolver::by_name("logreg", 1e-6).unwrap().name(), "celer-logreg");
+        // continuous targets are binarized by sign, so the solver runs
+        // on any grid job; every step must carry a gap certificate.
+        let ds = synth::leukemia_mini(55);
+        let labels = crate::data::synth::sign_labels(&ds.y);
+        let lmax = crate::solvers::glm::logreg_lambda_max(&ds.x, &labels);
+        let grid = lambda_grid(lmax, 0.1, 4);
+        let tol = 1e-7;
+        let res = run_path(
+            &ds.x,
+            &ds.y,
+            &grid,
+            &PathSolver::by_name("celer-logreg", tol).unwrap(),
+            true,
+        );
+        assert_eq!(res.solver, "celer-logreg");
+        assert!(res.all_converged());
+        for s in &res.steps {
+            assert!(s.gap <= tol, "gap {} at λ {}", s.gap, s.lambda);
+        }
+        // support grows down the path
+        assert!(
+            res.steps.last().unwrap().support_size >= res.steps[0].support_size
+        );
+    }
+
+    #[test]
+    fn glm_path_warm_starts_reduce_work() {
+        use crate::datafit::GlmFamily;
+        let ds = synth::logreg_mini(56);
+        let lmax = crate::solvers::glm::logreg_lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.05, 5);
+        let cfg = crate::solvers::celer::CelerConfig { tol: 1e-7, ..Default::default() };
+        let res = glm_path(&ds.x, &ds.y, GlmFamily::Logistic, &grid, &cfg, false);
+        assert_eq!(res.solver, "celer-logistic");
+        assert!(res.all_converged());
+        // a cold solve at the last λ must cost at least as much as the
+        // warm-started final path step
+        let cold = crate::solvers::glm::sparse_logreg_solve(
+            &ds.x,
+            &ds.y,
+            *grid.last().unwrap(),
+            None,
+            &cfg,
+        );
+        assert!(cold.result.epochs >= res.steps.last().unwrap().epochs);
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! Property tests for the datafit abstraction (sparse GLM engine).
+//!
+//! 1. Finite-difference checks: each datafit's generalized residual is
+//!    the negative gradient of its value, and its IRLS weights are the
+//!    second derivative.
+//! 2. **Bit-identity pin**: the quadratic datafit through the generic
+//!    engine (`cd_solve` → `engine::solve_datafit` with `Quadratic`) is
+//!    bitwise equal to a faithful test-local port of the PRE-refactor
+//!    engine loop (CD epochs, hardcoded dual update, hardcoded Gap Safe
+//!    screening) — dense + CSC, screening on/off, extrapolation on/off.
+//! 3. Logistic CELER solves terminate with a duality gap ≤ tol certified
+//!    by the extrapolated dual point, and match an unscreened full-design
+//!    prox-Newton reference on the objective.
+//! 4. GLM λ-path workspace reuse is bit-invariant.
+
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::synth;
+use celer::datafit::{Datafit, GlmFamily, Logistic, Poisson, Quadratic};
+use celer::extrapolation::ResidualBuffer;
+use celer::lasso::{dual, primal};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::engine::Workspace;
+use celer::solvers::glm::{glm_cd_solve, logreg_lambda_max, sparse_logreg_solve};
+use celer::solvers::path::{glm_path_with_workspace, lambda_grid};
+use celer::solvers::DualScratch;
+
+// ---------------------------------------------------------------------
+// 1. finite-difference gradient / curvature checks
+// ---------------------------------------------------------------------
+
+fn fd_check<F: Datafit>(datafit: &F, y: &[f64], xw: &[f64], tol: f64) {
+    let n = y.len();
+    let mut r = vec![0.0; n];
+    datafit.fill_residual(y, xw, &mut r);
+    let mut w = vec![0.0; n];
+    datafit.fill_weights(y, xw, &mut w);
+    let eps = 1e-6;
+    let (mut up, mut dn) = (xw.to_vec(), xw.to_vec());
+    let (mut ru, mut rd) = (vec![0.0; n], vec![0.0; n]);
+    for i in 0..n {
+        up[i] = xw[i] + eps;
+        dn[i] = xw[i] - eps;
+        datafit.fill_residual(y, &up, &mut ru);
+        datafit.fill_residual(y, &dn, &mut rd);
+        // gradient: dF/du_i = −r_i
+        let g = (datafit.value(y, &up, &ru) - datafit.value(y, &dn, &rd)) / (2.0 * eps);
+        assert!(
+            (g + r[i]).abs() < tol,
+            "{}: dF/du[{i}] = {g}, −r = {}",
+            datafit.name(),
+            -r[i]
+        );
+        // curvature: d²F/du_i² = w_i = −dr_i/du_i
+        let h = -(ru[i] - rd[i]) / (2.0 * eps);
+        assert!(
+            (h - w[i]).abs() < tol,
+            "{}: d²F/du[{i}]² = {h}, w = {}",
+            datafit.name(),
+            w[i]
+        );
+        up[i] = xw[i];
+        dn[i] = xw[i];
+    }
+}
+
+#[test]
+fn datafit_derivatives_match_finite_differences() {
+    let mut rng = celer::util::rng::Rng::new(123);
+    let n = 40;
+    let xw: Vec<f64> = (0..n).map(|_| rng.normal() * 0.8).collect();
+    let y_reg: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let y_cls: Vec<f64> = (0..n).map(|_| if rng.uniform() < 0.5 { -1.0 } else { 1.0 }).collect();
+    let y_cnt: Vec<f64> = (0..n).map(|_| (rng.uniform() * 4.0).floor()).collect();
+    fd_check(&Quadratic, &y_reg, &xw, 1e-5);
+    fd_check(&Logistic, &y_cls, &xw, 1e-5);
+    fd_check(&Poisson, &y_cnt, &xw, 1e-4);
+}
+
+// ---------------------------------------------------------------------
+// 2. quadratic bit-identity vs the pre-refactor engine
+// ---------------------------------------------------------------------
+
+/// Faithful port of the pre-datafit engine state: the hardcoded
+/// quadratic dual update (Eq. 4 rescale + fused D(θ_res) + θ_accel +
+/// Eq. 13 monotone best) exactly as `DualState::update` inlined it
+/// before the refactor.
+struct LegacyDual {
+    buffer: ResidualBuffer,
+    theta: Vec<f64>,
+    xtheta: Vec<f64>,
+    dval: f64,
+    y_norm_sq: f64,
+    extrapolate: bool,
+    monotone: bool,
+}
+
+impl LegacyDual {
+    fn new(n: usize, p: usize, k: usize, extrapolate: bool, monotone: bool) -> Self {
+        LegacyDual {
+            buffer: ResidualBuffer::new(k.max(1)),
+            theta: vec![0.0; n],
+            xtheta: vec![0.0; p],
+            dval: f64::NEG_INFINITY,
+            y_norm_sq: f64::NAN,
+            extrapolate,
+            monotone,
+        }
+    }
+
+    fn update(
+        &mut self,
+        x: &DesignMatrix,
+        y: &[f64],
+        lambda: f64,
+        r: &[f64],
+        scratch: &mut DualScratch,
+    ) {
+        self.buffer.push(r);
+        let n = y.len();
+        let p = x.p();
+        scratch.xtr.resize(p, 0.0);
+        if self.y_norm_sq.is_nan() {
+            self.y_norm_sq = celer::util::linalg::dot(y, y);
+        }
+        let denom = lambda.max(x.xt_vec_abs_max(r, &mut scratch.xtr));
+        let inv = 1.0 / denom;
+        let d_res = {
+            let mut dist_sq = 0.0;
+            for i in 0..n {
+                let d = r[i] * inv - y[i] / lambda;
+                dist_sq += d * d;
+            }
+            0.5 * self.y_norm_sq - 0.5 * lambda * lambda * dist_sq
+        };
+        let mut best_val = d_res;
+        let mut best_is_accel = false;
+        if self.extrapolate && self.buffer.extrapolate_into(&mut scratch.extrap) {
+            let r_acc = &scratch.extrap.r_accel;
+            scratch.xtr_acc.resize(p, 0.0);
+            scratch.theta_acc.resize(n, 0.0);
+            let denom_a = lambda.max(x.xt_vec_abs_max(r_acc, &mut scratch.xtr_acc));
+            let inv_a = 1.0 / denom_a;
+            for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
+                *t = v * inv_a;
+            }
+            for v in scratch.xtr_acc.iter_mut() {
+                *v *= inv_a;
+            }
+            let d_acc = dual::dual_objective_cached(y, &scratch.theta_acc, lambda, self.y_norm_sq);
+            if d_acc > best_val {
+                best_val = d_acc;
+                best_is_accel = true;
+            }
+        }
+        if self.monotone && self.dval >= best_val {
+            return;
+        }
+        if best_is_accel {
+            self.theta.clear();
+            self.theta.extend_from_slice(&scratch.theta_acc);
+            self.xtheta.clear();
+            self.xtheta.extend_from_slice(&scratch.xtr_acc);
+            self.dval = best_val;
+        } else {
+            self.theta.clear();
+            self.theta.extend(r.iter().map(|&v| v * inv));
+            self.xtheta.clear();
+            self.xtheta.extend(scratch.xtr.iter().map(|&v| v * inv));
+            self.dval = d_res;
+        }
+    }
+}
+
+struct LegacyOut {
+    beta: Vec<f64>,
+    r: Vec<f64>,
+    theta: Vec<f64>,
+    gap: f64,
+    epochs: usize,
+    converged: bool,
+}
+
+/// Faithful port of the pre-datafit `engine::solve` quadratic loop under
+/// `StopRule::DualityGap` with `CdStrategy`: CD epochs over the active
+/// set, gap checks every `gap_freq` epochs, hardcoded quadratic primal /
+/// dual / Gap Safe screening, in the exact statement order of the old
+/// engine.
+#[allow(clippy::too_many_arguments)]
+fn legacy_cd_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    tol: f64,
+    max_epochs: usize,
+    gap_freq: usize,
+    k: usize,
+    extrapolate: bool,
+    screen: bool,
+) -> LegacyOut {
+    let n = x.n();
+    let p = x.p();
+    let mut norms_sq = vec![0.0; p];
+    for (j, v) in norms_sq.iter_mut().enumerate() {
+        *v = x.col_norm_sq(j);
+    }
+    let col_norms: Vec<f64> = norms_sq.iter().map(|v| v.sqrt()).collect();
+    let mut beta = vec![0.0; p];
+    let mut r = vec![0.0; n];
+    primal::residual(x, y, &beta, &mut r);
+    let mut active: Vec<usize> = (0..p).filter(|&j| norms_sq[j] > 0.0).collect();
+    let mut dualst = LegacyDual::new(n, p, k.max(1), extrapolate, true);
+    let mut scratch = DualScratch::default();
+    scratch.prepare(n, p);
+    let mut screened = vec![false; p];
+    let mut scr_active: Vec<usize> = (0..p).collect();
+    let mut r_check = vec![0.0; n];
+    let mut gap = f64::INFINITY;
+    let mut epochs = 0usize;
+    let mut converged = false;
+    for epoch in 1..=max_epochs {
+        epochs = epoch;
+        // ---- CdStrategy::epoch, verbatim ----
+        for &j in &active {
+            let nrm = norms_sq[j];
+            let g = x.col_dot(j, &r);
+            let old = beta[j];
+            let new = celer::util::soft_threshold(old + g / nrm, lambda / nrm);
+            if new != old {
+                x.col_axpy(j, old - new, &mut r);
+                beta[j] = new;
+            }
+        }
+        if epoch % gap_freq == 0 || epoch == max_epochs {
+            r_check.copy_from_slice(&r);
+            dualst.update(x, y, lambda, &r_check, &mut scratch);
+            let p_val = primal::primal_from_residual(&r_check, &beta, lambda);
+            gap = p_val - dualst.dval;
+            if screen && gap > tol {
+                // ---- ScreeningState::screen, verbatim ----
+                let radius = celer::screening::gap_safe_radius(gap, lambda);
+                let threshold = radius + 1e-12;
+                scr_active.retain(|&j| {
+                    let keep = celer::screening::d_score(dualst.xtheta[j].abs(), col_norms[j])
+                        <= threshold;
+                    if !keep {
+                        screened[j] = true;
+                        if beta[j] != 0.0 {
+                            x.col_axpy(j, beta[j], &mut r);
+                            beta[j] = 0.0;
+                        }
+                    }
+                    keep
+                });
+                active.retain(|&j| !screened[j]);
+            }
+            if gap <= tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+    LegacyOut { beta, r, theta: dualst.theta, gap, epochs, converged }
+}
+
+fn assert_bitwise_equal_to_legacy(x: &DesignMatrix, y: &[f64], ratio: f64, screen: bool, extrapolate: bool) {
+    let lambda = dual::lambda_max(x, y) * ratio;
+    let cfg = CdConfig {
+        tol: 1e-9,
+        max_epochs: 2_000,
+        gap_freq: 10,
+        k: 5,
+        extrapolate,
+        best_dual: true,
+        screen,
+        trace: false,
+    };
+    let new = cd_solve(x, y, lambda, None, &cfg);
+    let old = legacy_cd_solve(
+        x, y, lambda, cfg.tol, cfg.max_epochs, cfg.gap_freq, cfg.k, extrapolate, screen,
+    );
+    assert_eq!(new.epochs, old.epochs, "epoch count");
+    assert_eq!(new.converged, old.converged);
+    assert_eq!(new.gap.to_bits(), old.gap.to_bits(), "gap bits");
+    assert_eq!(new.beta.len(), old.beta.len());
+    for j in 0..new.beta.len() {
+        assert_eq!(new.beta[j].to_bits(), old.beta[j].to_bits(), "beta[{j}]");
+    }
+    for i in 0..new.r.len() {
+        assert_eq!(new.r[i].to_bits(), old.r[i].to_bits(), "r[{i}]");
+    }
+    for i in 0..new.theta.len() {
+        assert_eq!(new.theta[i].to_bits(), old.theta[i].to_bits(), "theta[{i}]");
+    }
+}
+
+#[test]
+fn quadratic_engine_bitwise_matches_prerefactor_dense() {
+    let ds = synth::leukemia_mini(200);
+    for &(screen, extrap) in &[(false, true), (true, true), (false, false), (true, false)] {
+        assert_bitwise_equal_to_legacy(&ds.x, &ds.y, 0.1, screen, extrap);
+    }
+}
+
+#[test]
+fn quadratic_engine_bitwise_matches_prerefactor_sparse() {
+    let ds = synth::finance_mini(201);
+    for &(screen, extrap) in &[(false, true), (true, true)] {
+        assert_bitwise_equal_to_legacy(&ds.x, &ds.y, 0.2, screen, extrap);
+    }
+}
+
+#[test]
+fn quadratic_celer_results_unchanged_by_datafit_threading() {
+    // celer_solve runs through the datafit-generic outer loop with
+    // Quadratic; its gap must still be an exactly recomputable
+    // certificate of the returned (β, θ) pair, and the solution must
+    // match a tight legacy-pinned CD solve on the objective.
+    let ds = synth::leukemia_mini(202);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 10.0;
+    let cfg = celer::solvers::celer::CelerConfig { tol: 1e-10, ..Default::default() };
+    let out = celer::solvers::celer::celer_solve_on(&ds.x, &ds.y, lambda, None, &cfg);
+    assert!(out.result.converged);
+    let p_val = primal::primal(&ds.x, &ds.y, &out.result.beta, lambda);
+    let d_val = dual::dual_objective(&ds.y, &out.result.theta, lambda);
+    assert!((p_val - d_val - out.gap()).abs() < 1e-12, "gap recomputes bitwise-close");
+    let legacy = legacy_cd_solve(&ds.x, &ds.y, lambda, 1e-12, 50_000, 10, 5, true, false);
+    assert!(legacy.converged);
+    let p_legacy = primal::primal(&ds.x, &ds.y, &legacy.beta, lambda);
+    assert!(p_val - p_legacy <= 2e-10, "celer {p_val} vs legacy CD {p_legacy}");
+}
+
+// ---------------------------------------------------------------------
+// 3. logistic: gap-certified convergence vs unscreened reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn logreg_celer_gap_certified_against_unscreened_reference() {
+    for seed in [210u64, 211] {
+        let ds = synth::logreg_mini(seed);
+        let lambda = logreg_lambda_max(&ds.x, &ds.y) / 12.0;
+        let tol = 1e-9;
+        let ws_out = sparse_logreg_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &celer::solvers::celer::CelerConfig { tol, ..Default::default() },
+        );
+        assert!(ws_out.result.converged, "seed {seed}: gap {}", ws_out.gap());
+        assert!(ws_out.gap() <= tol);
+        // unscreened, no-working-set reference at 10× tighter tolerance
+        let reference = glm_cd_solve(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &Logistic,
+            &CdConfig { tol: tol / 10.0, screen: false, ..Default::default() },
+        );
+        assert!(reference.converged);
+        let n = ds.x.n();
+        let (mut xw, mut r) = (vec![0.0; n], vec![0.0; n]);
+        primal::glm_state(&ds.x, &Logistic, &ds.y, &ws_out.result.beta, &mut xw, &mut r);
+        let p_ws = primal::glm_primal_value(&Logistic, &ds.y, &xw, &r, &ws_out.result.beta, lambda);
+        primal::glm_state(&ds.x, &Logistic, &ds.y, &reference.beta, &mut xw, &mut r);
+        let p_ref = primal::glm_primal_value(&Logistic, &ds.y, &xw, &r, &reference.beta, lambda);
+        // both gap-certified ⇒ objectives within the sum of tolerances
+        assert!(
+            (p_ws - p_ref).abs() <= 2.0 * tol,
+            "seed {seed}: {p_ws} vs {p_ref}"
+        );
+        // the certificate is externally recomputable and feasible
+        let d_val = Logistic.dual(&ds.y, &ws_out.result.theta, lambda, 0.0);
+        assert!((p_ws - d_val - ws_out.gap()).abs() < 1e-9);
+        assert!(dual::is_feasible(&ds.x, &ws_out.result.theta, 1e-9));
+    }
+}
+
+#[test]
+fn logreg_sparse_design_and_screening_safety() {
+    // CSC storage through the same generic engine, with Gap Safe
+    // screening (L = ¼ radius) proved harmless against the unscreened
+    // run.
+    let ds = synth::finance_mini(212);
+    let y = synth::sign_labels(&ds.y);
+    let lambda = logreg_lambda_max(&ds.x, &y) / 8.0;
+    let tol = 1e-8;
+    let plain = glm_cd_solve(&ds.x, &y, lambda, None, &Logistic, &CdConfig { tol, ..Default::default() });
+    let screened = glm_cd_solve(
+        &ds.x,
+        &y,
+        lambda,
+        None,
+        &Logistic,
+        &CdConfig { tol, screen: true, ..Default::default() },
+    );
+    assert!(plain.converged && screened.converged);
+    let n = ds.x.n();
+    let (mut xw, mut r) = (vec![0.0; n], vec![0.0; n]);
+    primal::glm_state(&ds.x, &Logistic, &y, &plain.beta, &mut xw, &mut r);
+    let pa = primal::glm_primal_value(&Logistic, &y, &xw, &r, &plain.beta, lambda);
+    primal::glm_state(&ds.x, &Logistic, &y, &screened.beta, &mut xw, &mut r);
+    let pb = primal::glm_primal_value(&Logistic, &y, &xw, &r, &screened.beta, lambda);
+    assert!((pa - pb).abs() <= 2.0 * tol, "{pa} vs {pb}");
+}
+
+#[test]
+fn poisson_solves_certify_and_respect_domain() {
+    let ds = synth::poisson_mini(213);
+    let lambda = celer::solvers::glm::poisson_lambda_max(&ds.x, &ds.y) / 4.0;
+    let tol = 1e-8;
+    let out = celer::solvers::glm::sparse_poisson_solve(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &celer::solvers::celer::CelerConfig { tol, ..Default::default() },
+    );
+    assert!(out.result.converged, "gap {}", out.gap());
+    // dual point stays in the conjugate domain (yᵢ − λθᵢ ≥ 0)
+    for i in 0..ds.y.len() {
+        assert!(ds.y[i] - lambda * out.result.theta[i] >= -1e-12, "i={i}");
+    }
+    assert!(dual::is_feasible(&ds.x, &out.result.theta, 1e-9));
+}
+
+// ---------------------------------------------------------------------
+// 4. path workspace reuse invariance
+// ---------------------------------------------------------------------
+
+#[test]
+fn glm_path_workspace_reuse_is_bit_invariant() {
+    let ds = synth::logreg_mini(220);
+    let lmax = logreg_lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lmax, 0.08, 5);
+    let cfg = celer::solvers::celer::CelerConfig { tol: 1e-8, ..Default::default() };
+    let mut fresh_ws = Workspace::new();
+    let fresh =
+        glm_path_with_workspace(&ds.x, &ds.y, GlmFamily::Logistic, &grid, &cfg, true, &mut fresh_ws);
+    assert!(fresh.all_converged());
+    // dirty the workspace with unrelated quadratic + GLM solves first
+    let mut dirty_ws = Workspace::new();
+    let quad = synth::leukemia_mini(220);
+    let _ = celer::solvers::cd::cd_solve_ws(
+        &quad.x,
+        &quad.y,
+        dual::lambda_max(&quad.x, &quad.y) / 3.0,
+        None,
+        &CdConfig::default(),
+        &mut dirty_ws,
+    );
+    let _ = glm_path_with_workspace(
+        &ds.x,
+        &ds.y,
+        GlmFamily::Logistic,
+        &grid[..2],
+        &cfg,
+        false,
+        &mut dirty_ws,
+    );
+    let reused =
+        glm_path_with_workspace(&ds.x, &ds.y, GlmFamily::Logistic, &grid, &cfg, true, &mut dirty_ws);
+    assert_eq!(fresh.steps.len(), reused.steps.len());
+    for (a, b) in fresh.steps.iter().zip(&reused.steps) {
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        let (ba, bb) = (a.beta.as_ref().unwrap(), b.beta.as_ref().unwrap());
+        for j in 0..ba.len() {
+            assert_eq!(ba[j].to_bits(), bb[j].to_bits(), "λ={} j={j}", a.lambda);
+        }
+    }
+}
