@@ -3,6 +3,7 @@
 //! extrapolation solve. These are the quantities the profile-driven
 //! optimization pass tracks in EXPERIMENTS.md §Perf.
 
+use celer::data::dense::DenseMatrix;
 use celer::data::design::{DesignMatrix, DesignOps};
 use celer::data::synth;
 use celer::data::view::DesignView;
@@ -173,6 +174,136 @@ fn bench_lane_ops(tag: &str, x: &DesignMatrix, iters: usize) {
             acc += out[0];
         }
         assert!(acc.is_finite());
+    });
+}
+
+/// Naive single-accumulator dot — the pre-SIMD baseline. The sequential
+/// dependence on `acc` blocks autovectorization, which is exactly what
+/// the `util::simd` multi-accumulator kernels fix; kept as a bench arm
+/// so BENCH_6.json quantifies the kernel layer against it.
+#[inline(never)]
+fn scalar_dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Kernel-layer microbench: per-lane column traffic on a large dense
+/// problem built in-bench (n=4096, p=256, B=8 — the residual set is
+/// ~256 KiB, the design 8 MiB, so column loads dominate), three arms
+/// per op: scalar single-accumulator baseline, unrolled simd kernel
+/// called per lane, and the cache-blocked lane sweep.
+fn bench_simd_lane_kernels(iters: usize) {
+    let (n, p, b) = (4096usize, 256usize, 8usize);
+    let mut rng = celer::util::rng::Rng::new(21);
+    let data: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+    let x = DenseMatrix::from_col_major(n, p, data.clone());
+    let v: Vec<f64> = (0..b * n).map(|_| rng.normal()).collect();
+    let lanes: Vec<usize> = (0..b).collect();
+    let mut out = vec![0.0; b];
+
+    bench::time(&format!("hot/lanes_dot_scalar_dense_n{n}_b{b}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            let col = &data[j * n..(j + 1) * n];
+            for &k in &lanes {
+                acc += scalar_dot(col, &v[k * n..(k + 1) * n]);
+            }
+        }
+        assert!(acc.is_finite());
+    });
+    bench::time(&format!("hot/lanes_dot_simd_perlane_dense_n{n}_b{b}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            for &k in &lanes {
+                acc += x.col_dot(j, &v[k * n..(k + 1) * n]);
+            }
+        }
+        assert!(acc.is_finite());
+    });
+    bench::time(&format!("hot/lanes_dot_blocked_dense_n{n}_b{b}"), iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            x.col_dot_lanes(j, &v, n, &lanes, &mut out);
+            acc += out[0];
+        }
+        assert!(acc.is_finite());
+    });
+
+    // Tiny alternating alphas keep the accumulated buffer bounded over
+    // the whole bench run without a per-iteration reset.
+    let alphas: Vec<f64> = (0..b).map(|t| if t % 2 == 0 { 1e-9 } else { -1e-9 }).collect();
+    let mut vm = v.clone();
+    bench::time(&format!("hot/lanes_axpy_scalar_dense_n{n}_b{b}"), iters, || {
+        for j in 0..p {
+            let col = &data[j * n..(j + 1) * n];
+            for (t, &k) in lanes.iter().enumerate() {
+                let dst = &mut vm[k * n..(k + 1) * n];
+                for i in 0..n {
+                    dst[i] += alphas[t] * col[i];
+                }
+            }
+        }
+    });
+    bench::time(&format!("hot/lanes_axpy_simd_perlane_dense_n{n}_b{b}"), iters, || {
+        for j in 0..p {
+            for (t, &k) in lanes.iter().enumerate() {
+                x.col_axpy(j, alphas[t], &mut vm[k * n..(k + 1) * n]);
+            }
+        }
+    });
+    bench::time(&format!("hot/lanes_axpy_blocked_dense_n{n}_b{b}"), iters, || {
+        for j in 0..p {
+            x.col_axpy_lanes(j, &alphas, &mut vm, n, &lanes);
+        }
+    });
+    assert!(vm.iter().all(|u| u.is_finite()));
+}
+
+/// f32 sweep epoch vs f64 epoch on the same large dense shape — the
+/// memory-traffic half of the `Precision::F32` story (the design stream
+/// is halved; certification cost is excluded on purpose, it amortizes
+/// over `gap_freq` epochs).
+fn bench_f32_epoch(iters: usize) {
+    let (n, p) = (4096usize, 256usize);
+    let mut rng = celer::util::rng::Rng::new(22);
+    let data: Vec<f64> = (0..n * p).map(|_| rng.normal()).collect();
+    let x = DenseMatrix::from_col_major(n, p, data);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let norms = x.col_norms_sq();
+    let lambda = dual::lambda_max(&x, &y) / 10.0;
+
+    let mut beta = vec![0.0f64; p];
+    let mut r = y.clone();
+    bench::time(&format!("hot/f64_cd_epoch_dense_n{n}_p{p}"), iters, || {
+        for j in 0..p {
+            let g = x.col_dot(j, &r);
+            let old = beta[j];
+            let new = soft_threshold(old + g / norms[j], lambda / norms[j]);
+            if new != old {
+                x.col_axpy(j, old - new, &mut r);
+                beta[j] = new;
+            }
+        }
+    });
+
+    let shadow = x.shadow_f32();
+    let norms32: Vec<f32> = norms.iter().map(|&v| v as f32).collect();
+    let lam32 = lambda as f32;
+    let mut beta32 = vec![0.0f32; p];
+    let mut r32: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+    bench::time(&format!("hot/f32_cd_epoch_dense_n{n}_p{p}"), iters, || {
+        for j in 0..p {
+            let g = shadow.col_dot(j, &r32);
+            let old = beta32[j];
+            let new = celer::util::soft_threshold_f32(old + g / norms32[j], lam32 / norms32[j]);
+            if new != old {
+                shadow.col_axpy(j, old - new, &mut r32);
+                beta32[j] = new;
+            }
+        }
     });
 }
 
@@ -444,6 +575,11 @@ fn main() {
     // --- multi-RHS column traffic: per-lane col_dot vs one lane sweep ---
     bench_lane_ops("dense", &dense.x, iters);
     bench_lane_ops("sparse", &sparse.x, iters);
+
+    // --- kernel layer: scalar baseline vs unrolled simd vs blocked lane
+    // sweeps, plus the f32 sweep epoch (the BENCH_6 headline arms) ---
+    bench_simd_lane_kernels(iters);
+    bench_f32_epoch(iters);
 
     // --- multi-task block kernels: legacy strided row-major dots vs the
     // unified lane sweep, and materialized vs view MT inner solves ---

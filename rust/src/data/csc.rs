@@ -131,41 +131,22 @@ impl DesignOps for CscMatrix {
         let (idx, val) = self.col(j);
         // Hot path (≈half of every CD epoch's memory traffic). Row
         // indices are validated < n at construction, so the unchecked
-        // gather is sound; two accumulators hide the gather latency.
-        debug_assert!(idx.iter().all(|&i| (i as usize) < v.len()));
-        let mut acc0 = 0.0;
-        let mut acc1 = 0.0;
-        let mut k = 0;
-        unsafe {
-            while k + 2 <= idx.len() {
-                acc0 += val.get_unchecked(k) * v.get_unchecked(*idx.get_unchecked(k) as usize);
-                acc1 += val.get_unchecked(k + 1)
-                    * v.get_unchecked(*idx.get_unchecked(k + 1) as usize);
-                k += 2;
-            }
-            if k < idx.len() {
-                acc0 += val.get_unchecked(k) * v.get_unchecked(*idx.get_unchecked(k) as usize);
-            }
-        }
-        acc0 + acc1
+        // gather is sound; four accumulators hide the gather latency
+        // (see `util::simd` for the accumulator-order contract).
+        unsafe { crate::util::simd::gather_dot(idx, val, v) }
     }
 
     #[inline]
     fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
         let (idx, val) = self.col(j);
-        debug_assert!(idx.iter().all(|&i| (i as usize) < out.len()));
-        unsafe {
-            for k in 0..idx.len() {
-                *out.get_unchecked_mut(*idx.get_unchecked(k) as usize) +=
-                    alpha * val.get_unchecked(k);
-            }
-        }
+        unsafe { crate::util::simd::gather_axpy(idx, val, alpha, out) }
     }
 
     #[inline]
     fn col_norm_sq(&self, j: usize) -> f64 {
         let (_, val) = self.col(j);
-        val.iter().map(|v| v * v).sum()
+        // Stored values are contiguous, so the width-8 kernel applies.
+        crate::util::simd::dot(val, val)
     }
 
     fn col_nnz(&self, j: usize) -> usize {
@@ -214,48 +195,61 @@ impl DesignOps for CscMatrix {
         self.data.len()
     }
 
+    fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
+        crate::data::shadow::ShadowF32::from_csc(
+            self.n,
+            self.p,
+            &self.indptr,
+            &self.indices,
+            &self.data,
+        )
+    }
+
     #[inline]
     fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
         let (idx, val) = self.col(j);
-        debug_assert!(idx.iter().all(|&i| (i as usize) < w.len()));
-        let mut acc = 0.0;
-        unsafe {
-            for k in 0..idx.len() {
-                let v = *val.get_unchecked(k);
-                acc += *w.get_unchecked(*idx.get_unchecked(k) as usize) * v * v;
-            }
-        }
-        acc
+        unsafe { crate::util::simd::gather_wssq(idx, val, w) }
     }
 
     #[inline]
     fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
         let (idx, val) = self.col(j);
-        debug_assert!(idx.iter().all(|&i| (i as usize) < out.len()));
         debug_assert_eq!(w.len(), out.len());
-        unsafe {
-            for k in 0..idx.len() {
-                let i = *idx.get_unchecked(k) as usize;
-                *out.get_unchecked_mut(i) +=
-                    alpha * *w.get_unchecked(i) * val.get_unchecked(k);
-            }
-        }
+        unsafe { crate::util::simd::gather_waxpy(idx, val, alpha, w, out) }
     }
 
     // Batched multi-λ sweeps (see `solvers/batch.rs`): one pass over the
     // stored entries — each (row index, value) pair is decoded once and
     // applied to every lane, instead of re-walking the index array once
-    // per lane.
+    // per lane. Entries are processed in PAIRS (`out[t] += x₀·v₀ + x₁·v₁`
+    // per lane, odd tail entry accumulated alone) so each lane carries
+    // two independent gather chains; this pairwise order is part of the
+    // kernel-layer reduction contract mirrored in `tests/prop_simd.rs`.
     fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
         debug_assert_eq!(lanes.len(), out.len());
         debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
         let (idx, val) = self.col(j);
         debug_assert!(idx.iter().all(|&i| (i as usize) < n));
         out.fill(0.0);
+        let m = idx.len();
+        let main = m - m % 2;
         unsafe {
-            for e in 0..idx.len() {
-                let row = *idx.get_unchecked(e) as usize;
-                let xv = *val.get_unchecked(e);
+            let mut e = 0;
+            while e < main {
+                let row0 = *idx.get_unchecked(e) as usize;
+                let row1 = *idx.get_unchecked(e + 1) as usize;
+                let xv0 = *val.get_unchecked(e);
+                let xv1 = *val.get_unchecked(e + 1);
+                for (t, &k) in lanes.iter().enumerate() {
+                    let base = k * n;
+                    *out.get_unchecked_mut(t) +=
+                        xv0 * v.get_unchecked(base + row0) + xv1 * v.get_unchecked(base + row1);
+                }
+                e += 2;
+            }
+            if main < m {
+                let row = *idx.get_unchecked(main) as usize;
+                let xv = *val.get_unchecked(main);
                 for (t, &k) in lanes.iter().enumerate() {
                     *out.get_unchecked_mut(t) += xv * v.get_unchecked(k * n + row);
                 }

@@ -127,31 +127,26 @@ impl DesignOps for DenseMatrix {
         self.data.iter().filter(|&&v| v != 0.0).count()
     }
 
+    fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
+        crate::data::shadow::ShadowF32::from_dense_col_major(self.n, self.p, &self.data)
+    }
+
     #[inline]
     fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
-        let c = self.col(j);
-        debug_assert_eq!(w.len(), c.len());
-        let mut acc = 0.0;
-        for i in 0..c.len() {
-            acc += w[i] * c[i] * c[i];
-        }
-        acc
+        crate::util::simd::wssq(w, self.col(j))
     }
 
     #[inline]
     fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
-        let c = self.col(j);
-        debug_assert_eq!(w.len(), c.len());
-        debug_assert_eq!(out.len(), c.len());
-        for i in 0..c.len() {
-            out[i] += alpha * w[i] * c[i];
-        }
+        crate::util::simd::waxpy(alpha, w, self.col(j), out);
     }
 
     // Batched multi-λ sweeps (see `solvers/batch.rs`): process the column
     // in row blocks so each block is loaded from memory once and reused
     // from L1 by every lane, instead of streaming the full column once
-    // per lane.
+    // per lane. BLOCK is a multiple of the simd accumulator width, so
+    // every block but the last feeds `simd::dot`/`simd::axpy` tail-free
+    // register tiles.
     fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
         debug_assert_eq!(n, self.n);
         debug_assert_eq!(lanes.len(), out.len());

@@ -109,6 +109,14 @@ pub trait DesignOps: Sync {
         crate::util::par::par_fill_cost(&mut out, self.col_cost_hint(), |j| self.col_norm_sq(j));
         out
     }
+
+    /// Build the f32 shadow of this design for the mixed-precision
+    /// sweep mode ([`crate::solvers::Precision::F32`]). The default
+    /// materializes densely through `gather_dense`; storage backends
+    /// override it to preserve sparsity (CSC) or cast in place (dense).
+    fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
+        crate::data::shadow::ShadowF32::dense_from_design(self)
+    }
 }
 
 /// A design matrix: dense column-major or sparse CSC.
@@ -206,6 +214,9 @@ impl DesignOps for DesignMatrix {
     }
     fn col_norms_sq(&self) -> Vec<f64> {
         dispatch!(self, col_norms_sq)
+    }
+    fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
+        dispatch!(self, shadow_f32)
     }
 }
 

@@ -6,6 +6,7 @@ pub mod csc;
 pub mod dense;
 pub mod design;
 pub mod preprocess;
+pub mod shadow;
 pub mod svmlight;
 pub mod synth;
 pub mod view;

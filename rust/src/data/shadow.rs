@@ -1,0 +1,287 @@
+//! f32 shadow designs for the mixed-precision sweep mode.
+//!
+//! [`Precision::F32`](crate::solvers::Precision) runs CD epochs on an
+//! f32 copy of the design (plus f32 β/r iterates) and recomputes
+//! residual, duality gap, and Gap Safe screening in f64 before any
+//! screen/stop decision (see `solvers/sweep32.rs` and the batch engine).
+//! The shadow is therefore *iteration state only*: nothing read from it
+//! ever enters a certificate, so casting the design to f32 once up
+//! front is safe. Dense designs shadow the full column-major buffer
+//! (halving the memory traffic of every epoch — the CD inner loop is
+//! memory-bound, so this is where the f32 speedup comes from); CSC
+//! designs keep their index structure and cast only the stored values.
+
+use crate::data::design::DesignOps;
+
+/// An f32 copy of a design matrix, column-addressable like the f64
+/// original. Kernels mirror the f32 kernels of [`crate::util::simd`].
+#[derive(Debug, Clone)]
+pub struct ShadowF32 {
+    n: usize,
+    p: usize,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    /// Column-major n×p values.
+    Dense { data: Vec<f32> },
+    /// CSC mirror: same index structure as the source, f32 values.
+    Sparse { indptr: Vec<usize>, indices: Vec<u32>, data: Vec<f32> },
+}
+
+impl ShadowF32 {
+    /// Shadow of a dense column-major buffer.
+    pub fn from_dense_col_major(n: usize, p: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), n * p);
+        let data = data.iter().map(|&v| v as f32).collect();
+        ShadowF32 { n, p, kind: Kind::Dense { data } }
+    }
+
+    /// Shadow of CSC arrays (row indices must be < n; the caller is a
+    /// validated `CscMatrix`).
+    pub fn from_csc(n: usize, p: usize, indptr: &[usize], indices: &[u32], data: &[f64]) -> Self {
+        assert_eq!(indptr.len(), p + 1);
+        assert_eq!(indices.len(), data.len());
+        debug_assert!(indices.iter().all(|&i| (i as usize) < n));
+        let data = data.iter().map(|&v| v as f32).collect();
+        ShadowF32 {
+            n,
+            p,
+            kind: Kind::Sparse { indptr: indptr.to_vec(), indices: indices.to_vec(), data },
+        }
+    }
+
+    /// Dense shadow of an arbitrary design, built through the generic
+    /// `gather_dense` accessor in bounded column chunks (the f64
+    /// staging buffer never exceeds 128 columns).
+    pub fn dense_from_design<D: DesignOps + ?Sized>(x: &D) -> Self {
+        let (n, p) = (x.n(), x.p());
+        let mut data = Vec::with_capacity(n * p);
+        let mut stage = Vec::new();
+        let mut j = 0;
+        while j < p {
+            let hi = (j + 128).min(p);
+            let cols: Vec<usize> = (j..hi).collect();
+            x.gather_dense(&cols, &mut stage);
+            data.extend(stage.iter().map(|&v| v as f32));
+            j = hi;
+        }
+        ShadowF32 { n, p, kind: Kind::Dense { data } }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// `x_jᵀ v` in f32.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f32]) -> f32 {
+        match &self.kind {
+            Kind::Dense { data } => {
+                crate::util::simd::dot_f32(&data[j * self.n..(j + 1) * self.n], v)
+            }
+            Kind::Sparse { indptr, indices, data } => {
+                let (lo, hi) = (indptr[j], indptr[j + 1]);
+                // Row indices come from a validated CSC matrix: < n ≤ v.len().
+                unsafe { crate::util::simd::gather_dot_f32(&indices[lo..hi], &data[lo..hi], v) }
+            }
+        }
+    }
+
+    /// `out += alpha · x_j` in f32.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, alpha: f32, out: &mut [f32]) {
+        match &self.kind {
+            Kind::Dense { data } => {
+                crate::util::simd::axpy_f32(alpha, &data[j * self.n..(j + 1) * self.n], out)
+            }
+            Kind::Sparse { indptr, indices, data } => {
+                let (lo, hi) = (indptr[j], indptr[j + 1]);
+                unsafe {
+                    crate::util::simd::gather_axpy_f32(
+                        &indices[lo..hi],
+                        &data[lo..hi],
+                        alpha,
+                        out,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Multi-RHS f32 column dot over lane-strided buffers — the f32
+    /// mirror of [`DesignOps::col_dot_lanes`], cache-blocked for dense
+    /// storage and decode-once for sparse.
+    pub fn col_dot_lanes(&self, j: usize, v: &[f32], n: usize, lanes: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(n, self.n);
+        debug_assert_eq!(lanes.len(), out.len());
+        out.fill(0.0);
+        match &self.kind {
+            Kind::Dense { data } => {
+                const BLOCK: usize = 512;
+                let col = &data[j * n..(j + 1) * n];
+                let mut i = 0;
+                while i < n {
+                    let hi = (i + BLOCK).min(n);
+                    let cb = &col[i..hi];
+                    for (o, &k) in out.iter_mut().zip(lanes.iter()) {
+                        *o += crate::util::simd::dot_f32(cb, &v[k * n + i..k * n + hi]);
+                    }
+                    i = hi;
+                }
+            }
+            Kind::Sparse { indptr, indices, data } => {
+                let (lo, hi) = (indptr[j], indptr[j + 1]);
+                for e in lo..hi {
+                    let row = indices[e] as usize;
+                    let xv = data[e];
+                    for (t, &k) in lanes.iter().enumerate() {
+                        out[t] += xv * v[k * n + row];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Multi-RHS f32 column axpy, lane layout as in `col_dot_lanes`.
+    pub fn col_axpy_lanes(
+        &self,
+        j: usize,
+        alphas: &[f32],
+        v: &mut [f32],
+        n: usize,
+        lanes: &[usize],
+    ) {
+        debug_assert_eq!(n, self.n);
+        debug_assert_eq!(lanes.len(), alphas.len());
+        match &self.kind {
+            Kind::Dense { data } => {
+                const BLOCK: usize = 512;
+                let col = &data[j * n..(j + 1) * n];
+                let mut i = 0;
+                while i < n {
+                    let hi = (i + BLOCK).min(n);
+                    let cb = &col[i..hi];
+                    for (&alpha, &k) in alphas.iter().zip(lanes.iter()) {
+                        if alpha != 0.0 {
+                            crate::util::simd::axpy_f32(alpha, cb, &mut v[k * n + i..k * n + hi]);
+                        }
+                    }
+                    i = hi;
+                }
+            }
+            Kind::Sparse { indptr, indices, data } => {
+                let (lo, hi) = (indptr[j], indptr[j + 1]);
+                for e in lo..hi {
+                    let row = indices[e] as usize;
+                    let xv = data[e];
+                    for (t, &k) in lanes.iter().enumerate() {
+                        let alpha = alphas[t];
+                        if alpha != 0.0 {
+                            v[k * n + row] += alpha * xv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csc::CscMatrix;
+    use crate::data::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn pair(seed: u64, n: usize, p: usize) -> (DenseMatrix, CscMatrix) {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0; n * p];
+        for v in data.iter_mut() {
+            if rng.uniform() < 0.5 {
+                *v = rng.normal();
+            }
+        }
+        (DenseMatrix::from_col_major(n, p, data.clone()), CscMatrix::from_dense(n, p, &data))
+    }
+
+    #[test]
+    fn shadows_track_f64_designs() {
+        let (d, s) = pair(3, 29, 7);
+        let sd = d.shadow_f32();
+        let ss = s.shadow_f32();
+        let mut rng = Rng::new(4);
+        let v64: Vec<f64> = (0..29).map(|_| rng.normal()).collect();
+        let v32: Vec<f32> = v64.iter().map(|&v| v as f32).collect();
+        for x in [&sd, &ss] {
+            assert_eq!((x.n(), x.p()), (29, 7));
+            for j in 0..7 {
+                let exact = d.col_dot(j, &v64);
+                let approx = x.col_dot(j, &v32) as f64;
+                assert!((exact - approx).abs() < 1e-4, "j={j}: {exact} vs {approx}");
+                let mut out = v32.clone();
+                x.col_axpy(j, 0.5, &mut out);
+                let mut ref64 = v64.clone();
+                d.col_axpy(j, 0.5, &mut ref64);
+                for i in 0..29 {
+                    assert!((out[i] as f64 - ref64[i]).abs() < 1e-4, "axpy j={j} i={i}");
+                }
+            }
+        }
+        // dense and sparse shadows agree with each other exactly on
+        // single-column dots of a dense-castable input? Not bitwise (the
+        // gather order differs); tolerance suffices.
+        for j in 0..7 {
+            let a = sd.col_dot(j, &v32);
+            let b = ss.col_dot(j, &v32);
+            assert!((a - b).abs() < 1e-3, "j={j}");
+        }
+    }
+
+    #[test]
+    fn lane_kernels_match_per_lane_loops() {
+        let (d, s) = pair(5, 23, 6);
+        let n = 23;
+        let mut rng = Rng::new(6);
+        let v: Vec<f32> = (0..4 * n).map(|_| rng.normal() as f32).collect();
+        let lanes = [0usize, 2, 3];
+        let alphas = [0.5f32, 0.0, -1.25];
+        for x in [&d.shadow_f32(), &s.shadow_f32()] {
+            for j in 0..6 {
+                let mut got = vec![0.0f32; lanes.len()];
+                x.col_dot_lanes(j, &v, n, &lanes, &mut got);
+                for (t, &k) in lanes.iter().enumerate() {
+                    let expect = x.col_dot(j, &v[k * n..(k + 1) * n]);
+                    assert!((got[t] - expect).abs() < 1e-3, "dot j={j} lane={k}");
+                }
+                let mut batched = v.clone();
+                x.col_axpy_lanes(j, &alphas, &mut batched, n, &lanes);
+                let mut manual = v.clone();
+                for (t, &k) in lanes.iter().enumerate() {
+                    if alphas[t] != 0.0 {
+                        x.col_axpy(j, alphas[t], &mut manual[k * n..(k + 1) * n]);
+                    }
+                }
+                assert_eq!(batched, manual, "axpy j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_dense_fallback_matches_override() {
+        let (d, _) = pair(8, 11, 5);
+        let a = d.shadow_f32();
+        let b = ShadowF32::dense_from_design(&d);
+        let v: Vec<f32> = (0..11).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        for j in 0..5 {
+            assert_eq!(a.col_dot(j, &v).to_bits(), b.col_dot(j, &v).to_bits());
+        }
+    }
+}

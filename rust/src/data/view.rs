@@ -165,6 +165,10 @@ impl<D: DesignOps> DesignOps for DesignView<'_, D> {
     fn col_norms_sq(&self) -> Vec<f64> {
         self.cols.iter().map(|&j| self.parent_norms_sq[j]).collect()
     }
+
+    // `shadow_f32` keeps the trait default: a view's restriction is
+    // materialized densely into the shadow, which is the right trade —
+    // working sets are small, and the shadow is rebuilt per inner solve.
 }
 
 #[cfg(test)]

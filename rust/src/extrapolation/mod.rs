@@ -147,7 +147,8 @@ impl ResidualBuffer {
             let (a, b) = (&self.buf[i], &self.buf[i + 1]);
             let d = &mut scratch.diffs[i];
             d.clear();
-            d.extend(a.iter().zip(b.iter()).map(|(&x, &y)| y - x));
+            d.resize(n, 0.0);
+            crate::util::linalg::sub(a, b, d);
         }
         // Gram matrix G = UᵀU, into the reusable K×K buffer.
         scratch.gram.resize(k * k, 0.0);

@@ -23,10 +23,11 @@ pub fn residual<D: DesignOps>(x: &D, y: &[f64], beta: &[f64], out: &mut [f64]) {
     }
 }
 
-/// ℓ1 norm.
+/// ℓ1 norm (width-8 accumulator fold; see `util::simd` for the
+/// reduction-order contract).
 #[inline]
 pub fn l1_norm(beta: &[f64]) -> f64 {
-    beta.iter().map(|b| b.abs()).sum()
+    crate::util::linalg::asum(beta)
 }
 
 /// Generalized GLM primal `P(β) = F(Xβ) + λ‖β‖₁` from the maintained

@@ -98,9 +98,10 @@ impl TaskMatrix {
         (0..self.p).filter(|&j| self.row(j).iter().any(|&v| v != 0.0)).collect()
     }
 
-    /// Σ_j ‖B_{j·}‖₂ (the ℓ2,1 norm).
+    /// Σ_j ‖B_{j·}‖₂ (the ℓ2,1 norm; width-8 accumulator fold over the
+    /// row norms — see `util::simd` for the reduction-order contract).
     pub fn l21_norm(&self) -> f64 {
-        (0..self.p).map(|j| crate::util::linalg::norm(self.row(j))).sum()
+        crate::util::simd::sum_by(self.p, |j| crate::util::linalg::norm(self.row(j)))
     }
 }
 

@@ -53,10 +53,12 @@
 //! (supports and objectives) on dense and sparse designs.
 
 use crate::data::design::DesignOps;
+use crate::data::shadow::ShadowF32;
 use crate::lasso::primal;
 use crate::screening::ScreeningState;
-use crate::solvers::{DualScratch, DualState};
-use crate::util::soft_threshold;
+use crate::solvers::sweep32::MAX_F32_EPOCHS;
+use crate::solvers::{DualScratch, DualState, Precision};
+use crate::util::{soft_threshold, soft_threshold_f32};
 use std::time::Instant;
 
 /// Configuration of the batched multi-λ engine (the union of the
@@ -83,6 +85,11 @@ pub struct BatchConfig {
     /// pick B from the problem shape via [`auto_lanes`]. An explicit
     /// non-zero value always wins.
     pub lanes: usize,
+    /// Arithmetic precision of the lane sweeps. [`Precision::F32`] runs
+    /// the interleaved CD epochs on an f32 design shadow with per-lane
+    /// f64 certification at every gap check (see [`BatchF32Strategy`]);
+    /// gaps and screening stay exact f64 either way.
+    pub precision: Precision,
 }
 
 /// Residual-footprint budget for [`auto_lanes`]: B lanes keep B·n f64
@@ -115,6 +122,7 @@ impl Default for BatchConfig {
             best_dual: true,
             screen: true,
             lanes: 0,
+            precision: Precision::F64,
         }
     }
 }
@@ -212,6 +220,9 @@ impl BatchWorkspace {
 pub struct LaneSweep<'a> {
     pub n: usize,
     pub p: usize,
+    /// Observations (needed by strategies that recompute exact
+    /// residuals mid-sweep, e.g. the f32 strategy's escalation).
+    pub y: &'a [f64],
     /// Per-slot λ (indexed by slot id, not by position in `live`).
     pub lambdas: &'a [f64],
     /// Live slot ids.
@@ -239,6 +250,29 @@ pub struct LaneSweep<'a> {
 pub trait BatchStrategy<D: DesignOps> {
     /// Run one epoch for every live lane, updating each lane's (β, r).
     fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>);
+
+    /// Called after `slot` is (re)loaded with a grid cell — any
+    /// per-slot iteration state the strategy keeps is stale. Default:
+    /// no-op (the f64 strategy is stateless).
+    fn slot_loaded(&mut self, slot: usize) {
+        let _ = slot;
+    }
+
+    /// Make `slot`'s f64 `(β, r)` authoritative before a gap check.
+    /// Strategies iterating in reduced precision promote their iterate
+    /// and recompute `r = y − Xβ` exactly here, so the dual point, gap
+    /// and Gap Safe screening that follow never consult rounded state.
+    /// Default: no-op (the f64 state already is the iterate).
+    fn sync_slot_state(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        slot: usize,
+        beta_slot: &mut [f64],
+        r_slot: &mut [f64],
+    ) {
+        let _ = (x, y, slot, beta_slot, r_slot);
+    }
 }
 
 /// Cyclic coordinate descent interleaved across lanes (Algorithm 1 per
@@ -394,6 +428,236 @@ impl<D: DesignOps> BatchStrategy<D> for BatchCdStrategy {
     }
 }
 
+/// Interleaved CD in f32 with per-lane f64 certification — the batched
+/// analogue of [`F32CdStrategy`](crate::solvers::sweep32::F32CdStrategy),
+/// selected by [`BatchConfig::precision`]` = Precision::F32`.
+///
+/// Every lane runs the same f32-sweep / f64-certify / escalate state
+/// machine as the sequential strategy (see `solvers/sweep32.rs`), but
+/// the f32 epochs are interleaved over one pass of the f32 design
+/// shadow: one [`ShadowF32::col_dot_lanes`] per column for all f32
+/// lanes, one [`ShadowF32::col_axpy_lanes`] on the way out. Lanes that
+/// escalate (f32 fixed point, or [`MAX_F32_EPOCHS`] spent) drop into an
+/// interleaved **f64** sweep over the original design and stay there.
+///
+/// Both sweeps are run serially — never lane-sharded over the worker
+/// pool — so `CELER_NUM_THREADS` invariance holds trivially for the f32
+/// mode. (The pooled schedule would also be bit-identical, as lanes are
+/// independent; serial is simply the conservative choice for the new
+/// path.)
+pub struct BatchF32Strategy {
+    shadow: ShadowF32,
+    /// Lane-strided f32 iterates mirroring the workspace layout.
+    beta32: Vec<f32>,
+    r32: Vec<f32>,
+    norms32: Vec<f32>,
+    /// Per-slot: f32 mirror matches the slot's f64 state.
+    synced: Vec<bool>,
+    /// Per-slot: permanently escalated to f64 sweeps.
+    f64_mode: Vec<bool>,
+    f32_epochs: Vec<usize>,
+    /// Per-slot: made at least one update in the current f32 sweep.
+    updated: Vec<bool>,
+    /// Per-column scratch of the f32 sweep.
+    act: Vec<usize>,
+    g32: Vec<f32>,
+    delta32: Vec<f32>,
+    /// Live-slot partition rebuilt each sweep.
+    f32_slots: Vec<usize>,
+    f64_slots: Vec<usize>,
+    f64_scratch: SweepScratch,
+}
+
+impl BatchF32Strategy {
+    /// Build the strategy (and the f32 design shadow) for one grid.
+    pub fn new<D: DesignOps>(x: &D) -> Self {
+        BatchF32Strategy {
+            shadow: x.shadow_f32(),
+            beta32: Vec::new(),
+            r32: Vec::new(),
+            norms32: Vec::new(),
+            synced: Vec::new(),
+            f64_mode: Vec::new(),
+            f32_epochs: Vec::new(),
+            updated: Vec::new(),
+            act: Vec::new(),
+            g32: Vec::new(),
+            delta32: Vec::new(),
+            f32_slots: Vec::new(),
+            f64_slots: Vec::new(),
+            f64_scratch: SweepScratch::default(),
+        }
+    }
+
+    /// True once `slot` has escalated to f64 sweeps.
+    pub fn slot_escalated(&self, slot: usize) -> bool {
+        self.f64_mode.get(slot).copied().unwrap_or(false)
+    }
+
+    fn ensure_slots(&mut self, slots: usize) {
+        if self.synced.len() < slots {
+            self.synced.resize(slots, false);
+            self.f64_mode.resize(slots, false);
+            self.f32_epochs.resize(slots, 0);
+            self.updated.resize(slots, false);
+        }
+    }
+}
+
+impl<D: DesignOps> BatchStrategy<D> for BatchF32Strategy {
+    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>) {
+        let (n, p) = (s.n, s.p);
+        let slots_total = if p > 0 { s.beta.len() / p } else { 0 };
+        self.ensure_slots(slots_total);
+        if self.beta32.len() < slots_total * p {
+            self.beta32.resize(slots_total * p, 0.0);
+        }
+        if self.r32.len() < slots_total * n {
+            self.r32.resize(slots_total * n, 0.0);
+        }
+        if self.norms32.len() != s.norms_sq.len() {
+            self.norms32 = s.norms_sq.iter().map(|&v| v as f32).collect();
+        }
+        let BatchF32Strategy {
+            shadow,
+            beta32,
+            r32,
+            norms32,
+            synced,
+            f64_mode,
+            f32_epochs,
+            updated,
+            act,
+            g32,
+            delta32,
+            f32_slots,
+            f64_slots,
+            f64_scratch,
+        } = self;
+
+        f32_slots.clear();
+        f64_slots.clear();
+        for &slot in s.live {
+            if f64_mode[slot] {
+                f64_slots.push(slot);
+            } else {
+                f32_slots.push(slot);
+            }
+        }
+
+        // ---- f32 lanes: sync mirrors, one interleaved f32 sweep ----
+        for &slot in f32_slots.iter() {
+            updated[slot] = false;
+            if !synced[slot] {
+                for (d, &v) in
+                    beta32[slot * p..(slot + 1) * p].iter_mut().zip(&s.beta[slot * p..])
+                {
+                    *d = v as f32;
+                }
+                for (d, &v) in r32[slot * n..(slot + 1) * n].iter_mut().zip(&s.r[slot * n..]) {
+                    *d = v as f32;
+                }
+                synced[slot] = true;
+            }
+        }
+        if !f32_slots.is_empty() {
+            for j in 0..p {
+                let nrm = norms32[j];
+                if nrm <= 0.0 {
+                    // ‖x_j‖² zero, or underflowed to 0 in f32: leave the
+                    // column to the (eventual) f64 phase of each lane.
+                    continue;
+                }
+                act.clear();
+                for &slot in f32_slots.iter() {
+                    if !s.screening[slot].is_screened(j) {
+                        act.push(slot);
+                    }
+                }
+                if act.is_empty() {
+                    continue;
+                }
+                g32.clear();
+                g32.resize(act.len(), 0.0);
+                shadow.col_dot_lanes(j, r32, n, act, g32);
+                delta32.clear();
+                let mut any_update = false;
+                for (t, &slot) in act.iter().enumerate() {
+                    let bj = &mut beta32[slot * p + j];
+                    let old = *bj;
+                    let new =
+                        soft_threshold_f32(old + g32[t] / nrm, s.lambdas[slot] as f32 / nrm);
+                    *bj = new;
+                    let d = old - new;
+                    if d != 0.0 {
+                        any_update = true;
+                        updated[slot] = true;
+                    }
+                    delta32.push(d);
+                }
+                if any_update {
+                    shadow.col_axpy_lanes(j, delta32, r32, n, act);
+                }
+            }
+            // Escalation: a zero-update f32 epoch is an exact f32 fixed
+            // point; the epoch cap backstops f32 limit cycles.
+            for &slot in f32_slots.iter() {
+                f32_epochs[slot] += 1;
+                if !updated[slot] || f32_epochs[slot] >= MAX_F32_EPOCHS {
+                    let beta_slot = &mut s.beta[slot * p..(slot + 1) * p];
+                    for (b, &b32) in beta_slot.iter_mut().zip(&beta32[slot * p..]) {
+                        *b = b32 as f64;
+                    }
+                    primal::residual(x, s.y, beta_slot, &mut s.r[slot * n..(slot + 1) * n]);
+                    f64_mode[slot] = true;
+                }
+            }
+        }
+
+        // ---- escalated lanes: one interleaved f64 sweep (serial) ----
+        if !f64_slots.is_empty() {
+            let ctx = SweepCtx {
+                n,
+                p,
+                slot_base: 0,
+                lambdas: s.lambdas,
+                screening: s.screening,
+                norms_sq: s.norms_sq,
+            };
+            cd_sweep_slots(x, &ctx, f64_slots, s.beta, s.r, f64_scratch);
+        }
+    }
+
+    fn slot_loaded(&mut self, slot: usize) {
+        self.ensure_slots(slot + 1);
+        self.synced[slot] = false;
+        self.f64_mode[slot] = false;
+        self.f32_epochs[slot] = 0;
+    }
+
+    fn sync_slot_state(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        slot: usize,
+        beta_slot: &mut [f64],
+        r_slot: &mut [f64],
+    ) {
+        if self.slot_escalated(slot) || !self.synced.get(slot).copied().unwrap_or(false) {
+            // f64 state is already authoritative.
+            return;
+        }
+        let p = beta_slot.len();
+        for (b, &b32) in beta_slot.iter_mut().zip(&self.beta32[slot * p..]) {
+            *b = b32 as f64;
+        }
+        primal::residual(x, y, beta_slot, r_slot);
+        // Screening may mutate (β, r) right after the check; re-sync the
+        // f32 mirror at the next sweep.
+        self.synced[slot] = false;
+    }
+}
+
 /// Load grid cell `grid_idx` (λ = `lambda`) into slot `slot`: β from the
 /// current warm-start seed, residual via one matvec, fresh dual /
 /// screening state.
@@ -481,6 +745,7 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
     ws.live.clear();
     for slot in 0..b {
         load_lane(ws, x, y, slot, next_grid, grid[next_grid], cfg, &start);
+        strategy.slot_loaded(slot);
         ws.live.push(slot);
         next_grid += 1;
     }
@@ -503,6 +768,7 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
             let mut ctx = LaneSweep {
                 n,
                 p,
+                y,
                 lambdas: lane_lambda.as_slice(),
                 live: live.as_slice(),
                 screening: screening.as_slice(),
@@ -532,6 +798,10 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
                 let BatchWorkspace { beta, r, dual, scratch, screening, col_norms, .. } = ws;
                 let r_slot = &mut r[slot * n..(slot + 1) * n];
                 let beta_slot = &mut beta[slot * p..(slot + 1) * p];
+                // Reduced-precision strategies promote their iterate and
+                // recompute r exactly here; everything below (dual point,
+                // gap, screening, stop test) then runs on exact f64.
+                strategy.sync_slot_state(x, y, slot, beta_slot, r_slot);
                 dual[slot].update(x, y, lambda, r_slot, &mut scratch[slot]);
                 let p_val = primal::primal_from_residual(r_slot, beta_slot, lambda);
                 let gap = p_val - dual[slot].dval;
@@ -578,6 +848,7 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
                 });
                 if next_grid < grid.len() {
                     load_lane(ws, x, y, slot, next_grid, grid[next_grid], cfg, &start);
+                    strategy.slot_loaded(slot);
                     next_grid += 1;
                     li += 1;
                 } else {
@@ -747,6 +1018,68 @@ mod tests {
                 assert_eq!(a.epochs, b.epochs);
                 assert_eq!(a.gap.to_bits(), b.gap.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn f32_lanes_match_f64_grid() {
+        // Every grid point solved by the f32 strategy is f64-certified
+        // at the same ε, so objectives agree with the f64 strategy to
+        // the sum of tolerances (the iterates themselves differ: the
+        // f32 phase takes a different trajectory).
+        for ds in [crate::data::synth::leukemia_mini(68), crate::data::synth::finance_mini(68)] {
+            let lmax = dual::lambda_max(&ds.x, &ds.y);
+            let grid = lambda_grid(lmax, 0.1, 5);
+            let tol = 1e-8;
+            let c64 = cfg(tol, 3);
+            let c32 = BatchConfig { precision: Precision::F32, ..c64.clone() };
+            let mut ws = BatchWorkspace::new();
+            let a = solve_grid(&ds.x, &ds.y, &grid, None, &c64, &mut ws, &mut BatchCdStrategy);
+            let mut ws2 = BatchWorkspace::new();
+            let mut strat = BatchF32Strategy::new(&ds.x);
+            let b = solve_grid(&ds.x, &ds.y, &grid, None, &c32, &mut ws2, &mut strat);
+            assert_eq!(a.len(), b.len());
+            for (la, lb) in a.iter().zip(&b) {
+                assert!(lb.converged, "λ#{} ({})", lb.grid_idx, ds.name);
+                assert!(lb.gap <= tol);
+                let pa = crate::lasso::primal::primal(&ds.x, &ds.y, &la.beta, la.lambda);
+                let pb = crate::lasso::primal::primal(&ds.x, &ds.y, &lb.beta, lb.lambda);
+                assert!(
+                    (pa - pb).abs() <= 2.0 * tol,
+                    "λ#{} ({}): {pa} vs {pb}",
+                    la.grid_idx,
+                    ds.name
+                );
+            }
+            // ε = 1e-8 sits far below f32 resolution: every lane must
+            // have escalated before certifying.
+            let b_lanes = c32.lanes.min(grid.len());
+            assert!((0..b_lanes).all(|s| strat.slot_escalated(s)));
+        }
+    }
+
+    #[test]
+    fn f32_lanes_are_pool_invariant() {
+        // The f32 sweep never touches the worker pool, so pooled and
+        // forced-serial runs must be bit-identical.
+        let ds = crate::data::synth::leukemia_mini(69);
+        let lmax = dual::lambda_max(&ds.x, &ds.y);
+        let grid = lambda_grid(lmax, 0.2, 4);
+        let c =
+            BatchConfig { tol: 1e-7, lanes: 2, precision: Precision::F32, ..Default::default() };
+        let mut ws = BatchWorkspace::new();
+        let mut s1 = BatchF32Strategy::new(&ds.x);
+        let pooled = solve_grid(&ds.x, &ds.y, &grid, None, &c, &mut ws, &mut s1);
+        let mut ws2 = BatchWorkspace::new();
+        let mut s2 = BatchF32Strategy::new(&ds.x);
+        let serial = crate::util::par::run_serial(|| {
+            solve_grid(&ds.x, &ds.y, &grid, None, &c, &mut ws2, &mut s2)
+        });
+        assert_eq!(pooled.len(), serial.len());
+        for (a, b) in pooled.iter().zip(&serial) {
+            assert_eq!(a.beta, b.beta);
+            assert_eq!(a.epochs, b.epochs);
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
         }
     }
 

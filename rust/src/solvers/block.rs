@@ -56,7 +56,11 @@ pub fn l21_norm_blocks(beta: &[f64], q: usize) -> f64 {
     if q == 1 {
         return primal::l1_norm(beta);
     }
-    beta.chunks_exact(q).map(crate::util::linalg::norm).sum()
+    // Width-8 accumulator fold over the block norms (see `util::simd`
+    // for the reduction-order contract).
+    crate::util::simd::sum_by(beta.len() / q, |j| {
+        crate::util::linalg::norm(&beta[j * q..(j + 1) * q])
+    })
 }
 
 /// Block primal `P(B) = ½‖R‖_F² + λ Σ_j ‖B_j‖₂` from a maintained
@@ -146,11 +150,7 @@ pub fn xt_rows_max<D: DesignOps>(
     let cost = x.col_cost_hint().saturating_mul(q);
     crate::util::par::par_fill_rows_max(block, rows, q, cost, |j, slot| {
         x.col_dot_lanes(j, v, n, lanes, slot);
-        let mut acc = 0.0;
-        for &u in slot.iter() {
-            acc += u * u;
-        }
-        acc.sqrt()
+        crate::util::linalg::norm(slot)
     })
 }
 

@@ -11,7 +11,7 @@
 
 use crate::data::design::DesignOps;
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
-use crate::solvers::SolveResult;
+use crate::solvers::{Precision, SolveResult};
 
 /// Configuration for [`cd_solve`].
 #[derive(Debug, Clone)]
@@ -33,6 +33,11 @@ pub struct CdConfig {
     pub screen: bool,
     /// Record a [`crate::solvers::GapCheck`] per dual evaluation.
     pub trace: bool,
+    /// Arithmetic precision of the CD epochs. [`Precision::F32`] runs
+    /// f32 sweeps with f64 certification at every gap check (see
+    /// [`crate::solvers::sweep32`]); gaps and screening stay exact f64
+    /// either way.
+    pub precision: Precision,
 }
 
 impl Default for CdConfig {
@@ -46,6 +51,7 @@ impl Default for CdConfig {
             best_dual: true,
             screen: false,
             trace: false,
+            precision: Precision::F64,
         }
     }
 }
@@ -99,7 +105,15 @@ pub fn cd_solve_ws<D: DesignOps>(
         Some(b) => Init::Warm(b),
         None => Init::Zeros,
     };
-    let outcome = engine::solve(x, y, lambda, init, None, &cfg.engine(), ws, &mut CdStrategy);
+    let outcome = match cfg.precision {
+        Precision::F64 => {
+            engine::solve(x, y, lambda, init, None, &cfg.engine(), ws, &mut CdStrategy)
+        }
+        Precision::F32 => {
+            let mut strat = crate::solvers::sweep32::F32CdStrategy::new(x);
+            engine::solve(x, y, lambda, init, None, &cfg.engine(), ws, &mut strat)
+        }
+    };
     ws.solve_result(outcome)
 }
 

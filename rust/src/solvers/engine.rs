@@ -145,6 +145,19 @@ pub trait Strategy<D: DesignOps, F: Datafit = Quadratic> {
         datafit: &F,
     );
 
+    /// Synchronize the engine-visible iterate with any strategy-private
+    /// state **before** a gap check. Called at the top of every
+    /// [`StopRule::DualityGap`] check, with mutable access to `beta` and
+    /// `r`. Default: no-op (f64 strategies have no private iterate, so
+    /// the historical path is untouched bit for bit). The f32 sweep
+    /// strategy ([`crate::solvers::sweep32::F32CdStrategy`]) overrides
+    /// this to promote its f32 β into `beta` and recompute `r = y − Xβ`
+    /// exactly in f64 — the certification step that makes every gap /
+    /// screening decision an exact f64 bound.
+    fn sync_check_state(&mut self, x: &D, y: &[f64], beta: &mut [f64], r: &mut [f64]) {
+        let _ = (x, y, beta, r);
+    }
+
     /// Write the residual the dual update / primal value should use into
     /// `out`. Default: the maintained residual itself. FISTA overrides
     /// this because its epochs maintain `y − Xz` (momentum point) while
@@ -490,6 +503,7 @@ pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
             }
             StopRule::DualityGap => {
                 if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
+                    strategy.sync_check_state(x, y, &mut ws.beta, &mut ws.r);
                     strategy.fill_check_residual(x, y, &ws.beta, &ws.r, &mut ws.r_check);
                     let (d_res, d_accel) =
                         ws.dual.update_datafit(x, y, lambda, &ws.r_check, &mut ws.scratch, datafit);

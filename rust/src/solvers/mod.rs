@@ -16,10 +16,26 @@ pub mod glm;
 pub mod glmnet;
 pub mod ista;
 pub mod path;
+pub mod sweep32;
 
 use crate::data::design::DesignOps;
 use crate::extrapolation::ResidualBuffer;
 use crate::lasso::primal;
+
+/// Arithmetic precision of the CD **iteration** (epochs). Certificates
+/// are unaffected: whatever the sweep precision, residual, duality gap,
+/// and Gap Safe screening are recomputed in f64 before any screen/stop
+/// decision, so every gap bound the engine emits is an exact f64
+/// certificate (see `solvers/sweep32.rs` for the state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Pure f64 (bit-identical to the historical solver path).
+    #[default]
+    F64,
+    /// f32 sweeps on an f32 design shadow, f64 certification at every
+    /// gap check; escalates to f64 sweeps at the f32 fixed point.
+    F32,
+}
 
 /// One duality-gap evaluation record (every `f` epochs).
 #[derive(Debug, Clone)]

@@ -27,6 +27,7 @@ use crate::solvers::celer::{celer_solve_on_ws, CelerConfig};
 use crate::solvers::engine::Workspace;
 use crate::solvers::glm::{glm_celer_solve_ws, ProxNewtonCd};
 use crate::solvers::glmnet::{glmnet_solve_ws, GlmnetConfig};
+use crate::solvers::Precision;
 use std::time::Instant;
 
 /// Log-spaced λ grid from `λ_max` down to `λ_max · min_ratio` (inclusive),
@@ -277,14 +278,27 @@ pub fn run_path_batched(
 ) -> PathResult {
     let start = Instant::now();
     let mut lanes_ws = ws.take_batch();
-    // Dispatch once so the interleaved sweeps monomorphize per storage.
+    // Dispatch once so the interleaved sweeps monomorphize per storage;
+    // `cfg.precision` picks the f64 or f32-sweep strategy.
     let results = match x {
-        DesignMatrix::Dense(d) => {
-            batch::solve_grid(d, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
-        }
-        DesignMatrix::Sparse(s) => {
-            batch::solve_grid(s, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
-        }
+        DesignMatrix::Dense(d) => match cfg.precision {
+            Precision::F64 => {
+                batch::solve_grid(d, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
+            }
+            Precision::F32 => {
+                let mut strat = batch::BatchF32Strategy::new(d);
+                batch::solve_grid(d, y, grid, None, cfg, &mut lanes_ws, &mut strat)
+            }
+        },
+        DesignMatrix::Sparse(s) => match cfg.precision {
+            Precision::F64 => {
+                batch::solve_grid(s, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
+            }
+            Precision::F32 => {
+                let mut strat = batch::BatchF32Strategy::new(s);
+                batch::solve_grid(s, y, grid, None, cfg, &mut lanes_ws, &mut strat)
+            }
+        },
     };
     ws.put_batch(lanes_ws);
     let steps = results

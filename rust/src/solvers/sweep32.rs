@@ -1,0 +1,218 @@
+//! f32 sweep / f64 certify: the mixed-precision CD strategy behind
+//! [`Precision::F32`](crate::solvers::Precision).
+//!
+//! # State machine
+//!
+//! ```text
+//!        ┌──────────────── f32 SWEEP ────────────────┐
+//!        │ CD epochs on (β₃₂, r₃₂) over the f32      │
+//!        │ design shadow — half the memory traffic   │
+//!        └──────────┬──────────────────┬─────────────┘
+//!     gap check due │                  │ f32 fixed point reached
+//!                   ▼                  │ (zero-update epoch) or
+//!        ┌─── f64 CERTIFY ───┐         │ f32 epoch budget spent
+//!        │ β ← cast(β₃₂)     │         ▼
+//!        │ r ← y − Xβ (f64)  │   ┌── f64 ESCALATE ──┐
+//!        │ gap, screening,   │   │ certify once,    │
+//!        │ stop: exact f64   │   │ then plain f64   │
+//!        └──────────┬────────┘   │ CD epochs forever│
+//!   check survived, │            └──────────────────┘
+//!   maybe screened  ▼
+//!        (β₃₂, r₃₂) ← cast(β, r)   [resync: picks up screening]
+//! ```
+//!
+//! Certification is what keeps the safety guarantees intact: the f32
+//! iterate is *never* consulted by a certificate. At every gap check the
+//! engine calls [`Strategy::sync_check_state`], which promotes β₃₂ into
+//! the f64 workspace and recomputes `r = y − Xβ` exactly in f64; the
+//! dual point (Eq. 4), the duality gap, and the Gap Safe screening test
+//! all run on those exact values, so a reported gap ≤ ε means exactly
+//! what it means in pure-f64 mode, and screening never discards a
+//! feature based on rounded arithmetic.
+//!
+//! Escalation is what guarantees termination at tolerances below f32
+//! resolution: an f32 CD sweep that makes **zero** coefficient updates
+//! has reached an exact f32 fixed point and can never progress again, so
+//! the strategy permanently switches to f64 epochs from the certified
+//! iterate (the f32 phase then amounts to a very cheap warm start). A
+//! hard budget of [`MAX_F32_EPOCHS`] f32 epochs backstops the switch
+//! against rounding-induced limit cycles that never reach an exact
+//! fixed point, so a `Precision::F32` solve converges whenever the
+//! corresponding f64 solve does.
+
+use crate::data::design::DesignOps;
+use crate::data::shadow::ShadowF32;
+use crate::datafit::Quadratic;
+use crate::lasso::primal;
+use crate::solvers::engine::Strategy;
+use crate::util::{soft_threshold, soft_threshold_f32};
+
+/// Hard cap on f32 epochs before escalating to f64 sweeps. Stall
+/// detection (a zero-update epoch) almost always fires first; the cap
+/// only backstops pathological f32 limit cycles.
+pub const MAX_F32_EPOCHS: usize = 1_000;
+
+/// Cyclic CD in f32 with f64 certification at every gap check.
+pub struct F32CdStrategy {
+    shadow: ShadowF32,
+    beta32: Vec<f32>,
+    r32: Vec<f32>,
+    norms32: Vec<f32>,
+    /// f32 state mirrors the engine's (β, r). Cleared after every
+    /// certification so the next epoch re-syncs (screening may have
+    /// zeroed coefficients and patched the residual in between).
+    synced: bool,
+    /// Permanently switched to f64 epochs.
+    f64_mode: bool,
+    f32_epochs: usize,
+}
+
+impl F32CdStrategy {
+    /// Build the strategy (and the f32 design shadow) for one solve.
+    pub fn new<D: DesignOps>(x: &D) -> Self {
+        F32CdStrategy {
+            shadow: x.shadow_f32(),
+            beta32: Vec::new(),
+            r32: Vec::new(),
+            norms32: Vec::new(),
+            synced: false,
+            f64_mode: false,
+            f32_epochs: 0,
+        }
+    }
+
+    /// True once the strategy has escalated to f64 sweeps.
+    pub fn escalated(&self) -> bool {
+        self.f64_mode
+    }
+
+    fn promote(&self, beta: &mut [f64]) {
+        for (b, &b32) in beta.iter_mut().zip(self.beta32.iter()) {
+            *b = b32 as f64;
+        }
+    }
+
+    fn escalate<D: DesignOps>(&mut self, x: &D, y: &[f64], beta: &mut [f64], r: &mut [f64]) {
+        self.promote(beta);
+        primal::residual(x, y, beta, r);
+        self.f64_mode = true;
+    }
+}
+
+impl<D: DesignOps> Strategy<D> for F32CdStrategy {
+    fn epoch(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        lambda: f64,
+        beta: &mut [f64],
+        r: &mut [f64],
+        _xw: &mut [f64],
+        active: &[usize],
+        norms_sq: &[f64],
+        _datafit: &Quadratic,
+    ) {
+        if self.f64_mode {
+            // Post-escalation: the plain f64 CD epoch (identical to
+            // `CdStrategy`), continuing from the certified iterate.
+            for &j in active {
+                let nrm = norms_sq[j];
+                let g = x.col_dot(j, r);
+                let old = beta[j];
+                let new = soft_threshold(old + g / nrm, lambda / nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, r);
+                    beta[j] = new;
+                }
+            }
+            return;
+        }
+        if !self.synced {
+            self.beta32.clear();
+            self.beta32.extend(beta.iter().map(|&b| b as f32));
+            self.r32.clear();
+            self.r32.extend(r.iter().map(|&v| v as f32));
+            if self.norms32.len() != norms_sq.len() {
+                self.norms32 = norms_sq.iter().map(|&v| v as f32).collect();
+            }
+            self.synced = true;
+        }
+        let lam = lambda as f32;
+        let mut any_update = false;
+        for &j in active {
+            let nrm = self.norms32[j];
+            if nrm <= 0.0 {
+                // ‖x_j‖² underflowed to 0 in f32; leave the coordinate
+                // to the (eventual) f64 phase rather than divide by 0.
+                continue;
+            }
+            let g = self.shadow.col_dot(j, &self.r32);
+            let old = self.beta32[j];
+            let new = soft_threshold_f32(old + g / nrm, lam / nrm);
+            if new != old {
+                self.shadow.col_axpy(j, old - new, &mut self.r32);
+                self.beta32[j] = new;
+                any_update = true;
+            }
+        }
+        self.f32_epochs += 1;
+        if !any_update || self.f32_epochs >= MAX_F32_EPOCHS {
+            self.escalate(x, y, beta, r);
+        }
+    }
+
+    fn sync_check_state(&mut self, x: &D, y: &[f64], beta: &mut [f64], r: &mut [f64]) {
+        if self.f64_mode || !self.synced {
+            // f64 state is already authoritative.
+            return;
+        }
+        self.promote(beta);
+        primal::residual(x, y, beta, r);
+        // Screening may mutate (β, r) right after the check; re-sync the
+        // f32 mirror at the next epoch.
+        self.synced = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::solvers::engine::{self, Init, Workspace};
+
+    #[test]
+    fn f32_strategy_converges_and_certifies() {
+        let ds = synth::leukemia_mini(21);
+        let lambda = crate::lasso::dual::lambda_max(&ds.x, &ds.y) / 5.0;
+        let cfg = crate::solvers::cd::CdConfig { tol: 1e-8, ..Default::default() }.engine();
+        let mut ws = Workspace::new();
+        let mut strat = F32CdStrategy::new(&ds.x);
+        let out =
+            engine::solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut ws, &mut strat);
+        assert!(out.converged, "f32 sweep mode terminates below f32 resolution");
+        assert!(out.gap <= 1e-8);
+        // the certified invariant: the workspace residual is the exact
+        // f64 residual of the returned β
+        let mut r_exact = vec![0.0; ds.x.n()];
+        primal::residual(&ds.x, &ds.y, &ws.beta, &mut r_exact);
+        assert_eq!(ws.r, r_exact, "returned r is the exact f64 residual");
+        // a tolerance this far below f32 resolution forces escalation
+        assert!(strat.escalated());
+    }
+
+    #[test]
+    fn zero_update_epoch_escalates() {
+        // λ ≥ λ_max: β = 0 is optimal, the very first f32 epoch makes no
+        // update, and the strategy must escalate rather than spin.
+        let ds = synth::leukemia_mini(22);
+        let lambda = crate::lasso::dual::lambda_max(&ds.x, &ds.y) * 1.01;
+        let cfg = crate::solvers::cd::CdConfig::default().engine();
+        let mut ws = Workspace::new();
+        let mut strat = F32CdStrategy::new(&ds.x);
+        let out =
+            engine::solve(&ds.x, &ds.y, lambda, Init::Zeros, None, &cfg, &mut ws, &mut strat);
+        assert!(out.converged);
+        assert!(strat.escalated());
+        assert!(ws.beta.iter().all(|&b| b == 0.0));
+    }
+}

@@ -6,20 +6,22 @@
 //! layer (`python/compile/model.py::gauss_solve`) because LAPACK
 //! custom-calls are not available in the standalone PJRT runtime.
 
-/// Euclidean dot product.
+/// Euclidean dot product, routed through the width-8 multi-accumulator
+/// kernel of [`crate::util::simd`].
 ///
-/// Perf note (§Perf, single-core Xeon): the naive indexed loop
-/// auto-vectorizes best here — manual 4-accumulator and `chunks_exact`
-/// variants measured 56% resp. 16% SLOWER on the dense CD epoch
-/// benchmark, so the simple form is intentional.
+/// Perf note (supersedes the PR-1 note that kept the naive loop): the
+/// earlier 4-accumulator experiment interleaved accumulators with a
+/// strided access pattern the vectorizer could not coalesce. The
+/// `simd::dot` layout — contiguous `chunks_exact(8)` with one
+/// accumulator per in-chunk lane and a pairwise reduction tree —
+/// vectorizes cleanly (verified on the `-O3` C mirror in
+/// `scripts/simd_proxy.c`; see BENCH_6.json). Reduction order changes
+/// versus the naive loop, but every bitwise pin in the repo compares
+/// two paths that share these kernels, so the contract in
+/// `util/simd.rs` is the single source of truth for reduction order.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
-    }
-    acc
+    crate::util::simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -28,13 +30,28 @@ pub fn norm(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// BLAS-named alias for [`norm`].
+#[inline]
+pub fn nrm2(a: &[f64]) -> f64 {
+    norm(a)
+}
+
+/// ℓ1 norm `Σ |aᵢ|` (width-8 accumulator fold).
+#[inline]
+pub fn asum(a: &[f64]) -> f64 {
+    crate::util::simd::asum(a)
+}
+
 /// y += alpha * x
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
+    crate::util::simd::axpy(alpha, x, y)
+}
+
+/// out = b − a (element-wise; the extrapolation ring's residual diffs).
+#[inline]
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    crate::util::simd::sub(a, b, out)
 }
 
 /// Squared Euclidean distance.
@@ -280,9 +297,20 @@ mod tests {
         let b = [4.0, 5.0, 6.0];
         assert_eq!(dot(&a, &b), 32.0);
         assert!((norm(&a) - 14f64.sqrt()).abs() < 1e-12);
+        assert_eq!(nrm2(&a), norm(&a));
         let mut y = b;
         axpy(2.0, &a, &mut y);
         assert_eq!(y, [6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn asum_sub() {
+        let a = [1.0, -2.0, 3.0, -4.0];
+        assert_eq!(asum(&a), 10.0);
+        let b = [2.0, 2.0, 2.0, 2.0];
+        let mut d = [0.0; 4];
+        sub(&a, &b, &mut d);
+        assert_eq!(d, [1.0, 4.0, -1.0, 6.0]);
     }
 
     #[test]

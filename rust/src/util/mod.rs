@@ -6,10 +6,23 @@ pub mod par;
 pub mod pool;
 pub mod rng;
 pub mod select;
+pub mod simd;
 
 /// Soft-thresholding operator `ST(x, u) = sign(x) · max(0, |x| − u)`.
 #[inline(always)]
 pub fn soft_threshold(x: f64, u: f64) -> f64 {
+    if x > u {
+        x - u
+    } else if x < -u {
+        x + u
+    } else {
+        0.0
+    }
+}
+
+/// f32 soft-thresholding (the f32 sweep mode's inner update).
+#[inline(always)]
+pub fn soft_threshold_f32(x: f32, u: f32) -> f32 {
     if x > u {
         x - u
     } else if x < -u {

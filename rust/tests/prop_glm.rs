@@ -272,7 +272,8 @@ fn assert_bitwise_equal_to_legacy(x: &DesignMatrix, y: &[f64], ratio: f64, scree
         extrapolate,
         best_dual: true,
         screen,
-        trace: false,
+        // precision/trace: defaults (F64; the bitwise pin is the f64 path)
+        ..Default::default()
     };
     let new = cd_solve(x, y, lambda, None, &cfg);
     let old = legacy_cd_solve(

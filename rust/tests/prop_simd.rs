@@ -1,0 +1,441 @@
+//! Property tests for the vectorized kernel layer (`util::simd`) and the
+//! f32 sweep mode (`Precision::F32`).
+//!
+//! The f64 pins are **bitwise**: every reduction the solver performs is
+//! asserted equal, bit for bit, to a test-local scalar reference that
+//! re-implements the documented accumulator-order contract (element `i`
+//! into `acc[i % W]`, fixed pairwise lane reduction — see `util::simd`).
+//! The references here are deliberately written the slow, obvious way so
+//! a regression in the kernel layer cannot hide behind a matching
+//! "optimization" in the test.
+
+use celer::data::csc::CscMatrix;
+use celer::data::dense::DenseMatrix;
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::synth;
+use celer::data::view::DesignView;
+use celer::lasso::{dual, primal};
+use celer::solvers::batch::{
+    solve_grid, BatchCdStrategy, BatchConfig, BatchF32Strategy, BatchWorkspace,
+};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::path::lambda_grid;
+use celer::solvers::Precision;
+use celer::util::linalg;
+use celer::util::par;
+use celer::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Test-local scalar references for the reduction contract.
+// ---------------------------------------------------------------------
+
+/// Width-8 contract: element `i` into `acc[i % 8]`, pairwise tree.
+fn ref_fold8<F: Fn(usize) -> f64>(len: usize, f: F) -> f64 {
+    let mut acc = [0.0f64; 8];
+    for i in 0..len {
+        acc[i % 8] += f(i);
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Width-4 gather contract: entry `k` into `acc[k % 4]`, pairwise tree.
+fn ref_fold4<F: Fn(usize) -> f64>(len: usize, f: F) -> f64 {
+    let mut acc = [0.0f64; 4];
+    for i in 0..len {
+        acc[i % 4] += f(i);
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// `dot` under the contract (reference for every contiguous f64 dot).
+fn ref_dot(a: &[f64], b: &[f64]) -> f64 {
+    ref_fold8(a.len(), |i| a[i] * b[i])
+}
+
+/// Odd lengths around every chunk boundary, plus degenerate cases.
+const LENS: [usize; 16] = [0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 257];
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// A dense/CSC pair over the same values (with genuine zeros so the CSC
+/// entry arrays exercise odd lengths).
+fn design_pair(seed: u64, n: usize, p: usize) -> (DenseMatrix, CscMatrix) {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0.0; n * p];
+    for v in data.iter_mut() {
+        if rng.uniform() < 0.6 {
+            *v = rng.normal();
+        }
+    }
+    (DenseMatrix::from_col_major(n, p, data.clone()), CscMatrix::from_dense(n, p, &data))
+}
+
+// ---------------------------------------------------------------------
+// f64 bitwise identity: linalg and design kernels vs. the contract.
+// ---------------------------------------------------------------------
+
+#[test]
+fn linalg_reductions_follow_the_contract_bitwise() {
+    let mut rng = Rng::new(11);
+    for &n in &LENS {
+        let a = rand_vec(&mut rng, n);
+        let b = rand_vec(&mut rng, n);
+        assert_eq!(linalg::dot(&a, &b).to_bits(), ref_dot(&a, &b).to_bits(), "dot n={n}");
+        let asum_ref = ref_fold8(n, |i| a[i].abs());
+        assert_eq!(linalg::asum(&a).to_bits(), asum_ref.to_bits(), "asum n={n}");
+        assert_eq!(
+            linalg::nrm2(&a).to_bits(),
+            ref_fold8(n, |i| a[i] * a[i]).sqrt().to_bits(),
+            "nrm2 n={n}"
+        );
+        assert_eq!(
+            primal::l1_norm(&a).to_bits(),
+            ref_fold8(n, |i| a[i].abs()).to_bits(),
+            "l1_norm n={n}"
+        );
+    }
+}
+
+#[test]
+fn dense_design_kernels_follow_the_contract_bitwise() {
+    let mut rng = Rng::new(12);
+    for &n in &[1usize, 5, 8, 31, 257] {
+        let (dense, _) = design_pair(100 + n as u64, n, 4);
+        let v = rand_vec(&mut rng, n);
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        for j in 0..4 {
+            let mut col = vec![0.0; n];
+            let mut buf = Vec::new();
+            dense.gather_dense(&[j], &mut buf);
+            col.copy_from_slice(&buf);
+            assert_eq!(
+                dense.col_dot(j, &v).to_bits(),
+                ref_dot(&col, &v).to_bits(),
+                "col_dot n={n} j={j}"
+            );
+            assert_eq!(
+                dense.col_norm_sq(j).to_bits(),
+                ref_fold8(n, |i| col[i] * col[i]).to_bits(),
+                "col_norm_sq n={n} j={j}"
+            );
+            assert_eq!(
+                dense.col_wnorm_sq(j, &w).to_bits(),
+                ref_fold8(n, |i| w[i] * col[i] * col[i]).to_bits(),
+                "col_wnorm_sq n={n} j={j}"
+            );
+            // element-wise kernels: exactly the naive per-element update
+            let mut out = v.clone();
+            dense.col_axpy(j, -0.75, &mut out);
+            let naive: Vec<f64> = (0..n).map(|i| v[i] + -0.75 * col[i]).collect();
+            assert_eq!(out, naive, "col_axpy n={n} j={j}");
+            let mut out = v.clone();
+            dense.col_waxpy(j, 0.5, &w, &mut out);
+            let naive: Vec<f64> = (0..n).map(|i| v[i] + 0.5 * w[i] * col[i]).collect();
+            assert_eq!(out, naive, "col_waxpy n={n} j={j}");
+        }
+    }
+}
+
+#[test]
+fn csc_design_kernels_follow_the_gather_contract_bitwise() {
+    let mut rng = Rng::new(13);
+    for &n in &[1usize, 7, 29, 64, 130] {
+        let (_, csc) = design_pair(200 + n as u64, n, 5);
+        let v = rand_vec(&mut rng, n);
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+        for j in 0..5 {
+            let (idx, val) = csc.col(j);
+            let m = idx.len();
+            assert_eq!(
+                csc.col_dot(j, &v).to_bits(),
+                ref_fold4(m, |k| val[k] * v[idx[k] as usize]).to_bits(),
+                "csc col_dot n={n} j={j}"
+            );
+            // col_norm_sq routes the contiguous value array through the
+            // width-8 contract (no gather needed).
+            assert_eq!(
+                csc.col_norm_sq(j).to_bits(),
+                ref_fold8(m, |k| val[k] * val[k]).to_bits(),
+                "csc col_norm_sq n={n} j={j}"
+            );
+            assert_eq!(
+                csc.col_wnorm_sq(j, &w).to_bits(),
+                ref_fold4(m, |k| w[idx[k] as usize] * val[k] * val[k]).to_bits(),
+                "csc col_wnorm_sq n={n} j={j}"
+            );
+            // scatters: one add per stored entry, same as the naive loop
+            let mut out = v.clone();
+            csc.col_axpy(j, 1.25, &mut out);
+            let mut naive = v.clone();
+            for k in 0..m {
+                naive[idx[k] as usize] += 1.25 * val[k];
+            }
+            assert_eq!(out, naive, "csc col_axpy n={n} j={j}");
+        }
+    }
+}
+
+#[test]
+fn view_kernels_are_bitwise_parent_kernels() {
+    let (dense, csc) = design_pair(42, 57, 12);
+    let cols = vec![1usize, 4, 7, 11];
+    let mut rng = Rng::new(14);
+    let v = rand_vec(&mut rng, 57);
+    let dn = dense.col_norms_sq();
+    let view_d = DesignView::new(&dense, &cols, &dn);
+    let sn = csc.col_norms_sq();
+    let view_s = DesignView::new(&csc, &cols, &sn);
+    for (t, &j) in cols.iter().enumerate() {
+        assert_eq!(view_d.col_dot(t, &v).to_bits(), dense.col_dot(j, &v).to_bits(), "dense t={t}");
+        assert_eq!(view_s.col_dot(t, &v).to_bits(), csc.col_dot(j, &v).to_bits(), "csc t={t}");
+        assert_eq!(view_d.col_norm_sq(t).to_bits(), dense.col_norm_sq(j).to_bits());
+        assert_eq!(view_s.col_norm_sq(t).to_bits(), csc.col_norm_sq(j).to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lane kernels: the cache-blocked / entry-pair batched contracts.
+// ---------------------------------------------------------------------
+
+#[test]
+fn dense_lane_kernels_follow_the_blocked_contract_bitwise() {
+    // col_dot_lanes processes the column in 256-row blocks, each block
+    // reduced under the width-8 contract, blocks accumulated in order.
+    const BLOCK: usize = 256;
+    for &n in &[5usize, 255, 256, 257, 600] {
+        let (dense, _) = design_pair(300 + n as u64, n, 3);
+        let lanes = [0usize, 2, 3];
+        let mut rng = Rng::new(15);
+        let v = rand_vec(&mut rng, 4 * n);
+        let mut buf = Vec::new();
+        for j in 0..3 {
+            dense.gather_dense(&[j], &mut buf);
+            let col = buf.clone();
+            let mut got = vec![0.0; lanes.len()];
+            dense.col_dot_lanes(j, &v, n, &lanes, &mut got);
+            for (t, &k) in lanes.iter().enumerate() {
+                let mut expect = 0.0;
+                let mut i = 0;
+                while i < n {
+                    let hi = (i + BLOCK).min(n);
+                    expect += ref_dot(&col[i..hi], &v[k * n + i..k * n + hi]);
+                    i = hi;
+                }
+                assert_eq!(got[t].to_bits(), expect.to_bits(), "n={n} j={j} lane={k}");
+            }
+            // col_axpy_lanes is element-wise: bitwise the per-lane naive update
+            let alphas = [0.5, 0.0, -1.25];
+            let mut batched = v.clone();
+            dense.col_axpy_lanes(j, &alphas, &mut batched, n, &lanes);
+            let mut naive = v.clone();
+            for (t, &k) in lanes.iter().enumerate() {
+                for i in 0..n {
+                    naive[k * n + i] += alphas[t] * col[i];
+                }
+            }
+            assert_eq!(batched, naive, "axpy_lanes n={n} j={j}");
+        }
+    }
+}
+
+#[test]
+fn csc_lane_kernels_follow_the_entry_pair_contract_bitwise() {
+    // col_dot_lanes decodes each stored entry once and accumulates
+    // entry PAIRS per lane (odd tail entry alone).
+    for &n in &[6usize, 33, 101] {
+        let (_, csc) = design_pair(400 + n as u64, n, 4);
+        let lanes = [0usize, 1, 3];
+        let mut rng = Rng::new(16);
+        let v: Vec<f64> = (0..4 * n).map(|_| rng.normal()).collect();
+        for j in 0..4 {
+            let (idx, val) = csc.col(j);
+            let m = idx.len();
+            let mut got = vec![0.0; lanes.len()];
+            csc.col_dot_lanes(j, &v, n, &lanes, &mut got);
+            for (t, &k) in lanes.iter().enumerate() {
+                let base = k * n;
+                let mut expect = 0.0;
+                let main = m - m % 2;
+                let mut e = 0;
+                while e < main {
+                    expect += val[e] * v[base + idx[e] as usize]
+                        + val[e + 1] * v[base + idx[e + 1] as usize];
+                    e += 2;
+                }
+                if main < m {
+                    expect += val[main] * v[base + idx[main] as usize];
+                }
+                assert_eq!(got[t].to_bits(), expect.to_bits(), "n={n} j={j} lane={k}");
+            }
+            // scatter: one add per (entry, lane) — the per-lane naive loop
+            let alphas = [2.0, -0.5, 0.25];
+            let mut batched = v.clone();
+            csc.col_axpy_lanes(j, &alphas, &mut batched, n, &lanes);
+            let mut naive = v.clone();
+            for (t, &k) in lanes.iter().enumerate() {
+                csc.col_axpy(j, alphas[t], &mut naive[k * n..(k + 1) * n]);
+            }
+            assert_eq!(batched, naive, "csc axpy_lanes n={n} j={j}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 sweep mode: f64-certified gaps, matching supports, invariance.
+// ---------------------------------------------------------------------
+
+#[test]
+fn f32_mode_yields_f64_certified_gaps_and_matching_supports() {
+    let ds = synth::leukemia_mini(31);
+    let (n, p) = (ds.x.n(), ds.x.p());
+    let mut buf = Vec::new();
+    ds.x.gather_dense(&(0..p).collect::<Vec<_>>(), &mut buf);
+    let sparse = DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &buf));
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 5.0;
+    let tol = 1e-10;
+    for x in [&ds.x, &sparse] {
+        let f64_out = cd_solve(x, &ds.y, lambda, None, &CdConfig { tol, ..Default::default() });
+        let f32_out = cd_solve(
+            x,
+            &ds.y,
+            lambda,
+            None,
+            &CdConfig { tol, precision: Precision::F32, ..Default::default() },
+        );
+        assert!(f32_out.converged, "f32 mode converges below f32 resolution");
+        assert!(f32_out.gap <= tol);
+        // The certificate invariant: the returned residual is the exact
+        // f64 residual of the returned β — nothing f32 leaks out.
+        let mut r_exact = vec![0.0; n];
+        primal::residual(x, &ds.y, &f32_out.beta, &mut r_exact);
+        assert_eq!(f32_out.r, r_exact, "returned r is the exact f64 residual");
+        // Both runs are gap-certified at ε ⇒ objectives within 2ε and
+        // (at this ε, far below the coefficient scale) equal supports.
+        let p32 = primal::primal(x, &ds.y, &f32_out.beta, lambda);
+        let p64 = primal::primal(x, &ds.y, &f64_out.beta, lambda);
+        assert!((p32 - p64).abs() <= 2.0 * tol, "{p32} vs {p64}");
+        let support = |b: &[f64]| -> Vec<usize> {
+            b.iter().enumerate().filter(|(_, v)| v.abs() > 1e-6).map(|(j, _)| j).collect()
+        };
+        assert_eq!(support(&f32_out.beta), support(&f64_out.beta), "supports match");
+    }
+}
+
+#[test]
+fn f32_mode_is_thread_count_invariant() {
+    // The f32 epochs are serial and the certification path reuses the
+    // pooled-but-deterministic f64 kernels, so forcing the serial
+    // runtime must reproduce the pooled run bit for bit.
+    let ds = synth::leukemia_mini(32);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) / 10.0;
+    let cfg = CdConfig { tol: 1e-8, precision: Precision::F32, screen: true, ..Default::default() };
+    let pooled = cd_solve(&ds.x, &ds.y, lambda, None, &cfg);
+    let serial = par::run_serial(|| cd_solve(&ds.x, &ds.y, lambda, None, &cfg));
+    assert_eq!(pooled.beta, serial.beta);
+    assert_eq!(pooled.gap.to_bits(), serial.gap.to_bits());
+    assert_eq!(pooled.epochs, serial.epochs);
+}
+
+#[test]
+fn batched_f32_grid_is_certified_and_matches_f64() {
+    let ds = synth::leukemia_mini(33);
+    let lmax = dual::lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lmax, 0.1, 6);
+    let tol = 1e-9;
+    let c64 = BatchConfig { tol, lanes: 3, ..Default::default() };
+    let c32 = BatchConfig { precision: Precision::F32, ..c64.clone() };
+    let mut ws64 = BatchWorkspace::new();
+    let a = solve_grid(&ds.x, &ds.y, &grid, None, &c64, &mut ws64, &mut BatchCdStrategy);
+    let mut ws32 = BatchWorkspace::new();
+    let mut strat = BatchF32Strategy::new(&ds.x);
+    let b = solve_grid(&ds.x, &ds.y, &grid, None, &c32, &mut ws32, &mut strat);
+    assert_eq!(a.len(), b.len());
+    for (la, lb) in a.iter().zip(&b) {
+        assert!(lb.converged, "λ#{}", lb.grid_idx);
+        assert!(lb.gap <= tol);
+        let pa = primal::primal(&ds.x, &ds.y, &la.beta, la.lambda);
+        let pb = primal::primal(&ds.x, &ds.y, &lb.beta, lb.lambda);
+        assert!((pa - pb).abs() <= 2.0 * tol, "λ#{}: {pa} vs {pb}", la.grid_idx);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Heavier f32 stress tier — run by the CI `--features f32-sweep` cell.
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "f32-sweep")]
+mod f32_stress {
+    use super::*;
+
+    /// A long warm-started path in f32 mode: every λ on a 30-point grid
+    /// down to λmax/50 must come back f64-gap-certified, sequential and
+    /// batched, dense and CSC.
+    #[test]
+    fn f32_long_path_is_certified_on_every_lambda() {
+        let ds = synth::leukemia_mini(41);
+        let (n, p) = (ds.x.n(), ds.x.p());
+        let mut buf = Vec::new();
+        ds.x.gather_dense(&(0..p).collect::<Vec<_>>(), &mut buf);
+        let sparse = DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &buf));
+        let tol = 1e-8;
+        for x in [&ds.x, &sparse] {
+            let lmax = dual::lambda_max(x, &ds.y);
+            let grid = lambda_grid(lmax, 0.02, 30);
+            // Sequential chain with warm starts, f32 sweeps per solve.
+            let cfg = CdConfig { tol, precision: Precision::F32, ..Default::default() };
+            let mut warm: Option<Vec<f64>> = None;
+            for &lambda in &grid {
+                let out = cd_solve(x, &ds.y, lambda, warm.as_deref(), &cfg);
+                assert!(out.converged, "λ={lambda}");
+                assert!(out.gap <= tol, "λ={lambda}: gap {}", out.gap);
+                let mut r_exact = vec![0.0; n];
+                primal::residual(x, &ds.y, &out.beta, &mut r_exact);
+                assert_eq!(out.r, r_exact, "λ={lambda}: exact f64 residual");
+                warm = Some(out.beta);
+            }
+            // Batched lanes over the same grid.
+            let bc = BatchConfig { tol, lanes: 4, precision: Precision::F32, ..Default::default() };
+            let mut ws = BatchWorkspace::new();
+            let mut strat = BatchF32Strategy::new(x);
+            let lanes = solve_grid(x, &ds.y, &grid, None, &bc, &mut ws, &mut strat);
+            assert_eq!(lanes.len(), grid.len());
+            for lane in &lanes {
+                assert!(lane.converged && lane.gap <= tol, "λ#{}", lane.grid_idx);
+            }
+        }
+    }
+
+    /// f32 mode on a design whose columns span ~6 orders of magnitude in
+    /// scale — the f32 fixed-point escalation must still hand every
+    /// column to the f64 phase and certify.
+    #[test]
+    fn f32_mode_survives_badly_scaled_columns() {
+        let mut rng = Rng::new(42);
+        let (n, p) = (80usize, 40usize);
+        let mut data = vec![0.0; n * p];
+        for j in 0..p {
+            let scale = 10f64.powi((j % 7) as i32 - 3); // 1e-3 … 1e3
+            for i in 0..n {
+                data[j * n + i] = scale * rng.normal();
+            }
+        }
+        let x = DenseMatrix::from_col_major(n, p, data);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let lambda = dual::lambda_max(&x, &y) / 20.0;
+        let tol = 1e-9;
+        let out = cd_solve(
+            &x,
+            &y,
+            lambda,
+            None,
+            &CdConfig { tol, precision: Precision::F32, ..Default::default() },
+        );
+        assert!(out.converged);
+        assert!(out.gap <= tol);
+        let mut r_exact = vec![0.0; n];
+        primal::residual(&x, &y, &out.beta, &mut r_exact);
+        assert_eq!(out.r, r_exact);
+    }
+}

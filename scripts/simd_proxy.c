@@ -1,0 +1,165 @@
+/* C proxy for the `util::simd` kernel-layer microbenchmarks.
+ *
+ * The container this repo grows in has no Rust toolchain, so the
+ * committed BENCH_6.json numbers for the kernel layer are measured with
+ * this gcc mirror of the exact same kernels (same accumulator widths,
+ * same BLOCK=256 lane tiling, NO -ffast-math — gcc, like rustc, may not
+ * reassociate the strict-FP reduction, so the scalar arm stays scalar
+ * and the multi-accumulator arm vectorizes). Shapes match the
+ * `hot/lanes_*` arms of rust/benches/hotpath_micro.rs: n=4096, p=256,
+ * B=8 lanes.
+ *
+ * Build + run:  gcc -O3 -march=native -o /tmp/simd_proxy scripts/simd_proxy.c && /tmp/simd_proxy
+ * Output lines: proxy <kernel> n=<n> p=<p> b=<b> iters=<k> min_ns=<..> mean_ns=<..> gflops=<..>
+ */
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#ifndef N
+#define N 4096
+#endif
+#ifndef P
+#define P 256
+#endif
+#define B 8
+#define BLOCK 256
+#ifndef ITERS
+#define ITERS 30
+#endif
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec * 1e9 + (double)ts.tv_nsec;
+}
+
+/* xorshift64* — deterministic fill, matches the spirit of util::rng */
+static unsigned long long rng_state = 0x9e3779b97f4a7c15ULL;
+static double uniform(void) {
+    rng_state ^= rng_state >> 12;
+    rng_state ^= rng_state << 25;
+    rng_state ^= rng_state >> 27;
+    unsigned long long z = rng_state * 0x2545F4914F6CDD1DULL;
+    return (double)(z >> 11) / 9007199254740992.0 - 0.5;
+}
+
+/* ---- scalar baselines: single sequential accumulator -------------- */
+
+__attribute__((noinline)) static double dot_scalar(const double *a, const double *b, size_t n) {
+    double acc = 0.0;
+    for (size_t i = 0; i < n; i++) acc += a[i] * b[i];
+    return acc;
+}
+
+__attribute__((noinline)) static void axpy_scalar(double alpha, const double *x, double *y, size_t n) {
+    for (size_t i = 0; i < n; i++) y[i] += alpha * x[i];
+}
+
+/* ---- util::simd mirror: width-8 accumulators, pairwise tree ------- */
+
+__attribute__((noinline)) static double dot_unrolled8(const double *a, const double *b, size_t n) {
+    double acc[8] = {0, 0, 0, 0, 0, 0, 0, 0};
+    size_t m = n - (n % 8);
+    for (size_t i = 0; i < m; i += 8)
+        for (int w = 0; w < 8; w++) acc[w] += a[i + w] * b[i + w];
+    for (size_t i = m; i < n; i++) acc[i % 8] += a[i] * b[i];
+    return ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+}
+
+/* dense col_dot_lanes mirror: BLOCK-row tiles, the column tile is
+ * loaded once and dotted against all B lane slices while hot */
+__attribute__((noinline)) static void dot_lanes_blocked(const double *col, const double *v, double *out) {
+    for (int k = 0; k < B; k++) out[k] = 0.0;
+    for (size_t s = 0; s < N; s += BLOCK) {
+        size_t e = s + BLOCK > N ? N : s + BLOCK;
+        for (int k = 0; k < B; k++) out[k] += dot_unrolled8(col + s, v + (size_t)k * N + s, e - s);
+    }
+}
+
+/* dense col_axpy_lanes mirror */
+__attribute__((noinline)) static void axpy_lanes_blocked(const double *col, const double *alphas, double *v) {
+    for (size_t s = 0; s < N; s += BLOCK) {
+        size_t e = s + BLOCK > N ? N : s + BLOCK;
+        for (int k = 0; k < B; k++) {
+            double a = alphas[k];
+            double *dst = v + (size_t)k * N + s;
+            for (size_t i = 0; i < e - s; i++) dst[i] += a * col[s + i];
+        }
+    }
+}
+
+typedef void (*epoch_fn)(const double *x, double *v, double *sink);
+
+static void report(const char *name, epoch_fn f, const double *x, double *v, double flops) {
+    double sink = 0.0;
+    f(x, v, &sink); /* warmup */
+    double min_ns = 1e30, sum_ns = 0.0;
+    for (int it = 0; it < ITERS; it++) {
+        double t0 = now_ns();
+        f(x, v, &sink);
+        double dt = now_ns() - t0;
+        if (dt < min_ns) min_ns = dt;
+        sum_ns += dt;
+    }
+    if (sink == 12345.678) fprintf(stderr, "sink\n"); /* defeat DCE */
+    double mean_ns = sum_ns / ITERS;
+    printf("proxy %s n=%d p=%d b=%d iters=%d min_ns=%.0f mean_ns=%.0f gflops=%.2f\n",
+           name, N, P, B, ITERS, min_ns, mean_ns, flops / min_ns);
+}
+
+/* ---- one "epoch" per arm: a full pass over all P columns ---------- */
+
+static void ep_dot_scalar(const double *x, double *v, double *sink) {
+    for (int j = 0; j < P; j++)
+        for (int k = 0; k < B; k++) *sink += dot_scalar(x + (size_t)j * N, v + (size_t)k * N, N);
+}
+
+static void ep_dot_simd_perlane(const double *x, double *v, double *sink) {
+    for (int j = 0; j < P; j++)
+        for (int k = 0; k < B; k++) *sink += dot_unrolled8(x + (size_t)j * N, v + (size_t)k * N, N);
+}
+
+static void ep_dot_blocked(const double *x, double *v, double *sink) {
+    double out[B];
+    for (int j = 0; j < P; j++) {
+        dot_lanes_blocked(x + (size_t)j * N, v, out);
+        *sink += out[0];
+    }
+}
+
+static double ALPHAS[B];
+
+static void ep_axpy_scalar(const double *x, double *v, double *sink) {
+    for (int j = 0; j < P; j++)
+        for (int k = 0; k < B; k++) axpy_scalar(ALPHAS[k], x + (size_t)j * N, v + (size_t)k * N, N);
+    *sink += v[0];
+}
+
+static void ep_axpy_blocked(const double *x, double *v, double *sink) {
+    for (int j = 0; j < P; j++) axpy_lanes_blocked(x + (size_t)j * N, ALPHAS, v);
+    *sink += v[0];
+}
+
+int main(void) {
+    double *x = malloc(sizeof(double) * (size_t)N * P);
+    double *v = malloc(sizeof(double) * (size_t)N * B);
+    if (!x || !v) return 1;
+    for (size_t i = 0; i < (size_t)N * P; i++) x[i] = uniform();
+    for (size_t i = 0; i < (size_t)N * B; i++) v[i] = uniform();
+    for (int k = 0; k < B; k++) ALPHAS[k] = (k % 2 == 0 ? 1e-9 : -1e-9);
+
+    double dot_flops = 2.0 * N * P * B;  /* mul+add per element, all lanes */
+    double axpy_flops = 2.0 * N * P * B;
+
+    report("lanes_dot_scalar_dense", ep_dot_scalar, x, v, dot_flops);
+    report("lanes_dot_simd_perlane_dense", ep_dot_simd_perlane, x, v, dot_flops);
+    report("lanes_dot_blocked_dense", ep_dot_blocked, x, v, dot_flops);
+    report("lanes_axpy_scalar_dense", ep_axpy_scalar, x, v, axpy_flops);
+    report("lanes_axpy_blocked_dense", ep_axpy_blocked, x, v, axpy_flops);
+
+    free(x);
+    free(v);
+    return 0;
+}
