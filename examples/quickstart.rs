@@ -78,7 +78,7 @@ fn main() {
     );
     let t_seq = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    let bat = lasso_path(&ds.x, &ds.y, &grid, tol, lanes, false);
+    let bat = lasso_path(&ds.x, &ds.y, &grid, tol, lanes, false, &celer::penalty::L1);
     let t_bat = t0.elapsed().as_secs_f64();
     assert!(seq.all_converged() && bat.all_converged());
 

@@ -18,6 +18,90 @@ use celer::solvers::path::{lambda_grid, run_path, PathSolver};
 use celer::util::select::k_smallest_indices;
 use celer::util::soft_threshold;
 
+/// Penalty-trait epoch cost: the same dense CD epoch as
+/// `hot/dense_cd_epoch`, but with the update supplied by a [`Penalty`]'s
+/// prox (ℓ₁ / elastic net) or block prox (group-ℓ₂ with the Frobenius
+/// majorizer). `hot/prox_l1_epoch_dense` vs `hot/dense_cd_epoch` is the
+/// abstraction overhead of the trait dispatch — the acceptance bar for
+/// the penalty layer is parity (the `P = L1` prox inlines to the same
+/// soft-threshold).
+fn bench_prox_epochs(tag: &str, x: &DesignMatrix, y: &[f64], iters: usize) {
+    use celer::penalty::{ElasticNet, GroupLasso, Penalty, L1};
+    let p = x.p();
+    let norms = x.col_norms_sq();
+    let lambda = dual::lambda_max(x, y) / 10.0;
+
+    fn separable_epoch<P: Penalty>(
+        name: &str,
+        pen: &P,
+        x: &DesignMatrix,
+        y: &[f64],
+        norms: &[f64],
+        lambda: f64,
+        iters: usize,
+    ) {
+        let p = x.p();
+        let mut beta = vec![0.0; p];
+        let mut r = y.to_vec();
+        bench::time(name, iters, || {
+            for j in 0..p {
+                let nrm = norms[j];
+                if nrm == 0.0 {
+                    continue;
+                }
+                let g = x.col_dot(j, &r);
+                let old = beta[j];
+                let new = pen.prox(j, old + g / nrm, lambda, nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, &mut r);
+                    beta[j] = new;
+                }
+            }
+        });
+    }
+    separable_epoch(&format!("hot/prox_l1_epoch_{tag}"), &L1, x, y, &norms, lambda, iters);
+    separable_epoch(
+        &format!("hot/prox_enet_epoch_{tag}"),
+        &ElasticNet::new(0.5),
+        x,
+        y,
+        &norms,
+        lambda,
+        iters,
+    );
+
+    // group-ℓ₂: one block prox per group, Frobenius majorizer L_g = Σ‖x_j‖²
+    let pen = GroupLasso::new(4);
+    let mut beta = vec![0.0; p];
+    let mut r = y.to_vec();
+    let mut u = [0.0f64; 4];
+    let mut b_new = [0.0f64; 4];
+    bench::time(&format!("hot/prox_group_epoch_{tag}"), iters, || {
+        let mut start = 0;
+        while start < p {
+            let end = (start + 4).min(p);
+            let w = end - start;
+            let l_g: f64 = norms[start..end].iter().sum();
+            if l_g == 0.0 {
+                start = end;
+                continue;
+            }
+            for (k, j) in (start..end).enumerate() {
+                u[k] = beta[j] + x.col_dot(j, &r) / l_g;
+            }
+            pen.prox_vec(&u[..w], lambda, l_g, &mut b_new[..w]);
+            for (k, j) in (start..end).enumerate() {
+                let old = beta[j];
+                if b_new[k] != old {
+                    x.col_axpy(j, old - b_new[k], &mut r);
+                    beta[j] = b_new[k];
+                }
+            }
+            start = end;
+        }
+    });
+}
+
 /// The `k` columns most |correlated| with y — a realistic working set.
 fn top_correlated(x: &DesignMatrix, y: &[f64], k: usize) -> Vec<usize> {
     let mut xty = vec![0.0; x.p()];
@@ -508,6 +592,9 @@ fn main() {
             }
         });
     }
+
+    // --- penalty-trait epochs (prox dispatch vs the hardcoded ST) ---
+    bench_prox_epochs("dense", &dense.x, &dense.y, iters);
 
     // --- full Xᵀv scan (gap/screening cost, parallelized) ---
     {

@@ -227,6 +227,41 @@ mod tests {
     }
 
     #[test]
+    fn penalty_jobs_route_through_by_name() {
+        // "celer-enet" / "celer-wlasso" grid cells dispatch through the
+        // same by_name path as every other solver; each penalty's grid
+        // anchors at its own λ_max so the first cell starts sparse.
+        let ds = load_dataset("leukemia-mini", 15).unwrap();
+        let tol = 1e-7;
+        let enet = crate::penalty::ElasticNet::new(0.5);
+        let wlasso = crate::penalty::WeightedL1::new(crate::penalty::scale_weights(&ds.x));
+        let jobs: Vec<PathJob> = [
+            ("celer-enet", crate::lasso::dual::penalty_lambda_max(&ds.x, &ds.y, &enet)),
+            ("celer-wlasso", crate::lasso::dual::penalty_lambda_max(&ds.x, &ds.y, &wlasso)),
+        ]
+        .iter()
+        .map(|(s, lmax)| PathJob {
+            solver_name: s.to_string(),
+            tol,
+            grid: crate::solvers::path::lambda_grid(*lmax, 0.1, 3),
+            store_betas: false,
+        })
+        .collect();
+        let out = run_path_jobs(&ds, jobs, 2).unwrap();
+        assert_eq!(out[0].solver, "celer-enet");
+        assert_eq!(out[1].solver, "celer-wlasso");
+        for r in &out {
+            assert!(r.all_converged(), "{} grid cells certified", r.solver);
+            for s in &r.steps {
+                assert!(s.gap <= tol);
+            }
+            // λ_max anchoring: the first cell's solution is empty (or
+            // nearly so), deeper cells select features.
+            assert!(r.steps.last().unwrap().support_size > 0, "{}", r.solver);
+        }
+    }
+
+    #[test]
     fn rejects_unknown_solver() {
         let ds = load_dataset("leukemia-mini", 3).unwrap();
         let jobs = vec![PathJob {

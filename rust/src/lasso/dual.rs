@@ -107,6 +107,69 @@ pub fn glm_lambda_max<D: DesignOps, F: crate::datafit::Datafit>(
     datafit.lambda_max(x, y)
 }
 
+/// Penalty-generic [`rescale_to_feasible_into`] (quadratic datafit):
+/// `θ = r / max(λ, Ω^D(Xᵀr))` with the penalty's
+/// [`dual_norm`](crate::penalty::Penalty::dual_norm). The `P = L1`
+/// instantiation delegates to the historical fused-kernel path, bit for
+/// bit. `xtr` holds the **unscaled** correlations on return, like every
+/// other rescale in this module.
+pub fn penalty_rescale_to_feasible_into<D: DesignOps, P: crate::penalty::Penalty>(
+    x: &D,
+    r: &[f64],
+    lambda: f64,
+    penalty: &P,
+    xtr: &mut [f64],
+    out: &mut Vec<f64>,
+) -> f64 {
+    if P::IS_L1 {
+        return rescale_to_feasible_into(x, r, lambda, xtr, out);
+    }
+    x.xt_vec(r, xtr);
+    let denom = crate::datafit::Datafit::rescale_denom(
+        &crate::datafit::Quadratic,
+        lambda,
+        penalty.dual_norm(lambda, xtr),
+    );
+    out.clear();
+    out.extend(r.iter().map(|&v| v / denom));
+    denom
+}
+
+/// `λ_max` under a generic penalty: `Ω^D₀(Xᵀy)` — the smallest λ whose
+/// solution is β̂ = 0 (plain ℓ₁ recovers [`lambda_max`] exactly).
+pub fn penalty_lambda_max<D: DesignOps, P: crate::penalty::Penalty>(
+    x: &D,
+    y: &[f64],
+    penalty: &P,
+) -> f64 {
+    if P::IS_L1 {
+        return lambda_max(x, y);
+    }
+    let mut xty = vec![0.0; x.p()];
+    x.xt_vec(y, &mut xty);
+    penalty.lambda_max(&xty)
+}
+
+/// Penalty-generic dual objective (quadratic datafit):
+/// `D(θ) = ½‖y‖² − (λ²/2)‖θ − y/λ‖² − λ·Σ_j ω*(x_jᵀθ)`, where the
+/// conjugate term is nonzero only for penalties whose Ω* is finite
+/// (elastic net). `xtheta` must hold the **scaled** correlations `Xᵀθ`.
+pub fn penalty_dual_objective_cached<P: crate::penalty::Penalty>(
+    y: &[f64],
+    theta: &[f64],
+    xtheta: &[f64],
+    lambda: f64,
+    y_norm_sq: f64,
+    penalty: &P,
+) -> f64 {
+    let base = dual_objective_cached(y, theta, lambda, y_norm_sq);
+    if P::INDICATOR_DUAL {
+        base
+    } else {
+        base - penalty.conjugate(lambda, xtheta, 1.0)
+    }
+}
+
 
 /// Check dual feasibility `‖Xᵀθ‖_∞ ≤ 1 + tol`.
 pub fn is_feasible<D: DesignOps>(x: &D, theta: &[f64], tol: f64) -> bool {

@@ -47,6 +47,26 @@ pub fn violation_one<D: DesignOps>(x: &D, r: &[f64], beta_j: f64, lambda: f64, j
     }
 }
 
+/// Penalty-generic [`violation_one`]: the distance from the gradient
+/// `g = x_jᵀr` to `λ·∂Ω_j(β_j)` via
+/// [`Penalty::subdiff_distance`](crate::penalty::Penalty::subdiff_distance).
+/// The `P = L1` instantiation is [`violation_one`]'s expression tree
+/// verbatim. Separable penalties only (group penalties need the whole
+/// group's gradient).
+#[inline]
+pub fn violation_one_penalty<D: DesignOps, P: crate::penalty::Penalty>(
+    x: &D,
+    r: &[f64],
+    beta_j: f64,
+    lambda: f64,
+    j: usize,
+    penalty: &P,
+) -> f64 {
+    debug_assert!(P::SEPARABLE);
+    let g = x.col_dot(j, r);
+    penalty.subdiff_distance(j, g, beta_j, lambda)
+}
+
 /// Maximum violation over all features (0 at an exact optimum).
 pub fn max_violation<D: DesignOps>(x: &D, r: &[f64], beta: &[f64], lambda: f64) -> f64 {
     crate::util::par::par_max_cost(x.p(), x.col_cost_hint(), |j| {

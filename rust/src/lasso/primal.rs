@@ -61,6 +61,23 @@ pub fn glm_state<D: DesignOps, F: crate::datafit::Datafit>(
     datafit.fill_residual(y, xw, r);
 }
 
+/// Penalty-generic primal `P(β) = ½‖r‖² + λ·Ω(β)` from a maintained
+/// residual. The `P = L1` instantiation is [`primal_from_residual`]
+/// expression for expression (the penalty's `value` is
+/// `lambda * l1_norm(beta)` verbatim), so the ℓ₁ bits are unchanged.
+#[inline]
+pub fn penalty_primal_from_residual<P: crate::penalty::Penalty>(
+    r: &[f64],
+    beta: &[f64],
+    lambda: f64,
+    penalty: &P,
+) -> f64 {
+    if P::IS_L1 {
+        return primal_from_residual(r, beta, lambda);
+    }
+    0.5 * crate::util::linalg::dot(r, r) + penalty.value(lambda, beta)
+}
+
 /// Support (indices of non-zero coefficients).
 pub fn support(beta: &[f64]) -> Vec<usize> {
     beta.iter().enumerate().filter(|(_, &b)| b != 0.0).map(|(j, _)| j).collect()

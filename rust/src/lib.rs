@@ -27,6 +27,7 @@ pub mod datafit;
 pub mod extrapolation;
 pub mod lasso;
 pub mod multitask;
+pub mod penalty;
 pub mod report;
 pub mod runtime;
 pub mod screening;

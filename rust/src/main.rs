@@ -88,6 +88,8 @@ SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
          celer-mt (Multi-Task CELER on the block engine; q = 1 on grids)
          celer-logreg (sparse logistic regression on the GLM engine;
                        grid targets are binarized by sign)
+         celer-enet (elastic net, α = 0.5, on the penalty-generic engine)
+         celer-wlasso (weighted ℓ₁ with column-norm weights)
 DATASETS: leukemia-sim leukemia-mini finance-sim finance-mini bctcga-sim toy-2x2
 ";
 
@@ -215,6 +217,25 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
                 let labels = celer::datafit::sign_labels(&ds.y);
                 celer::solvers::path::lambda_grid(
                     celer::solvers::glm::logreg_lambda_max(&ds.x, &labels),
+                    1.0 / inv_ratio,
+                    num,
+                )
+            } else if matches!(solver_name.as_str(), "celer-enet" | "enet") {
+                // β = 0 stays optimal until λα reaches ‖Xᵀy‖_∞, so the
+                // elastic-net grid anchors at the quadratic λ_max / α.
+                let pen = celer::penalty::ElasticNet::new(0.5);
+                celer::solvers::path::lambda_grid(
+                    celer::lasso::dual::penalty_lambda_max(&ds.x, &ds.y, &pen),
+                    1.0 / inv_ratio,
+                    num,
+                )
+            } else if matches!(solver_name.as_str(), "celer-wlasso" | "wlasso") {
+                // Anchor at max_j |x_jᵀy| / w_j over the penalized
+                // (w > 0) features of the column-norm weights.
+                let pen =
+                    celer::penalty::WeightedL1::new(celer::penalty::scale_weights(&ds.x));
+                celer::solvers::path::lambda_grid(
+                    celer::lasso::dual::penalty_lambda_max(&ds.x, &ds.y, &pen),
                     1.0 / inv_ratio,
                     num,
                 )

@@ -1,0 +1,674 @@
+//! The penalty layer: separable (and group-separable) sparsity-enforcing
+//! penalties behind one trait, mirroring the [`crate::datafit`] layer.
+//!
+//! Gap Safe screening rules are stated for generic sparsity-enforcing
+//! penalties (Ndiaye et al. 2017, PAPERS.md), and the CELER working-set
+//! construction (Algorithm 2/4 of the source paper) only needs three
+//! penalty-specific quantities: a prox (for the CD epoch), a dual norm
+//! (the Eq. 4 rescale denominator), and a subdifferential distance (the
+//! d-score pricing of Eqs. 10–11). [`Penalty`] packages exactly that
+//! surface, and the engine ([`crate::solvers::engine`]), the CELER outer
+//! loop ([`crate::solvers::celer`]) and the batched multi-λ lanes
+//! ([`crate::solvers::batch`]) take it generically.
+//!
+//! **Bit-identity invariant.** The [`L1`] instantiation is the
+//! pre-refactor engine, expression for expression: every generic
+//! consumer branches on [`Penalty::IS_L1`] and takes the exact
+//! historical fused path (`soft_threshold(old + g / nrm, lambda / nrm)`,
+//! `xt_vec_abs_max` rescales, `(1 − |x_jᵀθ|)/‖x_j‖` d-scores), so the
+//! existing bitwise pins (quadratic-datafit legacy, q = 1 block,
+//! pooled == serial) stay green. `tests/prop_penalty.rs` pins the
+//! `Penalty = L1` engine and CELER solves against a test-local port of
+//! the pre-refactor ℓ₁ code.
+//!
+//! **Dual conventions.** Every solve normalizes the dual point as
+//! θ = r / denom with `denom = max(λ, Ω^D(Xᵀr))` (Eq. 4 generalized),
+//! where `Ω^D` is [`Penalty::dual_norm`]:
+//!
+//! | penalty       | Ω(β)                             | Ω^D(u) (slab)          |
+//! |---------------|----------------------------------|------------------------|
+//! | [`L1`]        | ‖β‖₁                             | ‖u‖_∞                  |
+//! | [`WeightedL1`]| Σ w_j·\|β_j\|                    | max_{w_j>0} \|u_j\|/w_j|
+//! | [`GroupLasso`]| Σ_g ‖β_g‖₂                       | max_g ‖u_g‖₂           |
+//! | [`ElasticNet`]| α‖β‖₁ + ½(1−α)‖β‖₂²              | — (no constraint)      |
+//!
+//! The elastic net's conjugate is finite everywhere (the penalty is
+//! strongly convex), so its dual point needs **no** rescale
+//! (`dual_norm` returns 0, the denominator collapses to λ) and the dual
+//! objective instead subtracts the explicit conjugate term
+//! [`Penalty::conjugate`]: D(θ) = −F*(−λθ) − λ·Σ_j ω*(x_jᵀθ) with
+//! ω*(v) = (|v| − α)₊² / (2(1−α)). Features still screen with the plain
+//! √(2·gap)/λ Gap Safe ball — the extra concave dual term only sharpens
+//! the bound — against the slab |x_jᵀθ̂| ≤ α (β̂_j = 0 ⇔ the ℓ₁ part of
+//! the subdifferential absorbs the correlation).
+//!
+//! **Unpenalized features.** [`WeightedL1`] treats `w_j = 0` as
+//! unpenalized (never screened, always kept in working sets — the
+//! intercept convention) and `w_j = ∞` as hard-zeroed. Zero-weight
+//! coordinates are skipped by the dual rescale: their correlations
+//! vanish at optimum, so the reported gap is exact in the limit and a
+//! certified upper bound once the unpenalized coordinates are solved —
+//! the same convention production lasso libraries use for intercepts.
+
+use crate::data::design::DesignOps;
+use crate::util::soft_threshold;
+
+/// Distance margin reused by the generic Gap-Safe keep test — the same
+/// constant [`crate::screening::ScreeningState::screen`] adds to the
+/// radius before comparing d-scores.
+pub const SCREEN_MARGIN: f64 = 1e-12;
+
+/// A separable (or contiguous-group-separable) sparsity-enforcing
+/// penalty `λ·Ω(β)`: the quantities the engine, CELER outer loop, Gap
+/// Safe screening and λ-path anchoring need, and nothing else.
+///
+/// Methods take the *current* regularization level `lambda` explicitly —
+/// one penalty value serves a whole warm-started λ path, exactly like a
+/// [`Datafit`](crate::datafit::Datafit).
+pub trait Penalty: Sync {
+    /// Marker for the plain ℓ₁ penalty: generic consumers branch on this
+    /// to take the exact historical fused expressions (the bit-identity
+    /// invariant — see the module docs).
+    const IS_L1: bool = false;
+
+    /// Coordinate-separable: the scalar [`Penalty::prox`] is exact and
+    /// scalar cyclic CD applies. `false` for [`GroupLasso`], whose prox
+    /// couples coordinates within a group (the engine then updates one
+    /// contiguous group per visit — see
+    /// [`CdStrategy`](crate::solvers::engine::CdStrategy)).
+    const SEPARABLE: bool = true;
+
+    /// The convex conjugate Ω* is an indicator (dual feasibility is a
+    /// slab enforced by the Eq. 4 rescale, [`Penalty::conjugate`] is
+    /// zero). `false` for [`ElasticNet`], whose finite conjugate is
+    /// subtracted from the dual objective instead.
+    const INDICATOR_DUAL: bool = true;
+
+    /// Scalar prox for coordinate `j`: the minimizer of
+    /// `½·nrm·(b − u)² + λ·Ω_j(b)`. The [`L1`] impl is exactly the
+    /// historical CD update `soft_threshold(u, lambda / nrm)`.
+    ///
+    /// Only meaningful when [`Penalty::SEPARABLE`]; group penalties
+    /// panic here and expose their block prox via [`Penalty::prox_vec`].
+    fn prox(&self, j: usize, u: f64, lambda: f64, nrm: f64) -> f64;
+
+    /// Full-vector prox with uniform curvature `nrm`: the minimizer of
+    /// `½·nrm·‖b − u‖² + λ·Ω(b)` written into `out`. Defaults to the
+    /// scalar prox per coordinate; [`GroupLasso`] overrides with the
+    /// block soft-threshold per group. This is the single prox surface
+    /// the conformance suite exercises for every impl.
+    fn prox_vec(&self, u: &[f64], lambda: f64, nrm: f64, out: &mut [f64]) {
+        assert_eq!(u.len(), out.len());
+        for (j, (&v, o)) in u.iter().zip(out.iter_mut()).enumerate() {
+            *o = self.prox(j, v, lambda, nrm);
+        }
+    }
+
+    /// `λ·Ω(β)` — the penalty term of the primal objective. The [`L1`]
+    /// impl is exactly the historical `lambda * l1_norm(beta)`.
+    fn value(&self, lambda: f64, beta: &[f64]) -> f64;
+
+    /// Generalized dual norm `Ω^D(u)` of a correlation vector `u = Xᵀr`:
+    /// the Eq. 4 rescale denominator is
+    /// `rescale_denom(λ, Ω^D(Xᵀr)) = max(λ, Ω^D(Xᵀr))`, making
+    /// `θ = r/denom` dual-feasible. Penalties without a dual constraint
+    /// ([`ElasticNet`]) return 0, collapsing the denominator to λ.
+    fn dual_norm(&self, lambda: f64, u: &[f64]) -> f64;
+
+    /// The finite conjugate term `λ·Σ_j ω*_j(u_j·scale)` subtracted from
+    /// the dual objective when [`Penalty::INDICATOR_DUAL`] is false
+    /// (`u·scale = Xᵀθ`). Zero for slab penalties.
+    fn conjugate(&self, _lambda: f64, _u: &[f64], _scale: f64) -> f64 {
+        0.0
+    }
+
+    /// Distance from the gradient `g = x_jᵀr` to the subdifferential
+    /// `λ·∂Ω_j(β_j)` — the KKT violation of coordinate `j`
+    /// (generalizes [`crate::lasso::kkt::violation_one`], which is the
+    /// exact [`L1`] expression). Only meaningful for separable
+    /// penalties; [`GroupLasso`] panics (group KKT residuals need the
+    /// whole group's gradient).
+    fn subdiff_distance(&self, j: usize, g: f64, beta_j: f64, lambda: f64) -> f64;
+
+    /// Per-feature d-score (Eq. 10 generalized): the normalized distance
+    /// from the cached dual correlations `xtheta = Xᵀθ` to feature `j`'s
+    /// dual-feasibility slab, in units of `‖x_j‖`. Smaller = higher
+    /// working-set priority; the Gap Safe keep test is
+    /// `d_score ≤ radius + SCREEN_MARGIN`. Conventions: `+∞` excludes a
+    /// feature from working sets and screens it on the next pass (empty
+    /// columns, `w_j = ∞`); any negative constant keeps it
+    /// unconditionally and prices it first (`w_j = 0`).
+    fn d_score(&self, j: usize, lambda: f64, xtheta: &[f64], col_norms: &[f64]) -> f64;
+
+    /// Gap Safe radius of the dual uncertainty ball for the quadratic
+    /// datafit: `√(2·gap)/λ` for every penalty here (the radius comes
+    /// from the datafit's strong dual concavity; extra concave penalty
+    /// terms only shrink the true ball, so the bound stays safe).
+    fn gap_safe_radius(&self, gap: f64, lambda: f64) -> f64 {
+        (2.0 * gap.max(0.0)).sqrt() / lambda
+    }
+
+    /// Smallest λ at which `β = 0` is optimal, from the zero-iterate
+    /// correlations `u = Xᵀ(−∇F(0))` (= `Xᵀy` for the quadratic
+    /// datafit): `λ_max = Ω^D₀(u)` where Ω^D₀ is the dual norm of the
+    /// *sparsity-enforcing part* of the penalty (the ℓ₁ part for the
+    /// elastic net).
+    fn lambda_max(&self, u: &[f64]) -> f64;
+
+    /// Restriction of the penalty to the feature subset `idx` (in order):
+    /// the penalty the working-set inner solves see, where coordinate `t`
+    /// of the subproblem is global feature `idx[t]`. Index-independent
+    /// penalties return themselves; [`WeightedL1`] gathers its weights.
+    /// Required because CELER's zero-copy `DesignView` subproblems call
+    /// [`Penalty::prox`] / [`Penalty::subdiff_distance`] with **local**
+    /// column indices.
+    fn restrict(&self, idx: &[usize]) -> Self
+    where
+        Self: Sized;
+
+    /// Contiguous group width (1 for separable penalties). The last
+    /// group may be ragged when `p % group_size != 0`.
+    fn group_size(&self) -> usize {
+        1
+    }
+
+    /// Whether feature `j` is actually penalized (`false` only for
+    /// [`WeightedL1`] features with `w_j = 0`). Unpenalized features are
+    /// exempt from screening and λ_max anchoring.
+    fn is_penalized(&self, j: usize) -> bool {
+        let _ = j;
+        true
+    }
+}
+
+/// Plain ℓ₁: `Ω(β) = ‖β‖₁`. The pre-refactor engine, bit for bit — see
+/// the module docs for the invariant and `tests/prop_penalty.rs` for the
+/// pin.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct L1;
+
+impl Penalty for L1 {
+    const IS_L1: bool = true;
+
+    #[inline]
+    fn prox(&self, _j: usize, u: f64, lambda: f64, nrm: f64) -> f64 {
+        soft_threshold(u, lambda / nrm)
+    }
+
+    fn value(&self, lambda: f64, beta: &[f64]) -> f64 {
+        lambda * crate::lasso::primal::l1_norm(beta)
+    }
+
+    fn dual_norm(&self, _lambda: f64, u: &[f64]) -> f64 {
+        u.iter().fold(0.0f64, |a, &b| a.max(b.abs()))
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, _j: usize, g: f64, beta_j: f64, lambda: f64) -> f64 {
+        if beta_j != 0.0 {
+            (g - lambda * beta_j.signum()).abs()
+        } else {
+            (g.abs() - lambda).max(0.0)
+        }
+    }
+
+    #[inline]
+    fn d_score(&self, j: usize, _lambda: f64, xtheta: &[f64], col_norms: &[f64]) -> f64 {
+        crate::screening::d_score(xtheta[j].abs(), col_norms[j])
+    }
+
+    fn lambda_max(&self, u: &[f64]) -> f64 {
+        u.iter().fold(0.0f64, |a, &b| a.max(b.abs()))
+    }
+
+    fn restrict(&self, _idx: &[usize]) -> Self {
+        L1
+    }
+}
+
+/// Elastic net: `Ω(β) = α‖β‖₁ + ½(1−α)‖β‖₂²` with `α ∈ (0, 1)` (the
+/// sklearn `l1_ratio` convention — both terms scale with λ along a
+/// path). Strongly convex, so the dual is unconstrained: `dual_norm`
+/// is 0 and the finite conjugate is subtracted via
+/// [`Penalty::conjugate`]. EN(λ, α) on `X` is the Lasso at `λα` on the
+/// augmented design `[X; √(λ(1−α))·I]` — `tests/prop_penalty.rs`
+/// cross-checks solves against exactly that reduction.
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticNet {
+    /// ℓ₁ fraction α ∈ (0, 1). α → 1 is the plain Lasso (use [`L1`]),
+    /// α → 0 is ridge (no sparsity, unsupported here).
+    pub l1_ratio: f64,
+}
+
+impl ElasticNet {
+    pub fn new(l1_ratio: f64) -> Self {
+        assert!(
+            l1_ratio > 0.0 && l1_ratio < 1.0,
+            "elastic net needs 0 < l1_ratio < 1 (use the L1 penalty at l1_ratio = 1), got {l1_ratio}"
+        );
+        ElasticNet { l1_ratio }
+    }
+}
+
+impl Penalty for ElasticNet {
+    const INDICATOR_DUAL: bool = false;
+
+    #[inline]
+    fn prox(&self, _j: usize, u: f64, lambda: f64, nrm: f64) -> f64 {
+        // argmin ½·nrm·(b−u)² + λα|b| + ½λ(1−α)b²
+        soft_threshold(u, lambda * self.l1_ratio / nrm)
+            / (1.0 + lambda * (1.0 - self.l1_ratio) / nrm)
+    }
+
+    fn value(&self, lambda: f64, beta: &[f64]) -> f64 {
+        lambda
+            * (self.l1_ratio * crate::lasso::primal::l1_norm(beta)
+                + 0.5 * (1.0 - self.l1_ratio) * crate::util::linalg::dot(beta, beta))
+    }
+
+    fn dual_norm(&self, _lambda: f64, _u: &[f64]) -> f64 {
+        // No dual constraint: the rescale denominator collapses to λ.
+        0.0
+    }
+
+    fn conjugate(&self, lambda: f64, u: &[f64], scale: f64) -> f64 {
+        // λ·Σ ω*(u_j·scale), ω*(v) = (|v| − α)₊² / (2(1−α))
+        let a = self.l1_ratio;
+        let mut acc = 0.0;
+        for &v in u {
+            let excess = (v * scale).abs() - a;
+            if excess > 0.0 {
+                acc += excess * excess;
+            }
+        }
+        lambda * acc / (2.0 * (1.0 - a))
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, _j: usize, g: f64, beta_j: f64, lambda: f64) -> f64 {
+        let a = self.l1_ratio;
+        if beta_j != 0.0 {
+            (g - lambda * (1.0 - a) * beta_j - lambda * a * beta_j.signum()).abs()
+        } else {
+            (g.abs() - lambda * a).max(0.0)
+        }
+    }
+
+    #[inline]
+    fn d_score(&self, j: usize, _lambda: f64, xtheta: &[f64], col_norms: &[f64]) -> f64 {
+        let norm = col_norms[j];
+        if norm == 0.0 {
+            return f64::INFINITY;
+        }
+        // β̂_j = 0 ⇔ |x_jᵀθ̂| ≤ α: the slab half-width is α, not 1.
+        (self.l1_ratio - xtheta[j].abs()) / norm
+    }
+
+    fn lambda_max(&self, u: &[f64]) -> f64 {
+        // β = 0 optimal ⇔ |x_jᵀy| ≤ λα for all j.
+        u.iter().fold(0.0f64, |a, &b| a.max(b.abs())) / self.l1_ratio
+    }
+
+    fn restrict(&self, _idx: &[usize]) -> Self {
+        *self
+    }
+}
+
+/// Weighted ℓ₁: `Ω(β) = Σ_j w_j·|β_j|` with per-feature weights
+/// `w_j ≥ 0`. `w_j = 0` marks an unpenalized feature (never screened,
+/// always in working sets); `w_j = ∞` hard-zeroes a feature (screened
+/// immediately, prox pins it to 0). Everything in between is the
+/// adaptive-lasso workhorse.
+#[derive(Debug, Clone)]
+pub struct WeightedL1 {
+    pub weights: Vec<f64>,
+}
+
+impl WeightedL1 {
+    pub fn new(weights: Vec<f64>) -> Self {
+        assert!(
+            weights.iter().all(|&w| w >= 0.0 && !w.is_nan()),
+            "weighted-ℓ₁ weights must be non-negative"
+        );
+        WeightedL1 { weights }
+    }
+}
+
+impl Penalty for WeightedL1 {
+    #[inline]
+    fn prox(&self, j: usize, u: f64, lambda: f64, nrm: f64) -> f64 {
+        let w = self.weights[j];
+        if w == 0.0 {
+            u
+        } else if w.is_infinite() {
+            0.0
+        } else {
+            soft_threshold(u, lambda * w / nrm)
+        }
+    }
+
+    fn value(&self, lambda: f64, beta: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                // w = ∞ with β ≠ 0 correctly yields an infinite objective.
+                acc += self.weights[j] * b.abs();
+            }
+        }
+        lambda * acc
+    }
+
+    fn dual_norm(&self, _lambda: f64, u: &[f64]) -> f64 {
+        let mut m = 0.0f64;
+        for (j, &v) in u.iter().enumerate() {
+            let w = self.weights[j];
+            if w > 0.0 {
+                // |v|/∞ = 0: hard-zeroed features never constrain θ.
+                m = m.max(v.abs() / w);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    fn subdiff_distance(&self, j: usize, g: f64, beta_j: f64, lambda: f64) -> f64 {
+        let w = self.weights[j];
+        if w == 0.0 {
+            g.abs()
+        } else if w.is_infinite() {
+            0.0
+        } else if beta_j != 0.0 {
+            (g - lambda * w * beta_j.signum()).abs()
+        } else {
+            (g.abs() - lambda * w).max(0.0)
+        }
+    }
+
+    #[inline]
+    fn d_score(&self, j: usize, _lambda: f64, xtheta: &[f64], col_norms: &[f64]) -> f64 {
+        let w = self.weights[j];
+        let norm = col_norms[j];
+        if norm == 0.0 || w.is_infinite() {
+            return f64::INFINITY;
+        }
+        if w == 0.0 {
+            // Unpenalized: priced first, kept by every screen pass.
+            return -1.0;
+        }
+        (w - xtheta[j].abs()) / norm
+    }
+
+    fn lambda_max(&self, u: &[f64]) -> f64 {
+        let mut m = 0.0f64;
+        for (j, &v) in u.iter().enumerate() {
+            let w = self.weights[j];
+            if w > 0.0 {
+                m = m.max(v.abs() / w);
+            }
+        }
+        m
+    }
+
+    fn is_penalized(&self, j: usize) -> bool {
+        self.weights[j] > 0.0
+    }
+
+    fn restrict(&self, idx: &[usize]) -> Self {
+        WeightedL1 { weights: idx.iter().map(|&j| self.weights[j]).collect() }
+    }
+}
+
+/// Group-ℓ₂ over contiguous blocks of `grp_size` features:
+/// `Ω(β) = Σ_g ‖β_g‖₂` (unit group weights; the last group may be
+/// ragged). Not coordinate-separable — the engine updates one group per
+/// column visit with the block soft-threshold and the Frobenius
+/// majorizer `L_g = Σ_{j∈g} ‖x_j‖² ≥ ‖X_g‖₂²`, and screening/pricing
+/// use group-level scores shared by every member feature.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupLasso {
+    pub grp_size: usize,
+}
+
+impl GroupLasso {
+    pub fn new(grp_size: usize) -> Self {
+        assert!(grp_size >= 1, "group size must be >= 1");
+        GroupLasso { grp_size }
+    }
+
+    /// `[start, end)` column range of feature `j`'s group in a width-`p`
+    /// problem.
+    #[inline]
+    pub fn group_range(&self, j: usize, p: usize) -> (usize, usize) {
+        let start = (j / self.grp_size) * self.grp_size;
+        (start, (start + self.grp_size).min(p))
+    }
+}
+
+impl Penalty for GroupLasso {
+    const SEPARABLE: bool = false;
+
+    fn prox(&self, _j: usize, _u: f64, _lambda: f64, _nrm: f64) -> f64 {
+        unreachable!("the group-ℓ₂ prox is not coordinate-separable; use prox_vec")
+    }
+
+    fn prox_vec(&self, u: &[f64], lambda: f64, nrm: f64, out: &mut [f64]) {
+        assert_eq!(u.len(), out.len());
+        out.copy_from_slice(u);
+        for chunk in out.chunks_mut(self.grp_size) {
+            crate::multitask::block_soft_threshold(chunk, lambda / nrm);
+        }
+    }
+
+    fn value(&self, lambda: f64, beta: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for chunk in beta.chunks(self.grp_size) {
+            acc += crate::util::linalg::norm(chunk);
+        }
+        lambda * acc
+    }
+
+    fn dual_norm(&self, _lambda: f64, u: &[f64]) -> f64 {
+        let mut m = 0.0f64;
+        for chunk in u.chunks(self.grp_size) {
+            m = m.max(crate::util::linalg::norm(chunk));
+        }
+        m
+    }
+
+    fn subdiff_distance(&self, _j: usize, _g: f64, _beta_j: f64, _lambda: f64) -> f64 {
+        unreachable!("group-ℓ₂ KKT residuals need the whole group's gradient")
+    }
+
+    fn d_score(&self, j: usize, _lambda: f64, xtheta: &[f64], col_norms: &[f64]) -> f64 {
+        let (start, end) = self.group_range(j, col_norms.len());
+        let mut corr_sq = 0.0;
+        let mut fro_sq = 0.0;
+        for k in start..end {
+            corr_sq += xtheta[k] * xtheta[k];
+            fro_sq += col_norms[k] * col_norms[k];
+        }
+        if fro_sq == 0.0 {
+            return f64::INFINITY;
+        }
+        // Group slab ‖X_gᵀθ‖₂ ≤ 1, uncertainty radius·‖X_g‖_F.
+        (1.0 - corr_sq.sqrt()) / fro_sq.sqrt()
+    }
+
+    fn lambda_max(&self, u: &[f64]) -> f64 {
+        self.dual_norm(f64::NAN, u)
+    }
+
+    fn restrict(&self, _idx: &[usize]) -> Self {
+        unreachable!("group-ℓ₂ runs through the plain engine, not working-set restrictions")
+    }
+
+    fn group_size(&self) -> usize {
+        self.grp_size
+    }
+}
+
+/// Scale-adaptive weights for [`WeightedL1`]: `w_j = ‖x_j‖ / max_k ‖x_k‖`
+/// — penalizing features proportionally to their column scale, i.e. the
+/// standardized Lasso without touching the design. Empty columns get
+/// `w = ∞` (they can never enter the model anyway). This is what the
+/// `"celer-wlasso"` path solver uses.
+pub fn scale_weights<D: DesignOps>(x: &D) -> Vec<f64> {
+    let p = x.p();
+    let mut norms = vec![0.0; p];
+    for (j, w) in norms.iter_mut().enumerate() {
+        *w = x.col_norm_sq(j).sqrt();
+    }
+    let max = norms.iter().fold(0.0f64, |a, &b| a.max(b));
+    if max == 0.0 {
+        return vec![f64::INFINITY; p];
+    }
+    for w in norms.iter_mut() {
+        *w = if *w == 0.0 { f64::INFINITY } else { *w / max };
+    }
+    norms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prox_objective<P: Penalty>(pen: &P, lambda: f64, nrm: f64, u: &[f64], b: &[f64]) -> f64 {
+        let mut quad = 0.0;
+        for (x, y) in b.iter().zip(u.iter()) {
+            quad += (x - y) * (x - y);
+        }
+        0.5 * nrm * quad + pen.value(lambda, b)
+    }
+
+    #[test]
+    fn l1_prox_is_soft_threshold_bits() {
+        let pen = L1;
+        for (u, lambda, nrm) in [(1.5, 0.3, 1.0), (-0.2, 0.5, 2.0), (0.7, 0.7, 0.9)] {
+            assert_eq!(
+                pen.prox(0, u, lambda, nrm).to_bits(),
+                soft_threshold(u, lambda / nrm).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn elastic_net_prox_closed_form() {
+        let pen = ElasticNet::new(0.6);
+        let (lambda, nrm) = (0.8, 1.7);
+        for u in [-2.0, -0.3, 0.0, 0.4, 3.0] {
+            let b = pen.prox(0, u, lambda, nrm);
+            // beats nearby candidates on the prox objective
+            let f0 = prox_objective(&pen, lambda, nrm, &[u], &[b]);
+            for d in [-1e-4, 1e-4, -0.05, 0.05] {
+                let f1 = prox_objective(&pen, lambda, nrm, &[u], &[b + d]);
+                assert!(f0 <= f1 + 1e-12, "u={u} d={d}: {f0} > {f1}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_prox_zero_and_infinite_weights() {
+        let pen = WeightedL1::new(vec![0.0, 1.0, f64::INFINITY]);
+        assert_eq!(pen.prox(0, 2.5, 0.7, 1.3), 2.5); // unpenalized: identity
+        assert_eq!(pen.prox(2, 2.5, 0.7, 1.3), 0.0); // hard-zeroed
+        assert_eq!(
+            pen.prox(1, 2.5, 0.7, 1.3).to_bits(),
+            soft_threshold(2.5, 0.7 * 1.0 / 1.3).to_bits()
+        );
+    }
+
+    #[test]
+    fn group_prox_is_block_soft_threshold() {
+        let pen = GroupLasso::new(2);
+        let u = [3.0, 4.0, 0.1, -0.1, 2.0]; // ragged last group
+        let mut out = [0.0; 5];
+        pen.prox_vec(&u, 1.0, 1.0, &mut out);
+        // group 0: norm 5, shrink by (1 − 1/5)
+        assert!((out[0] - 3.0 * 0.8).abs() < 1e-12);
+        assert!((out[1] - 4.0 * 0.8).abs() < 1e-12);
+        // group 1: norm ≈ 0.141 < 1 ⇒ zeroed
+        assert_eq!(out[2], 0.0);
+        assert_eq!(out[3], 0.0);
+        // ragged group 2: norm 2, shrink by ½
+        assert!((out[4] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_norms_and_lambda_max() {
+        let u = [3.0, -4.0, 1.0, 0.5];
+        assert_eq!(L1.dual_norm(1.0, &u), 4.0);
+        assert_eq!(L1.lambda_max(&u), 4.0);
+        let en = ElasticNet::new(0.5);
+        assert_eq!(en.dual_norm(1.0, &u), 0.0);
+        assert_eq!(en.lambda_max(&u), 8.0);
+        let wl = WeightedL1::new(vec![0.0, 2.0, 1.0, f64::INFINITY]);
+        assert_eq!(wl.dual_norm(1.0, &u), 2.0); // max(4/2, 1/1), skips w=0 and w=∞
+        let gl = GroupLasso::new(2);
+        assert_eq!(gl.dual_norm(1.0, &u), 5.0); // ‖(3,−4)‖ = 5 > ‖(1,0.5)‖
+    }
+
+    #[test]
+    fn elastic_net_conjugate_fenchel_young() {
+        // Ω(β) + Ω*(u) ≥ uᵀβ, with equality at u ∈ ∂Ω(β).
+        let pen = ElasticNet::new(0.4);
+        let lambda = 1.0;
+        let beta = [1.5, -0.2, 0.0, 0.8];
+        let a = 0.4;
+        // u_j = α·sign(β_j) + (1−α)β_j ∈ ∂Ω(β_j)
+        let u: Vec<f64> =
+            beta.iter().map(|&b| if b == 0.0 { 0.0 } else { a * b.signum() + (1.0 - a) * b }).collect();
+        let lhs = pen.value(lambda, &beta) + pen.conjugate(lambda, &u, 1.0);
+        let dot: f64 = u.iter().zip(beta.iter()).map(|(x, y)| x * y).sum();
+        assert!((lhs - lambda * dot).abs() < 1e-12, "{lhs} vs {}", lambda * dot);
+        // and a generic point satisfies the inequality
+        let v = [0.9, 0.9, 0.9, 0.9];
+        let lhs = pen.value(lambda, &beta) + pen.conjugate(lambda, &v, 1.0);
+        let dot: f64 = v.iter().zip(beta.iter()).map(|(x, y)| x * y).sum();
+        assert!(lhs >= lambda * dot - 1e-12);
+    }
+
+    #[test]
+    fn subdiff_distance_matches_kkt_shapes() {
+        // L1 matches the historical violation_one expression.
+        let (g, lambda) = (0.7, 0.5);
+        assert_eq!(L1.subdiff_distance(0, g, 0.0, lambda), (g.abs() - lambda).max(0.0));
+        assert_eq!(L1.subdiff_distance(0, g, 2.0, lambda), (g - lambda).abs());
+        // EN at an exact stationary coordinate has zero violation.
+        let en = ElasticNet::new(0.6);
+        let b = -1.2;
+        let g_star = lambda * (1.0 - 0.6) * b + lambda * 0.6 * b.signum();
+        assert!(en.subdiff_distance(0, g_star, b, lambda).abs() < 1e-15);
+    }
+
+    #[test]
+    fn d_score_conventions() {
+        let xtheta = [0.3, 0.9, 0.1, 0.2];
+        let norms = [1.0, 1.0, 0.0, 1.0];
+        // L1 matches the screening helper exactly.
+        assert_eq!(
+            L1.d_score(0, 1.0, &xtheta, &norms).to_bits(),
+            crate::screening::d_score(0.3, 1.0).to_bits()
+        );
+        assert_eq!(L1.d_score(2, 1.0, &xtheta, &norms), f64::INFINITY);
+        let wl = WeightedL1::new(vec![0.0, 1.0, 1.0, f64::INFINITY]);
+        assert_eq!(wl.d_score(0, 1.0, &xtheta, &norms), -1.0);
+        assert_eq!(wl.d_score(3, 1.0, &xtheta, &norms), f64::INFINITY);
+        // Group scores are shared across the group's features.
+        let gl = GroupLasso::new(2);
+        assert_eq!(
+            gl.d_score(0, 1.0, &xtheta, &norms).to_bits(),
+            gl.d_score(1, 1.0, &xtheta, &norms).to_bits()
+        );
+    }
+
+    #[test]
+    fn scale_weights_standardize() {
+        use crate::data::dense::DenseMatrix;
+        // col norms: 1, 2, 0
+        let x = DenseMatrix::from_col_major(2, 3, vec![1.0, 0.0, 0.0, 2.0, 0.0, 0.0]);
+        let w = scale_weights(&x);
+        assert!((w[0] - 0.5).abs() < 1e-15);
+        assert!((w[1] - 1.0).abs() < 1e-15);
+        assert!(w[2].is_infinite());
+    }
+}

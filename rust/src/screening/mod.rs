@@ -56,6 +56,27 @@ pub fn fill_d_scores(xtheta: &[f64], col_norms: &[f64], out: &mut [f64]) {
     crate::util::par::par_fill_cost(out, 1, |j| d_score(xtheta[j].abs(), col_norms[j]));
 }
 
+/// Penalty-generic [`fill_d_scores`]: each feature's score comes from
+/// [`Penalty::d_score`](crate::penalty::Penalty::d_score) (slab width α
+/// for the elastic net, per-weight slabs for weighted ℓ₁, group-shared
+/// scores for group-ℓ₂). The `P = L1` instantiation is [`fill_d_scores`]
+/// expression for expression, so CELER's ℓ₁ pricing bits are unchanged.
+pub fn fill_d_scores_penalty<P: crate::penalty::Penalty>(
+    xtheta: &[f64],
+    col_norms: &[f64],
+    lambda: f64,
+    penalty: &P,
+    out: &mut [f64],
+) {
+    assert_eq!(xtheta.len(), col_norms.len());
+    assert_eq!(out.len(), xtheta.len());
+    if P::IS_L1 {
+        crate::util::par::par_fill_cost(out, 1, |j| d_score(xtheta[j].abs(), col_norms[j]));
+        return;
+    }
+    crate::util::par::par_fill_cost(out, 1, |j| penalty.d_score(j, lambda, xtheta, col_norms));
+}
+
 /// Dynamic screening state over a problem with p features.
 #[derive(Debug, Clone, Default)]
 pub struct ScreeningState {
@@ -125,6 +146,50 @@ impl ScreeningState {
         let screened = &mut self.screened;
         self.active.retain(|&j| {
             let keep = d_score(xtheta[j].abs(), col_norms[j]) <= threshold;
+            if !keep {
+                screened[j] = true;
+                if beta[j] != 0.0 {
+                    // r = y − Xβ; removing β_j adds β_j·x_j back.
+                    x.col_axpy(j, beta[j], r);
+                    beta[j] = 0.0;
+                }
+            }
+            keep
+        });
+        before - self.active.len()
+    }
+
+    /// Penalty-generic [`ScreeningState::screen`] (quadratic datafit):
+    /// the keep test uses the penalty's
+    /// [`d_score`](crate::penalty::Penalty::d_score) and
+    /// [`gap_safe_radius`](crate::penalty::Penalty::gap_safe_radius),
+    /// with the same residual fix-up and numerical-safety margin as the
+    /// ℓ₁ rule. Group penalties screen whole groups at once (every
+    /// member shares the group score, so the retain test agrees across
+    /// the group); weighted-ℓ₁ `w = 0` features carry a negative score
+    /// and are never discarded. The `P = L1` instantiation delegates to
+    /// [`ScreeningState::screen`] wholesale — bit-identical decisions.
+    pub fn screen_penalty<D: DesignOps, P: crate::penalty::Penalty>(
+        &mut self,
+        x: &D,
+        xtheta: &[f64],
+        col_norms: &[f64],
+        gap: f64,
+        lambda: f64,
+        penalty: &P,
+        beta: &mut [f64],
+        r: &mut [f64],
+    ) -> usize {
+        if P::IS_L1 {
+            return self.screen(x, xtheta, col_norms, gap, lambda, beta, r);
+        }
+        let radius = penalty.gap_safe_radius(gap, lambda);
+        // Same numerical-safety margin as the ℓ₁ rule (see `screen`).
+        let threshold = radius + 1e-12;
+        let before = self.active.len();
+        let screened = &mut self.screened;
+        self.active.retain(|&j| {
+            let keep = penalty.d_score(j, lambda, xtheta, col_norms) <= threshold;
             if !keep {
                 screened[j] = true;
                 if beta[j] != 0.0 {

@@ -55,6 +55,7 @@
 use crate::data::design::DesignOps;
 use crate::data::shadow::ShadowF32;
 use crate::lasso::primal;
+use crate::penalty::{Penalty, L1};
 use crate::screening::ScreeningState;
 use crate::solvers::sweep32::MAX_F32_EPOCHS;
 use crate::solvers::{DualScratch, DualState, Precision};
@@ -246,10 +247,13 @@ pub struct LaneSweep<'a> {
 
 /// A batched solver strategy: one interleaved primal epoch over all live
 /// lanes in a single pass over the columns. The batched analogue of
-/// [`Strategy`](crate::solvers::engine::Strategy).
-pub trait BatchStrategy<D: DesignOps> {
+/// [`Strategy`](crate::solvers::engine::Strategy). Generic over the
+/// (separable) [`Penalty`] so multi-λ elastic-net / weighted-ℓ₁ paths
+/// ride the same one-sweep-per-epoch machinery; `P` defaults to [`L1`],
+/// whose instantiation is bit-identical to the historical sweep.
+pub trait BatchStrategy<D: DesignOps, P: Penalty = L1> {
     /// Run one epoch for every live lane, updating each lane's (β, r).
-    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>);
+    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>, penalty: &P);
 
     /// Called after `slot` is (re)loaded with a grid cell — any
     /// per-slot iteration state the strategy keeps is stale. Default:
@@ -311,13 +315,14 @@ struct SweepCtx<'a> {
 /// exactly Algorithm 1 on its own (β, r); lanes interact only through
 /// the shared column loads, which is what makes the group-parallel
 /// sweep bit-identical to the serial interleaved one.
-fn cd_sweep_slots<D: DesignOps>(
+fn cd_sweep_slots<D: DesignOps, P: Penalty>(
     x: &D,
     ctx: &SweepCtx<'_>,
     slots: &[usize],
     beta: &mut [f64],
     r: &mut [f64],
     scratch: &mut SweepScratch,
+    penalty: &P,
 ) {
     let (n, p) = (ctx.n, ctx.p);
     let SweepScratch { act, act_local, g, delta } = scratch;
@@ -345,7 +350,13 @@ fn cd_sweep_slots<D: DesignOps>(
         for (t, &sl) in act_local.iter().enumerate() {
             let bj = &mut beta[sl * p + j];
             let old = *bj;
-            let new = soft_threshold(old + g[t] / nrm, ctx.lambdas[act[t]] / nrm);
+            // ℓ₁ keeps the historical single-division expression bit for
+            // bit; other separable penalties go through their prox.
+            let new = if P::IS_L1 {
+                soft_threshold(old + g[t] / nrm, ctx.lambdas[act[t]] / nrm)
+            } else {
+                penalty.prox(j, old + g[t] / nrm, ctx.lambdas[act[t]], nrm)
+            };
             *bj = new;
             let d = old - new;
             any_update |= d != 0.0;
@@ -357,8 +368,8 @@ fn cd_sweep_slots<D: DesignOps>(
     }
 }
 
-impl<D: DesignOps> BatchStrategy<D> for BatchCdStrategy {
-    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>) {
+impl<D: DesignOps, P: Penalty> BatchStrategy<D, P> for BatchCdStrategy {
+    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>, penalty: &P) {
         let (n, p) = (s.n, s.p);
         let slots_total = if p > 0 { s.beta.len() / p } else { 0 };
         // One epoch streams the whole design once per live lane.
@@ -377,7 +388,7 @@ impl<D: DesignOps> BatchStrategy<D> for BatchCdStrategy {
             norms_sq: s.norms_sq,
         };
         if groups <= 1 || slots_total == 0 {
-            cd_sweep_slots(x, &ctx, s.live, s.beta, s.r, s.scratch);
+            cd_sweep_slots(x, &ctx, s.live, s.beta, s.r, s.scratch, penalty);
             return;
         }
         // Lane-sharded parallel sweep: partition the *live lanes* (not
@@ -423,7 +434,7 @@ impl<D: DesignOps> BatchStrategy<D> for BatchCdStrategy {
                 unsafe { std::slice::from_raw_parts_mut(r_ptr.0.add(lo * n), (hi - lo) * n) };
             let scratch = unsafe { &mut *scr_ptr.0.add(gi) };
             let group_ctx = SweepCtx { slot_base: lo, ..ctx };
-            cd_sweep_slots(x, &group_ctx, slots, beta_g, r_g, scratch);
+            cd_sweep_slots(x, &group_ctx, slots, beta_g, r_g, scratch, penalty);
         });
     }
 }
@@ -504,8 +515,8 @@ impl BatchF32Strategy {
     }
 }
 
-impl<D: DesignOps> BatchStrategy<D> for BatchF32Strategy {
-    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>) {
+impl<D: DesignOps, P: Penalty> BatchStrategy<D, P> for BatchF32Strategy {
+    fn sweep(&mut self, x: &D, s: &mut LaneSweep<'_>, penalty: &P) {
         let (n, p) = (s.n, s.p);
         let slots_total = if p > 0 { s.beta.len() / p } else { 0 };
         self.ensure_slots(slots_total);
@@ -539,6 +550,13 @@ impl<D: DesignOps> BatchStrategy<D> for BatchF32Strategy {
         f64_slots.clear();
         for &slot in s.live {
             if f64_mode[slot] {
+                f64_slots.push(slot);
+            } else if !P::IS_L1 {
+                // The f32 fast path only implements the plain ℓ₁ prox;
+                // other penalties escalate at load. No promotion needed:
+                // the slot's f64 (β, r) set by `load_lane` is already
+                // authoritative (the f32 mirror was never synced).
+                f64_mode[slot] = true;
                 f64_slots.push(slot);
             } else {
                 f32_slots.push(slot);
@@ -624,7 +642,7 @@ impl<D: DesignOps> BatchStrategy<D> for BatchF32Strategy {
                 screening: s.screening,
                 norms_sq: s.norms_sq,
             };
-            cd_sweep_slots(x, &ctx, f64_slots, s.beta, s.r, f64_scratch);
+            cd_sweep_slots(x, &ctx, f64_slots, s.beta, s.r, f64_scratch, penalty);
         }
     }
 
@@ -693,7 +711,9 @@ fn load_lane<D: DesignOps>(
 /// `beta0` seeds the first B lanes (and the warm-start chain) — `None`
 /// starts from zeros, which is exact for the conventional λ_max-anchored
 /// grid.
-pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
+///
+/// Shorthand for [`solve_grid_penalty`] with the plain ℓ₁ penalty.
+pub fn solve_grid<D: DesignOps, S: BatchStrategy<D, L1>>(
     x: &D,
     y: &[f64],
     grid: &[f64],
@@ -702,6 +722,27 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
     ws: &mut BatchWorkspace,
     strategy: &mut S,
 ) -> Vec<BatchLaneResult> {
+    solve_grid_penalty(x, y, grid, beta0, cfg, ws, strategy, &L1)
+}
+
+/// Penalty-generic [`solve_grid`]: B interleaved lanes of
+/// `½‖y − Xβ‖² + Ω_λ(β)` for any separable [`Penalty`] (ℓ₁, elastic net,
+/// weighted ℓ₁). Each lane's dual point, gap and Gap Safe screening go
+/// through the penalty-aware machinery; the `P = L1` instantiation takes
+/// the historical code paths bit for bit (pinned against the sequential
+/// engine in `tests/prop_batch_path.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
+    x: &D,
+    y: &[f64],
+    grid: &[f64],
+    beta0: Option<&[f64]>,
+    cfg: &BatchConfig,
+    ws: &mut BatchWorkspace,
+    strategy: &mut S,
+    penalty: &P,
+) -> Vec<BatchLaneResult> {
+    debug_assert!(P::SEPARABLE, "batched lanes require a coordinate-separable penalty");
     let n = x.n();
     let p = x.p();
     assert_eq!(y.len(), n);
@@ -779,7 +820,7 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
                 sorted_live,
                 group_scratch,
             };
-            strategy.sweep(x, &mut ctx);
+            strategy.sweep(x, &mut ctx, penalty);
         }
 
         // ---- per-lane gap checks, screening, retirement, refill ----
@@ -802,20 +843,24 @@ pub fn solve_grid<D: DesignOps, S: BatchStrategy<D>>(
                 // recompute r exactly here; everything below (dual point,
                 // gap, screening, stop test) then runs on exact f64.
                 strategy.sync_slot_state(x, y, slot, beta_slot, r_slot);
-                dual[slot].update(x, y, lambda, r_slot, &mut scratch[slot]);
-                let p_val = primal::primal_from_residual(r_slot, beta_slot, lambda);
+                // The penalty-generic dual / primal / screening calls all
+                // delegate to the historical ℓ₁ routines when P = L1, so
+                // the default path's bits are unchanged.
+                dual[slot].update_penalty(x, y, lambda, r_slot, &mut scratch[slot], penalty);
+                let p_val = primal::penalty_primal_from_residual(r_slot, beta_slot, lambda, penalty);
                 let gap = p_val - dual[slot].dval;
                 let converged = gap <= cfg.tol;
                 // Screen only while unconverged (same invariant as the
                 // sequential engine: the reported (β, gap) pair is the
                 // one that passed the stopping test).
                 if cfg.screen && !converged {
-                    screening[slot].screen(
+                    screening[slot].screen_penalty(
                         x,
                         &dual[slot].xtheta,
                         col_norms,
                         gap,
                         lambda,
+                        penalty,
                         beta_slot,
                         r_slot,
                     );

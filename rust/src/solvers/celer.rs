@@ -29,6 +29,7 @@ use crate::data::design::{DesignMatrix, DesignOps};
 use crate::data::view::DesignView;
 use crate::datafit::{Datafit, Quadratic};
 use crate::lasso::{dual, primal, LassoProblem};
+use crate::penalty::{Penalty, L1};
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Strategy, Workspace};
 use crate::solvers::SolveResult;
 use crate::ws::{build_working_set, WsPolicy};
@@ -167,6 +168,8 @@ fn celer_generic<D: DesignOps>(
 /// fit, [`ProxNewtonCd`](crate::solvers::glm::ProxNewtonCd) for sparse
 /// GLMs). The `F = Quadratic` instantiation is what [`celer_solve_on`]
 /// runs — bit-identical to the historical quadratic-only loop.
+///
+/// Shorthand for [`celer_solve_penalty`] with the plain ℓ₁ penalty.
 pub fn celer_solve_datafit<D, F, S>(
     x: &D,
     y: &[f64],
@@ -182,6 +185,107 @@ where
     F: Datafit,
     S: for<'v> Strategy<DesignView<'v, D>, F>,
 {
+    celer_solve_penalty(x, y, lambda, beta0, datafit, &L1, cfg, ws, strategy)
+}
+
+/// [`celer_solve_on_ws`] for a generic separable [`Penalty`] (quadratic
+/// datafit, [`CdStrategy`] inner epochs): the entry point the λ-path
+/// drivers use for elastic-net and weighted-ℓ₁ paths. Dispatches the
+/// design once, like [`celer_solve_on_ws`].
+pub fn celer_penalty_solve_on_ws<P: Penalty>(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    penalty: &P,
+    cfg: &CelerConfig,
+    ws: &mut Workspace,
+) -> CelerOutput {
+    match x {
+        DesignMatrix::Dense(d) => {
+            celer_solve_penalty(d, y, lambda, beta0, &Quadratic, penalty, cfg, ws, &mut CdStrategy)
+        }
+        DesignMatrix::Sparse(s) => {
+            celer_solve_penalty(s, y, lambda, beta0, &Quadratic, penalty, cfg, ws, &mut CdStrategy)
+        }
+    }
+}
+
+/// Evaluate the penalty-generic dual `D(θ) = −F*(−λθ) − λΣω*(x_jᵀθ)`:
+/// the quadratic dual value minus the penalty's conjugate term (one
+/// `Xᵀθ` sweep, only when the conjugate is non-trivial).
+fn penalty_dual_value<D: DesignOps, F: Datafit, P: Penalty>(
+    x: &D,
+    datafit: &F,
+    penalty: &P,
+    y: &[f64],
+    theta: &[f64],
+    lambda: f64,
+    cache: f64,
+    xtr: &mut Vec<f64>,
+) -> f64 {
+    let mut v = datafit.dual(y, theta, lambda, cache);
+    if !P::INDICATOR_DUAL {
+        xtr.resize(x.p(), 0.0);
+        x.xt_vec(theta, xtr);
+        v -= penalty.conjugate(lambda, xtr, 1.0);
+    }
+    v
+}
+
+/// Penalty-generic [`dual::glm_best_dual_point`] (Eq. 13): same
+/// in-order strict-argmax contract, with each candidate's dual value
+/// including the conjugate term. Returns `(winner, best dual value)` so
+/// the caller's gap needs no re-evaluation.
+fn penalty_best_dual_point<D: DesignOps, F: Datafit, P: Penalty>(
+    x: &D,
+    datafit: &F,
+    penalty: &P,
+    y: &[f64],
+    lambda: f64,
+    cache: f64,
+    candidates: &[&[f64]],
+    xtr: &mut Vec<f64>,
+) -> (usize, f64) {
+    let mut best = 0;
+    let mut best_val = f64::NEG_INFINITY;
+    for (i, th) in candidates.iter().enumerate() {
+        let v = penalty_dual_value(x, datafit, penalty, y, th, lambda, cache, xtr);
+        if v > best_val {
+            best_val = v;
+            best = i;
+        }
+    }
+    (best, best_val)
+}
+
+/// The penalty-generic CELER outer loop: pricing, the working set and
+/// the dual candidates all come from the [`Penalty`]'s dual norm,
+/// d-scores and conjugate (see `crate::penalty` for the conventions).
+/// Separable penalties only — group-ℓ₂ runs through the plain engine
+/// ([`engine::solve_penalty`]), whose group-CD epochs don't need
+/// feature-level working sets. The `P = L1` instantiation takes the
+/// exact historical expressions at every ℓ₁ touchpoint (fused
+/// rescale, `‖·‖_∞` pricing, `glm_primal_value`) — pinned in
+/// `tests/prop_penalty.rs`.
+pub fn celer_solve_penalty<D, F, P, S>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    datafit: &F,
+    penalty: &P,
+    cfg: &CelerConfig,
+    ws: &mut Workspace,
+    strategy: &mut S,
+) -> CelerOutput
+where
+    D: DesignOps,
+    F: Datafit,
+    P: Penalty,
+    S: for<'v> Strategy<DesignView<'v, D>, F, P>,
+{
+    debug_assert!(P::SEPARABLE, "group penalties run through engine::solve_penalty");
     let n = x.n();
     let p = x.p();
     let start = Instant::now();
@@ -192,10 +296,21 @@ where
 
     // init: θ⁰ = θ⁰_inner = r(0) / ‖Xᵀr(0)‖_∞ with r(0) = −∇F(0)
     // (Algorithm 4's y/‖Xᵀy‖_∞, generalized to the datafit's residual
-    // at zero — the same vector that anchors λ_max).
+    // at zero — the same vector that anchors λ_max). Generic penalties
+    // divide by max(λ, Ω^D(Xᵀr(0))) instead: for a penalty without a
+    // dual constraint (elastic net) the slab norm is 0 and the natural
+    // unconstrained candidate r(0)/λ comes out.
     let mut r0_buf = Vec::new();
     let r0 = datafit.residual_at_zero(y, &mut r0_buf);
-    let lmax = x.xt_abs_max(r0).max(f64::MIN_POSITIVE);
+    let lmax = if P::IS_L1 {
+        x.xt_abs_max(r0).max(f64::MIN_POSITIVE)
+    } else {
+        ws.scratch.xtr.resize(p, 0.0);
+        x.xt_vec(r0, &mut ws.scratch.xtr);
+        datafit
+            .rescale_denom(lambda, penalty.dual_norm(lambda, &ws.scratch.xtr))
+            .max(f64::MIN_POSITIVE)
+    };
     ws.theta.clear();
     ws.theta.extend(r0.iter().map(|&v| v / lmax));
     ws.theta_inner.clear();
@@ -232,21 +347,46 @@ where
         // sharded pass, θ_res into the workspace buffer; the denominator
         // honors the datafit's `rescale_denom` hook, like the engine's
         // dual update.
-        let denom = dual::glm_rescale_to_feasible_into(
-            x,
-            &ws.r,
-            lambda,
-            datafit,
-            &mut ws.scratch.xtr,
-            &mut ws.theta_res,
-        );
-        let winner = dual::glm_best_dual_point(
-            datafit,
-            y,
-            lambda,
-            cache,
-            &[&ws.theta, &ws.theta_inner, &ws.theta_res],
-        );
+        let denom = if P::IS_L1 {
+            dual::glm_rescale_to_feasible_into(
+                x,
+                &ws.r,
+                lambda,
+                datafit,
+                &mut ws.scratch.xtr,
+                &mut ws.theta_res,
+            )
+        } else {
+            dual::penalty_rescale_to_feasible_into(
+                x,
+                &ws.r,
+                lambda,
+                penalty,
+                &mut ws.scratch.xtr,
+                &mut ws.theta_res,
+            )
+        };
+        let (winner, d_best) = if P::IS_L1 {
+            let w = dual::glm_best_dual_point(
+                datafit,
+                y,
+                lambda,
+                cache,
+                &[&ws.theta, &ws.theta_inner, &ws.theta_res],
+            );
+            (w, f64::NAN) // L1 recomputes D(θ) below, as historically
+        } else {
+            penalty_best_dual_point(
+                x,
+                datafit,
+                penalty,
+                y,
+                lambda,
+                cache,
+                &[&ws.theta, &ws.theta_inner, &ws.theta_res],
+                &mut ws.scratch.xtr_acc,
+            )
+        };
         match winner {
             1 => {
                 let (theta, theta_inner) = (&mut ws.theta, &ws.theta_inner);
@@ -267,8 +407,21 @@ where
         // argmax-of-three point, exactly as Algorithm 4 prescribes.
         // Correlations for θ_inner are cached from the rescale pass below
         // (§Perf: saves one full Xᵀ· sweep per outer iteration).
-        let rank_winner =
-            dual::glm_best_dual_point(datafit, y, lambda, cache, &[&ws.theta_inner, &ws.theta_res]);
+        let rank_winner = if P::IS_L1 {
+            dual::glm_best_dual_point(datafit, y, lambda, cache, &[&ws.theta_inner, &ws.theta_res])
+        } else {
+            penalty_best_dual_point(
+                x,
+                datafit,
+                penalty,
+                y,
+                lambda,
+                cache,
+                &[&ws.theta_inner, &ws.theta_res],
+                &mut ws.scratch.xtr_acc,
+            )
+            .0
+        };
         if rank_winner == 1 {
             let (xtheta, xtr) = (&mut ws.xtheta, &ws.scratch.xtr);
             for (o, &v) in xtheta.iter_mut().zip(xtr.iter()) {
@@ -280,8 +433,17 @@ where
         }
 
         // ---- global gap / stop ----
-        let p_val = primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda);
-        gap = p_val - datafit.dual(y, &ws.theta, lambda, cache);
+        let p_val = if P::IS_L1 {
+            primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda)
+        } else {
+            datafit.value(y, &ws.xw, &ws.r) + penalty.value(lambda, &ws.beta)
+        };
+        gap = if P::IS_L1 {
+            p_val - datafit.dual(y, &ws.theta, lambda, cache)
+        } else {
+            // d_best is D(θ^t) of the winner just copied into ws.theta.
+            p_val - d_best
+        };
         let support = primal::support(&ws.beta);
         if gap <= cfg.tol {
             converged = true;
@@ -300,7 +462,13 @@ where
         // ---- working set ----
         // (empty columns get d_j = +∞ and are excluded centrally by
         // build_working_set — no sentinel values needed here)
-        crate::screening::fill_d_scores(&ws.xtheta, &ws.col_norms, &mut ws.d_scores);
+        crate::screening::fill_d_scores_penalty(
+            &ws.xtheta,
+            &ws.col_norms,
+            lambda,
+            penalty,
+            &mut ws.d_scores,
+        );
         // Stagnation safeguard: when an outer iteration barely improved
         // the gap, the working set was too small (or mis-prioritized) —
         // fall back to monotone doubling for this round, which restores
@@ -350,8 +518,12 @@ where
             stop: StopRule::DualityGap,
         };
         let inner_epochs = {
+            // The view's columns are locally indexed, so per-feature
+            // penalties (weighted ℓ₁) must be restricted alongside the
+            // design; index-independent penalties restrict to themselves.
+            let sub_penalty = penalty.restrict(&ws_idx);
             let view = DesignView::new(x, &ws_idx, &ws.norms_sq);
-            let outcome = engine::solve_datafit(
+            let outcome = engine::solve_penalty(
                 &view,
                 y,
                 lambda,
@@ -361,6 +533,7 @@ where
                 &mut inner_ws,
                 strategy,
                 datafit,
+                &sub_penalty,
             );
             outcome.epochs
         };
@@ -382,7 +555,15 @@ where
         // the correct rescaling is max(1, ‖Xᵀθ‖_∞).) The Xᵀθ_inner sweep
         // is kept — it doubles as next iteration's pricing vector — and
         // the fused kernel returns its norm without a second p-scan.
-        let s = x.xt_vec_abs_max(&inner_ws.dual.theta, &mut ws.xtheta_inner).max(1.0);
+        let s = if P::IS_L1 {
+            x.xt_vec_abs_max(&inner_ws.dual.theta, &mut ws.xtheta_inner).max(1.0)
+        } else {
+            // Generic slab lift max(1, Ω^D(Xᵀθ)); for penalties without a
+            // dual constraint Ω^D = 0, so the subproblem point passes
+            // through unscaled (it is already globally admissible).
+            x.xt_vec(&inner_ws.dual.theta, &mut ws.xtheta_inner);
+            penalty.dual_norm(lambda, &ws.xtheta_inner).max(1.0)
+        };
         let inv_s = 1.0 / s;
         ws.theta_inner.clear();
         ws.theta_inner.extend(inner_ws.dual.theta.iter().map(|&v| v * inv_s));

@@ -43,6 +43,7 @@
 use crate::data::design::DesignOps;
 use crate::datafit::{Datafit, Quadratic};
 use crate::lasso::primal;
+use crate::penalty::{Penalty, L1};
 use crate::screening::ScreeningState;
 use crate::solvers::{DualScratch, DualState, GapCheck, SolveResult};
 use crate::util::soft_threshold;
@@ -119,12 +120,15 @@ pub struct EngineOutcome {
 /// one the epochs maintain (FISTA).
 ///
 /// Strategies are generic over the [`Datafit`] `F` (default: the
-/// quadratic Lasso fit). For a non-quadratic datafit the epoch must keep
-/// **three** quantities consistent: β, the linear predictor `xw = Xβ`,
-/// and the generalized residual `r = −∇F(xw)` — see
-/// [`crate::solvers::glm::ProxNewtonCd`]. Quadratic strategies may
-/// ignore `xw` entirely (the engine never reads it for `F = Quadratic`).
-pub trait Strategy<D: DesignOps, F: Datafit = Quadratic> {
+/// quadratic Lasso fit) and the [`Penalty`] `P` (default: plain ℓ₁).
+/// For a non-quadratic datafit the epoch must keep **three** quantities
+/// consistent: β, the linear predictor `xw = Xβ`, and the generalized
+/// residual `r = −∇F(xw)` — see [`crate::solvers::glm::ProxNewtonCd`].
+/// Quadratic strategies may ignore `xw` entirely (the engine never reads
+/// it for `F = Quadratic`). Strategies that hard-code the ℓ₁
+/// soft-threshold (FISTA, the f32 sweep, prox-Newton) implement only
+/// `P = L1`; [`CdStrategy`] takes the penalty generically.
+pub trait Strategy<D: DesignOps, F: Datafit = Quadratic, P: Penalty = L1> {
     /// Run one primal epoch, updating `beta` and `r` (and, for GLM
     /// datafits, `xw`) in place.
     ///
@@ -143,6 +147,7 @@ pub trait Strategy<D: DesignOps, F: Datafit = Quadratic> {
         active: &[usize],
         norms_sq: &[f64],
         datafit: &F,
+        penalty: &P,
     );
 
     /// Synchronize the engine-visible iterate with any strategy-private
@@ -180,7 +185,11 @@ pub trait Strategy<D: DesignOps, F: Datafit = Quadratic> {
 /// [`DesignView`](crate::data::view::DesignView)).
 pub struct CdStrategy;
 
-impl<D: DesignOps> Strategy<D> for CdStrategy {
+/// Largest supported [`Penalty::group_size`] for the stack-allocated
+/// group-CD buffers (no heap traffic on the epoch hot path).
+pub const MAX_GROUP: usize = 64;
+
+impl<D: DesignOps, P: Penalty> Strategy<D, Quadratic, P> for CdStrategy {
     fn epoch(
         &mut self,
         x: &D,
@@ -192,15 +201,73 @@ impl<D: DesignOps> Strategy<D> for CdStrategy {
         active: &[usize],
         norms_sq: &[f64],
         _datafit: &Quadratic,
+        penalty: &P,
     ) {
-        for &j in active {
-            let nrm = norms_sq[j];
-            let g = x.col_dot(j, r);
-            let old = beta[j];
-            let new = soft_threshold(old + g / nrm, lambda / nrm);
-            if new != old {
-                x.col_axpy(j, old - new, r);
-                beta[j] = new;
+        if P::IS_L1 {
+            // The historical ℓ₁ loop, expression for expression (the
+            // bit-identity invariant — `lambda / nrm` stays one division).
+            for &j in active {
+                let nrm = norms_sq[j];
+                let g = x.col_dot(j, r);
+                let old = beta[j];
+                let new = soft_threshold(old + g / nrm, lambda / nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, r);
+                    beta[j] = new;
+                }
+            }
+        } else if P::SEPARABLE {
+            // Generic separable prox in the same fused update shape.
+            for &j in active {
+                let nrm = norms_sq[j];
+                let g = x.col_dot(j, r);
+                let old = beta[j];
+                let new = penalty.prox(j, old + g / nrm, lambda, nrm);
+                if new != old {
+                    x.col_axpy(j, old - new, r);
+                    beta[j] = new;
+                }
+            }
+        } else {
+            // Group CD: one block prox per contiguous group, majorized by
+            // the group Frobenius curvature L_g = Σ_{k∈g} ‖x_k‖² ≥ ‖X_g‖₂²
+            // (a safe Lipschitz bound, so the prox step is a monotone MM
+            // update). `active` is sorted, so each group is visited once,
+            // keyed on its first active member; zero-norm members inside
+            // a group contribute nothing to either L_g or the gradient.
+            let gs = penalty.group_size();
+            assert!(gs <= MAX_GROUP, "group size {gs} exceeds MAX_GROUP = {MAX_GROUP}");
+            let p = beta.len();
+            let mut u = [0.0f64; MAX_GROUP];
+            let mut old = [0.0f64; MAX_GROUP];
+            let mut last_group = usize::MAX;
+            for &j in active {
+                let g_idx = j / gs;
+                if g_idx == last_group {
+                    continue;
+                }
+                last_group = g_idx;
+                let start = g_idx * gs;
+                let end = (start + gs).min(p);
+                let width = end - start;
+                let mut l_g = 0.0;
+                for k in start..end {
+                    l_g += norms_sq[k];
+                }
+                if l_g == 0.0 {
+                    continue;
+                }
+                for (t, k) in (start..end).enumerate() {
+                    old[t] = beta[k];
+                    u[t] = beta[k] + x.col_dot(k, r) / l_g;
+                }
+                penalty.prox_vec(&u[..width], lambda, l_g, &mut beta[start..end]);
+                for (t, k) in (start..end).enumerate() {
+                    let new = beta[k];
+                    if new != old[t] {
+                        x.col_axpy(k, old[t] - new, r);
+                    }
+                }
             }
         }
     }
@@ -369,6 +436,25 @@ impl Workspace {
     }
 }
 
+/// The engine's primal objective `F(Xβ) + λΩ(β)`. The `P = L1`
+/// instantiation delegates to [`primal::glm_primal_value`] — the
+/// historical expression tree, bit for bit.
+#[inline]
+fn penalty_primal<F: Datafit, P: Penalty>(
+    datafit: &F,
+    y: &[f64],
+    xw: &[f64],
+    r: &[f64],
+    beta: &[f64],
+    lambda: f64,
+    penalty: &P,
+) -> f64 {
+    if P::IS_L1 {
+        return primal::glm_primal_value(datafit, y, xw, r, beta, lambda);
+    }
+    datafit.value(y, xw, r) + penalty.value(lambda, beta)
+}
+
 /// Run the engine: `strategy` epochs over `x` until `cfg.stop` fires or
 /// `cfg.max_epochs` is reached. The solution is left in `ws` (β in
 /// `ws.beta`, residual in `ws.r`, dual point in `ws.dual.theta`).
@@ -402,6 +488,8 @@ pub fn solve<D: DesignOps, S: Strategy<D>>(
 /// skipped entirely when the datafit has no global Lipschitz constant
 /// (Poisson). The `F = Quadratic` instantiation is bit-identical to the
 /// historical engine — pinned in `tests/prop_glm.rs`.
+///
+/// Shorthand for [`solve_penalty`] with the plain ℓ₁ penalty.
 pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
     x: &D,
     y: &[f64],
@@ -413,6 +501,37 @@ pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
     strategy: &mut S,
     datafit: &F,
 ) -> EngineOutcome {
+    solve_penalty(x, y, lambda, init, active0, cfg, ws, strategy, datafit, &L1)
+}
+
+/// Penalty-generic engine loop: the epoch → gap-check → dual-update →
+/// screen → stop sequence for any ([`Datafit`] `F`, [`Penalty`] `P`)
+/// pair a strategy implements. The penalty surfaces in exactly four
+/// places: the epoch's prox (inside the [`Strategy`]), the primal value
+/// (`F(Xβ) + λΩ(β)`), the dual update (Ω^D rescale + conjugate term, via
+/// [`DualState::update_penalty`]) and the Gap Safe rule
+/// ([`ScreeningState::screen_penalty`]). Non-ℓ₁ penalties screen only
+/// under the quadratic datafit — the combined GLM × generic-penalty
+/// radius is not implemented, so that configuration runs unscreened
+/// (and is currently unreachable: the GLM strategies are `P = L1`).
+/// The `P = L1` instantiation is bit-identical to [`solve_datafit`] —
+/// pinned in `tests/prop_penalty.rs`.
+pub fn solve_penalty<D: DesignOps, F: Datafit, P: Penalty, S: Strategy<D, F, P>>(
+    x: &D,
+    y: &[f64],
+    lambda: f64,
+    init: Init<'_>,
+    active0: Option<&[usize]>,
+    cfg: &EngineConfig,
+    ws: &mut Workspace,
+    strategy: &mut S,
+    datafit: &F,
+    penalty: &P,
+) -> EngineOutcome {
+    debug_assert!(
+        P::IS_L1 || F::IS_QUADRATIC,
+        "generic penalties currently pair with the quadratic datafit only"
+    );
     let n = x.n();
     let p = x.p();
     assert_eq!(y.len(), n);
@@ -474,7 +593,7 @@ pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
     let mut prev_obj = if use_gap {
         f64::INFINITY
     } else {
-        primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda)
+        penalty_primal(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda, penalty)
     };
 
     for epoch in 1..=cfg.max_epochs {
@@ -490,11 +609,12 @@ pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
             &ws.active,
             &ws.norms_sq,
             datafit,
+            penalty,
         );
 
         match cfg.stop {
             StopRule::PrimalDecrease => {
-                let obj = primal::glm_primal_value(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda);
+                let obj = penalty_primal(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda, penalty);
                 if prev_obj - obj < cfg.tol {
                     converged = true;
                     break;
@@ -505,10 +625,13 @@ pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
                 if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
                     strategy.sync_check_state(x, y, &mut ws.beta, &mut ws.r);
                     strategy.fill_check_residual(x, y, &ws.beta, &ws.r, &mut ws.r_check);
-                    let (d_res, d_accel) =
-                        ws.dual.update_datafit(x, y, lambda, &ws.r_check, &mut ws.scratch, datafit);
+                    let (d_res, d_accel) = if P::IS_L1 {
+                        ws.dual.update_datafit(x, y, lambda, &ws.r_check, &mut ws.scratch, datafit)
+                    } else {
+                        ws.dual.update_penalty(x, y, lambda, &ws.r_check, &mut ws.scratch, penalty)
+                    };
                     let p_val =
-                        primal::glm_primal_value(datafit, y, &ws.xw, &ws.r_check, &ws.beta, lambda);
+                        penalty_primal(datafit, y, &ws.xw, &ws.r_check, &ws.beta, lambda, penalty);
                     gap = p_val - ws.dual.dval;
                     // Screen only while unconverged: the reported (β, gap)
                     // pair must be the one that passed the stopping test —
@@ -517,13 +640,16 @@ pub fn solve_datafit<D: DesignOps, F: Datafit, S: Strategy<D, F>>(
                     if cfg.screen && gap > cfg.tol {
                         if F::IS_QUADRATIC {
                             // Residual-linear fast path: screening zeroes
-                            // β_j and patches r incrementally.
-                            let n_screened = ws.screening.screen(
+                            // β_j and patches r incrementally
+                            // (`screen_penalty` delegates to the historical
+                            // `screen` when P = L1 — same bits).
+                            let n_screened = ws.screening.screen_penalty(
                                 x,
                                 &ws.dual.xtheta,
                                 &ws.col_norms,
                                 gap,
                                 lambda,
+                                penalty,
                                 &mut ws.beta,
                                 &mut ws.r,
                             );

@@ -107,6 +107,7 @@ impl<D: DesignOps, F: Datafit> Strategy<D, F> for ProxNewtonCd {
         active: &[usize],
         _norms_sq: &[f64],
         datafit: &F,
+        _penalty: &crate::penalty::L1,
     ) {
         let n = y.len();
         let p = beta.len();

@@ -105,6 +105,7 @@ impl<D: DesignOps> Strategy<D> for IstaStrategy {
         _active: &[usize],
         _norms_sq: &[f64],
         _datafit: &crate::datafit::Quadratic,
+        _penalty: &crate::penalty::L1,
     ) {
         let p = beta.len();
         if self.fresh {

@@ -287,6 +287,101 @@ impl DualState {
         self.last_choice = best;
         (d_res, d_accel_out)
     }
+
+    /// Penalty-generic [`DualState::update`] (quadratic datafit): the
+    /// Eq. 4 rescale denominator becomes `max(λ, Ω^D(Xᵀr))` with the
+    /// penalty's dual norm, and penalties with a finite conjugate
+    /// (elastic net) subtract `λ·Σω*(x_jᵀθ)` from every dual candidate.
+    /// The `P = L1` instantiation delegates wholesale to
+    /// [`DualState::update_datafit`], so the ℓ₁ path is the historical
+    /// code, bit for bit (pinned in `tests/prop_penalty.rs`).
+    pub fn update_penalty<D: DesignOps, P: crate::penalty::Penalty>(
+        &mut self,
+        x: &D,
+        y: &[f64],
+        lambda: f64,
+        r: &[f64],
+        scratch: &mut DualScratch,
+        penalty: &P,
+    ) -> (f64, Option<f64>) {
+        if P::IS_L1 {
+            return self.update_datafit(x, y, lambda, r, scratch, &crate::datafit::Quadratic);
+        }
+        let datafit = &crate::datafit::Quadratic;
+        self.buffer.push(r);
+        let n = y.len();
+        let p = x.p();
+        scratch.xtr.resize(p, 0.0);
+        if self.y_norm_sq.is_nan() {
+            self.y_norm_sq = datafit.conj_cache(y);
+        }
+
+        // θ_res = r / max(λ, Ω^D(Xᵀr)). The generic dual norm needs the
+        // full correlation vector, so the fused abs-max kernel is
+        // bypassed here (penalties other than ℓ₁ only).
+        x.xt_vec(r, &mut scratch.xtr);
+        let denom = datafit.rescale_denom(lambda, penalty.dual_norm(lambda, &scratch.xtr));
+        let inv = 1.0 / denom;
+        let mut d_res = datafit.dual_scaled(y, r, inv, lambda, self.y_norm_sq);
+        if !P::INDICATOR_DUAL {
+            // Xᵀθ = (Xᵀr)·inv without materializing θ.
+            d_res -= penalty.conjugate(lambda, &scratch.xtr, inv);
+        }
+
+        let mut best_val = d_res;
+        let mut best = DualChoice::Residual;
+
+        let mut d_accel_out = None;
+        if self.extrapolate && self.buffer.extrapolate_into(&mut scratch.extrap) {
+            let r_acc = &scratch.extrap.r_accel;
+            scratch.xtr_acc.resize(p, 0.0);
+            scratch.theta_acc.resize(n, 0.0);
+            x.xt_vec(r_acc, &mut scratch.xtr_acc);
+            let denom_a =
+                datafit.rescale_denom(lambda, penalty.dual_norm(lambda, &scratch.xtr_acc));
+            let inv_a = 1.0 / denom_a;
+            for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
+                *t = v * inv_a;
+            }
+            for v in scratch.xtr_acc.iter_mut() {
+                *v *= inv_a;
+            }
+            let mut d_acc = datafit.dual(y, &scratch.theta_acc, lambda, self.y_norm_sq);
+            if !P::INDICATOR_DUAL {
+                // xtr_acc already holds Xᵀθ_accel (scaled in place above).
+                d_acc -= penalty.conjugate(lambda, &scratch.xtr_acc, 1.0);
+            }
+            d_accel_out = Some(d_acc);
+            if d_acc > best_val {
+                best_val = d_acc;
+                best = DualChoice::Extrapolated;
+            }
+        }
+
+        if self.monotone && self.dval >= best_val {
+            self.last_choice = DualChoice::Previous;
+            return (d_res, d_accel_out);
+        }
+
+        match best {
+            DualChoice::Extrapolated => {
+                self.theta.clear();
+                self.theta.extend_from_slice(&scratch.theta_acc);
+                self.xtheta.clear();
+                self.xtheta.extend_from_slice(&scratch.xtr_acc);
+                self.dval = best_val;
+            }
+            _ => {
+                self.theta.clear();
+                self.theta.extend(r.iter().map(|&v| v * inv));
+                self.xtheta.clear();
+                self.xtheta.extend(scratch.xtr.iter().map(|&v| v * inv));
+                self.dval = d_res;
+            }
+        }
+        self.last_choice = best;
+        (d_res, d_accel_out)
+    }
 }
 
 #[cfg(test)]

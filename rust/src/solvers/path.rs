@@ -20,10 +20,11 @@ use crate::datafit::GlmFamily;
 use crate::lasso::dual;
 use crate::multitask::solver::{mt_celer_solve_ws, MtConfig};
 use crate::multitask::TaskMatrix;
+use crate::penalty::{ElasticNet, Penalty, L1};
 use crate::solvers::batch::{self, BatchCdStrategy, BatchConfig};
 use crate::solvers::blitz::{blitz_solve_ws, BlitzConfig};
 use crate::solvers::cd::{cd_solve_ws, CdConfig};
-use crate::solvers::celer::{celer_solve_on_ws, CelerConfig};
+use crate::solvers::celer::{celer_penalty_solve_on_ws, celer_solve_on_ws, CelerConfig};
 use crate::solvers::engine::Workspace;
 use crate::solvers::glm::{glm_celer_solve_ws, ProxNewtonCd};
 use crate::solvers::glmnet::{glmnet_solve_ws, GlmnetConfig};
@@ -68,6 +69,14 @@ pub enum PathSolver {
     /// "celer-logreg" slots into any coordinator grid; call
     /// [`glm_path`] directly for true-label paths or the Poisson fit.
     CelerLogreg(CelerConfig),
+    /// Elastic net `½‖y − Xβ‖² + λ(α‖β‖₁ + ½(1−α)‖β‖₂²)` with CELER on
+    /// the penalty-generic engine; the second field is the mixing
+    /// ratio α ∈ (0, 1).
+    CelerEnet(CelerConfig, f64),
+    /// Weighted ℓ₁ with the column-norm weights of
+    /// [`crate::penalty::scale_weights`] (empty columns unreachable at
+    /// weight ∞), solved with CELER on the penalty-generic engine.
+    CelerWlasso(CelerConfig),
 }
 
 impl PathSolver {
@@ -88,6 +97,8 @@ impl PathSolver {
             PathSolver::BatchedCd(_) => "cd-batched",
             PathSolver::MultiTask(_) => "celer-mt",
             PathSolver::CelerLogreg(_) => "celer-logreg",
+            PathSolver::CelerEnet(..) => "celer-enet",
+            PathSolver::CelerWlasso(_) => "celer-wlasso",
         }
     }
 
@@ -123,6 +134,14 @@ impl PathSolver {
             }
             "celer-logreg" | "logreg" => {
                 PathSolver::CelerLogreg(CelerConfig { tol, ..Default::default() })
+            }
+            // α = ½: the conventional even split between the ℓ₁ and
+            // ridge terms (scikit-learn's `l1_ratio` default).
+            "celer-enet" | "enet" => {
+                PathSolver::CelerEnet(CelerConfig { tol, ..Default::default() }, 0.5)
+            }
+            "celer-wlasso" | "wlasso" => {
+                PathSolver::CelerWlasso(CelerConfig { tol, ..Default::default() })
             }
             _ => return None,
         })
@@ -175,16 +194,23 @@ pub fn run_path(
 /// [`auto_lanes`](crate::solvers::batch::auto_lanes)); pass a
 /// sequential [`PathSolver`] to [`run_path`] instead for the one-λ-at-a-
 /// time schedule.
-pub fn lasso_path(
+///
+/// Generic over the (separable) [`Penalty`]: pass [`L1`] for the plain
+/// Lasso path (bit-identical to the historical driver) or e.g. an
+/// [`ElasticNet`] to run the whole multi-λ elastic-net path on the same
+/// shared-sweep lane machinery.
+pub fn lasso_path<P: Penalty>(
     x: &DesignMatrix,
     y: &[f64],
     grid: &[f64],
     tol: f64,
     lanes: usize,
     store_betas: bool,
+    penalty: &P,
 ) -> PathResult {
     let cfg = BatchConfig { tol, lanes, ..Default::default() };
-    run_path(x, y, grid, &PathSolver::BatchedCd(cfg), store_betas)
+    let mut ws = Workspace::new();
+    run_path_batched_penalty(x, y, grid, &cfg, store_betas, &mut ws, penalty)
 }
 
 /// [`run_path`] on a caller-provided [`Workspace`] (e.g. the coordinator
@@ -212,6 +238,14 @@ pub fn run_path_with_workspace(
     }
     let start = Instant::now();
     let p = crate::data::design::DesignOps::p(x);
+    // Weighted-ℓ₁ column-norm weights are a property of the design, not
+    // of λ: build the penalty once for the whole grid.
+    let wlasso_penalty = match solver {
+        PathSolver::CelerWlasso(_) => {
+            Some(crate::penalty::WeightedL1::new(crate::penalty::scale_weights(x)))
+        }
+        _ => None,
+    };
     let mut beta = vec![0.0; p];
     let mut steps = Vec::with_capacity(grid.len());
     let mut lambda_prev = dual::lambda_max(x, y);
@@ -240,6 +274,16 @@ pub fn run_path_with_workspace(
                 let out = mt_celer_solve_ws(x, y, 1, lambda, Some(&beta), cfg, &mut mtws);
                 ws.put_mt(mtws);
                 (out.b.data, out.gap, out.epochs, out.converged)
+            }
+            PathSolver::CelerEnet(cfg, l1_ratio) => {
+                let pen = ElasticNet::new(*l1_ratio);
+                let out = celer_penalty_solve_on_ws(x, y, lambda, Some(&beta), &pen, cfg, ws);
+                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+            }
+            PathSolver::CelerWlasso(cfg) => {
+                let pen = wlasso_penalty.as_ref().expect("built before the grid loop");
+                let out = celer_penalty_solve_on_ws(x, y, lambda, Some(&beta), pen, cfg, ws);
+                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
             }
             PathSolver::BatchedCd(_) => unreachable!("handled by run_path_batched"),
             PathSolver::CelerLogreg(_) => unreachable!("handled by glm_path_with_workspace"),
@@ -276,27 +320,56 @@ pub fn run_path_batched(
     store_betas: bool,
     ws: &mut Workspace,
 ) -> PathResult {
+    run_path_batched_penalty(x, y, grid, cfg, store_betas, ws, &L1)
+}
+
+/// Penalty-generic [`run_path_batched`]: the same lane engine solving
+/// `½‖y − Xβ‖² + Ω_λ(β)` at every grid cell for any separable
+/// [`Penalty`]. `P = L1` takes the historical code paths bit for bit.
+pub fn run_path_batched_penalty<P: Penalty>(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    cfg: &BatchConfig,
+    store_betas: bool,
+    ws: &mut Workspace,
+    penalty: &P,
+) -> PathResult {
     let start = Instant::now();
     let mut lanes_ws = ws.take_batch();
     // Dispatch once so the interleaved sweeps monomorphize per storage;
     // `cfg.precision` picks the f64 or f32-sweep strategy.
     let results = match x {
         DesignMatrix::Dense(d) => match cfg.precision {
-            Precision::F64 => {
-                batch::solve_grid(d, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
-            }
+            Precision::F64 => batch::solve_grid_penalty(
+                d,
+                y,
+                grid,
+                None,
+                cfg,
+                &mut lanes_ws,
+                &mut BatchCdStrategy,
+                penalty,
+            ),
             Precision::F32 => {
                 let mut strat = batch::BatchF32Strategy::new(d);
-                batch::solve_grid(d, y, grid, None, cfg, &mut lanes_ws, &mut strat)
+                batch::solve_grid_penalty(d, y, grid, None, cfg, &mut lanes_ws, &mut strat, penalty)
             }
         },
         DesignMatrix::Sparse(s) => match cfg.precision {
-            Precision::F64 => {
-                batch::solve_grid(s, y, grid, None, cfg, &mut lanes_ws, &mut BatchCdStrategy)
-            }
+            Precision::F64 => batch::solve_grid_penalty(
+                s,
+                y,
+                grid,
+                None,
+                cfg,
+                &mut lanes_ws,
+                &mut BatchCdStrategy,
+                penalty,
+            ),
             Precision::F32 => {
                 let mut strat = batch::BatchF32Strategy::new(s);
-                batch::solve_grid(s, y, grid, None, cfg, &mut lanes_ws, &mut strat)
+                batch::solve_grid_penalty(s, y, grid, None, cfg, &mut lanes_ws, &mut strat, penalty)
             }
         },
     };
@@ -524,7 +597,7 @@ mod tests {
             &PathSolver::by_name("gapsafe-cd-accel", tol).unwrap(),
             true,
         );
-        let bat = lasso_path(&ds.x, &ds.y, &grid, tol, 4, true);
+        let bat = lasso_path(&ds.x, &ds.y, &grid, tol, 4, true, &crate::penalty::L1);
         assert_eq!(bat.solver, "cd-batched");
         assert!(seq.all_converged() && bat.all_converged());
         for (i, (ss, sb)) in seq.steps.iter().zip(&bat.steps).enumerate() {
@@ -544,6 +617,78 @@ mod tests {
             // both gap-certified at tol ⇒ objectives within 2·tol
             assert!((ps - pb).abs() <= 2.0 * tol, "λ#{i}: {ps} vs {pb}");
         }
+    }
+
+    #[test]
+    fn penalty_solver_name_roundtrips() {
+        for (name, alias) in [("celer-enet", "enet"), ("celer-wlasso", "wlasso")] {
+            assert_eq!(PathSolver::by_name(name, 1e-6).unwrap().name(), name);
+            assert_eq!(PathSolver::by_name(alias, 1e-6).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn enet_and_wlasso_paths_certify_every_step() {
+        // Both penalty-generic solvers must walk a warm-started grid
+        // with a gap certificate at every λ. The enet grid is anchored
+        // at its own λ_max = ‖Xᵀy‖_∞/α so the first cell starts sparse.
+        let ds = synth::leukemia_mini(57);
+        let tol = 1e-8;
+        for name in ["celer-enet", "celer-wlasso"] {
+            let solver = PathSolver::by_name(name, tol).unwrap();
+            let lmax = match &solver {
+                PathSolver::CelerEnet(_, a) => dual::lambda_max(&ds.x, &ds.y) / a,
+                _ => dual::lambda_max(&ds.x, &ds.y),
+            };
+            let grid = lambda_grid(lmax, 0.05, 5);
+            let res = run_path(&ds.x, &ds.y, &grid, &solver, true);
+            assert_eq!(res.solver, name);
+            assert!(res.all_converged(), "{name} converged");
+            for s in &res.steps {
+                assert!(s.gap <= tol, "{name}: gap {} at λ {}", s.gap, s.lambda);
+            }
+            // support grows down the path, and something is selected
+            assert!(res.steps.last().unwrap().support_size > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn batched_enet_path_matches_sequential_enet() {
+        // The batched lanes and the sequential CELER solver run very
+        // different schedules; agreement of the certified objectives
+        // pins the penalty threading of both.
+        let ds = synth::leukemia_mini(58);
+        let alpha = 0.5;
+        let pen = crate::penalty::ElasticNet::new(alpha);
+        let lmax = dual::lambda_max(&ds.x, &ds.y) / alpha;
+        let grid = lambda_grid(lmax, 0.05, 5);
+        let tol = 1e-9;
+        let bat = lasso_path(&ds.x, &ds.y, &grid, tol, 3, true, &pen);
+        let seq = run_path(
+            &ds.x,
+            &ds.y,
+            &grid,
+            &PathSolver::CelerEnet(CelerConfig { tol, ..Default::default() }, alpha),
+            true,
+        );
+        assert!(bat.all_converged() && seq.all_converged());
+        for (i, (sb, ss)) in bat.steps.iter().zip(&seq.steps).enumerate() {
+            let pb = enet_objective(&ds, sb.beta.as_ref().unwrap(), grid[i], &pen);
+            let ps = enet_objective(&ds, ss.beta.as_ref().unwrap(), grid[i], &pen);
+            assert!((pb - ps).abs() <= 2.0 * tol, "λ#{i}: {pb} vs {ps}");
+        }
+    }
+
+    fn enet_objective(
+        ds: &synth::SynthDataset,
+        beta: &[f64],
+        lambda: f64,
+        pen: &crate::penalty::ElasticNet,
+    ) -> f64 {
+        use crate::penalty::Penalty as _;
+        let mut r = vec![0.0; ds.y.len()];
+        crate::lasso::primal::residual(&ds.x, &ds.y, beta, &mut r);
+        0.5 * crate::util::linalg::dot(&r, &r) + pen.value(lambda, beta)
     }
 
     #[test]

@@ -111,6 +111,7 @@ impl<D: DesignOps> Strategy<D> for F32CdStrategy {
         active: &[usize],
         norms_sq: &[f64],
         _datafit: &Quadratic,
+        _penalty: &crate::penalty::L1,
     ) {
         if self.f64_mode {
             // Post-escalation: the plain f64 CD epoch (identical to

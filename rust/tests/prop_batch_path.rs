@@ -45,7 +45,7 @@ fn assert_same_support(beta_s: &[f64], beta_b: &[f64], what: &str) {
 
 fn check_batched_equivalent(ds: &SynthDataset, grid: &[f64], tol: f64, lanes: usize) {
     let seq = sequential_reference(ds, grid, tol);
-    let bat = lasso_path(&ds.x, &ds.y, grid, tol, lanes, true);
+    let bat = lasso_path(&ds.x, &ds.y, grid, tol, lanes, true, &celer::penalty::L1);
     assert_eq!(bat.steps.len(), grid.len(), "one step per grid point");
     assert!(seq.all_converged(), "sequential reference converged");
     assert!(bat.all_converged(), "batched path converged (B = {lanes})");

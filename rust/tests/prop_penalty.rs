@@ -1,0 +1,1012 @@
+//! Property tests for the penalty abstraction.
+//!
+//! 1. **Bit-identity pins**: the `P = L1` instantiation of the
+//!    penalty-generic machinery is bitwise equal to faithful test-local
+//!    ports of the pre-penalty code —
+//!    a. the engine loop (`cd_solve` → `engine::solve_penalty` with
+//!       `L1`) against the same legacy CD port `prop_glm.rs` pins,
+//!       dense + CSC, screening on/off, extrapolation on/off;
+//!    b. the CELER outer loop (`celer_solve` →
+//!       `celer_solve_penalty` with `L1`) against a port of the
+//!       pre-penalty outer loop — per-iteration gaps, working-set
+//!       sizes, inner epoch counts and dual winners included.
+//! 2. **Conformance suite** run against EVERY `Penalty` impl (ℓ₁,
+//!    elastic net, weighted ℓ₁, group-ℓ₂), dense + CSC: prox
+//!    optimality, dual-norm/value Fenchel consistency, `lambda_max`
+//!    correctness (β̂ = 0 exactly at λ ≥ λ_max, support at 0.8·λ_max),
+//!    and Gap Safe screening safety (screened ⇒ zero in a tight
+//!    unscreened reference).
+//! 3. **Elastic-net reduction**: EN(λ, α) on X equals the Lasso at λα
+//!    on the augmented design [X; √(λ(1−α))·I] — objectives and
+//!    supports.
+//! 4. **Weighted-ℓ₁ edge weights**: w = 0 features are never screened
+//!    and carry a free coefficient; w = ∞ features are exactly zero.
+
+use celer::data::dense::DenseMatrix;
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::synth::{self, SynthDataset};
+use celer::data::view::DesignView;
+use celer::datafit::{Datafit, Quadratic};
+use celer::extrapolation::ResidualBuffer;
+use celer::lasso::{dual, primal};
+use celer::penalty::{ElasticNet, GroupLasso, Penalty, WeightedL1, L1};
+use celer::solvers::cd::{cd_solve, CdConfig};
+use celer::solvers::celer::{celer_penalty_solve_on_ws, celer_solve_on, CelerConfig};
+use celer::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
+use celer::solvers::{DualScratch, SolveResult};
+use celer::util::linalg::dot;
+use celer::util::rng::Rng;
+use celer::ws::build_working_set;
+
+// ---------------------------------------------------------------------
+// 1a. engine pin: P = L1 vs the pre-penalty engine loop
+// ---------------------------------------------------------------------
+
+/// Faithful port of the pre-penalty quadratic dual update (Eq. 4
+/// rescale + fused D(θ_res) + θ_accel + Eq. 13 monotone best), exactly
+/// as `DualState::update` hardcoded it before penalties existed —
+/// identical to the port `prop_glm.rs` pins the datafit refactor with.
+struct LegacyDual {
+    buffer: ResidualBuffer,
+    theta: Vec<f64>,
+    xtheta: Vec<f64>,
+    dval: f64,
+    y_norm_sq: f64,
+    extrapolate: bool,
+    monotone: bool,
+}
+
+impl LegacyDual {
+    fn new(n: usize, p: usize, k: usize, extrapolate: bool, monotone: bool) -> Self {
+        LegacyDual {
+            buffer: ResidualBuffer::new(k.max(1)),
+            theta: vec![0.0; n],
+            xtheta: vec![0.0; p],
+            dval: f64::NEG_INFINITY,
+            y_norm_sq: f64::NAN,
+            extrapolate,
+            monotone,
+        }
+    }
+
+    fn update(
+        &mut self,
+        x: &DesignMatrix,
+        y: &[f64],
+        lambda: f64,
+        r: &[f64],
+        scratch: &mut DualScratch,
+    ) {
+        self.buffer.push(r);
+        let n = y.len();
+        let p = x.p();
+        scratch.xtr.resize(p, 0.0);
+        if self.y_norm_sq.is_nan() {
+            self.y_norm_sq = dot(y, y);
+        }
+        let denom = lambda.max(x.xt_vec_abs_max(r, &mut scratch.xtr));
+        let inv = 1.0 / denom;
+        let d_res = {
+            let mut dist_sq = 0.0;
+            for i in 0..n {
+                let d = r[i] * inv - y[i] / lambda;
+                dist_sq += d * d;
+            }
+            0.5 * self.y_norm_sq - 0.5 * lambda * lambda * dist_sq
+        };
+        let mut best_val = d_res;
+        let mut best_is_accel = false;
+        if self.extrapolate && self.buffer.extrapolate_into(&mut scratch.extrap) {
+            let r_acc = &scratch.extrap.r_accel;
+            scratch.xtr_acc.resize(p, 0.0);
+            scratch.theta_acc.resize(n, 0.0);
+            let denom_a = lambda.max(x.xt_vec_abs_max(r_acc, &mut scratch.xtr_acc));
+            let inv_a = 1.0 / denom_a;
+            for (t, &v) in scratch.theta_acc.iter_mut().zip(r_acc.iter()) {
+                *t = v * inv_a;
+            }
+            for v in scratch.xtr_acc.iter_mut() {
+                *v *= inv_a;
+            }
+            let d_acc = dual::dual_objective_cached(y, &scratch.theta_acc, lambda, self.y_norm_sq);
+            if d_acc > best_val {
+                best_val = d_acc;
+                best_is_accel = true;
+            }
+        }
+        if self.monotone && self.dval >= best_val {
+            return;
+        }
+        if best_is_accel {
+            self.theta.clear();
+            self.theta.extend_from_slice(&scratch.theta_acc);
+            self.xtheta.clear();
+            self.xtheta.extend_from_slice(&scratch.xtr_acc);
+            self.dval = best_val;
+        } else {
+            self.theta.clear();
+            self.theta.extend(r.iter().map(|&v| v * inv));
+            self.xtheta.clear();
+            self.xtheta.extend(scratch.xtr.iter().map(|&v| v * inv));
+            self.dval = d_res;
+        }
+    }
+}
+
+struct LegacyOut {
+    beta: Vec<f64>,
+    r: Vec<f64>,
+    theta: Vec<f64>,
+    gap: f64,
+    epochs: usize,
+    converged: bool,
+}
+
+/// Faithful port of the pre-penalty `engine::solve` ℓ₁ loop under
+/// `StopRule::DualityGap` with `CdStrategy`: CD epochs over the active
+/// set with the plain soft-threshold, gap checks every `gap_freq`
+/// epochs, hardcoded ℓ₁ primal / dual / Gap Safe screening, in the
+/// exact statement order of the old engine.
+#[allow(clippy::too_many_arguments)]
+fn legacy_cd_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    tol: f64,
+    max_epochs: usize,
+    gap_freq: usize,
+    k: usize,
+    extrapolate: bool,
+    screen: bool,
+) -> LegacyOut {
+    let n = x.n();
+    let p = x.p();
+    let mut norms_sq = vec![0.0; p];
+    for (j, v) in norms_sq.iter_mut().enumerate() {
+        *v = x.col_norm_sq(j);
+    }
+    let col_norms: Vec<f64> = norms_sq.iter().map(|v| v.sqrt()).collect();
+    let mut beta = vec![0.0; p];
+    let mut r = vec![0.0; n];
+    primal::residual(x, y, &beta, &mut r);
+    let mut active: Vec<usize> = (0..p).filter(|&j| norms_sq[j] > 0.0).collect();
+    let mut dualst = LegacyDual::new(n, p, k.max(1), extrapolate, true);
+    let mut scratch = DualScratch::default();
+    scratch.prepare(n, p);
+    let mut screened = vec![false; p];
+    let mut scr_active: Vec<usize> = (0..p).collect();
+    let mut r_check = vec![0.0; n];
+    let mut gap = f64::INFINITY;
+    let mut epochs = 0usize;
+    let mut converged = false;
+    for epoch in 1..=max_epochs {
+        epochs = epoch;
+        // ---- CdStrategy::epoch, verbatim (ℓ₁ soft-threshold) ----
+        for &j in &active {
+            let nrm = norms_sq[j];
+            let g = x.col_dot(j, &r);
+            let old = beta[j];
+            let new = celer::util::soft_threshold(old + g / nrm, lambda / nrm);
+            if new != old {
+                x.col_axpy(j, old - new, &mut r);
+                beta[j] = new;
+            }
+        }
+        if epoch % gap_freq == 0 || epoch == max_epochs {
+            r_check.copy_from_slice(&r);
+            dualst.update(x, y, lambda, &r_check, &mut scratch);
+            let p_val = primal::primal_from_residual(&r_check, &beta, lambda);
+            gap = p_val - dualst.dval;
+            if screen && gap > tol {
+                // ---- ScreeningState::screen, verbatim ----
+                let radius = celer::screening::gap_safe_radius(gap, lambda);
+                let threshold = radius + 1e-12;
+                scr_active.retain(|&j| {
+                    let keep = celer::screening::d_score(dualst.xtheta[j].abs(), col_norms[j])
+                        <= threshold;
+                    if !keep {
+                        screened[j] = true;
+                        if beta[j] != 0.0 {
+                            x.col_axpy(j, beta[j], &mut r);
+                            beta[j] = 0.0;
+                        }
+                    }
+                    keep
+                });
+                active.retain(|&j| !screened[j]);
+            }
+            if gap <= tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+    LegacyOut { beta, r, theta: dualst.theta, gap, epochs, converged }
+}
+
+fn assert_solve_results_bitwise(label: &str, new: &SolveResult, old: &LegacyOut) {
+    assert_eq!(new.epochs, old.epochs, "{label}: epoch count");
+    assert_eq!(new.converged, old.converged, "{label}: converged");
+    assert_eq!(new.gap.to_bits(), old.gap.to_bits(), "{label}: gap bits");
+    assert_eq!(new.beta.len(), old.beta.len());
+    for j in 0..new.beta.len() {
+        assert_eq!(new.beta[j].to_bits(), old.beta[j].to_bits(), "{label}: beta[{j}]");
+    }
+    for i in 0..new.r.len() {
+        assert_eq!(new.r[i].to_bits(), old.r[i].to_bits(), "{label}: r[{i}]");
+    }
+    for i in 0..new.theta.len() {
+        assert_eq!(new.theta[i].to_bits(), old.theta[i].to_bits(), "{label}: theta[{i}]");
+    }
+}
+
+/// Three-way pin: the legacy port, `cd_solve` (whose `P = L1` flows in
+/// implicitly through `solve` → `solve_datafit` → `solve_penalty`), and
+/// an explicit `engine::solve_penalty(.., &L1)` call must agree bit for
+/// bit.
+fn assert_engine_bitwise(x: &DesignMatrix, y: &[f64], ratio: f64, screen: bool, extrapolate: bool) {
+    let lambda = dual::lambda_max(x, y) * ratio;
+    let cfg = CdConfig {
+        tol: 1e-9,
+        max_epochs: 2_000,
+        gap_freq: 10,
+        k: 5,
+        extrapolate,
+        best_dual: true,
+        screen,
+        ..Default::default()
+    };
+    let old = legacy_cd_solve(
+        x, y, lambda, cfg.tol, cfg.max_epochs, cfg.gap_freq, cfg.k, extrapolate, screen,
+    );
+    let new = cd_solve(x, y, lambda, None, &cfg);
+    assert_solve_results_bitwise("cd_solve", &new, &old);
+    let engine_cfg = EngineConfig {
+        tol: cfg.tol,
+        max_epochs: cfg.max_epochs,
+        gap_freq: cfg.gap_freq,
+        k: cfg.k,
+        extrapolate,
+        best_dual: true,
+        screen,
+        trace: false,
+        stop: StopRule::DualityGap,
+    };
+    let mut ws = Workspace::new();
+    let outcome = engine::solve_penalty(
+        x,
+        y,
+        lambda,
+        Init::Zeros,
+        None,
+        &engine_cfg,
+        &mut ws,
+        &mut CdStrategy,
+        &Quadratic,
+        &L1,
+    );
+    let explicit = ws.solve_result(outcome);
+    assert_solve_results_bitwise("solve_penalty(L1)", &explicit, &old);
+}
+
+#[test]
+fn l1_engine_bitwise_matches_prepenalty_dense() {
+    let ds = synth::leukemia_mini(300);
+    for &(screen, extrap) in &[(false, true), (true, true), (false, false), (true, false)] {
+        assert_engine_bitwise(&ds.x, &ds.y, 0.1, screen, extrap);
+    }
+}
+
+#[test]
+fn l1_engine_bitwise_matches_prepenalty_sparse() {
+    let ds = synth::finance_mini(301);
+    for &(screen, extrap) in &[(false, true), (true, true)] {
+        assert_engine_bitwise(&ds.x, &ds.y, 0.2, screen, extrap);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1b. CELER outer-loop pin: P = L1 vs the pre-penalty outer loop
+// ---------------------------------------------------------------------
+
+struct LegacyCelerIter {
+    gap: f64,
+    ws_size: usize,
+    support_size: usize,
+    inner_epochs: usize,
+    dual_winner: usize,
+}
+
+struct LegacyCelerOut {
+    beta: Vec<f64>,
+    r: Vec<f64>,
+    theta: Vec<f64>,
+    gap: f64,
+    epochs: usize,
+    converged: bool,
+    iters: Vec<LegacyCelerIter>,
+}
+
+/// Faithful port of the pre-penalty CELER outer loop (Algorithm 4 with
+/// pruning, stagnation safeguard, fused Eq. 4 rescale and Eq. 13
+/// argmax-of-three) exactly as `celer_solve_penalty`'s `P = L1` arms
+/// hardcoded it before penalties existed. The inner solves reuse the
+/// engine pinned in section 1a, as the original did.
+fn legacy_celer_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    cfg: &CelerConfig,
+) -> LegacyCelerOut {
+    let n = x.n();
+    let p = x.p();
+
+    // init_primal_datafit (quadratic): cached norms, β = 0, r = y − Xβ
+    let mut norms_sq = vec![0.0; p];
+    for (j, v) in norms_sq.iter_mut().enumerate() {
+        *v = x.col_norm_sq(j);
+    }
+    let col_norms: Vec<f64> = norms_sq.iter().map(|v| v.sqrt()).collect();
+    let mut beta = vec![0.0; p];
+    let mut xw = vec![0.0; n];
+    let mut r = vec![0.0; n];
+    primal::glm_state(x, &Quadratic, y, &beta, &mut xw, &mut r);
+    let cache = Quadratic.conj_cache(y);
+
+    // θ⁰ = θ⁰_inner = r(0) / ‖Xᵀr(0)‖_∞
+    let mut r0_buf = Vec::new();
+    let r0 = Quadratic.residual_at_zero(y, &mut r0_buf);
+    let lmax = x.xt_abs_max(r0).max(f64::MIN_POSITIVE);
+    let mut theta: Vec<f64> = r0.iter().map(|&v| v / lmax).collect();
+    let mut theta_inner = theta.clone();
+    let mut theta_res = vec![0.0; n];
+
+    let mut policy = cfg.ws;
+    let s0 = primal::support_size(&beta);
+    if s0 > 0 {
+        policy.p1 = s0;
+    }
+
+    let mut scratch = DualScratch::default();
+    scratch.prepare(n, p);
+    let mut xtheta = vec![0.0; p];
+    let mut xtheta_inner = vec![0.0; p];
+    x.xt_vec(&theta_inner, &mut xtheta_inner);
+    let mut d_scores = vec![0.0; p];
+
+    let mut inner_ws = Workspace::new();
+    let mut prev_ws: Vec<usize> = primal::support(&beta);
+    let mut prev_ws_size = 0usize;
+    let mut gap = f64::INFINITY;
+    let mut converged = false;
+    let mut total_inner_epochs = 0usize;
+    let mut iters: Vec<LegacyCelerIter> = Vec::new();
+
+    let mut prev_gap = f64::INFINITY;
+    for t in 1..=cfg.max_outer {
+        // ---- θ^t = argmax D over {θ^{t-1}, θ_inner^{t-1}, θ_res^t} ----
+        let denom = dual::glm_rescale_to_feasible_into(
+            x,
+            &r,
+            lambda,
+            &Quadratic,
+            &mut scratch.xtr,
+            &mut theta_res,
+        );
+        let winner = dual::glm_best_dual_point(
+            &Quadratic,
+            y,
+            lambda,
+            cache,
+            &[&theta, &theta_inner, &theta_res],
+        );
+        match winner {
+            1 => theta.copy_from_slice(&theta_inner),
+            2 => theta.copy_from_slice(&theta_res),
+            _ => {}
+        }
+        let rank_winner =
+            dual::glm_best_dual_point(&Quadratic, y, lambda, cache, &[&theta_inner, &theta_res]);
+        if rank_winner == 1 {
+            for (o, &v) in xtheta.iter_mut().zip(scratch.xtr.iter()) {
+                *o = v / denom;
+            }
+        } else {
+            xtheta.copy_from_slice(&xtheta_inner);
+        }
+
+        // ---- global gap / stop ----
+        let p_val = primal::glm_primal_value(&Quadratic, y, &xw, &r, &beta, lambda);
+        gap = p_val - Quadratic.dual(y, &theta, lambda, cache);
+        let support = primal::support(&beta);
+        if gap <= cfg.tol {
+            converged = true;
+            iters.push(LegacyCelerIter {
+                gap,
+                ws_size: 0,
+                support_size: support.len(),
+                inner_epochs: 0,
+                dual_winner: winner,
+            });
+            break;
+        }
+
+        // ---- working set ----
+        celer::screening::fill_d_scores(&xtheta, &col_norms, &mut d_scores);
+        let stagnated = t >= 2 && gap > 0.9 * prev_gap;
+        prev_gap = gap;
+        let forced_vec: Vec<usize>;
+        let forced: &[usize] = if policy.prune && !stagnated {
+            &support
+        } else if policy.prune {
+            forced_vec = {
+                let mut f = prev_ws.clone();
+                f.extend(support.iter().copied());
+                f.sort_unstable();
+                f.dedup();
+                f
+            };
+            &forced_vec
+        } else {
+            &prev_ws
+        };
+        let mut pt = policy.next_size(t, prev_ws_size, support.len(), p);
+        if stagnated {
+            pt = pt.max((2 * prev_ws_size).min(p));
+        }
+        let pt = pt.max(forced.len());
+        let ws_idx = build_working_set(&mut d_scores, forced, pt);
+
+        // ---- inner solve on a zero-copy view of X_{W_t} ----
+        let eps_t = if policy.prune { cfg.inner_tol_ratio * gap } else { cfg.tol };
+        let beta_ws: Vec<f64> = ws_idx.iter().map(|&j| beta[j]).collect();
+        let inner_cfg = EngineConfig {
+            tol: eps_t,
+            max_epochs: cfg.max_inner_epochs,
+            gap_freq: cfg.gap_freq,
+            k: cfg.k,
+            extrapolate: cfg.extrapolate,
+            best_dual: true,
+            screen: false,
+            trace: false,
+            stop: StopRule::DualityGap,
+        };
+        let inner_epochs = {
+            let view = DesignView::new(x, &ws_idx, &norms_sq);
+            let outcome = engine::solve(
+                &view,
+                y,
+                lambda,
+                Init::Warm(&beta_ws),
+                None,
+                &inner_cfg,
+                &mut inner_ws,
+                &mut CdStrategy,
+            );
+            outcome.epochs
+        };
+        total_inner_epochs += inner_epochs;
+
+        // ---- lift the subproblem solution back ----
+        beta.fill(0.0);
+        for (i, &j) in ws_idx.iter().enumerate() {
+            beta[j] = inner_ws.beta[i];
+        }
+        r.copy_from_slice(&inner_ws.r);
+        xw.copy_from_slice(&inner_ws.xw);
+
+        let s = x.xt_vec_abs_max(&inner_ws.dual.theta, &mut xtheta_inner).max(1.0);
+        let inv_s = 1.0 / s;
+        theta_inner.clear();
+        theta_inner.extend(inner_ws.dual.theta.iter().map(|&v| v * inv_s));
+        for v in xtheta_inner.iter_mut() {
+            *v *= inv_s;
+        }
+
+        iters.push(LegacyCelerIter {
+            gap,
+            ws_size: ws_idx.len(),
+            support_size: support.len(),
+            inner_epochs,
+            dual_winner: winner,
+        });
+        prev_ws_size = ws_idx.len();
+        prev_ws = ws_idx;
+    }
+    LegacyCelerOut { beta, r, theta, gap, epochs: total_inner_epochs, converged, iters }
+}
+
+/// Pin `celer_solve_on` (implicit `P = L1`) AND the explicit
+/// `celer_penalty_solve_on_ws(.., &L1, ..)` entry against the legacy
+/// port — totals, final state, and every outer iteration's record.
+fn assert_celer_bitwise(x: &DesignMatrix, y: &[f64], ratio: f64, cfg: &CelerConfig) {
+    let lambda = dual::lambda_max(x, y) * ratio;
+    let old = legacy_celer_solve(x, y, lambda, cfg);
+    let new = celer_solve_on(x, y, lambda, None, cfg);
+    let mut ws = Workspace::new();
+    let explicit = celer_penalty_solve_on_ws(x, y, lambda, None, &L1, cfg, &mut ws);
+    for (label, out) in
+        [("celer_solve_on", &new), ("celer_penalty_solve_on_ws(L1)", &explicit)]
+    {
+        assert_eq!(out.result.epochs, old.epochs, "{label}: total inner epochs");
+        assert_eq!(out.result.converged, old.converged, "{label}: converged");
+        assert_eq!(out.result.gap.to_bits(), old.gap.to_bits(), "{label}: gap bits");
+        for j in 0..old.beta.len() {
+            assert_eq!(out.result.beta[j].to_bits(), old.beta[j].to_bits(), "{label}: beta[{j}]");
+        }
+        for i in 0..old.r.len() {
+            assert_eq!(out.result.r[i].to_bits(), old.r[i].to_bits(), "{label}: r[{i}]");
+        }
+        for i in 0..old.theta.len() {
+            assert_eq!(out.result.theta[i].to_bits(), old.theta[i].to_bits(), "{label}: theta[{i}]");
+        }
+        assert_eq!(out.iterations.len(), old.iters.len(), "{label}: outer iteration count");
+        for (it, leg) in out.iterations.iter().zip(&old.iters) {
+            let t = it.t;
+            assert_eq!(it.gap.to_bits(), leg.gap.to_bits(), "{label}: t={t} gap");
+            assert_eq!(it.ws_size, leg.ws_size, "{label}: t={t} ws_size");
+            assert_eq!(it.support_size, leg.support_size, "{label}: t={t} support");
+            assert_eq!(it.inner_epochs, leg.inner_epochs, "{label}: t={t} inner epochs");
+            assert_eq!(it.dual_winner, leg.dual_winner, "{label}: t={t} dual winner");
+        }
+    }
+}
+
+#[test]
+fn l1_celer_bitwise_matches_prepenalty_dense() {
+    let ds = synth::leukemia_mini(302);
+    assert_celer_bitwise(&ds.x, &ds.y, 0.1, &CelerConfig { tol: 1e-8, ..Default::default() });
+    assert_celer_bitwise(&ds.x, &ds.y, 0.1, &CelerConfig { tol: 1e-8, ..CelerConfig::safe() });
+}
+
+#[test]
+fn l1_celer_bitwise_matches_prepenalty_sparse() {
+    let ds = synth::finance_mini(303);
+    assert_celer_bitwise(&ds.x, &ds.y, 0.2, &CelerConfig { tol: 1e-8, ..Default::default() });
+}
+
+// ---------------------------------------------------------------------
+// 2. penalty conformance suite (every impl, dense + CSC)
+// ---------------------------------------------------------------------
+
+fn engine_cfg(tol: f64, screen: bool) -> EngineConfig {
+    EngineConfig {
+        tol,
+        max_epochs: 100_000,
+        gap_freq: 10,
+        k: 5,
+        extrapolate: true,
+        best_dual: true,
+        screen,
+        trace: false,
+        stop: StopRule::DualityGap,
+    }
+}
+
+fn solve_pen<P: Penalty>(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    pen: &P,
+    tol: f64,
+    screen: bool,
+) -> (SolveResult, Workspace) {
+    let mut ws = Workspace::new();
+    let outcome = engine::solve_penalty(
+        x,
+        y,
+        lambda,
+        Init::Zeros,
+        None,
+        &engine_cfg(tol, screen),
+        &mut ws,
+        &mut CdStrategy,
+        &Quadratic,
+        pen,
+    );
+    let res = ws.solve_result(outcome);
+    (res, ws)
+}
+
+/// `b = prox_{λΩ/nrm}(u)` must minimize `h(c) = ½·nrm·‖c−u‖² + Ω_λ(c)`:
+/// no coordinate nudge, rescale, zeroing or reversion to `u` may beat
+/// it. For separable penalties the prox fixed point must also be a
+/// zero of the KKT residual `subdiff_distance(j, nrm·(u_j−b_j), b_j)`.
+fn check_prox_optimality<P: Penalty>(pen: &P, p: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let h = |c: &[f64], u: &[f64], lambda: f64, nrm: f64| -> f64 {
+        let mut q = 0.0;
+        for (ci, ui) in c.iter().zip(u.iter()) {
+            q += (ci - ui) * (ci - ui);
+        }
+        0.5 * nrm * q + pen.value(lambda, c)
+    };
+    for _ in 0..4 {
+        let u: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+        let lambda = 0.3 + rng.uniform();
+        let nrm = 0.5 + 2.0 * rng.uniform();
+        let mut b = vec![0.0; p];
+        pen.prox_vec(&u, lambda, nrm, &mut b);
+        let hb = h(&b, &u, lambda, nrm);
+        let check = |c: &[f64]| {
+            let hc = h(c, &u, lambda, nrm);
+            assert!(
+                hb <= hc + 1e-9,
+                "prox is not the minimizer: h(b) = {hb} > h(c) = {hc}"
+            );
+        };
+        for j in 0..p {
+            for delta in [-0.3, -1e-2, -1e-4, 1e-4, 1e-2, 0.3] {
+                let mut c = b.clone();
+                c[j] += delta;
+                check(&c);
+            }
+            let mut c = b.clone();
+            c[j] = 0.0;
+            check(&c);
+        }
+        check(&u);
+        check(&b.iter().map(|&v| 0.9 * v).collect::<Vec<_>>());
+        check(&b.iter().map(|&v| 1.1 * v).collect::<Vec<_>>());
+        check(&vec![0.0; p]);
+        if P::SEPARABLE {
+            for j in 0..p {
+                let g = nrm * (u[j] - b[j]);
+                let d = pen.subdiff_distance(j, g, b[j], lambda);
+                assert!(d <= 1e-8, "prox/subdiff mismatch at j={j}: kkt residual {d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prox_minimizes_its_objective_for_every_penalty() {
+    let p = 12;
+    check_prox_optimality(&L1, p, 500);
+    check_prox_optimality(&ElasticNet::new(0.5), p, 501);
+    check_prox_optimality(&ElasticNet::new(0.9), p, 502);
+    let mut w: Vec<f64> = (0..p).map(|j| 0.5 + 0.25 * j as f64).collect();
+    w[3] = 0.0;
+    w[7] = f64::INFINITY;
+    check_prox_optimality(&WeightedL1::new(w), p, 503);
+    check_prox_optimality(&GroupLasso::new(4), p, 504);
+}
+
+/// Indicator-dual penalties: any u with `Ω^D(u) ≤ λ` satisfies the
+/// Fenchel inequality `⟨u, β⟩ ≤ λ·Ω(β)` for every β — `dual_norm` and
+/// `value` must be consistent duals of one another.
+fn check_fenchel_indicator<P: Penalty>(pen: &P, p: usize, seed: u64) {
+    assert!(P::INDICATOR_DUAL);
+    let mut rng = Rng::new(seed);
+    for _ in 0..8 {
+        let mut u: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        for (j, v) in u.iter_mut().enumerate() {
+            if !pen.is_penalized(j) {
+                *v = 0.0;
+            }
+        }
+        let lambda = 0.2 + rng.uniform();
+        let dn = pen.dual_norm(lambda, &u);
+        if dn == 0.0 {
+            continue;
+        }
+        let scale = lambda / dn * (1.0 - 1e-12);
+        for v in u.iter_mut() {
+            *v *= scale;
+        }
+        let beta: Vec<f64> = (0..p).map(|_| rng.normal() * 3.0).collect();
+        let lhs = dot(&u, &beta);
+        let rhs = pen.value(lambda, &beta);
+        assert!(lhs <= rhs + 1e-9, "Fenchel violated: ⟨u,β⟩ = {lhs} > λΩ(β) = {rhs}");
+    }
+}
+
+#[test]
+fn dual_norm_and_value_are_fenchel_consistent() {
+    let p = 16;
+    check_fenchel_indicator(&L1, p, 510);
+    let mut w: Vec<f64> = (0..p).map(|j| 0.4 + 0.2 * j as f64).collect();
+    w[5] = 0.0;
+    check_fenchel_indicator(&WeightedL1::new(w), p, 511);
+    check_fenchel_indicator(&GroupLasso::new(4), p, 512);
+}
+
+#[test]
+fn elastic_net_conjugate_matches_numeric_maximization() {
+    // ω*(v) = max_b (v·b − α|b| − ½(1−α)b²), computed on a fine grid.
+    let pen = ElasticNet::new(0.6);
+    let a = 0.6;
+    let lambda = 0.8;
+    let mut rng = Rng::new(513);
+    for _ in 0..12 {
+        let v = rng.normal() * 2.0;
+        let analytic = pen.conjugate(lambda, &[v], 1.0);
+        let span = (v.abs() + 1.0) / (1.0 - a);
+        let steps = 4000;
+        let mut best = f64::NEG_INFINITY;
+        for i in 0..=steps {
+            let b = -span + 2.0 * span * i as f64 / steps as f64;
+            best = best.max(v * b - a * b.abs() - 0.5 * (1.0 - a) * b * b);
+        }
+        let numeric = lambda * best.max(0.0);
+        assert!(
+            (analytic - numeric).abs() <= 1e-5 * (1.0 + numeric.abs()),
+            "ω*({v}) analytic {analytic} vs numeric {numeric}"
+        );
+        // the scale parameter folds into the argument exactly
+        assert_eq!(
+            pen.conjugate(lambda, &[v], 2.0).to_bits(),
+            pen.conjugate(lambda, &[2.0 * v], 1.0).to_bits()
+        );
+    }
+}
+
+#[test]
+fn elastic_net_fenchel_young_holds_with_equality_at_the_subgradient() {
+    let pen = ElasticNet::new(0.7);
+    let a = 0.7;
+    let lambda = 1.3;
+    let mut rng = Rng::new(514);
+    for _ in 0..8 {
+        let beta: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        // arbitrary u: value + conjugate ≥ λ·⟨u, β⟩
+        let u: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let slack = pen.value(lambda, &beta) + pen.conjugate(lambda, &u, 1.0)
+            - lambda * dot(&u, &beta);
+        assert!(slack >= -1e-10, "Fenchel–Young violated by {slack}");
+        // u* ∈ ∂ω(β): equality up to roundoff
+        let ustar: Vec<f64> =
+            beta.iter().map(|&b| a * b.signum() + (1.0 - a) * b).collect();
+        let tight = pen.value(lambda, &beta) + pen.conjugate(lambda, &ustar, 1.0)
+            - lambda * dot(&ustar, &beta);
+        assert!(tight.abs() <= 1e-9, "Fenchel–Young not tight at ∂ω(β): {tight}");
+    }
+}
+
+#[test]
+fn l1_penalty_lambda_max_is_bitwise_the_historical_lambda_max() {
+    for ds in [synth::leukemia_mini(515), synth::finance_mini(516)] {
+        assert_eq!(
+            dual::penalty_lambda_max(&ds.x, &ds.y, &L1).to_bits(),
+            dual::lambda_max(&ds.x, &ds.y).to_bits()
+        );
+    }
+}
+
+/// λ ≥ λ_max must certify β̂ = 0; λ = 0.8·λ_max must select features.
+fn check_lambda_max<P: Penalty>(ds: &SynthDataset, pen: &P) {
+    let lmax = dual::penalty_lambda_max(&ds.x, &ds.y, pen);
+    assert!(lmax > 0.0);
+    let (at, _) = solve_pen(&ds.x, &ds.y, lmax * 1.000_000_1, pen, 1e-10, false);
+    assert!(at.converged, "{}: no certificate at λ_max", ds.name);
+    assert_eq!(at.support_size(), 0, "{}: nonzero β̂ at λ ≥ λ_max", ds.name);
+    let (below, _) = solve_pen(&ds.x, &ds.y, lmax * 0.8, pen, 1e-8, false);
+    assert!(below.converged, "{}: below λ_max", ds.name);
+    assert!(below.support_size() > 0, "{}: empty model below λ_max", ds.name);
+}
+
+#[test]
+fn lambda_max_is_the_empty_model_threshold_for_every_penalty() {
+    for ds in [synth::leukemia_mini(400), synth::finance_mini(401)] {
+        let mut rng = Rng::new(4000);
+        let w: Vec<f64> = (0..ds.x.p()).map(|_| 0.5 + 1.5 * rng.uniform()).collect();
+        check_lambda_max(&ds, &L1);
+        check_lambda_max(&ds, &ElasticNet::new(0.5));
+        check_lambda_max(&ds, &WeightedL1::new(w));
+        check_lambda_max(&ds, &GroupLasso::new(4));
+    }
+}
+
+/// Gap Safe safety: every feature the screened run discards must be
+/// zero in a tight unscreened reference, and screening must not move
+/// the objective beyond the certification bound.
+fn check_gap_safe_safety<P: Penalty>(ds: &SynthDataset, pen: &P) {
+    let lambda = 0.25 * dual::penalty_lambda_max(&ds.x, &ds.y, pen);
+    let tol = 1e-8;
+    let (loose, ws) = solve_pen(&ds.x, &ds.y, lambda, pen, tol, true);
+    let (tight, _) = solve_pen(&ds.x, &ds.y, lambda, pen, 1e-12, false);
+    assert!(loose.converged && tight.converged, "{}", ds.name);
+    assert!(ws.screening.n_screened() > 0, "{}: screening never fired", ds.name);
+    for j in 0..ds.x.p() {
+        if ws.screening.is_screened(j) {
+            assert!(
+                tight.beta[j].abs() <= 1e-8,
+                "{}: screened feature {j} is active in the tight reference ({})",
+                ds.name,
+                tight.beta[j]
+            );
+        }
+    }
+    let obj = |res: &SolveResult| 0.5 * dot(&res.r, &res.r) + pen.value(lambda, &res.beta);
+    let (ol, ot) = (obj(&loose), obj(&tight));
+    assert!((ol - ot).abs() <= 2.0 * tol, "{}: {ol} vs {ot}", ds.name);
+}
+
+#[test]
+fn gap_safe_screening_is_safe_for_every_penalty() {
+    for ds in [synth::leukemia_mini(402), synth::finance_mini(403)] {
+        let mut rng = Rng::new(4020);
+        let w: Vec<f64> = (0..ds.x.p()).map(|_| 0.5 + 1.5 * rng.uniform()).collect();
+        check_gap_safe_safety(&ds, &L1);
+        check_gap_safe_safety(&ds, &ElasticNet::new(0.5));
+        check_gap_safe_safety(&ds, &WeightedL1::new(w));
+        check_gap_safe_safety(&ds, &GroupLasso::new(4));
+    }
+}
+
+#[test]
+fn celer_outer_loop_matches_engine_for_separable_penalties() {
+    // the working-set path and the full-design engine agree on the
+    // ε-certified objective for the non-ℓ₁ separable penalties
+    let tol = 1e-9;
+    for (ds, alpha) in [(synth::leukemia_mini(406), 0.5), (synth::finance_mini(407), 0.7)] {
+        let pen = ElasticNet::new(alpha);
+        let lambda = 0.3 * dual::penalty_lambda_max(&ds.x, &ds.y, &pen);
+        let mut ws = Workspace::new();
+        let cel = celer_penalty_solve_on_ws(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &pen,
+            &CelerConfig { tol, ..Default::default() },
+            &mut ws,
+        );
+        let (eng, _) = solve_pen(&ds.x, &ds.y, lambda, &pen, tol, false);
+        assert!(cel.result.converged && eng.converged, "{}", ds.name);
+        assert!(cel.result.gap <= tol && eng.gap <= tol);
+        let obj = |beta: &[f64], r: &[f64]| 0.5 * dot(r, r) + pen.value(lambda, beta);
+        let (oc, oe) = (obj(&cel.result.beta, &cel.result.r), obj(&eng.beta, &eng.r));
+        assert!((oc - oe).abs() <= 2.0 * tol, "{}: {oc} vs {oe}", ds.name);
+    }
+    {
+        let ds = synth::leukemia_mini(406);
+        let mut rng = Rng::new(4060);
+        let w: Vec<f64> = (0..ds.x.p()).map(|_| 0.5 + 1.5 * rng.uniform()).collect();
+        let pen = WeightedL1::new(w);
+        let lambda = 0.3 * dual::penalty_lambda_max(&ds.x, &ds.y, &pen);
+        let mut ws = Workspace::new();
+        let cel = celer_penalty_solve_on_ws(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &pen,
+            &CelerConfig { tol, ..Default::default() },
+            &mut ws,
+        );
+        let (eng, _) = solve_pen(&ds.x, &ds.y, lambda, &pen, tol, false);
+        assert!(cel.result.converged && eng.converged);
+        let obj = |beta: &[f64], r: &[f64]| 0.5 * dot(r, r) + pen.value(lambda, beta);
+        let (oc, oe) = (obj(&cel.result.beta, &cel.result.r), obj(&eng.beta, &eng.r));
+        assert!((oc - oe).abs() <= 2.0 * tol, "wlasso: {oc} vs {oe}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. elastic net ≡ Lasso on the augmented design [X; √(λ(1−α))·I]
+// ---------------------------------------------------------------------
+
+/// See `prop_batch_path.rs`: two ε-certified solutions agree on the
+/// support only at their own agreement resolution.
+fn assert_same_support(beta_s: &[f64], beta_b: &[f64], what: &str) {
+    let delta = beta_s
+        .iter()
+        .zip(beta_b.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(delta <= 1e-3, "{what}: solutions diverge coefficientwise ({delta})");
+    let thr = (10.0 * delta).max(1e-9);
+    let sup = |beta: &[f64]| -> Vec<usize> {
+        beta.iter()
+            .enumerate()
+            .filter(|(_, &v)| v.abs() > thr)
+            .map(|(j, _)| j)
+            .collect()
+    };
+    assert_eq!(sup(beta_s), sup(beta_b), "{what}: supports differ (thr {thr:.1e})");
+}
+
+#[test]
+fn elastic_net_equals_lasso_on_the_augmented_design() {
+    let ds = synth::leukemia_mini(404);
+    let (n, p) = (ds.x.n(), ds.x.p());
+    let tol = 1e-10;
+    for alpha in [0.5, 0.8] {
+        let pen = ElasticNet::new(alpha);
+        let lambda = 0.3 * dual::penalty_lambda_max(&ds.x, &ds.y, &pen);
+        let mut ws = Workspace::new();
+        let en = celer_penalty_solve_on_ws(
+            &ds.x,
+            &ds.y,
+            lambda,
+            None,
+            &pen,
+            &CelerConfig { tol, ..Default::default() },
+            &mut ws,
+        );
+        assert!(en.result.converged, "α={alpha}: EN gap {}", en.result.gap);
+
+        // augmented design: column j is [x_j; √(λ(1−α))·e_j]
+        let ridge = (lambda * (1.0 - alpha)).sqrt();
+        let mut xcols = Vec::new();
+        let all: Vec<usize> = (0..p).collect();
+        ds.x.gather_dense(&all, &mut xcols);
+        let n_aug = n + p;
+        let mut aug = vec![0.0; n_aug * p];
+        for j in 0..p {
+            aug[j * n_aug..j * n_aug + n].copy_from_slice(&xcols[j * n..(j + 1) * n]);
+            aug[j * n_aug + n + j] = ridge;
+        }
+        let x_aug = DesignMatrix::Dense(DenseMatrix::from_col_major(n_aug, p, aug));
+        let mut y_aug = vec![0.0; n_aug];
+        y_aug[..n].copy_from_slice(&ds.y);
+        let lasso = cd_solve(
+            &x_aug,
+            &y_aug,
+            lambda * alpha,
+            None,
+            &CdConfig { tol, ..Default::default() },
+        );
+        assert!(lasso.converged, "α={alpha}: augmented Lasso gap {}", lasso.gap);
+
+        // both certify the SAME objective: the augmented Lasso primal
+        // at λα is exactly the elastic-net primal on the original X
+        let en_obj = |beta: &[f64]| {
+            let mut r = vec![0.0; n];
+            primal::residual(&ds.x, &ds.y, beta, &mut r);
+            0.5 * dot(&r, &r) + pen.value(lambda, beta)
+        };
+        let o_en = en_obj(&en.result.beta);
+        let o_aug = en_obj(&lasso.beta);
+        assert!(
+            (o_en - o_aug).abs() <= 2.0 * tol + 1e-12,
+            "α={alpha}: EN objective {o_en} vs augmented {o_aug}"
+        );
+        assert_same_support(&en.result.beta, &lasso.beta, &format!("α={alpha}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. weighted-ℓ₁ edge weights: w = 0 and w = ∞
+// ---------------------------------------------------------------------
+
+#[test]
+fn weighted_l1_zero_weight_is_never_screened_and_infinite_weight_is_zero() {
+    let ds = synth::leukemia_mini(405);
+    let p = ds.x.p();
+    let mut w = vec![1.0; p];
+    w[0] = 0.0; // unpenalized: free coefficient, never screened
+    w[1] = f64::INFINITY; // hard-zeroed: exactly 0, screened out
+    let pen = WeightedL1::new(w);
+    let lambda = 0.3 * dual::penalty_lambda_max(&ds.x, &ds.y, &pen);
+    let tol = 1e-9;
+    let (res, ws) = solve_pen(&ds.x, &ds.y, lambda, &pen, tol, true);
+    assert!(res.converged, "gap {}", res.gap);
+    assert!(!ws.screening.is_screened(0), "w = 0 feature was screened");
+    assert!(ws.screening.n_screened() > 0, "screening never fired");
+    assert_eq!(res.beta[1], 0.0, "w = ∞ feature must be exactly zero");
+    assert!(res.beta[0] != 0.0, "w = 0 feature should enter freely");
+    // unpenalized ⇒ the KKT condition is x_0ᵀr = 0 (lenient: the dual
+    // value ignores the w = 0 conjugate, so the gap slightly understates
+    // suboptimality near the optimum)
+    assert!(ds.x.col_dot(0, &res.r).abs() < 1e-3, "x_0ᵀr = {}", ds.x.col_dot(0, &res.r));
+
+    // same story through the CELER working-set path
+    let mut ws2 = Workspace::new();
+    let cel = celer_penalty_solve_on_ws(
+        &ds.x,
+        &ds.y,
+        lambda,
+        None,
+        &pen,
+        &CelerConfig { tol, ..Default::default() },
+        &mut ws2,
+    );
+    assert!(cel.result.converged);
+    assert_eq!(cel.result.beta[1], 0.0);
+    assert!(cel.result.beta[0] != 0.0);
+    let obj = |beta: &[f64], r: &[f64]| 0.5 * dot(r, r) + pen.value(lambda, beta);
+    let (oc, oe) = (obj(&cel.result.beta, &cel.result.r), obj(&res.beta, &res.r));
+    assert!((oc - oe).abs() <= 2.0 * tol, "celer {oc} vs engine {oe}");
+}
