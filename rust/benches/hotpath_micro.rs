@@ -472,6 +472,7 @@ fn bench_mt_inner_solve(tag: &str, x: &DesignMatrix, iters: usize) {
         screen: false,
         trace: false,
         stop: StopRule::DualityGap,
+        ..EngineConfig::default()
     };
     let mut ws = BlockWorkspace::new();
     bench::time(&format!("mt/ws_inner_materialized_{tag}"), iters, || {

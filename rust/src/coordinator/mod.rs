@@ -31,7 +31,10 @@ pub mod scheduler;
 
 use crate::data::synth::{self, SynthDataset};
 use crate::solvers::engine::Workspace;
-use crate::solvers::path::{lambda_grid, run_path_with_workspace, PathResult, PathSolver};
+use crate::solvers::path::{
+    lambda_grid, run_path_budgeted, run_path_with_workspace, PathResult, PathSolver,
+};
+use crate::util::error::SolveError;
 
 /// Named dataset loader (synthetic stand-ins for the paper's datasets —
 /// see DESIGN.md §4; real svmlight files can be loaded via `data::svmlight`).
@@ -60,24 +63,64 @@ pub struct PathJob {
     pub store_betas: bool,
 }
 
+/// Resolve every job's solver name up front, so workers never re-parse
+/// (and never need a "can't happen" unwrap on a name that validated
+/// moments earlier).
+fn resolve_jobs(jobs: Vec<PathJob>) -> Result<Vec<(PathSolver, PathJob)>, SolveError> {
+    jobs.into_iter()
+        .map(|j| match PathSolver::by_name(&j.solver_name, j.tol) {
+            Some(s) => Ok((s, j)),
+            None => Err(SolveError::BadConfig {
+                what: format!("unknown solver {:?}", j.solver_name),
+            }),
+        })
+        .collect()
+}
+
 /// Run a grid of path jobs on one dataset, parallel across cells.
 pub fn run_path_jobs(
     ds: &SynthDataset,
     jobs: Vec<PathJob>,
     workers: usize,
 ) -> anyhow::Result<Vec<PathResult>> {
-    for j in &jobs {
-        anyhow::ensure!(
-            PathSolver::by_name(&j.solver_name, j.tol).is_some(),
-            "unknown solver {}",
-            j.solver_name
-        );
-    }
-    let results = scheduler::run_parallel_with_state(jobs, workers, Workspace::new, |ws, job| {
-        let solver = PathSolver::by_name(&job.solver_name, job.tol).expect("validated");
-        run_path_with_workspace(&ds.x, &ds.y, &job.grid, &solver, job.store_betas, ws)
-    });
+    let resolved = resolve_jobs(jobs)?;
+    let results =
+        scheduler::run_parallel_with_state(resolved, workers, Workspace::new, |ws, cell| {
+            let (solver, job) = (&cell.0, &cell.1);
+            run_path_with_workspace(&ds.x, &ds.y, &job.grid, solver, job.store_betas, ws)
+        });
     Ok(results)
+}
+
+/// [`run_path_jobs`] with the full guardrail stack: typed validation of
+/// the dataset and every job before any epoch runs, per-job panic
+/// retry / timeout / quarantine from
+/// [`scheduler::run_parallel_robust`], and an optional per-job
+/// wall-clock budget (`max_seconds`) under which each path returns its
+/// partial-but-certified prefix. One poisoned cell surfaces as an `Err`
+/// in its slot; the rest of the grid still completes.
+pub fn run_path_jobs_robust(
+    ds: &SynthDataset,
+    jobs: Vec<PathJob>,
+    workers: usize,
+    policy: &scheduler::RobustPolicy,
+    max_seconds: Option<f64>,
+) -> Result<Vec<Result<PathResult, SolveError>>, SolveError> {
+    crate::data::validate::validate_problem(&ds.x, &ds.y)?;
+    for j in &jobs {
+        crate::data::validate::validate_grid(&j.grid)?;
+    }
+    let resolved = resolve_jobs(jobs)?;
+    Ok(scheduler::run_parallel_robust(
+        resolved,
+        workers,
+        policy,
+        Workspace::new,
+        |ws, cell| {
+            let (solver, job) = (&cell.0, &cell.1);
+            run_path_budgeted(&ds.x, &ds.y, &job.grid, solver, job.store_betas, max_seconds, ws)
+        },
+    ))
 }
 
 /// Convenience: the paper's standard grid for a dataset (λmax → λmax/ratio).
@@ -271,6 +314,78 @@ mod tests {
             store_betas: false,
         }];
         assert!(run_path_jobs(&ds, jobs, 1).is_err());
+    }
+
+    #[test]
+    fn robust_jobs_match_plain_jobs_and_type_errors() {
+        let ds = load_dataset("leukemia-mini", 3).unwrap();
+        let grid = standard_grid(&ds, 10.0, 4);
+        let job = |name: &str| PathJob {
+            solver_name: name.to_string(),
+            tol: 1e-6,
+            grid: grid.clone(),
+            store_betas: false,
+        };
+        let plain = run_path_jobs(&ds, vec![job("celer-prune")], 1).unwrap();
+        let robust = run_path_jobs_robust(
+            &ds,
+            vec![job("celer-prune")],
+            1,
+            &scheduler::RobustPolicy::default(),
+            None,
+        )
+        .unwrap();
+        let r = robust[0].as_ref().unwrap();
+        assert_eq!(r.steps.len(), plain[0].steps.len());
+        for (a, b) in r.steps.iter().zip(&plain[0].steps) {
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "robust wrapper changes no bits");
+        }
+        // unknown solver: typed error before any epoch
+        let err = run_path_jobs_robust(
+            &ds,
+            vec![job("nope")],
+            1,
+            &scheduler::RobustPolicy::default(),
+            None,
+        )
+        .unwrap_err();
+        assert!(matches!(err, SolveError::BadConfig { .. }), "{err:?}");
+        // bad grid: typed error before any epoch
+        let mut bad = job("celer-prune");
+        bad.grid = vec![f64::NAN];
+        let err = run_path_jobs_robust(
+            &ds,
+            vec![bad],
+            1,
+            &scheduler::RobustPolicy::default(),
+            None,
+        )
+        .unwrap_err();
+        assert!(matches!(err, SolveError::BadGrid { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn robust_jobs_budget_truncates_but_certifies() {
+        // An already-expired budget returns empty (or prefix) paths —
+        // never an error, never an uncertified step.
+        let ds = load_dataset("leukemia-mini", 4).unwrap();
+        let grid = standard_grid(&ds, 10.0, 4);
+        let jobs = vec![PathJob {
+            solver_name: "celer-prune".into(),
+            tol: 1e-6,
+            grid,
+            store_betas: false,
+        }];
+        let out = run_path_jobs_robust(
+            &ds,
+            jobs,
+            1,
+            &scheduler::RobustPolicy::default(),
+            Some(0.0),
+        )
+        .unwrap();
+        let r = out[0].as_ref().unwrap();
+        assert!(r.steps.is_empty(), "expired budget ⇒ empty prefix");
     }
 
     #[test]

@@ -21,6 +21,8 @@
 //! identical under every policy: reductions use a fixed shard grid
 //! (see `util::par`), so the schedule never changes the bits.
 
+use crate::util::error::SolveError;
+use crate::util::fault::FaultPlan;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -94,6 +96,110 @@ where
         .collect()
 }
 
+/// Fault policy for [`run_parallel_robust`]: per-job soft timeout,
+/// bounded retry on panic, and the fault-injection hooks the harness
+/// tests use to provoke both.
+#[derive(Debug, Clone)]
+pub struct RobustPolicy {
+    /// Per-attempt wall-clock limit. A job whose attempt runs longer
+    /// reports [`SolveError::JobTimeout`] (the attempt is not preempted
+    /// — the scheduler is cooperative — but its result is discarded so
+    /// a stalled cell cannot masquerade as a certified one).
+    pub timeout_seconds: Option<f64>,
+    /// Panicking jobs are retried on a rebuilt worker state up to this
+    /// many times before being quarantined as
+    /// [`SolveError::JobPoisoned`].
+    pub max_retries: usize,
+    /// Injection hooks polled inside every job attempt (inert by
+    /// default and without the `fault-inject` feature).
+    pub faults: FaultPlan,
+}
+
+impl Default for RobustPolicy {
+    fn default() -> Self {
+        RobustPolicy { timeout_seconds: None, max_retries: 1, faults: FaultPlan::none() }
+    }
+}
+
+fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// [`run_parallel_with_state`] hardened against misbehaving jobs: every
+/// attempt runs under `catch_unwind`, a panicking job is retried (with
+/// 1 ms · 2^attempt backoff) on a freshly rebuilt worker state — the
+/// panicked state is discarded, it may hold torn buffers — and a job
+/// that exhausts its retries is quarantined as
+/// [`SolveError::JobPoisoned`] without taking the rest of the grid down
+/// with it. Slot order is preserved; healthy jobs are unaffected.
+pub fn run_parallel_robust<I, O, S, F, G>(
+    items: Vec<I>,
+    workers: usize,
+    policy: &RobustPolicy,
+    init: G,
+    f: F,
+) -> Vec<Result<O, SolveError>>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(&mut S, &I) -> O + Sync,
+    G: Fn() -> S + Sync,
+{
+    let policy = policy.clone();
+    let init = &init;
+    let f = &f;
+    let indexed: Vec<(usize, I)> = items.into_iter().enumerate().collect();
+    run_parallel_with_state(
+        indexed,
+        workers,
+        || Some(init()),
+        move |state: &mut Option<S>, job_item| {
+            let (job, item) = (job_item.0, &job_item.1);
+            let attempts = policy.max_retries + 1;
+            let mut detail = String::new();
+            for attempt in 0..attempts {
+                if attempt > 0 {
+                    // Exponential backoff before a retry: transient
+                    // contention (e.g. an allocator hiccup) gets a
+                    // moment to clear.
+                    let ms = 1u64 << (attempt - 1).min(10) as u32;
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                let st = state.get_or_insert_with(init);
+                let t0 = std::time::Instant::now();
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    policy.faults.maybe_panic_shard();
+                    policy.faults.maybe_delay_worker();
+                    f(st, item)
+                }));
+                let seconds = t0.elapsed().as_secs_f64();
+                match run {
+                    Ok(out) => {
+                        if let Some(limit) = policy.timeout_seconds {
+                            if seconds > limit {
+                                return Err(SolveError::JobTimeout { job, seconds });
+                            }
+                        }
+                        return Ok(out);
+                    }
+                    Err(payload) => detail = panic_detail(payload.as_ref()),
+                }
+                // The state a panic unwound through may be torn
+                // (half-filled buffers, inconsistent lengths): rebuild
+                // from scratch before the retry.
+                *state = None;
+            }
+            Err(SolveError::JobPoisoned { job, attempts, detail })
+        },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +264,91 @@ mod tests {
         let here = crate::util::par::in_serial_scope();
         let single = run_parallel(vec![()], 1, |_| crate::util::par::in_serial_scope());
         assert_eq!(single[0], here);
+    }
+
+    #[test]
+    fn robust_healthy_jobs_pass_through() {
+        let out =
+            run_parallel_robust(vec![1, 2, 3], 2, &RobustPolicy::default(), || (), |_, &i| i * 2);
+        let vals: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn robust_quarantines_always_panicking_job() {
+        let policy = RobustPolicy { max_retries: 2, ..Default::default() };
+        let out = run_parallel_robust(vec![0usize, 1, 2], 2, &policy, || (), |_, &i| {
+            if i == 1 {
+                panic!("job 1 always dies");
+            }
+            i
+        });
+        assert_eq!(out[0].as_ref().unwrap(), &0);
+        assert_eq!(out[2].as_ref().unwrap(), &2);
+        match &out[1] {
+            Err(SolveError::JobPoisoned { job, attempts, detail }) => {
+                assert_eq!((*job, *attempts), (1, 3));
+                assert!(detail.contains("always dies"), "{detail}");
+            }
+            other => panic!("expected JobPoisoned, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn robust_retries_transient_panic_on_fresh_state() {
+        let tries = AtomicUsize::new(0);
+        let out = run_parallel_robust(
+            vec![7usize],
+            1,
+            &RobustPolicy::default(),
+            || 0usize,
+            |state, &i| {
+                *state += 1;
+                if tries.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("transient");
+                }
+                (i, *state)
+            },
+        );
+        // retried once, and the retry ran on a rebuilt state (its
+        // per-state counter restarted at 1)
+        assert_eq!(out[0].as_ref().unwrap(), &(7, 1));
+        assert_eq!(tries.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn robust_timeout_flags_slow_job() {
+        let policy = RobustPolicy { timeout_seconds: Some(0.01), ..Default::default() };
+        let out = run_parallel_robust(vec![0usize, 1], 2, &policy, || (), |_, &i| {
+            if i == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            i
+        });
+        assert!(matches!(out[0], Err(SolveError::JobTimeout { job: 0, .. })), "{:?}", out[0]);
+        assert_eq!(out[1].as_ref().unwrap(), &1);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn robust_recovers_injected_shard_panic() {
+        let faults = crate::util::fault::FaultPlan::armed();
+        faults.arm_shard_panic();
+        let policy = RobustPolicy { faults, ..Default::default() };
+        let out = run_parallel_robust(vec![5usize], 1, &policy, || (), |_, &i| i + 1);
+        // the injected panic is one-shot, so the retry runs clean
+        assert_eq!(out[0].as_ref().unwrap(), &6);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn robust_times_out_injected_delay() {
+        let faults = crate::util::fault::FaultPlan::armed();
+        faults.arm_worker_delay(50);
+        let policy =
+            RobustPolicy { timeout_seconds: Some(0.01), faults, ..Default::default() };
+        let out = run_parallel_robust(vec![0usize], 1, &policy, || (), |_, &i| i);
+        assert!(matches!(out[0], Err(SolveError::JobTimeout { .. })), "{:?}", out[0]);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod preprocess;
 pub mod shadow;
 pub mod svmlight;
 pub mod synth;
+pub mod validate;
 pub mod view;
 
 pub use csc::CscMatrix;

@@ -13,6 +13,7 @@
 
 use crate::data::csc::CscMatrix;
 use crate::data::design::DesignMatrix;
+use crate::util::error::SolveError;
 use std::io::{BufRead, BufReader, Read, Write};
 
 /// A loaded regression dataset: design matrix + targets.
@@ -22,46 +23,88 @@ pub struct Dataset {
     pub y: Vec<f64>,
 }
 
-/// Parse svmlight-format text into a sparse dataset.
+/// Whitespace tokens of one line with their 0-based byte offsets, so
+/// errors can point at an exact column.
+fn tokens(line: &str) -> Vec<(usize, &str)> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let start = i;
+        while i < bytes.len() && !bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i > start {
+            out.push((start, &line[start..i]));
+        }
+    }
+    out
+}
+
+/// Parse svmlight-format text into a sparse dataset, reporting every
+/// defect as a typed [`SolveError::Parse`] with 1-based line and column
+/// — a corrupted file can never panic the loader, and non-finite labels
+/// or values are rejected at the gate (the solver guardrails assume
+/// finite inputs past validation).
 ///
 /// `min_features` can force a minimum feature count (columns beyond the
 /// maximum seen index are empty).
-pub fn parse_svmlight<R: Read>(reader: R, min_features: usize) -> anyhow::Result<Dataset> {
+pub fn parse_svmlight_typed<R: Read>(
+    reader: R,
+    min_features: usize,
+) -> Result<Dataset, SolveError> {
+    let err = |line: usize, col: usize, msg: String| SolveError::Parse { line, col, msg };
     let buf = BufReader::new(reader);
     let mut y = Vec::new();
     // row-oriented triplets, converted to CSC at the end
     let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
     let mut max_feature = 0usize;
     for (lineno, line) in buf.lines().enumerate() {
-        let line = line?;
+        let lno = lineno + 1;
+        let line = line.map_err(|e| err(lno, 1, format!("read error: {e}")))?;
         let line = match line.find('#') {
             Some(pos) => &line[..pos],
             None => &line[..],
         };
-        let mut parts = line.split_whitespace();
-        let label = match parts.next() {
-            None => continue, // blank line
-            Some(l) => l
-                .parse::<f64>()
-                .map_err(|e| anyhow::anyhow!("line {}: bad label {l:?}: {e}", lineno + 1))?,
+        let toks = tokens(line);
+        let Some(&(label_off, label_tok)) = toks.first() else {
+            continue; // blank line
         };
+        let label = label_tok
+            .parse::<f64>()
+            .map_err(|e| err(lno, label_off + 1, format!("bad label {label_tok:?}: {e}")))?;
+        if !label.is_finite() {
+            return Err(err(lno, label_off + 1, format!("non-finite label {label_tok:?}")));
+        }
         let mut row = Vec::new();
         let mut prev_idx = 0usize;
-        for tok in parts {
+        for &(off, tok) in &toks[1..] {
+            let col = off + 1;
             let (is, vs) = tok
                 .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair {tok:?}", lineno + 1))?;
+                .ok_or_else(|| err(lno, col, format!("bad pair {tok:?} (expected index:value)")))?;
             let idx: usize = is
                 .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad index {is:?}: {e}", lineno + 1))?;
+                .map_err(|e| err(lno, col, format!("bad index {is:?}: {e}")))?;
+            let vcol = col + is.len() + 1;
             let val: f64 = vs
                 .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad value {vs:?}: {e}", lineno + 1))?;
+                .map_err(|e| err(lno, vcol, format!("bad value {vs:?}: {e}")))?;
+            if !val.is_finite() {
+                return Err(err(lno, vcol, format!("non-finite value {vs:?}")));
+            }
             if idx == 0 {
-                anyhow::bail!("line {}: svmlight indices are 1-based, got 0", lineno + 1);
+                return Err(err(lno, col, "svmlight indices are 1-based, got 0".into()));
             }
             if idx <= prev_idx {
-                anyhow::bail!("line {}: indices must be strictly increasing", lineno + 1);
+                return Err(err(
+                    lno,
+                    col,
+                    format!("indices must be strictly increasing ({idx} after {prev_idx})"),
+                ));
             }
             prev_idx = idx;
             max_feature = max_feature.max(idx);
@@ -82,6 +125,11 @@ pub fn parse_svmlight<R: Read>(reader: R, min_features: usize) -> anyhow::Result
         }
     }
     Ok(Dataset { x: DesignMatrix::Sparse(CscMatrix::from_columns(n, cols)), y })
+}
+
+/// [`parse_svmlight_typed`] behind the crate's `anyhow`-style interface.
+pub fn parse_svmlight<R: Read>(reader: R, min_features: usize) -> anyhow::Result<Dataset> {
+    Ok(parse_svmlight_typed(reader, min_features)?)
 }
 
 /// Load an svmlight file from disk.
@@ -163,6 +211,71 @@ mod tests {
     fn rejects_malformed_pair() {
         assert!(parse_svmlight("1 abc\n".as_bytes(), 0).is_err());
         assert!(parse_svmlight("x 1:1\n".as_bytes(), 0).is_err());
+    }
+
+    fn parse_err(text: &str) -> SolveError {
+        parse_svmlight_typed(text.as_bytes(), 0).unwrap_err()
+    }
+
+    #[test]
+    fn typed_errors_carry_line_and_column() {
+        // bad label on line 2, column 1
+        match parse_err("1 1:1\nxyz 1:1\n") {
+            SolveError::Parse { line, col, msg } => {
+                assert_eq!((line, col), (2, 1));
+                assert!(msg.contains("bad label"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // pair without a colon: line 1, after "1 " → column 3
+        match parse_err("1 abc\n") {
+            SolveError::Parse { line, col, msg } => {
+                assert_eq!((line, col), (1, 3));
+                assert!(msg.contains("bad pair"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // non-numeric value: "2.5 7:zz" → value starts at column 7
+        match parse_err("2.5 7:zz\n") {
+            SolveError::Parse { line, col, msg } => {
+                assert_eq!((line, col), (1, 7));
+                assert!(msg.contains("bad value"), "{msg}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_errors_reject_structural_defects() {
+        for (text, needle) in [
+            ("1 0:1\n", "1-based"),
+            ("1 3:1 2:1\n", "strictly increasing"),
+            ("1 2:nan\n", "non-finite value"),
+            ("inf 1:1\n", "non-finite label"),
+            ("1 1:\n", "bad value"),
+            ("1 :5\n", "bad index"),
+        ] {
+            match parse_err(text) {
+                SolveError::Parse { msg, .. } => {
+                    assert!(msg.contains(needle), "{text:?}: {msg}")
+                }
+                other => panic!("{text:?}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_input_is_an_error_not_a_panic() {
+        // A file cut mid-token must parse or error — never panic.
+        let text = "1 1:2.0 3:4.0\n-0.5 2:1.0 5:3.";
+        match parse_svmlight_typed(text.as_bytes(), 0) {
+            // "3." parses as 3.0 under Rust float grammar: accepted.
+            Ok(ds) => assert_eq!(ds.y.len(), 2),
+            Err(SolveError::Parse { line, .. }) => assert_eq!(line, 2),
+            Err(other) => panic!("{other:?}"),
+        }
+        // cut mid-pair: definitely an error
+        assert!(parse_svmlight_typed("1 1:2.0\n0.5 4".as_bytes(), 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Pre-epoch input validation: every rejection here happens **before
+//! the first CD epoch**, so a bad request never reaches the hot loop.
+//!
+//! These checks back the `try_*` solver entry points
+//! (`try_cd_solve`, `try_celer_solve`, `try_lasso_path`,
+//! `try_glm_path`, …). The historical panicking paths
+//! (`Datafit::validate_targets`) are unchanged; this module is the
+//! typed, non-panicking face of the same contracts, plus the
+//! non-finite / dimension checks the panicking paths never did.
+
+use crate::data::{DesignMatrix, DesignOps};
+use crate::datafit::GlmFamily;
+use crate::util::error::SolveError;
+
+/// Reject NaN/±∞ design entries. Scans stored entries only (CSC zeros
+/// are implicitly finite); reports the first offender as (row, col).
+pub fn validate_design(x: &DesignMatrix) -> Result<(), SolveError> {
+    match x {
+        DesignMatrix::Dense(d) => {
+            for j in 0..d.p() {
+                for (i, &v) in d.col(j).iter().enumerate() {
+                    if !v.is_finite() {
+                        return Err(SolveError::NonFiniteDesign { row: i, col: j, value: v });
+                    }
+                }
+            }
+        }
+        DesignMatrix::Sparse(s) => {
+            for j in 0..s.p() {
+                let (rows, vals) = s.col(j);
+                for (&i, &v) in rows.iter().zip(vals.iter()) {
+                    if !v.is_finite() {
+                        return Err(SolveError::NonFiniteDesign {
+                            row: i as usize,
+                            col: j,
+                            value: v,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reject NaN/±∞ labels.
+pub fn validate_labels(y: &[f64]) -> Result<(), SolveError> {
+    for (i, &v) in y.iter().enumerate() {
+        if !v.is_finite() {
+            return Err(SolveError::NonFiniteLabels { index: i, value: v });
+        }
+    }
+    Ok(())
+}
+
+/// Full problem check: dimensions, then design, then labels.
+pub fn validate_problem(x: &DesignMatrix, y: &[f64]) -> Result<(), SolveError> {
+    if x.n() != y.len() {
+        return Err(SolveError::DimensionMismatch { rows: x.n(), labels: y.len() });
+    }
+    validate_design(x)?;
+    validate_labels(y)
+}
+
+/// Per-datafit label-domain check (the typed twin of the panicking
+/// `Datafit::validate_targets`): logistic requires ±1 labels, Poisson
+/// requires finite counts ≥ 0.
+pub fn validate_family_labels(family: GlmFamily, y: &[f64]) -> Result<(), SolveError> {
+    match family {
+        GlmFamily::Logistic => {
+            for (i, &v) in y.iter().enumerate() {
+                if v != 1.0 && v != -1.0 {
+                    return Err(SolveError::LabelDomain {
+                        family: "logistic",
+                        index: i,
+                        value: v,
+                        expected: "labels in {-1, +1}",
+                    });
+                }
+            }
+        }
+        GlmFamily::Poisson => {
+            for (i, &v) in y.iter().enumerate() {
+                if !v.is_finite() || v < 0.0 {
+                    return Err(SolveError::LabelDomain {
+                        family: "poisson",
+                        index: i,
+                        value: v,
+                        expected: "finite counts >= 0",
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Penalty-weight sanity: NaN and negative weights are rejected;
+/// `w = 0` (unpenalized) and `w = +inf` (hard-zeroed) are legal
+/// `WeightedL1` semantics.
+pub fn validate_weights(w: &[f64]) -> Result<(), SolveError> {
+    for (i, &v) in w.iter().enumerate() {
+        if v.is_nan() || v < 0.0 {
+            return Err(SolveError::BadWeight { index: i, value: v });
+        }
+    }
+    Ok(())
+}
+
+/// λ-grid sanity: every entry finite and > 0, grid non-increasing
+/// (warm starts walk λ downward), and non-empty.
+pub fn validate_grid(grid: &[f64]) -> Result<(), SolveError> {
+    if grid.is_empty() {
+        return Err(SolveError::BadGrid { index: 0, value: f64::NAN, reason: "empty grid" });
+    }
+    for (i, &l) in grid.iter().enumerate() {
+        if !l.is_finite() || l <= 0.0 {
+            return Err(SolveError::BadGrid {
+                index: i,
+                value: l,
+                reason: "lambda must be finite and > 0",
+            });
+        }
+        if i > 0 && l > grid[i - 1] {
+            return Err(SolveError::BadGrid {
+                index: i,
+                value: l,
+                reason: "grid must be non-increasing",
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CscMatrix, DenseMatrix};
+
+    fn dense(n: usize, p: usize, data: Vec<f64>) -> DesignMatrix {
+        DesignMatrix::Dense(DenseMatrix::from_col_major(n, p, data))
+    }
+
+    fn sparse_of(n: usize, p: usize, data: &[f64]) -> DesignMatrix {
+        DesignMatrix::Sparse(CscMatrix::from_dense(n, p, data))
+    }
+
+    #[test]
+    fn accepts_clean_problem_dense_and_sparse() {
+        let data = vec![1.0, 0.0, -2.0, 3.0, 0.0, 0.5];
+        let y = vec![0.1, -0.2];
+        for x in [dense(2, 3, data.clone()), sparse_of(2, 3, &data)] {
+            assert!(validate_problem(&x, &y).is_ok());
+        }
+    }
+
+    #[test]
+    fn rejects_nan_design_with_position() {
+        let mut data = vec![1.0, 0.0, -2.0, 3.0, 0.0, 0.5];
+        data[2] = f64::NAN; // column 1, row 0 (col-major, n = 2)
+        for x in [dense(2, 3, data.clone()), sparse_of(2, 3, &data)] {
+            match validate_design(&x) {
+                Err(SolveError::NonFiniteDesign { row, col, .. }) => {
+                    assert_eq!((row, col), (0, 1));
+                }
+                other => panic!("expected NonFiniteDesign, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_inf_labels() {
+        assert!(matches!(
+            validate_labels(&[0.0, f64::INFINITY]),
+            Err(SolveError::NonFiniteLabels { index: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_dimension_mismatch() {
+        let x = dense(2, 1, vec![1.0, 2.0]);
+        assert!(matches!(
+            validate_problem(&x, &[1.0, 2.0, 3.0]),
+            Err(SolveError::DimensionMismatch { rows: 2, labels: 3 })
+        ));
+    }
+
+    #[test]
+    fn family_domains() {
+        assert!(validate_family_labels(GlmFamily::Logistic, &[1.0, -1.0]).is_ok());
+        assert!(matches!(
+            validate_family_labels(GlmFamily::Logistic, &[1.0, 0.5]),
+            Err(SolveError::LabelDomain { family: "logistic", index: 1, .. })
+        ));
+        assert!(validate_family_labels(GlmFamily::Poisson, &[0.0, 3.0]).is_ok());
+        assert!(matches!(
+            validate_family_labels(GlmFamily::Poisson, &[2.0, -1.0]),
+            Err(SolveError::LabelDomain { family: "poisson", index: 1, .. })
+        ));
+        assert!(validate_family_labels(GlmFamily::Poisson, &[f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn weight_semantics() {
+        assert!(validate_weights(&[0.0, 1.0, f64::INFINITY]).is_ok(), "0 and inf are legal");
+        assert!(matches!(
+            validate_weights(&[1.0, -0.5]),
+            Err(SolveError::BadWeight { index: 1, .. })
+        ));
+        assert!(validate_weights(&[f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn grid_must_be_positive_descending() {
+        assert!(validate_grid(&[1.0, 0.5, 0.5, 0.1]).is_ok(), "ties allowed");
+        assert!(matches!(validate_grid(&[]), Err(SolveError::BadGrid { .. })));
+        assert!(validate_grid(&[1.0, 0.0]).is_err(), "zero lambda");
+        assert!(validate_grid(&[1.0, f64::NAN]).is_err());
+        assert!(matches!(
+            validate_grid(&[0.5, 1.0]),
+            Err(SolveError::BadGrid { index: 1, .. })
+        ));
+    }
+}

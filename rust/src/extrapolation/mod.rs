@@ -159,6 +159,15 @@ impl ResidualBuffer {
                 scratch.gram[b * k + a] = v;
             }
         }
+        // Diverging trajectories overflow here first: ‖d‖ ≳ 1e154 squares
+        // into ±inf (or NaN) Gram entries, and neither the LU solve nor
+        // the simplex fallback is meaningful on those — report failure so
+        // the caller falls back to θ_res before corrupted coefficients
+        // can blend a "finite but wrong" r_accel.
+        if !scratch.gram.iter().all(|v| v.is_finite()) {
+            self.singular_fallbacks += 1;
+            return false;
+        }
         scratch.ones.clear();
         scratch.ones.resize(k, 1.0);
         // Fast path: the paper's formula c = z/(zᵀ1), (UᵀU)z = 1. When the
@@ -298,6 +307,21 @@ mod tests {
         buf.push(&[2.0]);
         assert!(buf.extrapolate().is_none());
         assert_eq!(buf.singular_fallbacks, 1);
+    }
+
+    #[test]
+    fn overflowing_colinear_ring_falls_back() {
+        // Colinear residuals at ~1e200: every pairwise diff dot product
+        // overflows to +inf, so the Gram matrix is non-finite while all
+        // stored residuals are still finite. The guard must report
+        // failure (θ_res fallback) instead of blending garbage weights.
+        let mut buf = ResidualBuffer::new(2);
+        buf.push(&[1e200, 2e200]);
+        buf.push(&[-1e200, -2e200]);
+        buf.push(&[1e200, 2e200]);
+        assert!(buf.extrapolate().is_none());
+        assert_eq!(buf.singular_fallbacks, 1);
+        assert_eq!(buf.successes, 0);
     }
 
     #[test]

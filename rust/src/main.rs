@@ -78,6 +78,7 @@ COMMANDS:
                    [--tol 1e-6] [--solver celer-prune] [--engine native|xla]
   path             --dataset <name> [--num-lambdas 100] [--inv-ratio 100]
                    [--tol 1e-6] [--solvers celer-prune,blitz] [--workers 2]
+                   [--max-seconds <budget>] (partial-but-certified prefix)
   datasets         list built-in datasets
   artifacts-check  [--dir artifacts] validate + compile every HLO artifact
   gen-data         --dataset <name> --out <file.svm> [--seed 0]
@@ -162,7 +163,10 @@ fn cmd_solve(args: &cli::Args) -> anyhow::Result<()> {
                         lambda
                     };
                     let res = celer::solvers::path::run_path(&ds.x, &ds.y, &[lambda], &ps, false);
-                    let step = &res.steps[0];
+                    let step = res
+                        .steps
+                        .first()
+                        .ok_or_else(|| anyhow::anyhow!("solver {other} produced no step"))?;
                     (step.gap, step.support_size, step.epochs, step.converged)
                 }
             };
@@ -199,9 +203,18 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
     let name = args.get_or("dataset", "leukemia-sim");
     let seed = args.get_usize("seed", 0)? as u64;
     let num = args.get_usize("num-lambdas", 100)?;
+    anyhow::ensure!(num >= 1, "--num-lambdas must be at least 1");
     let inv_ratio = args.get_f64("inv-ratio", 100.0)?;
     let tol = args.get_f64("tol", 1e-6)?;
+    anyhow::ensure!(tol.is_finite() && tol > 0.0, "--tol must be finite and > 0");
     let workers = args.get_usize("workers", 2)?;
+    let max_seconds = match args.get("max-seconds") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("--max-seconds: {e}"))?,
+        ),
+    };
     let solvers = args.get_or("solvers", "celer-prune,blitz");
     let ds = coordinator::load_dataset(&name, seed)?;
     let grid = coordinator::standard_grid(&ds, inv_ratio, num);
@@ -253,7 +266,21 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
         grid[num - 1],
         grid[0]
     );
-    let results = coordinator::run_path_jobs(&ds, jobs, workers)?;
+    let results = match max_seconds {
+        None => coordinator::run_path_jobs(&ds, jobs, workers)?,
+        // With a budget, route through the guardrailed API: typed
+        // validation up front, per-job quarantine, and a partial-but-
+        // certified grid prefix when the clock runs out.
+        Some(limit) => coordinator::run_path_jobs_robust(
+            &ds,
+            jobs,
+            workers,
+            &celer::coordinator::scheduler::RobustPolicy::default(),
+            Some(limit),
+        )?
+        .into_iter()
+        .collect::<Result<Vec<_>, _>>()?,
+    };
     let mut table = Table::new(
         "Lasso path",
         &["solver", "time", "epochs", "max gap", "final |S|", "all converged"],

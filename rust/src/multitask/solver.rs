@@ -114,6 +114,7 @@ impl MtConfig {
             screen: false,
             trace: false,
             stop: StopRule::DualityGap,
+            ..EngineConfig::default()
         }
     }
 }
@@ -129,6 +130,8 @@ pub struct MtResult {
     pub gap: f64,
     pub epochs: usize,
     pub converged: bool,
+    /// Typed outcome (certified / budget-exhausted / recovered).
+    pub status: crate::util::error::SolveOutcome,
 }
 
 /// Cyclic block-CD for the Multi-Task Lasso with dual extrapolation
@@ -189,7 +192,15 @@ fn mt_bcd_generic<D: DesignOps>(
     lanes_to_rowmajor(&ws.r, n, q, &mut r);
     let mut theta = Vec::new();
     lanes_to_rowmajor(&ws.dual.theta, n, q, &mut theta);
-    MtResult { b, r, theta, gap: out.gap, epochs: out.epochs, converged: out.converged }
+    MtResult {
+        b,
+        r,
+        theta,
+        gap: out.gap,
+        epochs: out.epochs,
+        converged: out.converged,
+        status: out.status,
+    }
 }
 
 /// CELER-style working-set Multi-Task solver (Algorithm 4 with the §7
@@ -296,6 +307,7 @@ fn mt_celer_generic<D: DesignOps>(
     let mut converged = false;
     let mut total_inner_epochs = 0usize;
     let mut prev_gap = f64::INFINITY;
+    let mut all_faults: Vec<crate::util::error::FaultEvent> = Vec::new();
 
     for t_out in 1..=MT_MAX_OUTER {
         // ---- Θ^t = argmax D over {Θ^{t-1}, Θ_inner^{t-1}, Θ_res^t} ----
@@ -418,6 +430,7 @@ fn mt_celer_generic<D: DesignOps>(
                 &mut inner_ws,
                 &mut BlockCdStrategy,
             );
+            all_faults.extend_from_slice(outcome.status.faults());
             outcome.epochs
         };
         total_inner_epochs += inner_epochs;
@@ -459,7 +472,9 @@ fn mt_celer_generic<D: DesignOps>(
     lanes_to_rowmajor(&ws.r, n, q, &mut r);
     let mut theta = Vec::new();
     lanes_to_rowmajor(&ws.theta, n, q, &mut theta);
-    MtResult { b, r, theta, gap, epochs: total_inner_epochs, converged }
+    let status =
+        crate::util::error::SolveOutcome::from_run(converged, gap, total_inner_epochs, all_faults);
+    MtResult { b, r, theta, gap, epochs: total_inner_epochs, converged, status }
 }
 
 #[cfg(test)]

@@ -57,8 +57,11 @@ use crate::data::shadow::ShadowF32;
 use crate::lasso::primal;
 use crate::penalty::{Penalty, L1};
 use crate::screening::ScreeningState;
+use crate::solvers::engine::MAX_RECOVERIES;
 use crate::solvers::sweep32::MAX_F32_EPOCHS;
 use crate::solvers::{DualScratch, DualState, Precision};
+use crate::util::error::{FaultEvent, FaultKind, RecoveryAction, SolveOutcome};
+use crate::util::fault::FaultPlan;
 use crate::util::{soft_threshold, soft_threshold_f32};
 use std::time::Instant;
 
@@ -91,6 +94,14 @@ pub struct BatchConfig {
     /// f64 certification at every gap check (see [`BatchF32Strategy`]);
     /// gaps and screening stay exact f64 either way.
     pub precision: Precision,
+    /// Wall-clock budget in seconds (`None` = unlimited). On expiry,
+    /// in-flight lanes retire unconverged and still-unassigned grid
+    /// cells are not attempted — already-retired cells keep their gap
+    /// certificates (partial-but-certified), so the result list may be
+    /// shorter than the grid.
+    pub max_seconds: Option<f64>,
+    /// Fault-injection plan (testing; no-op unless `fault-inject`).
+    pub faults: FaultPlan,
 }
 
 /// Residual-footprint budget for [`auto_lanes`]: B lanes keep B·n f64
@@ -124,6 +135,8 @@ impl Default for BatchConfig {
             screen: true,
             lanes: 0,
             precision: Precision::F64,
+            max_seconds: None,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -143,6 +156,8 @@ pub struct BatchLaneResult {
     /// Wall-clock seconds the lane was resident. Lanes share the sweep,
     /// so unlike the sequential path these intervals overlap.
     pub seconds: f64,
+    /// Typed outcome of this lane (certified / budget / recovered).
+    pub status: SolveOutcome,
 }
 
 /// Per-slot bookkeeping (which grid cell the slot is solving).
@@ -190,6 +205,11 @@ pub struct BatchWorkspace {
     group_scratch: Vec<SweepScratch>,
     /// Warm-start seed: the deepest (smallest-λ) retired solution.
     seed_beta: Vec<f64>,
+    /// Per-slot watchdog retry counter (reset when a new grid cell
+    /// loads, preserved across recovery reloads of the same cell).
+    lane_recoveries: Vec<usize>,
+    /// Per-slot fault events for the cell currently in the slot.
+    lane_faults: Vec<Vec<FaultEvent>>,
 }
 
 /// Reusable per-column scratch of one interleaved CD sweep. The serial
@@ -769,6 +789,10 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
     ws.screening.resize_with(b, ScreeningState::default);
     ws.meta.clear();
     ws.meta.resize(b, LaneMeta::default());
+    ws.lane_recoveries.clear();
+    ws.lane_recoveries.resize(b, 0);
+    ws.lane_faults.iter_mut().for_each(Vec::clear);
+    ws.lane_faults.resize_with(b, Vec::new);
     ws.seed_beta.clear();
     match beta0 {
         Some(seed) => {
@@ -835,7 +859,7 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
                 continue;
             }
             let lambda = ws.lane_lambda[slot];
-            let (gap, converged) = {
+            let (gap, converged, fault) = {
                 let BatchWorkspace { beta, r, dual, scratch, screening, col_norms, .. } = ws;
                 let r_slot = &mut r[slot * n..(slot + 1) * n];
                 let beta_slot = &mut beta[slot * p..(slot + 1) * p];
@@ -843,17 +867,31 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
                 // recompute r exactly here; everything below (dual point,
                 // gap, screening, stop test) then runs on exact f64.
                 strategy.sync_slot_state(x, y, slot, beta_slot, r_slot);
+                cfg.faults.inject_nan_residual(epochs, r_slot);
                 // The penalty-generic dual / primal / screening calls all
                 // delegate to the historical ℓ₁ routines when P = L1, so
                 // the default path's bits are unchanged.
                 dual[slot].update_penalty(x, y, lambda, r_slot, &mut scratch[slot], penalty);
                 let p_val = primal::penalty_primal_from_residual(r_slot, beta_slot, lambda, penalty);
                 let gap = p_val - dual[slot].dval;
-                let converged = gap <= cfg.tol;
+                // ---- per-lane non-finite watchdog ----
+                let fault = if !gap.is_finite() {
+                    Some(if !p_val.is_finite() {
+                        FaultKind::NonFiniteResidual
+                    } else if !dual[slot].dval.is_finite() {
+                        FaultKind::NonFiniteDual
+                    } else {
+                        FaultKind::NonFiniteGap
+                    })
+                } else {
+                    None
+                };
+                let converged = fault.is_none() && gap <= cfg.tol;
                 // Screen only while unconverged (same invariant as the
                 // sequential engine: the reported (β, gap) pair is the
-                // one that passed the stopping test).
-                if cfg.screen && !converged {
+                // one that passed the stopping test). Never screen off a
+                // corrupted gap.
+                if cfg.screen && !converged && fault.is_none() {
                     screening[slot].screen_penalty(
                         x,
                         &dual[slot].xtheta,
@@ -865,8 +903,65 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
                         r_slot,
                     );
                 }
-                (gap, converged)
+                (gap, converged, fault)
             };
+            if let Some(kind) = fault {
+                if ws.lane_recoveries[slot] < MAX_RECOVERIES {
+                    // Roll the lane back to its certified warm-start
+                    // seed: reload the same grid cell (exact residual
+                    // recompute, fresh dual ring + screening state),
+                    // keeping the epoch count so `max_epochs` still
+                    // bounds this lane's total work.
+                    ws.lane_recoveries[slot] += 1;
+                    ws.lane_faults[slot].push(FaultEvent {
+                        kind,
+                        epoch: epochs,
+                        action: RecoveryAction::Restarted,
+                    });
+                    let grid_idx = ws.meta[slot].grid_idx;
+                    load_lane(ws, x, y, slot, grid_idx, lambda, cfg, &start);
+                    strategy.slot_loaded(slot);
+                    ws.meta[slot].epochs = epochs;
+                    li += 1;
+                    continue;
+                }
+                // Retry budget exhausted: quarantine the grid cell —
+                // retire it unconverged on the certified seed with the
+                // trivial +∞ certificate (never NaN), without poisoning
+                // the warm-start chain.
+                ws.lane_faults[slot].push(FaultEvent {
+                    kind,
+                    epoch: epochs,
+                    action: RecoveryAction::Quarantined,
+                });
+                let meta = ws.meta[slot].clone();
+                let status = SolveOutcome::from_run(
+                    false,
+                    f64::INFINITY,
+                    epochs,
+                    std::mem::take(&mut ws.lane_faults[slot]),
+                );
+                results.push(BatchLaneResult {
+                    grid_idx: meta.grid_idx,
+                    lambda,
+                    beta: ws.seed_beta.clone(),
+                    gap: f64::INFINITY,
+                    epochs,
+                    converged: false,
+                    seconds: start.elapsed().as_secs_f64() - meta.t0,
+                    status,
+                });
+                if next_grid < grid.len() {
+                    load_lane(ws, x, y, slot, next_grid, grid[next_grid], cfg, &start);
+                    strategy.slot_loaded(slot);
+                    ws.lane_recoveries[slot] = 0;
+                    next_grid += 1;
+                    li += 1;
+                } else {
+                    ws.live.swap_remove(li);
+                }
+                continue;
+            }
             if converged || at_cap {
                 let meta = ws.meta[slot].clone();
                 let beta_out = ws.beta[slot * p..(slot + 1) * p].to_vec();
@@ -882,6 +977,12 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
                     ws.seed_beta.extend_from_slice(&beta_out);
                     seed_idx = Some(meta.grid_idx);
                 }
+                let status = SolveOutcome::from_run(
+                    converged,
+                    gap,
+                    epochs,
+                    std::mem::take(&mut ws.lane_faults[slot]),
+                );
                 results.push(BatchLaneResult {
                     grid_idx: meta.grid_idx,
                     lambda,
@@ -890,10 +991,12 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
                     epochs,
                     converged,
                     seconds: start.elapsed().as_secs_f64() - meta.t0,
+                    status,
                 });
                 if next_grid < grid.len() {
                     load_lane(ws, x, y, slot, next_grid, grid[next_grid], cfg, &start);
                     strategy.slot_loaded(slot);
+                    ws.lane_recoveries[slot] = 0;
                     next_grid += 1;
                     li += 1;
                 } else {
@@ -903,6 +1006,37 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
                 }
             } else {
                 li += 1;
+            }
+        }
+
+        // ---- wall-clock budget ----
+        if let Some(limit) = cfg.max_seconds {
+            if start.elapsed().as_secs_f64() >= limit {
+                // Retire every in-flight lane unconverged; already
+                // retired cells keep their certificates and unassigned
+                // cells are not attempted (partial-but-certified).
+                for li in 0..ws.live.len() {
+                    let slot = ws.live[li];
+                    let meta = ws.meta[slot].clone();
+                    let status = SolveOutcome::from_run(
+                        false,
+                        f64::INFINITY,
+                        meta.epochs,
+                        std::mem::take(&mut ws.lane_faults[slot]),
+                    );
+                    results.push(BatchLaneResult {
+                        grid_idx: meta.grid_idx,
+                        lambda: ws.lane_lambda[slot],
+                        beta: ws.beta[slot * p..(slot + 1) * p].to_vec(),
+                        gap: f64::INFINITY,
+                        epochs: meta.epochs,
+                        converged: false,
+                        seconds: start.elapsed().as_secs_f64() - meta.t0,
+                        status,
+                    });
+                }
+                ws.live.clear();
+                break;
             }
         }
     }

@@ -29,6 +29,7 @@ use crate::lasso::{dual, primal};
 use crate::solvers::celer::CelerIteration;
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
+use crate::util::error::{FaultEvent, SolveOutcome};
 use crate::ws::build_working_set;
 use std::time::Instant;
 
@@ -155,6 +156,7 @@ fn blitz_generic<D: DesignOps>(
     let mut converged = false;
     let mut stopped_internally = false;
     let mut total_epochs = 0usize;
+    let mut all_faults: Vec<FaultEvent> = Vec::new();
     let mut prev_primal = f64::INFINITY;
 
     // initial φ uses the full design (no WS yet)
@@ -244,6 +246,7 @@ fn blitz_generic<D: DesignOps>(
             screen: false,
             trace: false,
             stop: StopRule::DualityGap,
+            ..EngineConfig::default()
         };
         let inner_epochs = {
             let view = DesignView::new(x, &ws_idx, &ws.norms_sq);
@@ -257,6 +260,7 @@ fn blitz_generic<D: DesignOps>(
                 &mut inner_ws,
                 &mut CdStrategy,
             );
+            all_faults.extend_from_slice(outcome.status.faults());
             outcome.epochs
         };
         total_epochs += inner_epochs;
@@ -278,6 +282,9 @@ fn blitz_generic<D: DesignOps>(
     }
 
     ws.put_inner(inner_ws);
+    // An internal primal-stagnation stop is BLITZ's own success mode,
+    // not a budget failure; it still reports as unconverged-by-gap.
+    let status = SolveOutcome::from_run(converged, gap, total_epochs, all_faults);
     let result = SolveResult {
         beta: ws.beta.clone(),
         r: ws.r.clone(),
@@ -286,6 +293,7 @@ fn blitz_generic<D: DesignOps>(
         epochs: total_epochs,
         converged,
         trace: Vec::new(),
+        status,
     };
     BlitzOutput { result, iterations, stopped_internally }
 }

@@ -45,8 +45,9 @@ use crate::extrapolation::{ExtrapScratch, ResidualBuffer};
 use crate::lasso::{dual, primal};
 use crate::multitask::block_soft_threshold;
 use crate::screening::ScreeningState;
-use crate::solvers::engine::{self, EngineConfig, EngineOutcome, Init, StopRule};
+use crate::solvers::engine::{self, EngineConfig, EngineOutcome, Init, StopRule, MAX_RECOVERIES};
 use crate::solvers::{DualChoice, GapCheck};
+use crate::util::error::{FaultEvent, FaultKind, RecoveryAction, SolveOutcome};
 use crate::util::soft_threshold;
 use std::time::Instant;
 
@@ -467,6 +468,12 @@ pub struct BlockWorkspace {
     pub beta_ws: Vec<f64>,
     /// Lane-major transposition of the caller's row-major Y.
     pub y_lanes: Vec<f64>,
+    /// Watchdog checkpoint: blocks at the last certified gap check.
+    pub ckpt_beta: Vec<f64>,
+    /// Watchdog checkpoint: lane-major residual at the last certified check.
+    pub ckpt_r: Vec<f64>,
+    /// Watchdog checkpoint: dual point at the last certified check.
+    pub ckpt_theta: Vec<f64>,
     /// Nested workspace for inner (working-set) solves.
     pub inner: Option<Box<BlockWorkspace>>,
 }
@@ -571,6 +578,21 @@ pub fn solve_blocks<D: DesignOps, S: BlockStrategy<D>>(
     let mut epochs = 0usize;
     let mut converged = false;
 
+    // ---- watchdog state (mirrors the scalar engine) ----
+    // The initial iterate is trivially certified (its gap is just
+    // unknown), so recovery always has a finite state to roll back to —
+    // pure memcpys on the fault-free path, no arithmetic changes.
+    let mut faults: Vec<FaultEvent> = Vec::new();
+    let mut recoveries = 0usize;
+    let mut ckpt_primal = f64::INFINITY;
+    let mut ckpt_gap = f64::INFINITY;
+    ws.ckpt_beta.resize(ws.beta.len(), 0.0);
+    ws.ckpt_beta.copy_from_slice(&ws.beta);
+    ws.ckpt_r.resize(ws.r.len(), 0.0);
+    ws.ckpt_r.copy_from_slice(&ws.r);
+    ws.ckpt_theta.resize(q * n, 0.0);
+    ws.ckpt_theta.copy_from_slice(&ws.dual.theta);
+
     for epoch in 1..=cfg.max_epochs {
         epochs = epoch;
         // ---- one primal block epoch ----
@@ -592,11 +614,46 @@ pub fn solve_blocks<D: DesignOps, S: BlockStrategy<D>>(
         }
 
         if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
+            cfg.faults.inject_nan_residual(epoch, &mut ws.r);
             ws.r_check.copy_from_slice(&ws.r);
             let (d_res, d_accel) =
                 ws.dual.update(x, y, n, q, &ws.lanes, lambda, &ws.r_check, &mut ws.scratch);
             let p_val = primal_from_residual_blocks(&ws.r_check, &ws.beta, q, lambda);
             gap = p_val - ws.dual.dval;
+            // ---- non-finite / divergence watchdog ----
+            let diverged = ckpt_primal.is_finite()
+                && p_val.is_finite()
+                && p_val > 100.0 * (ckpt_primal.abs() + 1.0);
+            if !gap.is_finite() && !(p_val.is_finite() && ws.dual.dval.is_finite()) || diverged {
+                let kind = if !p_val.is_finite() {
+                    FaultKind::NonFiniteResidual
+                } else if !ws.dual.dval.is_finite() {
+                    FaultKind::NonFiniteDual
+                } else if diverged {
+                    FaultKind::PrimalDivergence
+                } else {
+                    FaultKind::NonFiniteGap
+                };
+                if recoveries < MAX_RECOVERIES {
+                    recoveries += 1;
+                    ws.beta.copy_from_slice(&ws.ckpt_beta);
+                    ws.r.copy_from_slice(&ws.ckpt_r);
+                    // flush the extrapolation ring: the corrupted
+                    // residuals must not feed Definition-1 extrapolation
+                    ws.dual.reset(n, q, p, cfg.k.max(1), cfg.extrapolate, cfg.best_dual);
+                    faults.push(FaultEvent { kind, epoch, action: RecoveryAction::RolledBack });
+                    gap = ckpt_gap;
+                    continue;
+                }
+                faults.push(FaultEvent { kind, epoch, action: RecoveryAction::Aborted });
+                ws.beta.copy_from_slice(&ws.ckpt_beta);
+                ws.r.copy_from_slice(&ws.ckpt_r);
+                ws.dual.theta.resize(q * n, 0.0);
+                ws.dual.theta.copy_from_slice(&ws.ckpt_theta);
+                gap = ckpt_gap;
+                converged = false;
+                break;
+            }
             // Screen only while unconverged (same invariant as the
             // scalar engine: the reported (B, gap) pair is the one that
             // passed the stopping test).
@@ -616,6 +673,14 @@ pub fn solve_blocks<D: DesignOps, S: BlockStrategy<D>>(
                 let screening = &ws.screening;
                 ws.active.retain(|&j| !screening.is_screened(j));
             }
+            // This check passed the watchdog: refresh the certified
+            // checkpoint (post-screening, so a rollback restores state
+            // consistent with the screened active set).
+            ws.ckpt_beta.copy_from_slice(&ws.beta);
+            ws.ckpt_r.copy_from_slice(&ws.r);
+            ws.ckpt_theta.copy_from_slice(&ws.dual.theta);
+            ckpt_primal = p_val;
+            ckpt_gap = gap;
             if cfg.trace {
                 trace.push(GapCheck {
                     epoch,
@@ -631,10 +696,16 @@ pub fn solve_blocks<D: DesignOps, S: BlockStrategy<D>>(
                 converged = true;
                 break;
             }
+            if let Some(limit) = cfg.max_seconds {
+                if start.elapsed().as_secs_f64() >= limit {
+                    break;
+                }
+            }
         }
     }
 
-    EngineOutcome { gap, epochs, converged, trace }
+    let status = SolveOutcome::from_run(converged, gap, epochs, faults);
+    EngineOutcome { gap, epochs, converged, trace, status }
 }
 
 #[cfg(test)]
@@ -657,6 +728,7 @@ mod tests {
             screen,
             trace: false,
             stop: StopRule::DualityGap,
+            ..EngineConfig::default()
         }
     }
 

@@ -10,8 +10,11 @@
 //! this file only maps [`CdConfig`] onto it.
 
 use crate::data::design::DesignOps;
+use crate::data::{validate, DesignMatrix};
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::{Precision, SolveResult};
+use crate::util::error::SolveError;
+use crate::util::fault::FaultPlan;
 
 /// Configuration for [`cd_solve`].
 #[derive(Debug, Clone)]
@@ -38,6 +41,12 @@ pub struct CdConfig {
     /// [`crate::solvers::sweep32`]); gaps and screening stay exact f64
     /// either way.
     pub precision: Precision,
+    /// Wall-clock budget in seconds (`None` = unlimited). On expiry the
+    /// solve returns its partial-but-certified state with
+    /// `SolveOutcome::BudgetExhausted`.
+    pub max_seconds: Option<f64>,
+    /// Fault-injection plan (inert by default; see [`crate::util::fault`]).
+    pub faults: FaultPlan,
 }
 
 impl Default for CdConfig {
@@ -52,6 +61,8 @@ impl Default for CdConfig {
             screen: false,
             trace: false,
             precision: Precision::F64,
+            max_seconds: None,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -74,6 +85,8 @@ impl CdConfig {
             screen: self.screen,
             trace: self.trace,
             stop: StopRule::DualityGap,
+            max_seconds: self.max_seconds,
+            faults: self.faults.clone(),
         }
     }
 }
@@ -115,6 +128,28 @@ pub fn cd_solve_ws<D: DesignOps>(
         }
     };
     ws.solve_result(outcome)
+}
+
+/// Validating [`cd_solve`]: rejects non-finite design/label entries,
+/// dimension mismatches, and a bad λ **before the first epoch** with a
+/// typed [`SolveError`]. On clean inputs it is the plain `cd_solve`,
+/// bit for bit.
+pub fn try_cd_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CdConfig,
+) -> Result<SolveResult, SolveError> {
+    validate::validate_problem(x, y)?;
+    if !lambda.is_finite() || lambda <= 0.0 {
+        return Err(SolveError::BadGrid {
+            index: 0,
+            value: lambda,
+            reason: "lambda must be finite and > 0",
+        });
+    }
+    Ok(cd_solve(x, y, lambda, beta0, cfg))
 }
 
 #[cfg(test)]

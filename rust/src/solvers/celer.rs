@@ -32,6 +32,8 @@ use crate::lasso::{dual, primal, LassoProblem};
 use crate::penalty::{Penalty, L1};
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Strategy, Workspace};
 use crate::solvers::SolveResult;
+use crate::util::error::{FaultEvent, SolveError, SolveOutcome};
+use crate::util::fault::FaultPlan;
 use crate::ws::{build_working_set, WsPolicy};
 use std::time::Instant;
 
@@ -74,6 +76,13 @@ pub struct CelerConfig {
     /// Use dual extrapolation in the inner solver. Disabling this is the
     /// ablation that isolates the WS strategy from the dual point quality.
     pub extrapolate: bool,
+    /// Wall-clock budget in seconds (`None` = unlimited). Checked after
+    /// every global gap evaluation: on expiry the outer loop stops and
+    /// returns the current iterate with its fresh gap —
+    /// partial-but-certified (`SolveOutcome::BudgetExhausted`).
+    pub max_seconds: Option<f64>,
+    /// Fault-injection plan, forwarded to every inner engine solve.
+    pub faults: FaultPlan,
 }
 
 impl Default for CelerConfig {
@@ -87,6 +96,8 @@ impl Default for CelerConfig {
             gap_freq: 10,
             k: crate::extrapolation::DEFAULT_K,
             extrapolate: true,
+            max_seconds: None,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -117,6 +128,28 @@ impl CelerOutput {
 /// Solve a [`LassoProblem`] with CELER.
 pub fn celer_solve(pb: &LassoProblem, cfg: &CelerConfig) -> CelerOutput {
     celer_solve_on(&pb.x, &pb.y, pb.lambda, None, cfg)
+}
+
+/// Validating front door for [`celer_solve_on`]: rejects non-finite
+/// design/label entries, dimension mismatches and a bad λ with a typed
+/// [`SolveError`] *before* the first outer iteration, then runs the
+/// exact same solve (bit-identical results on valid inputs).
+pub fn try_celer_solve_on(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CelerConfig,
+) -> Result<CelerOutput, SolveError> {
+    crate::data::validate::validate_problem(x, y)?;
+    if !lambda.is_finite() || lambda <= 0.0 {
+        return Err(SolveError::BadGrid {
+            index: 0,
+            value: lambda,
+            reason: "lambda must be finite and > 0",
+        });
+    }
+    Ok(celer_solve_on(x, y, lambda, beta0, cfg))
 }
 
 /// CELER on explicit data with optional warm start.
@@ -339,6 +372,9 @@ where
     let mut gap = f64::INFINITY;
     let mut converged = false;
     let mut total_inner_epochs = 0usize;
+    // Fault events surfaced by the inner engine's watchdog, across all
+    // outer iterations; they dominate the final `SolveOutcome`.
+    let mut all_faults: Vec<FaultEvent> = Vec::new();
 
     let mut prev_gap = f64::INFINITY;
     for t in 1..=cfg.max_outer {
@@ -458,6 +494,23 @@ where
             });
             break;
         }
+        // Wall-clock budget: checked right after the global gap, so the
+        // returned iterate always carries a freshly evaluated certificate
+        // even when the budget expires (partial-but-certified).
+        if let Some(limit) = cfg.max_seconds {
+            if start.elapsed().as_secs_f64() >= limit {
+                iterations.push(CelerIteration {
+                    t,
+                    gap,
+                    ws_size: 0,
+                    support_size: support.len(),
+                    inner_epochs: 0,
+                    seconds: start.elapsed().as_secs_f64(),
+                    dual_winner: winner,
+                });
+                break;
+            }
+        }
 
         // ---- working set ----
         // (empty columns get d_j = +∞ and are excluded centrally by
@@ -516,6 +569,12 @@ where
             screen: false,
             trace: false,
             stop: StopRule::DualityGap,
+            // Hand the inner solve whatever budget is left so a single
+            // long subproblem cannot blow far past the outer limit.
+            max_seconds: cfg
+                .max_seconds
+                .map(|l| (l - start.elapsed().as_secs_f64()).max(0.0)),
+            faults: cfg.faults.clone(),
         };
         let inner_epochs = {
             // The view's columns are locally indexed, so per-feature
@@ -535,6 +594,7 @@ where
                 datafit,
                 &sub_penalty,
             );
+            all_faults.extend_from_slice(outcome.status.faults());
             outcome.epochs
         };
         total_inner_epochs += inner_epochs;
@@ -585,6 +645,7 @@ where
     }
 
     ws.put_inner(inner_ws);
+    let status = SolveOutcome::from_run(converged, gap, total_inner_epochs, all_faults);
     let result = SolveResult {
         beta: ws.beta.clone(),
         r: ws.r.clone(),
@@ -593,6 +654,7 @@ where
         epochs: total_inner_epochs,
         converged,
         trace: Vec::new(),
+        status,
     };
     CelerOutput { result, iterations }
 }

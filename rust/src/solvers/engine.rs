@@ -46,8 +46,14 @@ use crate::lasso::primal;
 use crate::penalty::{Penalty, L1};
 use crate::screening::ScreeningState;
 use crate::solvers::{DualScratch, DualState, GapCheck, SolveResult};
+use crate::util::error::{FaultEvent, FaultKind, RecoveryAction, SolveOutcome};
+use crate::util::fault::FaultPlan;
 use crate::util::soft_threshold;
 use std::time::Instant;
+
+/// How many checkpoint rollbacks a single engine run may perform before
+/// the watchdog gives up and returns the last certified state.
+pub const MAX_RECOVERIES: usize = 3;
 
 /// How the engine decides it is done.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,6 +89,32 @@ pub struct EngineConfig {
     pub trace: bool,
     /// Stopping rule.
     pub stop: StopRule,
+    /// Wall-clock budget in seconds (checked at every stop-rule
+    /// evaluation). `None` = unlimited. On expiry the run returns its
+    /// partial-but-certified state with
+    /// [`SolveOutcome::BudgetExhausted`].
+    pub max_seconds: Option<f64>,
+    /// Fault-injection plan (inert by default; see
+    /// [`crate::util::fault`]).
+    pub faults: FaultPlan,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            tol: 1e-6,
+            max_epochs: 10_000,
+            gap_freq: 10,
+            k: 5,
+            extrapolate: true,
+            best_dual: true,
+            screen: true,
+            trace: false,
+            stop: StopRule::DualityGap,
+            max_seconds: None,
+            faults: FaultPlan::none(),
+        }
+    }
 }
 
 /// How to initialize the primal iterate for a run.
@@ -113,6 +145,10 @@ pub struct EngineOutcome {
     pub converged: bool,
     /// Per-check trace (empty unless `cfg.trace`).
     pub trace: Vec<GapCheck>,
+    /// How the run ended: `Certified`, `BudgetExhausted` (epoch cap or
+    /// wall-clock budget) or `Recovered` (watchdog rollbacks occurred —
+    /// the result is still gap-certified when `converged` holds).
+    pub status: SolveOutcome,
 }
 
 /// A solver strategy: the per-epoch primal update, plus optional hooks
@@ -176,6 +212,16 @@ pub trait Strategy<D: DesignOps, F: Datafit = Quadratic, P: Penalty = L1> {
     /// returned β. Default: no-op (CD already maintains `r = y − Xβ`).
     fn finalize(&mut self, x: &D, y: &[f64], beta: &[f64], r: &mut [f64]) {
         let _ = (x, y, beta, r);
+    }
+
+    /// Notification that the engine watchdog detected a fault and rolled
+    /// the iterate back to the last certified checkpoint. Strategies
+    /// with private state must resynchronize from the restored (β, r);
+    /// the f32 sweep strategy additionally escalates to f64 epochs (its
+    /// f32 shadow may carry the corruption that triggered the fault).
+    /// Returns the [`RecoveryAction`] to record in the fault event.
+    fn on_fault(&mut self) -> RecoveryAction {
+        RecoveryAction::RolledBack
     }
 }
 
@@ -325,6 +371,15 @@ pub struct Workspace {
     /// reused — a coordinator worker or λ-path driver carries the
     /// scalar, batched and block engine state in one place.
     pub mt: Option<Box<crate::solvers::block::BlockWorkspace>>,
+    /// Watchdog checkpoint: the (β, r, xw, θ) snapshot taken at the last
+    /// healthy gap check, restored on a non-finite/divergence fault.
+    /// `ckpt_xw` stays empty on the quadratic path (xw is never read
+    /// there); `ckpt_theta` preserves the certified dual point so an
+    /// aborted run still returns a (β, θ, gap) certificate.
+    pub ckpt_beta: Vec<f64>,
+    pub ckpt_r: Vec<f64>,
+    pub ckpt_xw: Vec<f64>,
+    pub ckpt_theta: Vec<f64>,
 }
 
 /// Fill the cached `‖x_j‖²` / `‖x_j‖` vectors for a design, reusing the
@@ -432,6 +487,7 @@ impl Workspace {
             epochs: outcome.epochs,
             converged: outcome.converged,
             trace: outcome.trace,
+            status: outcome.status,
         }
     }
 }
@@ -595,6 +651,34 @@ pub fn solve_penalty<D: DesignOps, F: Datafit, P: Penalty, S: Strategy<D, F, P>>
     } else {
         penalty_primal(datafit, y, &ws.xw, &ws.r, &ws.beta, lambda, penalty)
     };
+    // Watchdog bookkeeping. On the healthy path these are pure reads and
+    // checkpoint memcpys — no floating-point operation changes, so the
+    // no-fault run stays bit-identical to the pre-watchdog engine
+    // (pinned in tests/prop_penalty.rs).
+    let mut faults: Vec<FaultEvent> = Vec::new();
+    let mut recoveries = 0usize;
+    let mut has_ckpt = false;
+    let mut ckpt_primal = f64::INFINITY;
+    let mut ckpt_gap = f64::INFINITY;
+
+    if use_gap {
+        // Seed the checkpoint with the initial state so a fault at the
+        // very first gap check still has a finite state to roll back to
+        // (the init iterate is valid; its gap is simply unknown).
+        ws.ckpt_beta.resize(p, 0.0);
+        ws.ckpt_beta.copy_from_slice(&ws.beta);
+        ws.ckpt_r.resize(n, 0.0);
+        ws.ckpt_r.copy_from_slice(&ws.r);
+        if F::IS_QUADRATIC {
+            ws.ckpt_xw.clear();
+        } else {
+            ws.ckpt_xw.resize(n, 0.0);
+            ws.ckpt_xw.copy_from_slice(&ws.xw);
+        }
+        ws.ckpt_theta.resize(n, 0.0);
+        ws.ckpt_theta.copy_from_slice(&ws.dual.theta);
+        has_ckpt = true;
+    }
 
     for epoch in 1..=cfg.max_epochs {
         epochs = epoch;
@@ -620,10 +704,16 @@ pub fn solve_penalty<D: DesignOps, F: Datafit, P: Penalty, S: Strategy<D, F, P>>
                     break;
                 }
                 prev_obj = obj;
+                if let Some(limit) = cfg.max_seconds {
+                    if start.elapsed().as_secs_f64() >= limit {
+                        break;
+                    }
+                }
             }
             StopRule::DualityGap => {
                 if epoch % cfg.gap_freq == 0 || epoch == cfg.max_epochs {
                     strategy.sync_check_state(x, y, &mut ws.beta, &mut ws.r);
+                    cfg.faults.inject_nan_residual(epoch, &mut ws.r);
                     strategy.fill_check_residual(x, y, &ws.beta, &ws.r, &mut ws.r_check);
                     let (d_res, d_accel) = if P::IS_L1 {
                         ws.dual.update_datafit(x, y, lambda, &ws.r_check, &mut ws.scratch, datafit)
@@ -633,6 +723,59 @@ pub fn solve_penalty<D: DesignOps, F: Datafit, P: Penalty, S: Strategy<D, F, P>>
                     let p_val =
                         penalty_primal(datafit, y, &ws.xw, &ws.r_check, &ws.beta, lambda, penalty);
                     gap = p_val - ws.dual.dval;
+                    // ---- watchdog: non-finite / divergence detection with
+                    // certified-checkpoint rollback. Detection is a pure
+                    // read of values the check already computed.
+                    let diverged = ckpt_primal.is_finite()
+                        && p_val.is_finite()
+                        // FISTA restarts and prox-Newton line-search misses
+                        // are non-monotone by design — only a gross blow-up
+                        // past the last certified primal counts as a fault.
+                        && p_val > 100.0 * (ckpt_primal.abs() + 1.0);
+                    if !gap.is_finite() && !(p_val.is_finite() && ws.dual.dval.is_finite()) || diverged {
+                        let kind = if !p_val.is_finite() {
+                            FaultKind::NonFiniteResidual
+                        } else if !ws.dual.dval.is_finite() {
+                            FaultKind::NonFiniteDual
+                        } else if diverged {
+                            FaultKind::PrimalDivergence
+                        } else {
+                            FaultKind::NonFiniteGap
+                        };
+                        if has_ckpt && recoveries < MAX_RECOVERIES {
+                            // Roll back to the last certified checkpoint,
+                            // flush the extrapolation ring (a corrupted θ
+                            // in the ring would re-poison the next accel
+                            // point), and let the strategy resync.
+                            recoveries += 1;
+                            ws.beta.copy_from_slice(&ws.ckpt_beta);
+                            ws.r.copy_from_slice(&ws.ckpt_r);
+                            if !ws.ckpt_xw.is_empty() {
+                                ws.xw.copy_from_slice(&ws.ckpt_xw);
+                            }
+                            ws.dual.reset(n, p, cfg.k.max(1), cfg.extrapolate, cfg.best_dual);
+                            let action = strategy.on_fault();
+                            faults.push(FaultEvent { kind, epoch, action });
+                            gap = ckpt_gap;
+                            continue;
+                        }
+                        // Recovery budget exhausted (or nothing to roll
+                        // back to): restore the last certified state and
+                        // stop — never return a non-finite iterate.
+                        faults.push(FaultEvent { kind, epoch, action: RecoveryAction::Aborted });
+                        if has_ckpt {
+                            ws.beta.copy_from_slice(&ws.ckpt_beta);
+                            ws.r.copy_from_slice(&ws.ckpt_r);
+                            if !ws.ckpt_xw.is_empty() {
+                                ws.xw.copy_from_slice(&ws.ckpt_xw);
+                            }
+                            ws.dual.theta.resize(n, 0.0);
+                            ws.dual.theta.copy_from_slice(&ws.ckpt_theta);
+                        }
+                        gap = ckpt_gap;
+                        converged = false;
+                        break;
+                    }
                     // Screen only while unconverged: the reported (β, gap)
                     // pair must be the one that passed the stopping test —
                     // a screening mutation after the final check would go
@@ -687,6 +830,17 @@ pub fn solve_penalty<D: DesignOps, F: Datafit, P: Penalty, S: Strategy<D, F, P>>
                         let screening = &ws.screening;
                         ws.active.retain(|&j| !screening.is_screened(j));
                     }
+                    // ---- healthy check: refresh the certified
+                    // checkpoint (taken post-screening so a rollback
+                    // restores a state consistent with the screened set).
+                    ws.ckpt_beta.copy_from_slice(&ws.beta);
+                    ws.ckpt_r.copy_from_slice(&ws.r);
+                    if !F::IS_QUADRATIC {
+                        ws.ckpt_xw.copy_from_slice(&ws.xw);
+                    }
+                    ws.ckpt_theta.copy_from_slice(&ws.dual.theta);
+                    ckpt_primal = p_val;
+                    ckpt_gap = gap;
                     if cfg.trace {
                         trace.push(GapCheck {
                             epoch,
@@ -702,13 +856,19 @@ pub fn solve_penalty<D: DesignOps, F: Datafit, P: Penalty, S: Strategy<D, F, P>>
                         converged = true;
                         break;
                     }
+                    if let Some(limit) = cfg.max_seconds {
+                        if start.elapsed().as_secs_f64() >= limit {
+                            break;
+                        }
+                    }
                 }
             }
         }
     }
 
     strategy.finalize(x, y, &ws.beta, &mut ws.r);
-    EngineOutcome { gap, epochs, converged, trace }
+    let status = SolveOutcome::from_run(converged, gap, epochs, faults);
+    EngineOutcome { gap, epochs, converged, trace, status }
 }
 
 #[cfg(test)]
@@ -727,6 +887,7 @@ mod tests {
             screen: false,
             trace: false,
             stop: StopRule::DualityGap,
+            ..EngineConfig::default()
         }
     }
 

@@ -256,6 +256,24 @@ pub fn sparse_logreg_solve(
     sparse_logreg_solve_ws(x, y, lambda, beta0, cfg, &mut ws)
 }
 
+/// Validating front door for [`sparse_logreg_solve`]: non-finite
+/// design/label entries, dimension mismatches, labels outside {−1, +1}
+/// and a bad λ come back as a typed
+/// [`SolveError`](crate::util::error::SolveError) instead of a panic,
+/// before the first epoch runs.
+pub fn try_sparse_logreg_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CelerConfig,
+) -> Result<CelerOutput, crate::util::error::SolveError> {
+    crate::data::validate::validate_problem(x, y)?;
+    crate::data::validate::validate_family_labels(GlmFamily::Logistic, y)?;
+    validate_lambda(lambda)?;
+    Ok(sparse_logreg_solve(x, y, lambda, beta0, cfg))
+}
+
 /// [`sparse_logreg_solve`] on a caller-provided reusable [`Workspace`].
 pub fn sparse_logreg_solve_ws(
     x: &DesignMatrix,
@@ -282,6 +300,35 @@ pub fn sparse_poisson_solve(
 ) -> CelerOutput {
     let mut ws = Workspace::new();
     sparse_poisson_solve_ws(x, y, lambda, beta0, cfg, &mut ws)
+}
+
+/// Validating front door for [`sparse_poisson_solve`]: non-finite
+/// design/label entries, dimension mismatches, negative counts and a
+/// bad λ come back as a typed
+/// [`SolveError`](crate::util::error::SolveError) instead of a panic,
+/// before the first epoch runs.
+pub fn try_sparse_poisson_solve(
+    x: &DesignMatrix,
+    y: &[f64],
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    cfg: &CelerConfig,
+) -> Result<CelerOutput, crate::util::error::SolveError> {
+    crate::data::validate::validate_problem(x, y)?;
+    crate::data::validate::validate_family_labels(GlmFamily::Poisson, y)?;
+    validate_lambda(lambda)?;
+    Ok(sparse_poisson_solve(x, y, lambda, beta0, cfg))
+}
+
+fn validate_lambda(lambda: f64) -> Result<(), crate::util::error::SolveError> {
+    if !lambda.is_finite() || lambda <= 0.0 {
+        return Err(crate::util::error::SolveError::BadGrid {
+            index: 0,
+            value: lambda,
+            reason: "lambda must be finite and > 0",
+        });
+    }
+    Ok(())
 }
 
 /// [`sparse_poisson_solve`] on a caller-provided reusable [`Workspace`].

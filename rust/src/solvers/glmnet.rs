@@ -15,6 +15,7 @@ use crate::data::design::{DesignMatrix, DesignOps};
 use crate::lasso::{dual, primal};
 use crate::solvers::engine::{self, CdStrategy, EngineConfig, Init, StopRule, Workspace};
 use crate::solvers::SolveResult;
+use crate::util::error::{FaultEvent, SolveOutcome};
 
 /// GLMNET-style configuration.
 #[derive(Debug, Clone)]
@@ -119,15 +120,18 @@ fn glmnet_generic<D: DesignOps>(
         screen: false,
         trace: false,
         stop: StopRule::PrimalDecrease,
+        ..EngineConfig::default()
     };
 
     let mut epochs = 0usize;
     let mut converged = false;
+    let mut all_faults: Vec<FaultEvent> = Vec::new();
     for _pass in 0..cfg.max_outer {
         // ---- CD on the active set until primal decrease < tol ----
         let outcome =
             engine::solve(x, y, lambda, Init::Resume, Some(&active), &inner_cfg, ws, &mut CdStrategy);
         epochs += outcome.epochs;
+        all_faults.extend_from_slice(outcome.status.faults());
 
         // ---- KKT on the strong set ----
         // Fused scan: Xᵀr plus its infinity norm in one sharded pass.
@@ -168,6 +172,7 @@ fn glmnet_generic<D: DesignOps>(
     let _ = dual::rescale_to_feasible_into(x, &ws.r, lambda, &mut ws.scratch.xtr, &mut ws.theta);
     let gap = primal::primal_from_residual(&ws.r, &ws.beta, lambda)
         - dual::dual_objective(y, &ws.theta, lambda);
+    let status = SolveOutcome::from_run(converged, gap, epochs, all_faults);
     SolveResult {
         beta: ws.beta.clone(),
         r: ws.r.clone(),
@@ -176,6 +181,7 @@ fn glmnet_generic<D: DesignOps>(
         epochs,
         converged,
         trace: Vec::new(),
+        status,
     }
 }
 

@@ -193,6 +193,7 @@ pub fn ista_solve_ws<D: DesignOps>(
         screen: false,
         trace: cfg.trace,
         stop: StopRule::DualityGap,
+        ..EngineConfig::default()
     };
     let init = match beta0 {
         Some(b) => Init::Warm(b),

@@ -72,6 +72,10 @@ pub struct SolveResult {
     pub converged: bool,
     /// Per-gap-check trace (empty unless tracing was enabled).
     pub trace: Vec<GapCheck>,
+    /// How the run ended (`Certified` / `BudgetExhausted` / `Recovered`
+    /// — see [`crate::util::error::SolveOutcome`]). `Recovered` results
+    /// with `converged = true` are still gap-certified.
+    pub status: crate::util::error::SolveOutcome,
 }
 
 impl SolveResult {

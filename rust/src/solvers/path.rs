@@ -29,6 +29,7 @@ use crate::solvers::engine::Workspace;
 use crate::solvers::glm::{glm_celer_solve_ws, ProxNewtonCd};
 use crate::solvers::glmnet::{glmnet_solve_ws, GlmnetConfig};
 use crate::solvers::Precision;
+use crate::util::error::{SolveError, SolveOutcome};
 use std::time::Instant;
 
 /// Log-spaced λ grid from `λ_max` down to `λ_max · min_ratio` (inclusive),
@@ -160,6 +161,8 @@ pub struct PathStep {
     pub converged: bool,
     /// Solution, kept when `store_betas` was requested.
     pub beta: Option<Vec<f64>>,
+    /// Typed outcome of this grid point (certified / budget / recovered).
+    pub status: SolveOutcome,
 }
 
 /// A full path result.
@@ -173,6 +176,16 @@ pub struct PathResult {
 impl PathResult {
     pub fn all_converged(&self) -> bool {
         self.steps.iter().all(|s| s.converged)
+    }
+
+    /// Aggregate typed outcome of the whole path: fault events anywhere
+    /// dominate, then any budget-exhausted step, else certified.
+    pub fn status(&self) -> SolveOutcome {
+        let mut agg = SolveOutcome::Certified;
+        for s in &self.steps {
+            agg.absorb(s.status.clone());
+        }
+        agg
     }
 }
 
@@ -223,67 +236,103 @@ pub fn run_path_with_workspace(
     store_betas: bool,
     ws: &mut Workspace,
 ) -> PathResult {
+    run_path_budgeted(x, y, grid, solver, store_betas, None, ws)
+}
+
+/// [`run_path_with_workspace`] under an overall wall-clock budget: when
+/// `max_seconds` expires, the remaining grid points are skipped and the
+/// partial path is returned. Every step already in `steps` keeps its gap
+/// certificate — the budget only truncates the grid, it never degrades a
+/// solved point. For [`PathSolver::BatchedCd`] the budget is forwarded
+/// into [`BatchConfig::max_seconds`] (tightening any existing limit).
+pub fn run_path_budgeted(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    solver: &PathSolver,
+    store_betas: bool,
+    max_seconds: Option<f64>,
+    ws: &mut Workspace,
+) -> PathResult {
     if let PathSolver::BatchedCd(cfg) = solver {
-        return run_path_batched(x, y, grid, cfg, store_betas, ws);
+        let mut cfg = cfg.clone();
+        if let Some(limit) = max_seconds {
+            cfg.max_seconds = Some(cfg.max_seconds.map_or(limit, |c| c.min(limit)));
+        }
+        return run_path_batched(x, y, grid, &cfg, store_betas, ws);
     }
     if let PathSolver::CelerLogreg(cfg) = solver {
         // Grid jobs arrive with whatever targets the dataset has;
         // logistic regression needs ±1 labels, so binarize by sign
         // (identity on label vectors).
         let labels = crate::datafit::sign_labels(y);
-        let mut res =
-            glm_path_with_workspace(x, &labels, GlmFamily::Logistic, grid, cfg, store_betas, ws);
+        let mut res = glm_path_budgeted_with_workspace(
+            x,
+            &labels,
+            GlmFamily::Logistic,
+            grid,
+            cfg,
+            store_betas,
+            max_seconds,
+            ws,
+        );
         res.solver = solver.name().to_string();
         return res;
     }
     let start = Instant::now();
     let p = crate::data::design::DesignOps::p(x);
     // Weighted-ℓ₁ column-norm weights are a property of the design, not
-    // of λ: build the penalty once for the whole grid.
-    let wlasso_penalty = match solver {
-        PathSolver::CelerWlasso(_) => {
-            Some(crate::penalty::WeightedL1::new(crate::penalty::scale_weights(x)))
-        }
-        _ => None,
-    };
+    // of λ: built lazily, at most once for the whole grid.
+    let mut wlasso_penalty: Option<crate::penalty::WeightedL1> = None;
     let mut beta = vec![0.0; p];
     let mut steps = Vec::with_capacity(grid.len());
     let mut lambda_prev = dual::lambda_max(x, y);
     for &lambda in grid {
+        if let Some(limit) = max_seconds {
+            if start.elapsed().as_secs_f64() >= limit {
+                break;
+            }
+        }
         let t0 = Instant::now();
-        let (new_beta, gap, epochs, converged) = match solver {
+        let (new_beta, gap, epochs, converged, status) = match solver {
             PathSolver::CelerPrune(cfg) | PathSolver::CelerSafe(cfg) => {
                 let out = celer_solve_on_ws(x, y, lambda, Some(&beta), cfg, ws);
-                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+                let r = out.result;
+                (r.beta, r.gap, r.epochs, r.converged, r.status)
             }
             PathSolver::Blitz(cfg) => {
                 let out = blitz_solve_ws(x, y, lambda, Some(&beta), cfg, ws);
-                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+                let r = out.result;
+                (r.beta, r.gap, r.epochs, r.converged, r.status)
             }
             PathSolver::Glmnet(cfg) => {
                 let out = glmnet_solve_ws(x, y, lambda, lambda_prev, Some(&beta), cfg, ws);
-                (out.beta, out.gap, out.epochs, out.converged)
+                (out.beta, out.gap, out.epochs, out.converged, out.status)
             }
             PathSolver::VanillaCd(cfg) | PathSolver::GapSafeCd(cfg) => {
                 let out = cd_solve_ws(x, y, lambda, Some(&beta), cfg, ws);
-                (out.beta, out.gap, out.epochs, out.converged)
+                (out.beta, out.gap, out.epochs, out.converged, out.status)
             }
             PathSolver::MultiTask(cfg) => {
                 // q = 1 block solve: same problem, block-engine schedule.
                 let mut mtws = ws.take_mt();
                 let out = mt_celer_solve_ws(x, y, 1, lambda, Some(&beta), cfg, &mut mtws);
                 ws.put_mt(mtws);
-                (out.b.data, out.gap, out.epochs, out.converged)
+                (out.b.data, out.gap, out.epochs, out.converged, out.status)
             }
             PathSolver::CelerEnet(cfg, l1_ratio) => {
                 let pen = ElasticNet::new(*l1_ratio);
                 let out = celer_penalty_solve_on_ws(x, y, lambda, Some(&beta), &pen, cfg, ws);
-                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+                let r = out.result;
+                (r.beta, r.gap, r.epochs, r.converged, r.status)
             }
             PathSolver::CelerWlasso(cfg) => {
-                let pen = wlasso_penalty.as_ref().expect("built before the grid loop");
-                let out = celer_penalty_solve_on_ws(x, y, lambda, Some(&beta), pen, cfg, ws);
-                (out.result.beta, out.result.gap, out.result.epochs, out.result.converged)
+                let pen = wlasso_penalty.get_or_insert_with(|| {
+                    crate::penalty::WeightedL1::new(crate::penalty::scale_weights(x))
+                });
+                let out = celer_penalty_solve_on_ws(x, y, lambda, Some(&beta), &*pen, cfg, ws);
+                let r = out.result;
+                (r.beta, r.gap, r.epochs, r.converged, r.status)
             }
             PathSolver::BatchedCd(_) => unreachable!("handled by run_path_batched"),
             PathSolver::CelerLogreg(_) => unreachable!("handled by glm_path_with_workspace"),
@@ -297,6 +346,7 @@ pub fn run_path_with_workspace(
             support_size: crate::lasso::primal::support_size(&beta),
             converged,
             beta: if store_betas { Some(beta.clone()) } else { None },
+            status,
         });
         lambda_prev = lambda;
     }
@@ -385,6 +435,7 @@ pub fn run_path_batched_penalty<P: Penalty>(
                 gap: lane.gap,
                 support_size,
                 converged: lane.converged,
+                status: lane.status,
                 beta: if store_betas { Some(lane.beta) } else { None },
             }
         })
@@ -427,14 +478,37 @@ pub fn glm_path_with_workspace(
     store_betas: bool,
     ws: &mut Workspace,
 ) -> PathResult {
+    glm_path_budgeted_with_workspace(x, y, family, grid, cfg, store_betas, None, ws)
+}
+
+/// [`glm_path_with_workspace`] under an overall wall-clock budget: like
+/// [`run_path_budgeted`], expiry truncates the grid and the partial path
+/// keeps every already-earned gap certificate.
+#[allow(clippy::too_many_arguments)]
+pub fn glm_path_budgeted_with_workspace(
+    x: &DesignMatrix,
+    y: &[f64],
+    family: GlmFamily,
+    grid: &[f64],
+    cfg: &CelerConfig,
+    store_betas: bool,
+    max_seconds: Option<f64>,
+    ws: &mut Workspace,
+) -> PathResult {
     let start = Instant::now();
     let p = crate::data::design::DesignOps::p(x);
     let mut strategy = ProxNewtonCd::default();
     let mut beta = vec![0.0; p];
     let mut steps = Vec::with_capacity(grid.len());
     for &lambda in grid {
+        if let Some(limit) = max_seconds {
+            if start.elapsed().as_secs_f64() >= limit {
+                break;
+            }
+        }
         let t0 = Instant::now();
         let out = glm_celer_solve_ws(x, y, family, lambda, Some(&beta), cfg, ws, &mut strategy);
+        let status = out.result.status;
         beta = out.result.beta;
         steps.push(PathStep {
             lambda,
@@ -444,6 +518,7 @@ pub fn glm_path_with_workspace(
             support_size: crate::lasso::primal::support_size(&beta),
             converged: out.result.converged,
             beta: if store_betas { Some(beta.clone()) } else { None },
+            status,
         });
     }
     PathResult {
@@ -451,6 +526,56 @@ pub fn glm_path_with_workspace(
         steps,
         total_seconds: start.elapsed().as_secs_f64(),
     }
+}
+
+/// Validating front door for [`run_path`]: rejects non-finite designs,
+/// labels, and grids with a typed [`SolveError`] before any epoch runs.
+pub fn try_run_path(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    solver: &PathSolver,
+    store_betas: bool,
+) -> Result<PathResult, SolveError> {
+    crate::data::validate::validate_problem(x, y)?;
+    crate::data::validate::validate_grid(grid)?;
+    Ok(run_path(x, y, grid, solver, store_betas))
+}
+
+/// Validating front door for [`lasso_path`].
+pub fn try_lasso_path<P: Penalty>(
+    x: &DesignMatrix,
+    y: &[f64],
+    grid: &[f64],
+    tol: f64,
+    lanes: usize,
+    store_betas: bool,
+    penalty: &P,
+) -> Result<PathResult, SolveError> {
+    crate::data::validate::validate_problem(x, y)?;
+    crate::data::validate::validate_grid(grid)?;
+    if !(tol.is_finite() && tol > 0.0) {
+        return Err(SolveError::BadConfig { what: format!("tol must be finite and > 0, got {tol}") });
+    }
+    Ok(lasso_path(x, y, grid, tol, lanes, store_betas, penalty))
+}
+
+/// Validating front door for [`glm_path`]: additionally checks the label
+/// domain of the datafit family (±1 for logistic, non-negative for
+/// Poisson) so bad targets surface as [`SolveError::LabelDomain`]
+/// instead of a panic deep in the engine.
+pub fn try_glm_path(
+    x: &DesignMatrix,
+    y: &[f64],
+    family: GlmFamily,
+    grid: &[f64],
+    cfg: &CelerConfig,
+    store_betas: bool,
+) -> Result<PathResult, SolveError> {
+    crate::data::validate::validate_problem(x, y)?;
+    crate::data::validate::validate_family_labels(family, y)?;
+    crate::data::validate::validate_grid(grid)?;
+    Ok(glm_path(x, y, family, grid, cfg, store_betas))
 }
 
 /// One solved grid point of a Multi-Task λ path (paper §7).

@@ -173,6 +173,17 @@ impl<D: DesignOps> Strategy<D> for F32CdStrategy {
         // f32 mirror at the next epoch.
         self.synced = false;
     }
+
+    fn on_fault(&mut self) -> crate::util::error::RecoveryAction {
+        // The engine rolled (β, r) back to the last certified
+        // checkpoint. The f32 mirror may carry the corruption that
+        // triggered the fault, so do NOT promote it — escalate to f64
+        // epochs from the restored f64 state instead (the strongest
+        // recovery the precision ladder offers).
+        self.f64_mode = true;
+        self.synced = false;
+        crate::util::error::RecoveryAction::EscalatedF64
+    }
 }
 
 #[cfg(test)]

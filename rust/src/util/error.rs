@@ -1,0 +1,261 @@
+//! Typed error/outcome surface for the solver stack (the robustness
+//! layer's vocabulary — see ARCHITECTURE.md §"Robustness layer").
+//!
+//! Three families of types live here:
+//!
+//! - [`SolveError`]: everything that can be rejected **before the first
+//!   epoch** (non-finite inputs, dimension mismatches, label-domain and
+//!   weight violations — produced by [`crate::data::validate`]), typed
+//!   parse failures from the svmlight reader, and scheduler-level job
+//!   failures (poisoned / timed-out cells). Implements
+//!   `std::error::Error`, so `?` lifts it into `anyhow::Result`
+//!   contexts for free.
+//! - [`SolveOutcome`]: how a run that *did* start ended. `Certified`
+//!   means the stopping rule fired with a valid duality-gap
+//!   certificate; `BudgetExhausted` means an epoch or wall-clock budget
+//!   ran out first (the returned iterate is still the best certified
+//!   state); `Recovered` means one or more in-loop faults were detected
+//!   and the engine rolled back to its last gap-certified checkpoint —
+//!   a `Recovered` run that reports `converged = true` is exactly as
+//!   certified as a clean one (the final gap is recomputable from the
+//!   returned (β, θ) pair).
+//! - [`FaultEvent`]/[`FaultKind`]/[`RecoveryAction`]: the audit trail a
+//!   watchdog leaves behind, one event per detected fault.
+
+use std::fmt;
+
+/// A typed, pre-epoch or scheduler-level failure. Every public `try_*`
+/// entry point returns `Result<_, SolveError>`; the historical
+/// panicking/silent paths are unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveError {
+    /// A design-matrix entry is NaN or ±∞.
+    NonFiniteDesign { row: usize, col: usize, value: f64 },
+    /// A label/target entry is NaN or ±∞.
+    NonFiniteLabels { index: usize, value: f64 },
+    /// `y.len()` does not match the design's row count.
+    DimensionMismatch { rows: usize, labels: usize },
+    /// A target violates the datafit's domain (logistic: ±1 labels;
+    /// Poisson: finite counts ≥ 0).
+    LabelDomain { family: &'static str, index: usize, value: f64, expected: &'static str },
+    /// A penalty weight is NaN or negative (0 = unpenalized and +∞ =
+    /// hard-zeroed are both legal).
+    BadWeight { index: usize, value: f64 },
+    /// A λ-grid entry is non-finite, non-positive, or the grid is not
+    /// non-increasing.
+    BadGrid { index: usize, value: f64, reason: &'static str },
+    /// A configuration value is unusable (unknown solver name, zero
+    /// grid, …).
+    BadConfig { what: String },
+    /// Typed parse failure (svmlight reader): 1-based line and column.
+    Parse { line: usize, col: usize, msg: String },
+    /// A scheduler job panicked on every attempt and was quarantined.
+    JobPoisoned { job: usize, attempts: usize, detail: String },
+    /// A scheduler job exceeded its per-job timeout on every attempt.
+    JobTimeout { job: usize, seconds: f64 },
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveError::NonFiniteDesign { row, col, value } => {
+                write!(f, "non-finite design entry X[{row}, {col}] = {value}")
+            }
+            SolveError::NonFiniteLabels { index, value } => {
+                write!(f, "non-finite label y[{index}] = {value}")
+            }
+            SolveError::DimensionMismatch { rows, labels } => {
+                write!(f, "dimension mismatch: design has {rows} rows but y has {labels} entries")
+            }
+            SolveError::LabelDomain { family, index, value, expected } => {
+                write!(f, "{family} datafit requires {expected}; got y[{index}] = {value}")
+            }
+            SolveError::BadWeight { index, value } => {
+                write!(f, "penalty weight w[{index}] = {value} (must be finite ≥ 0, or +inf)")
+            }
+            SolveError::BadGrid { index, value, reason } => {
+                write!(f, "bad λ grid at index {index} (λ = {value}): {reason}")
+            }
+            SolveError::BadConfig { what } => write!(f, "bad configuration: {what}"),
+            SolveError::Parse { line, col, msg } => {
+                write!(f, "parse error at line {line}, column {col}: {msg}")
+            }
+            SolveError::JobPoisoned { job, attempts, detail } => {
+                write!(f, "job {job} quarantined after {attempts} attempt(s): {detail}")
+            }
+            SolveError::JobTimeout { job, seconds } => {
+                write!(f, "job {job} exceeded its {seconds}s timeout")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// What an in-loop watchdog detected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The duality gap evaluated to NaN/∞ at a check.
+    NonFiniteGap,
+    /// The primal value (or the residual feeding it) went non-finite.
+    NonFiniteResidual,
+    /// The dual objective went non-finite.
+    NonFiniteDual,
+    /// The primal objective exploded past the divergence guard.
+    PrimalDivergence,
+    /// A parallel shard/job closure panicked.
+    ShardPanic,
+    /// A worker exceeded its per-job timeout.
+    WorkerDelay,
+}
+
+/// What the watchdog did about it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// Rolled back to the last gap-certified checkpoint (β, r, best
+    /// dual flushed) and continued.
+    RolledBack,
+    /// Rolled back and additionally escalated f32 sweeps to f64 epochs.
+    EscalatedF64,
+    /// Restarted the λ-lane from its warm-start seed.
+    Restarted,
+    /// Gave up: the recovery budget was exhausted; the last certified
+    /// state was restored and the run terminated early.
+    Aborted,
+    /// A scheduler job was retried on a fresh worker state.
+    Retried,
+    /// A scheduler job was quarantined (typed error returned).
+    Quarantined,
+}
+
+/// One watchdog event: what was detected, when, and the response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// Epoch (engine) or attempt number (scheduler) at detection.
+    pub epoch: usize,
+    pub action: RecoveryAction,
+}
+
+/// How a run ended. Carried by
+/// [`EngineOutcome`](crate::solvers::engine::EngineOutcome) and
+/// [`SolveResult`](crate::solvers::SolveResult).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveOutcome {
+    /// The stopping rule fired; the result carries a valid certificate.
+    Certified,
+    /// An epoch or wall-clock budget ran out before the tolerance was
+    /// met. `gap`/`epochs` snapshot the partial-but-certified state.
+    BudgetExhausted { gap: f64, epochs: usize },
+    /// In-loop faults were detected and recovered from (see the event
+    /// list). The result is still gap-certified when `converged` holds.
+    Recovered { faults: Vec<FaultEvent> },
+}
+
+impl Default for SolveOutcome {
+    fn default() -> Self {
+        SolveOutcome::Certified
+    }
+}
+
+impl SolveOutcome {
+    /// The canonical status mapping shared by every solver loop:
+    /// recorded faults dominate (a recovered run stays `Recovered` even
+    /// if it later converged — the event list is the audit trail), then
+    /// budget exhaustion, then `Certified`.
+    pub fn from_run(converged: bool, gap: f64, epochs: usize, faults: Vec<FaultEvent>) -> Self {
+        if !faults.is_empty() {
+            SolveOutcome::Recovered { faults }
+        } else if !converged {
+            SolveOutcome::BudgetExhausted { gap, epochs }
+        } else {
+            SolveOutcome::Certified
+        }
+    }
+
+    /// True when no fault was recorded and no budget ran out.
+    pub fn is_certified(&self) -> bool {
+        matches!(self, SolveOutcome::Certified)
+    }
+
+    /// The recorded fault events (empty unless `Recovered`).
+    pub fn faults(&self) -> &[FaultEvent] {
+        match self {
+            SolveOutcome::Recovered { faults } => faults,
+            _ => &[],
+        }
+    }
+
+    /// Fold another loop's status into this one (outer loops aggregate
+    /// the statuses of their inner solves): fault lists concatenate,
+    /// and `BudgetExhausted` survives unless faults dominate.
+    pub fn absorb(&mut self, other: SolveOutcome) {
+        match other {
+            SolveOutcome::Certified => {}
+            SolveOutcome::BudgetExhausted { gap, epochs } => {
+                if matches!(self, SolveOutcome::Certified) {
+                    *self = SolveOutcome::BudgetExhausted { gap, epochs };
+                }
+            }
+            SolveOutcome::Recovered { faults: mut other_faults } => match self {
+                SolveOutcome::Recovered { faults } => faults.append(&mut other_faults),
+                _ => *self = SolveOutcome::Recovered { faults: other_faults },
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = SolveError::NonFiniteDesign { row: 3, col: 7, value: f64::NAN };
+        assert!(e.to_string().contains("X[3, 7]"));
+        let e = SolveError::Parse { line: 12, col: 4, msg: "bad value".into() };
+        assert!(e.to_string().contains("line 12"));
+        assert!(e.to_string().contains("column 4"));
+    }
+
+    #[test]
+    fn question_mark_lifts_into_anyhow() {
+        fn inner() -> anyhow::Result<()> {
+            Err(SolveError::DimensionMismatch { rows: 5, labels: 4 })?;
+            Ok(())
+        }
+        let msg = inner().unwrap_err().to_string();
+        assert!(msg.contains("dimension mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn from_run_mapping() {
+        assert!(SolveOutcome::from_run(true, 1e-9, 10, Vec::new()).is_certified());
+        assert_eq!(
+            SolveOutcome::from_run(false, 0.5, 100, Vec::new()),
+            SolveOutcome::BudgetExhausted { gap: 0.5, epochs: 100 }
+        );
+        let ev = FaultEvent {
+            kind: FaultKind::NonFiniteGap,
+            epoch: 20,
+            action: RecoveryAction::RolledBack,
+        };
+        let s = SolveOutcome::from_run(true, 1e-9, 10, vec![ev]);
+        assert_eq!(s.faults(), &[ev]);
+    }
+
+    #[test]
+    fn absorb_merges_faults_and_budgets() {
+        let ev = |e: usize| FaultEvent {
+            kind: FaultKind::NonFiniteResidual,
+            epoch: e,
+            action: RecoveryAction::RolledBack,
+        };
+        let mut s = SolveOutcome::Certified;
+        s.absorb(SolveOutcome::BudgetExhausted { gap: 0.1, epochs: 5 });
+        assert_eq!(s, SolveOutcome::BudgetExhausted { gap: 0.1, epochs: 5 });
+        s.absorb(SolveOutcome::Recovered { faults: vec![ev(1)] });
+        s.absorb(SolveOutcome::Recovered { faults: vec![ev(2)] });
+        assert_eq!(s.faults().len(), 2);
+    }
+}

@@ -1,0 +1,177 @@
+//! Deterministic fault-injection harness (feature `fault-inject`).
+//!
+//! A [`FaultPlan`] is carried *by value inside solver configs* rather
+//! than armed through process globals: `cargo test` runs many tests
+//! concurrently in one process, and a global one-shot fault could be
+//! consumed by a concurrent, unrelated solve — turning the bit-identity
+//! pin tests flaky. A config-carried plan is visible only to the solve
+//! it was handed to, so injection is exactly reproducible.
+//!
+//! Without the `fault-inject` feature the plan is a zero-sized no-op:
+//! every injection point compiles to nothing, so production binaries
+//! pay no branch on the hot path beyond the gap-check-frequency code
+//! that already runs there.
+//!
+//! Injection points (all one-shot — they disarm on first firing so a
+//! recovered run cannot be re-poisoned forever):
+//! - `inject_nan_residual(epoch, r)`: writes NaN into `r[0]` at the
+//!   first gap check with `epoch >= armed_epoch`.
+//! - `maybe_panic_shard()`: panics inside a scheduler job closure.
+//! - `maybe_delay_worker()`: sleeps inside a scheduler job so the
+//!   per-job timeout machinery can observe a slow worker.
+
+#[cfg(feature = "fault-inject")]
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+#[cfg(feature = "fault-inject")]
+use std::sync::Arc;
+
+#[cfg(feature = "fault-inject")]
+#[derive(Debug, Default)]
+struct Inner {
+    /// Epoch at which to corrupt the residual; 0 = disarmed.
+    nan_residual_epoch: AtomicUsize,
+    /// Panic once inside the next scheduler job closure.
+    shard_panic: AtomicBool,
+    /// Sleep this many milliseconds inside the next scheduler job.
+    worker_delay_ms: AtomicU64,
+}
+
+/// A deterministic, config-carried set of injection points. `Clone` is
+/// shallow (`Arc`), so the plan handed to a config and the one kept by
+/// the test observe the same disarm state.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    #[cfg(feature = "fault-inject")]
+    inner: Option<Arc<Inner>>,
+}
+
+impl FaultPlan {
+    /// The inert plan: injects nothing. This is `Default`.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+impl FaultPlan {
+    /// A fresh armed-capable plan (still injects nothing until an
+    /// `arm_*` call).
+    pub fn armed() -> Self {
+        FaultPlan { inner: Some(Arc::new(Inner::default())) }
+    }
+
+    /// Corrupt the residual (NaN into `r[0]`) at the first gap check of
+    /// epoch ≥ `epoch` (1-based; pass ≥ 1).
+    pub fn arm_nan_residual(&self, epoch: usize) {
+        let inner = self.inner.as_ref().expect("arm on FaultPlan::none()");
+        inner.nan_residual_epoch.store(epoch.max(1), Ordering::SeqCst);
+    }
+
+    /// Panic inside the next scheduler job closure that polls this plan.
+    pub fn arm_shard_panic(&self) {
+        let inner = self.inner.as_ref().expect("arm on FaultPlan::none()");
+        inner.shard_panic.store(true, Ordering::SeqCst);
+    }
+
+    /// Delay the next scheduler job that polls this plan by `ms`
+    /// milliseconds.
+    pub fn arm_worker_delay(&self, ms: u64) {
+        let inner = self.inner.as_ref().expect("arm on FaultPlan::none()");
+        inner.worker_delay_ms.store(ms, Ordering::SeqCst);
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+impl FaultPlan {
+    /// One-shot: if armed and `epoch` has been reached, set `r[0] = NaN`
+    /// and disarm. Returns whether an injection fired.
+    #[inline]
+    pub fn inject_nan_residual(&self, epoch: usize, r: &mut [f64]) -> bool {
+        let Some(inner) = self.inner.as_ref() else { return false };
+        let armed = inner.nan_residual_epoch.load(Ordering::SeqCst);
+        if armed == 0 || epoch < armed || r.is_empty() {
+            return false;
+        }
+        // Swap-to-zero makes the shot atomic even if two lanes check
+        // the same plan at the same epoch.
+        if inner.nan_residual_epoch.swap(0, Ordering::SeqCst) == 0 {
+            return false;
+        }
+        r[0] = f64::NAN;
+        true
+    }
+
+    /// One-shot: panic if armed (scheduler job body).
+    #[inline]
+    pub fn maybe_panic_shard(&self) {
+        let Some(inner) = self.inner.as_ref() else { return };
+        if inner.shard_panic.swap(false, Ordering::SeqCst) {
+            panic!("fault-inject: shard panic");
+        }
+    }
+
+    /// One-shot: sleep if armed (scheduler job body).
+    #[inline]
+    pub fn maybe_delay_worker(&self) {
+        let Some(inner) = self.inner.as_ref() else { return };
+        let ms = inner.worker_delay_ms.swap(0, Ordering::SeqCst);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+impl FaultPlan {
+    #[inline(always)]
+    pub fn inject_nan_residual(&self, _epoch: usize, _r: &mut [f64]) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn maybe_panic_shard(&self) {}
+
+    #[inline(always)]
+    pub fn maybe_delay_worker(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_plan_injects_nothing() {
+        let plan = FaultPlan::none();
+        let mut r = vec![1.0, 2.0];
+        assert!(!plan.inject_nan_residual(1, &mut r));
+        assert_eq!(r, vec![1.0, 2.0]);
+        plan.maybe_panic_shard();
+        plan.maybe_delay_worker();
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn nan_residual_fires_once_at_epoch() {
+        let plan = FaultPlan::armed();
+        plan.arm_nan_residual(3);
+        let mut r = vec![1.0, 2.0];
+        assert!(!plan.inject_nan_residual(2, &mut r), "not yet due");
+        assert!(plan.inject_nan_residual(3, &mut r), "fires at epoch 3");
+        assert!(r[0].is_nan());
+        r[0] = 1.0;
+        assert!(!plan.inject_nan_residual(4, &mut r), "one-shot disarmed");
+        assert_eq!(r[0], 1.0);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn clones_share_disarm_state() {
+        let plan = FaultPlan::armed();
+        plan.arm_shard_panic();
+        let seen = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.clone().maybe_panic_shard();
+        }));
+        assert!(seen.is_err(), "armed clone panics");
+        plan.maybe_panic_shard(); // disarmed by the clone: no panic
+    }
+}

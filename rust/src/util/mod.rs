@@ -1,5 +1,8 @@
-//! Shared utilities: deterministic RNG, small linear algebra, selection.
+//! Shared utilities: deterministic RNG, small linear algebra, selection,
+//! and the robustness layer's error/fault vocabulary.
 
+pub mod error;
+pub mod fault;
 pub mod json;
 pub mod linalg;
 pub mod par;

@@ -39,6 +39,7 @@ fn engine_cfg(tol: f64, screen: bool) -> EngineConfig {
         screen,
         trace: false,
         stop: StopRule::DualityGap,
+        ..EngineConfig::default()
     }
 }
 

@@ -271,6 +271,7 @@ fn assert_engine_bitwise(x: &DesignMatrix, y: &[f64], ratio: f64, screen: bool, 
         screen,
         trace: false,
         stop: StopRule::DualityGap,
+        ..EngineConfig::default()
     };
     let mut ws = Workspace::new();
     let outcome = engine::solve_penalty(
@@ -470,6 +471,7 @@ fn legacy_celer_solve(
             screen: false,
             trace: false,
             stop: StopRule::DualityGap,
+            ..EngineConfig::default()
         };
         let inner_epochs = {
             let view = DesignView::new(x, &ws_idx, &norms_sq);
@@ -580,6 +582,7 @@ fn engine_cfg(tol: f64, screen: bool) -> EngineConfig {
         screen,
         trace: false,
         stop: StopRule::DualityGap,
+        ..EngineConfig::default()
     }
 }
 

@@ -1,0 +1,311 @@
+//! Robustness-layer property tests (ISSUE 8).
+//!
+//! Always-on section: typed validation rejects every bad-input class on
+//! both dense and CSC designs, the `try_*` front doors are bit-identical
+//! to the plain solvers on valid input, and wall-clock budgets return
+//! partial-but-certified state (finite gap, finite β, typed
+//! `BudgetExhausted`) instead of garbage.
+//!
+//! `--features fault-inject` section: every injected fault ends in
+//! `SolveOutcome::Recovered` (or a typed error) — never a NaN result —
+//! and a recovered run is still gap-certified with an objective within
+//! 2ε of a clean solve.
+
+use celer::data::synth::{self, SynthDataset};
+use celer::data::validate;
+use celer::data::{CscMatrix, DenseMatrix, DesignMatrix, DesignOps};
+use celer::lasso::{dual, primal};
+use celer::solvers::batch::BatchConfig;
+use celer::solvers::cd::{cd_solve, try_cd_solve, CdConfig};
+use celer::solvers::celer::{celer_solve_on, try_celer_solve_on, CelerConfig};
+use celer::solvers::engine::Workspace;
+use celer::solvers::glm::{try_sparse_logreg_solve, try_sparse_poisson_solve};
+use celer::solvers::path::{
+    lambda_grid, run_path, run_path_batched, run_path_budgeted, try_lasso_path, try_run_path,
+    PathSolver,
+};
+use celer::util::error::{SolveError, SolveOutcome};
+
+fn problem() -> (SynthDataset, f64) {
+    let ds = synth::leukemia_mini(7);
+    let lambda = dual::lambda_max(&ds.x, &ds.y) * 0.1;
+    (ds, lambda)
+}
+
+/// Densify → sparsify, so every property also runs on the CSC kernels.
+fn sparsify(x: &DesignMatrix) -> DesignMatrix {
+    let (n, p) = (x.n(), x.p());
+    let mut buf = Vec::new();
+    x.gather_dense(&(0..p).collect::<Vec<_>>(), &mut buf);
+    DesignMatrix::Sparse(CscMatrix::from_dense(n, p, &buf))
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Both storage layouts of the same 2×3 design.
+fn both_layouts(data: &[f64]) -> [DesignMatrix; 2] {
+    [
+        DesignMatrix::Dense(DenseMatrix::from_col_major(2, 3, data.to_vec())),
+        DesignMatrix::Sparse(CscMatrix::from_dense(2, 3, data)),
+    ]
+}
+
+#[test]
+fn validation_rejects_every_bad_input_class_on_dense_and_csc() {
+    let clean = [1.0, -0.5, 2.0, 0.25, 0.0, -1.0];
+    let y = [0.5, -0.25];
+    let cfg = CdConfig::default();
+
+    // Non-finite design entry, located by (row, col).
+    let mut poisoned = clean;
+    poisoned[3] = f64::NAN; // col-major, n = 2 → column 1, row 1
+    for x in both_layouts(&poisoned) {
+        assert!(matches!(
+            try_cd_solve(&x, &y, 0.1, None, &cfg),
+            Err(SolveError::NonFiniteDesign { row: 1, col: 1, .. })
+        ));
+    }
+
+    for x in both_layouts(&clean) {
+        // Non-finite label.
+        assert!(matches!(
+            try_cd_solve(&x, &[0.5, f64::NEG_INFINITY], 0.1, None, &cfg),
+            Err(SolveError::NonFiniteLabels { index: 1, .. })
+        ));
+        // Row-count / label-count mismatch.
+        assert!(matches!(
+            try_cd_solve(&x, &[1.0, 2.0, 3.0], 0.1, None, &cfg),
+            Err(SolveError::DimensionMismatch { rows: 2, labels: 3 })
+        ));
+        // Bad λ, on both the CD and the CELER front door.
+        assert!(matches!(
+            try_cd_solve(&x, &y, f64::NAN, None, &cfg),
+            Err(SolveError::BadGrid { .. })
+        ));
+        assert!(matches!(
+            try_celer_solve_on(&x, &y, -1.0, None, &CelerConfig::default()),
+            Err(SolveError::BadGrid { .. })
+        ));
+        // Bad grid on the path front doors.
+        let solver = PathSolver::by_name("celer", 1e-6).unwrap();
+        assert!(matches!(
+            try_run_path(&x, &y, &[1.0, f64::NAN], &solver, false),
+            Err(SolveError::BadGrid { index: 1, .. })
+        ));
+        assert!(matches!(
+            try_run_path(&x, &y, &[0.5, 1.0], &solver, false),
+            Err(SolveError::BadGrid { index: 1, .. })
+        ));
+        // Bad tol on the batched-path front door.
+        assert!(matches!(
+            try_lasso_path(&x, &y, &[0.1], f64::NAN, 2, false, &celer::penalty::L1),
+            Err(SolveError::BadConfig { .. })
+        ));
+    }
+
+    // Penalty-weight domain (NaN / negative rejected; 0 and +inf legal).
+    assert!(matches!(
+        validate::validate_weights(&[1.0, -0.5]),
+        Err(SolveError::BadWeight { index: 1, .. })
+    ));
+    assert!(validate::validate_weights(&[0.0, 1.0, f64::INFINITY]).is_ok());
+}
+
+#[test]
+fn glm_label_domains_are_enforced_before_any_epoch() {
+    let data = [1.0, -0.5, 2.0, 0.25, 0.0, -1.0];
+    let cfg = CelerConfig::default();
+    for x in both_layouts(&data) {
+        // Logistic wants ±1 labels.
+        assert!(matches!(
+            try_sparse_logreg_solve(&x, &[1.0, 0.5], 0.1, None, &cfg),
+            Err(SolveError::LabelDomain { family: "logistic", index: 1, .. })
+        ));
+        assert!(try_sparse_logreg_solve(&x, &[1.0, -1.0], 0.1, None, &cfg).is_ok());
+        // Poisson wants finite counts ≥ 0.
+        assert!(matches!(
+            try_sparse_poisson_solve(&x, &[2.0, -1.0], 0.1, None, &cfg),
+            Err(SolveError::LabelDomain { family: "poisson", index: 1, .. })
+        ));
+        assert!(try_sparse_poisson_solve(&x, &[2.0, 0.0], 0.1, None, &cfg).is_ok());
+    }
+}
+
+#[test]
+fn try_front_doors_are_bit_identical_to_plain_solvers() {
+    let (ds, lambda) = problem();
+    for x in [ds.x.clone(), sparsify(&ds.x)] {
+        let cfg = CdConfig { tol: 1e-8, ..Default::default() };
+        let plain = cd_solve(&x, &ds.y, lambda, None, &cfg);
+        let tried = try_cd_solve(&x, &ds.y, lambda, None, &cfg).unwrap();
+        assert_eq!(bits(&plain.beta), bits(&tried.beta));
+        assert_eq!(plain.gap.to_bits(), tried.gap.to_bits());
+        assert!(matches!(tried.status, SolveOutcome::Certified));
+
+        let cc = CelerConfig { tol: 1e-8, ..Default::default() };
+        let plain = celer_solve_on(&x, &ds.y, lambda, None, &cc);
+        let tried = try_celer_solve_on(&x, &ds.y, lambda, None, &cc).unwrap();
+        assert_eq!(bits(&plain.result.beta), bits(&tried.result.beta));
+        assert_eq!(plain.result.gap.to_bits(), tried.result.gap.to_bits());
+        assert!(matches!(tried.result.status, SolveOutcome::Certified));
+    }
+}
+
+#[test]
+fn zero_budget_returns_partial_but_certified_state() {
+    let (ds, lambda) = problem();
+    // Unreachable tol forces the budget (not convergence) to end the run;
+    // the budget is checked right after a fresh gap evaluation, so the
+    // returned state carries a finite certificate.
+    let cfg = CdConfig { tol: 1e-16, max_seconds: Some(0.0), ..Default::default() };
+    let res = cd_solve(&ds.x, &ds.y, lambda, None, &cfg);
+    assert!(!res.converged);
+    assert!(res.gap.is_finite());
+    assert!(res.beta.iter().all(|v| v.is_finite()));
+    assert!(matches!(res.status, SolveOutcome::BudgetExhausted { .. }));
+
+    let cc = CelerConfig { tol: 1e-16, max_seconds: Some(0.0), ..Default::default() };
+    let out = celer_solve_on(&ds.x, &ds.y, lambda, None, &cc);
+    assert!(out.result.gap.is_finite());
+    assert!(out.result.beta.iter().all(|v| v.is_finite()));
+    assert!(matches!(out.result.status, SolveOutcome::BudgetExhausted { .. }));
+}
+
+#[test]
+fn path_budget_truncates_grid_without_degrading_certificates() {
+    let (ds, _) = problem();
+    let grid = lambda_grid(dual::lambda_max(&ds.x, &ds.y), 0.1, 5);
+
+    // Sequential path: an already-expired budget skips every grid point.
+    let solver = PathSolver::CelerPrune(CelerConfig { tol: 1e-6, ..Default::default() });
+    let mut ws = Workspace::new();
+    let res = run_path_budgeted(&ds.x, &ds.y, &grid, &solver, false, Some(0.0), &mut ws);
+    assert!(res.steps.is_empty());
+
+    // Batched path: expired lanes retire unconverged with the trivial +∞
+    // certificate — never NaN, never falsely Certified.
+    let cfg = BatchConfig { tol: 1e-12, lanes: 2, max_seconds: Some(0.0), ..Default::default() };
+    let res = run_path_batched(&ds.x, &ds.y, &grid, &cfg, false, &mut Workspace::new());
+    assert!(res.steps.len() <= grid.len());
+    for s in &res.steps {
+        assert!(!s.gap.is_nan());
+        assert!(
+            s.converged || matches!(s.status, SolveOutcome::BudgetExhausted { .. }),
+            "unconverged step must carry a typed budget outcome: {:?}",
+            s.status
+        );
+    }
+}
+
+#[test]
+fn clean_path_is_fully_certified() {
+    let (ds, _) = problem();
+    let grid = lambda_grid(dual::lambda_max(&ds.x, &ds.y), 0.1, 5);
+    let solver = PathSolver::by_name("celer", 1e-6).unwrap();
+    let res = run_path(&ds.x, &ds.y, &grid, &solver, false);
+    assert!(res.all_converged());
+    assert!(matches!(res.status(), SolveOutcome::Certified));
+}
+
+#[cfg(feature = "fault-inject")]
+mod injected {
+    use super::*;
+    use celer::solvers::Precision;
+    use celer::util::error::{FaultKind, RecoveryAction};
+    use celer::util::fault::FaultPlan;
+
+    #[test]
+    fn injected_nan_residual_recovers_and_still_certifies() {
+        let (ds, lambda) = problem();
+        let tol = 1e-8;
+        let clean = cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol, ..Default::default() });
+        assert!(clean.converged);
+
+        let faults = FaultPlan::armed();
+        faults.arm_nan_residual(2);
+        let cfg = CdConfig { tol, faults, ..Default::default() };
+        let hurt = cd_solve(&ds.x, &ds.y, lambda, None, &cfg);
+        assert!(hurt.converged, "watchdog must roll back and re-certify");
+        assert!(hurt.gap <= tol);
+        assert!(hurt.beta.iter().all(|v| v.is_finite()));
+        match &hurt.status {
+            SolveOutcome::Recovered { faults } => {
+                assert!(!faults.is_empty());
+                assert!(faults.iter().all(|e| e.action == RecoveryAction::RolledBack));
+                assert!(faults.iter().all(|e| matches!(
+                    e.kind,
+                    FaultKind::NonFiniteGap
+                        | FaultKind::NonFiniteResidual
+                        | FaultKind::NonFiniteDual
+                )));
+            }
+            other => panic!("expected Recovered, got {other:?}"),
+        }
+        // A recovered-and-converged run is as good as a clean one: both
+        // gaps ≤ ε bounds both objectives within ε of the optimum.
+        let p_clean = primal::primal(&ds.x, &ds.y, &clean.beta, lambda);
+        let p_hurt = primal::primal(&ds.x, &ds.y, &hurt.beta, lambda);
+        assert!((p_clean - p_hurt).abs() <= 2.0 * tol, "{p_clean} vs {p_hurt}");
+    }
+
+    #[test]
+    fn armed_but_silent_plan_is_bit_identical_to_inert() {
+        let (ds, lambda) = problem();
+        let base =
+            cd_solve(&ds.x, &ds.y, lambda, None, &CdConfig { tol: 1e-8, ..Default::default() });
+        let cfg = CdConfig { tol: 1e-8, faults: FaultPlan::armed(), ..Default::default() };
+        let armed = cd_solve(&ds.x, &ds.y, lambda, None, &cfg);
+        assert_eq!(bits(&base.beta), bits(&armed.beta));
+        assert_eq!(base.gap.to_bits(), armed.gap.to_bits());
+        assert!(matches!(armed.status, SolveOutcome::Certified));
+    }
+
+    #[test]
+    fn f32_sweep_escalates_to_f64_on_injected_fault() {
+        let (ds, lambda) = problem();
+        let tol = 1e-8;
+        let faults = FaultPlan::armed();
+        faults.arm_nan_residual(1);
+        let cfg = CdConfig { tol, precision: Precision::F32, faults, ..Default::default() };
+        let res = cd_solve(&ds.x, &ds.y, lambda, None, &cfg);
+        assert!(res.converged);
+        assert!(res.gap <= tol);
+        assert!(res.beta.iter().all(|v| v.is_finite()));
+        assert!(
+            res.status.faults().iter().any(|e| e.action == RecoveryAction::EscalatedF64),
+            "f32 strategy must escalate to f64 on rollback: {:?}",
+            res.status
+        );
+    }
+
+    #[test]
+    fn batched_path_restarts_injected_lane_and_matches_clean_objectives() {
+        let (ds, _) = problem();
+        let grid = lambda_grid(dual::lambda_max(&ds.x, &ds.y), 0.1, 5);
+        let tol = 1e-8;
+        let clean_cfg = BatchConfig { tol, lanes: 2, ..Default::default() };
+        let clean = run_path_batched(&ds.x, &ds.y, &grid, &clean_cfg, true, &mut Workspace::new());
+        assert!(clean.all_converged());
+
+        let faults = FaultPlan::armed();
+        faults.arm_nan_residual(1);
+        let cfg = BatchConfig { tol, lanes: 2, faults, ..Default::default() };
+        let hurt = run_path_batched(&ds.x, &ds.y, &grid, &cfg, true, &mut Workspace::new());
+        assert!(hurt.all_converged(), "restarted lane must still converge");
+        assert_eq!(hurt.steps.len(), grid.len());
+        assert!(
+            hurt.steps.iter().any(|s| matches!(s.status, SolveOutcome::Recovered { .. })),
+            "exactly one lane took the one-shot fault"
+        );
+        for (h, c) in hurt.steps.iter().zip(clean.steps.iter()) {
+            assert!(h.gap <= tol);
+            let hb = h.beta.as_ref().unwrap();
+            assert!(hb.iter().all(|v| v.is_finite()));
+            let ph = primal::primal(&ds.x, &ds.y, hb, h.lambda);
+            let pc = primal::primal(&ds.x, &ds.y, c.beta.as_ref().unwrap(), c.lambda);
+            assert!((ph - pc).abs() <= 2.0 * tol, "λ = {}: {ph} vs {pc}", h.lambda);
+        }
+    }
+}

@@ -75,6 +75,13 @@ case "$MODE" in
     dry-run) PROV="dry-run sample (parser smoke test, NOT measurements)" ;;
 esac
 
+# Stage the JSON and only publish it once it verifiably holds at least
+# one bench record: a failed or empty bench run must exit non-zero (the
+# `set -euo pipefail` above propagates the bench exit code itself), not
+# overwrite a previous export with an empty results array.
+STAGED="$(mktemp)"
+trap 'rm -f "$RAW" "$STAGED"' EXIT
+
 {
     printf '{\n'
     printf '  "bench": "BENCH_6 kernel layer (util::simd + lane tiles + f32 sweep)",\n'
@@ -129,6 +136,13 @@ esac
         }
     '
     printf '\n  ]\n}\n'
-} > "$OUT"
+} > "$STAGED"
+
+if ! grep -q '"kernel":' "$STAGED"; then
+    echo "no bench records parsed from $MODE output; refusing to write $OUT" >&2
+    exit 1
+fi
+mv "$STAGED" "$OUT"
+trap 'rm -f "$RAW"' EXIT
 
 echo "wrote $OUT" >&2
