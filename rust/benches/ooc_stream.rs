@@ -1,0 +1,151 @@
+//! Streaming-sweep benchmark for the out-of-core column store
+//! (BENCH_9): disk → chunk cache → lane kernels.
+//!
+//! Three questions, three arms:
+//!
+//! 1. `ooc/stream_dot_1lane` — sweep every column once with a
+//!    single-RHS `col_dot`, cache sized BELOW the chunk count so every
+//!    sweep re-streams the store from disk (the prefetcher overlaps the
+//!    next chunk with the current sweep). This is the per-lane cost of
+//!    an unbatched pass.
+//! 2. `ooc/stream_dot_lanes_b8` — the same disk traffic serving B = 8
+//!    λ-lanes per fetched column (`col_dot_lanes`). The measured
+//!    **amortization factor** is `B · t(1-lane) / t(B-lane)`: how many
+//!    of the B lanes ride for free on one fetch. Acceptance bar for
+//!    PR 9 is ≥ B/2.
+//! 3. `ooc/stream_axpy_lanes_b8` — the write-side lane kernel over the
+//!    same stream.
+//!
+//! Besides the standard `bench ...` lines, each configuration emits one
+//! machine-readable `stream <name> k=v ...` line (same shape as the gcc
+//! proxy's `proxy ...` lines) with bytes/s, columns/s and the
+//! amortization factor — `scripts/bench_export.sh --pr 9` parses these
+//! into BENCH_9.json.
+
+use celer::data::csc::CscMatrix;
+use celer::data::design::DesignOps;
+use celer::data::ooc::{self, OocColumnStore};
+use celer::report::bench;
+use celer::util::rng::Rng;
+
+const B: usize = 8;
+
+struct Shape {
+    tag: &'static str,
+    n: usize,
+    p: usize,
+    density: f64,
+    iters: usize,
+}
+
+fn build_store(shape: &Shape, path: &std::path::Path) -> (OocColumnStore, usize) {
+    let mut rng = Rng::new(9);
+    let mut dense = vec![0.0; shape.n * shape.p];
+    for v in dense.iter_mut() {
+        if rng.uniform() < shape.density {
+            *v = rng.normal();
+        }
+    }
+    let csc = CscMatrix::from_dense(shape.n, shape.p, &dense);
+    let y: Vec<f64> = (0..shape.n).map(|_| rng.normal()).collect();
+    let nnz = csc.nnz();
+    ooc::write_store(path, &csc, &y).expect("write bench store");
+    // Chunks sized so the store spans many chunks, cache held to 3 — a
+    // full sweep cannot be resident, so every iteration streams from
+    // disk (page cache) through the prefetch pipeline.
+    let chunk_bytes = (nnz * 12 / 64).max(4096);
+    let store = OocColumnStore::open_with(path, chunk_bytes, 3).expect("open bench store");
+    assert!(store.nchunks() > 6, "want a genuinely chunked stream");
+    (store, nnz)
+}
+
+fn run_shape(shape: &Shape) {
+    let path = std::env::temp_dir()
+        .join(format!("celer_ooc_bench_{}_{}.cstore", std::process::id(), shape.tag));
+    let (store, nnz) = build_store(shape, &path);
+    let (n, p) = (shape.n, shape.p);
+    let mut rng = Rng::new(11);
+    let v: Vec<f64> = (0..B * n).map(|_| rng.normal()).collect();
+    let lanes: Vec<usize> = (0..B).collect();
+    let alphas: Vec<f64> = (0..B).map(|t| 1e-9 * (t as f64 + 1.0)).collect();
+
+    // Arm 1: one lane per fetched column.
+    let mut sink = 0.0f64;
+    let t1 = bench::time(&format!("ooc/stream_dot_1lane_{}", shape.tag), shape.iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            acc += store.col_dot(j, &v[..n]);
+        }
+        sink += acc;
+    });
+
+    // Arm 2: B lanes per fetched column — same disk traffic.
+    let mut out = vec![0.0f64; B];
+    let tb = bench::time(&format!("ooc/stream_dot_lanes_b{B}_{}", shape.tag), shape.iters, || {
+        let mut acc = 0.0;
+        for j in 0..p {
+            store.col_dot_lanes(j, &v, n, &lanes, &mut out);
+            acc += out[0];
+        }
+        sink += acc;
+    });
+
+    // Arm 3: the write-side lane kernel (tiny alphas keep v finite).
+    let mut vw = v.clone();
+    let ta = bench::time(&format!("ooc/stream_axpy_lanes_b{B}_{}", shape.tag), shape.iters, || {
+        for j in 0..p {
+            store.col_axpy_lanes(j, &alphas, &mut vw, n, &lanes);
+        }
+    });
+    sink += vw[0];
+    assert!(sink.is_finite());
+
+    // One sweep touches every stored entry once: 12 bytes (u32 idx +
+    // f64 value) per entry of logical stream traffic.
+    let sweep_bytes = (nnz * 12) as f64;
+    let amort = B as f64 * t1.min_s / tb.min_s;
+    let (bytes_read, chunks, sync_misses) = store.io_stats();
+    println!(
+        "stream ooc_stream_sweep_{} n={} p={} b={B} iters={} min_ns={:.0} \
+         bytes_per_s={:.3e} cols_per_s={:.3e} amort={:.2}",
+        shape.tag,
+        n,
+        p,
+        tb.iters,
+        tb.min_s * 1e9,
+        sweep_bytes / tb.min_s,
+        p as f64 / tb.min_s,
+        amort,
+    );
+    println!(
+        "stream ooc_stream_axpy_{} n={} p={} b={B} iters={} min_ns={:.0} \
+         bytes_per_s={:.3e} cols_per_s={:.3e} amort={:.2}",
+        shape.tag,
+        n,
+        p,
+        ta.iters,
+        ta.min_s * 1e9,
+        sweep_bytes / ta.min_s,
+        p as f64 / ta.min_s,
+        B as f64 * t1.min_s / ta.min_s,
+    );
+    println!(
+        "# ooc io counters {}: bytes_read={bytes_read} chunks_loaded={chunks} sync_misses={sync_misses}",
+        shape.tag
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+fn main() {
+    let shapes: &[Shape] = if bench::full_scale() {
+        &[
+            Shape { tag: "n4096_p65536", n: 4096, p: 65536, density: 0.02, iters: 10 },
+            Shape { tag: "n512_p262144", n: 512, p: 262144, density: 0.05, iters: 10 },
+        ]
+    } else {
+        &[Shape { tag: "n512_p16384", n: 512, p: 16384, density: 0.05, iters: 12 }]
+    };
+    for s in shapes {
+        run_shape(s);
+    }
+}

@@ -6,6 +6,101 @@
 
 use crate::data::design::DesignOps;
 
+/// Decode-once batched multi-lane dot over one column's stored entries
+/// (see `col_dot_lanes`): each (row index, value) pair is decoded once
+/// and applied to every lane. Entries are processed in PAIRS
+/// (`out[t] += x₀·v₀ + x₁·v₁` per lane, odd tail entry accumulated
+/// alone) so each lane carries two independent gather chains; this
+/// pairwise order is part of the kernel-layer reduction contract
+/// mirrored in `tests/prop_simd.rs`. Shared by the in-memory
+/// [`CscMatrix`] and the out-of-core column store
+/// ([`crate::data::ooc::OocColumnStore`]) so both produce bit-identical
+/// lane sweeps from the same stored entries.
+///
+/// # Safety
+/// Every row index must be `< n`, and `(k + 1) · n <= v.len()` for every
+/// lane `k` in `lanes`. `idx` and `val` must have equal length.
+pub(crate) unsafe fn lane_dot_entries(
+    idx: &[u32],
+    val: &[f64],
+    v: &[f64],
+    n: usize,
+    lanes: &[usize],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(lanes.len(), out.len());
+    debug_assert_eq!(idx.len(), val.len());
+    debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
+    debug_assert!(idx.iter().all(|&i| (i as usize) < n));
+    out.fill(0.0);
+    let m = idx.len();
+    let main = m - m % 2;
+    let mut e = 0;
+    while e < main {
+        let row0 = *idx.get_unchecked(e) as usize;
+        let row1 = *idx.get_unchecked(e + 1) as usize;
+        let xv0 = *val.get_unchecked(e);
+        let xv1 = *val.get_unchecked(e + 1);
+        for (t, &k) in lanes.iter().enumerate() {
+            let base = k * n;
+            *out.get_unchecked_mut(t) +=
+                xv0 * v.get_unchecked(base + row0) + xv1 * v.get_unchecked(base + row1);
+        }
+        e += 2;
+    }
+    if main < m {
+        let row = *idx.get_unchecked(main) as usize;
+        let xv = *val.get_unchecked(main);
+        for (t, &k) in lanes.iter().enumerate() {
+            *out.get_unchecked_mut(t) += xv * v.get_unchecked(k * n + row);
+        }
+    }
+}
+
+/// Decode-once batched multi-lane axpy over one column's stored entries
+/// (see `col_axpy_lanes`). In a CD sweep most lanes leave most columns
+/// unchanged, so the common cases are 0 or 1 non-zero alphas — those
+/// dispatch to the single-lane gather kernel instead of branching per
+/// stored entry. Shared with the out-of-core store like
+/// [`lane_dot_entries`].
+///
+/// # Safety
+/// Same contract as [`lane_dot_entries`], with `v` as the mutable
+/// lane-strided buffer.
+pub(crate) unsafe fn lane_axpy_entries(
+    idx: &[u32],
+    val: &[f64],
+    alphas: &[f64],
+    v: &mut [f64],
+    n: usize,
+    lanes: &[usize],
+) {
+    debug_assert_eq!(lanes.len(), alphas.len());
+    debug_assert_eq!(idx.len(), val.len());
+    debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
+    debug_assert!(idx.iter().all(|&i| (i as usize) < n));
+    let nz = alphas.iter().filter(|&&a| a != 0.0).count();
+    if nz == 0 {
+        return;
+    }
+    if nz == 1 {
+        let t = alphas.iter().position(|&a| a != 0.0).expect("nz == 1");
+        let k = lanes[t];
+        crate::util::simd::gather_axpy(idx, val, alphas[t], &mut v[k * n..(k + 1) * n]);
+        return;
+    }
+    for e in 0..idx.len() {
+        let row = *idx.get_unchecked(e) as usize;
+        let xv = *val.get_unchecked(e);
+        for (t, &k) in lanes.iter().enumerate() {
+            let alpha = *alphas.get_unchecked(t);
+            if alpha != 0.0 {
+                *v.get_unchecked_mut(k * n + row) += alpha * xv;
+            }
+        }
+    }
+}
+
 /// Sparse n×p matrix in CSC format.
 #[derive(Debug, Clone)]
 pub struct CscMatrix {
@@ -218,75 +313,22 @@ impl DesignOps for CscMatrix {
         unsafe { crate::util::simd::gather_waxpy(idx, val, alpha, w, out) }
     }
 
-    // Batched multi-λ sweeps (see `solvers/batch.rs`): one pass over the
-    // stored entries — each (row index, value) pair is decoded once and
-    // applied to every lane, instead of re-walking the index array once
-    // per lane. Entries are processed in PAIRS (`out[t] += x₀·v₀ + x₁·v₁`
-    // per lane, odd tail entry accumulated alone) so each lane carries
-    // two independent gather chains; this pairwise order is part of the
-    // kernel-layer reduction contract mirrored in `tests/prop_simd.rs`.
+    // Batched multi-λ sweeps (see `solvers/batch.rs`): the shared
+    // decode-once entry kernels ([`lane_dot_entries`] /
+    // [`lane_axpy_entries`]) run directly on the column's stored-entry
+    // slices — the same kernels the out-of-core store calls on its
+    // chunk-cached slices, so both storages produce identical bits.
     fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
-        debug_assert_eq!(lanes.len(), out.len());
-        debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
         let (idx, val) = self.col(j);
-        debug_assert!(idx.iter().all(|&i| (i as usize) < n));
-        out.fill(0.0);
-        let m = idx.len();
-        let main = m - m % 2;
-        unsafe {
-            let mut e = 0;
-            while e < main {
-                let row0 = *idx.get_unchecked(e) as usize;
-                let row1 = *idx.get_unchecked(e + 1) as usize;
-                let xv0 = *val.get_unchecked(e);
-                let xv1 = *val.get_unchecked(e + 1);
-                for (t, &k) in lanes.iter().enumerate() {
-                    let base = k * n;
-                    *out.get_unchecked_mut(t) +=
-                        xv0 * v.get_unchecked(base + row0) + xv1 * v.get_unchecked(base + row1);
-                }
-                e += 2;
-            }
-            if main < m {
-                let row = *idx.get_unchecked(main) as usize;
-                let xv = *val.get_unchecked(main);
-                for (t, &k) in lanes.iter().enumerate() {
-                    *out.get_unchecked_mut(t) += xv * v.get_unchecked(k * n + row);
-                }
-            }
-        }
+        // SAFETY: row indices are validated < n at construction and the
+        // lane bounds are debug-asserted inside the kernel.
+        unsafe { lane_dot_entries(idx, val, v, n, lanes, out) }
     }
 
     fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
-        debug_assert_eq!(lanes.len(), alphas.len());
-        debug_assert!(lanes.iter().all(|&k| (k + 1) * n <= v.len()));
-        // In a CD sweep most lanes leave most columns unchanged, so the
-        // common cases are 0 or 1 non-zero alphas — dispatch those to
-        // the single-lane kernel instead of branching per stored entry.
-        let nz = alphas.iter().filter(|&&a| a != 0.0).count();
-        if nz == 0 {
-            return;
-        }
-        if nz == 1 {
-            let t = alphas.iter().position(|&a| a != 0.0).expect("nz == 1");
-            let k = lanes[t];
-            self.col_axpy(j, alphas[t], &mut v[k * n..(k + 1) * n]);
-            return;
-        }
         let (idx, val) = self.col(j);
-        debug_assert!(idx.iter().all(|&i| (i as usize) < n));
-        unsafe {
-            for e in 0..idx.len() {
-                let row = *idx.get_unchecked(e) as usize;
-                let xv = *val.get_unchecked(e);
-                for (t, &k) in lanes.iter().enumerate() {
-                    let alpha = *alphas.get_unchecked(t);
-                    if alpha != 0.0 {
-                        *v.get_unchecked_mut(k * n + row) += alpha * xv;
-                    }
-                }
-            }
-        }
+        // SAFETY: as in `col_dot_lanes`.
+        unsafe { lane_axpy_entries(idx, val, alphas, v, n, lanes) }
     }
 }
 

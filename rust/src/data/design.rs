@@ -7,6 +7,7 @@
 
 use crate::data::csc::CscMatrix;
 use crate::data::dense::DenseMatrix;
+use crate::data::ooc::OocColumnStore;
 
 /// The column-oriented operations coordinate descent and screening need.
 pub trait DesignOps: Sync {
@@ -119,11 +120,13 @@ pub trait DesignOps: Sync {
     }
 }
 
-/// A design matrix: dense column-major or sparse CSC.
+/// A design matrix: dense column-major, sparse CSC, or an out-of-core
+/// column store streaming CSC chunks from disk.
 #[derive(Debug, Clone)]
 pub enum DesignMatrix {
     Dense(DenseMatrix),
     Sparse(CscMatrix),
+    Ooc(OocColumnStore),
 }
 
 impl DesignMatrix {
@@ -136,12 +139,15 @@ impl DesignMatrix {
                 DesignMatrix::Dense(DenseMatrix::from_col_major(d.n(), cols.len(), buf))
             }
             DesignMatrix::Sparse(s) => DesignMatrix::Sparse(s.select_columns(cols)),
+            // A working-set restriction is by definition small enough to
+            // be resident: materialize it in memory.
+            DesignMatrix::Ooc(o) => DesignMatrix::Sparse(o.select_columns_csc(cols)),
         }
     }
 
-    /// True if sparse storage.
+    /// True if sparse storage (the out-of-core store holds CSC entries).
     pub fn is_sparse(&self) -> bool {
-        matches!(self, DesignMatrix::Sparse(_))
+        matches!(self, DesignMatrix::Sparse(_) | DesignMatrix::Ooc(_))
     }
 
     /// Density of stored non-zeros.
@@ -156,6 +162,7 @@ macro_rules! dispatch {
         match $self {
             DesignMatrix::Dense(d) => d.$m($($a),*),
             DesignMatrix::Sparse(s) => s.$m($($a),*),
+            DesignMatrix::Ooc(o) => o.$m($($a),*),
         }
     };
 }

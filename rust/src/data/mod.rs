@@ -1,10 +1,11 @@
-//! Data substrate: design matrices (dense + CSC sparse), zero-copy
-//! column-restricted views, svmlight I/O, synthetic dataset generators,
-//! and the paper's preprocessing pipeline.
+//! Data substrate: design matrices (dense + CSC sparse + out-of-core
+//! column store), zero-copy column-restricted views, svmlight I/O,
+//! synthetic dataset generators, and the paper's preprocessing pipeline.
 
 pub mod csc;
 pub mod dense;
 pub mod design;
+pub mod ooc;
 pub mod preprocess;
 pub mod shadow;
 pub mod svmlight;
@@ -15,4 +16,5 @@ pub mod view;
 pub use csc::CscMatrix;
 pub use dense::DenseMatrix;
 pub use design::{DesignMatrix, DesignOps};
+pub use ooc::OocColumnStore;
 pub use view::DesignView;

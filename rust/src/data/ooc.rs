@@ -1,0 +1,1002 @@
+//! Out-of-core CSC column store: designs larger than RAM, swept at
+//! disk bandwidth.
+//!
+//! The paper's speedup story is about touching less of the design per
+//! epoch (working sets, Gap Safe screening); once p ≫ RAM the remaining
+//! bottleneck is the memory hierarchy itself — the sweep runs at
+//! whatever bandwidth the storage layer delivers. This module grows the
+//! svmlight reader ([`crate::data::svmlight`]) into an on-disk column
+//! store so the f64 design never has to be resident:
+//!
+//! - **On-disk layout** (all integers little-endian):
+//!   `magic "CELERCS1" | version u32 | flags u32 | n u64 | p u64 |
+//!   nnz u64 | y (n × f64) | indptr ((p+1) × u64) | indices (nnz × u32)
+//!   | data (nnz × f64)` — a complete dataset in one file, CSC segments
+//!   laid out exactly like the in-memory [`CscMatrix`].
+//! - **Chunked column access**: columns are grouped into byte-bounded
+//!   chunks (default [`DEFAULT_CHUNK_BYTES`]); a chunk is read with
+//!   positioned reads (`std::os::unix::fs::FileExt::read_at` — `&self`,
+//!   thread-safe, no seek state) and decoded into a pooled buffer held
+//!   in a small LRU cache (a handful of chunks, sized to the worker
+//!   count — the sharded scans of [`crate::util::par`] give each worker
+//!   a contiguous column range, so one resident chunk per worker
+//!   suffices).
+//! - **Double-buffered prefetch**: the first touch of chunk k hints a
+//!   dedicated background I/O thread at chunk k+1, so the next chunk
+//!   streams from disk into a recycled buffer while the workers sweep
+//!   the current one. Pool workers never block on prefetch I/O — a miss
+//!   simply loads synchronously on the touching thread.
+//! - **Bit-identity**: every kernel runs on the same decoded
+//!   `(indices, values)` entry slices as the in-memory CSC path —
+//!   single-column ops through the same `util::simd` gather kernels,
+//!   lane ops through the shared decode-once entry kernels in
+//!   [`crate::data::csc`] — so a λ-path solved against the store is
+//!   bit-identical (β, gap certificates) to the in-memory solve
+//!   (pinned in `tests/prop_ooc.rs`). Caching and prefetch affect only
+//!   *when* bytes move, never the arithmetic.
+//!
+//! The batched multi-λ engine ([`crate::solvers::batch`]) is the
+//! natural amortizer here: each column fetched from disk serves B
+//! λ-lanes (and q block widths), so the per-lane I/O cost shrinks by
+//! the lane count — `BENCH_9.json` records the measured amortization
+//! factor.
+//!
+//! **Failure policy.** Everything checkable up front is a typed
+//! [`SolveError::StoreFormat`] at [`OocColumnStore::open`] (bad magic,
+//! version, truncated segments, non-monotone column index) — a corrupt
+//! header can never panic. Mid-file corruption (a stored row index ≥ n)
+//! is caught at chunk-decode time and fail-stops with a clear panic:
+//! column accessors cannot return `Result` on the hot path, and the
+//! check is what keeps the unchecked gather kernels sound. Streaming
+//! the whole store through the PR-8 validation gate
+//! ([`crate::data::validate::validate_design`]) reports non-finite
+//! entries as typed errors before any epoch runs.
+
+use crate::data::csc::{self, CscMatrix};
+use crate::data::design::DesignOps;
+use crate::data::svmlight::parse_svmlight_typed;
+use crate::util::error::SolveError;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// File magic: "CELER Column Store v1".
+pub const MAGIC: [u8; 8] = *b"CELERCS1";
+/// Store format version written/accepted by this build.
+pub const VERSION: u32 = 1;
+/// Fixed header length in bytes (magic + version + flags + n + p + nnz).
+const HEADER_LEN: u64 = 40;
+/// Bytes of stored entries per chunk (soft bound; every chunk holds at
+/// least one column). 4 MiB ≈ a few hundred k entries — large enough to
+/// amortize a positioned read, small enough that a handful of resident
+/// chunks stay cache-friendly.
+pub const DEFAULT_CHUNK_BYTES: usize = 4 << 20;
+/// Stored bytes per entry: u32 row index + f64 value.
+const ENTRY_BYTES: usize = 12;
+
+/// Shape metadata of a written/opened store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreMeta {
+    pub n: usize,
+    pub p: usize,
+    pub nnz: usize,
+}
+
+fn ferr(path: &Path, detail: impl Into<String>) -> SolveError {
+    SolveError::StoreFormat { path: path.display().to_string(), detail: detail.into() }
+}
+
+// ---------------------------------------------------------------------
+// Geometry: offsets, column ranges, chunk plan
+// ---------------------------------------------------------------------
+
+/// Immutable shape + layout of an opened store: segment offsets, the
+/// resident column index (`indptr`), and the chunk plan.
+struct Geometry {
+    n: usize,
+    p: usize,
+    nnz: usize,
+    /// Column pointers (entry offsets), length p+1 — resident in memory
+    /// like the svmlight reader's; only indices/values stream from disk.
+    indptr: Vec<u64>,
+    /// Chunk c covers columns `chunk_starts[c] .. chunk_starts[c+1]`;
+    /// length = nchunks + 1 with `chunk_starts[nchunks] = p`.
+    chunk_starts: Vec<usize>,
+    idx_off: u64,
+    data_off: u64,
+}
+
+impl Geometry {
+    fn nchunks(&self) -> usize {
+        self.chunk_starts.len() - 1
+    }
+
+    /// Entry range of column j.
+    #[inline]
+    fn col_range(&self, j: usize) -> (usize, usize) {
+        (self.indptr[j] as usize, self.indptr[j + 1] as usize)
+    }
+
+    /// Chunk containing column j.
+    #[inline]
+    fn chunk_of(&self, j: usize) -> usize {
+        debug_assert!(j < self.p);
+        self.chunk_starts.partition_point(|&s| s <= j) - 1
+    }
+
+    /// Column range of chunk c.
+    #[inline]
+    fn chunk_cols(&self, c: usize) -> (usize, usize) {
+        (self.chunk_starts[c], self.chunk_starts[c + 1])
+    }
+
+    /// Entry range of chunk c.
+    #[inline]
+    fn chunk_entries(&self, c: usize) -> (usize, usize) {
+        let (j0, j1) = self.chunk_cols(c);
+        (self.indptr[j0] as usize, self.indptr[j1] as usize)
+    }
+
+    /// Greedy chunk plan: accumulate columns until the stored bytes
+    /// exceed the budget (always at least one column per chunk). The
+    /// plan depends only on (indptr, chunk_bytes) — deterministic.
+    fn plan_chunks(&mut self, chunk_bytes: usize) {
+        let budget = chunk_bytes.max(ENTRY_BYTES);
+        let mut starts = vec![0usize];
+        let mut acc = 0usize;
+        for j in 0..self.p {
+            let (lo, hi) = self.col_range(j);
+            let b = (hi - lo) * ENTRY_BYTES;
+            if acc > 0 && acc + b > budget {
+                starts.push(j);
+                acc = 0;
+            }
+            acc += b;
+        }
+        starts.push(self.p);
+        self.chunk_starts = starts;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunk cache: LRU over decoded chunks, recycled (pooled) buffers
+// ---------------------------------------------------------------------
+
+/// One decoded chunk: the stored entries of a contiguous column range.
+struct ChunkData {
+    /// First entry index covered (offset into the on-disk segments).
+    entry0: usize,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+struct CacheInner {
+    map: HashMap<usize, Arc<ChunkData>>,
+    /// Access order, least-recent first.
+    lru: VecDeque<usize>,
+    /// Recycled decode buffers from evicted chunks (the "pooled
+    /// buffer": a steady-state sweep allocates nothing per chunk).
+    free: Vec<(Vec<u32>, Vec<f64>)>,
+    /// Recycled raw read buffers.
+    raw: Vec<Vec<u8>>,
+}
+
+struct Cache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl Cache {
+    fn new(capacity: usize) -> Cache {
+        Cache {
+            capacity: capacity.max(2),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                lru: VecDeque::new(),
+                free: Vec::new(),
+                raw: Vec::new(),
+            }),
+        }
+    }
+
+    /// Cache lookup; a hit refreshes the LRU position.
+    fn get(&self, c: usize) -> Option<Arc<ChunkData>> {
+        let mut st = self.inner.lock().unwrap();
+        let hit = st.map.get(&c).cloned();
+        if hit.is_some() {
+            if let Some(pos) = st.lru.iter().position(|&k| k == c) {
+                st.lru.remove(pos);
+            }
+            st.lru.push_back(c);
+        }
+        hit
+    }
+
+    /// Take recycled decode + raw buffers (empty vectors when none).
+    fn take_buffers(&self) -> (Vec<u32>, Vec<f64>, Vec<u8>) {
+        let mut st = self.inner.lock().unwrap();
+        let (idx, val) = st.free.pop().unwrap_or_default();
+        let raw = st.raw.pop().unwrap_or_default();
+        (idx, val, raw)
+    }
+
+    /// Publish a freshly decoded chunk; if another thread raced us to
+    /// it, keep the incumbent and recycle ours. Evicts LRU chunks past
+    /// capacity, recycling their buffers when unshared.
+    fn publish(&self, c: usize, data: ChunkData, raw: Vec<u8>) -> Arc<ChunkData> {
+        let mut st = self.inner.lock().unwrap();
+        st.raw.push(raw);
+        if let Some(existing) = st.map.get(&c).cloned() {
+            st.free.push((data.indices, data.values));
+            return existing;
+        }
+        let arc = Arc::new(data);
+        st.map.insert(c, arc.clone());
+        st.lru.push_back(c);
+        while st.map.len() > self.capacity {
+            let Some(victim) = st.lru.pop_front() else { break };
+            if let Some(old) = st.map.remove(&victim) {
+                if let Ok(owned) = Arc::try_unwrap(old) {
+                    st.free.push((owned.indices, owned.values));
+                }
+            }
+        }
+        arc
+    }
+}
+
+/// Read + decode chunk `c` into (recycled) buffers, validate its row
+/// indices, and publish it. Shared by the touching thread (cache miss)
+/// and the prefetch thread.
+fn load_chunk(file: &File, path: &Path, geom: &Geometry, cache: &Cache, c: usize) -> Arc<ChunkData> {
+    if let Some(d) = cache.get(c) {
+        return d;
+    }
+    let (e0, e1) = geom.chunk_entries(c);
+    let m = e1 - e0;
+    let (mut idx, mut val, mut raw) = cache.take_buffers();
+    let read = |raw: &mut Vec<u8>, len: usize, off: u64| {
+        raw.clear();
+        raw.resize(len, 0);
+        // Environmental I/O failures after a validated open (device
+        // error, file unlinked + truncated underneath us) fail-stop.
+        file.read_exact_at(raw, off).unwrap_or_else(|e| {
+            panic!("celer column store {}: chunk {c} read failed: {e}", path.display())
+        });
+    };
+    read(&mut raw, 4 * m, geom.idx_off + 4 * e0 as u64);
+    idx.clear();
+    idx.reserve(m);
+    idx.extend(raw.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+    // This bound is what keeps the unchecked gather kernels sound
+    // against mid-file corruption; see the module-level failure policy.
+    for &i in &idx {
+        assert!(
+            (i as usize) < geom.n,
+            "celer column store {}: corrupt row index {i} >= n = {} in chunk {c}",
+            path.display(),
+            geom.n
+        );
+    }
+    read(&mut raw, 8 * m, geom.data_off + 8 * e0 as u64);
+    val.clear();
+    val.reserve(m);
+    val.extend(
+        raw.chunks_exact(8)
+            .map(|b| f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])),
+    );
+    cache.publish(c, ChunkData { entry0: e0, indices: idx, values: val }, raw)
+}
+
+// ---------------------------------------------------------------------
+// Prefetcher: one background I/O thread per store
+// ---------------------------------------------------------------------
+
+struct PfState {
+    /// Latest requested chunk (latest-wins: sweeps move forward, a
+    /// stale hint is worthless by the time it would be honored).
+    want: Option<usize>,
+    shutdown: bool,
+}
+
+struct PfShared {
+    state: Mutex<PfState>,
+    cv: Condvar,
+}
+
+struct Prefetcher {
+    shared: Arc<PfShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    fn start(file: Arc<File>, path: PathBuf, geom: Arc<Geometry>, cache: Arc<Cache>) -> Prefetcher {
+        let shared = Arc::new(PfShared {
+            state: Mutex::new(PfState { want: None, shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let sh = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("celer-ooc-prefetch".into())
+            .spawn(move || loop {
+                let c = {
+                    let mut st = sh.state.lock().unwrap();
+                    loop {
+                        if st.shutdown {
+                            return;
+                        }
+                        if let Some(c) = st.want.take() {
+                            break c;
+                        }
+                        st = sh.cv.wait(st).unwrap();
+                    }
+                };
+                // `load_chunk` re-checks the cache, so a hint that
+                // already landed costs one lock round-trip.
+                load_chunk(&file, &path, &geom, &cache, c);
+            })
+            .expect("spawn ooc prefetch thread");
+        Prefetcher { shared, handle: Some(handle) }
+    }
+
+    fn request(&self, c: usize) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.want = Some(c);
+        self.shared.cv.notify_one();
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.cv.notify_one();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The store handle
+// ---------------------------------------------------------------------
+
+struct StoreInner {
+    path: PathBuf,
+    file: Arc<File>,
+    geom: Arc<Geometry>,
+    cache: Arc<Cache>,
+    prefetch: Prefetcher,
+    /// Most recently touched chunk; the transition to a new chunk is
+    /// what triggers the successor hint (double-buffer pipeline).
+    last_chunk: AtomicUsize,
+    bytes_read: AtomicU64,
+    chunks_loaded: AtomicU64,
+    /// Loads the sweep path had to perform itself (cache misses the
+    /// prefetcher didn't hide) — lets the bench distinguish overlapped
+    /// from blocking I/O.
+    sync_misses: AtomicU64,
+}
+
+/// An on-disk CSC column store implementing [`DesignOps`]: the engine,
+/// views, and lane kernels run on it unchanged. Cloning is cheap (a
+/// shared handle); the chunk cache and prefetcher are per-store, shared
+/// across clones.
+#[derive(Clone)]
+pub struct OocColumnStore {
+    inner: Arc<StoreInner>,
+}
+
+impl fmt::Debug for OocColumnStore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OocColumnStore")
+            .field("path", &self.inner.path)
+            .field("n", &self.inner.geom.n)
+            .field("p", &self.inner.geom.p)
+            .field("nnz", &self.inner.geom.nnz)
+            .field("chunks", &self.inner.geom.nchunks())
+            .finish()
+    }
+}
+
+impl OocColumnStore {
+    /// Open a store with default chunking ([`DEFAULT_CHUNK_BYTES`]) and
+    /// an auto-sized cache (worker count + 2, min 4). Every structural
+    /// defect — bad magic, unsupported version, truncated file,
+    /// non-monotone column index — is a typed
+    /// [`SolveError::StoreFormat`]; this function never panics on a
+    /// corrupt file.
+    pub fn open(path: &Path) -> Result<OocColumnStore, SolveError> {
+        OocColumnStore::open_with(path, DEFAULT_CHUNK_BYTES, 0)
+    }
+
+    /// [`OocColumnStore::open`] with explicit chunk byte budget and
+    /// cache size in chunks (`0` = auto).
+    pub fn open_with(
+        path: &Path,
+        chunk_bytes: usize,
+        cache_chunks: usize,
+    ) -> Result<OocColumnStore, SolveError> {
+        let file = File::open(path).map_err(|e| ferr(path, format!("cannot open: {e}")))?;
+        let flen = file.metadata().map_err(|e| ferr(path, format!("cannot stat: {e}")))?.len();
+        if flen < HEADER_LEN {
+            return Err(ferr(
+                path,
+                format!("file too short for header: {flen} bytes < {HEADER_LEN}"),
+            ));
+        }
+        let mut head = [0u8; HEADER_LEN as usize];
+        file.read_exact_at(&mut head, 0)
+            .map_err(|e| ferr(path, format!("header read failed: {e}")))?;
+        if head[..8] != MAGIC {
+            return Err(ferr(path, "bad magic (not a celer column store)"));
+        }
+        let u32le = |o: usize| u32::from_le_bytes([head[o], head[o + 1], head[o + 2], head[o + 3]]);
+        let u64le = |o: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&head[o..o + 8]);
+            u64::from_le_bytes(b)
+        };
+        let version = u32le(8);
+        if version != VERSION {
+            return Err(ferr(path, format!("unsupported version {version} (expected {VERSION})")));
+        }
+        let (n64, p64, nnz64) = (u64le(16), u64le(24), u64le(32));
+        let to_usize = |v: u64, what: &str| -> Result<usize, SolveError> {
+            usize::try_from(v).map_err(|_| ferr(path, format!("{what} = {v} overflows usize")))
+        };
+        let n = to_usize(n64, "n")?;
+        let p = to_usize(p64, "p")?;
+        let nnz = to_usize(nnz64, "nnz")?;
+        if n64 > u32::MAX as u64 {
+            return Err(ferr(path, format!("n = {n} exceeds the u32 row-index range")));
+        }
+        // Segment offsets; checked arithmetic so a hostile header can't
+        // wrap the expected length into a bogus match.
+        let expect = (|| {
+            let y_end = HEADER_LEN.checked_add(n64.checked_mul(8)?)?;
+            let indptr_end = y_end.checked_add(p64.checked_add(1)?.checked_mul(8)?)?;
+            let idx_end = indptr_end.checked_add(nnz64.checked_mul(4)?)?;
+            idx_end.checked_add(nnz64.checked_mul(8)?)
+        })()
+        .ok_or_else(|| ferr(path, "header shape overflows the file length computation"))?;
+        if flen != expect {
+            return Err(ferr(
+                path,
+                format!(
+                    "truncated or oversized file: header (n={n}, p={p}, nnz={nnz}) \
+                     implies {expect} bytes, found {flen}"
+                ),
+            ));
+        }
+        let indptr_off = HEADER_LEN + n64 * 8;
+        let idx_off = indptr_off + (p64 + 1) * 8;
+        let data_off = idx_off + nnz64 * 4;
+        // Read the resident column index and validate monotonicity.
+        let mut raw = vec![0u8; (p + 1) * 8];
+        file.read_exact_at(&mut raw, indptr_off)
+            .map_err(|e| ferr(path, format!("indptr read failed: {e}")))?;
+        let indptr: Vec<u64> = raw
+            .chunks_exact(8)
+            .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+            .collect();
+        if indptr[0] != 0 {
+            return Err(ferr(path, format!("indptr[0] = {} (expected 0)", indptr[0])));
+        }
+        if let Some(j) = indptr.windows(2).position(|w| w[0] > w[1]) {
+            return Err(ferr(
+                path,
+                format!("non-monotone column index at column {j}: {} > {}", indptr[j], indptr[j + 1]),
+            ));
+        }
+        if indptr[p] != nnz64 {
+            return Err(ferr(
+                path,
+                format!("indptr[p] = {} does not match nnz = {nnz}", indptr[p]),
+            ));
+        }
+        let mut geom =
+            Geometry { n, p, nnz, indptr, chunk_starts: Vec::new(), idx_off, data_off };
+        geom.plan_chunks(chunk_bytes);
+        let geom = Arc::new(geom);
+        let capacity = if cache_chunks > 0 {
+            cache_chunks
+        } else {
+            (crate::util::par::num_threads() + 2).max(4)
+        };
+        let cache = Arc::new(Cache::new(capacity));
+        let file = Arc::new(file);
+        let prefetch =
+            Prefetcher::start(file.clone(), path.to_path_buf(), geom.clone(), cache.clone());
+        Ok(OocColumnStore {
+            inner: Arc::new(StoreInner {
+                path: path.to_path_buf(),
+                file,
+                geom,
+                cache,
+                prefetch,
+                last_chunk: AtomicUsize::new(usize::MAX),
+                bytes_read: AtomicU64::new(0),
+                chunks_loaded: AtomicU64::new(0),
+                sync_misses: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// Open a store and read its label segment: the out-of-core face of
+    /// [`crate::data::svmlight::Dataset`].
+    pub fn open_dataset(path: &Path) -> Result<(OocColumnStore, Vec<f64>), SolveError> {
+        let store = OocColumnStore::open(path)?;
+        let y = store.read_labels()?;
+        Ok((store, y))
+    }
+
+    /// Read the y segment (length n) from disk.
+    pub fn read_labels(&self) -> Result<Vec<f64>, SolveError> {
+        let n = self.inner.geom.n;
+        let mut raw = vec![0u8; n * 8];
+        self.inner
+            .file
+            .read_exact_at(&mut raw, HEADER_LEN)
+            .map_err(|e| ferr(&self.inner.path, format!("labels read failed: {e}")))?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|b| f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+            .collect())
+    }
+
+    /// Shape metadata.
+    pub fn meta(&self) -> StoreMeta {
+        let g = &self.inner.geom;
+        StoreMeta { n: g.n, p: g.p, nnz: g.nnz }
+    }
+
+    /// Path this store was opened from.
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+
+    /// Number of column chunks in the streaming plan.
+    pub fn nchunks(&self) -> usize {
+        self.inner.geom.nchunks()
+    }
+
+    /// I/O counters since open: (bytes read, chunks decoded,
+    /// synchronous cache misses), counting only loads performed on the
+    /// sweep path itself — a chunk the prefetch thread streamed in
+    /// ahead of use appears in none of them. A low `sync_misses`
+    /// relative to [`OocColumnStore::nchunks`] per sweep is therefore
+    /// direct evidence of the overlap the double buffer bought.
+    pub fn io_stats(&self) -> (u64, u64, u64) {
+        (
+            self.inner.bytes_read.load(Ordering::Relaxed),
+            self.inner.chunks_loaded.load(Ordering::Relaxed),
+            self.inner.sync_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Fetch the chunk containing column range work, maintaining the
+    /// prefetch pipeline: the first touch of a new chunk hints the
+    /// background thread at its successor.
+    fn chunk(&self, c: usize) -> Arc<ChunkData> {
+        let i = &*self.inner;
+        if i.last_chunk.swap(c, Ordering::Relaxed) != c && c + 1 < i.geom.nchunks() {
+            i.prefetch.request(c + 1);
+        }
+        if let Some(d) = i.cache.get(c) {
+            return d;
+        }
+        i.sync_misses.fetch_add(1, Ordering::Relaxed);
+        let d = load_chunk(&i.file, &i.path, &i.geom, &i.cache, c);
+        let (e0, e1) = i.geom.chunk_entries(c);
+        i.bytes_read.fetch_add(((e1 - e0) * ENTRY_BYTES) as u64, Ordering::Relaxed);
+        i.chunks_loaded.fetch_add(1, Ordering::Relaxed);
+        d
+    }
+
+    /// Run `f` on column j's stored `(row indices, values)` slices —
+    /// the same entry slices the in-memory [`CscMatrix::col`] returns,
+    /// served from the chunk cache.
+    #[inline]
+    pub fn with_col<R>(&self, j: usize, f: impl FnOnce(&[u32], &[f64]) -> R) -> R {
+        let g = &self.inner.geom;
+        let chunk = self.chunk(g.chunk_of(j));
+        let (lo, hi) = g.col_range(j);
+        let (lo, hi) = (lo - chunk.entry0, hi - chunk.entry0);
+        f(&chunk.indices[lo..hi], &chunk.values[lo..hi])
+    }
+
+    /// Materialize the selected columns as an in-memory CSC matrix
+    /// (working-set restriction; the hot paths use zero-copy views).
+    pub fn select_columns_csc(&self, keep: &[usize]) -> CscMatrix {
+        let n = self.inner.geom.n;
+        let cols: Vec<Vec<(u32, f64)>> = keep
+            .iter()
+            .map(|&j| self.with_col(j, |idx, val| idx.iter().copied().zip(val.iter().copied()).collect()))
+            .collect();
+        CscMatrix::from_columns(n, cols)
+    }
+
+    /// Materialize the whole store as an in-memory CSC matrix,
+    /// streaming chunk by chunk (tests / problems that fit in RAM).
+    pub fn to_csc(&self) -> CscMatrix {
+        let g = &self.inner.geom;
+        let mut indices = Vec::with_capacity(g.nnz);
+        let mut data = Vec::with_capacity(g.nnz);
+        for c in 0..g.nchunks() {
+            let chunk = self.chunk(c);
+            indices.extend_from_slice(&chunk.indices);
+            data.extend_from_slice(&chunk.values);
+        }
+        let indptr: Vec<usize> = g.indptr.iter().map(|&v| v as usize).collect();
+        CscMatrix::new(g.n, g.p, indptr, indices, data)
+    }
+
+    /// Stream every stored entry through the PR-8 validation gate's
+    /// finiteness check, reporting the first offender as a typed
+    /// [`SolveError::NonFiniteDesign`]. Backs
+    /// [`crate::data::validate::validate_design`] for out-of-core
+    /// designs.
+    pub fn validate_values(&self) -> Result<(), SolveError> {
+        let g = &self.inner.geom;
+        for c in 0..g.nchunks() {
+            let chunk = self.chunk(c);
+            let (j0, j1) = g.chunk_cols(c);
+            for j in j0..j1 {
+                let (lo, hi) = g.col_range(j);
+                for e in lo..hi {
+                    let v = chunk.values[e - chunk.entry0];
+                    if !v.is_finite() {
+                        return Err(SolveError::NonFiniteDesign {
+                            row: chunk.indices[e - chunk.entry0] as usize,
+                            col: j,
+                            value: v,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl DesignOps for OocColumnStore {
+    #[inline]
+    fn n(&self) -> usize {
+        self.inner.geom.n
+    }
+
+    #[inline]
+    fn p(&self) -> usize {
+        self.inner.geom.p
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        // SAFETY: row indices are validated < n at chunk decode — the
+        // same soundness argument as the in-memory CSC path.
+        self.with_col(j, |idx, val| unsafe { crate::util::simd::gather_dot(idx, val, v) })
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        self.with_col(j, |idx, val| unsafe {
+            crate::util::simd::gather_axpy(idx, val, alpha, out)
+        })
+    }
+
+    #[inline]
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        self.with_col(j, |_, val| crate::util::simd::dot(val, val))
+    }
+
+    fn col_nnz(&self, j: usize) -> usize {
+        let (lo, hi) = self.inner.geom.col_range(j);
+        hi - lo
+    }
+
+    fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        let g = &self.inner.geom;
+        assert_eq!(beta.len(), g.p);
+        assert_eq!(out.len(), g.n);
+        out.fill(0.0);
+        for j in 0..g.p {
+            let b = beta[j];
+            if b != 0.0 {
+                self.col_axpy(j, b, out);
+            }
+        }
+    }
+
+    fn col_cost_hint(&self) -> usize {
+        // Mean stored nnz per column — the same work model as the
+        // in-memory CSC, so serial/parallel gating decisions match.
+        let g = &self.inner.geom;
+        (g.nnz / g.p.max(1)).max(1)
+    }
+
+    fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
+        let g = &self.inner.geom;
+        assert_eq!(v.len(), g.n);
+        assert_eq!(out.len(), g.p);
+        // Sharded like CSC: workers get contiguous column ranges, so
+        // concurrent chunk demand stays within the cache capacity.
+        crate::util::par::par_fill_cost(out, self.col_cost_hint(), |j| self.col_dot(j, v));
+    }
+
+    fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {
+        let n = self.inner.geom.n;
+        out.clear();
+        out.resize(cols.len() * n, 0.0);
+        for (c, &j) in cols.iter().enumerate() {
+            let dst = &mut out[c * n..(c + 1) * n];
+            self.with_col(j, |idx, val| {
+                for (&i, &v) in idx.iter().zip(val) {
+                    dst[i as usize] = v;
+                }
+            });
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.inner.geom.nnz
+    }
+
+    fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
+        // Stream chunks once, casting values to f32 — the half-width
+        // shadow (not the f64 design) is what has to fit in RAM for the
+        // f32 sweep mode on p ≫ RAM problems.
+        let g = &self.inner.geom;
+        let indptr: Vec<usize> = g.indptr.iter().map(|&v| v as usize).collect();
+        let mut indices = Vec::with_capacity(g.nnz);
+        let mut data = Vec::with_capacity(g.nnz);
+        for c in 0..g.nchunks() {
+            let chunk = self.chunk(c);
+            indices.extend_from_slice(&chunk.indices);
+            data.extend(chunk.values.iter().map(|&v| v as f32));
+        }
+        crate::data::shadow::ShadowF32::sparse_from_parts(g.n, g.p, indptr, indices, data)
+    }
+
+    #[inline]
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
+        self.with_col(j, |idx, val| unsafe { crate::util::simd::gather_wssq(idx, val, w) })
+    }
+
+    #[inline]
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(w.len(), out.len());
+        self.with_col(j, |idx, val| unsafe {
+            crate::util::simd::gather_waxpy(idx, val, alpha, w, out)
+        })
+    }
+
+    // Batched lane sweeps run on the SAME decode-once entry kernels as
+    // the in-memory CSC (`csc::lane_dot_entries` / `lane_axpy_entries`)
+    // over the same entry slices — bit-identical by construction, and
+    // the amortization point of the whole store: one disk fetch serves
+    // every live lane.
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        self.with_col(j, |idx, val| unsafe {
+            csc::lane_dot_entries(idx, val, v, n, lanes, out)
+        })
+    }
+
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        self.with_col(j, |idx, val| unsafe {
+            csc::lane_axpy_entries(idx, val, alphas, v, n, lanes)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Writer + converters
+// ---------------------------------------------------------------------
+
+/// Write `(x, y)` as a column-store file. Works for any design storage:
+/// columns are materialized through `gather_dense` and explicit zeros
+/// are dropped, so a dense-written and a sparse-written store of the
+/// same matrix hold identical entries (pinned in `tests/prop_ooc.rs`).
+/// The source is swept three times (count, indices, values) so the
+/// writer streams sequentially — no in-memory copy of the store is ever
+/// built.
+pub fn write_store<D: DesignOps + ?Sized>(
+    path: &Path,
+    x: &D,
+    y: &[f64],
+) -> Result<StoreMeta, SolveError> {
+    let (n, p) = (x.n(), x.p());
+    if y.len() != n {
+        return Err(SolveError::DimensionMismatch { rows: n, labels: y.len() });
+    }
+    if n > u32::MAX as usize {
+        return Err(ferr(path, format!("n = {n} exceeds the u32 row-index range")));
+    }
+    let io = |e: std::io::Error| ferr(path, format!("write failed: {e}"));
+    // Pass 1: per-column non-zero counts -> indptr.
+    let mut col = Vec::new();
+    let mut indptr = Vec::with_capacity(p + 1);
+    indptr.push(0u64);
+    let mut nnz = 0u64;
+    for j in 0..p {
+        x.gather_dense(&[j], &mut col);
+        nnz += col.iter().filter(|&&v| v != 0.0).count() as u64;
+        indptr.push(nnz);
+    }
+    let f = File::create(path).map_err(io)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC).map_err(io)?;
+    w.write_all(&VERSION.to_le_bytes()).map_err(io)?;
+    w.write_all(&0u32.to_le_bytes()).map_err(io)?; // flags
+    w.write_all(&(n as u64).to_le_bytes()).map_err(io)?;
+    w.write_all(&(p as u64).to_le_bytes()).map_err(io)?;
+    w.write_all(&nnz.to_le_bytes()).map_err(io)?;
+    for &v in y {
+        w.write_all(&v.to_le_bytes()).map_err(io)?;
+    }
+    for &v in &indptr {
+        w.write_all(&v.to_le_bytes()).map_err(io)?;
+    }
+    // Pass 2: row indices.
+    for j in 0..p {
+        x.gather_dense(&[j], &mut col);
+        for (i, &v) in col.iter().enumerate() {
+            if v != 0.0 {
+                w.write_all(&(i as u32).to_le_bytes()).map_err(io)?;
+            }
+        }
+    }
+    // Pass 3: values.
+    for j in 0..p {
+        x.gather_dense(&[j], &mut col);
+        for &v in col.iter() {
+            if v != 0.0 {
+                w.write_all(&v.to_le_bytes()).map_err(io)?;
+            }
+        }
+    }
+    w.flush().map_err(io)?;
+    Ok(StoreMeta { n, p, nnz: nnz as usize })
+}
+
+/// Convert an svmlight file to a column store: the out-of-core
+/// ingestion path (`svmlight → parse → store`), with every parse defect
+/// reported as the reader's typed [`SolveError::Parse`].
+pub fn svmlight_to_store(
+    src: &Path,
+    dst: &Path,
+    min_features: usize,
+) -> Result<StoreMeta, SolveError> {
+    let f = File::open(src)
+        .map_err(|e| ferr(src, format!("cannot open svmlight source: {e}")))?;
+    let ds = parse_svmlight_typed(f, min_features)?;
+    write_store(dst, &ds.x, &ds.y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("celer_ooc_unit_{}_{name}", std::process::id()))
+    }
+
+    fn random_csc(seed: u64, n: usize, p: usize, density: f64) -> (CscMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0; n * p];
+        for v in dense.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.normal();
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (CscMatrix::from_dense(n, p, &dense), y)
+    }
+
+    #[test]
+    fn roundtrip_matches_csc_bitwise() {
+        let (csc, y) = random_csc(3, 37, 29, 0.3);
+        let path = tmp("roundtrip.cstore");
+        let meta = write_store(&path, &csc, &y).unwrap();
+        assert_eq!(meta, StoreMeta { n: 37, p: 29, nnz: csc.nnz() });
+        // Tiny chunks so multiple chunks + eviction are exercised.
+        let store = OocColumnStore::open_with(&path, 256, 3).unwrap();
+        assert!(store.nchunks() > 1, "want a multi-chunk plan");
+        assert_eq!(store.read_labels().unwrap(), y);
+        let v: Vec<f64> = (0..37).map(|i| (i as f64) * 0.25 - 3.0).collect();
+        for j in 0..29 {
+            assert_eq!(store.col_nnz(j), csc.col_nnz(j));
+            assert_eq!(store.col_dot(j, &v).to_bits(), csc.col_dot(j, &v).to_bits());
+            assert_eq!(store.col_norm_sq(j).to_bits(), csc.col_norm_sq(j).to_bits());
+        }
+        let round = store.to_csc();
+        assert_eq!(round.nnz(), csc.nnz());
+        for j in 0..29 {
+            assert_eq!(round.col(j), csc.col(j));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dense_and_sparse_written_stores_are_identical() {
+        let (csc, y) = random_csc(11, 23, 17, 0.4);
+        let dense = DenseMatrix::from_col_major(23, 17, csc.to_dense_col_major());
+        let (pa, pb) = (tmp("dw.cstore"), tmp("sw.cstore"));
+        write_store(&pa, &dense, &y).unwrap();
+        write_store(&pb, &csc, &y).unwrap();
+        let a = std::fs::read(&pa).unwrap();
+        let b = std::fs::read(&pb).unwrap();
+        assert_eq!(a, b, "dense-written and sparse-written bytes differ");
+        let _ = std::fs::remove_file(&pa);
+        let _ = std::fs::remove_file(&pb);
+    }
+
+    #[test]
+    fn open_rejects_corrupt_headers_typed() {
+        let (csc, y) = random_csc(7, 9, 5, 0.5);
+        let path = tmp("corrupt.cstore");
+        write_store(&path, &csc, &y).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let fails = |bytes: &[u8], what: &str| {
+            std::fs::write(&path, bytes).unwrap();
+            match OocColumnStore::open(&path) {
+                Err(SolveError::StoreFormat { .. }) => {}
+                other => panic!("{what}: expected StoreFormat, got {other:?}"),
+            }
+        };
+        fails(&good[..20], "truncated header");
+        fails(&good[..good.len() - 3], "truncated data segment");
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        fails(&bad, "bad magic");
+        let mut bad = good.clone();
+        bad[8] = 99; // version
+        fails(&bad, "bad version");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validate_values_streams_nonfinite() {
+        let (csc, y) = random_csc(13, 8, 6, 0.6);
+        let path = tmp("nonfinite.cstore");
+        let meta = write_store(&path, &csc, &y).unwrap();
+        let store = OocColumnStore::open(&path).unwrap();
+        assert!(store.validate_values().is_ok());
+        // Poison one stored value in the data segment.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let data_off = bytes.len() - meta.nnz * 8;
+        bytes[data_off..data_off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let store = OocColumnStore::open(&path).unwrap();
+        match store.validate_values() {
+            Err(SolveError::NonFiniteDesign { .. }) => {}
+            other => panic!("expected NonFiniteDesign, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn select_columns_matches_csc() {
+        let (csc, y) = random_csc(17, 19, 11, 0.35);
+        let path = tmp("select.cstore");
+        write_store(&path, &csc, &y).unwrap();
+        let store = OocColumnStore::open_with(&path, 128, 2).unwrap();
+        let keep = [7usize, 0, 9, 7];
+        let a = store.select_columns_csc(&keep);
+        let b = csc.select_columns(&keep);
+        for c in 0..keep.len() {
+            assert_eq!(a.col(c), b.col(c), "col {c}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -118,6 +118,9 @@ pub fn normalize_columns(x: DesignMatrix) -> DesignMatrix {
             }
             DesignMatrix::Sparse(s)
         }
+        // Preprocessing mutates entries, which a read-only store cannot:
+        // materialize, then normalize in memory.
+        DesignMatrix::Ooc(o) => normalize_columns(DesignMatrix::Sparse(o.to_csc())),
     }
 }
 
@@ -151,6 +154,7 @@ pub fn append_intercept(x: DesignMatrix) -> DesignMatrix {
             cols.push((0..n as u32).map(|i| (i, c)).collect());
             DesignMatrix::Sparse(CscMatrix::from_columns(n, cols))
         }
+        DesignMatrix::Ooc(o) => append_intercept(DesignMatrix::Sparse(o.to_csc())),
     }
 }
 

@@ -10,8 +10,17 @@
 //! (halving the memory traffic of every epoch — the CD inner loop is
 //! memory-bound, so this is where the f32 speedup comes from); CSC
 //! designs keep their index structure and cast only the stored values.
+//!
+//! Shadows are built with **shard-local first touch**
+//! ([`crate::util::par::alloc_first_touch`]): each fixed shard of the
+//! f32 buffer is written by the pool worker that will later sweep it,
+//! so on NUMA machines the shadow's pages land on the sweeping socket
+//! instead of wherever the allocating thread happened to run. Placement
+//! never changes the stored bits — serial and pooled builds are
+//! identical (pinned in `tests/prop_pool.rs`).
 
 use crate::data::design::DesignOps;
+use crate::util::par::alloc_first_touch;
 
 /// An f32 copy of a design matrix, column-addressable like the f64
 /// original. Kernels mirror the f32 kernels of [`crate::util::simd`].
@@ -31,25 +40,44 @@ enum Kind {
 }
 
 impl ShadowF32 {
-    /// Shadow of a dense column-major buffer.
+    /// Shadow of a dense column-major buffer, first-touched per shard.
     pub fn from_dense_col_major(n: usize, p: usize, data: &[f64]) -> Self {
         assert_eq!(data.len(), n * p);
-        let data = data.iter().map(|&v| v as f32).collect();
+        let data = alloc_first_touch(n * p, 1, |i| data[i] as f32);
         ShadowF32 { n, p, kind: Kind::Dense { data } }
     }
 
     /// Shadow of CSC arrays (row indices must be < n; the caller is a
-    /// validated `CscMatrix`).
+    /// validated `CscMatrix`). The value and index buffers are
+    /// first-touched per shard; `indptr` is small and stays plain.
     pub fn from_csc(n: usize, p: usize, indptr: &[usize], indices: &[u32], data: &[f64]) -> Self {
         assert_eq!(indptr.len(), p + 1);
         assert_eq!(indices.len(), data.len());
         debug_assert!(indices.iter().all(|&i| (i as usize) < n));
-        let data = data.iter().map(|&v| v as f32).collect();
-        ShadowF32 {
-            n,
-            p,
-            kind: Kind::Sparse { indptr: indptr.to_vec(), indices: indices.to_vec(), data },
-        }
+        let nnz = data.len();
+        let indices = alloc_first_touch(nnz, 1, |e| indices[e]);
+        let data = alloc_first_touch(nnz, 1, |e| data[e] as f32);
+        ShadowF32 { n, p, kind: Kind::Sparse { indptr: indptr.to_vec(), indices, data } }
+    }
+
+    /// Shadow from owned, already-f32 CSC parts — the streaming path of
+    /// the out-of-core store ([`crate::data::ooc::OocColumnStore`]),
+    /// which casts chunk by chunk while the f64 entries are resident and
+    /// hands the buffers over without a second pass. Row indices must be
+    /// < n and `indptr` monotone with `indptr[p] == indices.len()` (the
+    /// store validates both at open/decode time).
+    pub fn sparse_from_parts(
+        n: usize,
+        p: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        data: Vec<f32>,
+    ) -> Self {
+        assert_eq!(indptr.len(), p + 1);
+        assert_eq!(indices.len(), data.len());
+        assert_eq!(*indptr.last().expect("p + 1 >= 1"), data.len());
+        debug_assert!(indices.iter().all(|&i| (i as usize) < n));
+        ShadowF32 { n, p, kind: Kind::Sparse { indptr, indices, data } }
     }
 
     /// Dense shadow of an arbitrary design, built through the generic

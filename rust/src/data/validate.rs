@@ -39,6 +39,9 @@ pub fn validate_design(x: &DesignMatrix) -> Result<(), SolveError> {
                 }
             }
         }
+        // Streams the store chunk by chunk — the whole design never has
+        // to be resident even for validation.
+        DesignMatrix::Ooc(o) => o.validate_values()?,
     }
     Ok(())
 }

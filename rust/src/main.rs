@@ -6,6 +6,7 @@
 //!   datasets         list the built-in synthetic datasets
 //!   artifacts-check  validate the AOT artifact manifest + compile all HLO
 //!   gen-data         export a synthetic dataset in svmlight format
+//!   convert          build an on-disk column store from svmlight or a dataset
 //!
 //! Arguments are `--key value` pairs (offline build: no clap; parser in
 //! `cli` below).
@@ -76,12 +77,16 @@ USAGE: celer <command> [--flag value]...
 COMMANDS:
   solve            --dataset <name> [--seed 0] [--lambda-ratio 0.05]
                    [--tol 1e-6] [--solver celer-prune] [--engine native|xla]
-  path             --dataset <name> [--num-lambdas 100] [--inv-ratio 100]
+  path             --dataset <name> | --store <file.cstore>
+                   [--num-lambdas 100] [--inv-ratio 100]
                    [--tol 1e-6] [--solvers celer-prune,blitz] [--workers 2]
                    [--max-seconds <budget>] (partial-but-certified prefix)
+                   (--store streams the design out-of-core from disk)
   datasets         list built-in datasets
   artifacts-check  [--dir artifacts] validate + compile every HLO artifact
   gen-data         --dataset <name> --out <file.svm> [--seed 0]
+  convert          --in <file.svm> --out <file.cstore> [--min-features 0]
+                   or --dataset <name> --out <file.cstore> [--seed 0]
   help             this message
 
 SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
@@ -110,6 +115,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "datasets" => cmd_datasets(),
         "artifacts-check" => cmd_artifacts_check(&args),
         "gen-data" => cmd_gen_data(&args),
+        "convert" => cmd_convert(&args),
         _ => {
             print!("{HELP}");
             Ok(())
@@ -216,7 +222,25 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
         ),
     };
     let solvers = args.get_or("solvers", "celer-prune,blitz");
-    let ds = coordinator::load_dataset(&name, seed)?;
+    // --store routes the whole path through the out-of-core column
+    // store: the f64 design streams from disk in prefetched chunks and
+    // never has to be resident. Solutions are bit-identical to the
+    // in-memory solve of the same matrix (tests/prop_ooc.rs).
+    let ds = match args.get("store") {
+        Some(path) => {
+            let (store, y) =
+                celer::data::OocColumnStore::open_dataset(std::path::Path::new(path))?;
+            let p = store.p();
+            celer::data::synth::SynthDataset {
+                name: format!("store:{path}"),
+                x: celer::data::DesignMatrix::Ooc(store),
+                y,
+                beta_true: vec![0.0; p],
+            }
+        }
+        None => coordinator::load_dataset(&name, seed)?,
+    };
+    let name = ds.name.clone();
     let grid = coordinator::standard_grid(&ds, inv_ratio, num);
     let jobs: Vec<PathJob> = solvers
         .split(',')
@@ -374,5 +398,26 @@ fn cmd_gen_data(args: &cli::Args) -> anyhow::Result<()> {
         &celer::data::svmlight::Dataset { x: ds.x, y: ds.y },
     )?;
     println!("wrote {name} (seed {seed}) to {out}");
+    Ok(())
+}
+
+fn cmd_convert(args: &cli::Args) -> anyhow::Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <file.cstore> required"))?;
+    let out_path = std::path::Path::new(out);
+    let meta = match args.get("in") {
+        Some(src) => {
+            let min_features = args.get_usize("min-features", 0)?;
+            celer::data::ooc::svmlight_to_store(std::path::Path::new(src), out_path, min_features)?
+        }
+        None => {
+            let name = args.get_or("dataset", "finance-mini");
+            let seed = args.get_usize("seed", 0)? as u64;
+            let ds = coordinator::load_dataset(&name, seed)?;
+            celer::data::ooc::write_store(out_path, &ds.x, &ds.y)?
+        }
+    };
+    println!("wrote column store {out}: n={} p={} nnz={}", meta.n, meta.p, meta.nnz);
     Ok(())
 }

@@ -154,6 +154,7 @@ pub fn mt_bcd_solve(
     match x {
         DesignMatrix::Dense(d) => mt_bcd_generic(d, y, q, lambda, b0, cfg, &mut ws),
         DesignMatrix::Sparse(s) => mt_bcd_generic(s, y, q, lambda, b0, cfg, &mut ws),
+        DesignMatrix::Ooc(o) => mt_bcd_generic(o, y, q, lambda, b0, cfg, &mut ws),
     }
 }
 
@@ -237,6 +238,7 @@ pub fn mt_celer_solve_ws(
     match x {
         DesignMatrix::Dense(d) => mt_celer_generic(d, y, q, lambda, b0, cfg, ws),
         DesignMatrix::Sparse(s) => mt_celer_generic(s, y, q, lambda, b0, cfg, ws),
+        DesignMatrix::Ooc(o) => mt_celer_generic(o, y, q, lambda, b0, cfg, ws),
     }
 }
 

@@ -540,11 +540,13 @@ impl<D: DesignOps, P: Penalty> BatchStrategy<D, P> for BatchF32Strategy {
         let (n, p) = (s.n, s.p);
         let slots_total = if p > 0 { s.beta.len() / p } else { 0 };
         self.ensure_slots(slots_total);
+        // f32 lane tiles get the same shard-local first touch as the
+        // f64 buffers (see solve_grid_penalty's lane-buffer setup).
         if self.beta32.len() < slots_total * p {
-            self.beta32.resize(slots_total * p, 0.0);
+            crate::util::par::resize_first_touch(&mut self.beta32, slots_total * p);
         }
         if self.r32.len() < slots_total * n {
-            self.r32.resize(slots_total * n, 0.0);
+            crate::util::par::resize_first_touch(&mut self.r32, slots_total * n);
         }
         if self.norms32.len() != s.norms_sq.len() {
             self.norms32 = s.norms_sq.iter().map(|&v| v as f32).collect();
@@ -778,10 +780,13 @@ pub fn solve_grid_penalty<D: DesignOps, P: Penalty, S: BatchStrategy<D, P>>(
     crate::solvers::engine::fill_norm_caches(x, &mut ws.norms_sq, &mut ws.col_norms);
 
     // ---- lane buffers (capacity reused across grids) ----
+    // First allocation goes through the pool so each shard of the lane
+    // tiles is first-touched by the worker that sweeps it (shard-local
+    // NUMA placement); contents are identical to a plain resize.
     ws.beta.clear();
-    ws.beta.resize(b * p, 0.0);
+    crate::util::par::resize_first_touch(&mut ws.beta, b * p);
     ws.r.clear();
-    ws.r.resize(b * n, 0.0);
+    crate::util::par::resize_first_touch(&mut ws.r, b * n);
     ws.lane_lambda.clear();
     ws.lane_lambda.resize(b, 0.0);
     ws.dual.resize_with(b, DualState::default);

@@ -179,6 +179,7 @@ pub fn celer_solve_on_ws(
     match x {
         DesignMatrix::Dense(d) => celer_generic(d, y, lambda, beta0, cfg, ws),
         DesignMatrix::Sparse(s) => celer_generic(s, y, lambda, beta0, cfg, ws),
+        DesignMatrix::Ooc(o) => celer_generic(o, y, lambda, beta0, cfg, ws),
     }
 }
 
@@ -240,6 +241,9 @@ pub fn celer_penalty_solve_on_ws<P: Penalty>(
         }
         DesignMatrix::Sparse(s) => {
             celer_solve_penalty(s, y, lambda, beta0, &Quadratic, penalty, cfg, ws, &mut CdStrategy)
+        }
+        DesignMatrix::Ooc(o) => {
+            celer_solve_penalty(o, y, lambda, beta0, &Quadratic, penalty, cfg, ws, &mut CdStrategy)
         }
     }
 }

@@ -216,6 +216,9 @@ pub fn glm_celer_solve_with<F: Datafit>(
         DesignMatrix::Sparse(s) => {
             celer_solve_datafit(s, y, lambda, beta0, datafit, cfg, ws, strategy)
         }
+        DesignMatrix::Ooc(o) => {
+            celer_solve_datafit(o, y, lambda, beta0, datafit, cfg, ws, strategy)
+        }
     }
 }
 
@@ -391,6 +394,17 @@ pub fn glm_cd_solve_ws<F: Datafit>(
         ),
         DesignMatrix::Sparse(s) => engine::solve_datafit(
             s,
+            y,
+            lambda,
+            init,
+            None,
+            &cfg.engine(),
+            ws,
+            &mut strategy,
+            datafit,
+        ),
+        DesignMatrix::Ooc(o) => engine::solve_datafit(
+            o,
             y,
             lambda,
             init,

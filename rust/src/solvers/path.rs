@@ -422,6 +422,22 @@ pub fn run_path_batched_penalty<P: Penalty>(
                 batch::solve_grid_penalty(s, y, grid, None, cfg, &mut lanes_ws, &mut strat, penalty)
             }
         },
+        DesignMatrix::Ooc(o) => match cfg.precision {
+            Precision::F64 => batch::solve_grid_penalty(
+                o,
+                y,
+                grid,
+                None,
+                cfg,
+                &mut lanes_ws,
+                &mut BatchCdStrategy,
+                penalty,
+            ),
+            Precision::F32 => {
+                let mut strat = batch::BatchF32Strategy::new(o);
+                batch::solve_grid_penalty(o, y, grid, None, cfg, &mut lanes_ws, &mut strat, penalty)
+            }
+        },
     };
     ws.put_batch(lanes_ws);
     let steps = results

@@ -49,6 +49,10 @@ pub enum SolveError {
     BadConfig { what: String },
     /// Typed parse failure (svmlight reader): 1-based line and column.
     Parse { line: usize, col: usize, msg: String },
+    /// An on-disk column store failed structural validation at open
+    /// (bad magic, unsupported version, truncated segments, non-monotone
+    /// column index) or could not be read/written.
+    StoreFormat { path: String, detail: String },
     /// A scheduler job panicked on every attempt and was quarantined.
     JobPoisoned { job: usize, attempts: usize, detail: String },
     /// A scheduler job exceeded its per-job timeout on every attempt.
@@ -79,6 +83,9 @@ impl fmt::Display for SolveError {
             SolveError::BadConfig { what } => write!(f, "bad configuration: {what}"),
             SolveError::Parse { line, col, msg } => {
                 write!(f, "parse error at line {line}, column {col}: {msg}")
+            }
+            SolveError::StoreFormat { path, detail } => {
+                write!(f, "column store {path}: {detail}")
             }
             SolveError::JobPoisoned { job, attempts, detail } => {
                 write!(f, "job {job} quarantined after {attempts} attempt(s): {detail}")

@@ -281,6 +281,63 @@ where
     partials.iter().sum()
 }
 
+/// Allocate a length-`len` vector whose element `i` is `f(i)`, with
+/// each fixed shard written — **first-touched** — by the pool worker
+/// that owns it. On NUMA machines the OS backs a page on the node of
+/// the first writing thread, so the shard a worker later sweeps lives
+/// on its own socket (shard-local placement), replacing the
+/// allocation-order placement a plain `collect()` gives (every page on
+/// the allocating thread's node). The *contents* are `f(0..len)` either
+/// way — placement is invisible to arithmetic, so serial and pooled
+/// builds are bit-identical for any `CELER_NUM_THREADS` (pinned in
+/// `tests/prop_pool.rs`). Below the work cutoff the serial path runs.
+pub fn alloc_first_touch<T, F>(len: usize, per_item_cost: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut v: Vec<T> = Vec::with_capacity(len);
+    if !parallel_shards(len.saturating_mul(per_item_cost.max(1))) {
+        for i in 0..len {
+            v.push(f(i));
+        }
+        return v;
+    }
+    let ptr = SyncPtr(v.as_mut_ptr());
+    pool::global().run(SHARDS, &|s| {
+        let (lo, hi) = shard_bounds(len, s);
+        for i in lo..hi {
+            // SAFETY: shard index ranges are disjoint (one writer per
+            // slot) and lie within the reserved capacity.
+            unsafe { ptr.0.add(i).write(f(i)) };
+        }
+    });
+    // SAFETY: the shards cover 0..len, so every slot was initialized.
+    // (If a shard panicked, the pool re-raises before we get here and
+    // the vector drops with len 0 — never exposing uninitialized slots.)
+    unsafe { v.set_len(len) };
+    v
+}
+
+/// `Vec::resize(len, T::default())` with first-touch placement when the
+/// vector must reallocate: the grown buffer is rebuilt shard-by-shard on
+/// the pool ([`alloc_first_touch`]), preserving the prefix. Same
+/// contents as a plain resize in every case; only the page placement of
+/// a fresh allocation differs. Lane tiles and residual buffers in the
+/// batch engine go through here so their pages land on the sockets that
+/// sweep them.
+pub fn resize_first_touch<T>(v: &mut Vec<T>, len: usize)
+where
+    T: Copy + Default + Send + Sync,
+{
+    if len <= v.capacity() {
+        v.resize(len, T::default());
+        return;
+    }
+    let old = std::mem::take(v);
+    *v = alloc_first_touch(len, 1, |i| if i < old.len() { old[i] } else { T::default() });
+}
+
 /// `out[i] = f(i)` for all i (unit per-item cost).
 pub fn par_fill<F>(out: &mut [f64], f: F)
 where
@@ -430,6 +487,33 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(par_sum_cost(n, 1, f).to_bits(), par_sum_cost(n, 100_000, f).to_bits());
         assert_eq!(par_max_cost(n, 1, f), par_max_cost(n, 100_000, f));
+    }
+
+    #[test]
+    fn first_touch_alloc_matches_plain_collect() {
+        for n in [0usize, 9, SHARDS + 3, PAR_WORK_THRESHOLD + 31] {
+            let a: Vec<f64> = alloc_first_touch(n, 1, |i| (i as f64).sin());
+            let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+            assert_eq!(a, b, "n={n}");
+            let serial: Vec<f64> = run_serial(|| alloc_first_touch(n, 1, |i| (i as f64).sin()));
+            assert_eq!(a, serial, "pooled vs serial placement, n={n}");
+        }
+    }
+
+    #[test]
+    fn first_touch_resize_has_plain_resize_semantics() {
+        let big = PAR_WORK_THRESHOLD + 5;
+        let mut a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut b = a.clone();
+        resize_first_touch(&mut a, big);
+        b.resize(big, 0.0);
+        assert_eq!(a, b, "grow past capacity");
+        resize_first_touch(&mut a, 10);
+        b.resize(10, 0.0);
+        assert_eq!(a, b, "shrink");
+        resize_first_touch(&mut a, 40); // within capacity: plain resize
+        b.resize(40, 0.0);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -119,7 +119,19 @@ impl WorkerPool {
         for i in 0..workers {
             std::thread::Builder::new()
                 .name(format!("celer-pool-{i}"))
-                .spawn(move || worker_loop(shared))
+                .spawn(move || {
+                    // With the `numa-pin` feature, worker i is affined to
+                    // CPU i+1 (the submitter keeps CPU 0's default mask),
+                    // turning the first-touch page placement of
+                    // `par::alloc_first_touch` into a *stable* shard →
+                    // socket mapping: the thread that first-touched a
+                    // shard keeps sweeping it from the same node. Without
+                    // the feature the OS scheduler decides — results are
+                    // bit-identical either way, only locality differs.
+                    #[cfg(all(feature = "numa-pin", target_os = "linux"))]
+                    pin_thread_to_cpu(i + 1);
+                    worker_loop(shared)
+                })
                 .expect("spawn pool worker");
         }
         WorkerPool { shared, workers }
@@ -253,6 +265,29 @@ fn worker_loop(shared: &'static Shared) {
             }
         }
     });
+}
+
+/// Best-effort thread affinity via `sched_setaffinity(2)` — no libc
+/// crate in the offline build, so the one syscall wrapper we need is
+/// declared directly. The mask covers 1024 CPUs (the kernel's default
+/// `cpu_set_t` width); `cpu` wraps modulo the machine's parallelism so a
+/// pool wider than the box still pins validly. Errors are ignored: an
+/// affinity failure (cpuset restrictions, exotic kernels) must never
+/// take down a worker — the pool is merely unpinned, as without the
+/// feature.
+#[cfg(all(feature = "numa-pin", target_os = "linux"))]
+fn pin_thread_to_cpu(cpu: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let ncpus = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let cpu = cpu % ncpus.max(1);
+    let mut mask = [0u64; 16]; // 1024-bit cpu_set_t
+    if cpu / 64 < mask.len() {
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        // pid 0 = the calling thread. Best effort: ignore the result.
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    }
 }
 
 /// A `Sync` wrapper for a raw mutable pointer handed to shard closures.

@@ -1,0 +1,279 @@
+//! Property tests for the out-of-core column store (`data::ooc`).
+//!
+//! The contracts pinned here:
+//!
+//! 1. **Storage is invisible to the math**: every `DesignOps` kernel on
+//!    an `OocColumnStore` returns the exact bits the in-memory
+//!    `CscMatrix` returns — single columns, lane ops, full scans — for
+//!    any chunk size (one column per chunk up to everything-resident).
+//! 2. **λ-path bit-identity** (the PR 9 acceptance criterion): a full
+//!    lasso path solved on `DesignMatrix::Ooc` equals the path on
+//!    `DesignMatrix::Sparse` bit-for-bit — per-step λ, gap certificate
+//!    and β — under both serial and pooled execution, for the
+//!    sequential and the batched (lane) scheduler.
+//! 3. **Canonical bytes**: a dense-written and a sparse-written store
+//!    of the same matrix are byte-identical files (explicit zeros are
+//!    dropped), and `svmlight → store` equals `svmlight → CSC`.
+//! 4. **Corruption is typed, not a panic**: truncated or corrupt
+//!    headers fail `open` with `SolveError::StoreFormat`; non-finite
+//!    payload values are caught by the validation gate as
+//!    `SolveError::NonFiniteDesign`.
+
+use celer::data::csc::CscMatrix;
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::ooc::{self, OocColumnStore};
+use celer::data::synth;
+use celer::data::validate;
+use celer::solvers::path::{lambda_grid, lasso_path, run_path, PathResult, PathSolver};
+use celer::util::error::SolveError;
+use celer::util::par;
+use celer::util::rng::Rng;
+
+/// Unique temp path per test so the suite can run in parallel.
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("celer_prop_ooc_{}_{name}", std::process::id()))
+}
+
+struct TmpFile(std::path::PathBuf);
+impl Drop for TmpFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn every_kernel_matches_csc_bitwise_across_chunk_sizes() {
+    let ds = synth::finance_mini(21);
+    let DesignMatrix::Sparse(ref csc) = ds.x else { panic!("finance_mini is sparse") };
+    let path = tmp("kernels.cstore");
+    let _guard = TmpFile(path.clone());
+    ooc::write_store(&path, csc, &ds.y).unwrap();
+
+    let (n, p) = (csc.n(), csc.p());
+    let v = rand_vec(22, n);
+    let lanes: Vec<usize> = (0..4).collect();
+    let vl = rand_vec(23, 4 * n);
+    let alphas = [1e-3, -2e-3, 5e-4, -1e-4];
+
+    // chunk sizes from "one column per chunk" to "everything resident"
+    for chunk_bytes in [1usize, 1 << 10, 1 << 14, 1 << 30] {
+        let store = OocColumnStore::open_with(&path, chunk_bytes, 3).unwrap();
+        assert_eq!(store.read_labels().unwrap(), ds.y);
+        for j in (0..p).step_by(7) {
+            assert_eq!(
+                store.col_dot(j, &v).to_bits(),
+                csc.col_dot(j, &v).to_bits(),
+                "col_dot j={j} chunk_bytes={chunk_bytes}"
+            );
+            assert_eq!(store.col_norm_sq(j).to_bits(), csc.col_norm_sq(j).to_bits());
+            assert_eq!(store.col_nnz(j), csc.col_nnz(j));
+
+            let mut out_s = [0.0f64; 4];
+            let mut out_c = [0.0f64; 4];
+            store.col_dot_lanes(j, &vl, n, &lanes, &mut out_s);
+            csc.col_dot_lanes(j, &vl, n, &lanes, &mut out_c);
+            assert_eq!(out_s.map(f64::to_bits), out_c.map(f64::to_bits), "lane dot j={j}");
+
+            let mut vs = vl.clone();
+            let mut vc = vl.clone();
+            store.col_axpy_lanes(j, &alphas, &mut vs, n, &lanes);
+            csc.col_axpy_lanes(j, &alphas, &mut vc, n, &lanes);
+            assert_eq!(vs, vc, "lane axpy j={j}");
+        }
+        // full scans: pooled AND serial must equal the CSC scans
+        let mut scan_s = vec![0.0; p];
+        let mut scan_c = vec![0.0; p];
+        store.xt_vec(&v, &mut scan_s);
+        csc.xt_vec(&v, &mut scan_c);
+        assert_eq!(scan_s, scan_c, "xt_vec chunk_bytes={chunk_bytes}");
+        assert_eq!(store.xt_abs_max(&v).to_bits(), csc.xt_abs_max(&v).to_bits());
+        assert_eq!(store.col_norms_sq(), csc.col_norms_sq());
+        let serial = par::run_serial(|| {
+            let mut out = vec![0.0; p];
+            store.xt_vec(&v, &mut out);
+            out
+        });
+        assert_eq!(serial, scan_c, "serial ooc scan == csc scan");
+        // working-set restriction and full materialization round-trip
+        let keep: Vec<usize> = (0..p).step_by(11).collect();
+        let sub_s = store.select_columns_csc(&keep);
+        let sub_c = csc.select_columns(&keep);
+        for (jj, _) in keep.iter().enumerate() {
+            assert_eq!(sub_s.col(jj), sub_c.col(jj));
+        }
+        let round = store.to_csc();
+        for j in 0..p {
+            assert_eq!(round.col(j), csc.col(j), "to_csc col {j}");
+        }
+    }
+}
+
+fn assert_paths_bit_identical(a: &PathResult, b: &PathResult, what: &str) {
+    assert_eq!(a.steps.len(), b.steps.len(), "{what}: step count");
+    for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits(), "{what}: λ#{i}");
+        assert_eq!(sa.gap.to_bits(), sb.gap.to_bits(), "{what}: gap#{i}");
+        let ba = sa.beta.as_ref().expect("store_betas");
+        let bb = sb.beta.as_ref().expect("store_betas");
+        let diff = ba.iter().zip(bb).position(|(x, y)| x.to_bits() != y.to_bits());
+        assert_eq!(diff, None, "{what}: β#{i} first differing coefficient {diff:?}");
+    }
+}
+
+#[test]
+fn lambda_path_on_store_is_bit_identical_to_in_memory() {
+    // The acceptance criterion: same λ-grid solved on the on-disk store
+    // and on the resident CSC must produce identical certificates.
+    let ds = synth::finance_mini(31);
+    let path = tmp("path.cstore");
+    let _guard = TmpFile(path.clone());
+    ooc::write_store(&path, &ds.x, &ds.y).unwrap();
+    // tiny chunks: the path genuinely streams (hundreds of chunks)
+    let store = OocColumnStore::open_with(&path, 1 << 12, 3).unwrap();
+    assert!(store.nchunks() > 4, "want a chunked store, got {}", store.nchunks());
+    let x_ooc = DesignMatrix::Ooc(store);
+
+    let lam_max = celer::lasso::dual::lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lam_max, 0.1, 6);
+    let solver = PathSolver::by_name("gapsafe-cd-accel", 1e-9).unwrap();
+
+    // sequential scheduler, pooled then serial
+    let mem = run_path(&ds.x, &ds.y, &grid, &solver, true);
+    let ooc_run = run_path(&x_ooc, &ds.y, &grid, &solver, true);
+    assert!(mem.all_converged());
+    assert_paths_bit_identical(&mem, &ooc_run, "sequential pooled");
+    let (mem_s, ooc_s) = par::run_serial(|| {
+        (
+            run_path(&ds.x, &ds.y, &grid, &solver, true),
+            run_path(&x_ooc, &ds.y, &grid, &solver, true),
+        )
+    });
+    assert_paths_bit_identical(&mem_s, &ooc_s, "sequential serial");
+    assert_paths_bit_identical(&mem, &mem_s, "pooled vs serial (in-memory)");
+
+    // batched lane scheduler over the same store
+    let mem_b = lasso_path(&ds.x, &ds.y, &grid, 1e-9, 3, true, &celer::penalty::L1);
+    let ooc_b = lasso_path(&x_ooc, &ds.y, &grid, 1e-9, 3, true, &celer::penalty::L1);
+    assert!(mem_b.all_converged());
+    assert_paths_bit_identical(&mem_b, &ooc_b, "batched pooled");
+}
+
+#[test]
+fn dense_written_and_sparse_written_stores_are_byte_identical() {
+    let ds = synth::leukemia_mini(41);
+    // leukemia_mini is dense; build the equivalent CSC by materializing
+    let DesignMatrix::Dense(ref dm) = ds.x else { panic!("leukemia_mini is dense") };
+    let (n, p) = (dm.n(), dm.p());
+    let csc = CscMatrix::from_dense(n, p, dm.raw());
+    let pd = tmp("dense_written.cstore");
+    let ps = tmp("sparse_written.cstore");
+    let _g1 = TmpFile(pd.clone());
+    let _g2 = TmpFile(ps.clone());
+    let md = ooc::write_store(&pd, dm, &ds.y).unwrap();
+    let ms = ooc::write_store(&ps, &csc, &ds.y).unwrap();
+    assert_eq!(md, ms, "meta");
+    let bd = std::fs::read(&pd).unwrap();
+    let bs = std::fs::read(&ps).unwrap();
+    assert_eq!(bd, bs, "files differ");
+}
+
+#[test]
+fn svmlight_roundtrips_through_the_store_converter() {
+    let ds = synth::finance_mini(51);
+    let svm = tmp("conv.svm");
+    let cst = tmp("conv.cstore");
+    let _g1 = TmpFile(svm.clone());
+    let _g2 = TmpFile(cst.clone());
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&svm).unwrap());
+        let dset = celer::data::svmlight::Dataset { x: ds.x, y: ds.y };
+        celer::data::svmlight::write_svmlight(&mut f, &dset).unwrap();
+    }
+    let meta = ooc::svmlight_to_store(&svm, &cst, 0).unwrap();
+    // reference: the same svmlight text through the in-memory parser
+    let parsed = celer::data::svmlight::load_svmlight(&svm).unwrap();
+    let DesignMatrix::Sparse(ref csc) = parsed.x else { panic!() };
+    assert_eq!((meta.n, meta.p, meta.nnz), (csc.n(), csc.p(), csc.nnz()));
+    let (store, y) = OocColumnStore::open_dataset(&cst).unwrap();
+    assert_eq!(y, parsed.y);
+    let round = store.to_csc();
+    for j in 0..csc.p() {
+        assert_eq!(round.col(j), csc.col(j), "converted col {j}");
+    }
+}
+
+#[test]
+fn corrupt_and_truncated_stores_fail_typed() {
+    let ds = synth::finance_mini(61);
+    let path = tmp("corrupt.cstore");
+    let _guard = TmpFile(path.clone());
+    ooc::write_store(&path, &ds.x, &ds.y).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let expect_format = |bytes: &[u8], what: &str| {
+        std::fs::write(&path, bytes).unwrap();
+        match OocColumnStore::open(&path) {
+            Err(SolveError::StoreFormat { .. }) => {}
+            other => panic!("{what}: expected StoreFormat, got {other:?}"),
+        }
+    };
+    // header cut mid-field
+    expect_format(&good[..17], "truncated header");
+    // payload cut: advertised nnz no longer fits the file
+    expect_format(&good[..good.len() - 5], "truncated payload");
+    // wrong magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    expect_format(&bad, "bad magic");
+    // unknown version
+    let mut bad = good.clone();
+    bad[8] = 99;
+    expect_format(&bad, "bad version");
+    // corrupt column index: indptr[0] stomped (must be 0)
+    let mut bad = good.clone();
+    let n = ds.y.len();
+    let indptr0 = 40 + 8 * n; // header + y segment
+    bad[indptr0..indptr0 + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    expect_format(&bad, "corrupt indptr[0]");
+    // non-monotone column index: indptr[1] pushed past indptr[2]
+    let mut bad = good.clone();
+    bad[indptr0 + 8..indptr0 + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+    expect_format(&bad, "non-monotone indptr");
+
+    // a missing file is also a typed error, not a panic
+    let gone = tmp("never_written.cstore");
+    assert!(matches!(
+        OocColumnStore::open(&gone),
+        Err(SolveError::StoreFormat { .. })
+    ));
+}
+
+#[test]
+fn validation_gate_catches_nonfinite_payload() {
+    let ds = synth::finance_mini(71);
+    let path = tmp("nonfinite.cstore");
+    let _guard = TmpFile(path.clone());
+    let meta = ooc::write_store(&path, &ds.x, &ds.y).unwrap();
+    // the poisoned entry (the store's last) lives in the last column
+    // holding any entries at all
+    let DesignMatrix::Sparse(ref csc) = ds.x else { panic!() };
+    let last_nonempty = (0..csc.p()).rev().find(|&j| csc.col_nnz(j) > 0).unwrap();
+    // poison one stored value: last f64 of the data segment
+    let mut bytes = std::fs::read(&path).unwrap();
+    let off = bytes.len() - 8;
+    bytes[off..].copy_from_slice(&f64::NAN.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let store = OocColumnStore::open(&path).unwrap();
+    assert_eq!(store.meta(), meta, "header still valid");
+    match validate::validate_design(&DesignMatrix::Ooc(store)) {
+        Err(SolveError::NonFiniteDesign { col, .. }) => {
+            assert_eq!(col, last_nonempty, "poisoned entry sits in the last stored column");
+        }
+        other => panic!("expected NonFiniteDesign, got {other:?}"),
+    }
+}

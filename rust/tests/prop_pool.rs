@@ -156,6 +156,96 @@ fn reentrancy_from_coordinator_workers() {
 }
 
 #[test]
+fn first_touch_shadows_match_serial_construction_bitwise() {
+    // The f32 shadows are built with `par::alloc_first_touch`: each
+    // worker writes (first-touches) the shards it owns, so the pages
+    // land on the worker's NUMA node. Placement must be invisible to
+    // the math — a shadow built by the pool and one built under the
+    // serial scope must be bit-identical for any CELER_NUM_THREADS (CI
+    // runs this at 1 and 4 threads), on dense and sparse storage.
+    use celer::data::shadow::ShadowF32;
+    for x in [&big_dense(15), &big_sparse(15)] {
+        let pooled = x.shadow_f32();
+        let serial = par::run_serial(|| x.shadow_f32());
+        let v: Vec<f32> = rand_vec(16, x.n()).iter().map(|&t| t as f32).collect();
+        let lanes = [0usize];
+        for j in (0..x.p()).step_by(97) {
+            assert_eq!(
+                pooled.col_dot(j, &v).to_bits(),
+                serial.col_dot(j, &v).to_bits(),
+                "shadow col_dot j={j}"
+            );
+            let mut op = [0.0f32];
+            let mut os = [0.0f32];
+            pooled.col_dot_lanes(j, &v, x.n(), &lanes, &mut op);
+            serial.col_dot_lanes(j, &v, x.n(), &lanes, &mut os);
+            assert_eq!(op[0].to_bits(), os[0].to_bits(), "shadow lane dot j={j}");
+        }
+        // the explicit constructor path used by the out-of-core store
+        if let DesignMatrix::Sparse(csc) = x {
+            let (indptr, indices, data) = {
+                let mut ip = vec![0usize; csc.p() + 1];
+                let mut ix = Vec::new();
+                let mut dv = Vec::new();
+                for j in 0..csc.p() {
+                    let (ci, cd) = csc.col(j);
+                    ix.extend_from_slice(ci);
+                    dv.extend(cd.iter().map(|&t| t as f32));
+                    ip[j + 1] = ix.len();
+                }
+                (ip, ix, dv)
+            };
+            let parts = ShadowF32::sparse_from_parts(
+                csc.n(),
+                csc.p(),
+                indptr.clone(),
+                indices.clone(),
+                data.clone(),
+            );
+            let parts_serial = par::run_serial(|| {
+                ShadowF32::sparse_from_parts(csc.n(), csc.p(), indptr, indices, data)
+            });
+            for j in (0..csc.p()).step_by(97) {
+                assert_eq!(
+                    parts.col_dot(j, &v).to_bits(),
+                    parts_serial.col_dot(j, &v).to_bits()
+                );
+                assert_eq!(
+                    parts.col_dot(j, &v).to_bits(),
+                    pooled.col_dot(j, &v).to_bits(),
+                    "sparse_from_parts == from_csc shadow, j={j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn first_touch_primitives_have_plain_vec_semantics() {
+    // alloc_first_touch must equal a plain sequential collect (the
+    // worker that touches a shard changes page placement, never bits),
+    // and resize_first_touch must equal Vec::resize, above and below
+    // the parallel threshold and with fewer items than shards.
+    for len in [0usize, 7, par::SHARDS + 5, par::PAR_WORK_THRESHOLD + 123] {
+        let f = |i: usize| (i as u64).wrapping_mul(0x9E3779B97F4A7C15) as f64 * 1e-18;
+        let pooled = par::alloc_first_touch(len, 1, f);
+        let plain: Vec<f64> = (0..len).map(f).collect();
+        assert_eq!(pooled, plain, "alloc len={len}");
+        let serial = par::run_serial(|| par::alloc_first_touch(len, 1, f));
+        assert_eq!(serial, plain, "serial alloc len={len}");
+
+        let mut grown = plain.clone();
+        par::resize_first_touch(&mut grown, len * 2 + 3);
+        let mut expect = plain.clone();
+        expect.resize(len * 2 + 3, 0.0);
+        assert_eq!(grown, expect, "grow len={len}");
+        par::resize_first_touch(&mut grown, len / 2);
+        expect.truncate(len / 2);
+        assert_eq!(grown, expect, "shrink len={len}");
+    }
+}
+
+#[test]
 fn solver_results_invariant_under_serial_scope() {
     // End-to-end: a full gap-certified solve driven through the pooled
     // scans equals the all-serial run bit-for-bit. With the CI thread

@@ -1,36 +1,62 @@
 #!/usr/bin/env bash
-# Export the `hot/*` kernel microbenchmarks to BENCH_<pr>.json.
+# Export kernel / streaming microbenchmarks to BENCH_<pr>.json.
+#
+# PR selector (picks bench target, proxy source and output file):
+#   --pr 6   kernel layer: rust/benches/hotpath_micro.rs, gcc mirror
+#            scripts/simd_proxy.c, writes BENCH_6.json   (default)
+#   --pr 9   out-of-core streaming sweep: rust/benches/ooc_stream.rs,
+#            gcc mirror scripts/ooc_proxy.c, writes BENCH_9.json
 #
 # Modes (pick one source of numbers):
-#   scripts/bench_export.sh              run `cargo bench --bench hotpath_micro`
-#                                        and parse its `bench ...` lines
-#   scripts/bench_export.sh --proxy      no Rust toolchain: build and run the
-#                                        gcc mirror scripts/simd_proxy.c at the
-#                                        default (n=4096) and large (n=262144)
-#                                        shapes and parse its `proxy ...` lines
-#   scripts/bench_export.sh --dry-run    parse an embedded sample transcript —
-#                                        exercises the parser without running
-#                                        anything (CI bench-smoke step)
+#   scripts/bench_export.sh [--pr N]           run `cargo bench` and parse
+#                                              its `bench ...` lines
+#   scripts/bench_export.sh [--pr N] --proxy   no Rust toolchain: build and
+#                                              run the gcc mirror at two
+#                                              shapes, parse `proxy ...` lines
+#   scripts/bench_export.sh [--pr N] --dry-run parse an embedded sample
+#                                              transcript — exercises the
+#                                              parser without running anything
+#                                              (CI bench-smoke step)
 #
-#   --out FILE    output path (default: BENCH_6.json at the repo root)
+#   --out FILE    output path (default: BENCH_<pr>.json at the repo root)
 #
 # Output schema: a JSON object with provenance metadata and one record per
-# bench arm: {kernel, shape, iters, ns_per_iter, gflops|null}.
+# bench arm: {kernel, shape, iters, ns_per_iter, gflops|null} plus, for
+# streaming arms, optional {bytes_per_s, cols_per_s, amort}.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
-OUT="$ROOT/BENCH_6.json"
+OUT=""
 MODE="cargo"
+PR=6
 
 while [ $# -gt 0 ]; do
     case "$1" in
         --proxy) MODE="proxy" ;;
         --dry-run) MODE="dry-run" ;;
+        --pr) PR="$2"; shift ;;
         --out) OUT="$2"; shift ;;
         *) echo "unknown arg: $1" >&2; exit 2 ;;
     esac
     shift
 done
+
+case "$PR" in
+    6)
+        BENCH_TARGET="hotpath_micro"
+        PROXY_SRC="simd_proxy.c"
+        TITLE="BENCH_6 kernel layer (util::simd + lane tiles + f32 sweep)"
+        NOTES="speedup = scalar ns_per_iter / kernel ns_per_iter at the same shape; the acceptance arm is the large shape, where the column stream exceeds cache"
+        ;;
+    9)
+        BENCH_TARGET="ooc_stream"
+        PROXY_SRC="ooc_proxy.c"
+        TITLE="BENCH_9 out-of-core column store (streaming sweep + lane amortization)"
+        NOTES="amort = B * t(1-lane sweep) / t(B-lane sweep): lanes served per fetch+decode of one column chunk; acceptance bar is amort >= B/2 on the sweep arm. bytes_per_s counts logical store traffic (12 B/entry); re-reads hit the OS page cache, so this measures the streaming pipeline, not cold-device I/O"
+        ;;
+    *) echo "unknown --pr $PR (known: 6, 9)" >&2; exit 2 ;;
+esac
+[ -n "$OUT" ] || OUT="$ROOT/BENCH_$PR.json"
 
 # ---- collect raw bench lines -------------------------------------------
 
@@ -43,16 +69,27 @@ case "$MODE" in
             echo "cargo not found; use --proxy (gcc mirror) or --dry-run" >&2
             exit 1
         }
-        (cd "$ROOT/rust" && cargo bench --bench hotpath_micro) | tee "$RAW"
+        (cd "$ROOT/rust" && cargo bench --bench "$BENCH_TARGET") | tee "$RAW"
         ;;
     proxy)
         command -v gcc >/dev/null 2>&1 || { echo "gcc not found" >&2; exit 1; }
         BIN="$(mktemp -u)"
-        gcc -O3 -march=native -o "$BIN" "$ROOT/scripts/simd_proxy.c"
-        "$BIN" | tee "$RAW"                                    # n=4096  p=256
-        gcc -O3 -march=native -DN=262144 -DP=32 -DITERS=15 -o "$BIN" \
-            "$ROOT/scripts/simd_proxy.c"
-        "$BIN" | tee -a "$RAW"                                 # n=262144 p=32
+        case "$PR" in
+            6)
+                gcc -O3 -march=native -o "$BIN" "$ROOT/scripts/$PROXY_SRC"
+                "$BIN" | tee "$RAW"                                # n=4096  p=256
+                gcc -O3 -march=native -DN=262144 -DP=32 -DITERS=15 -o "$BIN" \
+                    "$ROOT/scripts/$PROXY_SRC"
+                "$BIN" | tee -a "$RAW"                             # n=262144 p=32
+                ;;
+            9)
+                gcc -O3 -march=native -pthread -o "$BIN" "$ROOT/scripts/$PROXY_SRC"
+                "$BIN" | tee "$RAW"                                # n=512  p=16384
+                gcc -O3 -march=native -pthread -DN=2048 -DP=65536 -DDENSITY=0.02 \
+                    -DITERS=8 -o "$BIN" "$ROOT/scripts/$PROXY_SRC"
+                "$BIN" | tee -a "$RAW"                             # ~32 MB store
+                ;;
+        esac
         rm -f "$BIN"
         ;;
     dry-run)
@@ -61,6 +98,7 @@ bench hot/lanes_dot_scalar_dense_n4096_b8    iters=12  min=    9.9ms mean=   10.
 bench hot/lanes_dot_blocked_dense_n4096_b8   iters=12  min=    5.7ms mean=    5.8ms max=    6.1ms
 bench hot/f32_cd_epoch_dense_n4096_p256      iters=12  min=  950.0µs mean=  1.1ms max=    1.3ms
 proxy lanes_axpy_blocked_dense n=262144 p=32 b=8 iters=15 min_ns=30302168 mean_ns=38059655 gflops=4.43
+stream ooc_stream_sweep_n512_p16384 n=512 p=16384 b=8 iters=12 min_ns=2105882 bytes_per_s=2.391e+09 cols_per_s=7.780e+06 amort=4.72
 SAMPLE
         ;;
 esac
@@ -70,8 +108,14 @@ esac
 HOST="$(uname -srm 2>/dev/null || echo unknown)"
 CPU="$(grep -m1 'model name' /proc/cpuinfo 2>/dev/null | sed 's/.*: //' || echo unknown)"
 case "$MODE" in
-    cargo)   PROV="cargo-bench (rust/benches/hotpath_micro.rs)" ;;
-    proxy)   PROV="gcc-proxy (scripts/simd_proxy.c, -O3 -march=native, no fast-math; same kernels/accumulator contract as util::simd — no Rust toolchain in this environment)" ;;
+    cargo)
+        RUSTC_V="$(rustc --version 2>/dev/null || echo 'rustc unknown')"
+        CARGO_V="$(cargo --version 2>/dev/null || echo 'cargo unknown')"
+        PROV="cargo-bench (rust/benches/$BENCH_TARGET.rs; $RUSTC_V; $CARGO_V)"
+        ;;
+    proxy)
+        PROV="gcc-proxy (scripts/$PROXY_SRC, -O3 -march=native, no fast-math; same kernels/accumulator contract as the Rust implementation — no Rust toolchain in this environment)"
+        ;;
     dry-run) PROV="dry-run sample (parser smoke test, NOT measurements)" ;;
 esac
 
@@ -84,15 +128,17 @@ trap 'rm -f "$RAW" "$STAGED"' EXIT
 
 {
     printf '{\n'
-    printf '  "bench": "BENCH_6 kernel layer (util::simd + lane tiles + f32 sweep)",\n'
+    printf '  "bench": "%s",\n' "$TITLE"
     printf '  "provenance": "%s",\n' "$PROV"
     printf '  "host": "%s",\n' "$HOST"
     printf '  "cpu": "%s",\n' "$CPU"
-    printf '  "notes": "speedup = scalar ns_per_iter / kernel ns_per_iter at the same shape; the acceptance arm is the large shape, where the column stream exceeds cache",\n'
+    printf '  "notes": "%s",\n' "$NOTES"
     printf '  "results": [\n'
-    # Normalize the µs glyph so awk sees single-byte units, then parse both
-    # the Rust harness format (`bench <name> iters=N min=<v><unit> ...`) and
-    # the proxy format (`proxy <name> n=.. iters=N min_ns=.. gflops=..`).
+    # Normalize the µs glyph so awk sees single-byte units, then parse the
+    # Rust harness format (`bench <name> iters=N min=<v><unit> ...`) and the
+    # key=value formats: `proxy <name> n=.. iters=N min_ns=.. [gflops=..]`
+    # from the gcc mirrors and `stream <name> ... bytes_per_s=.. amort=..`
+    # from rust/benches/ooc_stream.rs.
     sed 's/µs/us/g' "$RAW" | awk '
         function tons(v, unit) {
             if (unit == "us") return v * 1e3
@@ -100,10 +146,10 @@ trap 'rm -f "$RAW" "$STAGED"' EXIT
             if (unit == "s")  return v * 1e9
             return v
         }
-        function emit(kernel, shape, iters, ns, gflops) {
+        function emit(kernel, shape, iters, ns, gflops, extra) {
             if (count++) printf ",\n"
-            printf "    {\"kernel\": \"%s\", \"shape\": \"%s\", \"iters\": %d, \"ns_per_iter\": %.0f, \"gflops\": %s}", \
-                kernel, shape, iters, ns, gflops
+            printf "    {\"kernel\": \"%s\", \"shape\": \"%s\", \"iters\": %d, \"ns_per_iter\": %.0f, \"gflops\": %s%s}", \
+                kernel, shape, iters, ns, gflops, extra
         }
         $1 == "bench" {
             line = $0
@@ -117,11 +163,12 @@ trap 'rm -f "$RAW" "$STAGED"' EXIT
                 minv = m; gsub(/[a-z]/, "", minv)
             }
             if (minv != "")
-                emit($2, "see kernel name", iters, tons(minv + 0, unit), "null")
+                emit($2, "see kernel name", iters, tons(minv + 0, unit), "null", "")
             next
         }
-        $1 == "proxy" {
+        $1 == "proxy" || $1 == "stream" {
             n = ""; p = ""; b = ""; iters = 0; ns = 0; gf = "null"
+            bps = ""; cps = ""; am = ""
             for (i = 3; i <= NF; i++) {
                 split($i, kv, "=")
                 if (kv[1] == "n") n = kv[2]
@@ -130,8 +177,15 @@ trap 'rm -f "$RAW" "$STAGED"' EXIT
                 if (kv[1] == "iters") iters = kv[2] + 0
                 if (kv[1] == "min_ns") ns = kv[2] + 0
                 if (kv[1] == "gflops") gf = kv[2]
+                if (kv[1] == "bytes_per_s") bps = kv[2]
+                if (kv[1] == "cols_per_s") cps = kv[2]
+                if (kv[1] == "amort") am = kv[2]
             }
-            emit($2, "n=" n " p=" p " b=" b, iters, ns, gf)
+            extra = ""
+            if (bps != "") extra = extra sprintf(", \"bytes_per_s\": %.4g", bps + 0)
+            if (cps != "") extra = extra sprintf(", \"cols_per_s\": %.4g", cps + 0)
+            if (am != "")  extra = extra sprintf(", \"amort\": %s", am)
+            emit($2, "n=" n " p=" p " b=" b, iters, ns, gf, extra)
             next
         }
     '

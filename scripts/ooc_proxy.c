@@ -1,0 +1,350 @@
+/* C proxy for the out-of-core streaming-sweep benchmark (BENCH_9).
+ *
+ * The container this repo grows in has no Rust toolchain, so the
+ * committed BENCH_9.json numbers are measured with this gcc mirror of
+ * rust/benches/ooc_stream.rs. It reproduces the data/ooc.rs pipeline
+ * end to end:
+ *
+ *   - writes a synthetic sparse design to a temp file in the exact
+ *     CELERCS1 v1 layout (header | y f64 | indptr u64 | indices u32 |
+ *     data f64), zeros dropped;
+ *   - streams it back in byte-bounded column chunks via pread, with a
+ *     pthread prefetcher double-buffering chunk c+1 while the main
+ *     thread decodes/sweeps chunk c (mirror of the celer-ooc-prefetch
+ *     thread + two-slot handoff);
+ *   - arm 1 sweeps every column with a single-lane gather dot;
+ *   - arm 2 serves B = 8 lambda-lanes per fetched column (mirror of
+ *     csc::lane_dot_entries' pair-processed loop);
+ *   - arm 3 is the write-side lane axpy.
+ *
+ * The measured amortization factor is B * t(1-lane) / t(B-lane): how
+ * many of the B lanes ride for free on one fetch+decode. Like the Rust
+ * bench, re-reads hit the OS page cache — this measures the streaming
+ * pipeline (syscall + decode + kernel), not cold-device I/O.
+ *
+ * Build + run:
+ *   gcc -O3 -march=native -pthread -o /tmp/ooc_proxy scripts/ooc_proxy.c && /tmp/ooc_proxy
+ * Output lines:
+ *   proxy <name> n=.. p=.. b=.. iters=.. min_ns=.. mean_ns=.. bytes_per_s=.. cols_per_s=.. amort=..
+ */
+#define _GNU_SOURCE
+#include <fcntl.h>
+#include <pthread.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+#include <unistd.h>
+
+#ifndef N
+#define N 512
+#endif
+#ifndef P
+#define P 16384
+#endif
+#define B 8
+#ifndef DENSITY
+#define DENSITY 0.05
+#endif
+#ifndef ITERS
+#define ITERS 12
+#endif
+
+#define HEADER_LEN 40
+#define ENTRY_BYTES 12 /* u32 row index + f64 value */
+
+static double now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec * 1e9 + (double)ts.tv_nsec;
+}
+
+/* xorshift64* — deterministic fill, matches the spirit of util::rng */
+static unsigned long long rng_state = 0x9e3779b97f4a7c15ULL;
+static double uniform01(void) {
+    rng_state ^= rng_state >> 12;
+    rng_state ^= rng_state << 25;
+    rng_state ^= rng_state >> 27;
+    unsigned long long z = rng_state * 0x2545F4914F6CDD1DULL;
+    return (double)(z >> 11) / 9007199254740992.0;
+}
+
+/* ---- store creation: CELERCS1 v1 layout --------------------------- */
+
+static uint64_t indptr[P + 1];
+
+static uint64_t write_store(const char *path) {
+    uint32_t *indices = malloc(sizeof(uint32_t) * (size_t)N * P);
+    double *data = malloc(sizeof(double) * (size_t)N * P);
+    if (!indices || !data) exit(1);
+    uint64_t nnz = 0;
+    for (int j = 0; j < P; j++) {
+        indptr[j] = nnz;
+        for (int i = 0; i < N; i++) {
+            if (uniform01() < DENSITY) {
+                indices[nnz] = (uint32_t)i;
+                data[nnz] = uniform01() - 0.5;
+                nnz++;
+            }
+        }
+    }
+    indptr[P] = nnz;
+
+    FILE *f = fopen(path, "wb");
+    if (!f) exit(1);
+    uint32_t version = 1, flags = 0;
+    uint64_t n64 = N, p64 = P;
+    fwrite("CELERCS1", 1, 8, f);
+    fwrite(&version, 4, 1, f);
+    fwrite(&flags, 4, 1, f);
+    fwrite(&n64, 8, 1, f);
+    fwrite(&p64, 8, 1, f);
+    fwrite(&nnz, 8, 1, f);
+    for (int i = 0; i < N; i++) {
+        double yi = uniform01() - 0.5;
+        fwrite(&yi, 8, 1, f);
+    }
+    fwrite(indptr, 8, P + 1, f);
+    fwrite(indices, 4, nnz, f);
+    fwrite(data, 8, nnz, f);
+    fclose(f);
+    free(indices);
+    free(data);
+    return nnz;
+}
+
+/* ---- chunk plan: greedy byte-bounded column ranges ---------------- */
+
+static int chunk_starts[P + 2];
+static int nchunks;
+static uint64_t idx_off, data_off;
+static uint64_t max_chunk_entries;
+
+static void plan_chunks(uint64_t nnz, uint64_t chunk_bytes) {
+    idx_off = HEADER_LEN + 8ULL * N + 8ULL * (P + 1);
+    data_off = idx_off + 4ULL * nnz;
+    nchunks = 0;
+    max_chunk_entries = 0;
+    int j = 0;
+    while (j < P) {
+        chunk_starts[nchunks++] = j;
+        int start = j;
+        uint64_t bytes = 0;
+        while (j < P) {
+            uint64_t col = (indptr[j + 1] - indptr[j]) * ENTRY_BYTES;
+            if (j > start && bytes + col > chunk_bytes) break;
+            bytes += col;
+            j++;
+        }
+        uint64_t e = indptr[j] - indptr[start];
+        if (e > max_chunk_entries) max_chunk_entries = e;
+    }
+    chunk_starts[nchunks] = P;
+}
+
+/* ---- double-buffered prefetch (mirror of ooc.rs Prefetcher) ------- */
+
+typedef struct {
+    uint32_t *idx;
+    double *val;
+    unsigned char *raw_idx;
+    unsigned char *raw_val;
+    uint64_t entry0;
+} Slot;
+
+static Slot slots[2];
+static int store_fd;
+
+static void load_chunk(int c, Slot *s) {
+    int j0 = chunk_starts[c], j1 = chunk_starts[c + 1];
+    uint64_t e0 = indptr[j0], e1 = indptr[j1];
+    uint64_t ne = e1 - e0;
+    s->entry0 = e0;
+    /* two pread calls + explicit LE decode, like ooc.rs load_chunk */
+    if (pread(store_fd, s->raw_idx, 4 * ne, (off_t)(idx_off + 4 * e0)) != (ssize_t)(4 * ne)) exit(2);
+    if (pread(store_fd, s->raw_val, 8 * ne, (off_t)(data_off + 8 * e0)) != (ssize_t)(8 * ne)) exit(2);
+    memcpy(s->idx, s->raw_idx, 4 * ne);
+    memcpy(s->val, s->raw_val, 8 * ne);
+}
+
+static pthread_mutex_t pf_m = PTHREAD_MUTEX_INITIALIZER;
+static pthread_cond_t pf_cv = PTHREAD_COND_INITIALIZER;
+static int pf_want = -1, pf_done = -1, pf_shutdown = 0;
+
+static void *prefetch_main(void *arg) {
+    (void)arg;
+    for (;;) {
+        pthread_mutex_lock(&pf_m);
+        while (pf_want < 0 && !pf_shutdown) pthread_cond_wait(&pf_cv, &pf_m);
+        if (pf_shutdown) {
+            pthread_mutex_unlock(&pf_m);
+            return NULL;
+        }
+        int c = pf_want;
+        pf_want = -1;
+        pthread_mutex_unlock(&pf_m);
+        load_chunk(c, &slots[c % 2]);
+        pthread_mutex_lock(&pf_m);
+        pf_done = c;
+        pthread_cond_signal(&pf_cv);
+        pthread_mutex_unlock(&pf_m);
+    }
+}
+
+static void request(int c) {
+    pthread_mutex_lock(&pf_m);
+    pf_want = c;
+    pthread_cond_signal(&pf_cv);
+    pthread_mutex_unlock(&pf_m);
+}
+
+static void wait_done(int c) {
+    pthread_mutex_lock(&pf_m);
+    while (pf_done < c) pthread_cond_wait(&pf_cv, &pf_m);
+    pthread_mutex_unlock(&pf_m);
+}
+
+/* ---- sweep kernels over one chunk's decoded entries --------------- */
+
+/* single-lane gather dot: 4-way accumulators, mirror of simd::gather_dot */
+__attribute__((noinline)) static double gdot1(const uint32_t *idx, const double *val, uint64_t ne,
+                                              const double *v) {
+    double a0 = 0, a1 = 0, a2 = 0, a3 = 0;
+    uint64_t m = ne - (ne % 4);
+    for (uint64_t t = 0; t < m; t += 4) {
+        a0 += val[t] * v[idx[t]];
+        a1 += val[t + 1] * v[idx[t + 1]];
+        a2 += val[t + 2] * v[idx[t + 2]];
+        a3 += val[t + 3] * v[idx[t + 3]];
+    }
+    for (uint64_t t = m; t < ne; t++) a0 += val[t] * v[idx[t]];
+    return (a0 + a1) + (a2 + a3);
+}
+
+/* B-lane gather dot: each entry loaded once, pair-processed lanes
+ * (mirror of csc::lane_dot_entries) */
+__attribute__((noinline)) static void gdotB(const uint32_t *idx, const double *val, uint64_t ne,
+                                            const double *v, double *out) {
+    for (int k = 0; k < B; k++) out[k] = 0.0;
+    for (uint64_t t = 0; t < ne; t++) {
+        uint32_t i = idx[t];
+        double x = val[t];
+        for (int k = 0; k < B; k += 2) {
+            out[k] += x * v[(size_t)k * N + i];
+            out[k + 1] += x * v[(size_t)(k + 1) * N + i];
+        }
+    }
+}
+
+/* B-lane gather axpy (mirror of csc::lane_axpy_entries) */
+__attribute__((noinline)) static void gaxpyB(const uint32_t *idx, const double *val, uint64_t ne,
+                                             const double *alphas, double *v) {
+    for (uint64_t t = 0; t < ne; t++) {
+        uint32_t i = idx[t];
+        double x = val[t];
+        for (int k = 0; k < B; k++) v[(size_t)k * N + i] += alphas[k] * x;
+    }
+}
+
+/* one full streaming sweep: prefetch pipeline + per-column kernel */
+typedef void (*col_fn)(const uint32_t *idx, const double *val, uint64_t ne, double *v, double *sink);
+
+static void sweep(col_fn f, double *v, double *sink) {
+    pf_done = -1;
+    load_chunk(0, &slots[0]); /* prime slot 0 synchronously */
+    for (int c = 0; c < nchunks; c++) {
+        if (c > 0) wait_done(c);
+        if (c + 1 < nchunks) request(c + 1);
+        Slot *s = &slots[c % 2];
+        for (int j = chunk_starts[c]; j < chunk_starts[c + 1]; j++) {
+            uint64_t rel = indptr[j] - s->entry0;
+            f(s->idx + rel, s->val + rel, indptr[j + 1] - indptr[j], v, sink);
+        }
+    }
+}
+
+static void col_dot1(const uint32_t *idx, const double *val, uint64_t ne, double *v, double *sink) {
+    *sink += gdot1(idx, val, ne, v);
+}
+
+static void col_dotB(const uint32_t *idx, const double *val, uint64_t ne, double *v, double *sink) {
+    double out[B];
+    gdotB(idx, val, ne, v, out);
+    *sink += out[0];
+}
+
+static double ALPHAS[B];
+
+static void col_axpyB(const uint32_t *idx, const double *val, uint64_t ne, double *v, double *sink) {
+    gaxpyB(idx, val, ne, ALPHAS, v);
+    *sink += 0.0;
+}
+
+static double bench_min(col_fn f, double *v, double *mean_ns_out) {
+    double sink = 0.0;
+    sweep(f, v, &sink); /* warmup */
+    double min_ns = 1e30, sum_ns = 0.0;
+    for (int it = 0; it < ITERS; it++) {
+        double t0 = now_ns();
+        sweep(f, v, &sink);
+        double dt = now_ns() - t0;
+        if (dt < min_ns) min_ns = dt;
+        sum_ns += dt;
+    }
+    if (sink == 12345.678) fprintf(stderr, "sink\n"); /* defeat DCE */
+    *mean_ns_out = sum_ns / ITERS;
+    return min_ns;
+}
+
+int main(void) {
+    char path[256];
+    snprintf(path, sizeof path, "/tmp/celer_ooc_proxy_%d.cstore", (int)getpid());
+    uint64_t nnz = write_store(path);
+    /* same chunk policy as the Rust bench: ~64 chunks, cache < chunks */
+    uint64_t chunk_bytes = nnz * ENTRY_BYTES / 64;
+    if (chunk_bytes < 4096) chunk_bytes = 4096;
+    plan_chunks(nnz, chunk_bytes);
+
+    store_fd = open(path, O_RDONLY);
+    if (store_fd < 0) return 1;
+    for (int s = 0; s < 2; s++) {
+        slots[s].idx = malloc(4 * max_chunk_entries);
+        slots[s].val = malloc(8 * max_chunk_entries);
+        slots[s].raw_idx = malloc(4 * max_chunk_entries);
+        slots[s].raw_val = malloc(8 * max_chunk_entries);
+        if (!slots[s].idx || !slots[s].val || !slots[s].raw_idx || !slots[s].raw_val) return 1;
+    }
+    pthread_t pf;
+    pthread_create(&pf, NULL, prefetch_main, NULL);
+
+    double *v = malloc(sizeof(double) * (size_t)B * N);
+    for (size_t i = 0; i < (size_t)B * N; i++) v[i] = uniform01() - 0.5;
+    for (int k = 0; k < B; k++) ALPHAS[k] = 1e-9 * (k + 1);
+
+    double mean1, meanB, meanA;
+    double min1 = bench_min(col_dot1, v, &mean1);
+    double minB = bench_min(col_dotB, v, &meanB);
+    double minA = bench_min(col_axpyB, v, &meanA);
+
+    double sweep_bytes = (double)nnz * ENTRY_BYTES;
+    printf("proxy ooc_stream_sweep n=%d p=%d b=%d iters=%d min_ns=%.0f mean_ns=%.0f "
+           "bytes_per_s=%.3e cols_per_s=%.3e amort=%.2f\n",
+           N, P, B, ITERS, minB, meanB, sweep_bytes / (minB / 1e9), P / (minB / 1e9),
+           B * min1 / minB);
+    printf("proxy ooc_stream_axpy n=%d p=%d b=%d iters=%d min_ns=%.0f mean_ns=%.0f "
+           "bytes_per_s=%.3e cols_per_s=%.3e amort=%.2f\n",
+           N, P, B, ITERS, minA, meanA, sweep_bytes / (minA / 1e9), P / (minA / 1e9),
+           B * min1 / minA);
+    printf("# chunks=%d chunk_bytes=%llu nnz=%llu\n", nchunks,
+           (unsigned long long)chunk_bytes, (unsigned long long)nnz);
+
+    pthread_mutex_lock(&pf_m);
+    pf_shutdown = 1;
+    pthread_cond_signal(&pf_cv);
+    pthread_mutex_unlock(&pf_m);
+    pthread_join(pf, NULL);
+    close(store_fd);
+    unlink(path);
+    return 0;
+}
