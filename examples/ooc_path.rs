@@ -81,11 +81,16 @@ fn main() {
     assert!(identical, "storage must be invisible to the math");
 
     if let DesignMatrix::Ooc(ref store) = x_ooc {
-        let (bytes, chunks, misses) = store.io_stats();
+        let io = store.io_stats();
         println!(
-            "synchronous io: {:.1} MiB in {chunks} chunk loads ({misses} cache misses on the \
-             sweep path; prefetched loads not counted)",
-            bytes as f64 / (1024.0 * 1024.0),
+            "synchronous io: {:.1} MiB in {} chunk loads ({} cache misses on the sweep path); \
+             prefetch: {} loads, {} hits, {:.1} MiB",
+            io.bytes_read as f64 / (1024.0 * 1024.0),
+            io.chunks_loaded,
+            io.sync_misses,
+            io.prefetch_loads,
+            io.prefetch_hits,
+            io.bytes_prefetched as f64 / (1024.0 * 1024.0),
         );
     }
     let _ = std::fs::remove_file(&path);

@@ -1,0 +1,167 @@
+//! Sharded out-of-core λ path: split one design across two column-store
+//! shards — each with its own file, chunk cache, and prefetch stream —
+//! and solve a warm-started λ path in exact f64 and in the streamed-f32
+//! sweep mode, checking both against the in-memory solve bit by bit.
+//!
+//! ```bash
+//! cargo run --release --example sharded_path
+//! ```
+//!
+//! The flow mirrors a design too large for one spindle or socket:
+//!
+//! 1. generate a sparse design and write it as two shard files
+//!    (`celer convert --shards 2` does the same from svmlight input);
+//! 2. open them as one [`ShardedStore`] with tiny chunk budgets, so
+//!    both shards genuinely stream, each behind its own prefetcher;
+//! 3. run the λ path on `DesignMatrix::Sharded` in f64 and again with
+//!    `Precision::F32` (chunk-streamed f32 shadow — no full-design f32
+//!    copy is ever resident), comparing certificates to the resident
+//!    CSC solve, then print per-shard and combined io counters.
+
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::shard::{self, ShardedStore};
+use celer::data::synth;
+use celer::lasso::dual;
+use celer::report::{fmt_secs, Table};
+use celer::solvers::batch::BatchConfig;
+use celer::solvers::engine::Workspace;
+use celer::solvers::path::{lambda_grid, lasso_path, run_path_batched, PathResult};
+use celer::solvers::Precision;
+use std::time::Instant;
+
+fn bit_identical(a: &PathResult, b: &PathResult) -> bool {
+    a.steps.len() == b.steps.len()
+        && a.steps.iter().zip(&b.steps).all(|(sa, sb)| {
+            sa.gap.to_bits() == sb.gap.to_bits()
+                && sa
+                    .beta
+                    .as_ref()
+                    .unwrap()
+                    .iter()
+                    .zip(sb.beta.as_ref().unwrap())
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+fn main() {
+    let ds = synth::finance_mini(0);
+    let out = std::env::temp_dir()
+        .join(format!("celer_sharded_path_example_{}.cstore", std::process::id()));
+    let paths = shard::shard_paths(&out, 2);
+    let metas = shard::write_sharded_store(&paths, &ds.x, &ds.y).expect("write shards");
+    for (path, meta) in paths.iter().zip(&metas) {
+        println!(
+            "wrote shard {} (n={} cols={} nnz={}, {} bytes)",
+            path.display(),
+            meta.n,
+            meta.p,
+            meta.nnz,
+            std::fs::metadata(path).map(|m| m.len()).unwrap_or(0),
+        );
+    }
+
+    // 4 KiB chunks + a 3-chunk cache per shard: nothing close to
+    // resident, and two independent prefetch streams.
+    let store = ShardedStore::open_with(&paths, 4 << 10, 3).expect("open sharded store");
+    println!(
+        "opened {} shards, col bounds {:?}, {} chunks total\n",
+        store.num_shards(),
+        store.col_starts(),
+        (0..store.num_shards()).map(|s| store.shard(s).nchunks()).sum::<usize>(),
+    );
+    let x_sh = DesignMatrix::Sharded(store);
+
+    let tol = 1e-8;
+    let lanes = 4;
+    let grid = lambda_grid(dual::lambda_max(&ds.x, &ds.y), 0.05, 12);
+
+    // exact f64 lanes: sharded vs in-memory
+    let t0 = Instant::now();
+    let mem = lasso_path(&ds.x, &ds.y, &grid, tol, lanes, true, &celer::penalty::L1);
+    let t_mem = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let sh64 = lasso_path(&x_sh, &ds.y, &grid, tol, lanes, true, &celer::penalty::L1);
+    let t_sh64 = t0.elapsed().as_secs_f64();
+    assert!(mem.all_converged() && sh64.all_converged());
+
+    // streamed-f32 sweep mode: the CD epochs run on per-chunk f32
+    // shadows riding each shard's prefetch stream; gaps are exact f64.
+    let cfg32 = BatchConfig { tol: 1e-7, lanes, precision: Precision::F32, ..Default::default() };
+    let mut ws = Workspace::new();
+    let t0 = Instant::now();
+    let mem32 = run_path_batched(&ds.x, &ds.y, &grid, &cfg32, true, &mut ws);
+    let t_mem32 = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let sh32 = run_path_batched(&x_sh, &ds.y, &grid, &cfg32, true, &mut ws);
+    let t_sh32 = t0.elapsed().as_secs_f64();
+    assert!(mem32.all_converged() && sh32.all_converged());
+
+    let mut table = Table::new(
+        &format!("λ path ({} values, B = {lanes})", grid.len()),
+        &["design / sweep", "time", "Σ epochs", "final |support|"],
+    );
+    for (name, res, secs) in [
+        ("in-memory CSC, f64", &mem, t_mem),
+        ("2-shard store, f64", &sh64, t_sh64),
+        ("in-memory CSC, f32 sweep", &mem32, t_mem32),
+        ("2-shard store, streamed f32", &sh32, t_sh32),
+    ] {
+        table.row(vec![
+            name.into(),
+            fmt_secs(secs),
+            res.steps.iter().map(|s| s.epochs).sum::<usize>().to_string(),
+            res.steps.last().unwrap().support_size.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    let id64 = bit_identical(&mem, &sh64);
+    let id32 = bit_identical(&mem32, &sh32);
+    println!("\nf64 certificates bit-identical across sharding:          {}", yn(id64));
+    println!("streamed-f32 certificates match resident-f32 bitwise:    {}", yn(id32));
+    assert!(id64 && id32, "sharding must be invisible to the math");
+
+    if let DesignMatrix::Sharded(ref store) = x_sh {
+        // The streamed-f32 run kept at most cache × chunk f32 bytes
+        // per shard resident; report the bound next to the traffic.
+        let shadow = store.shadow_f32();
+        if let Some((_, _, bound)) = shadow.stream_stats() {
+            println!(
+                "\nstreamed f32 shadow bound: {:.1} KiB resident vs {:.1} KiB full copy",
+                bound as f64 / 1024.0,
+                (store.nnz() * 8) as f64 / 1024.0,
+            );
+        }
+        for (s, io) in store.io_stats_per_shard().iter().enumerate() {
+            let (c0, c1) = store.shard_cols(s);
+            println!(
+                "io shard {s} [cols {c0}..{c1}]: read {:.1} MiB in {} chunk loads \
+                 ({} sync misses); prefetch {} loads, {} hits, {:.1} MiB",
+                io.bytes_read as f64 / (1024.0 * 1024.0),
+                io.chunks_loaded,
+                io.sync_misses,
+                io.prefetch_loads,
+                io.prefetch_hits,
+                io.bytes_prefetched as f64 / (1024.0 * 1024.0),
+            );
+        }
+        let io = store.io_stats();
+        println!(
+            "io combined: read {:.1} MiB in {} chunk loads ({} sync misses); \
+             prefetch {} loads, {} hits, {:.1} MiB",
+            io.bytes_read as f64 / (1024.0 * 1024.0),
+            io.chunks_loaded,
+            io.sync_misses,
+            io.prefetch_loads,
+            io.prefetch_hits,
+            io.bytes_prefetched as f64 / (1024.0 * 1024.0),
+        );
+    }
+    for p in &paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+fn yn(b: bool) -> &'static str {
+    if b { "YES" } else { "NO" }
+}

@@ -149,6 +149,13 @@ fn bench_ws_inner_solve(tag: &str, x: &DesignMatrix, y: &[f64], iters: usize) {
                 assert!(out.epochs > 0);
             });
         }
+        DesignMatrix::Sharded(sh) => {
+            bench::time(&format!("hot/ws_inner_view_{tag}"), iters, || {
+                let view = DesignView::new(sh, &cols, &norms);
+                let out = cd_solve(&view, y, lambda, None, &cfg);
+                assert!(out.epochs > 0);
+            });
+        }
     }
 }
 
@@ -422,6 +429,13 @@ fn strided_col_dot(x: &DesignMatrix, j: usize, m: &[f64], q: usize, t: usize) ->
             acc
         }
         DesignMatrix::Ooc(o) => o.with_col(j, |idx, val| {
+            let mut acc = 0.0;
+            for k in 0..idx.len() {
+                acc += val[k] * m[idx[k] as usize * q + t];
+            }
+            acc
+        }),
+        DesignMatrix::Sharded(sh) => sh.with_col(j, |idx, val| {
             let mut acc = 0.0;
             for k in 0..idx.len() {
                 acc += val[k] * m[idx[k] as usize * q + t];

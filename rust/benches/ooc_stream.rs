@@ -104,7 +104,7 @@ fn run_shape(shape: &Shape) {
     // f64 value) per entry of logical stream traffic.
     let sweep_bytes = (nnz * 12) as f64;
     let amort = B as f64 * t1.min_s / tb.min_s;
-    let (bytes_read, chunks, sync_misses) = store.io_stats();
+    let io = store.io_stats();
     println!(
         "stream ooc_stream_sweep_{} n={} p={} b={B} iters={} min_ns={:.0} \
          bytes_per_s={:.3e} cols_per_s={:.3e} amort={:.2}",
@@ -130,8 +130,15 @@ fn run_shape(shape: &Shape) {
         B as f64 * t1.min_s / ta.min_s,
     );
     println!(
-        "# ooc io counters {}: bytes_read={bytes_read} chunks_loaded={chunks} sync_misses={sync_misses}",
-        shape.tag
+        "# ooc io counters {}: bytes_read={} chunks_loaded={} sync_misses={} \
+         prefetch_loads={} prefetch_hits={} bytes_prefetched={}",
+        shape.tag,
+        io.bytes_read,
+        io.chunks_loaded,
+        io.sync_misses,
+        io.prefetch_loads,
+        io.prefetch_hits,
+        io.bytes_prefetched,
     );
     let _ = std::fs::remove_file(&path);
 }

@@ -8,6 +8,7 @@
 use crate::data::csc::CscMatrix;
 use crate::data::dense::DenseMatrix;
 use crate::data::ooc::OocColumnStore;
+use crate::data::shard::ShardedStore;
 
 /// The column-oriented operations coordinate descent and screening need.
 pub trait DesignOps: Sync {
@@ -120,13 +121,15 @@ pub trait DesignOps: Sync {
     }
 }
 
-/// A design matrix: dense column-major, sparse CSC, or an out-of-core
-/// column store streaming CSC chunks from disk.
+/// A design matrix: dense column-major, sparse CSC, an out-of-core
+/// column store streaming CSC chunks from disk, or a design sharded
+/// across multiple stores with independent prefetch streams.
 #[derive(Debug, Clone)]
 pub enum DesignMatrix {
     Dense(DenseMatrix),
     Sparse(CscMatrix),
     Ooc(OocColumnStore),
+    Sharded(ShardedStore),
 }
 
 impl DesignMatrix {
@@ -142,12 +145,16 @@ impl DesignMatrix {
             // A working-set restriction is by definition small enough to
             // be resident: materialize it in memory.
             DesignMatrix::Ooc(o) => DesignMatrix::Sparse(o.select_columns_csc(cols)),
+            DesignMatrix::Sharded(s) => DesignMatrix::Sparse(s.select_columns_csc(cols)),
         }
     }
 
-    /// True if sparse storage (the out-of-core store holds CSC entries).
+    /// True if sparse storage (the out-of-core stores hold CSC entries).
     pub fn is_sparse(&self) -> bool {
-        matches!(self, DesignMatrix::Sparse(_) | DesignMatrix::Ooc(_))
+        matches!(
+            self,
+            DesignMatrix::Sparse(_) | DesignMatrix::Ooc(_) | DesignMatrix::Sharded(_)
+        )
     }
 
     /// Density of stored non-zeros.
@@ -163,6 +170,7 @@ macro_rules! dispatch {
             DesignMatrix::Dense(d) => d.$m($($a),*),
             DesignMatrix::Sparse(s) => s.$m($($a),*),
             DesignMatrix::Ooc(o) => o.$m($($a),*),
+            DesignMatrix::Sharded(sh) => sh.$m($($a),*),
         }
     };
 }

@@ -1,6 +1,7 @@
 //! Data substrate: design matrices (dense + CSC sparse + out-of-core
-//! column store), zero-copy column-restricted views, svmlight I/O,
-//! synthetic dataset generators, and the paper's preprocessing pipeline.
+//! column store + multi-store shards), zero-copy column-restricted
+//! views, svmlight I/O, synthetic dataset generators, and the paper's
+//! preprocessing pipeline.
 
 pub mod csc;
 pub mod dense;
@@ -8,6 +9,7 @@ pub mod design;
 pub mod ooc;
 pub mod preprocess;
 pub mod shadow;
+pub mod shard;
 pub mod svmlight;
 pub mod synth;
 pub mod validate;
@@ -17,4 +19,5 @@ pub use csc::CscMatrix;
 pub use dense::DenseMatrix;
 pub use design::{DesignMatrix, DesignOps};
 pub use ooc::OocColumnStore;
+pub use shard::ShardedStore;
 pub use view::DesignView;

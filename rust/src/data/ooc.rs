@@ -88,6 +88,73 @@ pub struct StoreMeta {
     pub nnz: usize,
 }
 
+/// I/O counters of one store (or, via [`IoStats::merge`], an aggregate
+/// across the shards of a [`crate::data::shard::ShardedStore`]) since
+/// open. Sweep-path loads and prefetch-thread loads are counted
+/// separately, so stream health is observable per shard: a healthy
+/// pipeline shows `sync_misses` ≪ chunks swept, with the bytes arriving
+/// through `bytes_prefetched` instead of `bytes_read`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Bytes of stored entries decoded on the sweep path itself.
+    pub bytes_read: u64,
+    /// Chunks decoded on the sweep path itself.
+    pub chunks_loaded: u64,
+    /// Cache misses the prefetcher failed to hide (every one of these
+    /// blocked a worker on disk I/O).
+    pub sync_misses: u64,
+    /// Chunks the prefetch thread streamed in ahead of use.
+    pub prefetch_loads: u64,
+    /// Prefetch hints that found the chunk already resident (the
+    /// pipeline was ahead of the hint — no I/O needed).
+    pub prefetch_hits: u64,
+    /// Bytes of stored entries streamed in by the prefetch thread.
+    pub bytes_prefetched: u64,
+}
+
+impl IoStats {
+    /// Element-wise sum: the combined view across shards.
+    pub fn merge(mut self, other: IoStats) -> IoStats {
+        self.bytes_read += other.bytes_read;
+        self.chunks_loaded += other.chunks_loaded;
+        self.sync_misses += other.sync_misses;
+        self.prefetch_loads += other.prefetch_loads;
+        self.prefetch_hits += other.prefetch_hits;
+        self.bytes_prefetched += other.bytes_prefetched;
+        self
+    }
+
+    /// Total bytes decoded from disk on any path (sweep + prefetch).
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_prefetched
+    }
+}
+
+/// Shared atomic backing of [`IoStats`]: written by the sweep path and
+/// the prefetch thread, snapshotted by [`OocColumnStore::io_stats`].
+#[derive(Default)]
+struct IoCounters {
+    bytes_read: AtomicU64,
+    chunks_loaded: AtomicU64,
+    sync_misses: AtomicU64,
+    prefetch_loads: AtomicU64,
+    prefetch_hits: AtomicU64,
+    bytes_prefetched: AtomicU64,
+}
+
+impl IoCounters {
+    fn snapshot(&self) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            chunks_loaded: self.chunks_loaded.load(Ordering::Relaxed),
+            sync_misses: self.sync_misses.load(Ordering::Relaxed),
+            prefetch_loads: self.prefetch_loads.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            bytes_prefetched: self.bytes_prefetched.load(Ordering::Relaxed),
+        }
+    }
+}
+
 fn ferr(path: &Path, detail: impl Into<String>) -> SolveError {
     SolveError::StoreFormat { path: path.display().to_string(), detail: detail.into() }
 }
@@ -316,7 +383,13 @@ struct Prefetcher {
 }
 
 impl Prefetcher {
-    fn start(file: Arc<File>, path: PathBuf, geom: Arc<Geometry>, cache: Arc<Cache>) -> Prefetcher {
+    fn start(
+        file: Arc<File>,
+        path: PathBuf,
+        geom: Arc<Geometry>,
+        cache: Arc<Cache>,
+        io: Arc<IoCounters>,
+    ) -> Prefetcher {
         let shared = Arc::new(PfShared {
             state: Mutex::new(PfState { want: None, shutdown: false }),
             cv: Condvar::new(),
@@ -337,9 +410,21 @@ impl Prefetcher {
                         st = sh.cv.wait(st).unwrap();
                     }
                 };
-                // `load_chunk` re-checks the cache, so a hint that
-                // already landed costs one lock round-trip.
-                load_chunk(&file, &path, &geom, &cache, c);
+                if cache.get(c).is_some() {
+                    // Hint already landed (an earlier prefetch or a
+                    // sweep-path load beat us) — one lock round-trip.
+                    io.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // A racing sweep-path load between the check and
+                    // here is benign — `publish` keeps the incumbent —
+                    // so the counters are stream-health telemetry, not
+                    // an exact disk ledger.
+                    load_chunk(&file, &path, &geom, &cache, c);
+                    let (e0, e1) = geom.chunk_entries(c);
+                    io.prefetch_loads.fetch_add(1, Ordering::Relaxed);
+                    io.bytes_prefetched
+                        .fetch_add(((e1 - e0) * ENTRY_BYTES) as u64, Ordering::Relaxed);
+                }
             })
             .expect("spawn ooc prefetch thread");
         Prefetcher { shared, handle: Some(handle) }
@@ -378,12 +463,8 @@ struct StoreInner {
     /// Most recently touched chunk; the transition to a new chunk is
     /// what triggers the successor hint (double-buffer pipeline).
     last_chunk: AtomicUsize,
-    bytes_read: AtomicU64,
-    chunks_loaded: AtomicU64,
-    /// Loads the sweep path had to perform itself (cache misses the
-    /// prefetcher didn't hide) — lets the bench distinguish overlapped
-    /// from blocking I/O.
-    sync_misses: AtomicU64,
+    /// Stream-health counters, shared with the prefetch thread.
+    io: Arc<IoCounters>,
 }
 
 /// An on-disk CSC column store implementing [`DesignOps`]: the engine,
@@ -514,8 +595,14 @@ impl OocColumnStore {
         };
         let cache = Arc::new(Cache::new(capacity));
         let file = Arc::new(file);
-        let prefetch =
-            Prefetcher::start(file.clone(), path.to_path_buf(), geom.clone(), cache.clone());
+        let io = Arc::new(IoCounters::default());
+        let prefetch = Prefetcher::start(
+            file.clone(),
+            path.to_path_buf(),
+            geom.clone(),
+            cache.clone(),
+            io.clone(),
+        );
         Ok(OocColumnStore {
             inner: Arc::new(StoreInner {
                 path: path.to_path_buf(),
@@ -524,9 +611,7 @@ impl OocColumnStore {
                 cache,
                 prefetch,
                 last_chunk: AtomicUsize::new(usize::MAX),
-                bytes_read: AtomicU64::new(0),
-                chunks_loaded: AtomicU64::new(0),
-                sync_misses: AtomicU64::new(0),
+                io,
             }),
         })
     }
@@ -569,18 +654,29 @@ impl OocColumnStore {
         self.inner.geom.nchunks()
     }
 
-    /// I/O counters since open: (bytes read, chunks decoded,
-    /// synchronous cache misses), counting only loads performed on the
-    /// sweep path itself — a chunk the prefetch thread streamed in
-    /// ahead of use appears in none of them. A low `sync_misses`
-    /// relative to [`OocColumnStore::nchunks`] per sweep is therefore
-    /// direct evidence of the overlap the double buffer bought.
-    pub fn io_stats(&self) -> (u64, u64, u64) {
-        (
-            self.inner.bytes_read.load(Ordering::Relaxed),
-            self.inner.chunks_loaded.load(Ordering::Relaxed),
-            self.inner.sync_misses.load(Ordering::Relaxed),
-        )
+    /// I/O counters since open. Sweep-path loads (`bytes_read`,
+    /// `chunks_loaded`, `sync_misses`) and prefetch-thread activity
+    /// (`prefetch_loads`, `prefetch_hits`, `bytes_prefetched`) are
+    /// tallied separately: a low `sync_misses` relative to
+    /// [`OocColumnStore::nchunks`] per sweep — with the bytes showing up
+    /// in `bytes_prefetched` — is direct evidence of the overlap the
+    /// double buffer bought. `celer path --store` prints this per shard.
+    pub fn io_stats(&self) -> IoStats {
+        self.inner.io.snapshot()
+    }
+
+    /// Largest stored-entry count of any chunk in the plan: the
+    /// buffer-sizing bound for streamed consumers (one recycled buffer
+    /// of this many entries can hold any chunk).
+    pub fn max_chunk_entries(&self) -> usize {
+        let g = &self.inner.geom;
+        (0..g.nchunks())
+            .map(|c| {
+                let (e0, e1) = g.chunk_entries(c);
+                e1 - e0
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// Fetch the chunk containing column range work, maintaining the
@@ -594,11 +690,11 @@ impl OocColumnStore {
         if let Some(d) = i.cache.get(c) {
             return d;
         }
-        i.sync_misses.fetch_add(1, Ordering::Relaxed);
+        i.io.sync_misses.fetch_add(1, Ordering::Relaxed);
         let d = load_chunk(&i.file, &i.path, &i.geom, &i.cache, c);
         let (e0, e1) = i.geom.chunk_entries(c);
-        i.bytes_read.fetch_add(((e1 - e0) * ENTRY_BYTES) as u64, Ordering::Relaxed);
-        i.chunks_loaded.fetch_add(1, Ordering::Relaxed);
+        i.io.bytes_read.fetch_add(((e1 - e0) * ENTRY_BYTES) as u64, Ordering::Relaxed);
+        i.io.chunks_loaded.fetch_add(1, Ordering::Relaxed);
         d
     }
 
@@ -751,19 +847,15 @@ impl DesignOps for OocColumnStore {
     }
 
     fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
-        // Stream chunks once, casting values to f32 — the half-width
-        // shadow (not the f64 design) is what has to fit in RAM for the
-        // f32 sweep mode on p ≫ RAM problems.
-        let g = &self.inner.geom;
-        let indptr: Vec<usize> = g.indptr.iter().map(|&v| v as usize).collect();
-        let mut indices = Vec::with_capacity(g.nnz);
-        let mut data = Vec::with_capacity(g.nnz);
-        for c in 0..g.nchunks() {
-            let chunk = self.chunk(c);
-            indices.extend_from_slice(&chunk.indices);
-            data.extend(chunk.values.iter().map(|&v| v as f32));
-        }
-        crate::data::shadow::ShadowF32::sparse_from_parts(g.n, g.p, indptr, indices, data)
+        // Chunk-streamed shadow: NO full f32 copy is ever materialized.
+        // Each chunk is re-decoded to half width on demand into recycled
+        // buffers riding the store's chunk plan and prefetcher, so on
+        // p ≫ RAM problems *neither* precision's design is resident
+        // (peak shadow bytes ≤ cache capacity × chunk size, asserted in
+        // `tests/prop_shard.rs`). The cast per entry is the same
+        // `v as f32` the resident shadow performs — kernels are
+        // bit-identical to a resident sparse shadow of the same store.
+        crate::data::shadow::ShadowF32::streamed(vec![F32Stream::new(self.clone())])
     }
 
     #[inline]
@@ -798,6 +890,203 @@ impl DesignOps for OocColumnStore {
 }
 
 // ---------------------------------------------------------------------
+// Streamed f32 chunks: half-width re-decode riding the chunk plan
+// ---------------------------------------------------------------------
+
+/// Resident bytes of one cached f32 chunk entry: u32 row index + f32
+/// value (the half-width mirror of [`ENTRY_BYTES`]).
+const F32_ENTRY_BYTES: usize = 8;
+
+/// One half-width decoded chunk: the stored entries of a contiguous
+/// column range, values cast `f64 → f32` (the identical cast the
+/// resident [`crate::data::shadow::ShadowF32`] constructors perform, so
+/// every downstream f32 kernel is bit-identical to the resident path).
+struct F32Chunk {
+    entry0: usize,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+struct F32CacheInner {
+    map: HashMap<usize, Arc<F32Chunk>>,
+    lru: VecDeque<usize>,
+    /// Recycled buffers from evicted chunks — a steady-state f32 sweep
+    /// allocates nothing per chunk, like the f64 cache.
+    free: Vec<(Vec<u32>, Vec<f32>)>,
+}
+
+struct F32Shared {
+    capacity: usize,
+    inner: Mutex<F32CacheInner>,
+    /// Bytes currently held by cached f32 chunks (indices + values).
+    resident: AtomicU64,
+    /// High-water mark of `resident` — what `tests/prop_shard.rs`
+    /// asserts against the no-full-copy bound.
+    peak: AtomicU64,
+}
+
+/// A chunk-streamed f32 view of an [`OocColumnStore`]: columns are
+/// served as `(row indices, f32 values)` slices re-decoded per chunk
+/// into a small LRU of recycled buffers. The f64 chunk is pulled
+/// through the store's own cache + prefetch pipeline (`store.chunk`),
+/// so the background thread still overlaps disk I/O with the sweep and
+/// the cast itself runs at RAM speed. Peak resident shadow bytes are
+/// bounded by `capacity × max chunk bytes` — never the full design.
+/// Cloning shares the cache (like the store handle).
+pub struct F32Stream {
+    store: OocColumnStore,
+    shared: Arc<F32Shared>,
+}
+
+impl Clone for F32Stream {
+    fn clone(&self) -> F32Stream {
+        F32Stream { store: self.store.clone(), shared: self.shared.clone() }
+    }
+}
+
+impl fmt::Debug for F32Stream {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("F32Stream")
+            .field("store", &self.store)
+            .field("cache_chunks", &self.shared.capacity)
+            .field("resident_bytes", &self.resident_bytes())
+            .field("peak_resident_bytes", &self.peak_resident_bytes())
+            .finish()
+    }
+}
+
+impl F32Stream {
+    /// Stream with an auto-sized f32 cache (same capacity rule as the
+    /// store's f64 chunk cache: worker count + 2, min 4).
+    pub fn new(store: OocColumnStore) -> F32Stream {
+        F32Stream::with_capacity(store, 0)
+    }
+
+    /// Stream with an explicit f32 cache size in chunks (`0` = match
+    /// the store's f64 cache capacity).
+    pub fn with_capacity(store: OocColumnStore, cache_chunks: usize) -> F32Stream {
+        let capacity =
+            if cache_chunks > 0 { cache_chunks.max(2) } else { store.inner.cache.capacity };
+        F32Stream {
+            store,
+            shared: Arc::new(F32Shared {
+                capacity,
+                inner: Mutex::new(F32CacheInner {
+                    map: HashMap::new(),
+                    lru: VecDeque::new(),
+                    free: Vec::new(),
+                }),
+                resident: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.store.inner.geom.n
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.store.inner.geom.p
+    }
+
+    /// The backing store (e.g. for io_stats of the shared f64 stream).
+    pub fn store(&self) -> &OocColumnStore {
+        &self.store
+    }
+
+    /// Bytes currently held by cached f32 chunks.
+    pub fn resident_bytes(&self) -> u64 {
+        self.shared.resident.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`F32Stream::resident_bytes`] since open —
+    /// the quantity the no-full-copy acceptance bound is asserted on.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.shared.peak.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound on [`F32Stream::peak_resident_bytes`]: cache
+    /// capacity × the largest chunk's f32 footprint.
+    pub fn resident_bound_bytes(&self) -> u64 {
+        (self.shared.capacity * self.store.max_chunk_entries() * F32_ENTRY_BYTES) as u64
+    }
+
+    /// Fetch (or re-decode) the f32 chunk `c`.
+    fn chunk32(&self, c: usize) -> Arc<F32Chunk> {
+        {
+            let mut st = self.shared.inner.lock().unwrap();
+            if let Some(hit) = st.map.get(&c).cloned() {
+                if let Some(pos) = st.lru.iter().position(|&k| k == c) {
+                    st.lru.remove(pos);
+                }
+                st.lru.push_back(c);
+                return hit;
+            }
+        }
+        // Miss: pull the f64 chunk through the store's cache + prefetch
+        // pipeline (this is what keeps the background thread streaming
+        // ahead of the f32 sweep), then cast into recycled buffers. The
+        // f64 Arc is dropped as soon as the cast completes — the f32
+        // cache never pins full-width chunks.
+        let f64c = self.store.chunk(c);
+        let (mut idx, mut val) = {
+            let mut st = self.shared.inner.lock().unwrap();
+            st.free.pop().unwrap_or_default()
+        };
+        idx.clear();
+        idx.extend_from_slice(&f64c.indices);
+        val.clear();
+        val.reserve(f64c.values.len());
+        val.extend(f64c.values.iter().map(|&v| v as f32));
+        let chunk = F32Chunk { entry0: f64c.entry0, indices: idx, values: val };
+        drop(f64c);
+        let mut st = self.shared.inner.lock().unwrap();
+        // Race-safe publish: keep the incumbent, recycle ours.
+        if let Some(existing) = st.map.get(&c).cloned() {
+            st.free.push((chunk.indices, chunk.values));
+            return existing;
+        }
+        let mut delta = (chunk.indices.len() * F32_ENTRY_BYTES) as i64;
+        let arc = Arc::new(chunk);
+        st.map.insert(c, arc.clone());
+        st.lru.push_back(c);
+        while st.map.len() > self.shared.capacity {
+            let Some(victim) = st.lru.pop_front() else { break };
+            if let Some(old) = st.map.remove(&victim) {
+                delta -= (old.indices.len() * F32_ENTRY_BYTES) as i64;
+                if let Ok(owned) = Arc::try_unwrap(old) {
+                    st.free.push((owned.indices, owned.values));
+                }
+            }
+        }
+        // Accounting under the lock, after eviction settles, so `peak`
+        // never records the transient capacity+1 state.
+        let resident = if delta >= 0 {
+            self.shared.resident.fetch_add(delta as u64, Ordering::Relaxed) + delta as u64
+        } else {
+            self.shared.resident.fetch_sub((-delta) as u64, Ordering::Relaxed) - (-delta) as u64
+        };
+        self.shared.peak.fetch_max(resident, Ordering::Relaxed);
+        arc
+    }
+
+    /// Run `f` on column j's `(row indices, f32 values)` slices — the
+    /// same entry slices (same order, same `as f32` cast) a resident
+    /// sparse [`crate::data::shadow::ShadowF32`] of this store holds.
+    #[inline]
+    pub fn with_col<R>(&self, j: usize, f: impl FnOnce(&[u32], &[f32]) -> R) -> R {
+        let g = &self.store.inner.geom;
+        let chunk = self.chunk32(g.chunk_of(j));
+        let (lo, hi) = g.col_range(j);
+        let (lo, hi) = (lo - chunk.entry0, hi - chunk.entry0);
+        f(&chunk.indices[lo..hi], &chunk.values[lo..hi])
+    }
+}
+
+// ---------------------------------------------------------------------
 // Writer + converters
 // ---------------------------------------------------------------------
 
@@ -813,7 +1102,31 @@ pub fn write_store<D: DesignOps + ?Sized>(
     x: &D,
     y: &[f64],
 ) -> Result<StoreMeta, SolveError> {
-    let (n, p) = (x.n(), x.p());
+    write_store_cols(path, x, y, 0, x.p())
+}
+
+/// [`write_store`] restricted to the column range `j0..j1`: the written
+/// file is a complete, standalone store of shape `(n, j1 − j0)` holding
+/// the full label segment — the shard writer of
+/// [`crate::data::shard::write_sharded_store`]. The entry bytes of
+/// column `j0 + k` are identical to those the whole-design writer emits
+/// for column `j0 + k`, so a sharded split concatenates bit-for-bit to
+/// the single store (pinned in `tests/prop_shard.rs`).
+pub fn write_store_cols<D: DesignOps + ?Sized>(
+    path: &Path,
+    x: &D,
+    y: &[f64],
+    j0: usize,
+    j1: usize,
+) -> Result<StoreMeta, SolveError> {
+    let n = x.n();
+    if j0 > j1 || j1 > x.p() {
+        return Err(ferr(
+            path,
+            format!("column range {j0}..{j1} out of bounds for p = {}", x.p()),
+        ));
+    }
+    let p = j1 - j0;
     if y.len() != n {
         return Err(SolveError::DimensionMismatch { rows: n, labels: y.len() });
     }
@@ -826,7 +1139,7 @@ pub fn write_store<D: DesignOps + ?Sized>(
     let mut indptr = Vec::with_capacity(p + 1);
     indptr.push(0u64);
     let mut nnz = 0u64;
-    for j in 0..p {
+    for j in j0..j1 {
         x.gather_dense(&[j], &mut col);
         nnz += col.iter().filter(|&&v| v != 0.0).count() as u64;
         indptr.push(nnz);
@@ -846,7 +1159,7 @@ pub fn write_store<D: DesignOps + ?Sized>(
         w.write_all(&v.to_le_bytes()).map_err(io)?;
     }
     // Pass 2: row indices.
-    for j in 0..p {
+    for j in j0..j1 {
         x.gather_dense(&[j], &mut col);
         for (i, &v) in col.iter().enumerate() {
             if v != 0.0 {
@@ -855,7 +1168,7 @@ pub fn write_store<D: DesignOps + ?Sized>(
         }
     }
     // Pass 3: values.
-    for j in 0..p {
+    for j in j0..j1 {
         x.gather_dense(&[j], &mut col);
         for &v in col.iter() {
             if v != 0.0 {

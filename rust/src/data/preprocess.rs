@@ -121,6 +121,7 @@ pub fn normalize_columns(x: DesignMatrix) -> DesignMatrix {
         // Preprocessing mutates entries, which a read-only store cannot:
         // materialize, then normalize in memory.
         DesignMatrix::Ooc(o) => normalize_columns(DesignMatrix::Sparse(o.to_csc())),
+        DesignMatrix::Sharded(sh) => normalize_columns(DesignMatrix::Sparse(sh.to_csc())),
     }
 }
 
@@ -155,6 +156,7 @@ pub fn append_intercept(x: DesignMatrix) -> DesignMatrix {
             DesignMatrix::Sparse(CscMatrix::from_columns(n, cols))
         }
         DesignMatrix::Ooc(o) => append_intercept(DesignMatrix::Sparse(o.to_csc())),
+        DesignMatrix::Sharded(sh) => append_intercept(DesignMatrix::Sparse(sh.to_csc())),
     }
 }
 

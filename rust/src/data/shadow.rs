@@ -20,6 +20,7 @@
 //! identical (pinned in `tests/prop_pool.rs`).
 
 use crate::data::design::DesignOps;
+use crate::data::ooc::F32Stream;
 use crate::util::par::alloc_first_touch;
 
 /// An f32 copy of a design matrix, column-addressable like the f64
@@ -37,6 +38,23 @@ enum Kind {
     Dense { data: Vec<f32> },
     /// CSC mirror: same index structure as the source, f32 values.
     Sparse { indptr: Vec<usize>, indices: Vec<u32>, data: Vec<f32> },
+    /// Chunk-streamed shadow over out-of-core stores: one
+    /// [`F32Stream`] per shard (a single store is the one-shard case),
+    /// columns routed by the cumulative `col_starts` offsets. Nothing
+    /// is resident beyond each stream's small LRU of recycled f32
+    /// chunk buffers — no full-design f32 copy ever exists. Every
+    /// kernel runs the identical per-entry arithmetic as the `Sparse`
+    /// arm on identically-cast slices, so iterates (and therefore the
+    /// f64 certificates of the sweep mode) are bit-identical to a
+    /// resident sparse shadow of the same store.
+    Streamed { sources: Vec<F32Stream>, col_starts: Vec<usize> },
+}
+
+/// Owning stream + local column index of global column `j`.
+#[inline]
+fn route<'a>(sources: &'a [F32Stream], col_starts: &[usize], j: usize) -> (&'a F32Stream, usize) {
+    let s = col_starts.partition_point(|&c| c <= j) - 1;
+    (&sources[s], j - col_starts[s])
 }
 
 impl ShadowF32 {
@@ -98,6 +116,40 @@ impl ShadowF32 {
         ShadowF32 { n, p, kind: Kind::Dense { data } }
     }
 
+    /// Chunk-streamed shadow over one [`F32Stream`] per store shard
+    /// (pass a single stream for an unsharded store). Columns are
+    /// concatenated in source order; all sources must share `n`.
+    pub fn streamed(sources: Vec<F32Stream>) -> Self {
+        assert!(!sources.is_empty(), "streamed shadow needs at least one source");
+        let n = sources[0].n();
+        let mut col_starts = Vec::with_capacity(sources.len() + 1);
+        col_starts.push(0usize);
+        for s in &sources {
+            assert_eq!(s.n(), n, "streamed shadow sources disagree on n");
+            col_starts.push(col_starts.last().unwrap() + s.p());
+        }
+        let p = *col_starts.last().unwrap();
+        ShadowF32 { n, p, kind: Kind::Streamed { sources, col_starts } }
+    }
+
+    /// For streamed shadows: `(resident bytes, peak resident bytes,
+    /// bound)` summed across sources, where `bound` is the guaranteed
+    /// cache ceiling (capacity × largest chunk per source). `None` for
+    /// resident shadows. This is what the no-full-copy acceptance
+    /// criterion asserts on.
+    pub fn stream_stats(&self) -> Option<(u64, u64, u64)> {
+        match &self.kind {
+            Kind::Streamed { sources, .. } => Some(sources.iter().fold((0, 0, 0), |a, s| {
+                (
+                    a.0 + s.resident_bytes(),
+                    a.1 + s.peak_resident_bytes(),
+                    a.2 + s.resident_bound_bytes(),
+                )
+            })),
+            _ => None,
+        }
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n
@@ -120,6 +172,13 @@ impl ShadowF32 {
                 // Row indices come from a validated CSC matrix: < n ≤ v.len().
                 unsafe { crate::util::simd::gather_dot_f32(&indices[lo..hi], &data[lo..hi], v) }
             }
+            Kind::Streamed { sources, col_starts } => {
+                let (src, lj) = route(sources, col_starts, j);
+                // Row indices are validated < n at chunk decode time.
+                src.with_col(lj, |idx, val| unsafe {
+                    crate::util::simd::gather_dot_f32(idx, val, v)
+                })
+            }
         }
     }
 
@@ -140,6 +199,12 @@ impl ShadowF32 {
                         out,
                     )
                 }
+            }
+            Kind::Streamed { sources, col_starts } => {
+                let (src, lj) = route(sources, col_starts, j);
+                src.with_col(lj, |idx, val| unsafe {
+                    crate::util::simd::gather_axpy_f32(idx, val, alpha, out)
+                })
             }
         }
     }
@@ -174,6 +239,20 @@ impl ShadowF32 {
                         out[t] += xv * v[k * n + row];
                     }
                 }
+            }
+            Kind::Streamed { sources, col_starts } => {
+                // Identical per-entry loop (same entry order, same
+                // accumulation order) as the Sparse arm — bit-identical
+                // lane iterates.
+                let (src, lj) = route(sources, col_starts, j);
+                src.with_col(lj, |idx, val| {
+                    for (&row, &xv) in idx.iter().zip(val) {
+                        let row = row as usize;
+                        for (t, &k) in lanes.iter().enumerate() {
+                            out[t] += xv * v[k * n + row];
+                        }
+                    }
+                });
             }
         }
     }
@@ -217,6 +296,20 @@ impl ShadowF32 {
                         }
                     }
                 }
+            }
+            Kind::Streamed { sources, col_starts } => {
+                let (src, lj) = route(sources, col_starts, j);
+                src.with_col(lj, |idx, val| {
+                    for (&row, &xv) in idx.iter().zip(val) {
+                        let row = row as usize;
+                        for (t, &k) in lanes.iter().enumerate() {
+                            let alpha = alphas[t];
+                            if alpha != 0.0 {
+                                v[k * n + row] += alpha * xv;
+                            }
+                        }
+                    }
+                });
             }
         }
     }

@@ -1,0 +1,540 @@
+//! Multi-store column sharding: one design split across several
+//! out-of-core stores, each with its own prefetch stream.
+//!
+//! [`crate::data::ooc::OocColumnStore`] made a single file sweepable at
+//! disk bandwidth, but it is one file with one prefetcher: a second
+//! disk (or a second NUMA node's I/O path) adds nothing. A
+//! [`ShardedStore`] splits the columns into contiguous ranges, each
+//! backed by its own store — own file, own LRU chunk cache, own
+//! background prefetch thread — and implements the full
+//! [`DesignOps`] surface by routing every column op to its owning
+//! shard. Full-design scans (`xt_vec`, the fused rescale, column
+//! norms) run on the *group-aligned* pool grids of
+//! [`crate::util::par`]: work units are snapped to shard boundaries and
+//! handed out round-robin across shards, so concurrently running
+//! workers drain **different** prefetch streams — aggregate bandwidth
+//! scales with the shard count (BENCH_10.json) instead of serializing
+//! on one stream. This is the stepping stone from NUMA nodes to
+//! distributed workers: a shard is already a self-contained store that
+//! could live on another machine.
+//!
+//! **Bit-identity.** Sharding changes which file a column's bytes come
+//! from and which worker touches them — never the bytes, the kernels,
+//! or any fold order that matters: per-column ops run the identical
+//! entry slices through the identical `util::simd` / `csc` kernels,
+//! per-index fills have one writer per slot, and the only cross-shard
+//! reductions are max folds (order-insensitive). λ-paths on a
+//! `ShardedStore` are therefore bit-identical (β and gap certificates)
+//! to the single-store and in-memory CSC solves — pinned in
+//! `tests/prop_shard.rs` across shard counts and misaligned bounds.
+//!
+//! **Validation.** Every shard is a complete CELERCS1 store holding the
+//! full label segment. [`ShardedStore::open`] cross-checks the shards:
+//! a missing or corrupt file, a row-count mismatch, or label segments
+//! that disagree bitwise are all typed [`SolveError::StoreFormat`] —
+//! shards from different datasets cannot be silently mixed.
+
+use crate::data::csc::CscMatrix;
+use crate::data::design::DesignOps;
+use crate::data::ooc::{self, F32Stream, IoStats, OocColumnStore, StoreMeta};
+use crate::util::error::SolveError;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+struct ShardInner {
+    shards: Vec<OocColumnStore>,
+    /// Cumulative column offsets: shard s owns global columns
+    /// `col_starts[s] .. col_starts[s+1]`; length = shards + 1.
+    col_starts: Vec<usize>,
+    n: usize,
+    p: usize,
+    nnz: usize,
+}
+
+/// A design sharded across multiple [`OocColumnStore`]s by contiguous
+/// column range. Cloning is cheap (a shared handle); each shard's chunk
+/// cache and prefetch thread are shared across clones, exactly like the
+/// single-store handle.
+#[derive(Clone)]
+pub struct ShardedStore {
+    inner: Arc<ShardInner>,
+}
+
+impl fmt::Debug for ShardedStore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ShardedStore")
+            .field("shards", &self.inner.shards.len())
+            .field("n", &self.inner.n)
+            .field("p", &self.inner.p)
+            .field("nnz", &self.inner.nnz)
+            .field("col_starts", &self.inner.col_starts)
+            .finish()
+    }
+}
+
+impl ShardedStore {
+    /// Open a sharded store with default chunking; see
+    /// [`ShardedStore::open_with`].
+    pub fn open(paths: &[PathBuf]) -> Result<ShardedStore, SolveError> {
+        ShardedStore::open_with(paths, ooc::DEFAULT_CHUNK_BYTES, 0)
+    }
+
+    /// Open the shard files in column order with an explicit per-shard
+    /// chunk byte budget and cache size (`0` = auto, as for
+    /// [`OocColumnStore::open_with`]). Shards must agree on `n` and
+    /// hold bitwise-identical label segments; any structural defect in
+    /// any shard is a typed [`SolveError::StoreFormat`].
+    pub fn open_with(
+        paths: &[PathBuf],
+        chunk_bytes: usize,
+        cache_chunks: usize,
+    ) -> Result<ShardedStore, SolveError> {
+        if paths.is_empty() {
+            return Err(SolveError::StoreFormat {
+                path: String::new(),
+                detail: "sharded store needs at least one shard path".into(),
+            });
+        }
+        let mut shards = Vec::with_capacity(paths.len());
+        for path in paths {
+            shards.push(OocColumnStore::open_with(path, chunk_bytes, cache_chunks)?);
+        }
+        let n = shards[0].meta().n;
+        let y0 = shards[0].read_labels()?;
+        for s in &shards[1..] {
+            let m = s.meta();
+            if m.n != n {
+                return Err(SolveError::StoreFormat {
+                    path: s.path().display().to_string(),
+                    detail: format!(
+                        "shard row count n = {} disagrees with shard 0 ({}) at {}",
+                        m.n,
+                        n,
+                        shards[0].path().display()
+                    ),
+                });
+            }
+            let y = s.read_labels()?;
+            if y.len() != y0.len()
+                || y.iter().zip(&y0).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(SolveError::StoreFormat {
+                    path: s.path().display().to_string(),
+                    detail: format!(
+                        "shard label segment differs from shard 0 ({}) — shards of \
+                         different datasets cannot be mixed",
+                        shards[0].path().display()
+                    ),
+                });
+            }
+        }
+        let mut col_starts = Vec::with_capacity(shards.len() + 1);
+        col_starts.push(0usize);
+        let mut nnz = 0usize;
+        for s in &shards {
+            let m = s.meta();
+            col_starts.push(col_starts.last().unwrap() + m.p);
+            nnz += m.nnz;
+        }
+        let p = *col_starts.last().unwrap();
+        Ok(ShardedStore { inner: Arc::new(ShardInner { shards, col_starts, n, p, nnz }) })
+    }
+
+    /// Open a sharded store and read its labels (from shard 0; open
+    /// already verified every shard carries the identical segment).
+    pub fn open_dataset(paths: &[PathBuf]) -> Result<(ShardedStore, Vec<f64>), SolveError> {
+        let store = ShardedStore::open(paths)?;
+        let y = store.read_labels()?;
+        Ok((store, y))
+    }
+
+    /// Read the label segment (verified identical across shards).
+    pub fn read_labels(&self) -> Result<Vec<f64>, SolveError> {
+        self.inner.shards[0].read_labels()
+    }
+
+    /// Combined shape metadata.
+    pub fn meta(&self) -> StoreMeta {
+        StoreMeta { n: self.inner.n, p: self.inner.p, nnz: self.inner.nnz }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Shard `s`'s store handle.
+    pub fn shard(&self, s: usize) -> &OocColumnStore {
+        &self.inner.shards[s]
+    }
+
+    /// Global column range owned by shard `s`.
+    pub fn shard_cols(&self, s: usize) -> (usize, usize) {
+        (self.inner.col_starts[s], self.inner.col_starts[s + 1])
+    }
+
+    /// Cumulative column boundaries (length = shards + 1) — the group
+    /// bounds handed to the aligned pool scans.
+    pub fn col_starts(&self) -> &[usize] {
+        &self.inner.col_starts
+    }
+
+    /// Per-shard I/O counters, in shard order.
+    pub fn io_stats_per_shard(&self) -> Vec<IoStats> {
+        self.inner.shards.iter().map(|s| s.io_stats()).collect()
+    }
+
+    /// Combined I/O counters across all shards.
+    pub fn io_stats(&self) -> IoStats {
+        self.inner.shards.iter().fold(IoStats::default(), |a, s| a.merge(s.io_stats()))
+    }
+
+    /// Owning shard and shard-local column index of global column `j`.
+    #[inline]
+    fn locate(&self, j: usize) -> (usize, usize) {
+        debug_assert!(j < self.inner.p);
+        let s = self.inner.col_starts.partition_point(|&c| c <= j) - 1;
+        (s, j - self.inner.col_starts[s])
+    }
+
+    /// Run `f` on column j's stored `(row indices, values)` slices,
+    /// served from the owning shard's chunk cache.
+    #[inline]
+    pub fn with_col<R>(&self, j: usize, f: impl FnOnce(&[u32], &[f64]) -> R) -> R {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].with_col(lj, f)
+    }
+
+    /// Materialize the selected columns as an in-memory CSC matrix
+    /// (working-set restriction; the hot paths use zero-copy views).
+    pub fn select_columns_csc(&self, keep: &[usize]) -> CscMatrix {
+        let cols: Vec<Vec<(u32, f64)>> = keep
+            .iter()
+            .map(|&j| {
+                self.with_col(j, |idx, val| {
+                    idx.iter().copied().zip(val.iter().copied()).collect()
+                })
+            })
+            .collect();
+        CscMatrix::from_columns(self.inner.n, cols)
+    }
+
+    /// Materialize the whole sharded design as an in-memory CSC matrix
+    /// (tests / problems that fit in RAM).
+    pub fn to_csc(&self) -> CscMatrix {
+        self.select_columns_csc(&(0..self.inner.p).collect::<Vec<_>>())
+    }
+
+    /// Stream every shard through the finiteness gate, reporting the
+    /// first offender with its *global* column index.
+    pub fn validate_values(&self) -> Result<(), SolveError> {
+        for (s, shard) in self.inner.shards.iter().enumerate() {
+            shard.validate_values().map_err(|e| match e {
+                SolveError::NonFiniteDesign { row, col, value } => {
+                    SolveError::NonFiniteDesign {
+                        row,
+                        col: col + self.inner.col_starts[s],
+                        value,
+                    }
+                }
+                other => other,
+            })?;
+        }
+        Ok(())
+    }
+}
+
+impl DesignOps for ShardedStore {
+    #[inline]
+    fn n(&self) -> usize {
+        self.inner.n
+    }
+
+    #[inline]
+    fn p(&self) -> usize {
+        self.inner.p
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_dot(lj, v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_axpy(lj, alpha, out)
+    }
+
+    #[inline]
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_norm_sq(lj)
+    }
+
+    fn col_nnz(&self, j: usize) -> usize {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_nnz(lj)
+    }
+
+    fn matvec(&self, beta: &[f64], out: &mut [f64]) {
+        assert_eq!(beta.len(), self.inner.p);
+        assert_eq!(out.len(), self.inner.n);
+        out.fill(0.0);
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                self.col_axpy(j, b, out);
+            }
+        }
+    }
+
+    fn col_cost_hint(&self) -> usize {
+        (self.inner.nnz / self.inner.p.max(1)).max(1)
+    }
+
+    fn xt_vec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.inner.n);
+        assert_eq!(out.len(), self.inner.p);
+        crate::util::par::par_fill_cost_grouped(
+            out,
+            self.col_cost_hint(),
+            &self.inner.col_starts,
+            |j| self.col_dot(j, v),
+        );
+    }
+
+    fn xt_abs_max(&self, v: &[f64]) -> f64 {
+        crate::util::par::par_max_cost_grouped(
+            self.inner.p,
+            self.col_cost_hint(),
+            &self.inner.col_starts,
+            |j| self.col_dot(j, v).abs(),
+        )
+        .max(0.0)
+    }
+
+    fn xt_vec_abs_max(&self, v: &[f64], out: &mut [f64]) -> f64 {
+        assert_eq!(v.len(), self.inner.n);
+        assert_eq!(out.len(), self.inner.p);
+        crate::util::par::par_fill_abs_max_grouped(
+            out,
+            self.col_cost_hint(),
+            &self.inner.col_starts,
+            |j| self.col_dot(j, v),
+        )
+    }
+
+    fn col_norms_sq(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.inner.p];
+        crate::util::par::par_fill_cost_grouped(
+            &mut out,
+            self.col_cost_hint(),
+            &self.inner.col_starts,
+            |j| self.col_norm_sq(j),
+        );
+        out
+    }
+
+    fn gather_dense(&self, cols: &[usize], out: &mut Vec<f64>) {
+        let n = self.inner.n;
+        out.clear();
+        out.resize(cols.len() * n, 0.0);
+        for (c, &j) in cols.iter().enumerate() {
+            let dst = &mut out[c * n..(c + 1) * n];
+            self.with_col(j, |idx, val| {
+                for (&i, &v) in idx.iter().zip(val) {
+                    dst[i as usize] = v;
+                }
+            });
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.inner.nnz
+    }
+
+    fn shadow_f32(&self) -> crate::data::shadow::ShadowF32 {
+        // One chunk-streamed f32 source per shard: the f32 sweep rides
+        // every shard's prefetch stream, peak resident shadow bytes stay
+        // bounded by (cache capacity × chunk size) × shards — never a
+        // full-design copy.
+        crate::data::shadow::ShadowF32::streamed(
+            self.inner.shards.iter().map(|s| F32Stream::new(s.clone())).collect(),
+        )
+    }
+
+    #[inline]
+    fn col_wnorm_sq(&self, j: usize, w: &[f64]) -> f64 {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_wnorm_sq(lj, w)
+    }
+
+    #[inline]
+    fn col_waxpy(&self, j: usize, alpha: f64, w: &[f64], out: &mut [f64]) {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_waxpy(lj, alpha, w, out)
+    }
+
+    fn col_dot_lanes(&self, j: usize, v: &[f64], n: usize, lanes: &[usize], out: &mut [f64]) {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_dot_lanes(lj, v, n, lanes, out)
+    }
+
+    fn col_axpy_lanes(&self, j: usize, alphas: &[f64], v: &mut [f64], n: usize, lanes: &[usize]) {
+        let (s, lj) = self.locate(j);
+        self.inner.shards[s].col_axpy_lanes(lj, alphas, v, n, lanes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard writer
+// ---------------------------------------------------------------------
+
+/// Even column bounds for `k` shards over `p` columns: shard `s` covers
+/// `⌊s·p/k⌋ .. ⌊(s+1)·p/k⌋` (sizes differ by at most one column).
+pub fn even_bounds(p: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1, "shard count must be >= 1");
+    (0..=k).map(|s| s * p / k).collect()
+}
+
+/// Split `(x, y)` into one standalone store per path with evenly sized
+/// contiguous column ranges. Each shard file is a complete CELERCS1
+/// store (full label segment), openable on its own or as part of the
+/// sharded set.
+pub fn write_sharded_store<D: DesignOps + ?Sized>(
+    paths: &[PathBuf],
+    x: &D,
+    y: &[f64],
+) -> Result<Vec<StoreMeta>, SolveError> {
+    write_sharded_store_with_bounds(paths, x, y, &even_bounds(x.p(), paths.len().max(1)))
+}
+
+/// [`write_sharded_store`] with explicit column bounds (cumulative,
+/// `bounds[0] = 0`, last = p, monotone; one more entry than paths) —
+/// deliberately misaligned shard splits are how `tests/prop_shard.rs`
+/// stresses the routing.
+pub fn write_sharded_store_with_bounds<D: DesignOps + ?Sized>(
+    paths: &[PathBuf],
+    x: &D,
+    y: &[f64],
+    bounds: &[usize],
+) -> Result<Vec<StoreMeta>, SolveError> {
+    let bad = |detail: String| SolveError::StoreFormat { path: String::new(), detail };
+    if paths.is_empty() {
+        return Err(bad("sharded store needs at least one shard path".into()));
+    }
+    if bounds.len() != paths.len() + 1
+        || bounds[0] != 0
+        || *bounds.last().unwrap() != x.p()
+        || bounds.windows(2).any(|w| w[0] > w[1])
+    {
+        return Err(bad(format!(
+            "shard bounds {bounds:?} are not a monotone 0..={} split into {} ranges",
+            x.p(),
+            paths.len()
+        )));
+    }
+    paths
+        .iter()
+        .enumerate()
+        .map(|(s, path)| ooc::write_store_cols(path.as_path(), x, y, bounds[s], bounds[s + 1]))
+        .collect()
+}
+
+/// Shard file path convention of `celer convert --shards N`: the base
+/// output path for a single shard, `{out}.s{k}` for k ≥ 2 shards.
+pub fn shard_paths(out: &Path, shards: usize) -> Vec<PathBuf> {
+    if shards <= 1 {
+        vec![out.to_path_buf()]
+    } else {
+        (0..shards)
+            .map(|s| {
+                let mut os = out.as_os_str().to_os_string();
+                os.push(format!(".s{s}"));
+                PathBuf::from(os)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("celer_shard_unit_{}_{name}", std::process::id()))
+    }
+
+    fn random_csc(seed: u64, n: usize, p: usize, density: f64) -> (CscMatrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0; n * p];
+        for v in dense.iter_mut() {
+            if rng.uniform() < density {
+                *v = rng.normal();
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (CscMatrix::from_dense(n, p, &dense), y)
+    }
+
+    #[test]
+    fn even_bounds_cover_and_balance() {
+        for (p, k) in [(10, 3), (7, 7), (5, 1), (3, 5)] {
+            let b = even_bounds(p, k);
+            assert_eq!(b.len(), k + 1);
+            assert_eq!((b[0], *b.last().unwrap()), (0, p));
+            assert!(b.windows(2).all(|w| w[0] <= w[1]));
+            assert!(b.windows(2).all(|w| w[1] - w[0] <= p.div_ceil(k)));
+        }
+    }
+
+    #[test]
+    fn sharded_roundtrip_matches_csc() {
+        let (csc, y) = random_csc(21, 19, 13, 0.4);
+        let paths = vec![tmp("rt.s0"), tmp("rt.s1"), tmp("rt.s2")];
+        let metas = write_sharded_store(&paths, &csc, &y).unwrap();
+        assert_eq!(metas.iter().map(|m| m.p).sum::<usize>(), 13);
+        let store = ShardedStore::open_with(&paths, 256, 2).unwrap();
+        assert_eq!(store.meta(), StoreMeta { n: 19, p: 13, nnz: csc.nnz() });
+        assert_eq!(store.read_labels().unwrap(), y);
+        let v: Vec<f64> = (0..19).map(|i| (i as f64) * 0.5 - 4.0).collect();
+        for j in 0..13 {
+            assert_eq!(store.col_nnz(j), csc.col_nnz(j));
+            assert_eq!(store.col_dot(j, &v).to_bits(), csc.col_dot(j, &v).to_bits());
+            assert_eq!(store.col_norm_sq(j).to_bits(), csc.col_norm_sq(j).to_bits());
+        }
+        let round = store.to_csc();
+        for j in 0..13 {
+            assert_eq!(round.col(j), csc.col(j));
+        }
+        for p in &paths {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn open_rejects_mixed_and_missing_shards() {
+        let (a, ya) = random_csc(31, 11, 6, 0.5);
+        let (b, yb) = random_csc(32, 11, 6, 0.5);
+        let pa = vec![tmp("mix_a.s0"), tmp("mix_a.s1")];
+        let pb = vec![tmp("mix_b.s0"), tmp("mix_b.s1")];
+        write_sharded_store(&pa, &a, &ya).unwrap();
+        write_sharded_store(&pb, &b, &yb).unwrap();
+        // Mixing shards of different datasets: labels disagree.
+        match ShardedStore::open(&[pa[0].clone(), pb[1].clone()]) {
+            Err(SolveError::StoreFormat { .. }) => {}
+            other => panic!("expected StoreFormat on mixed shards, got {other:?}"),
+        }
+        // Missing shard file.
+        match ShardedStore::open(&[pa[0].clone(), tmp("does_not_exist.s1")]) {
+            Err(SolveError::StoreFormat { .. }) => {}
+            other => panic!("expected StoreFormat on missing shard, got {other:?}"),
+        }
+        for p in pa.iter().chain(&pb) {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}

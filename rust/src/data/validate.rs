@@ -42,6 +42,8 @@ pub fn validate_design(x: &DesignMatrix) -> Result<(), SolveError> {
         // Streams the store chunk by chunk — the whole design never has
         // to be resident even for validation.
         DesignMatrix::Ooc(o) => o.validate_values()?,
+        // Per-shard streaming with global column indices in the report.
+        DesignMatrix::Sharded(sh) => sh.validate_values()?,
     }
     Ok(())
 }

@@ -77,16 +77,21 @@ USAGE: celer <command> [--flag value]...
 COMMANDS:
   solve            --dataset <name> [--seed 0] [--lambda-ratio 0.05]
                    [--tol 1e-6] [--solver celer-prune] [--engine native|xla]
-  path             --dataset <name> | --store <file.cstore>
+  path             --dataset <name> | --store <a.cstore>[,<b.cstore>,...]
                    [--num-lambdas 100] [--inv-ratio 100]
                    [--tol 1e-6] [--solvers celer-prune,blitz] [--workers 2]
                    [--max-seconds <budget>] (partial-but-certified prefix)
-                   (--store streams the design out-of-core from disk)
+                   (--store streams the design out-of-core from disk;
+                    a comma-separated list opens a sharded store, one
+                    prefetch stream per shard, and prints per-shard +
+                    combined io counters after the run)
   datasets         list built-in datasets
   artifacts-check  [--dir artifacts] validate + compile every HLO artifact
   gen-data         --dataset <name> --out <file.svm> [--seed 0]
   convert          --in <file.svm> --out <file.cstore> [--min-features 0]
                    or --dataset <name> --out <file.cstore> [--seed 0]
+                   [--shards N] splits columns into N standalone stores
+                   ({out}.s0 .. {out}.s{N-1}) for `path --store a,b,...`
   help             this message
 
 SOLVERS: celer-prune celer-safe blitz glmnet cd-vanilla gapsafe-cd-res
@@ -225,15 +230,24 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
     // --store routes the whole path through the out-of-core column
     // store: the f64 design streams from disk in prefetched chunks and
     // never has to be resident. Solutions are bit-identical to the
-    // in-memory solve of the same matrix (tests/prop_ooc.rs).
+    // in-memory solve of the same matrix (tests/prop_ooc.rs). A
+    // comma-separated list opens a sharded store — one file, chunk
+    // cache, and prefetch thread per shard (tests/prop_shard.rs).
     let ds = match args.get("store") {
-        Some(path) => {
-            let (store, y) =
-                celer::data::OocColumnStore::open_dataset(std::path::Path::new(path))?;
-            let p = store.p();
+        Some(spec) => {
+            let paths: Vec<std::path::PathBuf> =
+                spec.split(',').map(|s| std::path::PathBuf::from(s.trim())).collect();
+            let (x, y) = if paths.len() == 1 {
+                let (store, y) = celer::data::OocColumnStore::open_dataset(&paths[0])?;
+                (celer::data::DesignMatrix::Ooc(store), y)
+            } else {
+                let (store, y) = celer::data::ShardedStore::open_dataset(&paths)?;
+                (celer::data::DesignMatrix::Sharded(store), y)
+            };
+            let p = x.p();
             celer::data::synth::SynthDataset {
-                name: format!("store:{path}"),
-                x: celer::data::DesignMatrix::Ooc(store),
+                name: format!("store:{spec}"),
+                x,
                 y,
                 beta_true: vec![0.0; p],
             }
@@ -320,6 +334,32 @@ fn cmd_path(args: &cli::Args) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", table.render());
+    // Out-of-core runs report their stream traffic after the solve:
+    // synchronous reads (sweep-path misses) plus the prefetch thread's
+    // loads / already-cached hits / bytes moved ahead of the sweep.
+    let fmt_io = |tag: &str, io: &celer::data::ooc::IoStats| {
+        println!(
+            "io {tag}: read {:.1} MiB in {} chunk loads ({} sync misses); \
+             prefetch {} loads, {} hits, {:.1} MiB",
+            io.bytes_read as f64 / (1024.0 * 1024.0),
+            io.chunks_loaded,
+            io.sync_misses,
+            io.prefetch_loads,
+            io.prefetch_hits,
+            io.bytes_prefetched as f64 / (1024.0 * 1024.0),
+        );
+    };
+    match &ds.x {
+        celer::data::DesignMatrix::Ooc(store) => fmt_io("store", &store.io_stats()),
+        celer::data::DesignMatrix::Sharded(store) => {
+            for (s, io) in store.io_stats_per_shard().iter().enumerate() {
+                let (c0, c1) = store.shard_cols(s);
+                fmt_io(&format!("shard {s} [cols {c0}..{c1}]"), io);
+            }
+            fmt_io("combined", &store.io_stats());
+        }
+        _ => {}
+    }
     Ok(())
 }
 
@@ -406,18 +446,67 @@ fn cmd_convert(args: &cli::Args) -> anyhow::Result<()> {
         .get("out")
         .ok_or_else(|| anyhow::anyhow!("--out <file.cstore> required"))?;
     let out_path = std::path::Path::new(out);
-    let meta = match args.get("in") {
+    let shards = args.get_usize("shards", 1)?;
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
+    if shards == 1 {
+        let meta = match args.get("in") {
+            Some(src) => {
+                let min_features = args.get_usize("min-features", 0)?;
+                celer::data::ooc::svmlight_to_store(
+                    std::path::Path::new(src),
+                    out_path,
+                    min_features,
+                )?
+            }
+            None => {
+                let name = args.get_or("dataset", "finance-mini");
+                let seed = args.get_usize("seed", 0)? as u64;
+                let ds = coordinator::load_dataset(&name, seed)?;
+                celer::data::ooc::write_store(out_path, &ds.x, &ds.y)?
+            }
+        };
+        println!("wrote column store {out}: n={} p={} nnz={}", meta.n, meta.p, meta.nnz);
+        return Ok(());
+    }
+
+    // Sharded convert: materialize (X, y) once, then write contiguous
+    // column ranges as standalone stores ({out}.s0 .. {out}.s{N-1}).
+    // Each shard carries the full label vector, so any shard opens on
+    // its own and `ShardedStore::open` can cross-check them bitwise.
+    let (x, y) = match args.get("in") {
         Some(src) => {
             let min_features = args.get_usize("min-features", 0)?;
-            celer::data::ooc::svmlight_to_store(std::path::Path::new(src), out_path, min_features)?
+            let f = std::fs::File::open(src)
+                .map_err(|e| anyhow::anyhow!("cannot open svmlight source {src}: {e}"))?;
+            let ds = celer::data::svmlight::parse_svmlight_typed(f, min_features)?;
+            (ds.x, ds.y)
         }
         None => {
             let name = args.get_or("dataset", "finance-mini");
             let seed = args.get_usize("seed", 0)? as u64;
             let ds = coordinator::load_dataset(&name, seed)?;
-            celer::data::ooc::write_store(out_path, &ds.x, &ds.y)?
+            (ds.x, ds.y)
         }
     };
-    println!("wrote column store {out}: n={} p={} nnz={}", meta.n, meta.p, meta.nnz);
+    // More shards than columns would leave empty stores; clamp.
+    let shards = shards.min(x.p().max(1));
+    let paths = celer::data::shard::shard_paths(out_path, shards);
+    let metas = celer::data::shard::write_sharded_store(&paths, &x, &y)?;
+    for (path, meta) in paths.iter().zip(&metas) {
+        println!(
+            "wrote shard {}: n={} cols={} nnz={}",
+            path.display(),
+            meta.n,
+            meta.p,
+            meta.nnz
+        );
+    }
+    println!(
+        "sharded store complete: {} shards, p={} nnz={} (open with --store {})",
+        shards,
+        x.p(),
+        metas.iter().map(|m| m.nnz).sum::<usize>(),
+        paths.iter().map(|p| p.display().to_string()).collect::<Vec<_>>().join(",")
+    );
     Ok(())
 }

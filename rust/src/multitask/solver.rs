@@ -155,6 +155,7 @@ pub fn mt_bcd_solve(
         DesignMatrix::Dense(d) => mt_bcd_generic(d, y, q, lambda, b0, cfg, &mut ws),
         DesignMatrix::Sparse(s) => mt_bcd_generic(s, y, q, lambda, b0, cfg, &mut ws),
         DesignMatrix::Ooc(o) => mt_bcd_generic(o, y, q, lambda, b0, cfg, &mut ws),
+        DesignMatrix::Sharded(sh) => mt_bcd_generic(sh, y, q, lambda, b0, cfg, &mut ws),
     }
 }
 
@@ -239,6 +240,7 @@ pub fn mt_celer_solve_ws(
         DesignMatrix::Dense(d) => mt_celer_generic(d, y, q, lambda, b0, cfg, ws),
         DesignMatrix::Sparse(s) => mt_celer_generic(s, y, q, lambda, b0, cfg, ws),
         DesignMatrix::Ooc(o) => mt_celer_generic(o, y, q, lambda, b0, cfg, ws),
+        DesignMatrix::Sharded(sh) => mt_celer_generic(sh, y, q, lambda, b0, cfg, ws),
     }
 }
 

@@ -123,6 +123,7 @@ pub fn blitz_solve_ws(
         DesignMatrix::Dense(d) => blitz_generic(d, y, lambda, beta0, cfg, ws),
         DesignMatrix::Sparse(s) => blitz_generic(s, y, lambda, beta0, cfg, ws),
         DesignMatrix::Ooc(o) => blitz_generic(o, y, lambda, beta0, cfg, ws),
+        DesignMatrix::Sharded(sh) => blitz_generic(sh, y, lambda, beta0, cfg, ws),
     }
 }
 

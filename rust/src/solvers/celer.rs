@@ -180,6 +180,7 @@ pub fn celer_solve_on_ws(
         DesignMatrix::Dense(d) => celer_generic(d, y, lambda, beta0, cfg, ws),
         DesignMatrix::Sparse(s) => celer_generic(s, y, lambda, beta0, cfg, ws),
         DesignMatrix::Ooc(o) => celer_generic(o, y, lambda, beta0, cfg, ws),
+        DesignMatrix::Sharded(sh) => celer_generic(sh, y, lambda, beta0, cfg, ws),
     }
 }
 
@@ -244,6 +245,9 @@ pub fn celer_penalty_solve_on_ws<P: Penalty>(
         }
         DesignMatrix::Ooc(o) => {
             celer_solve_penalty(o, y, lambda, beta0, &Quadratic, penalty, cfg, ws, &mut CdStrategy)
+        }
+        DesignMatrix::Sharded(sh) => {
+            celer_solve_penalty(sh, y, lambda, beta0, &Quadratic, penalty, cfg, ws, &mut CdStrategy)
         }
     }
 }

@@ -219,6 +219,9 @@ pub fn glm_celer_solve_with<F: Datafit>(
         DesignMatrix::Ooc(o) => {
             celer_solve_datafit(o, y, lambda, beta0, datafit, cfg, ws, strategy)
         }
+        DesignMatrix::Sharded(sh) => {
+            celer_solve_datafit(sh, y, lambda, beta0, datafit, cfg, ws, strategy)
+        }
     }
 }
 
@@ -405,6 +408,17 @@ pub fn glm_cd_solve_ws<F: Datafit>(
         ),
         DesignMatrix::Ooc(o) => engine::solve_datafit(
             o,
+            y,
+            lambda,
+            init,
+            None,
+            &cfg.engine(),
+            ws,
+            &mut strategy,
+            datafit,
+        ),
+        DesignMatrix::Sharded(sh) => engine::solve_datafit(
+            sh,
             y,
             lambda,
             init,

@@ -68,6 +68,7 @@ pub fn glmnet_solve_ws(
         DesignMatrix::Dense(d) => glmnet_generic(d, y, lambda, lambda_prev, beta0, cfg, ws),
         DesignMatrix::Sparse(s) => glmnet_generic(s, y, lambda, lambda_prev, beta0, cfg, ws),
         DesignMatrix::Ooc(o) => glmnet_generic(o, y, lambda, lambda_prev, beta0, cfg, ws),
+        DesignMatrix::Sharded(sh) => glmnet_generic(sh, y, lambda, lambda_prev, beta0, cfg, ws),
     }
 }
 

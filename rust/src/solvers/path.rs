@@ -438,6 +438,24 @@ pub fn run_path_batched_penalty<P: Penalty>(
                 batch::solve_grid_penalty(o, y, grid, None, cfg, &mut lanes_ws, &mut strat, penalty)
             }
         },
+        DesignMatrix::Sharded(sh) => match cfg.precision {
+            Precision::F64 => batch::solve_grid_penalty(
+                sh,
+                y,
+                grid,
+                None,
+                cfg,
+                &mut lanes_ws,
+                &mut BatchCdStrategy,
+                penalty,
+            ),
+            Precision::F32 => {
+                // `shadow_f32()` on a ShardedStore is chunk-streamed per
+                // shard — the f32 lanes ride every prefetch stream.
+                let mut strat = batch::BatchF32Strategy::new(sh);
+                batch::solve_grid_penalty(sh, y, grid, None, cfg, &mut lanes_ws, &mut strat, penalty)
+            }
+        },
     };
     ws.put_batch(lanes_ws);
     let steps = results

@@ -156,6 +156,147 @@ where
     partials.iter().fold(0.0f64, |a, &b| a.max(b))
 }
 
+// ---------------------------------------------------------------------
+// Group-aligned scans: worker locality matched to store-shard locality
+// ---------------------------------------------------------------------
+//
+// A [`crate::data::shard::ShardedStore`] splits the columns into
+// contiguous ranges, each backed by its own store with its own chunk
+// cache and prefetch thread. The plain fixed grid of [`SHARDS`] would
+// march every worker through shard 0's columns first, so all concurrent
+// workers drain the SAME prefetch stream while the other shards' disks
+// sit idle. The grouped scans below instead snap the work-unit grid to
+// the group bounds (each group split into `⌈SHARDS / ngroups⌉`
+// sub-units) and hand units out round-robin ACROSS groups: unit u
+// belongs to group `u % ngroups`, so the first `ngroups` concurrently
+// claimed units land in `ngroups` different groups — each pool worker
+// drains its own prefetch stream. The decomposition depends only on
+// `(bounds, SHARDS)`, never the thread count, and the only reductions
+// offered are per-index fills and max folds (order-insensitive on the
+// non-NaN data these scans produce), so results are bit-identical to
+// the ungrouped scans — pinned in `tests/prop_shard.rs`.
+
+/// Index range of sub-unit `u` of a grouped grid (`bounds` are the
+/// cumulative group boundaries; `units_per_group` sub-units per group).
+#[inline]
+fn grouped_unit(bounds: &[usize], units_per_group: usize, u: usize) -> (usize, usize) {
+    let ngroups = bounds.len() - 1;
+    let (g, sub) = (u % ngroups, u / ngroups);
+    let (g0, g1) = (bounds[g], bounds[g + 1]);
+    let len = g1 - g0;
+    let chunk = len.div_ceil(units_per_group).max(1);
+    (g0 + (sub * chunk).min(len), g0 + ((sub + 1) * chunk).min(len))
+}
+
+/// [`par_fill_cost`] with the work grid aligned to `bounds` (cumulative
+/// group boundaries, `bounds[0] = 0`, last = `out.len()`) and units
+/// interleaved round-robin across groups. Identical results — each
+/// `out[i]` is written exactly once with `f(i)` — different locality.
+pub fn par_fill_cost_grouped<F>(out: &mut [f64], per_item_cost: usize, bounds: &[usize], f: F)
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let n = out.len();
+    debug_assert!(bounds.len() >= 2 && bounds[0] == 0 && *bounds.last().unwrap() == n);
+    if bounds.len() <= 2 {
+        return par_fill_cost(out, per_item_cost, f);
+    }
+    if !parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let ngroups = bounds.len() - 1;
+    let units_per_group = SHARDS.div_ceil(ngroups).max(1);
+    let ptr = SyncPtr(out.as_mut_ptr());
+    pool::global().run(ngroups * units_per_group, &|u| {
+        let (lo, hi) = grouped_unit(bounds, units_per_group, u);
+        for i in lo..hi {
+            // SAFETY: sub-unit index ranges are disjoint (one writer per i).
+            unsafe { *ptr.0.add(i) = f(i) };
+        }
+    });
+}
+
+/// [`par_fill_abs_max`] with a group-aligned, round-robin work grid.
+/// The fold is a max over `|f(i)| ≥ 0` partials — order-insensitive —
+/// so the returned value is bit-identical to the ungrouped scan.
+pub fn par_fill_abs_max_grouped<F>(
+    out: &mut [f64],
+    per_item_cost: usize,
+    bounds: &[usize],
+    f: F,
+) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    let n = out.len();
+    debug_assert!(bounds.len() >= 2 && bounds[0] == 0 && *bounds.last().unwrap() == n);
+    if bounds.len() <= 2 {
+        return par_fill_abs_max(out, per_item_cost, f);
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    if !parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
+        let mut m = 0.0f64;
+        for (i, o) in out.iter_mut().enumerate() {
+            let v = f(i);
+            *o = v;
+            m = m.max(v.abs());
+        }
+        return m;
+    }
+    let ngroups = bounds.len() - 1;
+    let units_per_group = SHARDS.div_ceil(ngroups).max(1);
+    let total = ngroups * units_per_group;
+    let mut partials = vec![0.0f64; total];
+    let out_ptr = SyncPtr(out.as_mut_ptr());
+    let part_ptr = SyncPtr(partials.as_mut_ptr());
+    pool::global().run(total, &|u| {
+        let (lo, hi) = grouped_unit(bounds, units_per_group, u);
+        let mut m = 0.0f64;
+        for i in lo..hi {
+            let v = f(i);
+            // SAFETY: sub-unit index ranges are disjoint (one writer per i).
+            unsafe { *out_ptr.0.add(i) = v };
+            m = m.max(v.abs());
+        }
+        // SAFETY: each sub-unit writes only its own partial slot.
+        unsafe { *part_ptr.0.add(u) = m };
+    });
+    partials.iter().fold(0.0f64, |a, &b| a.max(b))
+}
+
+/// [`par_max_cost`] with a group-aligned, round-robin work grid. Max
+/// folds are order-insensitive, so the value matches the ungrouped scan
+/// bit for bit.
+pub fn par_max_cost_grouped<F>(n: usize, per_item_cost: usize, bounds: &[usize], f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    debug_assert!(bounds.len() >= 2 && bounds[0] == 0 && *bounds.last().unwrap() == n);
+    if bounds.len() <= 2 || !parallel_shards(n.saturating_mul(per_item_cost.max(1))) {
+        return par_max_cost(n, per_item_cost, f);
+    }
+    let ngroups = bounds.len() - 1;
+    let units_per_group = SHARDS.div_ceil(ngroups).max(1);
+    let total = ngroups * units_per_group;
+    let mut partials = vec![f64::NEG_INFINITY; total];
+    let part_ptr = SyncPtr(partials.as_mut_ptr());
+    pool::global().run(total, &|u| {
+        let (lo, hi) = grouped_unit(bounds, units_per_group, u);
+        let mut m = f64::NEG_INFINITY;
+        for i in lo..hi {
+            m = m.max(f(i));
+        }
+        // SAFETY: each sub-unit writes only its own partial slot.
+        unsafe { *part_ptr.0.add(u) = m };
+    });
+    partials.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
 /// Block-row variant of [`par_fill_abs_max`], for width-`q` coefficient
 /// blocks (Multi-Task Lasso, paper §7): for every row `j`, `f(j, slot)`
 /// fills the `q`-wide slot `block[j·q .. (j+1)·q]` (e.g. with `x_jᵀR`

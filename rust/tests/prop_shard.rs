@@ -1,0 +1,356 @@
+//! Property tests for the sharded column store (`data::shard`).
+//!
+//! The contracts pinned here:
+//!
+//! 1. **Sharding is invisible to the math**: every `DesignOps` kernel
+//!    on a `ShardedStore` returns the exact bits the single-file
+//!    `OocColumnStore` and the in-memory `CscMatrix` return — single
+//!    columns, lane ops, full scans — for shard counts 1, 2, 3 and
+//!    one-column-per-shard, under pooled and serial execution, and for
+//!    deliberately misaligned shard boundaries.
+//! 2. **λ-path bit-identity** (the PR 10 acceptance criterion): the
+//!    lasso path on `DesignMatrix::Sharded` equals the path on a
+//!    single store and on the resident CSC bit-for-bit — per-step λ,
+//!    gap and β — for the sequential and batched schedulers, pooled
+//!    and serial.
+//! 3. **Streamed f32 stays streamed**: the f32 sweep mode over a
+//!    store never materializes a full-design f32 copy — the peak
+//!    resident shadow bytes stay within the advertised per-stream
+//!    bound (chunk cache × chunk size per shard) — and its f64 gap
+//!    certificates and β match the resident-shadow f32 mode bitwise.
+//! 4. **Shard defects are typed**: a corrupt, truncated, or missing
+//!    shard file — or shards of different datasets mixed into one
+//!    open — fails with `SolveError::StoreFormat`, not a panic.
+
+use celer::data::csc::CscMatrix;
+use celer::data::design::{DesignMatrix, DesignOps};
+use celer::data::ooc::{self, OocColumnStore};
+use celer::data::shard::{self, ShardedStore};
+use celer::data::synth;
+use celer::solvers::batch::BatchConfig;
+use celer::solvers::engine::Workspace;
+use celer::solvers::path::{
+    lambda_grid, lasso_path, run_path, run_path_batched, PathResult, PathSolver,
+};
+use celer::solvers::Precision;
+use celer::util::error::SolveError;
+use celer::util::par;
+use celer::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Unique temp path per test so the suite can run in parallel.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("celer_prop_shard_{}_{name}", std::process::id()))
+}
+
+struct TmpFiles(Vec<PathBuf>);
+impl Drop for TmpFiles {
+    fn drop(&mut self) {
+        for p in &self.0 {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+fn rand_vec(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn random_csc(seed: u64, n: usize, p: usize, density: f64) -> (CscMatrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut dense = vec![0.0; n * p];
+    for v in dense.iter_mut() {
+        if rng.uniform() < density {
+            *v = rng.normal();
+        }
+    }
+    let y = (0..n).map(|_| rng.normal()).collect();
+    (CscMatrix::from_dense(n, p, &dense), y)
+}
+
+/// Write `x` as `k` shards at fresh temp paths and open the result
+/// with small chunks so every shard genuinely streams.
+fn sharded(
+    tag: &str,
+    x: &CscMatrix,
+    y: &[f64],
+    bounds: &[usize],
+) -> (ShardedStore, TmpFiles) {
+    let k = bounds.len() - 1;
+    let paths: Vec<PathBuf> = (0..k).map(|s| tmp(&format!("{tag}.s{s}"))).collect();
+    shard::write_sharded_store_with_bounds(&paths, x, y, bounds).unwrap();
+    let store = ShardedStore::open_with(&paths, 1 << 10, 3).unwrap();
+    (store, TmpFiles(paths))
+}
+
+#[test]
+fn every_kernel_matches_csc_across_shard_counts() {
+    let (csc, y) = random_csc(7, 50, 23, 0.4);
+    let (n, p) = (csc.n(), csc.p());
+    let single_path = tmp("kernels_single.cstore");
+    let _g = TmpFiles(vec![single_path.clone()]);
+    ooc::write_store(&single_path, &csc, &y).unwrap();
+    let single = OocColumnStore::open_with(&single_path, 1 << 10, 3).unwrap();
+
+    let v = rand_vec(8, n);
+    let lanes: Vec<usize> = (0..4).collect();
+    let vl = rand_vec(9, 4 * n);
+    let alphas = [1e-3, -2e-3, 5e-4, -1e-4];
+    let w = rand_vec(10, n).iter().map(|x| x.abs() + 0.1).collect::<Vec<_>>();
+    let beta = rand_vec(11, p);
+
+    // even shard counts 1, 2, 3 and one-column-per-shard, plus two
+    // deliberately misaligned splits (lopsided and singleton-edged)
+    let mut all_bounds: Vec<Vec<usize>> = [1usize, 2, 3, p]
+        .iter()
+        .map(|&k| shard::even_bounds(p, k))
+        .collect();
+    all_bounds.push(vec![0, 1, p - 1, p]);
+    all_bounds.push(vec![0, p - 2, p]);
+
+    for bounds in &all_bounds {
+        let (store, _files) = sharded(&format!("k{}", bounds.len() - 1), &csc, &y, bounds);
+        assert_eq!((store.n(), store.p(), store.nnz()), (n, p, csc.nnz()));
+        assert_eq!(store.read_labels().unwrap(), y);
+
+        for j in 0..p {
+            assert_eq!(
+                store.col_dot(j, &v).to_bits(),
+                csc.col_dot(j, &v).to_bits(),
+                "col_dot j={j} bounds={bounds:?}"
+            );
+            assert_eq!(store.col_norm_sq(j).to_bits(), csc.col_norm_sq(j).to_bits());
+            assert_eq!(store.col_nnz(j), csc.col_nnz(j));
+            assert_eq!(
+                store.col_wnorm_sq(j, &w).to_bits(),
+                csc.col_wnorm_sq(j, &w).to_bits()
+            );
+
+            let mut out_s = [0.0f64; 4];
+            let mut out_c = [0.0f64; 4];
+            store.col_dot_lanes(j, &vl, n, &lanes, &mut out_s);
+            csc.col_dot_lanes(j, &vl, n, &lanes, &mut out_c);
+            assert_eq!(out_s.map(f64::to_bits), out_c.map(f64::to_bits), "lane dot j={j}");
+
+            let mut vs = vl.clone();
+            let mut vc = vl.clone();
+            store.col_axpy_lanes(j, &alphas, &mut vs, n, &lanes);
+            csc.col_axpy_lanes(j, &alphas, &mut vc, n, &lanes);
+            assert_eq!(vs, vc, "lane axpy j={j}");
+        }
+
+        // full scans: pooled AND serial, vs the CSC and the single store
+        let mut scan_sh = vec![0.0; p];
+        let mut scan_c = vec![0.0; p];
+        let mut scan_1 = vec![0.0; p];
+        store.xt_vec(&v, &mut scan_sh);
+        csc.xt_vec(&v, &mut scan_c);
+        single.xt_vec(&v, &mut scan_1);
+        assert_eq!(scan_sh, scan_c, "xt_vec bounds={bounds:?}");
+        assert_eq!(scan_sh, scan_1, "xt_vec sharded vs single store");
+        assert_eq!(store.xt_abs_max(&v).to_bits(), csc.xt_abs_max(&v).to_bits());
+        let mut m_sh = vec![0.0; p];
+        let mut m_c = vec![0.0; p];
+        let a_sh = store.xt_vec_abs_max(&v, &mut m_sh);
+        let a_c = csc.xt_vec_abs_max(&v, &mut m_c);
+        assert_eq!(a_sh.to_bits(), a_c.to_bits(), "xt_vec_abs_max max");
+        assert_eq!(m_sh, m_c, "xt_vec_abs_max fill");
+        assert_eq!(store.col_norms_sq(), csc.col_norms_sq());
+        let mut mv_sh = vec![0.0; n];
+        let mut mv_c = vec![0.0; n];
+        store.matvec(&beta, &mut mv_sh);
+        csc.matvec(&beta, &mut mv_c);
+        assert_eq!(mv_sh, mv_c, "matvec");
+
+        let serial = par::run_serial(|| {
+            let mut out = vec![0.0; p];
+            store.xt_vec(&v, &mut out);
+            (out, store.xt_abs_max(&v))
+        });
+        assert_eq!(serial.0, scan_c, "serial sharded scan == csc scan");
+        assert_eq!(serial.1.to_bits(), csc.xt_abs_max(&v).to_bits(), "serial abs max");
+
+        // working-set restriction and materialization round-trip
+        let keep: Vec<usize> = (0..p).step_by(5).collect();
+        let sub_sh = store.select_columns_csc(&keep);
+        let sub_c = csc.select_columns(&keep);
+        for (jj, _) in keep.iter().enumerate() {
+            assert_eq!(sub_sh.col(jj), sub_c.col(jj));
+        }
+        let round = store.to_csc();
+        for j in 0..p {
+            assert_eq!(round.col(j), csc.col(j), "to_csc col {j}");
+        }
+    }
+}
+
+fn assert_paths_bit_identical(a: &PathResult, b: &PathResult, what: &str) {
+    assert_eq!(a.steps.len(), b.steps.len(), "{what}: step count");
+    for (i, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+        assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits(), "{what}: λ#{i}");
+        assert_eq!(sa.gap.to_bits(), sb.gap.to_bits(), "{what}: gap#{i}");
+        let ba = sa.beta.as_ref().expect("store_betas");
+        let bb = sb.beta.as_ref().expect("store_betas");
+        let diff = ba.iter().zip(bb).position(|(x, y)| x.to_bits() != y.to_bits());
+        assert_eq!(diff, None, "{what}: β#{i} first differing coefficient {diff:?}");
+    }
+}
+
+#[test]
+fn lambda_path_on_sharded_store_is_bit_identical() {
+    // The acceptance criterion: the same λ-grid solved on the sharded
+    // store, the single-file store, and the resident CSC must produce
+    // identical certificates under every scheduler.
+    let ds = synth::finance_mini(31);
+    let DesignMatrix::Sparse(ref csc) = ds.x else { panic!("finance_mini is sparse") };
+    let p = csc.p();
+
+    let single_path = tmp("path_single.cstore");
+    let _g = TmpFiles(vec![single_path.clone()]);
+    ooc::write_store(&single_path, csc, &ds.y).unwrap();
+    let single = OocColumnStore::open_with(&single_path, 1 << 12, 3).unwrap();
+    assert!(single.nchunks() > 4, "want a chunked stream");
+    let x_single = DesignMatrix::Ooc(single);
+
+    // a 3-way split with deliberately uneven boundaries: the middle
+    // shard owns almost everything, the edges are slivers
+    let (sh3, _f3) = sharded("path3", csc, &ds.y, &[0, 7, p - 3, p]);
+    let (sh2, _f2) = sharded("path2", csc, &ds.y, &shard::even_bounds(p, 2));
+    let x_sh3 = DesignMatrix::Sharded(sh3);
+    let x_sh2 = DesignMatrix::Sharded(sh2);
+
+    let lam_max = celer::lasso::dual::lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lam_max, 0.1, 6);
+    let solver = PathSolver::by_name("gapsafe-cd-accel", 1e-9).unwrap();
+
+    // sequential scheduler, pooled then serial
+    let mem = run_path(&ds.x, &ds.y, &grid, &solver, true);
+    assert!(mem.all_converged());
+    let one = run_path(&x_single, &ds.y, &grid, &solver, true);
+    assert_paths_bit_identical(&mem, &one, "single store, sequential pooled");
+    for (x_sh, what) in [(&x_sh2, "2 shards"), (&x_sh3, "3 shards misaligned")] {
+        let pooled = run_path(x_sh, &ds.y, &grid, &solver, true);
+        assert_paths_bit_identical(&mem, &pooled, &format!("{what}, sequential pooled"));
+        let serial = par::run_serial(|| run_path(x_sh, &ds.y, &grid, &solver, true));
+        assert_paths_bit_identical(&mem, &serial, &format!("{what}, sequential serial"));
+    }
+
+    // batched lane scheduler over the same stores
+    let mem_b = lasso_path(&ds.x, &ds.y, &grid, 1e-9, 3, true, &celer::penalty::L1);
+    assert!(mem_b.all_converged());
+    let one_b = lasso_path(&x_single, &ds.y, &grid, 1e-9, 3, true, &celer::penalty::L1);
+    assert_paths_bit_identical(&mem_b, &one_b, "single store, batched");
+    for (x_sh, what) in [(&x_sh2, "2 shards"), (&x_sh3, "3 shards misaligned")] {
+        let sh_b = lasso_path(x_sh, &ds.y, &grid, 1e-9, 3, true, &celer::penalty::L1);
+        assert_paths_bit_identical(&mem_b, &sh_b, &format!("{what}, batched pooled"));
+        let sh_s =
+            par::run_serial(|| lasso_path(x_sh, &ds.y, &grid, 1e-9, 3, true, &celer::penalty::L1));
+        assert_paths_bit_identical(&mem_b, &sh_s, &format!("{what}, batched serial"));
+    }
+}
+
+#[test]
+fn streamed_f32_matches_resident_f32_and_bounds_memory() {
+    let ds = synth::finance_mini(41);
+    let DesignMatrix::Sparse(ref csc) = ds.x else { panic!("finance_mini is sparse") };
+    let p = csc.p();
+
+    let single_path = tmp("f32_single.cstore");
+    let _g = TmpFiles(vec![single_path.clone()]);
+    ooc::write_store(&single_path, csc, &ds.y).unwrap();
+    let single = OocColumnStore::open_with(&single_path, 1 << 12, 3).unwrap();
+    let nchunks = single.nchunks();
+    assert!(nchunks > 4, "want a chunked stream, got {nchunks} chunks");
+    let x_single = DesignMatrix::Ooc(single);
+    let (sh2, _f2) = sharded("f32_sh2", csc, &ds.y, &shard::even_bounds(p, 2));
+    let x_sh2 = DesignMatrix::Sharded(sh2.clone());
+
+    let lam_max = celer::lasso::dual::lambda_max(&ds.x, &ds.y);
+    let grid = lambda_grid(lam_max, 0.1, 5);
+    let cfg = BatchConfig { precision: Precision::F32, lanes: 3, tol: 1e-7, ..Default::default() };
+
+    // resident f32 shadow (CSC) vs streamed f32 shadow (store, sharded
+    // store): identical f32 iterates, identical f64 certificates.
+    let mut ws = Workspace::new();
+    let res = run_path_batched(&ds.x, &ds.y, &grid, &cfg, true, &mut ws);
+    assert!(res.all_converged());
+    let one = run_path_batched(&x_single, &ds.y, &grid, &cfg, true, &mut ws);
+    assert_paths_bit_identical(&res, &one, "streamed f32, single store");
+    let two = run_path_batched(&x_sh2, &ds.y, &grid, &cfg, true, &mut ws);
+    assert_paths_bit_identical(&res, &two, "streamed f32, 2 shards");
+
+    // The memory contract: a full sweep of the streamed shadow never
+    // holds more f32 chunk bytes than the advertised bound — chunk
+    // cache × max chunk entries per shard — and that bound is well
+    // under a full-design f32 copy (8 bytes per stored entry).
+    let shadow = x_sh2.shadow_f32();
+    let nf = rand_vec(42, csc.n()).iter().map(|&x| x as f32).collect::<Vec<f32>>();
+    let mut acc = 0.0f32;
+    for j in 0..p {
+        acc += shadow.col_dot(j, &nf);
+    }
+    assert!(acc.is_finite());
+    let (resident, peak, bound) = shadow.stream_stats().expect("streamed shadow");
+    assert!(peak > 0, "the sweep must have materialized f32 chunks");
+    assert!(resident <= peak, "resident {resident} > peak {peak}");
+    assert!(peak <= bound, "peak resident f32 bytes {peak} exceed the bound {bound}");
+    let full_copy = (csc.nnz() * 8) as u64;
+    assert!(
+        bound < full_copy / 2,
+        "bound {bound} is not meaningfully below a full f32 copy ({full_copy})"
+    );
+
+    // and the resident-mode shadow of the same matrix agrees bitwise
+    let shadow_res = ds.x.shadow_f32();
+    assert!(shadow_res.stream_stats().is_none(), "CSC shadow is resident");
+    for j in (0..p).step_by(13) {
+        assert_eq!(
+            shadow.col_dot(j, &nf).to_bits(),
+            shadow_res.col_dot(j, &nf).to_bits(),
+            "streamed vs resident f32 col_dot j={j}"
+        );
+    }
+}
+
+#[test]
+fn corrupt_missing_or_mixed_shards_fail_typed() {
+    let (csc, y) = random_csc(51, 40, 12, 0.5);
+    let paths = vec![tmp("typed.s0"), tmp("typed.s1")];
+    let _g = TmpFiles(paths.clone());
+    shard::write_sharded_store(&paths, &csc, &y).unwrap();
+    let good = std::fs::read(&paths[1]).unwrap();
+
+    let expect_format = |what: &str| match ShardedStore::open(&paths) {
+        Err(SolveError::StoreFormat { .. }) => {}
+        other => panic!("{what}: expected StoreFormat, got {other:?}"),
+    };
+
+    // truncated shard payload
+    std::fs::write(&paths[1], &good[..good.len() - 5]).unwrap();
+    expect_format("truncated shard");
+    // corrupt shard magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&paths[1], &bad).unwrap();
+    expect_format("corrupt shard magic");
+    // missing shard file
+    std::fs::remove_file(&paths[1]).unwrap();
+    expect_format("missing shard");
+
+    // shards of different datasets (different labels) cannot be mixed
+    let (csc2, y2) = random_csc(52, 40, 12, 0.5);
+    shard::write_sharded_store(&[paths[1].clone()], &csc2, &y2).unwrap();
+    expect_format("mixed datasets");
+
+    // shards disagreeing on n are rejected too
+    let (csc3, y3) = random_csc(53, 39, 12, 0.5);
+    shard::write_sharded_store(&[paths[1].clone()], &csc3, &y3).unwrap();
+    expect_format("row count mismatch");
+
+    // empty path list is a typed error as well
+    assert!(matches!(
+        ShardedStore::open(&[]),
+        Err(SolveError::StoreFormat { .. })
+    ));
+}

@@ -67,6 +67,10 @@ fn check_view_inner_solve_matches_materialized(x: &DesignMatrix, y: &[f64], seed
             let view = DesignView::new(o, &ws_cols, &norms);
             cd_solve(&view, y, lambda, None, &cfg)
         }
+        DesignMatrix::Sharded(sh) => {
+            let view = DesignView::new(sh, &ws_cols, &norms);
+            cd_solve(&view, y, lambda, None, &cfg)
+        }
     };
 
     assert_eq!(a.epochs, b.epochs, "{seed_tag}: epoch counts diverge");
@@ -117,6 +121,10 @@ fn view_warm_start_matches_materialized() {
         }
         DesignMatrix::Ooc(o) => {
             let view = DesignView::new(o, &ws_cols, &norms);
+            cd_solve(&view, &ds.y, lambda, Some(&cold.beta), &cfg)
+        }
+        DesignMatrix::Sharded(sh) => {
+            let view = DesignView::new(sh, &ws_cols, &norms);
             cd_solve(&view, &ds.y, lambda, Some(&cold.beta), &cfg)
         }
     };

@@ -26,6 +26,19 @@
  *   gcc -O3 -march=native -pthread -o /tmp/ooc_proxy scripts/ooc_proxy.c && /tmp/ooc_proxy
  * Output lines:
  *   proxy <name> n=.. p=.. b=.. iters=.. min_ns=.. mean_ns=.. bytes_per_s=.. cols_per_s=.. amort=..
+ *
+ * Sharded variant (BENCH_10, mirror of data/shard.rs ShardedStore):
+ * compile with -DNSHARDS=k to replace the single-store arms with a
+ * k-shard aggregate-bandwidth measurement — the design's columns split
+ * into k contiguous-range files, each swept by its own thread behind
+ * its own double-buffered prefetcher (shard-aligned parallelism: no
+ * worker ever touches another shard's stream). NSHARDS=1 is the
+ * one-stream baseline; the acceptance ratio is
+ * bytes_per_s(k=2) / bytes_per_s(k=1).
+ *
+ *   gcc -O3 -march=native -pthread -DNSHARDS=2 -o /tmp/shard_proxy scripts/ooc_proxy.c
+ * Output line:
+ *   proxy sharded_stream_sweep n=.. p=.. shards=k b=.. iters=.. min_ns=.. mean_ns=.. bytes_per_s=..
  */
 #define _GNU_SOURCE
 #include <fcntl.h>
@@ -297,6 +310,251 @@ static double bench_min(col_fn f, double *v, double *mean_ns_out) {
     return min_ns;
 }
 
+#ifdef NSHARDS
+
+/* ---- sharded variant: NSHARDS column-range files, one sweep thread
+ *      with its own prefetcher per shard (mirror of data/shard.rs) ---
+ *
+ * Reads use O_DIRECT so every chunk fetch is a real device I/O
+ * (page-cache re-reads would measure memcpy, not storage): per-stream
+ * reads are synchronous QD-1, so aggregate bandwidth grows with the
+ * number of independent shard streams keeping the device queue fed —
+ * the effect `ShardedStore`'s per-shard prefetch threads exploit. The
+ * ~32 KiB chunk budget keeps each fetch latency-bound (the regime
+ * where stream count matters); if O_DIRECT is unsupported the proxy
+ * falls back to buffered reads and says so (direct=0 in the output).
+ *
+ * Each shard worker issues its own chunk reads inline — the worker IS
+ * the shard's prefetch stream, pinned at queue depth 1 like the Rust
+ * Prefetcher. (A separate handoff thread per shard, as in ooc.rs,
+ * adds two context switches per chunk; on a single-core container
+ * that scheduling artifact dominates the device effect under
+ * measurement, so the proxy folds the stream into the worker.)
+ */
+
+#ifndef SHARD_CHUNK_BYTES
+#define SHARD_CHUNK_BYTES 32768
+#endif
+#define DIRECT_ALIGN 4096ULL
+
+static int use_direct = 1;
+
+typedef struct {
+    int id;
+    int j0, j1; /* global column range owned by this shard */
+    int fd;
+    uint64_t ioff, doff; /* file offsets of the index / data segments */
+    int cstarts[P + 2];  /* chunk starts in *global* column indices */
+    int nch;
+    uint64_t maxe;
+    Slot sl[1];
+    double *v; /* private length-N vector: no cross-shard sharing */
+    double sink;
+} ShardS;
+
+static ShardS shardv[NSHARDS];
+static pthread_barrier_t shard_bar;
+
+/* Write the columns [j0, j1) as a standalone store file of shape
+ * (N, j1-j0) with the full y segment — byte-compatible with what
+ * shard::write_sharded_store emits per shard. */
+static void write_shard_file(const char *path, const uint32_t *indices, const double *data,
+                             const double *y, int j0, int j1) {
+    FILE *f = fopen(path, "wb");
+    if (!f) exit(1);
+    uint32_t version = 1, flags = 0;
+    uint64_t n64 = N, p64 = (uint64_t)(j1 - j0);
+    uint64_t nnz_s = indptr[j1] - indptr[j0];
+    fwrite("CELERCS1", 1, 8, f);
+    fwrite(&version, 4, 1, f);
+    fwrite(&flags, 4, 1, f);
+    fwrite(&n64, 8, 1, f);
+    fwrite(&p64, 8, 1, f);
+    fwrite(&nnz_s, 8, 1, f);
+    fwrite(y, 8, N, f);
+    for (int j = j0; j <= j1; j++) {
+        uint64_t local = indptr[j] - indptr[j0];
+        fwrite(&local, 8, 1, f);
+    }
+    fwrite(indices + indptr[j0], 4, nnz_s, f);
+    fwrite(data + indptr[j0], 8, nnz_s, f);
+    fclose(f);
+}
+
+/* Per-shard greedy byte-bounded chunk plan, like plan_chunks but over
+ * the shard's own column range with its own chunk budget. */
+static void shard_plan(ShardS *sh, uint64_t chunk_bytes) {
+    uint64_t nnz_s = indptr[sh->j1] - indptr[sh->j0];
+    sh->ioff = HEADER_LEN + 8ULL * N + 8ULL * (sh->j1 - sh->j0 + 1);
+    sh->doff = sh->ioff + 4ULL * nnz_s;
+    sh->nch = 0;
+    sh->maxe = 0;
+    int j = sh->j0;
+    while (j < sh->j1) {
+        sh->cstarts[sh->nch++] = j;
+        int start = j;
+        uint64_t bytes = 0;
+        while (j < sh->j1) {
+            uint64_t col = (indptr[j + 1] - indptr[j]) * ENTRY_BYTES;
+            if (j > start && bytes + col > chunk_bytes) break;
+            bytes += col;
+            j++;
+        }
+        uint64_t e = indptr[j] - indptr[start];
+        if (e > sh->maxe) sh->maxe = e;
+    }
+    sh->cstarts[sh->nch] = sh->j1;
+}
+
+/* O_DIRECT needs 4 KiB-aligned offsets/lengths/buffers: read the
+ * covering aligned window into the (aligned) raw buffer and decode
+ * from the interior. A short read is fine as long as it covers the
+ * entries we asked for (the file tail is not block-aligned). */
+static void aligned_read(int fd, unsigned char *raw, unsigned char *dst, uint64_t off,
+                         uint64_t len) {
+    if (!use_direct) {
+        if (pread(fd, raw, len, (off_t)off) != (ssize_t)len) exit(2);
+        memcpy(dst, raw, len);
+        return;
+    }
+    uint64_t a0 = off & ~(DIRECT_ALIGN - 1);
+    uint64_t a1 = (off + len + DIRECT_ALIGN - 1) & ~(DIRECT_ALIGN - 1);
+    ssize_t got = pread(fd, raw, a1 - a0, (off_t)a0);
+    if (got < (ssize_t)(off - a0 + len)) exit(2);
+    memcpy(dst, raw + (off - a0), len);
+}
+
+static void shard_load_chunk(ShardS *sh, int c, Slot *s) {
+    int j0 = sh->cstarts[c], j1 = sh->cstarts[c + 1];
+    uint64_t e0 = indptr[j0], e1 = indptr[j1]; /* global entry indices */
+    uint64_t el = e0 - indptr[sh->j0];         /* shard-local file offset */
+    uint64_t ne = e1 - e0;
+    s->entry0 = e0;
+    aligned_read(sh->fd, s->raw_idx, (unsigned char *)s->idx, sh->ioff + 4 * el, 4 * ne);
+    aligned_read(sh->fd, s->raw_val, (unsigned char *)s->val, sh->doff + 8 * el, 8 * ne);
+}
+
+/* One full streaming sweep over this shard's columns: the worker
+ * drives its own chunk stream — fetch, decode, single-lane gather dot
+ * per column — so each shard keeps exactly one read in flight. */
+static void shard_sweep(ShardS *sh) {
+    for (int c = 0; c < sh->nch; c++) {
+        Slot *s = &sh->sl[0];
+        shard_load_chunk(sh, c, s);
+        for (int j = sh->cstarts[c]; j < sh->cstarts[c + 1]; j++) {
+            uint64_t rel = indptr[j] - s->entry0;
+            sh->sink += gdot1(s->idx + rel, s->val + rel, indptr[j + 1] - indptr[j], sh->v);
+        }
+    }
+}
+
+static void *shard_worker(void *arg) {
+    ShardS *sh = arg;
+    for (int it = 0; it < ITERS + 1; it++) { /* +1 warmup */
+        pthread_barrier_wait(&shard_bar);
+        shard_sweep(sh);
+        pthread_barrier_wait(&shard_bar);
+    }
+    return NULL;
+}
+
+int main(void) {
+    /* generate the full design once (identical rng stream to the
+     * single-store arms), then split it into NSHARDS files */
+    uint32_t *indices = malloc(sizeof(uint32_t) * (size_t)N * P);
+    double *data = malloc(sizeof(double) * (size_t)N * P);
+    double *y = malloc(sizeof(double) * N);
+    if (!indices || !data || !y) return 1;
+    uint64_t nnz = 0;
+    for (int j = 0; j < P; j++) {
+        indptr[j] = nnz;
+        for (int i = 0; i < N; i++) {
+            if (uniform01() < DENSITY) {
+                indices[nnz] = (uint32_t)i;
+                data[nnz] = uniform01() - 0.5;
+                nnz++;
+            }
+        }
+    }
+    indptr[P] = nnz;
+    for (int i = 0; i < N; i++) y[i] = uniform01() - 0.5;
+
+    char paths[NSHARDS][256];
+    for (int s = 0; s < NSHARDS; s++) {
+        ShardS *sh = &shardv[s];
+        sh->id = s;
+        sh->j0 = (int)((long long)s * P / NSHARDS);
+        sh->j1 = (int)((long long)(s + 1) * P / NSHARDS);
+        snprintf(paths[s], sizeof paths[s], "/tmp/celer_shard_proxy_%d.s%d", (int)getpid(), s);
+        write_shard_file(paths[s], indices, data, y, sh->j0, sh->j1);
+        /* latency-bound chunk budget (see the O_DIRECT note above) */
+        shard_plan(sh, SHARD_CHUNK_BYTES);
+        sh->fd = -1;
+        if (use_direct) sh->fd = open(paths[s], O_RDONLY | O_DIRECT);
+        if (sh->fd < 0) {
+            use_direct = 0;
+            sh->fd = open(paths[s], O_RDONLY);
+        }
+        if (sh->fd < 0) return 1;
+        for (int b = 0; b < 1; b++) {
+            sh->sl[b].idx = malloc(4 * sh->maxe);
+            sh->sl[b].val = malloc(8 * sh->maxe);
+            /* raw windows are aligned-start + aligned-end padded */
+            if (posix_memalign((void **)&sh->sl[b].raw_idx, DIRECT_ALIGN,
+                               4 * sh->maxe + 2 * DIRECT_ALIGN) ||
+                posix_memalign((void **)&sh->sl[b].raw_val, DIRECT_ALIGN,
+                               8 * sh->maxe + 2 * DIRECT_ALIGN))
+                return 1;
+            if (!sh->sl[b].idx || !sh->sl[b].val) return 1;
+        }
+        sh->v = malloc(sizeof(double) * (size_t)N);
+        for (size_t i = 0; i < (size_t)N; i++) sh->v[i] = uniform01() - 0.5;
+        sh->sink = 0.0;
+    }
+    free(indices);
+    free(data);
+    free(y);
+
+    pthread_barrier_init(&shard_bar, NULL, NSHARDS + 1);
+    pthread_t workers[NSHARDS];
+    for (int s = 0; s < NSHARDS; s++) pthread_create(&workers[s], NULL, shard_worker, &shardv[s]);
+
+    double min_ns = 1e30, sum_ns = 0.0;
+    for (int it = 0; it < ITERS + 1; it++) {
+        double t0 = now_ns();
+        pthread_barrier_wait(&shard_bar); /* release all shard sweeps */
+        pthread_barrier_wait(&shard_bar); /* all shards done */
+        double dt = now_ns() - t0;
+        if (it == 0) continue; /* warmup */
+        if (dt < min_ns) min_ns = dt;
+        sum_ns += dt;
+    }
+    for (int s = 0; s < NSHARDS; s++) pthread_join(workers[s], NULL);
+
+    double sink = 0.0;
+    for (int s = 0; s < NSHARDS; s++) sink += shardv[s].sink;
+    if (sink == 12345.678) fprintf(stderr, "sink\n"); /* defeat DCE */
+
+    /* aggregate logical stream traffic per sweep across all shards */
+    double sweep_bytes = (double)nnz * ENTRY_BYTES;
+    printf("proxy sharded_stream_sweep n=%d p=%d shards=%d b=1 iters=%d min_ns=%.0f "
+           "mean_ns=%.0f bytes_per_s=%.3e cols_per_s=%.3e direct=%d\n",
+           N, P, NSHARDS, ITERS, min_ns, sum_ns / ITERS, sweep_bytes / (min_ns / 1e9),
+           P / (min_ns / 1e9), use_direct);
+    int total_chunks = 0;
+    for (int s = 0; s < NSHARDS; s++) total_chunks += shardv[s].nch;
+    printf("# shards=%d chunks=%d nnz=%llu chunk_bytes=%d\n", NSHARDS, total_chunks,
+           (unsigned long long)nnz, (int)SHARD_CHUNK_BYTES);
+
+    for (int s = 0; s < NSHARDS; s++) {
+        close(shardv[s].fd);
+        unlink(paths[s]);
+    }
+    return 0;
+}
+
+#else /* !NSHARDS: the single-store arms (BENCH_9) */
+
 int main(void) {
     char path[256];
     snprintf(path, sizeof path, "/tmp/celer_ooc_proxy_%d.cstore", (int)getpid());
@@ -348,3 +606,5 @@ int main(void) {
     unlink(path);
     return 0;
 }
+
+#endif /* NSHARDS */
